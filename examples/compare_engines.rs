@@ -1,0 +1,66 @@
+//! Native vs XLA engine comparison: same workload, identical discords,
+//! side-by-side timings (the L3-vs-AOT sanity check for DESIGN.md §Perf).
+//!
+//! Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --example compare_engines
+//! ```
+
+use std::time::Instant;
+
+use palmad::analysis::report::{fmt_secs, Table};
+use palmad::coordinator::config::{build_engine, EngineChoice, EngineOptions};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::gen::registry;
+
+fn main() -> anyhow::Result<()> {
+    let spec = registry::dataset_prefix("ecg2", 12_000, 5)?;
+    let series = spec.series;
+    println!("workload: {series}, lengths 96..128, top-1");
+
+    let cfg = MerlinConfig { min_l: 96, max_l: 128, top_k: 1, ..Default::default() };
+    let mut table = Table::new("engine comparison", &["engine", "segn", "time", "discords", "tiles"]);
+    let mut results = Vec::new();
+
+    for choice in [EngineChoice::Native, EngineChoice::Xla] {
+        let opts = EngineOptions { choice, segn: 256, ..Default::default() };
+        let engine = match build_engine(&opts) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("skipping {choice:?}: {e}");
+                continue;
+            }
+        };
+        let t0 = Instant::now();
+        let res = Merlin::new(&*engine, cfg.clone()).run(&series)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let n: usize = res.lengths.iter().map(|l| l.discords.len()).sum();
+        table.row(&[
+            engine.name().to_string(),
+            engine.segn().to_string(),
+            fmt_secs(dt),
+            n.to_string(),
+            res.metrics.drag.tiles_computed.to_string(),
+        ]);
+        results.push(res);
+    }
+    print!("{}", table.to_text());
+
+    if results.len() == 2 {
+        // The engines must find the same discords (within f32 slack).
+        for (a, b) in results[0].lengths.iter().zip(&results[1].lengths) {
+            anyhow::ensure!(a.m == b.m);
+            anyhow::ensure!(
+                (a.discords[0].nn_dist - b.discords[0].nn_dist).abs()
+                    < 1e-2 * (1.0 + a.discords[0].nn_dist),
+                "m={}: native {} vs xla {}",
+                a.m,
+                a.discords[0].nn_dist,
+                b.discords[0].nn_dist
+            );
+        }
+        println!("engines agree on all {} lengths: OK", results[0].lengths.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: plant an anomaly in a random walk, discover it with
+//! MERLIN over a range of lengths, and verify the hit.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use palmad::coordinator::config::{build_engine, EngineOptions};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::core::series::TimeSeries;
+use palmad::gen::inject::{inject, Injection, InjectionKind};
+use palmad::gen::random_walk::random_walk;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A 20k-sample random walk with one planted 96-sample anomaly.
+    let mut series: TimeSeries = random_walk(20_000, 7);
+    let planted = Injection { start: 13_500, len: 96, kind: InjectionKind::SpikeTrain };
+    inject(&mut series, planted, 99);
+    println!("series: {series}, planted anomaly at {}..{}", planted.start, planted.start + planted.len);
+
+    // 2. An engine (native by default; `PALMAD_ENGINE=xla` uses the AOT
+    //    Pallas artifacts after `make artifacts`).
+    let mut opts = EngineOptions::default();
+    if std::env::var("PALMAD_ENGINE").as_deref() == Ok("xla") {
+        opts.choice = palmad::coordinator::config::EngineChoice::Xla;
+    }
+    let engine = build_engine(&opts)?;
+    println!("engine: {} (segn={})", engine.name(), engine.segn());
+
+    // 3. MERLIN: every discord length in [64, 96], top-1 each.
+    let cfg = MerlinConfig { min_l: 64, max_l: 96, top_k: 1, ..Default::default() };
+    let result = Merlin::new(&*engine, cfg).run(&series)?;
+
+    // 4. Report and verify.
+    let mut hits = 0;
+    for lr in &result.lengths {
+        let d = lr.discords[0];
+        let hit = planted.hit(d.idx, d.m);
+        hits += hit as usize;
+        if lr.m % 8 == 0 {
+            println!(
+                "m={:3}  discord at {:5}  nnDist={:7.3}  r={:6.3}  {}",
+                d.m,
+                d.idx,
+                d.nn_dist,
+                lr.r_used,
+                if hit { "HIT" } else { "miss" }
+            );
+        }
+    }
+    println!("\n{} / {} lengths hit the planted anomaly", hits, result.lengths.len());
+    println!("metrics: {}", result.metrics);
+    anyhow::ensure!(hits * 2 > result.lengths.len(), "discovery missed the planted anomaly");
+    println!("quickstart OK");
+    Ok(())
+}

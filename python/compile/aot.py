@@ -1,0 +1,99 @@
+"""AOT compiler: lower the layer-2 graphs to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); python never appears on the
+request path.  Interchange is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick]
+
+`--quick` compiles only the smallest shape of each kind (used by the spike
+smoke test and CI-ish fast paths).  The manifest is a line-oriented file so
+the rust side needs no JSON parser:
+
+    # kind segn mmax nmax file
+    tile 64 128 0 tile_64x128.hlo.txt
+    stats_init 0 0 16384 stats_init_16384.hlo.txt
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model, shapes  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_tile(segn: int, mmax: int) -> str:
+    return to_hlo_text(jax.jit(model.tile_min).lower(*model.tile_min_specs(segn, mmax)))
+
+
+def lower_stats_init(nmax: int) -> str:
+    return to_hlo_text(jax.jit(model.stats_init).lower(*model.stats_init_specs(nmax)))
+
+
+def lower_stats_update(nmax: int) -> str:
+    return to_hlo_text(jax.jit(model.stats_update).lower(*model.stats_update_specs(nmax)))
+
+
+def build(out_dir: str, quick: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = ["# kind segn mmax nmax file"]
+
+    tile_shapes = shapes.TILE_SHAPES[:1] if quick else shapes.TILE_SHAPES
+    stats_shapes = shapes.STATS_SHAPES[:1] if quick else shapes.STATS_SHAPES
+
+    for segn, mmax in tile_shapes:
+        name = f"tile_{segn}x{mmax}.hlo.txt"
+        text = lower_tile(segn, mmax)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"tile {segn} {mmax} 0 {name}")
+        print(f"  tile {segn}x{mmax}: {len(text)} chars", file=sys.stderr)
+
+    for nmax in stats_shapes:
+        name = f"stats_init_{nmax}.hlo.txt"
+        text = lower_stats_init(nmax)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"stats_init 0 0 {nmax} {name}")
+        print(f"  stats_init {nmax}: {len(text)} chars", file=sys.stderr)
+
+        name = f"stats_update_{nmax}.hlo.txt"
+        text = lower_stats_update(nmax)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"stats_update 0 0 {nmax} {name}")
+        print(f"  stats_update {nmax}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest) - 1} artifacts to {out_dir}", file=sys.stderr)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--quick", action="store_true")
+    args = p.parse_args()
+    build(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

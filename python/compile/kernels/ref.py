@@ -1,0 +1,120 @@
+"""Pure-numpy oracles for the Pallas kernels and layer-2 functions.
+
+Everything here is written in the most literal way possible (explicit
+z-normalization, explicit pairwise loops) so that pytest can check the fast
+paths against an implementation whose correctness is obvious.  Mirrors
+Eqs. 4-8 of the paper.
+"""
+
+import numpy as np
+
+SIGMA_FLOOR = 1e-8
+FLAT_EPS = 1e-6
+
+
+def _is_flat(w: np.ndarray) -> bool:
+    w = np.asarray(w, dtype=np.float64)
+    mu = w.mean()
+    var = max((w * w).mean() - mu * mu, 0.0)
+    sig = max(np.sqrt(var), SIGMA_FLOOR)
+    return sig <= FLAT_EPS * max(abs(mu), 1.0)
+
+
+def window_stats(t: np.ndarray, m: int):
+    """Mean/std of every m-length window of ``t`` (Eq. 4), f64, floored sigma.
+
+    Returns (mu, sig) of length len(t) - m + 1.
+    """
+    t = np.asarray(t, dtype=np.float64)
+    n = len(t)
+    cnt = n - m + 1
+    mu = np.empty(cnt)
+    sig = np.empty(cnt)
+    for i in range(cnt):
+        w = t[i : i + m]
+        mu[i] = w.mean()
+        var = max((w * w).mean() - mu[i] * mu[i], 0.0)
+        sig[i] = max(np.sqrt(var), SIGMA_FLOOR)
+    return mu, sig
+
+
+def stats_update(t: np.ndarray, mu: np.ndarray, sig: np.ndarray, m: int):
+    """Eqs. 7/8: stats for length m+1 from stats for length m (oracle form).
+
+    mu/sig cover windows of length m; the result covers len(t) - m windows.
+    """
+    t = np.asarray(t, dtype=np.float64)
+    cnt = len(t) - m
+    mu2 = np.empty(cnt)
+    sig2 = np.empty(cnt)
+    for i in range(cnt):
+        tn = t[i + m]
+        mu2[i] = (m * mu[i] + tn) / (m + 1)
+        var = (m / (m + 1)) * (sig[i] ** 2 + (mu[i] - tn) ** 2 / (m + 1))
+        sig2[i] = max(np.sqrt(max(var, 0.0)), SIGMA_FLOOR)
+    return mu2, sig2
+
+
+def znorm(w: np.ndarray):
+    w = np.asarray(w, dtype=np.float64)
+    mu = w.mean()
+    var = max((w * w).mean() - mu * mu, 0.0)
+    sig = max(np.sqrt(var), SIGMA_FLOOR)
+    return (w - mu) / sig
+
+
+def ed2norm(a: np.ndarray, b: np.ndarray) -> float:
+    """Squared Euclidean distance between z-normalized windows (Eq. 5/6),
+    with the flat-window convention (flat/flat -> 0, flat/normal -> 2m)."""
+    flat_a = _is_flat(a)
+    flat_b = _is_flat(b)
+    if flat_a and flat_b:
+        return 0.0
+    if flat_a or flat_b:
+        return 2.0 * len(a)
+    d = znorm(a) - znorm(b)
+    return float(np.dot(d, d))
+
+
+def qt_ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """QT[i, j] = dot(a[i], b[j]) — oracle for kernels.tile.qt_tile."""
+    return np.asarray(a, np.float64) @ np.asarray(b, np.float64).T
+
+
+def dist_tile_ref(
+    t: np.ndarray,
+    seg_start: int,
+    chunk_start: int,
+    segn: int,
+    m: int,
+    r2: float,
+):
+    """Oracle for the full layer-2 tile_min: brute-force distances between
+    windows [seg_start, seg_start + segn) and [chunk_start, chunk_start +
+    segn), with the |i-j| >= m exclusion zone and bounds validity.
+
+    Returns (row_min, col_min, row_kill, col_kill), each length segn.
+    Invalid/excluded pairs are +inf and never kill.
+    """
+    t = np.asarray(t, dtype=np.float64)
+    n = len(t)
+    nwin = n - m + 1
+    row_min = np.full(segn, np.inf)
+    col_min = np.full(segn, np.inf)
+    row_kill = np.zeros(segn)
+    col_kill = np.zeros(segn)
+    for i in range(segn):
+        gi = seg_start + i
+        if gi >= nwin:
+            continue
+        for j in range(segn):
+            gj = chunk_start + j
+            if gj >= nwin or abs(gj - gi) < m:
+                continue
+            d = ed2norm(t[gi : gi + m], t[gj : gj + m])
+            row_min[i] = min(row_min[i], d)
+            col_min[j] = min(col_min[j], d)
+            if d < r2:
+                row_kill[i] = 1.0
+                col_kill[j] = 1.0
+    return row_min, col_min, row_kill, col_kill

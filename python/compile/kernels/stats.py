@@ -1,0 +1,55 @@
+"""Layer-1 Pallas kernel: recurrent subsequence statistics (Eqs. 7/8).
+
+MERLIN re-runs DRAG once per subsequence length m in [minL, maxL].  The
+paper's key arithmetic saving is that the rolling mean / standard deviation
+vectors for length m+1 are an O(1) elementwise update of the length-m
+vectors:
+
+    mu'_i    = (m * mu_i + t_{i+m}) / (m + 1)                        (Eq. 7)
+    sigma'^2 = m/(m+1) * (sigma_i^2 + (mu_i - t_{i+m})^2 / (m+1))    (Eq. 8)
+
+This kernel applies the update elementwise over NMAX-length vectors in f64
+(the cancellation in sigma^2 is catastrophic in f32 for large-magnitude
+series such as random walks).  Layer 2 supplies ``t_next[i] = t[i + m]``
+as a pre-gathered vector so the kernel itself is purely elementwise and
+blocks trivially.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import shapes
+
+
+def _update_kernel(m_ref, mu_ref, sig_ref, tn_ref, omu_ref, osig_ref):
+    m = m_ref[0]
+    mu = mu_ref[...]
+    sig = sig_ref[...]
+    tn = tn_ref[...]
+    m1 = m + 1.0
+    omu_ref[...] = (m * mu + tn) / m1
+    var = (m / m1) * (sig * sig + (mu - tn) * (mu - tn) / m1)
+    osig_ref[...] = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), shapes.SIGMA_FLOOR)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def stats_update_pallas(m_f, mu, sig, t_next, *, block=None):
+    """Apply Eqs. 7/8 elementwise.  All arrays f64[NMAX]; m_f f64[1]."""
+    (n,) = mu.shape
+    blk = min(block or shapes.STATS_BLOCK, n)
+    assert n % blk == 0
+    grid = (n // blk,)
+    vec = pl.BlockSpec((blk,), lambda i: (i,))
+    scal = pl.BlockSpec((1,), lambda i: (0,))
+    out = jax.ShapeDtypeStruct((n,), jnp.float64)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[scal, vec, vec, vec],
+        out_specs=[vec, vec],
+        out_shape=[out, out],
+        interpret=True,
+    )(m_f, mu, sig, t_next)

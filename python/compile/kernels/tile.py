@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: the distance-tile hot spot.
+
+The paper's PD3 computes, per (segment, chunk) pair staged in GPU shared
+memory, all pairwise z-normalized Euclidean distances between the segment's
+subsequences and the chunk's subsequences (Alg. 3/4) via the scalar-product
+form of the distance (Eq. 6) with an O(1) diagonal recurrence (Eq. 10).
+
+TPU adaptation (see DESIGN.md §2): the serial diagonal recurrence starves a
+systolic array, so the tile is recast as a *blocked masked matmul* —
+windows are materialized, masked to the live length ``m`` and z-normalized
+by layer 2; this kernel computes ``QT = A @ B^T`` with a 3-D grid
+``(I, J, K)`` whose BlockSpecs express the HBM->VMEM staging schedule the
+CUDA code expressed with thread blocks + shared memory.  The normalized
+form makes the distance an affine function of QT:
+
+    ED^2_norm(a_i, b_j) = 2 * (m - QT[i, j])
+
+which layer 2 applies together with exclusion-zone / validity masking and
+the row/col min + kill reductions.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated in DESIGN.md §9.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import shapes
+
+
+def _qt_kernel(a_ref, b_ref, o_ref):
+    """One (BI, BJ, BK) grid step: accumulate a QT block in VMEM.
+
+    a_ref: (BI, BK) block of normalized segment windows
+    b_ref: (BJ, BK) block of normalized chunk windows
+    o_ref: (BI, BJ) accumulator block (revisited across the K grid axis)
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "block_k"))
+def qt_tile(a, b, *, block_i=None, block_j=None, block_k=None):
+    """QT[i, j] = dot(a[i, :], b[j, :]) via the blocked Pallas kernel.
+
+    a: f32[SEGN_A, MMAX] — masked, z-normalized segment windows
+    b: f32[SEGN_B, MMAX] — masked, z-normalized chunk windows
+    returns f32[SEGN_A, SEGN_B]
+    """
+    na, mm = a.shape
+    nb, mmb = b.shape
+    assert mm == mmb, (a.shape, b.shape)
+    bi = min(block_i or shapes.TILE_BLOCK_I, na)
+    bj = min(block_j or shapes.TILE_BLOCK_J, nb)
+    bk = min(block_k or shapes.TILE_BLOCK_K, mm)
+    assert na % bi == 0 and nb % bj == 0 and mm % bk == 0
+
+    grid = (na // bi, nb // bj, mm // bk)
+    return pl.pallas_call(
+        _qt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bj, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((na, nb), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,157 @@
+"""Layer-2 JAX compute graphs, AOT-lowered to HLO for the rust coordinator.
+
+Three entry points (see DESIGN.md §3):
+
+- ``tile_min``     — the PD3 inner loop: all pairwise distances between one
+                     segment and one chunk of subsequences (calls the L1
+                     Pallas tile kernel), reduced to per-row/col minima and
+                     r-threshold kill flags.  One compiled executable per
+                     (SEGN, MMAX) serves *every* subsequence length
+                     m <= MMAX through masking — MERLIN's length sweep never
+                     recompiles.
+- ``stats_init``   — rolling mean/std of all m-length windows (Eq. 4) via a
+                     f64 cumulative-sum scan.
+- ``stats_update`` — the paper's recurrent update m -> m+1 (Eqs. 7/8), via
+                     the L1 elementwise Pallas kernel.
+
+All dynamic quantities (m, global offsets, validity counts, threshold) are
+runtime scalars so shapes stay static for AOT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import shapes
+from .kernels import stats as stats_kernels
+from .kernels import tile as tile_kernels
+
+
+def _windows(src, segn: int, mmax: int):
+    """Materialize the [segn, mmax] window matrix of a source slice.
+
+    Indices are built from iotas (not constants) so the lowered HLO stays
+    small: HLO text with a SEGNxMMAX constant gather index would be MBs.
+    """
+    i = jnp.arange(segn, dtype=jnp.int32)[:, None]
+    k = jnp.arange(mmax, dtype=jnp.int32)[None, :]
+    return src[i + k]
+
+
+def _norm_windows(src, mu, sig, m, segn: int, mmax: int):
+    """Masked, z-normalized window matrix.
+
+    Positions k >= m are zeroed *after* normalization so each row is the
+    z-normalized live window padded with zeros; dot products of two such
+    rows equal m * pearson(a, b), giving ED^2 = 2 * (m - QT).
+    """
+    a = _windows(src, segn, mmax)
+    mask = (jnp.arange(mmax, dtype=jnp.int32)[None, :] < m).astype(jnp.float32)
+    return (a - mu[:, None]) / sig[:, None] * mask
+
+
+def tile_min(seg_src, chunk_src, mu_a, sig_a, mu_b, sig_b, m, delta, na, nb, r2):
+    """Distances between a segment's and a chunk's subsequences, reduced.
+
+    seg_src   f32[SEGN+MMAX-1]  raw series slice starting at the segment's
+                                first subsequence
+    chunk_src f32[SEGN+MMAX-1]  raw slice starting at the chunk's first
+                                subsequence
+    mu_a, sig_a f32[SEGN]       per-window stats for the segment rows
+    mu_b, sig_b f32[SEGN]       per-window stats for the chunk columns
+    m     i32 scalar            live subsequence length (m <= MMAX)
+    delta i32 scalar            chunk_global_start - seg_global_start
+    na/nb i32 scalar            number of valid windows in segment / chunk
+    r2    f32 scalar            squared range-discord threshold
+
+    Returns (row_min, col_min, row_kill, col_kill), each f32[SEGN]:
+    row = segment subsequences, col = chunk subsequences.  Pairs inside the
+    exclusion zone |gj - gi| < m or out of bounds are +inf / never kill.
+    """
+    segn = mu_a.shape[0]
+    mmax = seg_src.shape[0] - segn + 1
+    a = _norm_windows(seg_src, mu_a, sig_a, m, segn, mmax)
+    b = _norm_windows(chunk_src, mu_b, sig_b, m, segn, mmax)
+
+    qt = tile_kernels.qt_tile(a, b)
+    m_f = m.astype(jnp.float32)
+    dist = jnp.clip(2.0 * (m_f - qt), 0.0, 4.0 * m_f)
+
+    # Flat-window convention (see shapes.FLAT_EPS): the normalized windows
+    # of a constant subsequence are numerical garbage, so overwrite.  The
+    # test is relative to |mu| (sliding-stat drift scales with E[x^2]).
+    flat_a = (sig_a <= shapes.FLAT_EPS * jnp.maximum(jnp.abs(mu_a), 1.0))[:, None]
+    flat_b = (sig_b <= shapes.FLAT_EPS * jnp.maximum(jnp.abs(mu_b), 1.0))[None, :]
+    dist = jnp.where(flat_a & flat_b, 0.0, dist)
+    dist = jnp.where(flat_a ^ flat_b, 2.0 * m_f, dist)
+
+    i = jnp.arange(segn, dtype=jnp.int32)
+    gi = i[:, None]
+    gj = delta + i[None, :]
+    bad = (jnp.abs(gj - gi) < m) | (i[:, None] >= na) | (i[None, :] >= nb)
+    dist = jnp.where(bad, jnp.inf, dist)
+
+    row_min = jnp.min(dist, axis=1)
+    col_min = jnp.min(dist, axis=0)
+    kill = dist < r2
+    row_kill = jnp.any(kill, axis=1).astype(jnp.float32)
+    col_kill = jnp.any(kill, axis=0).astype(jnp.float32)
+    return row_min, col_min, row_kill, col_kill
+
+
+def stats_init(t, m):
+    """Rolling mean/std (Eq. 4) of every m-window of t, f64 cumsum scan.
+
+    t f32[NMAX], m i32 scalar -> (mu, sig) f64[NMAX].  Entries at positions
+    i > NMAX - m are padding garbage the rust runtime never reads.
+    """
+    nmax = t.shape[0]
+    td = t.astype(jnp.float64)
+    z = jnp.zeros((1,), jnp.float64)
+    c1 = jnp.concatenate([z, jnp.cumsum(td)])
+    c2 = jnp.concatenate([z, jnp.cumsum(td * td)])
+    i = jnp.arange(nmax, dtype=jnp.int32)
+    j = jnp.minimum(i + m, nmax)
+    m_f = m.astype(jnp.float64)
+    s1 = c1[j] - c1[i]
+    s2 = c2[j] - c2[i]
+    mu = s1 / m_f
+    var = jnp.maximum(s2 / m_f - mu * mu, 0.0)
+    sig = jnp.maximum(jnp.sqrt(var), shapes.SIGMA_FLOOR)
+    return mu, sig
+
+
+def stats_update(t, mu, sig, m):
+    """Eqs. 7/8 recurrent update, delegating to the L1 Pallas kernel.
+
+    t f32[NMAX], mu/sig f64[NMAX] (length-m stats), m i32 scalar
+    -> (mu', sig') f64[NMAX] (length-(m+1) stats).
+    """
+    nmax = t.shape[0]
+    td = t.astype(jnp.float64)
+    i = jnp.arange(nmax, dtype=jnp.int32)
+    t_next = td[jnp.minimum(i + m, nmax - 1)]
+    m_f = m.astype(jnp.float64).reshape((1,))
+    mu2, sig2 = stats_kernels.stats_update_pallas(m_f, mu, sig, t_next)
+    return mu2, sig2
+
+
+def tile_min_specs(segn: int, mmax: int):
+    """ShapeDtypeStructs for lowering tile_min at a given (SEGN, MMAX)."""
+    src = jax.ShapeDtypeStruct((shapes.tile_src_len(segn, mmax),), jnp.float32)
+    vec = jax.ShapeDtypeStruct((segn,), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    return (src, src, vec, vec, vec, vec, i32, i32, i32, i32, f32)
+
+
+def stats_init_specs(nmax: int):
+    t = jax.ShapeDtypeStruct((nmax,), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    return (t, i32)
+
+
+def stats_update_specs(nmax: int):
+    t = jax.ShapeDtypeStruct((nmax,), jnp.float32)
+    v = jax.ShapeDtypeStruct((nmax,), jnp.float64)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    return (t, v, v, i32)

@@ -1,0 +1,50 @@
+"""Artifact shape grid shared by the AOT compiler, tests, and manifest.
+
+The rust runtime picks the smallest bucket that fits a request, so the grid
+below defines the only shapes ever compiled.  `SEGN` is the tile edge (the
+paper's `segN`, the number of subsequences a GPU thread block owns), `MMAX`
+the padded window width (every subsequence length `m <= MMAX` is served by
+the same executable through masking), `NMAX` the padded time-series length
+for the stats kernels.
+"""
+
+# (SEGN, MMAX) pairs for the distance-tile kernel.
+TILE_SHAPES = [
+    (64, 128),
+    (128, 128),
+    (256, 128),
+    (512, 128),
+    (64, 512),
+    (128, 512),
+    (256, 512),
+    (512, 512),
+]
+
+# NMAX buckets for stats_init / stats_update.
+STATS_SHAPES = [16384, 65536, 262144, 1048576]
+
+# Pallas block edges for the tile kernel (rows, cols, K-depth).
+TILE_BLOCK_I = 64
+TILE_BLOCK_J = 64
+TILE_BLOCK_K = 128
+
+# Pallas block length for the elementwise stats-update kernel.
+STATS_BLOCK = 4096
+
+# Floor applied to every standard deviation so constant (stuck-sensor)
+# windows produce finite, stable distances.  Must match
+# `rust/src/core/stats.rs::SIGMA_FLOOR`.
+SIGMA_FLOOR = 1e-8
+
+# Windows with sigma <= FLAT_EPS * max(|mu|, 1) are treated as constant
+# ("flat"): the correlation form of the distance is numerically meaningless
+# for them, so semantics are pinned instead (flat-vs-flat -> 0,
+# flat-vs-normal -> 2m).  The test is relative to the mean because sliding
+# statistics carry rounding drift proportional to eps * E[x^2].
+# Must match `rust/src/core/distance.rs::FLAT_EPS` / `is_flat`.
+FLAT_EPS = 1e-6
+
+
+def tile_src_len(segn: int, mmax: int) -> int:
+    """Length of the raw source slice backing SEGN windows of width MMAX."""
+    return segn + mmax - 1

@@ -1,0 +1,10 @@
+import os
+import sys
+
+import jax
+
+# x64 must be enabled before any jax computation: the stats kernels are f64.
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,52 @@
+"""AOT lowering sanity: HLO text artifacts parse, stay reasonably small
+(no giant constants), and the manifest format matches what the rust
+runtime parses."""
+
+import os
+
+from compile import aot, shapes
+
+
+class TestLowering:
+    def test_tile_hlo_has_no_giant_constants(self):
+        text = aot.lower_tile(64, 128)
+        assert "ENTRY" in text
+        # Window indices must come from iotas, not materialized constants:
+        # a 64x128 i32 constant would serialize to >100KB of text.
+        assert len(text) < 200_000, f"HLO text suspiciously large: {len(text)}"
+        assert "iota" in text
+
+    def test_tile_hlo_contains_dot(self):
+        text = aot.lower_tile(64, 128)
+        assert "dot(" in text or "dot " in text, "pallas matmul should lower to HLO dot"
+
+    def test_stats_init_lowering(self):
+        text = aot.lower_stats_init(16384)
+        assert "ENTRY" in text
+        assert "f64" in text, "stats must compute in f64"
+
+    def test_stats_update_lowering(self):
+        text = aot.lower_stats_update(16384)
+        assert "ENTRY" in text
+        assert "f64" in text
+
+    def test_quick_build_writes_manifest(self, tmp_path):
+        out = tmp_path / "artifacts"
+        aot.build(str(out), quick=True)
+        manifest = (out / "manifest.txt").read_text().strip().splitlines()
+        body = [l for l in manifest if not l.startswith("#")]
+        assert len(body) == 3  # 1 tile + stats_init + stats_update
+        for line in body:
+            fields = line.split()
+            assert len(fields) == 5
+            kind, segn, mmax, nmax, fname = fields
+            assert kind in ("tile", "stats_init", "stats_update")
+            assert os.path.exists(out / fname)
+            int(segn), int(mmax), int(nmax)
+
+    def test_shape_grid_is_consistent(self):
+        for segn, mmax in shapes.TILE_SHAPES:
+            assert segn % shapes.TILE_BLOCK_I == 0 or segn < shapes.TILE_BLOCK_I
+            assert mmax % shapes.TILE_BLOCK_K == 0 or mmax < shapes.TILE_BLOCK_K
+        for nmax in shapes.STATS_SHAPES:
+            assert nmax % shapes.STATS_BLOCK == 0

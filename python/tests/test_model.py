@@ -1,0 +1,142 @@
+"""Layer-2 `tile_min` vs the brute-force oracle, including the exclusion
+zone, validity masking, flat-window convention, and kill flags."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model, shapes
+from compile.kernels import ref
+
+SEGN, MMAX = 64, 128
+SRC = shapes.tile_src_len(SEGN, MMAX)
+
+
+def _run_tile(t, seg_start, chunk_start, m, r2, segn=SEGN, mmax=MMAX):
+    t = np.asarray(t, np.float64)
+    n = len(t)
+    nwin = n - m + 1
+    src = shapes.tile_src_len(segn, mmax)
+
+    def slc(s):
+        out = np.zeros(src, np.float32)
+        if s < n:
+            avail = min(src, n - s)
+            out[:avail] = t[s : s + avail]
+        return out
+
+    mu, sig = ref.window_stats(t, m)
+
+    def stat(s):
+        muo = np.zeros(segn, np.float32)
+        sio = np.ones(segn, np.float32)
+        avail = max(0, min(segn, nwin - s))
+        muo[:avail] = mu[s : s + avail]
+        sio[:avail] = sig[s : s + avail]
+        return muo, sio
+
+    mu_a, sig_a = stat(seg_start)
+    mu_b, sig_b = stat(chunk_start)
+    na = max(0, min(segn, nwin - seg_start))
+    nb = max(0, min(segn, nwin - chunk_start))
+    out = model.tile_min(
+        jnp.asarray(slc(seg_start)),
+        jnp.asarray(slc(chunk_start)),
+        jnp.asarray(mu_a),
+        jnp.asarray(sig_a),
+        jnp.asarray(mu_b),
+        jnp.asarray(sig_b),
+        jnp.int32(m),
+        jnp.int32(chunk_start - seg_start),
+        jnp.int32(na),
+        jnp.int32(nb),
+        jnp.float32(r2),
+    )
+    return [np.asarray(x) for x in out]
+
+
+def _check(t, seg_start, chunk_start, m, r2, segn=SEGN, mmax=MMAX, tol=2e-3):
+    rm, cm, rk, ck = _run_tile(t, seg_start, chunk_start, m, r2, segn, mmax)
+    rm0, cm0, rk0, ck0 = ref.dist_tile_ref(t, seg_start, chunk_start, segn, m, r2)
+    assert np.array_equal(np.isinf(rm), np.isinf(rm0)), "row finiteness"
+    assert np.array_equal(np.isinf(cm), np.isinf(cm0)), "col finiteness"
+    fin = np.isfinite(rm0)
+    np.testing.assert_allclose(rm[fin], rm0[fin], rtol=tol, atol=tol * m)
+    fin = np.isfinite(cm0)
+    np.testing.assert_allclose(cm[fin], cm0[fin], rtol=tol, atol=tol * m)
+    # Kill flags: compare only where the oracle distance is clearly away
+    # from the threshold (f32 slack near the boundary is legitimate).
+    margin = 1e-3 * (1.0 + r2)
+    for k in range(segn):
+        if np.isfinite(rm0[k]) and abs(rm0[k] - r2) > margin:
+            assert rk[k] == rk0[k], f"row_kill {k}: min {rm0[k]} r2 {r2}"
+        if np.isfinite(cm0[k]) and abs(cm0[k] - r2) > margin:
+            assert ck[k] == ck0[k], f"col_kill {k}"
+
+
+def _walk(n, seed):
+    return np.cumsum(np.random.default_rng(seed).normal(size=n))
+
+
+class TestTileMin:
+    def test_disjoint_pair(self):
+        _check(_walk(600, 0), 10, 200, 50, 30.0)
+
+    def test_self_tile_exclusion(self):
+        _check(_walk(500, 1), 64, 64, 40, 20.0)
+
+    def test_partial_overlap(self):
+        _check(_walk(500, 2), 50, 80, 40, 20.0)
+
+    def test_left_chunk(self):
+        _check(_walk(500, 3), 256, 0, 40, 25.0)
+
+    def test_ragged_tail(self):
+        t = _walk(260, 4)
+        _check(t, 180, 100, 30, 15.0)
+
+    def test_flat_regions(self):
+        t = _walk(600, 5)
+        t[250:420] = 13.0
+        _check(t, 192, 320, 40, 10.0)
+
+    def test_all_flat_series(self):
+        t = np.full(400, 2.5)
+        rm, cm, rk, ck = _run_tile(t, 0, 128, 16, 1.0)
+        # Every valid pair is flat-flat -> 0 distance, killed by r2=1.
+        assert np.all(rm[np.isfinite(rm)] == 0.0)
+        assert np.all(rk[: 64] == 1.0)
+
+    def test_max_m_equals_mmax(self):
+        _check(_walk(800, 6), 0, 300, MMAX, 60.0)
+
+    def test_r2_zero_kills_nothing(self):
+        t = _walk(500, 7)
+        _, _, rk, ck = _run_tile(t, 0, 200, 30, 0.0)
+        assert not rk.any() and not ck.any()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(3, MMAX),
+        seg=st.integers(0, 400),
+        delta=st.integers(-300, 300),
+        r2=st.sampled_from([0.5, 5.0, 20.0, 100.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, m, seg, delta, r2, seed):
+        t = _walk(520, seed)
+        chunk = seg + delta
+        if chunk < 0:
+            chunk = 0
+        _check(t, seg, chunk, m, r2)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        segn=st.sampled_from([16, 32, 64]),
+        mmax=st.sampled_from([32, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shape_grid_sweep(self, segn, mmax, seed):
+        t = _walk(400, seed)
+        m = mmax // 2
+        _check(t, 0, segn + m, m, 10.0, segn=segn, mmax=mmax)

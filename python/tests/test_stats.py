@@ -1,0 +1,129 @@
+"""Stats kernels (Eq. 4 init, Eqs. 7/8 recurrent update) vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model, shapes
+from compile.kernels import ref
+from compile.kernels.stats import stats_update_pallas
+
+
+def _series(n, seed, kind="walk"):
+    rng = np.random.default_rng(seed)
+    if kind == "walk":
+        return np.cumsum(rng.normal(size=n))
+    if kind == "large":
+        return rng.normal(size=n) * 1e3 + 1e4
+    return rng.normal(size=n)
+
+
+class TestStatsInit:
+    def _run(self, t, m, nmax=2048):
+        tp = np.zeros(nmax, np.float32)
+        tp[: len(t)] = t
+        mu, sig = model.stats_init(jnp.asarray(tp), jnp.int32(m))
+        nwin = len(t) - m + 1
+        return np.asarray(mu)[:nwin], np.asarray(sig)[:nwin]
+
+    def test_matches_oracle(self):
+        t = _series(1500, 0)
+        mu, sig = self._run(t, 100)
+        mu0, sig0 = ref.window_stats(t.astype(np.float32).astype(np.float64), 100)
+        np.testing.assert_allclose(mu, mu0, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(sig, sig0, rtol=1e-6, atol=1e-9)
+
+    def test_constant_series_floors_sigma(self):
+        t = np.full(500, 7.25)
+        mu, sig = self._run(t, 32)
+        np.testing.assert_allclose(mu, 7.25, rtol=1e-12)
+        assert np.all(sig == shapes.SIGMA_FLOOR)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(50, 1200),
+        m=st.integers(3, 48),
+        kind=st.sampled_from(["walk", "large", "noise"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_sweep(self, n, m, kind, seed):
+        t = _series(n, seed, kind)
+        mu, sig = self._run(t, m)
+        mu0, sig0 = ref.window_stats(t.astype(np.float32).astype(np.float64), m)
+        np.testing.assert_allclose(mu, mu0, rtol=1e-9, atol=1e-7)
+        np.testing.assert_allclose(sig, sig0, rtol=1e-5, atol=1e-8)
+
+
+class TestStatsUpdate:
+    def _run_update(self, t, mu, sig, m, nmax=2048):
+        tp = np.zeros(nmax, np.float32)
+        tp[: len(t)] = t
+        mup = np.zeros(nmax)
+        sigp = np.ones(nmax)
+        mup[: len(mu)] = mu
+        sigp[: len(sig)] = sig
+        mu2, sig2 = model.stats_update(
+            jnp.asarray(tp), jnp.asarray(mup), jnp.asarray(sigp), jnp.int32(m)
+        )
+        nwin = len(t) - m
+        return np.asarray(mu2)[:nwin], np.asarray(sig2)[:nwin]
+
+    def test_one_step_matches_oracle(self):
+        t = _series(800, 3).astype(np.float32).astype(np.float64)
+        m = 64
+        mu, sig = ref.window_stats(t, m)
+        mu2, sig2 = self._run_update(t, mu, sig, m)
+        mu2_ref, sig2_ref = ref.stats_update(t, mu, sig, m)
+        np.testing.assert_allclose(mu2, mu2_ref, rtol=1e-9)
+        np.testing.assert_allclose(sig2, sig2_ref, rtol=1e-6, atol=1e-9)
+        # And equals fresh stats at m+1.
+        mu_f, sig_f = ref.window_stats(t, m + 1)
+        np.testing.assert_allclose(mu2, mu_f, rtol=1e-9)
+        np.testing.assert_allclose(sig2, sig_f, rtol=1e-5, atol=1e-8)
+
+    def test_chained_updates_stay_exact(self):
+        """Apply the recurrence many times; drift must stay tiny (this is
+        the paper's central arithmetic claim)."""
+        t = _series(600, 4).astype(np.float32).astype(np.float64)
+        m0 = 16
+        mu, sig = ref.window_stats(t, m0)
+        for step in range(40):
+            m = m0 + step
+            mu, sig = self._run_update(t, mu, sig, m)
+        mu_f, sig_f = ref.window_stats(t, m0 + 40)
+        np.testing.assert_allclose(mu, mu_f, rtol=1e-8)
+        np.testing.assert_allclose(sig, sig_f, rtol=1e-5, atol=1e-8)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(60, 800),
+        m=st.integers(3, 40),
+        kind=st.sampled_from(["walk", "large"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_sweep(self, n, m, kind, seed):
+        t = _series(n, seed, kind).astype(np.float32).astype(np.float64)
+        mu, sig = ref.window_stats(t, m)
+        mu2, sig2 = self._run_update(t, mu, sig, m)
+        mu_f, sig_f = ref.window_stats(t, m + 1)
+        np.testing.assert_allclose(mu2, mu_f, rtol=1e-7, atol=1e-7)
+        np.testing.assert_allclose(sig2, sig_f, rtol=1e-5, atol=1e-7)
+
+
+class TestPallasUpdateKernel:
+    def test_blocks_partition_correctly(self):
+        n = 4096
+        rng = np.random.default_rng(5)
+        mu = rng.normal(size=n)
+        sig = np.abs(rng.normal(size=n)) + 0.1
+        tn = rng.normal(size=n)
+        m = np.array([17.0])
+        for block in (512, 1024, 4096):
+            mu2, sig2 = stats_update_pallas(
+                jnp.asarray(m), jnp.asarray(mu), jnp.asarray(sig), jnp.asarray(tn), block=block
+            )
+            mu_ref = (17.0 * mu + tn) / 18.0
+            var_ref = (17.0 / 18.0) * (sig**2 + (mu - tn) ** 2 / 18.0)
+            sig_ref = np.maximum(np.sqrt(var_ref), shapes.SIGMA_FLOOR)
+            np.testing.assert_allclose(np.asarray(mu2), mu_ref, rtol=1e-12)
+            np.testing.assert_allclose(np.asarray(sig2), sig_ref, rtol=1e-12)

@@ -1,0 +1,42 @@
+//! Ablation: PD3's pruning machinery — segment early-stop (Alg. 3 l.14)
+//! and direct vs deferred neighbor kills (the paper's `Neighbor` bitmap,
+//! Alg. 3 l.11 / Alg. 4 l.2) — measured by time and by tiles evaluated.
+
+use palmad::bench::harness::{default_reps, measure, quick_mode, Bench};
+use palmad::coordinator::drag::Pd3Config;
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::engines::native::NativeEngine;
+use palmad::gen::registry;
+
+fn main() {
+    let mut bench = Bench::new("ablation_pruning");
+    let n = if quick_mode() { 8_000 } else { 24_000 };
+    let t = registry::dataset_prefix("ecg", n, 42).unwrap().series;
+    let (min_l, max_l) = (128, 136);
+
+    let cases: [(&str, Pd3Config); 3] = [
+        ("early_stop+direct_kill", Pd3Config { early_stop: true, deferred_neighbor_kill: false }),
+        ("early_stop+deferred_kill", Pd3Config { early_stop: true, deferred_neighbor_kill: true }),
+        ("no_early_stop", Pd3Config { early_stop: false, deferred_neighbor_kill: false }),
+    ];
+
+    for (label, pd3) in cases {
+        let engine = NativeEngine::with_segn(256);
+        let cfg = MerlinConfig { min_l, max_l, top_k: 1, pd3, ..Default::default() };
+        let mut tiles = (0u64, 0u64);
+        let s = measure(0, default_reps(), || {
+            let res = Merlin::new(&engine, cfg.clone()).run(&t).unwrap();
+            tiles = (res.metrics.drag.tiles_computed, res.metrics.drag.tiles_skipped);
+        });
+        bench.record(
+            label,
+            format!("n={n} range={min_l}..{max_l}"),
+            s,
+            vec![
+                ("tiles".into(), tiles.0.to_string()),
+                ("skipped".into(), tiles.1.to_string()),
+            ],
+        );
+    }
+    bench.finish();
+}

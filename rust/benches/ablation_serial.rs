@@ -1,0 +1,37 @@
+//! Ablation the paper omits: serial MERLIN (the 2020 original, with
+//! per-length from-scratch normalization and serial DRAG) vs PALMAD on
+//! the same CPU — the parallelization + recurrence speedup in isolation
+//! from GPU-vs-CPU hardware differences.
+
+use palmad::baselines::merlin_serial;
+use palmad::bench::harness::{quick_mode, Bench};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::engines::native::NativeEngine;
+use palmad::gen::registry;
+
+fn main() {
+    let mut bench = Bench::new("ablation_serial_vs_palmad");
+    let n = if quick_mode() { 2_000 } else { 6_000 };
+    let (min_l, max_l) = (48, 64);
+
+    for name in ["ecg2", "random_walk_1m"] {
+        let t = registry::dataset_prefix(name, n, 42).unwrap().series;
+
+        bench.run("serial_merlin", format!("{name} n={n} range={min_l}..{max_l}"), || {
+            merlin_serial::merlin(&t.values, min_l, max_l, 1);
+        });
+
+        for segn in [64usize, 256] {
+            let engine = NativeEngine::with_segn(segn);
+            let cfg = MerlinConfig { min_l, max_l, top_k: 1, ..Default::default() };
+            bench.run(
+                format!("palmad_segn{segn}"),
+                format!("{name} n={n} range={min_l}..{max_l}"),
+                || {
+                    Merlin::new(&engine, cfg.clone()).run(&t).unwrap();
+                },
+            );
+        }
+    }
+    bench.finish();
+}

@@ -1,0 +1,74 @@
+//! Ablation: the paper's recurrent statistics (Eqs. 7/8) vs recomputing
+//! window stats from scratch at every length — the headline
+//! redundancy-elimination claim, isolated.
+//!
+//! Also times the AOT `stats_update` Pallas kernel path when artifacts
+//! are available (its PJRT call overhead vs in-process arithmetic is a
+//! DESIGN.md §Perf data point).
+
+use palmad::bench::harness::{quick_mode, Bench};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig, StatsBackend};
+use palmad::core::stats::RollingStats;
+use palmad::engines::native::NativeEngine;
+use palmad::gen::registry;
+
+fn main() {
+    let mut bench = Bench::new("ablation_recurrent_stats");
+    let n = if quick_mode() { 8_000 } else { 32_000 };
+    let (min_l, max_l) = if quick_mode() { (64, 96) } else { (64, 256) };
+    let t = registry::dataset_prefix("random_walk_1m", n, 42).unwrap().series;
+
+    // Stats-only microcomparison: recurrence vs from-scratch across the
+    // whole length sweep.
+    bench.run("stats_recurrence_only", format!("n={n} range={min_l}..{max_l}"), || {
+        let mut s = RollingStats::compute(&t.values, min_l);
+        for _ in min_l..max_l {
+            s.advance(&t.values);
+        }
+        std::hint::black_box(&s);
+    });
+    bench.run("stats_fresh_only", format!("n={n} range={min_l}..{max_l}"), || {
+        for m in min_l..=max_l {
+            std::hint::black_box(RollingStats::compute(&t.values, m));
+        }
+    });
+
+    // Whole-pipeline effect.
+    let engine = NativeEngine::with_segn(256);
+    for (label, backend) in [
+        ("merlin_recurrent", StatsBackend::Native),
+        ("merlin_fresh", StatsBackend::NaivePerLength),
+    ] {
+        let cfg = MerlinConfig {
+            min_l,
+            max_l,
+            top_k: 1,
+            stats_backend: backend,
+            ..Default::default()
+        };
+        bench.run(label, format!("n={n} range={min_l}..{max_l}"), || {
+            Merlin::new(&engine, cfg.clone()).run(&t).unwrap();
+        });
+    }
+
+    // AOT stats path (optional).
+    if let Ok(artifacts) =
+        palmad::runtime::artifact::ArtifactSet::load(palmad::runtime::artifact::ArtifactSet::default_dir())
+    {
+        if let Some(&segn) = artifacts.tile_segns().first() {
+            use palmad::engines::Engine as _;
+            let engine = palmad::engines::xla::XlaEngine::new(artifacts, segn).unwrap();
+            let span = if quick_mode() { 8 } else { 32 };
+            bench.run("stats_aot_kernel", format!("n={n} steps={span}"), || {
+                let mut s = engine.aot_stats_init(&t.values, min_l).unwrap();
+                for _ in 0..span {
+                    s = engine.aot_stats_update(&t.values, &s).unwrap();
+                }
+                std::hint::black_box(&s);
+            });
+        }
+    } else {
+        println!("  (no artifacts; skipping AOT stats row)");
+    }
+    bench.finish();
+}

@@ -1,0 +1,60 @@
+//! Fig. 4 reproduction: PALMAD vs KBF (brute-force K-distance discord) on
+//! the Koski-ECG surrogate — total runtime and time-per-discord vs series
+//! length.
+//!
+//! Scale note: the paper runs n up to 100k on a Tesla V100; KBF is
+//! O(n^2 m) with no pruning, so on this CPU testbed the sweep uses
+//! n in {2k, 4k, 8k} with m = 256 (458 in the paper).  The comparison
+//! *shape* is the target: PALMAD wins outright on total time, and wins
+//! per-discord by a growing factor, exactly as Fig. 4 reports.
+
+use palmad::baselines::kbf;
+use palmad::bench::harness::{default_reps, measure, quick_mode, Bench};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::engines::native::NativeEngine;
+use palmad::gen::registry;
+
+fn main() {
+    let mut bench = Bench::new("fig4_palmad_vs_kbf");
+    let sizes: &[usize] = if quick_mode() { &[2_000] } else { &[2_000, 4_000, 8_000] };
+    let m = 256;
+
+    for &n in sizes {
+        let spec = registry::dataset_prefix("koski_ecg", n, 42).unwrap();
+        let t = spec.series;
+
+        // PALMAD, all discords of the single length (minL = maxL = m).
+        let engine = NativeEngine::with_segn(256);
+        let cfg = MerlinConfig { min_l: m, max_l: m, top_k: 0, ..Default::default() };
+        let mut discords = 0usize;
+        let s = measure(0, default_reps(), || {
+            let res = Merlin::new(&engine, cfg.clone()).run(&t).unwrap();
+            discords = res.lengths[0].discords.len();
+        });
+        let per = s.median / discords.max(1) as f64;
+        bench.record(
+            "palmad",
+            format!("n={n} m={m}"),
+            s,
+            vec![
+                ("discords".into(), discords.to_string()),
+                ("per_discord_ms".into(), format!("{:.2}", per * 1e3)),
+            ],
+        );
+
+        // KBF: top-1 K-distance discord (K=3 per the rival's paper).
+        let s = measure(0, default_reps(), || {
+            kbf::kbf_top1(&t.values, m, 3, palmad::util::pool::default_threads()).unwrap();
+        });
+        bench.record(
+            "kbf_k3",
+            format!("n={n} m={m}"),
+            s,
+            vec![
+                ("discords".into(), "1".into()),
+                ("per_discord_ms".into(), format!("{:.2}", s.median * 1e3)),
+            ],
+        );
+    }
+    bench.finish();
+}

@@ -1,0 +1,62 @@
+//! Fig. 5 reproduction: PALMAD vs Zhu et al.'s top-1 framework over the
+//! Tab. 1 roster — runtime, number of discords found, and average time to
+//! discover one discord.
+//!
+//! Scale note: series are truncated to 6k-sample prefixes (1M/2M random
+//! walks included) and discord lengths capped at 256 so the O(n^2 m)
+//! rival finishes on CPU.  The Fig. 5 shape to reproduce: Zhu wins total
+//! time (it stops after one discord), PALMAD finds orders of magnitude
+//! more discords and wins time-per-discord.
+
+use palmad::baselines::zhu;
+use palmad::bench::harness::{default_reps, measure, quick_mode, Bench};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::engines::native::NativeEngine;
+use palmad::gen::registry;
+
+fn main() {
+    let mut bench = Bench::new("fig5_palmad_vs_zhu");
+    let roster: &[&str] = if quick_mode() {
+        &["ecg2"]
+    } else {
+        &["space_shuttle", "ecg", "ecg2", "koski_ecg", "respiration", "power_demand", "random_walk_1m"]
+    };
+    let n = 6_000;
+
+    for name in roster {
+        let spec = registry::dataset_prefix(name, n, 42).unwrap();
+        let m = spec.m.min(256);
+        let t = spec.series;
+
+        let engine = NativeEngine::with_segn(256);
+        let cfg = MerlinConfig { min_l: m, max_l: m, top_k: 0, ..Default::default() };
+        let mut discords = 0usize;
+        let s = measure(0, default_reps(), || {
+            let res = Merlin::new(&engine, cfg.clone()).run(&t).unwrap();
+            discords = res.lengths[0].discords.len();
+        });
+        bench.record(
+            "palmad",
+            format!("{name} n={n} m={m}"),
+            s,
+            vec![
+                ("discords".into(), discords.to_string()),
+                ("per_discord_ms".into(), format!("{:.3}", s.median * 1e3 / discords.max(1) as f64)),
+            ],
+        );
+
+        let s = measure(0, default_reps(), || {
+            zhu::zhu_top1(&t.values, m, palmad::util::pool::default_threads()).unwrap();
+        });
+        bench.record(
+            "zhu_top1",
+            format!("{name} n={n} m={m}"),
+            s,
+            vec![
+                ("discords".into(), "1".into()),
+                ("per_discord_ms".into(), format!("{:.3}", s.median * 1e3)),
+            ],
+        );
+    }
+    bench.finish();
+}

@@ -1,0 +1,76 @@
+//! Fig. 6 reproduction: PALMAD runtime vs the segment length (tile edge
+//! `segN`), on a real-world surrogate and a synthetic random walk.
+//!
+//! The paper's finding: larger segments run faster (less staging
+//! overhead per distance), with runtime roughly proportional to the
+//! segment-count.  Here `segN` controls tile granularity: larger tiles
+//! amortize per-tile setup (stats slicing, QT seed rows) the same way
+//! larger CUDA blocks amortize shared-memory staging.
+
+use palmad::bench::harness::{default_reps, measure, quick_mode, Bench};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::engines::native::NativeEngine;
+use palmad::engines::xla::XlaEngine;
+use palmad::gen::registry;
+use palmad::runtime::artifact::ArtifactSet;
+
+fn main() {
+    let mut bench = Bench::new("fig6_seglen");
+    let segns: &[usize] = if quick_mode() { &[64, 256] } else { &[64, 128, 256, 512] };
+    let workloads: &[(&str, usize, usize)] = if quick_mode() {
+        &[("ecg", 8_000, 128)]
+    } else {
+        // (dataset, n, m)
+        &[("ecg", 16_000, 128), ("random_walk_1m", 16_000, 128)]
+    };
+
+    for &(name, n, m) in workloads {
+        let t = registry::dataset_prefix(name, n, 42).unwrap().series;
+        for &segn in segns {
+            let engine = NativeEngine::with_segn(segn);
+            let cfg = MerlinConfig { min_l: m, max_l: m + 8, top_k: 1, ..Default::default() };
+            let mut tiles = 0u64;
+            let s = measure(0, default_reps(), || {
+                let res = Merlin::new(&engine, cfg.clone()).run(&t).unwrap();
+                tiles = res.metrics.drag.tiles_computed;
+            });
+            bench.record(
+                format!("native segn={segn}"),
+                format!("{name} n={n} m={m}..{}", m + 8),
+                s,
+                vec![("tiles".into(), tiles.to_string())],
+            );
+        }
+    }
+
+    // The AOT/PJRT path is where the paper's mechanism (per-launch staging
+    // amortized by larger segments) applies directly: each tile pays a
+    // fixed PJRT call overhead, so larger segN should win — the Fig. 6
+    // shape.  (On the native path finer segments win instead: early-stop
+    // granularity dominates; both series are reported.)
+    if let Ok(artifacts) = ArtifactSet::load(ArtifactSet::default_dir()) {
+        let (name, n, m) = ("ecg", if quick_mode() { 4_000 } else { 8_000 }, 100);
+        let t = registry::dataset_prefix(name, n, 42).unwrap().series;
+        for &segn in segns {
+            if artifacts.max_m_for_segn(segn).map_or(true, |mm| mm < m) {
+                continue;
+            }
+            let engine = XlaEngine::new(artifacts.clone(), segn).unwrap();
+            let cfg = MerlinConfig { min_l: m, max_l: m, top_k: 1, ..Default::default() };
+            let mut tiles = 0u64;
+            let s = measure(0, default_reps(), || {
+                let res = Merlin::new(&engine, cfg.clone()).run(&t).unwrap();
+                tiles = res.metrics.drag.tiles_computed;
+            });
+            bench.record(
+                format!("xla segn={segn}"),
+                format!("{name} n={n} m={m}"),
+                s,
+                vec![("tiles".into(), tiles.to_string())],
+            );
+        }
+    } else {
+        println!("  (no artifacts; skipping xla seglen series)");
+    }
+    bench.finish();
+}

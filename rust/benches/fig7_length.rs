@@ -1,0 +1,29 @@
+//! Fig. 7 reproduction: PALMAD runtime vs series length `n` (prefixes of
+//! a real-world surrogate and of the random walk), fixed discord range.
+//!
+//! The paper reports near-linear growth (thanks to range pruning); the
+//! shape to reproduce is monotone growth distinctly below quadratic.
+
+use palmad::bench::harness::{quick_mode, Bench};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::engines::native::NativeEngine;
+use palmad::gen::registry;
+
+fn main() {
+    let mut bench = Bench::new("fig7_series_length");
+    let sizes: &[usize] = if quick_mode() { &[4_000, 8_000] } else { &[4_000, 8_000, 16_000, 32_000] };
+    let workloads: &[(&str, usize)] =
+        if quick_mode() { &[("koski_ecg", 128)] } else { &[("koski_ecg", 128), ("random_walk_1m", 128)] };
+
+    for &(name, m) in workloads {
+        for &n in sizes {
+            let t = registry::dataset_prefix(name, n, 42).unwrap().series;
+            let engine = NativeEngine::with_segn(256);
+            let cfg = MerlinConfig { min_l: m, max_l: m + 16, top_k: 1, ..Default::default() };
+            bench.run(format!("n={n}"), format!("{name} m={m}..{}", m + 16), || {
+                Merlin::new(&engine, cfg.clone()).run(&t).unwrap();
+            });
+        }
+    }
+    bench.finish();
+}

@@ -1,0 +1,40 @@
+//! Fig. 8 reproduction: PALMAD runtime vs the width of the discord length
+//! range `[minL, maxL]` — the arbitrary-length capability that headlines
+//! MERLIN.  The paper reports runtime proportional to the range width;
+//! the recurrences (Eqs. 7/8) keep the per-length overhead flat.
+
+use palmad::bench::harness::{quick_mode, Bench};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::engines::native::NativeEngine;
+use palmad::gen::registry;
+
+fn main() {
+    let mut bench = Bench::new("fig8_range_width");
+    let widths: &[usize] = if quick_mode() { &[1, 9] } else { &[1, 9, 25, 57] };
+    let workloads: &[(&str, usize, usize)] = if quick_mode() {
+        &[("ecg", 8_000, 128)]
+    } else {
+        &[("ecg", 12_000, 128), ("random_walk_1m", 12_000, 128)]
+    };
+
+    for &(name, n, min_l) in workloads {
+        let t = registry::dataset_prefix(name, n, 42).unwrap().series;
+        for &w in widths {
+            let engine = NativeEngine::with_segn(256);
+            let cfg = MerlinConfig {
+                min_l,
+                max_l: min_l + w - 1,
+                top_k: 1,
+                ..Default::default()
+            };
+            bench.run(
+                format!("width={w}"),
+                format!("{name} n={n} range={min_l}..{}", min_l + w - 1),
+                || {
+                    Merlin::new(&engine, cfg.clone()).run(&t).unwrap();
+                },
+            );
+        }
+    }
+    bench.finish();
+}

@@ -1,0 +1,114 @@
+//! Hot-path microbenchmarks for the L3 perf pass (EXPERIMENTS.md §Perf):
+//! dot products, early-abandon distance, the rolling-stat recurrence, one
+//! native tile, and the PJRT tile call, with derived throughput rates.
+
+use palmad::bench::harness::{default_reps, measure, quick_mode, Bench};
+use palmad::core::distance::{dot, ed2_early_abandon, znorm};
+use palmad::core::stats::RollingStats;
+use palmad::engines::native::compute_tile;
+use palmad::engines::{Engine, SeriesView, TileTask};
+use palmad::gen::random_walk::random_walk;
+
+fn main() {
+    let mut bench = Bench::new("microbench");
+    let t = random_walk(100_000, 42);
+    let m = 256;
+    let segn = 256;
+
+    // Raw dot product (the QT seed cost).
+    let a = &t.values[0..m];
+    let b = &t.values[m..2 * m];
+    let s = measure(2, default_reps(), || {
+        for _ in 0..10_000 {
+            std::hint::black_box(dot(std::hint::black_box(a), std::hint::black_box(b)));
+        }
+    });
+    let flops = 2.0 * m as f64 * 10_000.0 / s.median / 1e9;
+    bench.record("dot_m256", "10k iters", s, vec![("gflops".into(), format!("{flops:.2}"))]);
+
+    // Early-abandon distance.
+    let an = znorm(a);
+    let bn = znorm(b);
+    let s = measure(2, default_reps(), || {
+        for _ in 0..10_000 {
+            std::hint::black_box(ed2_early_abandon(
+                std::hint::black_box(&an),
+                std::hint::black_box(&bn),
+                f64::INFINITY,
+            ));
+        }
+    });
+    bench.record("ed2_early_abandon_m256", "10k iters, no abandon", s, vec![]);
+
+    // Rolling stats: initial vs recurrent advance.
+    let s = measure(1, default_reps(), || {
+        std::hint::black_box(RollingStats::compute(&t.values, m));
+    });
+    let rate = t.len() as f64 / s.median / 1e6;
+    bench.record("stats_compute", "n=100k m=256", s, vec![("melem_per_s".into(), format!("{rate:.0}"))]);
+
+    let s = measure(1, default_reps(), || {
+        let mut st = RollingStats::compute(&t.values, m);
+        st.advance(&t.values);
+        std::hint::black_box(&st);
+    });
+    bench.record("stats_advance_incl_init", "n=100k", s, vec![]);
+
+    // One native tile: the inner-loop workhorse.
+    let stats = RollingStats::compute(&t.values, m);
+    let view = SeriesView { t: &t.values, stats: &stats };
+    let s = measure(1, default_reps(), || {
+        std::hint::black_box(compute_tile(
+            &view,
+            segn,
+            1.0,
+            TileTask { seg_start: 0, chunk_start: 4096 },
+        ));
+    });
+    let cells = (segn * segn) as f64;
+    bench.record(
+        "native_tile_256x256_m256",
+        "one tile",
+        s,
+        vec![("mcells_per_s".into(), format!("{:.1}", cells / s.median / 1e6))],
+    );
+
+    // PJRT tile call (when artifacts exist): per-call overhead + compute.
+    if let Ok(artifacts) =
+        palmad::runtime::artifact::ArtifactSet::load(palmad::runtime::artifact::ArtifactSet::default_dir())
+    {
+        if artifacts.tiles.keys().any(|s| s.segn == segn && s.mmax >= m) {
+            let engine = palmad::engines::xla::XlaEngine::new(artifacts, segn).unwrap();
+            let tasks: Vec<TileTask> = (0..8)
+                .map(|k| TileTask { seg_start: k * segn, chunk_start: 4096 + k * segn })
+                .collect();
+            // Warm the executable cache first.
+            engine.compute_tiles(&view, 1.0, &tasks[..1]).unwrap();
+            let s = measure(1, default_reps(), || {
+                std::hint::black_box(engine.compute_tiles(&view, 1.0, &tasks).unwrap());
+            });
+            bench.record(
+                "xla_tile_batch8_256x512",
+                "8 tiles/call",
+                s,
+                vec![("ms_per_tile".into(), format!("{:.2}", s.median * 1e3 / 8.0))],
+            );
+        }
+    }
+
+    // Bitmap scan rate (segment-liveness checks).
+    let bm = palmad::core::bitmap::Bitmap::ones(1_000_000);
+    let s = measure(2, default_reps(), || {
+        let mut alive = 0;
+        for seg in 0..(1_000_000 / 256) {
+            alive += bm.any_in_range(seg * 256, (seg + 1) * 256) as usize;
+        }
+        std::hint::black_box(alive);
+    });
+    bench.record("bitmap_liveness_1m", "3906 ranges", s, vec![]);
+
+    if quick_mode() {
+        println!("  (quick mode: reps reduced)");
+    }
+    bench.finish();
+}

@@ -1,0 +1,153 @@
+//! Discord heatmap (Eq. 11): a `(maxL - minL + 1) x (n - minL)` intensity
+//! matrix where cell `(m, i)` is the normalized nearest-neighbor distance
+//! of discord `T[i, m]`:
+//!
+//! ```text
+//! heatmap(m, i) = nnDist^2(T_i,m) / (2m)        (Eq. 11, squared form)
+//! ```
+//!
+//! Non-discord cells are 0.  Built from a MERLIN run with `top_k = 0`
+//! (collect all survivors per length).
+
+use crate::coordinator::merlin::MerlinResult;
+
+/// Dense heatmap with length-major rows.
+#[derive(Clone, Debug)]
+pub struct Heatmap {
+    pub min_l: usize,
+    pub max_l: usize,
+    /// Number of index columns (`n - minL`).
+    pub width: usize,
+    /// Row-major `(maxL - minL + 1) x width` scores in `[0, 1]`-ish range
+    /// (Eq. 11's normalization bounds scores by 2).
+    pub data: Vec<f64>,
+}
+
+impl Heatmap {
+    pub fn rows(&self) -> usize {
+        self.max_l - self.min_l + 1
+    }
+
+    #[inline]
+    pub fn get(&self, m: usize, i: usize) -> f64 {
+        self.data[(m - self.min_l) * self.width + i]
+    }
+
+    #[inline]
+    fn set(&mut self, m: usize, i: usize, v: f64) {
+        self.data[(m - self.min_l) * self.width + i] = v;
+    }
+
+    /// Build from a MERLIN result over an `n`-sample series.
+    ///
+    /// Uses the squared-distance normalization `nnDist^2 / (2m)` per the
+    /// paper's Eq. 11 ("we employ the normalizing divisor 2m according to
+    /// Equation 6", whose left side is the squared distance; scores then
+    /// land in [0, 2]).
+    pub fn from_result(res: &MerlinResult, n: usize) -> Heatmap {
+        let (min_l, max_l) = match (res.lengths.first(), res.lengths.last()) {
+            (Some(a), Some(b)) => (a.m, b.m),
+            _ => (0, 0),
+        };
+        let width = n.saturating_sub(min_l);
+        let mut hm = Heatmap {
+            min_l,
+            max_l,
+            width,
+            data: vec![0.0; (max_l - min_l + 1) * width],
+        };
+        for lr in &res.lengths {
+            for d in &lr.discords {
+                if d.idx < width {
+                    let score = (d.nn_dist * d.nn_dist) / (2.0 * d.m as f64);
+                    hm.set(lr.m, d.idx, score);
+                }
+            }
+        }
+        hm
+    }
+
+    /// Max score (for display normalization).
+    pub fn max_score(&self) -> f64 {
+        self.data.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Downsample by max-pooling to at most `(max_rows, max_cols)` — the
+    /// rendering path for year-long series.
+    pub fn downsample(&self, max_rows: usize, max_cols: usize) -> Heatmap {
+        let rows = self.rows();
+        let r_factor = rows.div_ceil(max_rows.max(1)).max(1);
+        let c_factor = self.width.div_ceil(max_cols.max(1)).max(1);
+        let new_rows = rows.div_ceil(r_factor);
+        let new_cols = self.width.div_ceil(c_factor);
+        let mut data = vec![0.0; new_rows * new_cols];
+        for r in 0..rows {
+            for c in 0..self.width {
+                let v = self.data[r * self.width + c];
+                let cell = &mut data[(r / r_factor) * new_cols + c / c_factor];
+                if v > *cell {
+                    *cell = v;
+                }
+            }
+        }
+        Heatmap {
+            min_l: self.min_l,
+            max_l: self.min_l + new_rows - 1, // row labels compressed
+            width: new_cols,
+            data,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::drag::Discord;
+    use crate::coordinator::merlin::{LengthResult, MerlinResult};
+    use crate::coordinator::metrics::MerlinMetrics;
+
+    fn fake_result() -> MerlinResult {
+        MerlinResult {
+            lengths: vec![
+                LengthResult {
+                    m: 4,
+                    r_used: 1.0,
+                    retries: 0,
+                    discords: vec![Discord { idx: 2, m: 4, nn_dist: 2.0 }],
+                },
+                LengthResult {
+                    m: 5,
+                    r_used: 1.0,
+                    retries: 0,
+                    discords: vec![
+                        Discord { idx: 7, m: 5, nn_dist: 3.0 },
+                        Discord { idx: 0, m: 5, nn_dist: 1.0 },
+                    ],
+                },
+            ],
+            metrics: MerlinMetrics::default(),
+        }
+    }
+
+    #[test]
+    fn scores_match_eq11() {
+        let hm = Heatmap::from_result(&fake_result(), 20);
+        assert_eq!(hm.rows(), 2);
+        assert_eq!(hm.width, 16);
+        assert!((hm.get(4, 2) - 4.0 / 8.0).abs() < 1e-12);
+        assert!((hm.get(5, 7) - 9.0 / 10.0).abs() < 1e-12);
+        assert!((hm.get(5, 0) - 1.0 / 10.0).abs() < 1e-12);
+        assert_eq!(hm.get(4, 3), 0.0);
+        assert!((hm.max_score() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn downsample_max_pools() {
+        let hm = Heatmap::from_result(&fake_result(), 20);
+        let small = hm.downsample(1, 4);
+        assert_eq!(small.rows(), 1);
+        assert_eq!(small.width, 4);
+        // Col block [4..8) holds the 0.9 score.
+        assert!((small.data[1] - 0.9).abs() < 1e-12);
+    }
+}

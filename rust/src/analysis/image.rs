@@ -1,0 +1,138 @@
+//! Minimal image output: binary PGM (grayscale) and PPM (color) writers,
+//! plus the heatmap renderer.  No image crates are available offline;
+//! PGM/PPM open everywhere and convert trivially.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::heatmap::Heatmap;
+
+/// Write an 8-bit grayscale PGM (`P5`).
+pub fn write_pgm(path: impl AsRef<Path>, width: usize, height: usize, pixels: &[u8]) -> Result<()> {
+    anyhow::ensure!(pixels.len() == width * height, "pixel buffer size mismatch");
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    write!(f, "P5\n{width} {height}\n255\n")?;
+    f.write_all(pixels)?;
+    Ok(())
+}
+
+/// Write an 8-bit RGB PPM (`P6`).
+pub fn write_ppm(path: impl AsRef<Path>, width: usize, height: usize, rgb: &[u8]) -> Result<()> {
+    anyhow::ensure!(rgb.len() == 3 * width * height, "pixel buffer size mismatch");
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    write!(f, "P6\n{width} {height}\n255\n")?;
+    f.write_all(rgb)?;
+    Ok(())
+}
+
+/// Render a heatmap to a "hot" color PPM, downsampled to at most
+/// `max_w x max_h` cells.  Rows = lengths (minL at top), cols = indices.
+pub fn render_heatmap(hm: &Heatmap, path: impl AsRef<Path>, max_w: usize, max_h: usize) -> Result<()> {
+    let small = hm.downsample(max_h, max_w);
+    let (w, h) = (small.width.max(1), small.rows().max(1));
+    let peak = small.max_score().max(1e-12);
+    let mut rgb = vec![0u8; 3 * w * h];
+    for r in 0..h {
+        for c in 0..small.width {
+            let v = (small.data[r * small.width + c] / peak).clamp(0.0, 1.0);
+            let (rr, gg, bb) = hot_color(v);
+            let o = 3 * (r * w + c);
+            rgb[o] = rr;
+            rgb[o + 1] = gg;
+            rgb[o + 2] = bb;
+        }
+    }
+    write_ppm(path, w, h, &rgb)
+}
+
+/// Black -> red -> yellow -> white ramp.
+fn hot_color(v: f64) -> (u8, u8, u8) {
+    let x = v.clamp(0.0, 1.0);
+    let r = (3.0 * x).min(1.0);
+    let g = (3.0 * x - 1.0).clamp(0.0, 1.0);
+    let b = (3.0 * x - 2.0).clamp(0.0, 1.0);
+    ((r * 255.0) as u8, (g * 255.0) as u8, (b * 255.0) as u8)
+}
+
+/// Render a 1-D series as a simple line plot PGM (for the examples).
+pub fn render_series(values: &[f64], path: impl AsRef<Path>, width: usize, height: usize) -> Result<()> {
+    let n = values.len();
+    anyhow::ensure!(n >= 2 && width >= 2 && height >= 2, "degenerate plot");
+    let mut px = vec![255u8; width * height];
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-12);
+    let y_of = |v: f64| ((1.0 - (v - lo) / span) * (height - 1) as f64) as usize;
+    let mut prev_y = y_of(values[0]);
+    for c in 0..width {
+        let i = c * (n - 1) / (width - 1);
+        let y = y_of(values[i]);
+        let (a, b) = if y <= prev_y { (y, prev_y) } else { (prev_y, y) };
+        for yy in a..=b {
+            px[yy * width + c] = 0;
+        }
+        prev_y = y;
+    }
+    write_pgm(path, width, height, &px)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("palmad_img");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn pgm_roundtrip_header() {
+        let p = tmp("x.pgm");
+        write_pgm(&p, 4, 2, &[0, 64, 128, 255, 1, 2, 3, 4]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n4 2\n255\n"));
+        assert_eq!(bytes.len(), 11 + 8);
+    }
+
+    #[test]
+    fn ppm_size_check() {
+        assert!(write_ppm(tmp("bad.ppm"), 2, 2, &[0u8; 5]).is_err());
+        write_ppm(tmp("ok.ppm"), 2, 2, &[0u8; 12]).unwrap();
+    }
+
+    #[test]
+    fn hot_ramp_endpoints() {
+        assert_eq!(hot_color(0.0), (0, 0, 0));
+        assert_eq!(hot_color(1.0), (255, 255, 255));
+        let (r, g, b) = hot_color(0.34);
+        assert!(r == 255 && g < 20 && b == 0, "{r} {g} {b}");
+    }
+
+    #[test]
+    fn series_plot_writes() {
+        let vals: Vec<f64> = (0..100).map(|i| (i as f64 * 0.2).sin()).collect();
+        let p = tmp("series.pgm");
+        render_series(&vals, &p, 200, 60).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(bytes.len(), b"P5\n200 60\n255\n".len() + 200 * 60);
+        // Some black pixels exist.
+        assert!(bytes.iter().skip(15).any(|&b| b == 0));
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        use crate::analysis::heatmap::Heatmap;
+        let hm = Heatmap { min_l: 4, max_l: 5, width: 10, data: {
+            let mut d = vec![0.0; 20];
+            d[3] = 1.0;
+            d
+        }};
+        render_heatmap(&hm, tmp("hm.ppm"), 10, 2).unwrap();
+    }
+}

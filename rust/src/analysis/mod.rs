@@ -1,0 +1,13 @@
+//! Discord analysis & visualization: the §5 case-study tooling.
+//!
+//! - [`heatmap`] — the discord heatmap (Eq. 11): anomaly score as color
+//!   intensity over (length, index).
+//! - [`ranking`] — Eq. 12: extracting the most "interesting" discords
+//!   across lengths from the heatmap.
+//! - [`image`] — PGM/PPM writers (no image crates offline).
+//! - [`report`] — text/JSON experiment tables.
+
+pub mod heatmap;
+pub mod image;
+pub mod ranking;
+pub mod report;

@@ -1,0 +1,99 @@
+//! Discord interest ranking across lengths (Eq. 12): the most interesting
+//! discord maximizes the heatmap score over all lengths sharing its index;
+//! top-k extraction de-overlaps by index (using each winner's own length).
+
+use super::heatmap::Heatmap;
+
+/// A ranked multi-length discord.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankedDiscord {
+    pub idx: usize,
+    pub m: usize,
+    /// Eq. 11 score (normalized squared distance).
+    pub score: f64,
+}
+
+/// Eq. 12 over the heatmap: for each index, the best length; then the
+/// top-k indices by that score, mutually non-overlapping (an index is
+/// excluded if it falls within a previous winner's window).
+pub fn top_k_interesting(hm: &Heatmap, k: usize) -> Vec<RankedDiscord> {
+    let rows = hm.rows();
+    // Best (score, m) per index.
+    let mut best: Vec<(f64, usize)> = vec![(0.0, 0); hm.width];
+    for r in 0..rows {
+        let m = hm.min_l + r;
+        for i in 0..hm.width {
+            let v = hm.data[r * hm.width + i];
+            if v > best[i].0 {
+                best[i] = (v, m);
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..hm.width).filter(|&i| best[i].0 > 0.0).collect();
+    order.sort_by(|&a, &b| best[b].0.partial_cmp(&best[a].0).unwrap().then(a.cmp(&b)));
+
+    let mut out: Vec<RankedDiscord> = Vec::new();
+    'outer: for i in order {
+        let (score, m) = best[i];
+        for w in &out {
+            // Overlap if either window contains the other's start.
+            let sep = w.m.max(m);
+            if w.idx.abs_diff(i) < sep {
+                continue 'outer;
+            }
+        }
+        out.push(RankedDiscord { idx: i, m, score });
+        if out.len() == k {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::heatmap::Heatmap;
+
+    fn hm(min_l: usize, rows: usize, width: usize) -> Heatmap {
+        Heatmap { min_l, max_l: min_l + rows - 1, width, data: vec![0.0; rows * width] }
+    }
+
+    #[test]
+    fn picks_best_length_per_index() {
+        let mut h = hm(4, 3, 30);
+        h.data[30 * 0 + 10] = 0.3; // m=4, idx=10
+        h.data[30 * 2 + 10] = 0.7; // m=6, idx=10
+        h.data[30 * 1 + 25] = 0.5; // m=5, idx=25
+        let top = top_k_interesting(&h, 3);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0], RankedDiscord { idx: 10, m: 6, score: 0.7 });
+        assert_eq!(top[1], RankedDiscord { idx: 25, m: 5, score: 0.5 });
+    }
+
+    #[test]
+    fn de_overlaps_by_window() {
+        let mut h = hm(10, 1, 50);
+        h.data[20] = 0.9;
+        h.data[25] = 0.8; // within 10 of the winner -> excluded
+        h.data[35] = 0.7; // far enough
+        let top = top_k_interesting(&h, 5);
+        let idxs: Vec<usize> = top.iter().map(|r| r.idx).collect();
+        assert_eq!(idxs, vec![20, 35]);
+    }
+
+    #[test]
+    fn k_truncates() {
+        let mut h = hm(5, 1, 100);
+        for i in [0, 20, 40, 60] {
+            h.data[i] = 0.5 + i as f64 / 1000.0;
+        }
+        assert_eq!(top_k_interesting(&h, 2).len(), 2);
+    }
+
+    #[test]
+    fn empty_heatmap_empty_result() {
+        let h = hm(5, 2, 10);
+        assert!(top_k_interesting(&h, 3).is_empty());
+    }
+}

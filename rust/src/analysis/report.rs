@@ -1,0 +1,115 @@
+//! Experiment report tables: fixed-width text (for the terminal and
+//! EXPERIMENTS.md) and JSON (for downstream plotting), built on
+//! [`crate::util::json`].
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as aligned text.
+    pub fn to_text(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut out = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(out, "{c:>w$}  ", w = w);
+            }
+            out.trim_end().to_string()
+        };
+        let _ = writeln!(s, "{}", line(&self.headers, &widths));
+        let _ = writeln!(s, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", line(row, &widths));
+        }
+        s
+    }
+
+    /// Render as a JSON object (`{title, headers, rows}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("title", self.title.clone())
+            .set("headers", self.headers.clone())
+            .set(
+                "rows",
+                Json::Arr(self.rows.iter().map(|r| Json::from(r.clone())).collect()),
+            )
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new("demo", &["name", "n"]);
+        t.row(&["ecg".into(), "45000".into()]);
+        t.row(&["rw".into(), "7".into()]);
+        let s = t.to_text();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("45000"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["1".into()]);
+        assert_eq!(t.to_json().to_string(), r#"{"title":"x","headers":["a"],"rows":[["1"]]}"#);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(0.0000005), "0.5us");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(1.5), "1.500s");
+    }
+}

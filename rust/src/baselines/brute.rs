@@ -1,0 +1,132 @@
+//! Exact brute-force discord discovery: the O(n^2) oracle every fast path
+//! is validated against, with optional early-abandoning to make it usable
+//! as a (weak) baseline on real sizes.
+
+use crate::core::distance::{ed2_early_abandon, is_flat, znorm};
+use crate::core::stats::RollingStats;
+use crate::core::topk::{top_k_non_overlapping, Scored};
+use crate::coordinator::drag::Discord;
+
+/// Exact nearest-neighbor distance profile (squared ED): for each window,
+/// the min distance to any non-self match.  O(n^2 m) — small inputs only.
+///
+/// Applies the stack-wide flat-window convention (see
+/// [`crate::core::distance::FLAT_EPS`]): flat/flat pairs are 0, flat/normal
+/// pairs are `2m` — NOT the `m` the bare znorm-subtract arithmetic would
+/// produce (a zero vector against a unit-norm one).
+pub fn nn_profile(t: &[f64], m: usize) -> Vec<f64> {
+    let nwin = t.len() + 1 - m;
+    let stats = RollingStats::compute(t, m);
+    let flat: Vec<bool> =
+        stats.sig.iter().zip(&stats.mu).map(|(&s, &mu)| is_flat(s, mu)).collect();
+    let norms: Vec<Vec<f64>> = (0..nwin).map(|i| znorm(&t[i..i + m])).collect();
+    let mut nn = vec![f64::INFINITY; nwin];
+    let two_m = 2.0 * m as f64;
+    for i in 0..nwin {
+        for j in i + m..nwin {
+            let d = if flat[i] || flat[j] {
+                Some(if flat[i] && flat[j] { 0.0 } else { two_m })
+            } else {
+                // Early abandon against the worse of the two current minima.
+                ed2_early_abandon(&norms[i], &norms[j], nn[i].max(nn[j]))
+            };
+            if let Some(d) = d {
+                if d < nn[i] {
+                    nn[i] = d;
+                }
+                if d < nn[j] {
+                    nn[j] = d;
+                }
+            }
+        }
+    }
+    nn
+}
+
+/// Exact top-k discords (non-overlapping), ED units.
+pub fn top_k_discords(t: &[f64], m: usize, k: usize) -> Vec<Discord> {
+    let nn = nn_profile(t, m);
+    let scored: Vec<Scored> = nn
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| d.is_finite())
+        .map(|(idx, &d)| Scored { idx, nn_dist: d.sqrt() })
+        .collect();
+    top_k_non_overlapping(&scored, m, k)
+        .into_iter()
+        .map(|s| Discord { idx: s.idx, m, nn_dist: s.nn_dist })
+        .collect()
+}
+
+/// Exact range discords (every window with nnDist >= r), ED units.
+pub fn range_discords(t: &[f64], m: usize, r: f64) -> Vec<Discord> {
+    let nn = nn_profile(t, m);
+    nn.iter()
+        .enumerate()
+        .filter(|(_, d)| d.is_finite() && **d >= r * r)
+        .map(|(idx, &d)| Discord { idx, m, nn_dist: d.sqrt() })
+        .collect()
+}
+
+/// Quick sanity wrapper reused by several tests: stats + profile agree.
+pub fn stats_for(t: &[f64], m: usize) -> RollingStats {
+    RollingStats::compute(t, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::ed2norm;
+    use crate::util::rng::Rng;
+
+    fn walk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn profile_matches_naive_loop() {
+        let t = walk(150, 1);
+        let m = 12;
+        let nn = nn_profile(&t, m);
+        let nwin = t.len() - m + 1;
+        for i in 0..nwin {
+            let mut best = f64::INFINITY;
+            for j in 0..nwin {
+                if i.abs_diff(j) >= m {
+                    best = best.min(ed2norm(&t[i..i + m], &t[j..j + m]));
+                }
+            }
+            assert!((nn[i] - best).abs() < 1e-9 * (1.0 + best), "i={i}: {} vs {best}", nn[i]);
+        }
+    }
+
+    #[test]
+    fn top1_is_argmax_of_profile() {
+        let t = walk(200, 2);
+        let m = 10;
+        let nn = nn_profile(&t, m);
+        let d = top_k_discords(&t, m, 1);
+        assert_eq!(d.len(), 1);
+        let best = nn.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!((d[0].nn_dist * d[0].nn_dist - best).abs() < 1e-9 * (1.0 + best));
+    }
+
+    #[test]
+    fn range_discords_consistent_with_topk() {
+        let t = walk(180, 3);
+        let m = 8;
+        let top = top_k_discords(&t, m, 1)[0];
+        let range = range_discords(&t, m, top.nn_dist - 1e-9);
+        assert!(range.iter().any(|d| d.idx == top.idx));
+        // Nothing above the top discord's distance.
+        let over = range_discords(&t, m, top.nn_dist + 1e-9);
+        assert!(over.is_empty());
+    }
+}

@@ -1,0 +1,172 @@
+//! Serial DRAG (Yankov, Keogh, Rebbapragada 2007) — Alg. 2 of the PALMAD
+//! paper, implemented faithfully: a growing candidate set over one forward
+//! scan (selection), then one more scan refining candidates with
+//! early-abandoning distances.
+//!
+//! This is PD3's serial ancestor and the engine of serial MERLIN; it is
+//! also an independent oracle for the parallel path (they must return the
+//! same discord set for any `r`).
+
+use crate::core::distance::{ed2_early_abandon, is_flat, znorm};
+use crate::core::stats::RollingStats;
+use crate::coordinator::drag::Discord;
+
+/// Candidate during refinement.
+struct Cand {
+    idx: usize,
+    nn2: f64, // squared nnDist upper bound
+}
+
+/// Flat-convention-aware pairwise distance with early abandon; `None`
+/// means "abandoned above `cutoff`" (see [`is_flat`]).
+#[inline]
+fn pair_dist(
+    norms: &[Vec<f64>],
+    flat: &[bool],
+    m: usize,
+    i: usize,
+    j: usize,
+    cutoff: f64,
+) -> Option<f64> {
+    if flat[i] || flat[j] {
+        let d = if flat[i] && flat[j] { 0.0 } else { 2.0 * m as f64 };
+        if d >= cutoff {
+            None
+        } else {
+            Some(d)
+        }
+    } else {
+        ed2_early_abandon(&norms[i], &norms[j], cutoff)
+    }
+}
+
+/// Range discords with threshold `r` (ED units): all windows whose nearest
+/// non-self match is at distance >= r, with exact nnDist.
+pub fn drag(t: &[f64], m: usize, r: f64) -> Vec<Discord> {
+    let Some(nw) = t.len().checked_sub(m) else { return Vec::new() };
+    let nwin = nw + 1;
+    if nwin == 0 {
+        return Vec::new();
+    }
+    let r2 = r * r;
+    let stats = RollingStats::compute(t, m);
+    let flat: Vec<bool> =
+        stats.sig.iter().zip(&stats.mu).map(|(&s, &mu)| is_flat(s, mu)).collect();
+    let norms: Vec<Vec<f64>> = (0..nwin).map(|i| znorm(&t[i..i + m])).collect();
+
+    // ---- Phase 1: candidate selection (Alg. 2 left) ----------------------
+    let mut cands: Vec<usize> = vec![0];
+    for s in 1..nwin {
+        let mut is_cand = true;
+        let mut k = 0;
+        while k < cands.len() {
+            let c = cands[k];
+            if s.abs_diff(c) >= m {
+                // dist < r kills both the candidate and s's candidacy.
+                if pair_dist(&norms, &flat, m, s, c, r2).is_some() {
+                    cands.swap_remove(k);
+                    is_cand = false;
+                    continue; // do not advance k (swap_remove)
+                }
+            }
+            k += 1;
+        }
+        if is_cand {
+            cands.push(s);
+        }
+    }
+
+    // ---- Phase 2: refinement (Alg. 2 right) -------------------------------
+    let mut refined: Vec<Cand> = cands.into_iter().map(|idx| Cand { idx, nn2: f64::INFINITY }).collect();
+    for s in 0..nwin {
+        let mut k = 0;
+        while k < refined.len() {
+            let c = &mut refined[k];
+            if s.abs_diff(c.idx) >= m {
+                // EarlyAbandonED against the candidate's current nnDist.
+                if let Some(d) = pair_dist(&norms, &flat, m, s, c.idx, c.nn2) {
+                    if d < r2 {
+                        refined.swap_remove(k); // false positive
+                        continue;
+                    }
+                    c.nn2 = d;
+                }
+            }
+            k += 1;
+        }
+    }
+
+    let mut out: Vec<Discord> = refined
+        .into_iter()
+        .filter(|c| c.nn2.is_finite())
+        .map(|c| Discord { idx: c.idx, m, nn_dist: c.nn2.max(0.0).sqrt() })
+        .collect();
+    out.sort_by_key(|d| d.idx);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::brute;
+    use crate::util::rng::Rng;
+
+    fn walk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_brute_force_range_discords() {
+        for (seed, r) in [(1u64, 3.0), (2, 4.5), (3, 2.0)] {
+            let t = walk(250, seed);
+            let m = 12;
+            let got = drag(&t, m, r);
+            let mut want = brute::range_discords(&t, m, r);
+            want.sort_by_key(|d| d.idx);
+            assert_eq!(
+                got.iter().map(|d| d.idx).collect::<Vec<_>>(),
+                want.iter().map(|d| d.idx).collect::<Vec<_>>(),
+                "seed {seed} r {r}"
+            );
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.nn_dist - w.nn_dist).abs() < 1e-9 * (1.0 + w.nn_dist));
+            }
+        }
+    }
+
+    #[test]
+    fn r_above_max_returns_empty() {
+        let t = walk(200, 4);
+        assert!(drag(&t, 10, 2.0 * (10f64).sqrt() + 0.1).is_empty());
+    }
+
+    #[test]
+    fn agrees_with_pd3() {
+        use crate::coordinator::drag::{pd3, Pd3Config};
+        use crate::coordinator::metrics::DragMetrics;
+        use crate::core::stats::RollingStats;
+        use crate::engines::native::NativeEngine;
+        use crate::engines::SeriesView;
+        let t = walk(300, 5);
+        let m = 14;
+        let r = 3.0;
+        let serial = drag(&t, m, r);
+        let stats = RollingStats::compute(&t, m);
+        let view = SeriesView { t: &t, stats: &stats };
+        let engine = NativeEngine::with_segn(32);
+        let mut metrics = DragMetrics::default();
+        let mut parallel = pd3(&engine, &view, r, &Pd3Config::default(), &mut metrics).unwrap();
+        parallel.sort_by_key(|d| d.idx);
+        assert_eq!(
+            serial.iter().map(|d| d.idx).collect::<Vec<_>>(),
+            parallel.iter().map(|d| d.idx).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,226 @@
+//! HOTSAX (Keogh, Lin, Fu 2005): heuristically-ordered exact top-1
+//! discord search.
+//!
+//! Outer loop visits candidate windows; inner loop visits comparison
+//! windows; the best-so-far discord distance prunes candidates whose
+//! nearest neighbor is already closer.  The SAX heuristic supplies the
+//! magic ordering: outer candidates with the *rarest* SAX words first
+//! (likely discords -> high best-so-far early), inner comparisons with
+//! *same-word* windows first (likely close neighbors -> fast abandons).
+
+use crate::core::distance::{ed2_early_abandon, znorm};
+use crate::coordinator::drag::Discord;
+use std::collections::HashMap;
+
+/// HOTSAX parameters (word length / alphabet per the original paper).
+#[derive(Clone, Copy, Debug)]
+pub struct HotsaxConfig {
+    pub paa_segments: usize,
+    pub alphabet: usize,
+}
+
+impl Default for HotsaxConfig {
+    fn default() -> Self {
+        Self { paa_segments: 3, alphabet: 3 }
+    }
+}
+
+/// Exact top-1 discord via the HOTSAX search order.
+pub fn top1_discord(t: &[f64], m: usize, cfg: &HotsaxConfig) -> Option<Discord> {
+    let nwin = t.len().checked_sub(m)? + 1;
+    if nwin < m + 1 {
+        // No window has a non-self match.
+        return None;
+    }
+    // Precompute normalized windows once (memory O(n*m); HOTSAX sizes are
+    // RAM-bounded by construction, §1).
+    let norms: Vec<Vec<f64>> = (0..nwin).map(|i| znorm(&t[i..i + m])).collect();
+
+    // SAX table: word -> window indices.
+    let words = super::sax::sax_words(t, m, cfg.paa_segments, cfg.alphabet);
+    let mut table: HashMap<&[u8], Vec<usize>> = HashMap::new();
+    for (i, w) in words.iter().enumerate() {
+        table.entry(w.as_slice()).or_default().push(i);
+    }
+
+    // Outer order: ascending bucket size (rarest words first).
+    let mut outer: Vec<usize> = (0..nwin).collect();
+    outer.sort_by_key(|&i| table[words[i].as_slice()].len());
+
+    let mut best_dist = f64::NEG_INFINITY; // squared
+    let mut best_idx = None;
+
+    for &i in &outer {
+        let mut nn = f64::INFINITY;
+        let mut abandoned = false;
+        // Inner pass 1: same-word windows (closest first, probably).
+        for &j in &table[words[i].as_slice()] {
+            if i.abs_diff(j) < m {
+                continue;
+            }
+            if let Some(d) = ed2_early_abandon(&norms[i], &norms[j], nn) {
+                nn = d;
+            }
+            if nn < best_dist {
+                abandoned = true; // candidate i cannot beat best-so-far
+                break;
+            }
+        }
+        // Inner pass 2: everything else.
+        if !abandoned {
+            for j in 0..nwin {
+                if i.abs_diff(j) < m || words[j] == words[i] {
+                    continue;
+                }
+                if let Some(d) = ed2_early_abandon(&norms[i], &norms[j], nn) {
+                    nn = d;
+                }
+                if nn < best_dist {
+                    abandoned = true;
+                    break;
+                }
+            }
+        }
+        if !abandoned && nn.is_finite() && nn > best_dist {
+            best_dist = nn;
+            best_idx = Some(i);
+        }
+    }
+    best_idx.map(|idx| Discord { idx, m, nn_dist: best_dist.max(0.0).sqrt() })
+}
+
+/// Top-k by repeated top-1 with exclusion (the standard extension).
+pub fn top_k_discords(t: &[f64], m: usize, k: usize, cfg: &HotsaxConfig) -> Vec<Discord> {
+    // Simple correct implementation: compute the full profile ordering via
+    // repeated exclusion on a copy of the candidate set.
+    let mut out: Vec<Discord> = Vec::new();
+    let mut excluded: Vec<(usize, usize)> = Vec::new(); // (start, end)
+    for _ in 0..k {
+        let found = top1_excluding(t, m, cfg, &excluded);
+        match found {
+            Some(d) => {
+                excluded.push((d.idx.saturating_sub(m - 1), d.idx + m));
+                out.push(d);
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+fn top1_excluding(
+    t: &[f64],
+    m: usize,
+    cfg: &HotsaxConfig,
+    excluded: &[(usize, usize)],
+) -> Option<Discord> {
+    let nwin = t.len().checked_sub(m)? + 1;
+    let is_excluded = |i: usize| excluded.iter().any(|&(s, e)| i >= s && i < e);
+    let norms: Vec<Vec<f64>> = (0..nwin).map(|i| znorm(&t[i..i + m])).collect();
+    let words = super::sax::sax_words(t, m, cfg.paa_segments, cfg.alphabet);
+    let mut table: HashMap<&[u8], Vec<usize>> = HashMap::new();
+    for (i, w) in words.iter().enumerate() {
+        table.entry(w.as_slice()).or_default().push(i);
+    }
+    let mut outer: Vec<usize> = (0..nwin).filter(|&i| !is_excluded(i)).collect();
+    outer.sort_by_key(|&i| table[words[i].as_slice()].len());
+
+    let mut best_dist = f64::NEG_INFINITY;
+    let mut best_idx = None;
+    for &i in &outer {
+        let mut nn = f64::INFINITY;
+        let mut dead = false;
+        for &j in &table[words[i].as_slice()] {
+            if i.abs_diff(j) < m {
+                continue;
+            }
+            if let Some(d) = ed2_early_abandon(&norms[i], &norms[j], nn) {
+                nn = d;
+            }
+            if nn < best_dist {
+                dead = true;
+                break;
+            }
+        }
+        if !dead {
+            for j in 0..nwin {
+                if i.abs_diff(j) < m || words[j] == words[i] {
+                    continue;
+                }
+                if let Some(d) = ed2_early_abandon(&norms[i], &norms[j], nn) {
+                    nn = d;
+                }
+                if nn < best_dist {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        if !dead && nn.is_finite() && nn > best_dist {
+            best_dist = nn;
+            best_idx = Some(i);
+        }
+    }
+    best_idx.map(|idx| Discord { idx, m, nn_dist: best_dist.max(0.0).sqrt() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::brute;
+    use crate::util::rng::Rng;
+
+    fn walk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_brute_force_top1() {
+        for seed in [1, 2, 3] {
+            let t = walk(300, seed);
+            let m = 16;
+            let got = top1_discord(&t, m, &HotsaxConfig::default()).unwrap();
+            let want = brute::top_k_discords(&t, m, 1)[0];
+            assert!(
+                (got.nn_dist - want.nn_dist).abs() < 1e-9 * (1.0 + want.nn_dist),
+                "seed {seed}: {} vs {}",
+                got.nn_dist,
+                want.nn_dist
+            );
+        }
+    }
+
+    #[test]
+    fn finds_planted_anomaly() {
+        let mut t: Vec<f64> = (0..500).map(|i| (i as f64 * 0.25).sin()).collect();
+        for (k, v) in t[250..270].iter_mut().enumerate() {
+            *v += if k % 3 == 0 { 1.0 } else { -0.5 };
+        }
+        let d = top1_discord(&t, 20, &HotsaxConfig::default()).unwrap();
+        assert!((231..=269).contains(&d.idx), "found {}", d.idx);
+    }
+
+    #[test]
+    fn top_k_non_overlapping_and_sorted() {
+        let t = walk(400, 4);
+        let ds = top_k_discords(&t, 12, 3, &HotsaxConfig::default());
+        assert_eq!(ds.len(), 3);
+        for w in ds.windows(2) {
+            assert!(w[0].nn_dist >= w[1].nn_dist);
+            assert!(w[0].idx.abs_diff(w[1].idx) >= 12);
+        }
+    }
+
+    #[test]
+    fn too_short_series_returns_none() {
+        let t = walk(20, 5);
+        assert!(top1_discord(&t, 16, &HotsaxConfig::default()).is_none());
+    }
+}

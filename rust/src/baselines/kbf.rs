@@ -1,0 +1,122 @@
+//! KBF — brute-force K-distance discord (Thuy, Anh, Chau 2021), the
+//! Fig. 4 rival (their GPU version parallelizes the inner loop; this is
+//! the same algorithm with the inner loop running across a thread pool,
+//! the honest CPU equivalent).
+//!
+//! A K-distance discord maximizes the *sum* of distances to its K nearest
+//! non-overlapping neighbors — the "twin freak"-robust variant of the
+//! discord.  There is no early abandoning in KBF (that is the point of
+//! the comparison: PALMAD's pruning vs brute force).
+
+use crate::core::distance::znorm;
+use crate::coordinator::drag::Discord;
+use crate::util::pool::parallel_map_indexed;
+
+/// Top-1 K-distance discord.  Returns the window index and the *sum* of
+/// squared distances to its K nearest neighbors, sqrt'ed for consistency
+/// with [`Discord::nn_dist`] reporting (documented in the bench output).
+pub fn kbf_top1(t: &[f64], m: usize, k_neighbors: usize, threads: usize) -> Option<Discord> {
+    let nwin = t.len().checked_sub(m)? + 1;
+    if nwin < 2 {
+        return None;
+    }
+    let norms: Vec<Vec<f64>> = (0..nwin).map(|i| znorm(&t[i..i + m])).collect();
+
+    // For each candidate: K smallest distances to non-self matches (full
+    // scan, no pruning — brute force by design).
+    let scores = parallel_map_indexed(nwin, threads, |i| {
+        let mut smallest: Vec<f64> = Vec::with_capacity(k_neighbors + 1);
+        for j in 0..nwin {
+            if i.abs_diff(j) < m {
+                continue;
+            }
+            let mut d = 0.0;
+            let (a, b) = (&norms[i], &norms[j]);
+            for t in 0..m {
+                let x = a[t] - b[t];
+                d += x * x;
+            }
+            // Insert into the running K-smallest set.
+            let pos = smallest.partition_point(|&x| x < d);
+            if pos < k_neighbors {
+                smallest.insert(pos, d);
+                smallest.truncate(k_neighbors);
+            }
+        }
+        if smallest.len() < k_neighbors {
+            f64::NEG_INFINITY
+        } else {
+            smallest.iter().sum::<f64>()
+        }
+    });
+
+    let (idx, &best) = scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())?;
+    if best.is_finite() {
+        Some(Discord { idx, m, nn_dist: best.max(0.0).sqrt() })
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::brute;
+    use crate::util::rng::Rng;
+
+    fn walk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn k1_matches_classic_discord() {
+        let t = walk(250, 1);
+        let m = 12;
+        let got = kbf_top1(&t, m, 1, 2).unwrap();
+        let want = brute::top_k_discords(&t, m, 1)[0];
+        assert!((got.nn_dist - want.nn_dist).abs() < 1e-9 * (1.0 + want.nn_dist));
+        assert_eq!(got.idx, want.idx);
+    }
+
+    #[test]
+    fn k3_solves_twin_freak() {
+        // Plant the SAME anomaly twice: a classic (K=1) discord scores the
+        // twins low (they are each other's neighbor), K=3 re-surfaces them
+        // above the background.
+        let mut t: Vec<f64> = (0..600).map(|i| (i as f64 * 0.2).sin()).collect();
+        let pattern: Vec<f64> = (0..20).map(|k| if k % 2 == 0 { 2.0 } else { -2.0 }).collect();
+        for (k, v) in pattern.iter().enumerate() {
+            t[150 + k] += v;
+            t[450 + k] += v;
+        }
+        let m = 20;
+        let k1 = kbf_top1(&t, m, 1, 2).unwrap();
+        let k3 = kbf_top1(&t, m, 3, 2).unwrap();
+        let near_planted = |idx: usize| {
+            (131..=169).contains(&idx) || (431..=469).contains(&idx)
+        };
+        // With K=3 the twins dominate.
+        assert!(near_planted(k3.idx), "K=3 found {}", k3.idx);
+        // And K=3 must score them strictly higher than K=1 does.
+        assert!(k3.nn_dist > k1.nn_dist);
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let t = walk(200, 3);
+        let a = kbf_top1(&t, 10, 2, 1).unwrap();
+        let b = kbf_top1(&t, 10, 2, 8).unwrap();
+        assert_eq!(a.idx, b.idx);
+        assert_eq!(a.nn_dist, b.nn_dist);
+    }
+}

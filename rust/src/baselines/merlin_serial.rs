@@ -1,0 +1,137 @@
+//! Serial MERLIN (Nakamura, Imamura, Mercer, Keogh 2020) — Alg. 1 of the
+//! PALMAD paper over the serial DRAG, with from-scratch per-length window
+//! normalization (exactly the redundancy PALMAD's recurrences remove).
+//!
+//! Used as the ablation/"paper omits it" baseline: PALMAD must return the
+//! same discords, faster.
+
+use crate::core::topk::{top_k_non_overlapping, Scored};
+use crate::coordinator::drag::Discord;
+
+use super::drag_serial;
+
+/// Serial MERLIN outcome per length.
+#[derive(Clone, Debug)]
+pub struct SerialLengthResult {
+    pub m: usize,
+    pub r_used: f64,
+    pub discords: Vec<Discord>,
+}
+
+/// Run serial MERLIN over `[min_l, max_l]`, top-k per length (0 = all).
+pub fn merlin(t: &[f64], min_l: usize, max_l: usize, top_k: usize) -> Vec<SerialLengthResult> {
+    assert!(3 <= min_l && min_l <= max_l);
+    let mut out: Vec<SerialLengthResult> = Vec::new();
+    let mut last5: Vec<f64> = Vec::new();
+    for m in min_l..=max_l {
+        let step = m - min_l;
+        let max_r = 2.0 * (m as f64).sqrt();
+        let r_floor = 1e-4 * max_r;
+        let mut r = if step == 0 {
+            max_r
+        } else if step <= 4 {
+            0.99 * last5.last().copied().unwrap()
+        } else {
+            let (mu, sd) = mean_std(&last5);
+            (mu - 2.0 * sd).clamp(r_floor, max_r)
+        };
+        let mut retries = 0;
+        let (r_used, picked) = loop {
+            let ds = drag_serial::drag(t, m, r);
+            let picked = pick(&ds, m, top_k);
+            let enough = if top_k == 0 { !picked.is_empty() } else { picked.len() >= top_k };
+            if enough || r <= r_floor || retries > 80 {
+                break (r, picked);
+            }
+            retries += 1;
+            r = if step == 0 {
+                0.5 * r
+            } else if step <= 4 {
+                0.99 * r
+            } else {
+                let (mu, sd) = mean_std(&last5);
+                let dec = if sd > 1e-12 * (1.0 + mu) { sd } else { 0.05 * mu.max(1e-9) };
+                (r - dec).max(r_floor)
+            };
+        };
+        let min_nn = picked.iter().map(|d| d.nn_dist).fold(f64::INFINITY, f64::min);
+        last5.push(if min_nn.is_finite() {
+            min_nn
+        } else {
+            last5.last().copied().unwrap_or(0.5 * max_r)
+        });
+        if last5.len() > 5 {
+            last5.remove(0);
+        }
+        out.push(SerialLengthResult { m, r_used, discords: picked });
+    }
+    out
+}
+
+fn pick(ds: &[Discord], m: usize, k: usize) -> Vec<Discord> {
+    let scored: Vec<Scored> = ds.iter().map(|d| Scored { idx: d.idx, nn_dist: d.nn_dist }).collect();
+    top_k_non_overlapping(&scored, m, k)
+        .into_iter()
+        .map(|s| Discord { idx: s.idx, m, nn_dist: s.nn_dist })
+        .collect()
+}
+
+fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mu = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / n;
+    (mu, var.max(0.0).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::merlin::{Merlin, MerlinConfig};
+    use crate::core::series::TimeSeries;
+    use crate::engines::native::NativeEngine;
+    use crate::util::rng::Rng;
+
+    fn walk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serial_and_parallel_merlin_agree() {
+        let values = walk(400, 31);
+        let serial = merlin(&values, 10, 22, 1);
+        let t = TimeSeries::new("w", values);
+        let engine = NativeEngine::with_segn(64);
+        let cfg = MerlinConfig { min_l: 10, max_l: 22, top_k: 1, ..Default::default() };
+        let par = Merlin::new(&engine, cfg).run(&t).unwrap();
+        assert_eq!(serial.len(), par.lengths.len());
+        for (s, p) in serial.iter().zip(&par.lengths) {
+            assert_eq!(s.m, p.m);
+            assert_eq!(s.discords.len(), 1, "m={}", s.m);
+            assert_eq!(p.discords.len(), 1, "m={}", p.m);
+            // Same discord distance (indices may differ on exact ties).
+            assert!(
+                (s.discords[0].nn_dist - p.discords[0].nn_dist).abs()
+                    < 1e-6 * (1.0 + s.discords[0].nn_dist),
+                "m={}: serial {} vs parallel {}",
+                s.m,
+                s.discords[0].nn_dist,
+                p.discords[0].nn_dist
+            );
+        }
+    }
+
+    #[test]
+    fn lengths_covered() {
+        let values = walk(300, 32);
+        let res = merlin(&values, 8, 12, 1);
+        let ms: Vec<usize> = res.iter().map(|r| r.m).collect();
+        assert_eq!(ms, vec![8, 9, 10, 11, 12]);
+    }
+}

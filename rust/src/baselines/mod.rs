@@ -1,0 +1,27 @@
+//! Baseline & rival algorithms, reimplemented from their papers.
+//!
+//! The PALMAD paper compares against published systems whose sources are
+//! unavailable (KBF_GPU, Zhu et al.'s framework) and builds on serial
+//! algorithms (HOTSAX, DRAG, MERLIN).  Each is implemented here from its
+//! original description so the benchmark harness can regenerate the
+//! paper's comparison *shapes* on one testbed:
+//!
+//! | module          | algorithm                              | role |
+//! |-----------------|----------------------------------------|------|
+//! | [`brute`]       | exact O(n^2 m) top-k discord           | test oracle |
+//! | [`sax`]         | PAA + SAX discretization               | HOTSAX substrate |
+//! | [`hotsax`]      | Keogh et al. 2005 heuristic search     | serial reference |
+//! | [`drag_serial`] | Yankov/Keogh 2007 two-phase DRAG       | PD3's serial ancestor |
+//! | [`merlin_serial`]| Nakamura et al. 2020 MERLIN           | PALMAD's serial ancestor |
+//! | [`kbf`]         | Thuy et al. 2021 K-distance brute force| Fig. 4 rival |
+//! | [`zhu`]         | Zhu et al. 2021 top-1 early-stop       | Fig. 5 rival |
+//! | [`stomp`]       | Zhu et al. 2016 matrix profile         | MP comparison (§1) |
+
+pub mod brute;
+pub mod drag_serial;
+pub mod hotsax;
+pub mod kbf;
+pub mod merlin_serial;
+pub mod sax;
+pub mod stomp;
+pub mod zhu;

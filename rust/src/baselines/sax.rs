@@ -1,0 +1,118 @@
+//! SAX — Symbolic Aggregate approXimation (Lin et al. 2003).
+//!
+//! The discretization substrate HOTSAX needs: each window is z-normalized,
+//! reduced to `w` PAA segments, and each segment mapped to one of `a`
+//! symbols via equiprobable Gaussian breakpoints.
+
+use crate::core::distance::znorm;
+
+/// Gaussian breakpoints for alphabet sizes 2..=10 (standard SAX tables).
+fn breakpoints(a: usize) -> &'static [f64] {
+    match a {
+        2 => &[0.0],
+        3 => &[-0.43, 0.43],
+        4 => &[-0.67, 0.0, 0.67],
+        5 => &[-0.84, -0.25, 0.25, 0.84],
+        6 => &[-0.97, -0.43, 0.0, 0.43, 0.97],
+        7 => &[-1.07, -0.57, -0.18, 0.18, 0.57, 1.07],
+        8 => &[-1.15, -0.67, -0.32, 0.0, 0.32, 0.67, 1.15],
+        9 => &[-1.22, -0.76, -0.43, -0.14, 0.14, 0.43, 0.76, 1.22],
+        10 => &[-1.28, -0.84, -0.52, -0.25, 0.0, 0.25, 0.52, 0.84, 1.28],
+        _ => panic!("unsupported SAX alphabet size {a} (2..=10)"),
+    }
+}
+
+/// Piecewise Aggregate Approximation of a (z-normalized) window into `w`
+/// equal segments (handles non-divisible lengths by fractional weighting).
+pub fn paa(x: &[f64], w: usize) -> Vec<f64> {
+    let m = x.len();
+    assert!(w >= 1 && w <= m);
+    if m % w == 0 {
+        let seg = m / w;
+        return x.chunks(seg).map(|c| c.iter().sum::<f64>() / seg as f64).collect();
+    }
+    // Fractional assignment: element i spreads over segments it overlaps.
+    let mut out = vec![0.0; w];
+    for i in 0..m {
+        let lo = i as f64 * w as f64 / m as f64;
+        let hi = (i + 1) as f64 * w as f64 / m as f64;
+        let (s0, s1) = (lo.floor() as usize, (hi.ceil() as usize).min(w));
+        for s in s0..s1 {
+            let seg_lo = s as f64;
+            let seg_hi = s as f64 + 1.0;
+            let overlap = hi.min(seg_hi) - lo.max(seg_lo);
+            if overlap > 0.0 {
+                out[s] += x[i] * overlap;
+            }
+        }
+    }
+    // Overlaps are measured in segment space (each segment has width 1.0
+    // there and total overlap exactly 1.0), so `out` already holds the
+    // weighted averages.
+    out
+}
+
+/// SAX word of one raw window: z-normalize, PAA to `w`, discretize to
+/// alphabet size `a`.  Symbols are 0-based.
+pub fn sax_word(window: &[f64], w: usize, a: usize) -> Vec<u8> {
+    let bp = breakpoints(a);
+    let normed = znorm(window);
+    paa(&normed, w)
+        .into_iter()
+        .map(|v| bp.iter().take_while(|&&b| v > b).count() as u8)
+        .collect()
+}
+
+/// All SAX words of a series (one per m-window).
+pub fn sax_words(t: &[f64], m: usize, w: usize, a: usize) -> Vec<Vec<u8>> {
+    let nwin = t.len() + 1 - m;
+    (0..nwin).map(|i| sax_word(&t[i..i + m], w, a)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paa_divisible() {
+        let x = [1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+        assert_eq!(paa(&x, 3), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn paa_non_divisible_preserves_mean() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let p = paa(&x, 2);
+        let mean_orig = x.iter().sum::<f64>() / 5.0;
+        let mean_paa = p.iter().sum::<f64>() / 2.0;
+        assert!((mean_orig - mean_paa).abs() < 1e-9, "{p:?}");
+        assert!(p[0] < p[1]);
+    }
+
+    #[test]
+    fn word_is_monotone_in_value() {
+        // Rising ramp -> non-decreasing symbols.
+        let x: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let wrd = sax_word(&x, 4, 4);
+        assert_eq!(wrd.len(), 4);
+        for k in 1..wrd.len() {
+            assert!(wrd[k] >= wrd[k - 1], "{wrd:?}");
+        }
+        assert!(wrd[0] < wrd[3]);
+    }
+
+    #[test]
+    fn identical_shape_same_word() {
+        let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.5).sin()).collect();
+        let y: Vec<f64> = x.iter().map(|v| 100.0 + 5.0 * v).collect(); // affine
+        assert_eq!(sax_word(&x, 4, 5), sax_word(&y, 4, 5));
+    }
+
+    #[test]
+    fn symbols_within_alphabet() {
+        let t: Vec<f64> = (0..200).map(|i| (i as f64 * 0.1).sin()).collect();
+        for wrd in sax_words(&t, 20, 5, 6) {
+            assert!(wrd.iter().all(|&s| s < 6));
+        }
+    }
+}

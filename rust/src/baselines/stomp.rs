@@ -1,0 +1,127 @@
+//! STOMP (Zhu et al. 2016): the O(n^2) exact matrix profile via the QT
+//! diagonal recurrence.  Discords fall out as the argmax of the profile —
+//! the "MP as a by-product" approach §1 reviews (and which MERLIN beats
+//! on this task, as the benches show).
+
+use crate::core::distance::{dot, ed2norm_from_qt};
+use crate::core::stats::RollingStats;
+use crate::core::topk::{top_k_non_overlapping, Scored};
+use crate::coordinator::drag::Discord;
+use crate::util::pool::parallel_map_indexed;
+
+/// The matrix profile (squared distances) of `t` at window length `m`.
+///
+/// `mp[i]` = squared z-normalized ED from window `i` to its nearest
+/// non-self match.  Diagonal-parallel: each diagonal is independent given
+/// its seed dot product, so diagonals are sharded across threads and the
+/// per-thread partial minima merged.
+pub fn matrix_profile(t: &[f64], m: usize, threads: usize) -> Vec<f64> {
+    let nwin = t.len() + 1 - m;
+    let stats = RollingStats::compute(t, m);
+    // Diagonals k = m..nwin-1 (only |i-j| >= m are valid).
+    let diags: Vec<usize> = (m..nwin).collect();
+    let partials = parallel_map_indexed(threads.max(1), threads, |w| {
+        let mut mp = vec![f64::INFINITY; nwin];
+        let mut idx = w;
+        while idx < diags.len() {
+            let k = diags[idx];
+            // Walk diagonal (i, i+k), i = 0..nwin-k.
+            let mut qt = dot(&t[0..m], &t[k..k + m]);
+            for i in 0..nwin - k {
+                let j = i + k;
+                if i > 0 {
+                    qt += t[i + m - 1] * t[j + m - 1] - t[i - 1] * t[j - 1];
+                }
+                let d = ed2norm_from_qt(qt, m, stats.mu[i], stats.sig[i], stats.mu[j], stats.sig[j]);
+                if d < mp[i] {
+                    mp[i] = d;
+                }
+                if d < mp[j] {
+                    mp[j] = d;
+                }
+            }
+            idx += threads.max(1);
+        }
+        mp
+    });
+    // Merge.
+    let mut mp = vec![f64::INFINITY; nwin];
+    for p in partials {
+        for (a, b) in mp.iter_mut().zip(p) {
+            if b < *a {
+                *a = b;
+            }
+        }
+    }
+    mp
+}
+
+/// Top-k discords from the matrix profile (ED units, non-overlapping).
+pub fn top_k_discords(t: &[f64], m: usize, k: usize, threads: usize) -> Vec<Discord> {
+    let mp = matrix_profile(t, m, threads);
+    let scored: Vec<Scored> = mp
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| d.is_finite())
+        .map(|(idx, &d)| Scored { idx, nn_dist: d.max(0.0).sqrt() })
+        .collect();
+    top_k_non_overlapping(&scored, m, k)
+        .into_iter()
+        .map(|s| Discord { idx: s.idx, m, nn_dist: s.nn_dist })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::brute;
+    use crate::util::rng::Rng;
+
+    fn walk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn profile_matches_brute_force() {
+        let t = walk(220, 1);
+        let m = 11;
+        let mp = matrix_profile(&t, m, 4);
+        let nn = brute::nn_profile(&t, m);
+        assert_eq!(mp.len(), nn.len());
+        for i in 0..mp.len() {
+            assert_eq!(mp[i].is_finite(), nn[i].is_finite(), "i={i}");
+            if nn[i].is_finite() {
+                assert!((mp[i] - nn[i]).abs() < 1e-6 * (1.0 + nn[i]), "i={i}: {} vs {}", mp[i], nn[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn discords_match_brute_force() {
+        let t = walk(300, 2);
+        let m = 15;
+        let got = top_k_discords(&t, m, 2, 4);
+        let want = brute::top_k_discords(&t, m, 2);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.nn_dist - w.nn_dist).abs() < 1e-6 * (1.0 + w.nn_dist));
+        }
+    }
+
+    #[test]
+    fn thread_invariance() {
+        let t = walk(180, 3);
+        let a = matrix_profile(&t, 9, 1);
+        let b = matrix_profile(&t, 9, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12 || (x.is_infinite() && y.is_infinite()));
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Zhu et al. 2021 (TPDS): top-1 discord via the two computational
+//! patterns the paper describes — (1) per-candidate minimum distance then
+//! global maximum, (2) early stop as soon as a candidate's running
+//! minimum falls below the best-so-far (both the candidate and the
+//! matching window are then provably not the top discord).
+//!
+//! Uses the same Pearson-correlation distance (Eq. 6) and precomputed
+//! stats as PALMAD, so the Fig. 5 comparison isolates the algorithmic
+//! difference (top-1-only with global pruning vs all range discords of
+//! every length).
+
+use crate::core::distance::ed2norm_from_qt;
+use crate::core::stats::RollingStats;
+use crate::coordinator::drag::Discord;
+use crate::util::pool::parallel_map_indexed;
+
+/// Exact top-1 discord with best-so-far early stopping.
+///
+/// The scan order follows the paper: candidates in index order, inner
+/// windows in index order with the QT running dot product, aborting the
+/// candidate as soon as its minimum can no longer exceed `best`.
+pub fn zhu_top1(t: &[f64], m: usize, threads: usize) -> Option<Discord> {
+    let nwin = t.len().checked_sub(m)? + 1;
+    if nwin < 2 {
+        return None;
+    }
+    let stats = RollingStats::compute(t, m);
+
+    // Shared best-so-far (squared).  Workers read it opportunistically;
+    // staleness only weakens pruning, never correctness.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let best_bits = AtomicU64::new(0f64.to_bits());
+    let load_best = || f64::from_bits(best_bits.load(Ordering::Relaxed));
+    let store_best = |v: f64| {
+        // CAS-max loop.
+        let mut cur = best_bits.load(Ordering::Relaxed);
+        while v > f64::from_bits(cur) {
+            match best_bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    };
+
+    // Process candidates in blocks so early stop benefits from a warm
+    // best-so-far established by earlier blocks.
+    const BLOCK: usize = 64;
+    let nblocks = nwin.div_ceil(BLOCK);
+    let results = parallel_map_indexed(nblocks, threads, |blk| {
+        let mut local_best: Option<(usize, f64)> = None;
+        for i in (blk * BLOCK)..((blk + 1) * BLOCK).min(nwin) {
+            let cutoff = load_best();
+            let mut nn = f64::INFINITY;
+            let mut alive = true;
+            for j in 0..nwin {
+                if i.abs_diff(j) < m {
+                    continue;
+                }
+                let qt = crate::core::distance::dot(&t[i..i + m], &t[j..j + m]);
+                let d = ed2norm_from_qt(qt, m, stats.mu[i], stats.sig[i], stats.mu[j], stats.sig[j]);
+                if d < nn {
+                    nn = d;
+                    if nn < cutoff {
+                        alive = false; // pattern 2: early stop
+                        break;
+                    }
+                }
+            }
+            if alive && nn.is_finite() {
+                store_best(nn);
+                match local_best {
+                    Some((_, b)) if b >= nn => {}
+                    _ => local_best = Some((i, nn)),
+                }
+            }
+        }
+        local_best
+    });
+
+    let (idx, nn2) = results.into_iter().flatten().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+    // The block-parallel early stop can leave the winner's nn as an upper
+    // bound tie; recompute the winner exactly.
+    let exact = exact_nn(t, m, &stats, idx);
+    let _ = nn2;
+    Some(Discord { idx, m, nn_dist: exact.max(0.0).sqrt() })
+}
+
+fn exact_nn(t: &[f64], m: usize, stats: &RollingStats, i: usize) -> f64 {
+    let nwin = t.len() - m + 1;
+    let mut nn = f64::INFINITY;
+    for j in 0..nwin {
+        if i.abs_diff(j) < m {
+            continue;
+        }
+        let qt = crate::core::distance::dot(&t[i..i + m], &t[j..j + m]);
+        let d = ed2norm_from_qt(qt, m, stats.mu[i], stats.sig[i], stats.mu[j], stats.sig[j]);
+        nn = nn.min(d);
+    }
+    nn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::brute;
+    use crate::util::rng::Rng;
+
+    fn walk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        for seed in [1u64, 2, 3] {
+            let t = walk(300, seed);
+            let m = 14;
+            let got = zhu_top1(&t, m, 4).unwrap();
+            let want = brute::top_k_discords(&t, m, 1)[0];
+            assert!(
+                (got.nn_dist - want.nn_dist).abs() < 1e-6 * (1.0 + want.nn_dist),
+                "seed {seed}: {} vs {}",
+                got.nn_dist,
+                want.nn_dist
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_winner_distance_across_threads() {
+        let t = walk(250, 4);
+        let a = zhu_top1(&t, 12, 1).unwrap();
+        let b = zhu_top1(&t, 12, 8).unwrap();
+        assert!((a.nn_dist - b.nn_dist).abs() < 1e-12);
+    }
+}

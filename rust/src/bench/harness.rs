@@ -1,0 +1,161 @@
+//! The benchmark runner: warmup + timed repetitions, result tables, JSON
+//! dumps under `target/bench-results/`.
+
+use std::time::Instant;
+
+use crate::analysis::report::{fmt_secs, Table};
+use crate::util::json::Json;
+
+use super::stats::{summarize, Summary};
+
+/// Time `f` with `warmup` unmeasured runs and `reps` measured ones.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    summarize(&samples)
+}
+
+/// Is quick mode on (shrunken workloads)?
+pub fn quick_mode() -> bool {
+    std::env::var("PALMAD_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Repetitions to use unless quick mode caps them.
+pub fn default_reps() -> usize {
+    if quick_mode() {
+        1
+    } else {
+        3
+    }
+}
+
+/// One benchmark's accumulated rows.
+pub struct Bench {
+    pub name: &'static str,
+    /// (label, params, summary, extra key=value annotations)
+    rows: Vec<(String, String, Summary, Vec<(String, String)>)>,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        println!("# bench {name}{}", if quick_mode() { " (QUICK)" } else { "" });
+        Self { name, rows: Vec::new() }
+    }
+
+    /// Record a measured row.
+    pub fn record(
+        &mut self,
+        label: impl Into<String>,
+        params: impl Into<String>,
+        summary: Summary,
+        extra: Vec<(String, String)>,
+    ) {
+        let (label, params) = (label.into(), params.into());
+        println!(
+            "  {label} [{params}] median={} min={} (reps={}){}",
+            fmt_secs(summary.median),
+            fmt_secs(summary.min),
+            summary.reps,
+            extra
+                .iter()
+                .map(|(k, v)| format!(" {k}={v}"))
+                .collect::<String>()
+        );
+        self.rows.push((label, params, summary, extra));
+    }
+
+    /// Convenience: measure and record in one call.
+    pub fn run<F: FnMut()>(
+        &mut self,
+        label: impl Into<String>,
+        params: impl Into<String>,
+        f: F,
+    ) -> Summary {
+        let s = measure(if quick_mode() { 0 } else { 1 }, default_reps(), f);
+        self.record(label, params, s, Vec::new());
+        s
+    }
+
+    /// Print the final table and write the JSON dump.  Returns the table
+    /// text (the benches also embed it in EXPERIMENTS.md).
+    pub fn finish(self) -> String {
+        let mut table = Table::new(self.name, &["case", "params", "median", "min", "mean", "extra"]);
+        let mut json_rows = Vec::new();
+        for (label, params, s, extra) in &self.rows {
+            table.row(&[
+                label.clone(),
+                params.clone(),
+                fmt_secs(s.median),
+                fmt_secs(s.min),
+                fmt_secs(s.mean),
+                extra.iter().map(|(k, v)| format!("{k}={v} ")).collect::<String>().trim_end().to_string(),
+            ]);
+            let mut obj = Json::obj()
+                .set("case", label.clone())
+                .set("params", params.clone())
+                .set("median_s", s.median)
+                .set("min_s", s.min)
+                .set("mean_s", s.mean)
+                .set("reps", s.reps);
+            for (k, v) in extra {
+                obj = obj.set(k, v.clone());
+            }
+            json_rows.push(obj);
+        }
+        let text = table.to_text();
+        println!("\n{text}");
+        // JSON dump (best-effort).
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let json = Json::obj()
+            .set("bench", self.name)
+            .set("quick", quick_mode())
+            .set("rows", Json::Arr(json_rows));
+        let path = dir.join(format!("{}.json", self.name));
+        if let Err(e) = std::fs::write(&path, json.to_string()) {
+            eprintln!("warn: could not write {path:?}: {e}");
+        } else {
+            println!("wrote {}", path.display());
+        }
+        text
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut n = 0;
+        let s = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.reps, 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn bench_records_and_finishes() {
+        let mut b = Bench::new("unit_test_bench");
+        b.run("case_a", "n=10", || {
+            std::hint::black_box(1 + 1);
+        });
+        b.record(
+            "case_b",
+            "n=20",
+            summarize(&[0.5]),
+            vec![("discords".into(), "3".into())],
+        );
+        let text = b.finish();
+        assert!(text.contains("case_a"));
+        assert!(text.contains("discords=3"));
+    }
+}

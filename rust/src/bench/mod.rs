@@ -1,0 +1,12 @@
+//! Criterion-replacement benchmark harness.
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` binaries (Cargo `[[bench]]`
+//! targets with `harness = false`); each uses [`harness::Bench`] to time
+//! closures with warmup + repetition, prints a paper-style table, and
+//! drops a JSON row dump under `target/bench-results/` for plotting.
+//!
+//! `PALMAD_BENCH_QUICK=1` shrinks workloads (used by the test-path smoke
+//! runs so `cargo bench` can be exercised quickly).
+
+pub mod harness;
+pub mod stats;

@@ -1,0 +1,77 @@
+//! Summary statistics for benchmark samples.
+
+/// Summary of repeated timing samples (seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub reps: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+}
+
+/// Summarize a non-empty sample set.
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty());
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = percentile_sorted(&sorted, 50.0);
+    let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        reps: samples.len(),
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        mean: samples.iter().sum::<f64>() / samples.len() as f64,
+        median,
+        mad: percentile_sorted(&devs, 50.0),
+    }
+}
+
+/// Linear-interpolated percentile of a sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_samples() {
+        let s = summarize(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.reps, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.mad, 1.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+        assert_eq!(percentile_sorted(&v, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&[7.0], 30.0), 7.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = summarize(&[0.5]);
+        assert_eq!(s.median, 0.5);
+        assert_eq!(s.mad, 0.0);
+    }
+}

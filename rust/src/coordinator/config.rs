@@ -1,0 +1,100 @@
+//! Engine selection & construction shared by the CLI, the service, the
+//! examples and the benches.
+
+use anyhow::Result;
+
+use crate::engines::native::{NativeConfig, NativeEngine};
+use crate::engines::xla::XlaEngine;
+use crate::engines::Engine;
+use crate::runtime::artifact::ArtifactSet;
+use crate::util::pool;
+
+/// Which tile backend to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EngineChoice {
+    /// Pure-rust f64 engine (always available).
+    #[default]
+    Native,
+    /// AOT Pallas/JAX artifacts via PJRT (requires `make artifacts`).
+    Xla,
+}
+
+impl EngineChoice {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Self::Native),
+            "xla" => Ok(Self::Xla),
+            other => anyhow::bail!("unknown engine {other:?} (native|xla)"),
+        }
+    }
+}
+
+/// Runtime options for engine construction.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    pub choice: EngineChoice,
+    /// Tile edge; for XLA must be one of the compiled buckets.
+    pub segn: usize,
+    /// Native-engine worker threads.
+    pub threads: usize,
+    /// Artifact directory override (`None` = `$PALMAD_ARTIFACTS` or ./artifacts).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            choice: EngineChoice::Native,
+            segn: 256,
+            threads: pool::default_threads(),
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// Build the chosen engine.
+pub fn build_engine(opts: &EngineOptions) -> Result<Box<dyn Engine>> {
+    match opts.choice {
+        EngineChoice::Native => Ok(Box::new(NativeEngine::new(NativeConfig {
+            segn: opts.segn,
+            threads: opts.threads,
+        }))),
+        EngineChoice::Xla => {
+            let dir = opts
+                .artifacts_dir
+                .clone()
+                .unwrap_or_else(ArtifactSet::default_dir);
+            let artifacts = ArtifactSet::load(&dir)?;
+            Ok(Box::new(XlaEngine::new(artifacts, opts.segn)?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_choices() {
+        assert_eq!(EngineChoice::parse("native").unwrap(), EngineChoice::Native);
+        assert_eq!(EngineChoice::parse("xla").unwrap(), EngineChoice::Xla);
+        assert!(EngineChoice::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn native_builds() {
+        let e = build_engine(&EngineOptions::default()).unwrap();
+        assert_eq!(e.name(), "native");
+        assert_eq!(e.segn(), 256);
+    }
+
+    #[test]
+    fn xla_without_artifacts_errors() {
+        let opts = EngineOptions {
+            choice: EngineChoice::Xla,
+            artifacts_dir: Some("/nonexistent_palmad".into()),
+            ..Default::default()
+        };
+        assert!(build_engine(&opts).is_err());
+    }
+}

@@ -1,0 +1,393 @@
+//! PD3 — Parallel DRAG-based Discord Discovery (Algs. 3/4 of the paper).
+//!
+//! Finds every *range discord*: subsequences whose nearest non-self match
+//! is at squared distance >= `r^2`.  Two phases over the segmented series:
+//!
+//! - **Selection** (Alg. 3): every segment scans itself and the chunks to
+//!   its *right*.  A distance below `r` kills both sides' candidacy; each
+//!   computed distance tightens the running nearest-neighbor minima.
+//! - **Refinement** (Alg. 4): segments that still hold candidates scan the
+//!   chunks to their *left*, completing the distance coverage for every
+//!   survivor (so survivors' nnDist values are exact).
+//!
+//! Scheduling is round-based: in round `k` of a phase, every live segment
+//! `i` evaluates chunk `i +/- k`; the whole round is one engine batch
+//! (native: thread-pooled tiles, xla: pipelined PJRT executions), mirroring
+//! the paper's lock-step GPU grid while letting kill information propagate
+//! between rounds — the paper's block-level early termination.
+//!
+//! Deviations from the pseudocode (documented in DESIGN.md §6):
+//! - `col_kill` information can clear `Cand` bits directly
+//!   ([`Pd3Config::deferred_neighbor_kill`] = false, the default) instead
+//!   of transiting through the `Neighbor` bitmap; both are implemented and
+//!   the ablation bench compares them.  Either way the survivor set equals
+//!   the brute-force range-discord set (integration-tested).
+//! - Padding dummies are replaced by in-kernel validity masks (Eq. 9 is
+//!   kept in [`super::segmentation::pad_len`] for the record).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::DragMetrics;
+use super::segmentation::Segmentation;
+use crate::core::bitmap::Bitmap;
+use crate::engines::{Engine, SeriesView, TileTask};
+
+/// A discovered discord: subsequence index, length, and the exact distance
+/// to its nearest non-self match (ED units, not squared).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Discord {
+    pub idx: usize,
+    pub m: usize,
+    pub nn_dist: f64,
+}
+
+/// PD3 knobs (ablation benches flip these).
+#[derive(Clone, Copy, Debug)]
+pub struct Pd3Config {
+    /// Mimic the paper exactly: chunk-side kills go to the `Neighbor`
+    /// bitmap and only merge into `Cand` between the phases.  `false`
+    /// (default) kills directly, which prunes strictly earlier.
+    pub deferred_neighbor_kill: bool,
+    /// Skip tiles of fully-pruned segments (Alg. 3 l.14; Alg. 4 l.3).
+    pub early_stop: bool,
+}
+
+impl Default for Pd3Config {
+    fn default() -> Self {
+        Self { deferred_neighbor_kill: false, early_stop: true }
+    }
+}
+
+/// Range-discord discovery at the view's current subsequence length.
+///
+/// Returns all survivors (unfiltered by top-k) with exact `nn_dist`.
+pub fn pd3(
+    engine: &dyn Engine,
+    view: &SeriesView<'_>,
+    r_ed: f64,
+    cfg: &Pd3Config,
+    metrics: &mut DragMetrics,
+) -> Result<Vec<Discord>> {
+    let m = view.stats.m;
+    let nwin = view.n_windows();
+    if nwin == 0 {
+        return Ok(Vec::new());
+    }
+    let segn = engine.segn();
+    let seg = Segmentation::new(nwin, segn);
+    let r2 = r_ed * r_ed;
+
+    let mut cand = Bitmap::ones(nwin);
+    let mut neighbor = Bitmap::ones(nwin);
+    let mut nn_dist = vec![f64::INFINITY; nwin];
+
+    // ---- Phase 1: selection (self + right scan) --------------------------
+    let t0 = Instant::now();
+    for k in 0..seg.nseg {
+        let mut tasks = Vec::new();
+        let mut rows = Vec::new(); // segment index per task
+        for i in 0..seg.nseg - k {
+            let j = i + k;
+            let ri = seg.seg_range(i);
+            if cfg.early_stop && !cand.any_in_range(ri.start, ri.end) {
+                metrics.tiles_skipped += 1;
+                continue;
+            }
+            tasks.push(TileTask { seg_start: seg.seg_start(i), chunk_start: seg.seg_start(j) });
+            rows.push((i, j));
+        }
+        if tasks.is_empty() {
+            continue;
+        }
+        metrics.tiles_computed += tasks.len() as u64;
+        let results = engine.compute_tiles(view, r2, &tasks)?;
+        for ((i, j), out) in rows.into_iter().zip(results) {
+            apply_side(
+                &mut cand,
+                &mut nn_dist,
+                seg.seg_start(i),
+                nwin,
+                &out.row_min,
+                &out.row_kill,
+                None,
+                &mut metrics.kills_select,
+            );
+            let neighbor_bm = if cfg.deferred_neighbor_kill { Some(&mut neighbor) } else { None };
+            apply_side(
+                &mut cand,
+                &mut nn_dist,
+                seg.seg_start(j),
+                nwin,
+                &out.col_min,
+                &out.col_kill,
+                neighbor_bm,
+                &mut metrics.kills_select,
+            );
+        }
+    }
+    metrics.select_time += t0.elapsed();
+
+    // ---- Phase 2: refinement (left scan) ---------------------------------
+    let t1 = Instant::now();
+    if cfg.deferred_neighbor_kill {
+        cand.and_with(&neighbor); // Alg. 4 l.1-2
+    }
+    for k in 1..seg.nseg {
+        let mut tasks = Vec::new();
+        let mut rows = Vec::new();
+        for i in k..seg.nseg {
+            let j = i - k;
+            let ri = seg.seg_range(i);
+            if cfg.early_stop && !cand.any_in_range(ri.start, ri.end) {
+                metrics.tiles_skipped += 1;
+                continue;
+            }
+            tasks.push(TileTask { seg_start: seg.seg_start(i), chunk_start: seg.seg_start(j) });
+            rows.push((i, j));
+        }
+        if tasks.is_empty() {
+            continue;
+        }
+        metrics.tiles_computed += tasks.len() as u64;
+        let results = engine.compute_tiles(view, r2, &tasks)?;
+        for ((i, j), out) in rows.into_iter().zip(results) {
+            apply_side(
+                &mut cand,
+                &mut nn_dist,
+                seg.seg_start(i),
+                nwin,
+                &out.row_min,
+                &out.row_kill,
+                None,
+                &mut metrics.kills_refine,
+            );
+            // Chunk-side kills are equally valid in the left scan.
+            apply_side(
+                &mut cand,
+                &mut nn_dist,
+                seg.seg_start(j),
+                nwin,
+                &out.col_min,
+                &out.col_kill,
+                None,
+                &mut metrics.kills_refine,
+            );
+        }
+    }
+    metrics.refine_time += t1.elapsed();
+
+    // ---- Collect survivors ------------------------------------------------
+    let mut discords = Vec::new();
+    for idx in cand.iter_set() {
+        let d2 = nn_dist[idx];
+        debug_assert!(
+            d2.is_infinite() || d2 >= r2 - 1e-6 * (1.0 + r2),
+            "survivor {idx} has nnDist^2 {d2} < r^2 {r2}"
+        );
+        if d2.is_finite() {
+            discords.push(Discord { idx, m, nn_dist: d2.max(0.0).sqrt() });
+        }
+        // A survivor with infinite nnDist means the series has no valid
+        // non-self match for it (nwin <= m); nothing to report.
+    }
+    metrics.survivors += discords.len() as u64;
+    Ok(discords)
+}
+
+/// Fold one tile side (rows or cols) into the global state.
+#[allow(clippy::too_many_arguments)]
+fn apply_side(
+    cand: &mut Bitmap,
+    nn_dist: &mut [f64],
+    start: usize,
+    nwin: usize,
+    mins: &[f64],
+    kills: &[bool],
+    neighbor: Option<&mut Bitmap>,
+    kill_counter: &mut u64,
+) {
+    let len = mins.len().min(nwin.saturating_sub(start));
+    match neighbor {
+        None => {
+            for k in 0..len {
+                let g = start + k;
+                if mins[k] < nn_dist[g] {
+                    nn_dist[g] = mins[k];
+                }
+                if kills[k] && cand.get(g) {
+                    cand.clear(g);
+                    *kill_counter += 1;
+                }
+            }
+        }
+        Some(nb) => {
+            for k in 0..len {
+                let g = start + k;
+                if mins[k] < nn_dist[g] {
+                    nn_dist[g] = mins[k];
+                }
+                if kills[k] && nb.get(g) {
+                    nb.clear(g);
+                    *kill_counter += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::ed2norm;
+    use crate::core::stats::RollingStats;
+    use crate::engines::native::NativeEngine;
+    use crate::util::rng::Rng;
+
+    fn random_walk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect()
+    }
+
+    /// Brute-force range discords: for every window, exact nnDist.
+    fn brute_range_discords(t: &[f64], m: usize, r_ed: f64) -> Vec<Discord> {
+        let nwin = t.len() - m + 1;
+        let mut out = Vec::new();
+        for i in 0..nwin {
+            let mut best = f64::INFINITY;
+            for j in 0..nwin {
+                if i.abs_diff(j) < m {
+                    continue;
+                }
+                best = best.min(ed2norm(&t[i..i + m], &t[j..j + m]));
+            }
+            if best.is_finite() && best >= r_ed * r_ed {
+                out.push(Discord { idx: i, m, nn_dist: best.sqrt() });
+            }
+        }
+        out
+    }
+
+    fn run_pd3(t: &[f64], m: usize, r: f64, cfg: &Pd3Config, segn: usize) -> Vec<Discord> {
+        let stats = RollingStats::compute(t, m);
+        let view = SeriesView { t, stats: &stats };
+        let engine = NativeEngine::with_segn(segn);
+        let mut metrics = DragMetrics::default();
+        let mut got = pd3(&engine, &view, r, cfg, &mut metrics).unwrap();
+        got.sort_by_key(|d| d.idx);
+        got
+    }
+
+    fn check_equals_brute(t: &[f64], m: usize, r: f64, cfg: &Pd3Config, segn: usize) {
+        let got = run_pd3(t, m, r, cfg, segn);
+        let want = brute_range_discords(t, m, r);
+        assert_eq!(
+            got.iter().map(|d| d.idx).collect::<Vec<_>>(),
+            want.iter().map(|d| d.idx).collect::<Vec<_>>(),
+            "survivor sets differ (m={m}, r={r}, segn={segn})"
+        );
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g.nn_dist - w.nn_dist).abs() < 1e-6 * (1.0 + w.nn_dist),
+                "nnDist mismatch at {}: {} vs {}",
+                g.idx,
+                g.nn_dist,
+                w.nn_dist
+            );
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_medium_r() {
+        let t = random_walk(300, 11);
+        check_equals_brute(&t, 16, 4.0, &Pd3Config::default(), 32);
+    }
+
+    #[test]
+    fn matches_brute_force_various_segn() {
+        let t = random_walk(250, 12);
+        for segn in [8, 17, 64, 300] {
+            check_equals_brute(&t, 12, 3.5, &Pd3Config::default(), segn);
+        }
+    }
+
+    #[test]
+    fn deferred_neighbor_matches_direct() {
+        let t = random_walk(300, 13);
+        let direct = run_pd3(&t, 16, 4.0, &Pd3Config::default(), 32);
+        let deferred = run_pd3(
+            &t,
+            16,
+            4.0,
+            &Pd3Config { deferred_neighbor_kill: true, early_stop: true },
+            32,
+        );
+        assert_eq!(direct, deferred);
+    }
+
+    #[test]
+    fn no_early_stop_matches() {
+        let t = random_walk(300, 14);
+        let a = run_pd3(&t, 16, 4.0, &Pd3Config::default(), 32);
+        let b = run_pd3(&t, 16, 4.0, &Pd3Config { early_stop: false, ..Default::default() }, 32);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn huge_r_returns_empty() {
+        let t = random_walk(200, 15);
+        let got = run_pd3(&t, 16, 2.0 * 4.0 + 1.0, &Pd3Config::default(), 32);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn tiny_r_returns_everything() {
+        let t = random_walk(120, 16);
+        let m = 10;
+        let got = run_pd3(&t, m, 0.0, &Pd3Config::default(), 16);
+        assert_eq!(got.len(), t.len() - m + 1);
+        // And nnDists equal the full matrix-profile values.
+        let want = brute_range_discords(&t, m, 0.0);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.nn_dist - w.nn_dist).abs() < 1e-6 * (1.0 + w.nn_dist));
+        }
+    }
+
+    #[test]
+    fn planted_discord_found() {
+        let mut t: Vec<f64> = (0..400).map(|i| (i as f64 * 0.3).sin()).collect();
+        // Plant an anomaly at 200..216.
+        for (k, v) in t[200..216].iter_mut().enumerate() {
+            *v += if k % 2 == 0 { 1.5 } else { -1.5 };
+        }
+        let m = 16;
+        let got = run_pd3(&t, m, 3.0, &Pd3Config::default(), 32);
+        assert!(!got.is_empty());
+        let best = got.iter().max_by(|a, b| a.nn_dist.partial_cmp(&b.nn_dist).unwrap()).unwrap();
+        assert!(
+            (185..=215).contains(&best.idx),
+            "best discord at {} not near planted anomaly",
+            best.idx
+        );
+    }
+
+    #[test]
+    fn early_stop_skips_tiles() {
+        let t = random_walk(2000, 17);
+        let stats = RollingStats::compute(&t, 32);
+        let view = SeriesView { t: &t, stats: &stats };
+        let engine = NativeEngine::with_segn(64);
+        let mut metrics = DragMetrics::default();
+        // High r (close to the 2*sqrt(32) ~ 11.3 bound) kills candidates
+        // fast, so whole segments die and their tiles are skipped.
+        pd3(&engine, &view, 8.0, &Pd3Config::default(), &mut metrics).unwrap();
+        assert!(metrics.tiles_skipped > 0, "expected early-stop skips");
+    }
+}

@@ -1,0 +1,416 @@
+//! MERLIN (Alg. 1): arbitrary-length discord discovery via adaptive
+//! range-threshold selection over repeated PD3 calls.
+//!
+//! For each length `m` in `[minL, maxL]` the driver picks a threshold `r`
+//! that is "a little less" than the eventual discord distance — close
+//! enough that PD3 prunes almost everything, but not above it (which would
+//! return nothing):
+//!
+//! - `m = minL`: start at the theoretical maximum `2*sqrt(m)`, halve until
+//!   PD3 succeeds.
+//! - next four lengths: `r = 0.99 * nnDist_{m-1}`, shaving 1% per retry.
+//! - afterwards: `r = mean - 2*std` of the previous five nnDists,
+//!   subtracting one std per retry.
+//!
+//! The per-length window statistics are *not* recomputed: the rolling
+//! vectors advance by the paper's recurrences (Eqs. 7/8) — the
+//! redundant-calculation elimination that headlines the paper — either
+//! natively or through the AOT `stats_update` kernel
+//! ([`MerlinConfig::stats_backend`]).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::drag::{pd3, Discord, Pd3Config};
+use super::metrics::MerlinMetrics;
+use crate::core::series::TimeSeries;
+use crate::core::stats::RollingStats;
+use crate::core::topk::{top_k_non_overlapping, Scored};
+use crate::engines::{Engine, SeriesView};
+
+/// How the rolling stats vectors are produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum StatsBackend {
+    /// f64 in-process (Eq. 4 scan + Eqs. 7/8 recurrence).
+    #[default]
+    Native,
+    /// The AOT `stats_init` / `stats_update` kernels via PJRT (same math,
+    /// exercised end-to-end; slower at small n due to call overhead).
+    Aot,
+    /// Recompute from scratch every length (ablation baseline: what the
+    /// paper's recurrences save).
+    NaivePerLength,
+}
+
+/// MERLIN driver configuration.
+#[derive(Clone, Debug)]
+pub struct MerlinConfig {
+    pub min_l: usize,
+    pub max_l: usize,
+    /// Top-k discords to report per length (0 = all survivors).
+    pub top_k: usize,
+    pub pd3: Pd3Config,
+    pub stats_backend: StatsBackend,
+    /// Retry guard per length (each retry lowers r and re-runs PD3).
+    pub max_retries: usize,
+    /// Give up lowering r below this fraction of `2*sqrt(m)`.
+    pub r_floor_frac: f64,
+}
+
+impl Default for MerlinConfig {
+    fn default() -> Self {
+        Self {
+            min_l: 64,
+            max_l: 128,
+            top_k: 1,
+            pd3: Pd3Config::default(),
+            stats_backend: StatsBackend::Native,
+            max_retries: 60,
+            r_floor_frac: 1e-4,
+        }
+    }
+}
+
+/// Per-length outcome.
+#[derive(Clone, Debug)]
+pub struct LengthResult {
+    pub m: usize,
+    /// Threshold the successful PD3 call used (ED units).
+    pub r_used: f64,
+    /// Retries needed at this length.
+    pub retries: usize,
+    /// Top-k (or all) discords, sorted by nn_dist descending.
+    pub discords: Vec<Discord>,
+}
+
+/// Whole-run outcome.
+#[derive(Clone, Debug)]
+pub struct MerlinResult {
+    pub lengths: Vec<LengthResult>,
+    pub metrics: MerlinMetrics,
+}
+
+impl MerlinResult {
+    /// Flatten all per-length discords.
+    pub fn all_discords(&self) -> impl Iterator<Item = &Discord> {
+        self.lengths.iter().flat_map(|l| l.discords.iter())
+    }
+
+    /// The single most anomalous subsequence across lengths, scored by the
+    /// length-normalized distance (nnDist / (2*sqrt(m)), cf. Eq. 11).
+    pub fn top_normalized(&self) -> Option<&Discord> {
+        self.all_discords().max_by(|a, b| {
+            let na = a.nn_dist / (2.0 * (a.m as f64).sqrt());
+            let nb = b.nn_dist / (2.0 * (b.m as f64).sqrt());
+            na.partial_cmp(&nb).unwrap()
+        })
+    }
+}
+
+/// The MERLIN driver bound to an engine.
+pub struct Merlin<'e> {
+    engine: &'e dyn Engine,
+    cfg: MerlinConfig,
+}
+
+impl<'e> Merlin<'e> {
+    pub fn new(engine: &'e dyn Engine, cfg: MerlinConfig) -> Self {
+        Self { engine, cfg }
+    }
+
+    pub fn config(&self) -> &MerlinConfig {
+        &self.cfg
+    }
+
+    /// Run arbitrary-length discovery over `t`.
+    pub fn run(&self, t: &TimeSeries) -> Result<MerlinResult> {
+        let cfg = &self.cfg;
+        let n = t.len();
+        if !(3 <= cfg.min_l && cfg.min_l <= cfg.max_l) {
+            bail!("bad length range [{}, {}]", cfg.min_l, cfg.max_l);
+        }
+        if cfg.max_l > self.engine.max_m() {
+            bail!("max_l {} exceeds engine max_m {}", cfg.max_l, self.engine.max_m());
+        }
+        // Need at least one non-self match at max_l.
+        if n < 2 * cfg.max_l {
+            bail!("series too short (n={n}) for max_l={} (need n >= 2*max_l)", cfg.max_l);
+        }
+
+        let t_start = Instant::now();
+        let mut metrics = MerlinMetrics::default();
+        let mut lengths: Vec<LengthResult> = Vec::new();
+        // Ring of the last 5 nnDist minima (ED units).
+        let mut last5: Vec<f64> = Vec::new();
+
+        let st0 = Instant::now();
+        let mut stats = self.stats_init(&t.values, cfg.min_l)?;
+        metrics.stats_time += st0.elapsed();
+
+        for m in cfg.min_l..=cfg.max_l {
+            debug_assert_eq!(stats.m, m);
+            let view = SeriesView { t: &t.values, stats: &stats };
+            let step = m - cfg.min_l;
+            let max_r = 2.0 * (m as f64).sqrt();
+            let r_floor = cfg.r_floor_frac * max_r;
+
+            // Initial threshold per Alg. 1.
+            let mut r = if step == 0 {
+                max_r
+            } else if step <= 4 {
+                0.99 * last5.last().copied().unwrap()
+            } else {
+                let (mu, sigma) = mean_std(&last5);
+                (mu - 2.0 * sigma).clamp(r_floor, max_r)
+            };
+
+            let mut retries = 0usize;
+            let result = loop {
+                metrics.drag_calls += 1;
+                let discords =
+                    pd3(self.engine, &view, r, &cfg.pd3, &mut metrics.drag)?;
+                let picked = pick_top_k(&discords, m, cfg.top_k);
+                let enough = if cfg.top_k == 0 { !picked.is_empty() } else { picked.len() >= cfg.top_k };
+                if enough || r <= r_floor || retries >= cfg.max_retries {
+                    break LengthResult { m, r_used: r, retries, discords: picked };
+                }
+                // Lower r per Alg. 1 and retry.
+                retries += 1;
+                metrics.retries += 1;
+                r = if step == 0 {
+                    0.5 * r
+                } else if step <= 4 {
+                    0.99 * r
+                } else {
+                    let (mu, sigma) = mean_std(&last5);
+                    let dec = if sigma > 1e-12 * (1.0 + mu) { sigma } else { 0.05 * mu.max(1e-9) };
+                    (r - dec).max(r_floor)
+                };
+            };
+
+            // Track min nnDist among reported discords for the r schedule.
+            let min_nn = result
+                .discords
+                .iter()
+                .map(|d| d.nn_dist)
+                .fold(f64::INFINITY, f64::min);
+            if min_nn.is_finite() {
+                last5.push(min_nn);
+            } else {
+                // Total failure at this length (pathological series):
+                // carry the previous value so the schedule can continue.
+                let carry = last5.last().copied().unwrap_or(0.5 * max_r);
+                last5.push(carry);
+            }
+            if last5.len() > 5 {
+                last5.remove(0);
+            }
+            metrics.discords += result.discords.len() as u64;
+            lengths.push(result);
+
+            // Advance stats m -> m+1 (Eqs. 7/8) unless this was the last.
+            if m < cfg.max_l {
+                let st = Instant::now();
+                stats = self.stats_advance(stats, &t.values)?;
+                metrics.stats_time += st.elapsed();
+            }
+        }
+
+        metrics.total_time = t_start.elapsed();
+        Ok(MerlinResult { lengths, metrics })
+    }
+
+    fn stats_init(&self, t: &[f64], m: usize) -> Result<RollingStats> {
+        match self.cfg.stats_backend {
+            StatsBackend::Native | StatsBackend::NaivePerLength => {
+                Ok(RollingStats::compute(t, m))
+            }
+            StatsBackend::Aot => self.engine.aot_stats_init(t, m),
+        }
+    }
+
+    fn stats_advance(&self, stats: RollingStats, t: &[f64]) -> Result<RollingStats> {
+        match self.cfg.stats_backend {
+            StatsBackend::Native => {
+                let mut s = stats;
+                s.advance(t);
+                Ok(s)
+            }
+            StatsBackend::NaivePerLength => Ok(RollingStats::compute(t, stats.m + 1)),
+            StatsBackend::Aot => self.engine.aot_stats_update(t, &stats),
+        }
+    }
+}
+
+/// Sort by nnDist descending, de-overlap, truncate to k (0 = all).
+fn pick_top_k(discords: &[Discord], m: usize, k: usize) -> Vec<Discord> {
+    let scored: Vec<Scored> =
+        discords.iter().map(|d| Scored { idx: d.idx, nn_dist: d.nn_dist }).collect();
+    top_k_non_overlapping(&scored, m, k)
+        .into_iter()
+        .map(|s| Discord { idx: s.idx, m, nn_dist: s.nn_dist })
+        .collect()
+}
+
+fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mu = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / n;
+    (mu, var.max(0.0).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::native::NativeEngine;
+    use crate::util::rng::Rng;
+
+    fn random_walk_series(n: usize, seed: u64) -> TimeSeries {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        let v = (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect();
+        TimeSeries::new("rw", v)
+    }
+
+    #[test]
+    fn finds_discords_for_every_length() {
+        let t = random_walk_series(600, 21);
+        let engine = NativeEngine::with_segn(64);
+        let cfg = MerlinConfig { min_l: 16, max_l: 32, top_k: 1, ..Default::default() };
+        let res = Merlin::new(&engine, cfg).run(&t).unwrap();
+        assert_eq!(res.lengths.len(), 17);
+        for lr in &res.lengths {
+            assert_eq!(lr.discords.len(), 1, "m={}", lr.m);
+            assert!(lr.discords[0].nn_dist > 0.0);
+            assert!(lr.discords[0].nn_dist >= lr.r_used - 1e-9);
+        }
+    }
+
+    #[test]
+    fn top1_matches_brute_force_per_length() {
+        use crate::core::distance::ed2norm;
+        let t = random_walk_series(260, 22);
+        let engine = NativeEngine::with_segn(32);
+        let cfg = MerlinConfig { min_l: 10, max_l: 20, top_k: 1, ..Default::default() };
+        let res = Merlin::new(&engine, cfg).run(&t).unwrap();
+        for lr in &res.lengths {
+            let m = lr.m;
+            let nwin = t.len() - m + 1;
+            // Brute-force top-1 discord.
+            let mut best = (0usize, f64::NEG_INFINITY);
+            for i in 0..nwin {
+                let mut nn = f64::INFINITY;
+                for j in 0..nwin {
+                    if i.abs_diff(j) >= m {
+                        nn = nn.min(ed2norm(&t.values[i..i + m], &t.values[j..j + m]));
+                    }
+                }
+                if nn.is_finite() && nn > best.1 {
+                    best = (i, nn);
+                }
+            }
+            let got = &lr.discords[0];
+            assert!(
+                (got.nn_dist - best.1.sqrt()).abs() < 1e-6 * (1.0 + got.nn_dist),
+                "m={m}: got dist {} want {}",
+                got.nn_dist,
+                best.1.sqrt()
+            );
+            // Index can differ only between exact ties.
+            if got.idx != best.0 {
+                let mut nn = f64::INFINITY;
+                for j in 0..nwin {
+                    if got.idx.abs_diff(j) >= m {
+                        nn = nn.min(ed2norm(
+                            &t.values[got.idx..got.idx + m],
+                            &t.values[j..j + m],
+                        ));
+                    }
+                }
+                assert!((nn - best.1).abs() < 1e-9 * (1.0 + best.1));
+            }
+        }
+    }
+
+    #[test]
+    fn stats_backends_agree() {
+        let t = random_walk_series(400, 23);
+        let engine = NativeEngine::with_segn(64);
+        let base = MerlinConfig { min_l: 12, max_l: 24, top_k: 1, ..Default::default() };
+        let a = Merlin::new(&engine, base.clone()).run(&t).unwrap();
+        let b = Merlin::new(
+            &engine,
+            MerlinConfig { stats_backend: StatsBackend::NaivePerLength, ..base },
+        )
+        .run(&t)
+        .unwrap();
+        for (x, y) in a.lengths.iter().zip(&b.lengths) {
+            assert_eq!(x.discords[0].idx, y.discords[0].idx);
+            assert!((x.discords[0].nn_dist - y.discords[0].nn_dist).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn top_k_returns_non_overlapping() {
+        let t = random_walk_series(800, 24);
+        let engine = NativeEngine::with_segn(64);
+        let cfg = MerlinConfig { min_l: 16, max_l: 16, top_k: 3, ..Default::default() };
+        let res = Merlin::new(&engine, cfg).run(&t).unwrap();
+        let d = &res.lengths[0].discords;
+        assert!(d.len() >= 2, "expected multiple discords, got {}", d.len());
+        for a in 0..d.len() {
+            for b in a + 1..d.len() {
+                assert!(d[a].idx.abs_diff(d[b].idx) >= 16);
+            }
+            if a > 0 {
+                assert!(d[a - 1].nn_dist >= d[a].nn_dist);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_ranges() {
+        let t = random_walk_series(100, 25);
+        let engine = NativeEngine::with_segn(32);
+        assert!(Merlin::new(
+            &engine,
+            MerlinConfig { min_l: 2, max_l: 10, ..Default::default() }
+        )
+        .run(&t)
+        .is_err());
+        assert!(Merlin::new(
+            &engine,
+            MerlinConfig { min_l: 60, max_l: 60, ..Default::default() }
+        )
+        .run(&t)
+        .is_err());
+    }
+
+    #[test]
+    fn constant_series_is_handled() {
+        // All-flat series: every window is a twin -> nnDist 0 everywhere;
+        // MERLIN must terminate (retry caps) and report nothing/zeros.
+        let t = TimeSeries::new("flat", vec![5.0; 200]);
+        let engine = NativeEngine::with_segn(32);
+        let cfg = MerlinConfig {
+            min_l: 8,
+            max_l: 10,
+            top_k: 1,
+            max_retries: 5,
+            ..Default::default()
+        };
+        let res = Merlin::new(&engine, cfg).run(&t).unwrap();
+        assert_eq!(res.lengths.len(), 3);
+        for lr in &res.lengths {
+            for d in &lr.discords {
+                assert!(d.nn_dist <= 1e-6);
+            }
+        }
+    }
+}

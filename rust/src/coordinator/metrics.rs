@@ -1,0 +1,103 @@
+//! Execution counters for PD3 / MERLIN runs — both for the log output and
+//! for the ablation benches (early-stop rate, pruning effectiveness).
+
+use std::time::Duration;
+
+/// Counters for one DRAG (PD3) invocation.
+#[derive(Clone, Debug, Default)]
+pub struct DragMetrics {
+    /// Tiles actually evaluated by the engine.
+    pub tiles_computed: u64,
+    /// Tiles skipped because their segment was already fully pruned.
+    pub tiles_skipped: u64,
+    /// Candidate bits cleared during selection / refinement.
+    pub kills_select: u64,
+    pub kills_refine: u64,
+    /// Survivors (range discords) returned.
+    pub survivors: u64,
+    pub select_time: Duration,
+    pub refine_time: Duration,
+}
+
+impl DragMetrics {
+    pub fn merge(&mut self, other: &DragMetrics) {
+        self.tiles_computed += other.tiles_computed;
+        self.tiles_skipped += other.tiles_skipped;
+        self.kills_select += other.kills_select;
+        self.kills_refine += other.kills_refine;
+        self.survivors += other.survivors;
+        self.select_time += other.select_time;
+        self.refine_time += other.refine_time;
+    }
+
+    /// Fraction of potential tiles avoided by segment early-stop.
+    pub fn skip_ratio(&self) -> f64 {
+        let total = self.tiles_computed + self.tiles_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.tiles_skipped as f64 / total as f64
+        }
+    }
+}
+
+/// Counters for a whole MERLIN run.
+#[derive(Clone, Debug, Default)]
+pub struct MerlinMetrics {
+    pub drag: DragMetrics,
+    /// DRAG invocations (including retries with lowered r).
+    pub drag_calls: u64,
+    /// Retries beyond the first call per length.
+    pub retries: u64,
+    /// Total discords reported across lengths.
+    pub discords: u64,
+    pub stats_time: Duration,
+    pub total_time: Duration,
+}
+
+impl std::fmt::Display for MerlinMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "drag_calls={} retries={} discords={} tiles={} skipped={} ({:.1}% early-stop) \
+             select={:.3}s refine={:.3}s stats={:.3}s total={:.3}s",
+            self.drag_calls,
+            self.retries,
+            self.discords,
+            self.drag.tiles_computed,
+            self.drag.tiles_skipped,
+            100.0 * self.drag.skip_ratio(),
+            self.drag.select_time.as_secs_f64(),
+            self.drag.refine_time.as_secs_f64(),
+            self.stats_time.as_secs_f64(),
+            self.total_time.as_secs_f64(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = DragMetrics { tiles_computed: 10, tiles_skipped: 30, ..Default::default() };
+        let b = DragMetrics { tiles_computed: 5, kills_select: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.tiles_computed, 15);
+        assert_eq!(a.kills_select, 2);
+        assert!((a.skip_ratio() - 30.0 / 45.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skip_ratio_empty_is_zero() {
+        assert_eq!(DragMetrics::default().skip_ratio(), 0.0);
+    }
+
+    #[test]
+    fn display_contains_fields() {
+        let m = MerlinMetrics { drag_calls: 3, ..Default::default() };
+        let s = format!("{m}");
+        assert!(s.contains("drag_calls=3"));
+    }
+}

@@ -1,0 +1,11 @@
+//! The layer-3 coordinator: MERLIN driver, parallel DRAG (PD3), segment
+//! scheduling, the job service, and configuration.
+
+pub mod config;
+pub mod distributed;
+pub mod drag;
+pub mod merlin;
+pub mod metrics;
+pub mod segmentation;
+pub mod service;
+pub mod streaming;

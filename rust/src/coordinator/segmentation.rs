@@ -1,0 +1,125 @@
+//! Series segmentation (Fig. 2 / Eq. 9 of the paper).
+//!
+//! PD3 divides the `N = n - m + 1` subsequences into consecutive segments
+//! of `segN` subsequences; each segment maps to one tile row (the GPU
+//! thread block of the paper, one tile task per (segment, chunk) pair
+//! here).  The paper pads the series with `+inf` dummies so every block is
+//! full (Eq. 9); our tile kernels carry explicit validity counts
+//! (`na`/`nb`) instead, so the ragged last segment needs no dummy data —
+//! [`pad_len`] is still provided (and property-tested) because the
+//! benchmarks report it and DESIGN.md documents the equivalence.
+
+/// Segment layout over `nwin` subsequences with tile edge `segn`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segmentation {
+    pub nwin: usize,
+    pub segn: usize,
+    pub nseg: usize,
+}
+
+impl Segmentation {
+    pub fn new(nwin: usize, segn: usize) -> Self {
+        assert!(segn >= 1);
+        Self { nwin, segn, nseg: nwin.div_ceil(segn) }
+    }
+
+    /// Global index of the first subsequence of segment `s`.
+    #[inline]
+    pub fn seg_start(&self, s: usize) -> usize {
+        s * self.segn
+    }
+
+    /// Valid-subsequence range of segment `s` (last segment may be short).
+    #[inline]
+    pub fn seg_range(&self, s: usize) -> std::ops::Range<usize> {
+        let start = self.seg_start(s);
+        start..(start + self.segn).min(self.nwin)
+    }
+
+    /// Number of valid subsequences in segment `s`.
+    #[inline]
+    pub fn seg_len(&self, s: usize) -> usize {
+        let r = self.seg_range(s);
+        r.end - r.start
+    }
+
+    /// Which segment a subsequence index belongs to.
+    #[inline]
+    pub fn segment_of(&self, idx: usize) -> usize {
+        idx / self.segn
+    }
+}
+
+/// The paper's padding formula (Eq. 9): number of dummy elements appended
+/// so that `N` is a multiple of the per-segment subsequence count.
+///
+/// `n` is the series length, `m` the subsequence length, `seglen` the
+/// segment length in *elements* (so `segN = seglen - m + 1`).
+pub fn pad_len(n: usize, m: usize, seglen: usize) -> usize {
+    assert!(seglen >= m);
+    let nwin = n - m + 1;
+    let segn = seglen - m + 1;
+    if nwin % segn == 0 {
+        m - 1
+    } else {
+        nwin.div_ceil(segn) * segn + 2 * (m - 1) - n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_exact_multiple() {
+        let s = Segmentation::new(256, 64);
+        assert_eq!(s.nseg, 4);
+        assert_eq!(s.seg_range(3), 192..256);
+        assert_eq!(s.seg_len(3), 64);
+        assert_eq!(s.segment_of(191), 2);
+        assert_eq!(s.segment_of(192), 3);
+    }
+
+    #[test]
+    fn layout_ragged_tail() {
+        let s = Segmentation::new(250, 64);
+        assert_eq!(s.nseg, 4);
+        assert_eq!(s.seg_range(3), 192..250);
+        assert_eq!(s.seg_len(3), 58);
+    }
+
+    #[test]
+    fn single_short_segment() {
+        let s = Segmentation::new(10, 64);
+        assert_eq!(s.nseg, 1);
+        assert_eq!(s.seg_range(0), 0..10);
+    }
+
+    #[test]
+    fn eq9_exact_multiple_case() {
+        // N = 91 windows (n=100, m=10); seglen=16 -> segN=7; 91 % 7 == 0.
+        assert_eq!(pad_len(100, 10, 16), 9); // m - 1
+    }
+
+    #[test]
+    fn eq9_general_case_covers_all_segments() {
+        // The paper's formula guarantees enough padded elements for
+        // ceil(N/segN) full segments of segN windows each, plus chunk
+        // slack (the extra m-1 term); it does NOT make the padded window
+        // count an exact multiple (the kernels' validity masks absorb the
+        // remainder).
+        for (n, m, seglen) in [(100usize, 10usize, 20usize), (1000, 50, 128), (333, 7, 32)] {
+            let pad = pad_len(n, m, seglen);
+            let segn = seglen - m + 1;
+            let nwin = n - m + 1;
+            let nseg = nwin.div_ceil(segn);
+            let padded_nwin = n + pad - m + 1;
+            assert!(
+                padded_nwin >= nseg * segn,
+                "n={n} m={m} seglen={seglen} pad={pad}: {padded_nwin} < {}",
+                nseg * segn
+            );
+            assert!(pad >= m - 1, "pad covers the trailing window overlap");
+        }
+    }
+}

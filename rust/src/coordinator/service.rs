@@ -1,0 +1,451 @@
+//! The anomaly-discovery job service: a queue + worker-pool front end over
+//! the MERLIN coordinator, with a line-oriented TCP protocol.
+//!
+//! Shape follows the serving-system framing of the repro (vLLM-router
+//! style): clients submit jobs (series spec + length range + top-k), a
+//! router thread assigns them to workers, each worker owns an engine and
+//! runs MERLIN; clients poll status or run synchronously.
+//!
+//! Protocol (one request per line, responses `OK ...` / `ERR ...`):
+//!
+//! ```text
+//! RUN gen=<dataset> [n=<len>] [seed=<u64>] minl=<m> maxl=<m> [topk=<k>]
+//!   -> OK JOB <id>
+//! STATUS <id>
+//!   -> OK QUEUED | OK RUNNING | OK FAILED <msg>
+//!    | OK DONE <njobs-line>; then one `DISCORD m=<m> idx=<i> dist=<d>`
+//!      line per discord and a final `END`
+//! METRICS
+//!   -> OK METRICS jobs=<n> done=<n> failed=<n> discords=<n>
+//! SHUTDOWN -> OK BYE (stops the listener)
+//! ```
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::config::{build_engine, EngineOptions};
+use super::drag::Discord;
+use super::merlin::{Merlin, MerlinConfig};
+use crate::core::series::TimeSeries;
+use crate::gen::registry;
+
+/// A submitted job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub dataset: String,
+    pub n: Option<usize>,
+    pub seed: u64,
+    pub min_l: usize,
+    pub max_l: usize,
+    pub top_k: usize,
+}
+
+/// Job lifecycle.
+#[derive(Clone, Debug)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done { discords: Vec<Discord>, seconds: f64 },
+    Failed(String),
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    done: AtomicU64,
+    failed: AtomicU64,
+    discords: AtomicU64,
+}
+
+struct Inner {
+    queue: Mutex<Vec<(u64, JobSpec)>>,
+    jobs: Mutex<HashMap<u64, JobState>>,
+    cv: Condvar,
+    counters: Counters,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+    engine_opts: EngineOptions,
+}
+
+/// The job service handle.
+pub struct Service {
+    inner: Arc<Inner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start `workers` worker threads, each owning its own engine.
+    pub fn start(engine_opts: EngineOptions, workers: usize) -> Result<Self> {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(Vec::new()),
+            jobs: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            counters: Counters::default(),
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            engine_opts,
+        });
+        let mut handles = Vec::new();
+        for w in 0..workers.max(1) {
+            let inner = Arc::clone(&inner);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("palmad-worker-{w}"))
+                    .spawn(move || worker_main(inner))
+                    .map_err(|e| anyhow!("spawn worker: {e}"))?,
+            );
+        }
+        Ok(Self { inner, workers: handles })
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&self, spec: JobSpec) -> u64 {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.inner.jobs.lock().unwrap().insert(id, JobState::Queued);
+        self.inner.queue.lock().unwrap().push((id, spec));
+        self.inner.cv.notify_one();
+        id
+    }
+
+    /// Current state of a job.
+    pub fn status(&self, id: u64) -> Option<JobState> {
+        self.inner.jobs.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until the job leaves Queued/Running.
+    pub fn wait(&self, id: u64) -> Option<JobState> {
+        loop {
+            match self.status(id) {
+                Some(JobState::Queued) | Some(JobState::Running) => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// (submitted, done, failed, discords)
+    pub fn metrics(&self) -> (u64, u64, u64, u64) {
+        let c = &self.inner.counters;
+        (
+            c.submitted.load(Ordering::Relaxed),
+            c.done.load(Ordering::Relaxed),
+            c.failed.load(Ordering::Relaxed),
+            c.discords.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Stop workers (idempotent).
+    pub fn shutdown(&mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        self.inner.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Serve the TCP protocol until a SHUTDOWN request arrives.
+    pub fn serve(&self, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        crate::log_info!("palmad service listening on {addr}");
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let done = self.handle_conn(stream);
+            if done {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Public wrapper over [`Self::handle_conn`] for embedders that run
+    /// their own accept loop (see `examples/serve_demo.rs`).
+    pub fn handle_conn_public(&self, stream: TcpStream) -> bool {
+        self.handle_conn(stream)
+    }
+
+    /// Handle one connection; returns true if SHUTDOWN was requested.
+    fn handle_conn(&self, stream: TcpStream) -> bool {
+        let peer = stream.peer_addr().ok();
+        let mut reader = BufReader::new(match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return false,
+        });
+        let mut out = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return false,
+                Ok(_) => {}
+            }
+            let req = line.trim();
+            if req.is_empty() {
+                continue;
+            }
+            crate::log_debug!("request from {peer:?}: {req}");
+            match self.dispatch(req, &mut out) {
+                Ok(true) => return true,
+                Ok(false) => {}
+                Err(e) => {
+                    let _ = writeln!(out, "ERR {e}");
+                }
+            }
+        }
+    }
+
+    fn dispatch(&self, req: &str, out: &mut TcpStream) -> Result<bool> {
+        let mut parts = req.split_whitespace();
+        match parts.next().unwrap_or("") {
+            "RUN" => {
+                let spec = parse_spec(parts)?;
+                let id = self.submit(spec);
+                writeln!(out, "OK JOB {id}")?;
+            }
+            "STATUS" => {
+                let id: u64 = parts.next().ok_or_else(|| anyhow!("STATUS <id>"))?.parse()?;
+                match self.status(id) {
+                    None => bail!("no such job {id}"),
+                    Some(JobState::Queued) => writeln!(out, "OK QUEUED")?,
+                    Some(JobState::Running) => writeln!(out, "OK RUNNING")?,
+                    Some(JobState::Failed(e)) => writeln!(out, "OK FAILED {e}")?,
+                    Some(JobState::Done { discords, seconds }) => {
+                        writeln!(out, "OK DONE count={} seconds={seconds:.3}", discords.len())?;
+                        for d in &discords {
+                            writeln!(out, "DISCORD m={} idx={} dist={:.6}", d.m, d.idx, d.nn_dist)?;
+                        }
+                        writeln!(out, "END")?;
+                    }
+                }
+            }
+            "METRICS" => {
+                let (s, d, f, n) = self.metrics();
+                writeln!(out, "OK METRICS jobs={s} done={d} failed={f} discords={n}")?;
+            }
+            "SHUTDOWN" => {
+                writeln!(out, "OK BYE")?;
+                return Ok(true);
+            }
+            other => bail!("unknown request {other:?}"),
+        }
+        Ok(false)
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn parse_spec<'a>(parts: impl Iterator<Item = &'a str>) -> Result<JobSpec> {
+    let mut spec = JobSpec {
+        dataset: String::new(),
+        n: None,
+        seed: 42,
+        min_l: 0,
+        max_l: 0,
+        top_k: 1,
+    };
+    for p in parts {
+        let (k, v) = p.split_once('=').ok_or_else(|| anyhow!("expected key=value, got {p:?}"))?;
+        match k {
+            "gen" => spec.dataset = v.to_string(),
+            "n" => spec.n = Some(v.parse()?),
+            "seed" => spec.seed = v.parse()?,
+            "minl" => spec.min_l = v.parse()?,
+            "maxl" => spec.max_l = v.parse()?,
+            "topk" => spec.top_k = v.parse()?,
+            other => bail!("unknown key {other:?}"),
+        }
+    }
+    if spec.dataset.is_empty() || spec.min_l == 0 || spec.max_l == 0 {
+        bail!("RUN requires gen=, minl=, maxl=");
+    }
+    Ok(spec)
+}
+
+fn worker_main(inner: Arc<Inner>) {
+    // Each worker owns its engine (XLA executors are per-thread actors).
+    let engine = match build_engine(&inner.engine_opts) {
+        Ok(e) => e,
+        Err(e) => {
+            crate::log_error!("worker failed to build engine: {e}");
+            return;
+        }
+    };
+    loop {
+        let job = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if inner.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(j) = q.pop() {
+                    break j;
+                }
+                q = inner.cv.wait(q).unwrap();
+            }
+        };
+        let (id, spec) = job;
+        inner.jobs.lock().unwrap().insert(id, JobState::Running);
+        let start = std::time::Instant::now();
+        let outcome = run_job(&*engine, &spec);
+        let state = match outcome {
+            Ok(discords) => {
+                inner.counters.done.fetch_add(1, Ordering::Relaxed);
+                inner.counters.discords.fetch_add(discords.len() as u64, Ordering::Relaxed);
+                JobState::Done { discords, seconds: start.elapsed().as_secs_f64() }
+            }
+            Err(e) => {
+                inner.counters.failed.fetch_add(1, Ordering::Relaxed);
+                JobState::Failed(e.to_string())
+            }
+        };
+        inner.jobs.lock().unwrap().insert(id, state);
+    }
+}
+
+fn run_job(engine: &dyn crate::engines::Engine, spec: &JobSpec) -> Result<Vec<Discord>> {
+    let series: TimeSeries = match spec.n {
+        Some(n) => registry::dataset_prefix(&spec.dataset, n, spec.seed)?.series,
+        None => registry::dataset(&spec.dataset, spec.seed)?.series,
+    };
+    let cfg = MerlinConfig {
+        min_l: spec.min_l,
+        max_l: spec.max_l,
+        top_k: spec.top_k,
+        ..Default::default()
+    };
+    let res = Merlin::new(engine, cfg).run(&series)?;
+    Ok(res.all_discords().copied().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            dataset: "ecg2".into(),
+            n: Some(2_000),
+            seed: 7,
+            min_l: 16,
+            max_l: 20,
+            top_k: 1,
+        }
+    }
+
+    #[test]
+    fn submit_and_wait() {
+        let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 2).unwrap();
+        let id = svc.submit(spec());
+        match svc.wait(id) {
+            Some(JobState::Done { discords, .. }) => {
+                assert_eq!(discords.len(), 5); // one per length 16..=20
+            }
+            other => panic!("unexpected state {other:?}"),
+        }
+        let (s, d, f, n) = svc.metrics();
+        assert_eq!((s, d, f), (1, 1, 0));
+        assert_eq!(n, 5);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bad_dataset_fails_cleanly() {
+        let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+        let id = svc.submit(JobSpec { dataset: "nope".into(), ..spec() });
+        match svc.wait(id) {
+            Some(JobState::Failed(msg)) => assert!(msg.contains("unknown dataset")),
+            other => panic!("unexpected {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn parallel_jobs_complete() {
+        let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 4).unwrap();
+        let ids: Vec<u64> = (0..6).map(|k| svc.submit(JobSpec { seed: k, ..spec() })).collect();
+        for id in ids {
+            match svc.wait(id) {
+                Some(JobState::Done { .. }) => {}
+                other => panic!("job {id}: {other:?}"),
+            }
+        }
+        assert_eq!(svc.metrics().1, 6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn parse_spec_requires_fields() {
+        assert!(parse_spec("gen=ecg minl=8".split_whitespace()).is_err());
+        let s = parse_spec("gen=ecg minl=8 maxl=12 topk=2 seed=9".split_whitespace()).unwrap();
+        assert_eq!(s.top_k, 2);
+        assert_eq!(s.seed, 9);
+        assert!(parse_spec("bogus".split_whitespace()).is_err());
+    }
+
+    #[test]
+    fn tcp_protocol_end_to_end() {
+        let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+        let svc = std::sync::Arc::new(std::sync::Mutex::new(svc));
+        // Bind on an ephemeral port.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let svc2 = Arc::clone(&svc);
+        let server = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let stream = stream.unwrap();
+                let done = svc2.lock().unwrap().handle_conn(stream);
+                if done {
+                    break;
+                }
+            }
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, "RUN gen=ecg2 n=2000 minl=16 maxl=17 topk=1 seed=3").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK JOB "), "{line}");
+        let id: u64 = line.trim().rsplit(' ').next().unwrap().parse().unwrap();
+        // Poll status until done.
+        loop {
+            writeln!(conn, "STATUS {id}").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            if line.starts_with("OK DONE") {
+                // Read discord lines until END.
+                let mut count = 0;
+                loop {
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    if line.trim() == "END" {
+                        break;
+                    }
+                    assert!(line.starts_with("DISCORD "), "{line}");
+                    count += 1;
+                }
+                assert_eq!(count, 2);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        writeln!(conn, "METRICS").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("done=1"), "{line}");
+        writeln!(conn, "SHUTDOWN").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "OK BYE");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,267 @@
+//! Online / streaming discord monitoring — the paper's future work (b)
+//! ("application of PALMAD in ... online time series anomaly detection").
+//!
+//! A [`StreamMonitor`] ingests points one at a time and maintains the
+//! top-1 discord of the most recent `window` samples at a fixed
+//! subsequence length `m`.  Discovery is amortized: a full PD3 pass runs
+//! every `refresh` new points (over the engine), and between passes each
+//! *newly completed* subsequence is scored against the current window
+//! with early abandoning — so a fresh anomaly is flagged the moment its
+//! window completes, not at the next refresh.
+//!
+//! The alert rule follows the range-discord semantics: a new subsequence
+//! whose nearest non-self match within the window is at least the
+//! current discord distance is itself a (new) discord and is reported.
+
+use anyhow::Result;
+
+use super::drag::{pd3, Discord, Pd3Config};
+use super::metrics::DragMetrics;
+use crate::core::distance::{ed2_early_abandon, is_flat, znorm};
+use crate::core::stats::RollingStats;
+use crate::engines::{Engine, SeriesView};
+
+/// Configuration for the monitor.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Sliding-window size (samples kept).
+    pub window: usize,
+    /// Subsequence length.
+    pub m: usize,
+    /// Full re-discovery every this many ingested points.
+    pub refresh: usize,
+    /// Fraction of the current discord distance a new subsequence must
+    /// exceed to raise an alert between refreshes (1.0 = strict discord).
+    pub alert_frac: f64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        Self { window: 4_096, m: 64, refresh: 256, alert_frac: 1.0 }
+    }
+}
+
+/// An alert raised by the monitor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Alert {
+    /// Global index (over all ingested points) of the anomalous window.
+    pub global_idx: usize,
+    /// Its nearest-neighbor distance within the sliding window (ED).
+    pub nn_dist: f64,
+}
+
+/// Sliding-window discord monitor.
+pub struct StreamMonitor<'e> {
+    cfg: StreamConfig,
+    engine: &'e dyn Engine,
+    buf: Vec<f64>,
+    /// Count of points ingested since the start of the stream.
+    ingested: usize,
+    since_refresh: usize,
+    /// Current benchmark discord of the window (from the last full pass).
+    current: Option<Discord>,
+}
+
+impl<'e> StreamMonitor<'e> {
+    pub fn new(engine: &'e dyn Engine, cfg: StreamConfig) -> Self {
+        assert!(cfg.m >= 3 && cfg.window >= 2 * cfg.m, "window must hold >= 2 subsequences");
+        Self { cfg, engine, buf: Vec::new(), ingested: 0, since_refresh: 0, current: None }
+    }
+
+    /// Current top discord of the window (None until warm).
+    pub fn current_discord(&self) -> Option<Discord> {
+        self.current
+    }
+
+    /// Number of points ingested so far.
+    pub fn ingested(&self) -> usize {
+        self.ingested
+    }
+
+    /// Ingest one point; returns an alert if the newly completed
+    /// subsequence is anomalous.
+    pub fn push(&mut self, x: f64) -> Result<Option<Alert>> {
+        self.buf.push(x);
+        if self.buf.len() > self.cfg.window {
+            let excess = self.buf.len() - self.cfg.window;
+            self.buf.drain(..excess);
+        }
+        self.ingested += 1;
+        self.since_refresh += 1;
+
+        if self.buf.len() < 2 * self.cfg.m {
+            return Ok(None); // not warm yet
+        }
+
+        // Full re-discovery on schedule (or first time warm).
+        if self.current.is_none() || self.since_refresh >= self.cfg.refresh {
+            self.refresh()?;
+            self.since_refresh = 0;
+            return Ok(None); // refresh subsumes the incremental check
+        }
+
+        // Incremental check of the just-completed subsequence.
+        let m = self.cfg.m;
+        let n = self.buf.len();
+        let start = n - m;
+        let new_win = &self.buf[start..];
+        let threshold = match &self.current {
+            Some(d) => d.nn_dist * self.cfg.alert_frac,
+            None => return Ok(None),
+        };
+        let thr2 = threshold * threshold;
+
+        let new_norm = znorm(new_win);
+        let new_flat = {
+            let mu = new_win.iter().sum::<f64>() / m as f64;
+            let ms = new_win.iter().map(|v| v * v).sum::<f64>() / m as f64;
+            let sig = (ms - mu * mu).max(0.0).sqrt().max(crate::core::stats::SIGMA_FLOOR);
+            is_flat(sig, mu)
+        };
+        let mut nn2 = f64::INFINITY;
+        for j in 0..=(start - m) {
+            // Non-self matches strictly left of the new window.
+            let w = &self.buf[j..j + m];
+            let d = if new_flat {
+                let mu = w.iter().sum::<f64>() / m as f64;
+                let ms = w.iter().map(|v| v * v).sum::<f64>() / m as f64;
+                let sig = (ms - mu * mu).max(0.0).sqrt().max(crate::core::stats::SIGMA_FLOOR);
+                Some(if is_flat(sig, mu) { 0.0 } else { 2.0 * m as f64 })
+            } else {
+                ed2_early_abandon(&znorm(w), &new_norm, nn2)
+            };
+            if let Some(d) = d {
+                nn2 = nn2.min(d);
+                if nn2 < thr2 {
+                    return Ok(None); // has a close neighbor: not anomalous
+                }
+            }
+        }
+        if nn2.is_finite() && nn2 >= thr2 {
+            let alert = Alert {
+                global_idx: self.ingested - m,
+                nn_dist: nn2.max(0.0).sqrt(),
+            };
+            // It dethrones (or matches) the current discord.
+            self.current = Some(Discord { idx: start, m, nn_dist: alert.nn_dist });
+            return Ok(Some(alert));
+        }
+        Ok(None)
+    }
+
+    /// Full PD3 pass over the current window.
+    fn refresh(&mut self) -> Result<()> {
+        let m = self.cfg.m;
+        let stats = RollingStats::compute(&self.buf, m);
+        let view = SeriesView { t: &self.buf, stats: &stats };
+        // Adaptive r: reuse the last known discord distance, else start
+        // from the MERLIN seed.
+        let mut r = match &self.current {
+            Some(d) => 0.99 * d.nn_dist,
+            None => 2.0 * (m as f64).sqrt(),
+        };
+        let mut metrics = DragMetrics::default();
+        for _ in 0..64 {
+            let found = pd3(self.engine, &view, r, &Pd3Config::default(), &mut metrics)?;
+            if let Some(best) =
+                found.into_iter().max_by(|a, b| a.nn_dist.partial_cmp(&b.nn_dist).unwrap())
+            {
+                self.current = Some(best);
+                return Ok(());
+            }
+            r *= 0.5;
+            if r < 1e-4 {
+                break;
+            }
+        }
+        self.current = None; // pathological window (all twins)
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::native::NativeEngine;
+    use crate::util::rng::Rng;
+
+    fn monitor(engine: &NativeEngine) -> StreamMonitor<'_> {
+        StreamMonitor::new(
+            engine,
+            StreamConfig { window: 1_024, m: 32, refresh: 128, alert_frac: 1.0 },
+        )
+    }
+
+    #[test]
+    fn warms_up_then_tracks_discord() {
+        let engine = NativeEngine::with_segn(64);
+        let mut mon = monitor(&engine);
+        let mut rng = Rng::seed(71);
+        for i in 0..600 {
+            let x = (i as f64 * 0.2).sin() + 0.05 * rng.normal();
+            mon.push(x).unwrap();
+        }
+        assert!(mon.current_discord().is_some());
+        assert_eq!(mon.ingested(), 600);
+    }
+
+    #[test]
+    fn alerts_on_injected_anomaly_between_refreshes() {
+        let engine = NativeEngine::with_segn(64);
+        let mut mon = monitor(&engine);
+        let mut rng = Rng::seed(72);
+        let mut alerts = Vec::new();
+        for i in 0..2_000 {
+            // Periodic signal with an anomaly burst at 1500..1532 chosen
+            // to land between refresh boundaries (1536 = 12 * 128).
+            let mut x = (i as f64 * 0.2).sin() + 0.05 * rng.normal();
+            if (1_500..1_532).contains(&i) {
+                x += if i % 2 == 0 { 2.0 } else { -2.0 };
+            }
+            if let Some(a) = mon.push(x).unwrap() {
+                alerts.push((i, a));
+            }
+        }
+        assert!(
+            alerts.iter().any(|&(i, _)| (1_500..1_600).contains(&i)),
+            "no alert near the injected burst: {alerts:?}"
+        );
+    }
+
+    #[test]
+    fn no_alerts_on_stationary_periodic_stream() {
+        let engine = NativeEngine::with_segn(64);
+        let mut mon = StreamMonitor::new(
+            &engine,
+            StreamConfig { window: 1_024, m: 32, refresh: 128, alert_frac: 1.2 },
+        );
+        let mut count = 0;
+        for i in 0..3_000 {
+            let x = (i as f64 * 0.2).sin();
+            if mon.push(x).unwrap().is_some() {
+                count += 1;
+            }
+        }
+        assert_eq!(count, 0, "pure periodic stream should not alert");
+    }
+
+    #[test]
+    fn window_stays_bounded() {
+        let engine = NativeEngine::with_segn(64);
+        let mut mon = monitor(&engine);
+        for i in 0..5_000 {
+            mon.push(i as f64).unwrap();
+        }
+        assert!(mon.buf.len() <= 1_024);
+    }
+
+    #[test]
+    #[should_panic(expected = "window must hold")]
+    fn rejects_degenerate_window() {
+        let engine = NativeEngine::with_segn(64);
+        let _ = StreamMonitor::new(
+            &engine,
+            StreamConfig { window: 40, m: 32, refresh: 16, alert_frac: 1.0 },
+        );
+    }
+}

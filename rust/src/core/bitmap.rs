@@ -1,0 +1,197 @@
+//! Candidate / neighbor bitmaps (Fig. 1 of the paper).
+//!
+//! PD3 tracks which subsequences are still discord candidates (`Cand`) and
+//! which have been ruled out as nearest neighbors of pruned candidates
+//! (`Neighbor`).  Both are dense bitsets over the `N = n - m + 1`
+//! subsequences, with the word-level operations the refinement phase needs
+//! (elementwise conjunction, any-in-range for segment early-stop).
+
+/// Dense bitset over subsequence indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bitmap {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl Bitmap {
+    /// All-true bitmap of `len` bits (candidates start all-live, Alg. 3 l.1).
+    pub fn ones(len: usize) -> Self {
+        let nwords = len.div_ceil(64);
+        let mut words = vec![u64::MAX; nwords];
+        Self::mask_tail(len, &mut words);
+        Self { len, words }
+    }
+
+    /// All-false bitmap.
+    pub fn zeros(len: usize) -> Self {
+        Self { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    fn mask_tail(len: usize, words: &mut [u64]) {
+        let rem = len % 64;
+        if rem != 0 {
+            if let Some(last) = words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        if v {
+            *w |= 1 << (i % 64);
+        } else {
+            *w &= !(1 << (i % 64));
+        }
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        self.set(i, false);
+    }
+
+    /// Elementwise conjunction (`Cand <- Cand AND Neighbor`, Alg. 4 l.2).
+    pub fn and_with(&mut self, other: &Bitmap) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Is any bit in `[start, end)` set?  (Segment liveness check,
+    /// Alg. 3 l.14 / Alg. 4 l.3.)  `end` is clamped to `len`.
+    pub fn any_in_range(&self, start: usize, end: usize) -> bool {
+        let end = end.min(self.len);
+        if start >= end {
+            return false;
+        }
+        let (ws, wo) = (start / 64, start % 64);
+        let (we, eo) = ((end - 1) / 64, (end - 1) % 64 + 1);
+        if ws == we {
+            let mask = (u64::MAX << wo) & (u64::MAX >> (64 - eo));
+            return self.words[ws] & mask != 0;
+        }
+        if self.words[ws] & (u64::MAX << wo) != 0 {
+            return true;
+        }
+        for w in &self.words[ws + 1..we] {
+            if *w != 0 {
+                return true;
+            }
+        }
+        self.words[we] & (u64::MAX >> (64 - eo)) != 0
+    }
+
+    /// Iterate indices of set bits.
+    pub fn iter_set(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ones_and_tail_mask() {
+        let b = Bitmap::ones(70);
+        assert_eq!(b.count(), 70);
+        assert!(b.get(69));
+        let b = Bitmap::ones(64);
+        assert_eq!(b.count(), 64);
+        let b = Bitmap::ones(0);
+        assert_eq!(b.count(), 0);
+    }
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitmap::zeros(130);
+        b.set(0, true);
+        b.set(64, true);
+        b.set(129, true);
+        assert_eq!(b.count(), 3);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn and_with() {
+        let mut a = Bitmap::ones(100);
+        let mut n = Bitmap::ones(100);
+        n.clear(10);
+        n.clear(99);
+        a.and_with(&n);
+        assert!(!a.get(10) && !a.get(99) && a.get(11));
+        assert_eq!(a.count(), 98);
+    }
+
+    #[test]
+    fn any_in_range() {
+        let mut b = Bitmap::zeros(256);
+        b.set(100, true);
+        assert!(b.any_in_range(100, 101));
+        assert!(b.any_in_range(0, 256));
+        assert!(b.any_in_range(64, 128));
+        assert!(!b.any_in_range(0, 100));
+        assert!(!b.any_in_range(101, 256));
+        assert!(!b.any_in_range(100, 100));
+        // end past len clamps
+        assert!(b.any_in_range(0, 10_000));
+    }
+
+    #[test]
+    fn any_in_range_word_boundaries() {
+        let mut b = Bitmap::zeros(192);
+        b.set(63, true);
+        assert!(b.any_in_range(0, 64));
+        assert!(!b.any_in_range(64, 192));
+        b.clear(63);
+        b.set(64, true);
+        assert!(!b.any_in_range(0, 64));
+        assert!(b.any_in_range(64, 65));
+    }
+
+    #[test]
+    fn iter_set() {
+        let mut b = Bitmap::zeros(200);
+        for i in [0, 3, 64, 65, 199] {
+            b.set(i, true);
+        }
+        let got: Vec<usize> = b.iter_set().collect();
+        assert_eq!(got, vec![0, 3, 64, 65, 199]);
+    }
+}

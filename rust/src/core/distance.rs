@@ -1,0 +1,245 @@
+//! Normalized Euclidean distance (Eqs. 4-6) and early-abandoning variants.
+//!
+//! The whole stack works with the *squared* z-normalized Euclidean
+//! distance, as the paper does ("we employ the square of the Euclidean
+//! metric", §2.1).  Two equivalent forms are implemented:
+//!
+//! - [`ed2norm`] — direct: z-normalize both windows, sum squared diffs.
+//! - [`ed2norm_from_qt`] — the Mueen dot-product form (Eq. 6) used by all
+//!   fast paths:  `ED^2 = 2m * (1 - (QT - m*mu_a*mu_b) / (m*sig_a*sig_b))`.
+//!
+//! The correlation term is clamped to `[-1, 1]` so rounding can never
+//! produce a (meaningless) negative squared distance; the maximum possible
+//! value is `4m`, i.e. max ED is `2*sqrt(m)` — the bound MERLIN uses to
+//! seed its threshold search.
+
+use super::stats::SIGMA_FLOOR;
+
+/// Relative threshold for treating a window as constant ("flat"):
+/// `sigma <= FLAT_EPS * max(|mu|, 1)` (see [`is_flat`]).
+///
+/// The Eq. 6 correlation form is numerically meaningless for flat windows
+/// (0/0 after catastrophic cancellation), so the stack pins their
+/// semantics instead: flat-vs-flat distance is 0 (twins), flat-vs-normal
+/// is `2m` (zero correlation).  The test is *relative* because sliding
+/// (cumsum/recurrence) statistics carry rounding drift proportional to
+/// `eps * E[x^2]`: a truly constant window at level 1e6 can report a
+/// sigma around 1e-1 from drift alone.  Any window whose true relative
+/// variation is below 1e-6 has no numerically meaningful z-normalized
+/// shape, so pinning it to the flat convention is well-defined and — most
+/// importantly — *consistent* across the f64 native engine, the f32 AOT
+/// kernel, and the oracles.  Must match `FLAT_EPS` in
+/// `python/compile/shapes.py`.
+pub const FLAT_EPS: f64 = 1e-6;
+
+/// The stack-wide flat-window test (see [`FLAT_EPS`]).
+#[inline]
+pub fn is_flat(sig: f64, mu: f64) -> bool {
+    sig <= FLAT_EPS * mu.abs().max(1.0)
+}
+
+/// z-normalize a window into `out` (Eq. 4 with the sigma floor).
+pub fn znorm_into(w: &[f64], out: &mut [f64]) {
+    let m = w.len() as f64;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    for &x in w {
+        s1 += x;
+        s2 += x * x;
+    }
+    let mu = s1 / m;
+    let sig = (s2 / m - mu * mu).max(0.0).sqrt().max(SIGMA_FLOOR);
+    for (o, &x) in out.iter_mut().zip(w) {
+        *o = (x - mu) / sig;
+    }
+}
+
+/// z-normalize a window, allocating.
+pub fn znorm(w: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; w.len()];
+    znorm_into(w, &mut out);
+    out
+}
+
+fn sigma_of(w: &[f64]) -> f64 {
+    let m = w.len() as f64;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    for &x in w {
+        s1 += x;
+        s2 += x * x;
+    }
+    let mu = s1 / m;
+    (s2 / m - mu * mu).max(0.0).sqrt().max(SIGMA_FLOOR)
+}
+
+/// Squared z-normalized Euclidean distance, direct form (Eq. 5 over Eq. 4),
+/// with the flat-window convention (see [`FLAT_EPS`]).
+pub fn ed2norm(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mean = |w: &[f64]| w.iter().sum::<f64>() / w.len() as f64;
+    let flat_a = is_flat(sigma_of(a), mean(a));
+    let flat_b = is_flat(sigma_of(b), mean(b));
+    match (flat_a, flat_b) {
+        (true, true) => return 0.0,
+        (true, false) | (false, true) => return 2.0 * a.len() as f64,
+        _ => {}
+    }
+    let an = znorm(a);
+    let bn = znorm(b);
+    an.iter().zip(&bn).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Squared z-normalized Euclidean distance from a raw dot product (Eq. 6).
+///
+/// `qt = dot(a, b)` over the *raw* windows; `mu/sig` are their raw stats.
+#[inline]
+pub fn ed2norm_from_qt(qt: f64, m: usize, mu_a: f64, sig_a: f64, mu_b: f64, sig_b: f64) -> f64 {
+    let mf = m as f64;
+    let flat_a = is_flat(sig_a, mu_a);
+    let flat_b = is_flat(sig_b, mu_b);
+    if flat_a || flat_b {
+        return if flat_a && flat_b { 0.0 } else { 2.0 * mf };
+    }
+    let corr = (qt - mf * mu_a * mu_b) / (mf * sig_a * sig_b);
+    let corr = corr.clamp(-1.0, 1.0);
+    2.0 * mf * (1.0 - corr)
+}
+
+/// Dot product of two raw windows.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // Four-lane manual unroll: reliably autovectorizes and keeps four
+    // independent accumulators (better rounding + ILP than a single chain).
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Early-abandoning squared distance between two *pre-normalized* windows.
+///
+/// Returns `None` as soon as the partial sum exceeds `cutoff` (the
+/// `EarlyAbandonED` of Alg. 2); otherwise the exact squared distance.
+#[inline]
+pub fn ed2_early_abandon(an: &[f64], bn: &[f64], cutoff: f64) -> Option<f64> {
+    debug_assert_eq!(an.len(), bn.len());
+    let mut s = 0.0;
+    // Check the abandon condition every 8 lanes: per-element checks cost
+    // more than they save (measured in the microbench suite).
+    let mut i = 0;
+    let n = an.len();
+    while i + 8 <= n {
+        for k in i..i + 8 {
+            let d = an[k] - bn[k];
+            s += d * d;
+        }
+        if s >= cutoff {
+            return None;
+        }
+        i += 8;
+    }
+    for k in i..n {
+        let d = an[k] - bn[k];
+        s += d * d;
+    }
+    if s >= cutoff {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// Maximum possible ED (non-squared) between two z-normalized m-windows:
+/// `2*sqrt(m)` — MERLIN's initial threshold (Alg. 1 line 1).
+#[inline]
+pub fn max_ed(m: usize) -> f64 {
+    2.0 * (m as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qt_form_matches_direct() {
+        let mut rng = Rng::seed(3);
+        let a: Vec<f64> = (0..64).map(|_| rng.normal() * 3.0 + 100.0).collect();
+        let b: Vec<f64> = (0..64).map(|_| rng.normal() * 3.0 + 100.0).collect();
+        let m = a.len();
+        let stat = |w: &[f64]| {
+            let mu = w.iter().sum::<f64>() / m as f64;
+            let ms = w.iter().map(|x| x * x).sum::<f64>() / m as f64;
+            (mu, (ms - mu * mu).max(0.0).sqrt().max(SIGMA_FLOOR))
+        };
+        let (ma, sa) = stat(&a);
+        let (mb, sb) = stat(&b);
+        let d1 = ed2norm(&a, &b);
+        let d2 = ed2norm_from_qt(dot(&a, &b), m, ma, sa, mb, sb);
+        assert!((d1 - d2).abs() < 1e-6, "{d1} vs {d2}");
+    }
+
+    #[test]
+    fn distance_of_identical_windows_is_zero() {
+        let a: Vec<f64> = (0..32).map(|x| (x as f64).cos()).collect();
+        assert!(ed2norm(&a, &a) < 1e-12);
+        // Scale/offset invariance of z-normalization.
+        let b: Vec<f64> = a.iter().map(|x| 5.0 * x - 3.0).collect();
+        assert!(ed2norm(&a, &b) < 1e-12);
+    }
+
+    #[test]
+    fn anticorrelated_hits_upper_bound() {
+        let a: Vec<f64> = (0..32).map(|x| (x as f64 * 0.7).sin()).collect();
+        let b: Vec<f64> = a.iter().map(|x| -x).collect();
+        let d = ed2norm(&a, &b);
+        let bound = max_ed(32).powi(2);
+        assert!((d - bound).abs() < 1e-9, "{d} vs {bound}");
+    }
+
+    #[test]
+    fn constant_windows_are_finite() {
+        let a = vec![2.0; 16];
+        let b = vec![5.0; 16];
+        let d = ed2norm(&a, &b);
+        assert!(d.is_finite());
+        // Both normalize to ~zero vectors -> distance ~0.
+        assert!(d < 1e-6);
+    }
+
+    #[test]
+    fn early_abandon_agrees_when_not_abandoned() {
+        let mut rng = Rng::seed(9);
+        for _ in 0..50 {
+            let a: Vec<f64> = (0..37).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..37).map(|_| rng.normal()).collect();
+            let an = znorm(&a);
+            let bn = znorm(&b);
+            let exact: f64 = an.iter().zip(&bn).map(|(x, y)| (x - y) * (x - y)).sum();
+            match ed2_early_abandon(&an, &bn, exact + 1e-9) {
+                Some(d) => assert!((d - exact).abs() < 1e-9),
+                None => panic!("abandoned below cutoff"),
+            }
+            assert!(ed2_early_abandon(&an, &bn, exact * 0.5).is_none() || exact < 1e-12);
+        }
+    }
+
+    #[test]
+    fn clamp_prevents_negative_distance() {
+        // Force corr slightly above 1 via rounding-sized perturbation.
+        let d = ed2norm_from_qt(16.0000001, 16, 0.0, 1.0, 0.0, 1.0);
+        assert!(d >= 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Time-series primitives shared by every layer of the coordinator:
+//! series containers, rolling statistics (Eqs. 4/7/8), normalized
+//! Euclidean distance (Eq. 6), candidate bitmaps and top-k selection.
+
+pub mod bitmap;
+pub mod distance;
+pub mod series;
+pub mod stats;
+pub mod topk;
+pub mod windows;

@@ -1,0 +1,219 @@
+//! Time series container and I/O.
+//!
+//! A [`TimeSeries`] is an in-RAM `f64` sequence (the paper assumes the
+//! series fits in main memory, §2.1) plus a name used in reports.  Loaders
+//! cover the formats the benchmark datasets ship in: one-value-per-line
+//! text, CSV column extract, and raw little-endian `f32`/`f64` binary.
+
+use std::fmt;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A univariate time series, chronologically ordered (Eq. 1).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TimeSeries {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn new(name: impl Into<String>, values: Vec<f64>) -> Self {
+        Self { name: name.into(), values }
+    }
+
+    /// Length `n = |T|`.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Number of `m`-length subsequences: `N = n - m + 1` (Eq. 2).
+    pub fn subsequence_count(&self, m: usize) -> usize {
+        if m == 0 || m > self.len() {
+            0
+        } else {
+            self.len() - m + 1
+        }
+    }
+
+    /// Borrow the `m`-length subsequence starting at `i` (0-based).
+    pub fn subsequence(&self, i: usize, m: usize) -> &[f64] {
+        &self.values[i..i + m]
+    }
+
+    /// Prefix of the series (used by the length-scalability benches).
+    pub fn prefix(&self, n: usize) -> TimeSeries {
+        TimeSeries::new(self.name.clone(), self.values[..n.min(self.len())].to_vec())
+    }
+
+    /// Global min/max (used by plotting / heatmap normalization).
+    pub fn min_max(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in &self.values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+
+    /// Load one-value-per-line text (comments with `#`, blanks skipped).
+    pub fn from_text(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut values = Vec::new();
+        for (lineno, line) in BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            let s = line.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            let v: f64 = s
+                .parse()
+                .with_context(|| format!("{}:{}: bad value {s:?}", path.display(), lineno + 1))?;
+            values.push(v);
+        }
+        let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        Ok(Self::new(name, values))
+    }
+
+    /// Load one column of a CSV file (0-based column index, optional header).
+    pub fn from_csv(path: impl AsRef<Path>, column: usize) -> Result<Self> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut values = Vec::new();
+        for (lineno, line) in BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            let s = line.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            let field = s.split(',').nth(column).with_context(|| {
+                format!("{}:{}: no column {column}", path.display(), lineno + 1)
+            })?;
+            match field.trim().parse::<f64>() {
+                Ok(v) => values.push(v),
+                // Tolerate a single header row.
+                Err(_) if lineno == 0 => continue,
+                Err(e) => bail!("{}:{}: {e}", path.display(), lineno + 1),
+            }
+        }
+        let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        Ok(Self::new(name, values))
+    }
+
+    /// Load raw little-endian `f64` binary.
+    pub fn from_f64_binary(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut buf)?;
+        if buf.len() % 8 != 0 {
+            bail!("{}: length {} not a multiple of 8", path.display(), buf.len());
+        }
+        let values =
+            buf.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        Ok(Self::new(name, values))
+    }
+
+    /// Write one-value-per-line text.
+    pub fn to_text(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        for v in &self.values {
+            writeln!(f, "{v}")?;
+        }
+        Ok(())
+    }
+
+    /// Write raw little-endian `f64` binary.
+    pub fn to_f64_binary(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        for v in &self.values {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// The series values as `f32` (the tile-kernel interchange dtype).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32).collect()
+    }
+}
+
+impl fmt::Display for TimeSeries {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} (n={})", self.name, self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsequence_count_edges() {
+        let t = TimeSeries::new("t", vec![0.0; 10]);
+        assert_eq!(t.subsequence_count(3), 8);
+        assert_eq!(t.subsequence_count(10), 1);
+        assert_eq!(t.subsequence_count(11), 0);
+        assert_eq!(t.subsequence_count(0), 0);
+    }
+
+    #[test]
+    fn subsequence_borrow() {
+        let t = TimeSeries::new("t", (0..10).map(|x| x as f64).collect());
+        assert_eq!(t.subsequence(2, 3), &[2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn prefix_clamps() {
+        let t = TimeSeries::new("t", (0..10).map(|x| x as f64).collect());
+        assert_eq!(t.prefix(4).len(), 4);
+        assert_eq!(t.prefix(100).len(), 10);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let dir = std::env::temp_dir().join("palmad_series_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.txt");
+        let t = TimeSeries::new("x", vec![1.5, -2.25, 3.0]);
+        t.to_text(&p).unwrap();
+        let u = TimeSeries::from_text(&p).unwrap();
+        assert_eq!(t.values, u.values);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let dir = std::env::temp_dir().join("palmad_series_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.f64");
+        let t = TimeSeries::new("x", vec![1.5, f64::MIN_POSITIVE, -0.0, 1e300]);
+        t.to_f64_binary(&p).unwrap();
+        let u = TimeSeries::from_f64_binary(&p).unwrap();
+        assert_eq!(t.values, u.values);
+    }
+
+    #[test]
+    fn csv_column() {
+        let dir = std::env::temp_dir().join("palmad_series_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.csv");
+        std::fs::write(&p, "time,temp\n0,20.5\n1,21.0\n2,19.75\n").unwrap();
+        let t = TimeSeries::from_csv(&p, 1).unwrap();
+        assert_eq!(t.values, vec![20.5, 21.0, 19.75]);
+    }
+
+    #[test]
+    fn min_max() {
+        let t = TimeSeries::new("t", vec![3.0, -1.0, 2.0]);
+        assert_eq!(t.min_max(), (-1.0, 3.0));
+    }
+}

@@ -1,0 +1,224 @@
+//! Rolling subsequence statistics — the paper's redundancy-avoidance core.
+//!
+//! MERLIN calls DRAG once per subsequence length `m in [minL, maxL]`.
+//! Computing each length's window means/standard-deviations from scratch
+//! costs `O(n)` per length with a cumulative scan, but the paper's Eqs. 7/8
+//! make the step `m -> m+1` a *branch-free elementwise* update which both
+//! the AOT `stats_update` kernel and [`RollingStats::advance`] implement:
+//!
+//! ```text
+//! mu'_i     = (m * mu_i + t_{i+m}) / (m + 1)                      (Eq. 7)
+//! sigma'^2_i = m/(m+1) * (sigma_i^2 + (mu_i - t_{i+m})^2 / (m+1)) (Eq. 8)
+//! ```
+//!
+//! Everything is kept in `f64`: the cancellation in `E[x^2] - mu^2` is
+//! catastrophic in `f32` for large-magnitude series (random walks).
+//! Standard deviations are floored at [`SIGMA_FLOOR`] so constant
+//! (stuck-sensor) windows produce finite distances — required by the
+//! PolyTER case study (§5) and matching matrix-profile practice.
+
+/// Floor applied to every sigma.  Must equal `python/compile/shapes.py::SIGMA_FLOOR`.
+pub const SIGMA_FLOOR: f64 = 1e-8;
+
+/// Mean/std vectors for all `m`-length windows of one series.
+///
+/// `mu[i]`, `sig[i]` describe `T[i .. i+m)`; both have `n - m + 1` live
+/// entries.  [`RollingStats::advance`] mutates them in place to describe
+/// the `m+1` windows (one fewer entry).
+#[derive(Clone, Debug)]
+pub struct RollingStats {
+    pub m: usize,
+    pub mu: Vec<f64>,
+    pub sig: Vec<f64>,
+}
+
+impl RollingStats {
+    /// Initial computation (Eq. 4) via a single cumulative pass.
+    ///
+    /// Uses running sums with per-window compensation: the cumulative sums
+    /// are f64 and windows are recovered by differencing, which for the
+    /// value ranges in this repo keeps |err| well under the test tolerance
+    /// (verified against [`naive`] by unit + property tests).
+    pub fn compute(t: &[f64], m: usize) -> Self {
+        assert!(m >= 2 && m <= t.len(), "m={m} out of range for n={}", t.len());
+        let cnt = t.len() - m + 1;
+        let mut mu = Vec::with_capacity(cnt);
+        let mut sig = Vec::with_capacity(cnt);
+        // Seed window.
+        let mut s1 = 0.0f64;
+        let mut s2 = 0.0f64;
+        for &v in &t[..m] {
+            s1 += v;
+            s2 += v * v;
+        }
+        let mf = m as f64;
+        for i in 0..cnt {
+            if i > 0 {
+                let out = t[i - 1];
+                let inn = t[i + m - 1];
+                s1 += inn - out;
+                s2 += inn * inn - out * out;
+            }
+            let mean = s1 / mf;
+            let var = (s2 / mf - mean * mean).max(0.0);
+            mu.push(mean);
+            sig.push(var.sqrt().max(SIGMA_FLOOR));
+        }
+        // One re-accumulation pass every few thousand slides would guard
+        // drift; for n <= 2^24 and the magnitudes exercised here the drift
+        // is < 1e-9 relative (property-tested), so we keep the single pass.
+        Self { m, mu, sig }
+    }
+
+    /// Reference implementation: direct two-pass mean/std per window.
+    pub fn naive(t: &[f64], m: usize) -> Self {
+        assert!(m >= 2 && m <= t.len());
+        let cnt = t.len() - m + 1;
+        let mut mu = Vec::with_capacity(cnt);
+        let mut sig = Vec::with_capacity(cnt);
+        for i in 0..cnt {
+            let w = &t[i..i + m];
+            let mean = w.iter().sum::<f64>() / m as f64;
+            let ms = w.iter().map(|&x| x * x).sum::<f64>() / m as f64;
+            let var = (ms - mean * mean).max(0.0);
+            mu.push(mean);
+            sig.push(var.sqrt().max(SIGMA_FLOOR));
+        }
+        Self { m, mu, sig }
+    }
+
+    /// Number of live windows.
+    pub fn len(&self) -> usize {
+        self.mu.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mu.is_empty()
+    }
+
+    /// Recurrent update `m -> m+1` (Eqs. 7/8), in place.
+    ///
+    /// After the call the vectors have one fewer live entry.  `t` must be
+    /// the same series the stats were computed from.
+    pub fn advance(&mut self, t: &[f64]) {
+        let m = self.m as f64;
+        let m1 = m + 1.0;
+        let cnt = self.len() - 1;
+        for i in 0..cnt {
+            let tn = t[i + self.m];
+            let mu = self.mu[i];
+            let sig = self.sig[i];
+            self.mu[i] = (m * mu + tn) / m1;
+            let d = mu - tn;
+            let var = (m / m1) * (sig * sig + d * d / m1);
+            self.sig[i] = var.max(0.0).sqrt().max(SIGMA_FLOOR);
+        }
+        self.mu.truncate(cnt);
+        self.sig.truncate(cnt);
+        self.m += 1;
+    }
+
+    /// Copy a `[start, start+len)` slice of the stats into f32 buffers,
+    /// padding past-the-end with (mu=0, sig=1) — the neutral values the
+    /// tile kernel expects for invalid windows.
+    pub fn slice_f32(&self, start: usize, len: usize, mu_out: &mut [f32], sig_out: &mut [f32]) {
+        assert!(mu_out.len() >= len && sig_out.len() >= len);
+        for k in 0..len {
+            let i = start + k;
+            if i < self.len() {
+                mu_out[k] = self.mu[i] as f32;
+                sig_out[k] = self.sig[i] as f32;
+            } else {
+                mu_out[k] = 0.0;
+                sig_out[k] = 1.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn compute_matches_naive_random_walk() {
+        let mut rng = Rng::seed(7);
+        let t: Vec<f64> = {
+            let mut acc = 0.0;
+            (0..500)
+                .map(|_| {
+                    acc += rng.normal();
+                    acc
+                })
+                .collect()
+        };
+        for m in [2, 3, 16, 100, 499, 500] {
+            let a = RollingStats::compute(&t, m);
+            let b = RollingStats::naive(&t, m);
+            assert_eq!(a.len(), b.len());
+            for i in 0..a.len() {
+                assert!(close(a.mu[i], b.mu[i], 1e-10), "mu m={m} i={i}");
+                assert!(close(a.sig[i], b.sig[i], 1e-8), "sig m={m} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn advance_matches_fresh_compute() {
+        let mut rng = Rng::seed(42);
+        let t: Vec<f64> = (0..300).map(|_| rng.normal() * 10.0 + 5.0).collect();
+        let mut s = RollingStats::compute(&t, 8);
+        for m in 9..=40 {
+            s.advance(&t);
+            let fresh = RollingStats::naive(&t, m);
+            assert_eq!(s.m, m);
+            assert_eq!(s.len(), fresh.len());
+            for i in 0..s.len() {
+                assert!(close(s.mu[i], fresh.mu[i], 1e-9), "mu m={m} i={i}");
+                assert!(close(s.sig[i], fresh.sig[i], 1e-7), "sig m={m} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_floor_on_constant_series() {
+        let t = vec![3.25; 64];
+        let s = RollingStats::compute(&t, 8);
+        for &x in &s.sig {
+            assert_eq!(x, SIGMA_FLOOR);
+        }
+        let s = RollingStats::naive(&t, 8);
+        for &x in &s.sig {
+            assert_eq!(x, SIGMA_FLOOR);
+        }
+    }
+
+    #[test]
+    fn advance_shrinks_by_one() {
+        let t: Vec<f64> = (0..50).map(|x| (x as f64).sin()).collect();
+        let mut s = RollingStats::compute(&t, 4);
+        assert_eq!(s.len(), 47);
+        s.advance(&t);
+        assert_eq!(s.len(), 46);
+        assert_eq!(s.m, 5);
+    }
+
+    #[test]
+    fn slice_f32_pads_neutral() {
+        let t: Vec<f64> = (0..20).map(|x| x as f64).collect();
+        let s = RollingStats::compute(&t, 4);
+        let mut mu = [0f32; 8];
+        let mut sig = [0f32; 8];
+        s.slice_f32(s.len() - 2, 8, &mut mu, &mut sig);
+        assert!(mu[0] != 0.0 && mu[1] != 0.0);
+        for k in 2..8 {
+            assert_eq!(mu[k], 0.0);
+            assert_eq!(sig[k], 1.0);
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Top-k discord selection.
+//!
+//! DRAG returns *all* range discords (subsequences whose nearest non-self
+//! match is at distance >= r).  MERLIN's callers usually want the top-k
+//! per length: the k mutually non-overlapping survivors with the largest
+//! nearest-neighbor distances (§2.1, top-k generalization).
+
+use super::windows::non_overlapping;
+
+/// One scored subsequence (index + nearest-neighbor distance, ED units).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scored {
+    pub idx: usize,
+    pub nn_dist: f64,
+}
+
+/// Pick the top-k mutually non-overlapping scored subsequences.
+///
+/// `k = 0` means "all survivors" (still de-overlapped) — used when
+/// collecting every discord for the heatmap.
+pub fn top_k_non_overlapping(items: &[Scored], m: usize, k: usize) -> Vec<Scored> {
+    let pairs: Vec<(usize, f64)> = items.iter().map(|s| (s.idx, s.nn_dist)).collect();
+    let kept = non_overlapping(pairs, m);
+    let take = if k == 0 { kept.len() } else { k.min(kept.len()) };
+    kept[..take].iter().map(|&(idx, nn_dist)| Scored { idx, nn_dist }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(idx: usize, d: f64) -> Scored {
+        Scored { idx, nn_dist: d }
+    }
+
+    #[test]
+    fn picks_k_best() {
+        let items = vec![s(0, 1.0), s(100, 9.0), s(200, 5.0), s(300, 7.0)];
+        let got = top_k_non_overlapping(&items, 10, 2);
+        assert_eq!(got, vec![s(100, 9.0), s(300, 7.0)]);
+    }
+
+    #[test]
+    fn k_zero_returns_all_deoverlapped() {
+        let items = vec![s(0, 1.0), s(1, 2.0), s(50, 3.0)];
+        let got = top_k_non_overlapping(&items, 5, 0);
+        assert_eq!(got, vec![s(50, 3.0), s(1, 2.0)]);
+    }
+
+    #[test]
+    fn overlapping_survivors_deduped() {
+        let items = vec![s(10, 5.0), s(11, 4.9), s(12, 4.8)];
+        let got = top_k_non_overlapping(&items, 3, 3);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], s(10, 5.0));
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(top_k_non_overlapping(&[], 4, 3).is_empty());
+    }
+}

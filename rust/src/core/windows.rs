@@ -1,0 +1,74 @@
+//! Subsequence-window helpers: overlap predicates and index arithmetic
+//! shared by the coordinator, the baselines, and the tests.
+
+/// Do the `m`-windows starting at `i` and `j` trivially match
+/// (overlap), i.e. is `|i - j| < m`?  Non-self matches require
+/// `|i - j| >= m` (§2.1).
+#[inline]
+pub fn overlaps(i: usize, j: usize, m: usize) -> bool {
+    i.abs_diff(j) < m
+}
+
+/// Number of `m`-windows in an `n`-length series.
+#[inline]
+pub fn window_count(n: usize, m: usize) -> usize {
+    if m == 0 || m > n {
+        0
+    } else {
+        n - m + 1
+    }
+}
+
+/// Greedily filter `(index, score)` pairs (sorted by caller) so that kept
+/// indices are mutually non-overlapping for window length `m`.
+pub fn non_overlapping(mut items: Vec<(usize, f64)>, m: usize) -> Vec<(usize, f64)> {
+    // Stable on equal scores: sort by (score desc, index asc).
+    items.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut kept: Vec<(usize, f64)> = Vec::new();
+    'outer: for (i, s) in items {
+        for &(j, _) in &kept {
+            if overlaps(i, j, m) {
+                continue 'outer;
+            }
+        }
+        kept.push((i, s));
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_predicate() {
+        assert!(overlaps(10, 10, 1));
+        assert!(overlaps(10, 12, 3));
+        assert!(!overlaps(10, 13, 3));
+        assert!(!overlaps(13, 10, 3));
+        assert!(overlaps(0, 4, 5));
+    }
+
+    #[test]
+    fn window_count_edges() {
+        assert_eq!(window_count(10, 3), 8);
+        assert_eq!(window_count(10, 10), 1);
+        assert_eq!(window_count(10, 11), 0);
+        assert_eq!(window_count(0, 3), 0);
+    }
+
+    #[test]
+    fn non_overlapping_keeps_best() {
+        let items = vec![(0, 1.0), (2, 5.0), (10, 3.0), (11, 4.0)];
+        let kept = non_overlapping(items, 4);
+        // 2 (5.0) kills 0; 11 (4.0) kills 10.
+        assert_eq!(kept, vec![(2, 5.0), (11, 4.0)]);
+    }
+
+    #[test]
+    fn non_overlapping_tie_breaks_by_index() {
+        let items = vec![(5, 2.0), (1, 2.0)];
+        let kept = non_overlapping(items, 10);
+        assert_eq!(kept, vec![(1, 2.0)]);
+    }
+}

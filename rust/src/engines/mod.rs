@@ -1,0 +1,71 @@
+//! Tile-computation engines.
+//!
+//! The PD3 coordinator is engine-agnostic: it schedules (segment, chunk)
+//! tile tasks and folds the reduced results into its bitmaps.  Two
+//! implementations exist:
+//!
+//! - [`native::NativeEngine`] — pure rust, thread-pooled, `f64`
+//!   throughout; the correctness oracle and the CPU-performance baseline.
+//! - [`xla::XlaEngine`] — the AOT path: Pallas/JAX-compiled HLO executed
+//!   via PJRT, exactly what would run on a TPU (interpret-lowered here).
+
+pub mod native;
+pub mod xla;
+
+use anyhow::Result;
+
+use crate::core::stats::RollingStats;
+use crate::runtime::types::TileOutputs;
+
+/// One (segment, chunk) pair to evaluate at the current length `m`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileTask {
+    /// Global index of the segment's first subsequence.
+    pub seg_start: usize,
+    /// Global index of the chunk's first subsequence.
+    pub chunk_start: usize,
+}
+
+/// Read-only view of the series + current-length stats handed to engines.
+pub struct SeriesView<'a> {
+    pub t: &'a [f64],
+    pub stats: &'a RollingStats,
+}
+
+impl SeriesView<'_> {
+    /// Number of valid `m`-windows.
+    pub fn n_windows(&self) -> usize {
+        self.stats.len()
+    }
+}
+
+/// A tile-computation backend.
+pub trait Engine: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Tile edge (the paper's `segN`): every task covers
+    /// `[start, start + segn)` subsequences on each side.
+    fn segn(&self) -> usize;
+
+    /// Largest subsequence length this engine can serve.
+    fn max_m(&self) -> usize;
+
+    /// Evaluate a batch of tiles at subsequence length `view.stats.m`
+    /// with squared threshold `r2`.  Results are index-aligned to `tasks`.
+    fn compute_tiles(
+        &self,
+        view: &SeriesView<'_>,
+        r2: f64,
+        tasks: &[TileTask],
+    ) -> Result<Vec<TileOutputs>>;
+
+    /// Run the AOT `stats_init` kernel (Eq. 4), if this engine has one.
+    fn aot_stats_init(&self, _t: &[f64], _m: usize) -> Result<RollingStats> {
+        anyhow::bail!("engine {:?} has no AOT stats kernels", self.name())
+    }
+
+    /// Run the AOT `stats_update` kernel (Eqs. 7/8), if available.
+    fn aot_stats_update(&self, _t: &[f64], _stats: &RollingStats) -> Result<RollingStats> {
+        anyhow::bail!("engine {:?} has no AOT stats kernels", self.name())
+    }
+}

@@ -1,0 +1,325 @@
+//! Pure-rust tile engine: the correctness oracle and CPU baseline.
+//!
+//! Implements the same computation as the AOT tile kernel (layer 2's
+//! `tile_min`) but in `f64` using the paper's QT diagonal recurrence
+//! (Eq. 10): the dot product of neighboring window pairs differs by one
+//! multiply-add, so a whole `segn x segn` tile costs
+//! `O(segn * m + segn^2)` instead of `O(segn^2 * m)`.
+//!
+//! Tasks in a batch run across a scoped thread pool
+//! ([`crate::util::pool::parallel_map_indexed`]); each task is
+//! independent, so the batch scales to the tile-skew limit.
+
+use anyhow::Result;
+
+use super::{Engine, SeriesView, TileTask};
+use crate::core::distance::{dot, ed2norm_from_qt, is_flat};
+use crate::runtime::types::TileOutputs;
+use crate::util::pool;
+
+/// Configuration for [`NativeEngine`].
+#[derive(Clone, Debug)]
+pub struct NativeConfig {
+    /// Tile edge (paper's `segN`).
+    pub segn: usize,
+    /// Worker threads for tile batches.
+    pub threads: usize,
+}
+
+impl Default for NativeConfig {
+    fn default() -> Self {
+        Self { segn: 256, threads: pool::default_threads() }
+    }
+}
+
+/// Pure-rust engine.
+pub struct NativeEngine {
+    cfg: NativeConfig,
+}
+
+impl NativeEngine {
+    pub fn new(cfg: NativeConfig) -> Self {
+        assert!(cfg.segn >= 1);
+        Self { cfg }
+    }
+
+    pub fn with_segn(segn: usize) -> Self {
+        Self::new(NativeConfig { segn, ..Default::default() })
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn segn(&self) -> usize {
+        self.cfg.segn
+    }
+
+    fn max_m(&self) -> usize {
+        usize::MAX
+    }
+
+    fn compute_tiles(
+        &self,
+        view: &SeriesView<'_>,
+        r2: f64,
+        tasks: &[TileTask],
+    ) -> Result<Vec<TileOutputs>> {
+        let segn = self.cfg.segn;
+        Ok(pool::parallel_map_indexed(tasks.len(), self.cfg.threads, |i| {
+            compute_tile(view, segn, r2, tasks[i])
+        }))
+    }
+}
+
+/// Evaluate one (segment, chunk) tile; see module docs.
+///
+/// Semantics identical to the AOT kernel: pairs inside the exclusion zone
+/// `|gi - gj| < m` or out of window bounds contribute `+inf` minima and
+/// never kill.
+pub fn compute_tile(view: &SeriesView<'_>, segn: usize, r2: f64, task: TileTask) -> TileOutputs {
+    let m = view.stats.m;
+    let t = view.t;
+    let nwin = view.n_windows();
+    let (ss, cs) = (task.seg_start, task.chunk_start);
+    let na = segn.min(nwin.saturating_sub(ss));
+    let nb = segn.min(nwin.saturating_sub(cs));
+
+    let mut out = TileOutputs {
+        row_min: vec![f64::INFINITY; segn],
+        col_min: vec![f64::INFINITY; segn],
+        row_kill: vec![false; segn],
+        col_kill: vec![false; segn],
+    };
+    if na == 0 || nb == 0 {
+        return out;
+    }
+
+    let mu = &view.stats.mu;
+    let sig = &view.stats.sig;
+
+    // Per-column precomputation for the fast path (reused by every row):
+    // dist = 2m - 2m * clamp((qt - (m*mu_b)*mu_a) * (1/(m*sig_b)) / sig_a).
+    let mf = m as f64;
+    let two_m = 2.0 * mf;
+    let mut mmu_b = vec![0.0f64; nb];
+    let mut inv_msig_b = vec![0.0f64; nb];
+    let mut any_flat = false;
+    for j in 0..nb {
+        let b = cs + j;
+        mmu_b[j] = mf * mu[b];
+        inv_msig_b[j] = 1.0 / (mf * sig[b]);
+        any_flat |= is_flat(sig[b], mu[b]);
+    }
+
+    // qt[j] holds dot(T[a..a+m], T[b..b+m]) for the current row's a.
+    let mut qt = vec![0.0f64; nb];
+    let mut qt_prev = vec![0.0f64; nb];
+
+    for i in 0..na {
+        let a = ss + i;
+        // Exclusion zone |a - b| < m, b = cs + j: hoist to a j-interval so
+        // the inner loop stays branch-light (perf pass; see EXPERIMENTS.md
+        // §Perf for the before/after).
+        let jlo = (a + 1).saturating_sub(m).saturating_sub(cs).min(nb); // first excluded
+        let jhi = (a + m).saturating_sub(cs).min(nb); // one past last excluded
+
+        let mu_a = mu[a];
+        let sig_a = sig[a];
+        let inv_sig_a = 1.0 / sig_a;
+        let mut rmin = f64::INFINITY;
+        let mut rkill = false;
+        let general = any_flat || is_flat(sig_a, mu_a);
+
+        if i == 0 {
+            // Seed row: direct dot products, O(nb * m).
+            let wa = &t[a..a + m];
+            for (j, q) in qt.iter_mut().enumerate() {
+                let b = cs + j;
+                *q = dot(wa, &t[b..b + m]);
+            }
+        } else {
+            // Diagonal recurrence (Eq. 10): O(1) per cell, branch-free,
+            // vectorizable (kept as its own pass — fusing it with the
+            // distance loop measured slower; EXPERIMENTS.md §Perf).
+            let head = t[a - 1];
+            let tail = t[a + m - 1];
+            qt[0] = dot(&t[a..a + m], &t[cs..cs + m]);
+            for j in 1..nb {
+                let b = cs + j;
+                qt[j] = qt_prev[j - 1] + tail * t[b + m - 1] - head * t[b - 1];
+            }
+        }
+
+        let mut cell = |j: usize, rmin: &mut f64, rkill: &mut bool| {
+            let d = if general {
+                let b = cs + j;
+                ed2norm_from_qt(qt[j], m, mu_a, sig_a, mu[b], sig[b])
+            } else {
+                // dist = 2m * (1 - clamp((qt - (m*mu_b)*mu_a) / (m*sig_b*sig_a)))
+                let corr = (qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a);
+                two_m * (1.0 - corr.clamp(-1.0, 1.0))
+            };
+            if d < *rmin {
+                *rmin = d;
+            }
+            if d < out.col_min[j] {
+                out.col_min[j] = d;
+            }
+            if d < r2 {
+                *rkill = true;
+                out.col_kill[j] = true;
+            }
+        };
+        for j in 0..jlo {
+            cell(j, &mut rmin, &mut rkill);
+        }
+        for j in jhi..nb {
+            cell(j, &mut rmin, &mut rkill);
+        }
+        out.row_min[i] = rmin;
+        out.row_kill[i] = rkill;
+        std::mem::swap(&mut qt, &mut qt_prev);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::ed2norm;
+    use crate::core::stats::RollingStats;
+    use crate::util::rng::Rng;
+
+    /// Brute-force oracle mirroring `ref.dist_tile_ref` in python.
+    fn oracle(t: &[f64], ss: usize, cs: usize, segn: usize, m: usize, r2: f64) -> TileOutputs {
+        let nwin = t.len() - m + 1;
+        let mut out = TileOutputs {
+            row_min: vec![f64::INFINITY; segn],
+            col_min: vec![f64::INFINITY; segn],
+            row_kill: vec![false; segn],
+            col_kill: vec![false; segn],
+        };
+        for i in 0..segn {
+            let a = ss + i;
+            if a >= nwin {
+                continue;
+            }
+            for j in 0..segn {
+                let b = cs + j;
+                if b >= nwin || a.abs_diff(b) < m {
+                    continue;
+                }
+                let d = ed2norm(&t[a..a + m], &t[b..b + m]);
+                out.row_min[i] = out.row_min[i].min(d);
+                out.col_min[j] = out.col_min[j].min(d);
+                if d < r2 {
+                    out.row_kill[i] = true;
+                    out.col_kill[j] = true;
+                }
+            }
+        }
+        out
+    }
+
+    fn check(t: &[f64], ss: usize, cs: usize, segn: usize, m: usize, r2: f64) {
+        let stats = RollingStats::compute(t, m);
+        let view = SeriesView { t, stats: &stats };
+        let got = compute_tile(&view, segn, r2, TileTask { seg_start: ss, chunk_start: cs });
+        let want = oracle(t, ss, cs, segn, m, r2);
+        for k in 0..segn {
+            let (g, w) = (got.row_min[k], want.row_min[k]);
+            assert_eq!(g.is_finite(), w.is_finite(), "row {k} finiteness");
+            if w.is_finite() {
+                assert!((g - w).abs() < 1e-6 * (1.0 + w), "row {k}: {g} vs {w}");
+            }
+            let (g, w) = (got.col_min[k], want.col_min[k]);
+            assert_eq!(g.is_finite(), w.is_finite(), "col {k} finiteness");
+            if w.is_finite() {
+                assert!((g - w).abs() < 1e-6 * (1.0 + w), "col {k}: {g} vs {w}");
+            }
+            assert_eq!(got.row_kill[k], want.row_kill[k], "row_kill {k}");
+            assert_eq!(got.col_kill[k], want.col_kill[k], "col_kill {k}");
+        }
+    }
+
+    fn random_walk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed(seed);
+        let mut acc = 0.0;
+        (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_oracle_disjoint_tiles() {
+        let t = random_walk(400, 1);
+        check(&t, 0, 128, 32, 24, 10.0);
+        check(&t, 64, 300, 32, 24, 20.0);
+    }
+
+    #[test]
+    fn matches_oracle_self_tile_with_exclusion() {
+        let t = random_walk(300, 2);
+        check(&t, 40, 40, 48, 16, 8.0);
+    }
+
+    #[test]
+    fn matches_oracle_overlapping_tiles() {
+        let t = random_walk(300, 3);
+        // Chunk starting inside the segment (partial exclusion).
+        check(&t, 50, 70, 32, 25, 12.0);
+        // Chunk to the LEFT of the segment (refinement phase).
+        check(&t, 120, 30, 32, 25, 12.0);
+    }
+
+    #[test]
+    fn matches_oracle_at_series_edge() {
+        let t = random_walk(150, 4);
+        // Tail tile: fewer than segn valid windows on both sides.
+        check(&t, 100, 120, 32, 20, 5.0);
+    }
+
+    #[test]
+    fn empty_when_out_of_bounds() {
+        let t = random_walk(100, 5);
+        let stats = RollingStats::compute(&t, 10);
+        let view = SeriesView { t: &t, stats: &stats };
+        let out = compute_tile(&view, 16, 1.0, TileTask { seg_start: 95, chunk_start: 0 });
+        assert!(out.row_min.iter().all(|x| x.is_infinite()));
+    }
+
+    #[test]
+    fn batch_api_matches_single() {
+        let t = random_walk(500, 6);
+        let stats = RollingStats::compute(&t, 32);
+        let view = SeriesView { t: &t, stats: &stats };
+        let engine = NativeEngine::with_segn(64);
+        let tasks = vec![
+            TileTask { seg_start: 0, chunk_start: 0 },
+            TileTask { seg_start: 0, chunk_start: 64 },
+            TileTask { seg_start: 128, chunk_start: 300 },
+        ];
+        let batch = engine.compute_tiles(&view, 9.0, &tasks).unwrap();
+        for (k, task) in tasks.iter().enumerate() {
+            let single = compute_tile(&view, 64, 9.0, *task);
+            assert_eq!(batch[k].row_min, single.row_min);
+            assert_eq!(batch[k].col_kill, single.col_kill);
+        }
+    }
+
+    #[test]
+    fn constant_regions_finite() {
+        // Stuck sensor: long constant run (PolyTER case study §5).
+        let mut t = random_walk(200, 7);
+        for v in &mut t[50..120] {
+            *v = 42.0;
+        }
+        check(&t, 32, 96, 32, 16, 4.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! AOT engine: tiles evaluated by the Pallas/JAX-compiled HLO artifacts
+//! through the PJRT executor actor.
+//!
+//! This is the production path of the three-layer architecture: the same
+//! executable that would run on a TPU (here interpret-lowered for the CPU
+//! PJRT plugin) is loaded once and invoked per tile.  The engine's job is
+//! marshalling: slicing the raw series and the `f64` stats into the fixed
+//! `f32` buffers the artifact expects.
+
+use anyhow::Result;
+
+use super::{Engine, SeriesView, TileTask};
+use crate::runtime::artifact::ArtifactSet;
+use crate::runtime::executor::Executor;
+use crate::runtime::types::{TileInputs, TileOutputs, TileShape};
+
+/// PJRT-backed engine.
+///
+/// Holds `shards` executor actors (each owns its own `PjRtClient` and
+/// compiled-executable cache); tile batches are split across the shards
+/// so PJRT executions overlap.  One shard handles the (cheap, O(n))
+/// stats kernels.  Sharding was the single biggest win of the L3 perf
+/// pass (see EXPERIMENTS.md §Perf): one actor serializes every tile.
+pub struct XlaEngine {
+    executors: Vec<Executor>,
+    artifacts: ArtifactSet,
+    segn: usize,
+    max_m: usize,
+}
+
+/// Default executor shard count: enough to overlap PJRT call overhead
+/// without oversubscribing XLA's own intra-op thread pool.
+pub fn default_shards() -> usize {
+    (std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4) / 4).clamp(1, 4)
+}
+
+impl XlaEngine {
+    /// Start an engine over an artifact directory with the given tile edge
+    /// (`segn` must be one of the compiled buckets).
+    pub fn new(artifacts: ArtifactSet, segn: usize) -> Result<Self> {
+        Self::with_shards(artifacts, segn, default_shards())
+    }
+
+    /// Explicit shard count (benches sweep this).
+    pub fn with_shards(artifacts: ArtifactSet, segn: usize, shards: usize) -> Result<Self> {
+        let max_m = artifacts
+            .max_m_for_segn(segn)
+            .ok_or_else(|| anyhow::anyhow!("no tile artifacts with segn={segn}"))?;
+        let executors = (0..shards.max(1))
+            .map(|_| Executor::start(artifacts.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { executors, artifacts, segn, max_m })
+    }
+
+    /// Access to an underlying executor (stats kernels, tests).
+    pub fn executor(&self) -> &Executor {
+        &self.executors[0]
+    }
+
+    pub fn artifacts(&self) -> &ArtifactSet {
+        &self.artifacts
+    }
+
+    /// Build the fixed-shape input buffers for one task.
+    fn marshal(&self, view: &SeriesView<'_>, shape: TileShape, r2: f64, task: TileTask) -> TileInputs {
+        let src_len = shape.src_len();
+        let t = view.t;
+        let stats = view.stats;
+        let nwin = view.n_windows();
+
+        let slice_f32 = |start: usize| -> Vec<f32> {
+            let mut out = vec![0f32; src_len];
+            if start < t.len() {
+                let avail = (t.len() - start).min(src_len);
+                for (o, &v) in out[..avail].iter_mut().zip(&t[start..start + avail]) {
+                    *o = v as f32;
+                }
+            }
+            out
+        };
+
+        let mut mu_a = vec![0f32; shape.segn];
+        let mut sig_a = vec![1f32; shape.segn];
+        let mut mu_b = vec![0f32; shape.segn];
+        let mut sig_b = vec![1f32; shape.segn];
+        stats.slice_f32(task.seg_start, shape.segn, &mut mu_a, &mut sig_a);
+        stats.slice_f32(task.chunk_start, shape.segn, &mut mu_b, &mut sig_b);
+
+        let na = shape.segn.min(nwin.saturating_sub(task.seg_start));
+        let nb = shape.segn.min(nwin.saturating_sub(task.chunk_start));
+
+        TileInputs {
+            seg_src: slice_f32(task.seg_start),
+            chunk_src: slice_f32(task.chunk_start),
+            mu_a,
+            sig_a,
+            mu_b,
+            sig_b,
+            m: stats.m as i32,
+            delta: task.chunk_start as i32 - task.seg_start as i32,
+            na: na as i32,
+            nb: nb as i32,
+            r2: r2 as f32,
+        }
+    }
+}
+
+impl XlaEngine {
+    /// Pad `t` (downcast to f32) to the stats bucket >= n.
+    fn padded_t(&self, t: &[f64], nmax: usize) -> Vec<f32> {
+        let mut out = vec![0f32; nmax];
+        for (o, &v) in out.iter_mut().zip(t) {
+            *o = v as f32;
+        }
+        out
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn segn(&self) -> usize {
+        self.segn
+    }
+
+    fn max_m(&self) -> usize {
+        self.max_m
+    }
+
+    fn compute_tiles(
+        &self,
+        view: &SeriesView<'_>,
+        r2: f64,
+        tasks: &[TileTask],
+    ) -> Result<Vec<TileOutputs>> {
+        let shape = self.artifacts.select_tile(self.segn, view.stats.m)?;
+        // Split the batch across executor shards; each shard's sub-batch
+        // runs on its own PJRT client concurrently.
+        let shards = self.executors.len().min(tasks.len()).max(1);
+        let chunk = tasks.len().div_ceil(shards);
+        let mut results: Vec<Result<Vec<TileOutputs>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..shards)
+                .map(|s| {
+                    let lo = s * chunk;
+                    let hi = ((s + 1) * chunk).min(tasks.len());
+                    let exec = &self.executors[s];
+                    let slice = &tasks[lo..hi];
+                    scope.spawn(move || {
+                        let inputs: Vec<TileInputs> = slice
+                            .iter()
+                            .map(|&task| self.marshal(view, shape, r2, task))
+                            .collect();
+                        exec.tile_batch(shape, inputs)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
+        });
+        let mut out = Vec::with_capacity(tasks.len());
+        for r in results.drain(..) {
+            out.extend(r?);
+        }
+        // The artifact's SEGN may exceed the engine's logical segn only if
+        // select_tile returned a larger bucket; truncate defensively.
+        for o in &mut out {
+            o.row_min.truncate(self.segn);
+            o.col_min.truncate(self.segn);
+            o.row_kill.truncate(self.segn);
+            o.col_kill.truncate(self.segn);
+        }
+        Ok(out)
+    }
+
+    fn aot_stats_init(&self, t: &[f64], m: usize) -> Result<crate::core::stats::RollingStats> {
+        let nmax = self.artifacts.select_stats(t.len())?;
+        let (mut mu, mut sig) = self.executor().stats_init(nmax, self.padded_t(t, nmax), m as i32)?;
+        let nwin = t.len() + 1 - m;
+        mu.truncate(nwin);
+        sig.truncate(nwin);
+        Ok(crate::core::stats::RollingStats { m, mu, sig })
+    }
+
+    fn aot_stats_update(
+        &self,
+        t: &[f64],
+        stats: &crate::core::stats::RollingStats,
+    ) -> Result<crate::core::stats::RollingStats> {
+        let nmax = self.artifacts.select_stats(t.len())?;
+        let mut mu = stats.mu.clone();
+        let mut sig = stats.sig.clone();
+        mu.resize(nmax, 0.0);
+        sig.resize(nmax, 1.0);
+        let (mut mu2, mut sig2) =
+            self.executor().stats_update(nmax, self.padded_t(t, nmax), mu, sig, stats.m as i32)?;
+        let m2 = stats.m + 1;
+        let nwin = t.len() + 1 - m2;
+        mu2.truncate(nwin);
+        sig2.truncate(nwin);
+        Ok(crate::core::stats::RollingStats { m: m2, mu: mu2, sig: sig2 })
+    }
+}

@@ -1,0 +1,114 @@
+//! Synthetic electrocardiogram — surrogate for the ECG / ECG-2 /
+//! Koski-ECG traces (Tab. 1).
+//!
+//! Each beat is a sum of Gaussian bumps approximating the P-QRS-T complex
+//! (the standard ECG phantom construction); beat-to-beat interval and
+//! amplitude jitter make normal beats near-but-not-exactly repeating, so
+//! nearest-neighbor distances behave like the real recordings'.
+//! [`ecg_with_pvc`] plants premature ventricular contractions: wide,
+//! inverted beats — the canonical ECG discord.
+
+use crate::core::series::TimeSeries;
+use crate::util::rng::Rng;
+
+/// One P-QRS-T complex sampled at offset `x` in [0, 1) of the beat.
+fn beat_waveform(x: f64, amp: f64, width_scale: f64) -> f64 {
+    // (center, sigma, amplitude) per wave, in beat-relative units.
+    const WAVES: [(f64, f64, f64); 5] = [
+        (0.18, 0.025, 0.15),  // P
+        (0.345, 0.010, -0.12), // Q
+        (0.37, 0.012, 1.0),   // R
+        (0.395, 0.010, -0.25), // S
+        (0.60, 0.040, 0.30),  // T
+    ];
+    let mut v = 0.0;
+    for (c, s, a) in WAVES {
+        let s = s * width_scale;
+        let d = (x - c) / s;
+        v += a * (-0.5 * d * d).exp();
+    }
+    amp * v
+}
+
+/// Normal synthetic ECG: `n` samples at `fs` Hz, ~`bpm` beats/minute.
+pub fn ecg(n: usize, fs: f64, bpm: f64, seed: u64) -> TimeSeries {
+    ecg_with_pvc(n, fs, bpm, &[], seed)
+}
+
+/// Synthetic ECG with premature (PVC-like) beats planted at the given
+/// beat numbers.  Returns the series; the sample position of beat `k` is
+/// approximately `k * fs * 60 / bpm`.
+pub fn ecg_with_pvc(n: usize, fs: f64, bpm: f64, pvc_beats: &[usize], seed: u64) -> TimeSeries {
+    let mut rng = Rng::seed(seed);
+    let mut values = vec![0.0; n];
+    let nominal = fs * 60.0 / bpm; // samples per beat
+    let mut beat_start = 0.0f64;
+    let mut beat_no = 0usize;
+    while (beat_start as usize) < n {
+        let is_pvc = pvc_beats.contains(&beat_no);
+        // Beat-to-beat jitter, clamped so no *normal* beat becomes an
+        // accidental discord (unclamped Gaussian tails occasionally produce
+        // a one-off stretched beat that out-scores the planted PVC).
+        let jit = (0.02 * rng.normal()).clamp(-0.035, 0.035);
+        let period = nominal * (1.0 + jit) * if is_pvc { 0.75 } else { 1.0 };
+        let amp = 1.0 + (0.05 * rng.normal()).clamp(-0.1, 0.1);
+        let (amp, width) = if is_pvc { (-1.4 * amp, 3.0) } else { (amp, 1.0) };
+        let start = beat_start as usize;
+        let len = period as usize;
+        for k in 0..len {
+            let i = start + k;
+            if i >= n {
+                break;
+            }
+            values[i] += beat_waveform(k as f64 / period, amp, width);
+        }
+        beat_start += period;
+        beat_no += 1;
+    }
+    // Baseline wander + measurement noise.
+    for (i, v) in values.iter_mut().enumerate() {
+        *v += 0.05 * (2.0 * std::f64::consts::PI * i as f64 / (fs * 7.0)).sin();
+        *v += 0.01 * rng.normal();
+    }
+    TimeSeries::new(format!("ecg_{n}"), values)
+}
+
+/// Approximate sample index of beat `k`.
+pub fn beat_sample(fs: f64, bpm: f64, k: usize) -> usize {
+    (k as f64 * fs * 60.0 / bpm) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_structure() {
+        let fs = 128.0;
+        let t = ecg(4096, fs, 60.0, 1);
+        assert_eq!(t.len(), 4096);
+        // R peaks ~1.0 per second: count samples above 0.6.
+        let peaks = t.values.windows(3).filter(|w| w[1] > 0.6 && w[1] >= w[0] && w[1] >= w[2]).count();
+        let seconds = 4096.0 / fs;
+        assert!(
+            (peaks as f64) > 0.7 * seconds && (peaks as f64) < 1.6 * seconds,
+            "peaks={peaks} over {seconds}s"
+        );
+    }
+
+    #[test]
+    fn pvc_beat_is_inverted() {
+        let fs = 128.0;
+        let pvc = 10;
+        let t = ecg_with_pvc(4096, fs, 60.0, &[pvc], 2);
+        let s = beat_sample(fs, 60.0, pvc);
+        let e = (s + 128).min(t.len());
+        let min_in_pvc = t.values[s..e].iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min_in_pvc < -0.8, "PVC negative peak missing: {min_in_pvc}");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(ecg(1000, 128.0, 70.0, 3).values, ecg(1000, 128.0, 70.0, 3).values);
+    }
+}

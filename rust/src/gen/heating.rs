@@ -1,0 +1,127 @@
+//! Synthetic smart-heating (PolyTER-like) lecture-hall temperature trace —
+//! the case-study workload of §5: one year at 4 samples/hour (n = 35040),
+//! with planted anomalies mirroring the paper's top-6 discoveries:
+//! three long stuck-sensor plateaus, two short sensor dropouts, and one
+//! period of inefficient heating mode.
+
+use crate::core::series::TimeSeries;
+use crate::util::rng::Rng;
+
+/// Samples per day (15-minute cadence).
+pub const SAMPLES_PER_DAY: usize = 96;
+/// One year.
+pub const YEAR: usize = 365 * SAMPLES_PER_DAY; // 35040
+
+/// A planted anomaly (ground truth for the case study).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlantedAnomaly {
+    pub start: usize,
+    pub len: usize,
+    pub kind: HeatingAnomaly,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeatingAnomaly {
+    /// Sensor outputs one constant value for a long stretch.
+    StuckSensor,
+    /// Short dropout: a spike to a bogus constant.
+    ShortDropout,
+    /// Heating set to an inefficient regime (offset mean + weak schedule).
+    InefficientMode,
+}
+
+/// The case-study trace with the standard anomaly set.
+pub fn heating_year(seed: u64) -> (TimeSeries, Vec<PlantedAnomaly>) {
+    let anomalies = vec![
+        PlantedAnomaly { start: 30 * SAMPLES_PER_DAY, len: 5 * SAMPLES_PER_DAY, kind: HeatingAnomaly::StuckSensor },
+        PlantedAnomaly { start: 150 * SAMPLES_PER_DAY, len: 3 * SAMPLES_PER_DAY, kind: HeatingAnomaly::StuckSensor },
+        PlantedAnomaly { start: 300 * SAMPLES_PER_DAY, len: 4 * SAMPLES_PER_DAY, kind: HeatingAnomaly::StuckSensor },
+        PlantedAnomaly { start: 90 * SAMPLES_PER_DAY + 40, len: 10, kind: HeatingAnomaly::ShortDropout },
+        PlantedAnomaly { start: 200 * SAMPLES_PER_DAY + 60, len: 14, kind: HeatingAnomaly::ShortDropout },
+        PlantedAnomaly { start: 250 * SAMPLES_PER_DAY, len: 6 * SAMPLES_PER_DAY, kind: HeatingAnomaly::InefficientMode },
+    ];
+    (heating(YEAR, &anomalies, seed), anomalies)
+}
+
+/// Generate `n` samples of lecture-hall temperature with planted anomalies.
+pub fn heating(n: usize, anomalies: &[PlantedAnomaly], seed: u64) -> TimeSeries {
+    let mut rng = Rng::seed(seed);
+    let mut values = Vec::with_capacity(n);
+    // Outdoor temperature: annual sinusoid + day/night + weather noise.
+    let mut weather = 0.0f64;
+    for i in 0..n {
+        let day = i / SAMPLES_PER_DAY;
+        let tod = (i % SAMPLES_PER_DAY) as f64 / SAMPLES_PER_DAY as f64; // time of day
+        let season = -12.0 * (2.0 * std::f64::consts::PI * (day as f64 - 15.0) / 365.0).cos();
+        weather += 0.02 * rng.normal() - 0.002 * weather;
+        let outdoor = 6.0 + season + 4.0 * (2.0 * std::f64::consts::PI * (tod - 0.6)).sin() + weather;
+
+        // Indoor control: setpoint schedule (occupied 8-18h on workdays).
+        let weekday = day % 7 < 5;
+        let occupied = weekday && (0.33..0.75).contains(&tod);
+        let setpoint = if occupied { 21.5 } else { 17.0 };
+        // First-order coupling to outdoor + control tracking.
+        let coupling = 0.12 * (outdoor - setpoint);
+        let indoor = setpoint + coupling + 0.35 * rng.normal();
+        values.push(indoor);
+    }
+    // Apply anomalies.
+    for a in anomalies {
+        let end = (a.start + a.len).min(n);
+        match a.kind {
+            HeatingAnomaly::StuckSensor => {
+                let v = values[a.start];
+                for x in &mut values[a.start..end] {
+                    *x = v;
+                }
+            }
+            HeatingAnomaly::ShortDropout => {
+                for x in &mut values[a.start..end] {
+                    *x = 0.0; // sensor reports 0 C
+                }
+            }
+            HeatingAnomaly::InefficientMode => {
+                for (k, x) in values[a.start..end].iter_mut().enumerate() {
+                    // Overheated nights, flattened schedule.
+                    let tod = ((a.start + k) % SAMPLES_PER_DAY) as f64 / SAMPLES_PER_DAY as f64;
+                    *x = 23.5 + 1.0 * (2.0 * std::f64::consts::PI * tod).sin() + 0.3 * rng.normal();
+                }
+            }
+        }
+    }
+    TimeSeries::new(format!("heating_{n}"), values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn year_length() {
+        let (t, anomalies) = heating_year(1);
+        assert_eq!(t.len(), 35_040);
+        assert_eq!(anomalies.len(), 6);
+    }
+
+    #[test]
+    fn stuck_region_is_constant() {
+        let (t, a) = heating_year(2);
+        let stuck = a.iter().find(|x| x.kind == HeatingAnomaly::StuckSensor).unwrap();
+        let s = &t.values[stuck.start..stuck.start + stuck.len];
+        assert!(s.iter().all(|&v| v == s[0]));
+    }
+
+    #[test]
+    fn occupied_hours_are_warmer() {
+        let t = heating(7 * SAMPLES_PER_DAY, &[], 3);
+        // Monday noon vs Monday 3am.
+        let noon = t.values[SAMPLES_PER_DAY / 2];
+        let night = t.values[SAMPLES_PER_DAY / 8];
+        assert!(noon > night + 2.0, "noon {noon} night {night}");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(heating_year(4).0.values, heating_year(4).0.values);
+    }
+}

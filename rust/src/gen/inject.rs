@@ -1,0 +1,167 @@
+//! Generic anomaly injectors: plant ground-truth subsequence anomalies
+//! into any series so accuracy (hit/miss against the planted region) can
+//! be scored — the capability the paper's real traces lack.
+
+use crate::core::series::TimeSeries;
+use crate::util::rng::Rng;
+
+/// Kinds of planted subsequence anomalies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InjectionKind {
+    /// Replace with a constant (stuck sensor).
+    Flatline,
+    /// Add a short large-amplitude spike train.
+    SpikeTrain,
+    /// Shift the level by a constant offset.
+    LevelShift,
+    /// Multiply local variability (noise burst).
+    NoiseBurst,
+    /// Time-reverse the window (shape anomaly, subtle).
+    Reversal,
+}
+
+/// A planted anomaly record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Injection {
+    pub start: usize,
+    pub len: usize,
+    pub kind: InjectionKind,
+}
+
+impl Injection {
+    /// Does a discovered discord `[idx, idx+m)` overlap this injection?
+    pub fn hit(&self, idx: usize, m: usize) -> bool {
+        let (a1, a2) = (self.start, self.start + self.len);
+        let (b1, b2) = (idx, idx + m);
+        a1 < b2 && b1 < a2
+    }
+}
+
+/// Apply an injection in place.
+pub fn inject(t: &mut TimeSeries, inj: Injection, seed: u64) {
+    let mut rng = Rng::seed(seed ^ inj.start as u64);
+    let end = (inj.start + inj.len).min(t.len());
+    let window = &mut t.values[inj.start..end];
+    match inj.kind {
+        InjectionKind::Flatline => {
+            let v = window[0];
+            for x in window.iter_mut() {
+                *x = v;
+            }
+        }
+        InjectionKind::SpikeTrain => {
+            let scale = local_scale(window);
+            for (k, x) in window.iter_mut().enumerate() {
+                *x += if k % 2 == 0 { 4.0 * scale } else { -4.0 * scale };
+            }
+        }
+        InjectionKind::LevelShift => {
+            let scale = local_scale(window);
+            for x in window.iter_mut() {
+                *x += 6.0 * scale;
+            }
+        }
+        InjectionKind::NoiseBurst => {
+            let scale = local_scale(window);
+            for x in window.iter_mut() {
+                *x += 3.0 * scale * rng.normal();
+            }
+        }
+        InjectionKind::Reversal => {
+            window.reverse();
+        }
+    }
+}
+
+fn local_scale(w: &[f64]) -> f64 {
+    let m = w.len() as f64;
+    let mu = w.iter().sum::<f64>() / m;
+    let var = w.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / m;
+    var.sqrt().max(0.05 * mu.abs()).max(1e-3)
+}
+
+/// Plant `count` non-overlapping random injections of length `len`,
+/// returning the records (sorted by start).
+pub fn inject_random(
+    t: &mut TimeSeries,
+    count: usize,
+    len: usize,
+    kinds: &[InjectionKind],
+    seed: u64,
+) -> Vec<Injection> {
+    assert!(!kinds.is_empty());
+    let mut rng = Rng::seed(seed);
+    let mut placed: Vec<Injection> = Vec::new();
+    let mut guard = 0;
+    while placed.len() < count && guard < 10_000 {
+        guard += 1;
+        let start = rng.below(t.len().saturating_sub(2 * len).max(1));
+        // Keep a len-sized buffer around existing injections.
+        if placed.iter().any(|p| start < p.start + p.len + len && p.start < start + 2 * len) {
+            continue;
+        }
+        let kind = kinds[rng.below(kinds.len())];
+        let inj = Injection { start, len, kind };
+        inject(t, inj, seed.wrapping_add(placed.len() as u64));
+        placed.push(inj);
+    }
+    placed.sort_by_key(|p| p.start);
+    placed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_walk::random_walk;
+
+    #[test]
+    fn hit_overlap_logic() {
+        let inj = Injection { start: 100, len: 20, kind: InjectionKind::Flatline };
+        assert!(inj.hit(90, 15)); // overlaps start
+        assert!(inj.hit(110, 5)); // inside
+        assert!(!inj.hit(120, 10)); // starts at end
+        assert!(!inj.hit(80, 20)); // ends at start
+    }
+
+    #[test]
+    fn flatline_flattens() {
+        let mut t = random_walk(500, 1);
+        inject(&mut t, Injection { start: 100, len: 30, kind: InjectionKind::Flatline }, 9);
+        let w = &t.values[100..130];
+        assert!(w.iter().all(|&v| v == w[0]));
+    }
+
+    #[test]
+    fn spike_train_changes_window() {
+        let mut t = random_walk(500, 2);
+        let before = t.values[200..220].to_vec();
+        inject(&mut t, Injection { start: 200, len: 20, kind: InjectionKind::SpikeTrain }, 9);
+        let diff: f64 = t.values[200..220]
+            .iter()
+            .zip(&before)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1.0);
+        // Outside untouched.
+        assert_eq!(t.values[199], random_walk(500, 2).values[199]);
+    }
+
+    #[test]
+    fn random_injections_dont_overlap() {
+        let mut t = random_walk(5000, 3);
+        let placed = inject_random(&mut t, 5, 50, &[InjectionKind::SpikeTrain], 7);
+        assert_eq!(placed.len(), 5);
+        for w in placed.windows(2) {
+            assert!(w[0].start + w[0].len <= w[1].start);
+        }
+    }
+
+    #[test]
+    fn reversal_preserves_values() {
+        let mut t = random_walk(300, 4);
+        let mut before = t.values[50..90].to_vec();
+        inject(&mut t, Injection { start: 50, len: 40, kind: InjectionKind::Reversal }, 9);
+        before.reverse();
+        assert_eq!(&t.values[50..90], &before[..]);
+    }
+}

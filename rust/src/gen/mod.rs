@@ -1,0 +1,25 @@
+//! Synthetic dataset generators — surrogates for the paper's Tab. 1.
+//!
+//! The paper evaluates on non-redistributable traces (NASA shuttle valve
+//! current, PhysioNet ECGs, Koski-ECG, respiration, Dutch power demand,
+//! PolyTER heating sensors).  None are fetchable in this offline
+//! environment, so each generator synthesizes a series with the same
+//! length, sampling character, and anomaly structure; the injectors
+//! additionally plant *ground-truth* anomalies at known positions — which
+//! real traces cannot provide — so the example programs can check that
+//! discovered discords hit the planted regions (accuracy, not just speed).
+//!
+//! Every generator is deterministic in its `u64` seed (see
+//! [`crate::util::rng::Rng`]); EXPERIMENTS.md records the seeds used.
+
+pub mod ecg;
+pub mod heating;
+pub mod inject;
+pub mod power;
+pub mod random_walk;
+pub mod registry;
+pub mod respiration;
+pub mod shuttle;
+
+pub use inject::{Injection, InjectionKind};
+pub use registry::{dataset, dataset_names, DatasetSpec};

@@ -1,0 +1,75 @@
+//! Synthetic office power demand — surrogate for the Dutch research
+//! center's 1997 consumption trace (Tab. 1, 15-min sampling, strong
+//! daily + weekly structure; anomalies are holidays/outages where a
+//! workday looks like a weekend).
+
+use crate::core::series::TimeSeries;
+use crate::util::rng::Rng;
+
+/// Samples per day at 15-minute resolution.
+pub const SAMPLES_PER_DAY: usize = 96;
+
+/// Generate `days` days of 15-min power demand.  `holiday_days` lists
+/// weekday indices that behave like weekends (the planted anomalies).
+pub fn power_demand(days: usize, holiday_days: &[usize], seed: u64) -> TimeSeries {
+    let mut rng = Rng::seed(seed);
+    let n = days * SAMPLES_PER_DAY;
+    let mut values = Vec::with_capacity(n);
+    for day in 0..days {
+        let weekday = day % 7; // 0..4 workdays, 5..6 weekend
+        let is_work = weekday < 5 && !holiday_days.contains(&day);
+        let day_amp = if is_work { 1.0 + 0.05 * rng.normal() } else { 0.25 + 0.03 * rng.normal() };
+        for s in 0..SAMPLES_PER_DAY {
+            let hour = s as f64 * 24.0 / SAMPLES_PER_DAY as f64;
+            // Occupancy curve: ramp 7-9h, plateau, lunch dip, ramp-down 17-19h.
+            let occ = smoothstep(hour, 7.0, 9.0) * (1.0 - 0.25 * gauss(hour, 12.5, 0.7))
+                * (1.0 - smoothstep(hour, 17.0, 19.5));
+            let base = 20.0; // kW baseline (HVAC, servers)
+            let load = base + 80.0 * day_amp * occ;
+            values.push(load + 1.5 * rng.normal());
+        }
+    }
+    TimeSeries::new(format!("power_{days}d"), values)
+}
+
+fn smoothstep(x: f64, lo: f64, hi: f64) -> f64 {
+    let t = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+    t * t * (3.0 - 2.0 * t)
+}
+
+fn gauss(x: f64, c: f64, s: f64) -> f64 {
+    let d = (x - c) / s;
+    (-0.5 * d * d).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weekly_structure() {
+        let t = power_demand(14, &[], 1);
+        assert_eq!(t.len(), 14 * SAMPLES_PER_DAY);
+        let day_mean = |d: usize| {
+            t.values[d * SAMPLES_PER_DAY..(d + 1) * SAMPLES_PER_DAY].iter().sum::<f64>()
+                / SAMPLES_PER_DAY as f64
+        };
+        // Workday (Mon=0) well above weekend (Sat=5).
+        assert!(day_mean(0) > 1.4 * day_mean(5), "{} vs {}", day_mean(0), day_mean(5));
+    }
+
+    #[test]
+    fn holiday_looks_like_weekend() {
+        let t = power_demand(14, &[2], 2);
+        let day_mean = |d: usize| {
+            t.values[d * SAMPLES_PER_DAY..(d + 1) * SAMPLES_PER_DAY].iter().sum::<f64>()
+                / SAMPLES_PER_DAY as f64
+        };
+        assert!(day_mean(2) < 0.6 * day_mean(1));
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(power_demand(3, &[], 9).values, power_demand(3, &[], 9).values);
+    }
+}

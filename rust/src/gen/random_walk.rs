@@ -1,0 +1,77 @@
+//! Random-walk series (Pearson 1905), the paper's synthetic workload
+//! (RandomWalk1M / RandomWalk2M, Tab. 1).
+
+use crate::core::series::TimeSeries;
+use crate::util::rng::Rng;
+
+/// Standard Gaussian random walk of length `n`.
+pub fn random_walk(n: usize, seed: u64) -> TimeSeries {
+    let mut rng = Rng::seed(seed);
+    let mut acc = 0.0;
+    let values = (0..n)
+        .map(|_| {
+            acc += rng.normal();
+            acc
+        })
+        .collect();
+    TimeSeries::new(format!("random_walk_{n}"), values)
+}
+
+/// Random walk with one planted "jitter burst" anomaly of length `len` at
+/// `at`: the walk's steps become heavy-tailed there, producing a window
+/// shape far from every other window.
+pub fn random_walk_with_anomaly(n: usize, at: usize, len: usize, seed: u64) -> TimeSeries {
+    assert!(at + len <= n);
+    let mut rng = Rng::seed(seed);
+    let mut acc = 0.0;
+    let values = (0..n)
+        .map(|i| {
+            let step = if (at..at + len).contains(&i) {
+                // Alternating large steps: a saw-tooth burst.
+                if i % 2 == 0 {
+                    3.0 + rng.normal().abs()
+                } else {
+                    -(3.0 + rng.normal().abs())
+                }
+            } else {
+                rng.normal()
+            };
+            acc += step;
+            acc
+        })
+        .collect();
+    TimeSeries::new(format!("random_walk_anom_{n}"), values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let a = random_walk(1000, 5);
+        let b = random_walk(1000, 5);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.len(), 1000);
+        let c = random_walk(1000, 6);
+        assert_ne!(a.values, c.values);
+    }
+
+    #[test]
+    fn walk_is_cumulative() {
+        let t = random_walk(10_000, 7);
+        // A random walk wanders: the range should be much wider than one
+        // step's scale.
+        let (lo, hi) = t.min_max();
+        assert!(hi - lo > 10.0);
+    }
+
+    #[test]
+    fn anomaly_region_has_larger_steps() {
+        let t = random_walk_with_anomaly(2000, 1000, 50, 8);
+        let step_mag = |r: std::ops::Range<usize>| {
+            r.map(|i| (t.values[i + 1] - t.values[i]).abs()).sum::<f64>() / 50.0
+        };
+        assert!(step_mag(1000..1050) > 2.0 * step_mag(100..150));
+    }
+}

@@ -1,0 +1,133 @@
+//! Dataset registry: the Tab. 1 roster by name, with the paper's lengths
+//! and discord lengths, backed by the synthetic surrogate generators.
+//!
+//! `dataset("ecg")` returns the surrogate series plus the experiment
+//! parameters (n, discord length) that Tab. 1 prescribes, so the benches
+//! and examples can iterate the roster exactly as the paper does.
+
+use anyhow::{bail, Result};
+
+use super::{ecg, heating, power, random_walk, respiration, shuttle};
+use crate::core::series::TimeSeries;
+
+/// One Tab. 1 row.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Series length per Tab. 1.
+    pub n: usize,
+    /// Discord length per Tab. 1 (minL = maxL in the comparison runs).
+    pub m: usize,
+    pub domain: &'static str,
+    pub series: TimeSeries,
+}
+
+/// Names in Tab. 1 order.
+pub fn dataset_names() -> &'static [&'static str] {
+    &[
+        "space_shuttle",
+        "ecg",
+        "ecg2",
+        "koski_ecg",
+        "respiration",
+        "power_demand",
+        "random_walk_1m",
+        "random_walk_2m",
+    ]
+}
+
+/// Build a Tab. 1 surrogate by name (deterministic in `seed`).
+pub fn dataset(name: &str, seed: u64) -> Result<DatasetSpec> {
+    let spec = match name {
+        // 50k samples of valve cycles; paper's discord length 150.
+        "space_shuttle" => {
+            let t = shuttle::shuttle_valve(250, 200, &[137], seed);
+            DatasetSpec { name: "space_shuttle", n: 50_000, m: 150, domain: "NASA valve current", series: t }
+        }
+        // 45k ECG at 180 Hz-ish; discord length 200.
+        "ecg" => {
+            let t = ecg::ecg_with_pvc(45_000, 180.0, 72.0, &[210], seed);
+            DatasetSpec { name: "ecg", n: 45_000, m: 200, domain: "electrocardiogram", series: t }
+        }
+        // 21.6k ECG; discord length 400 (slower sampling relative to beat).
+        "ecg2" => {
+            let t = ecg::ecg_with_pvc(21_600, 360.0, 68.0, &[25], seed);
+            DatasetSpec { name: "ecg2", n: 21_600, m: 400, domain: "electrocardiogram", series: t }
+        }
+        // 100k Koski ECG; discord length 458.
+        "koski_ecg" => {
+            let t = ecg::ecg_with_pvc(100_000, 400.0, 65.0, &[95], seed);
+            DatasetSpec { name: "koski_ecg", n: 100_000, m: 458, domain: "electrocardiogram", series: t }
+        }
+        // 24 125 respiration samples; discord length 250.
+        "respiration" => {
+            let mut t = respiration::respiration(24_125, 10.0, 14_000, seed);
+            t.name = "respiration".into();
+            DatasetSpec { name: "respiration", n: 24_125, m: 250, domain: "breathing (thorax)", series: t }
+        }
+        // 33 220 power samples (346 days); discord length 750.
+        "power_demand" => {
+            let days = 347;
+            let mut t = power::power_demand(days, &[100, 242], seed);
+            t.values.truncate(33_220);
+            t.name = "power_demand".into();
+            DatasetSpec { name: "power_demand", n: 33_220, m: 750, domain: "office energy", series: t }
+        }
+        "random_walk_1m" => {
+            let t = random_walk::random_walk(1_000_000, seed);
+            DatasetSpec { name: "random_walk_1m", n: 1_000_000, m: 512, domain: "synthetic", series: t }
+        }
+        "random_walk_2m" => {
+            let t = random_walk::random_walk(2_000_000, seed);
+            DatasetSpec { name: "random_walk_2m", n: 2_000_000, m: 512, domain: "synthetic", series: t }
+        }
+        "heating" => {
+            let (t, _) = heating::heating_year(seed);
+            DatasetSpec { name: "heating", n: 35_040, m: 48, domain: "smart heating (PolyTER)", series: t }
+        }
+        other => bail!("unknown dataset {other:?}; known: {:?}", dataset_names()),
+    };
+    Ok(spec)
+}
+
+/// Like [`dataset`] but truncated/scaled to `n` samples (scalability runs).
+pub fn dataset_prefix(name: &str, n: usize, seed: u64) -> Result<DatasetSpec> {
+    let mut spec = dataset(name, seed)?;
+    if n < spec.series.len() {
+        spec.series = spec.series.prefix(n);
+    }
+    spec.n = spec.series.len();
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_matches_tab1_lengths() {
+        // Keep the big random walks out of the unit-test path.
+        for (name, n, m) in [
+            ("space_shuttle", 50_000, 150),
+            ("ecg", 45_000, 200),
+            ("ecg2", 21_600, 400),
+            ("respiration", 24_125, 250),
+            ("power_demand", 33_220, 750),
+        ] {
+            let d = dataset(name, 1).unwrap();
+            assert_eq!(d.series.len(), n, "{name}");
+            assert_eq!(d.m, m, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(dataset("nope", 1).is_err());
+    }
+
+    #[test]
+    fn prefix_truncates() {
+        let d = dataset_prefix("ecg2", 5_000, 1).unwrap();
+        assert_eq!(d.series.len(), 5_000);
+    }
+}

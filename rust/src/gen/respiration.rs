@@ -1,0 +1,58 @@
+//! Synthetic respiration (thorax-extension) trace — surrogate for the
+//! Keogh HOTSAX respiration dataset ("a patient awakes"): slow
+//! quasi-sinusoidal breathing whose rate/depth shifts at a planted
+//! transition, which is where the real trace's discord lives.
+
+use crate::core::series::TimeSeries;
+use crate::util::rng::Rng;
+
+/// `n` samples at `fs` Hz; breathing transitions from deep-sleep
+/// (slow, deep) to awake (faster, shallower, irregular) at sample
+/// `wake_at` (pass `n` for no transition).
+pub fn respiration(n: usize, fs: f64, wake_at: usize, seed: u64) -> TimeSeries {
+    let mut rng = Rng::seed(seed);
+    let mut values = Vec::with_capacity(n);
+    let mut phase = 0.0f64;
+    let mut rate = 0.22; // Hz, deep sleep
+    let mut depth = 1.0;
+    for i in 0..n {
+        let awake = i >= wake_at;
+        // Smooth parameter drift toward the regime's target.
+        let (target_rate, target_depth) = if awake { (0.42, 0.45) } else { (0.22, 1.0) };
+        rate += 0.002 * (target_rate - rate) + 0.0003 * rng.normal();
+        depth += 0.002 * (target_depth - depth) + 0.0008 * rng.normal();
+        // Awake breathing is irregular: phase jitter.
+        let jitter = if awake { 0.15 } else { 0.03 };
+        phase += 2.0 * std::f64::consts::PI * rate / fs * (1.0 + jitter * rng.normal());
+        let v = depth * phase.sin() + 0.02 * rng.normal();
+        values.push(v);
+    }
+    TimeSeries::new(format!("respiration_{n}"), values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regimes_differ() {
+        let fs = 10.0;
+        let t = respiration(24_000, fs, 12_000, 3);
+        let amp = |r: std::ops::Range<usize>| {
+            let s = &t.values[r];
+            let lo = s.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            hi - lo
+        };
+        // Sleep amplitude clearly larger than awake.
+        assert!(amp(2000..6000) > 1.5 * amp(18_000..22_000));
+    }
+
+    #[test]
+    fn deterministic_and_bounded() {
+        let a = respiration(5000, 10.0, 5000, 4);
+        assert_eq!(a.values, respiration(5000, 10.0, 5000, 4).values);
+        let (lo, hi) = a.min_max();
+        assert!(lo > -2.0 && hi < 2.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Synthetic Marotta valve solenoid-current trace — surrogate for the
+//! NASA "Space shuttle" dataset (Tab. 1): repeated energize/de-energize
+//! cycles whose current waveform has a charging rise, inductive knee, hold
+//! plateau and decay; the classic anomaly is a cycle with a deformed knee
+//! (degraded valve).
+
+use crate::core::series::TimeSeries;
+use crate::util::rng::Rng;
+
+/// One valve cycle of `len` samples into `out`, with waveform deformation
+/// `defect` in [0, 1] (0 = healthy).
+fn cycle(out: &mut [f64], defect: f64, rng: &mut Rng) {
+    let len = out.len();
+    let on = (len as f64 * 0.55) as usize;
+    let rise = (len as f64 * 0.08).max(2.0) as usize;
+    for (k, o) in out.iter_mut().enumerate() {
+        let v = if k < rise {
+            // Charging rise toward peak with an inductive overshoot knee.
+            let x = k as f64 / rise as f64;
+            1.3 * x - 0.3 * x * x
+        } else if k < on {
+            // Knee dip then hold plateau; the defect flattens/shifts the knee.
+            let x = (k - rise) as f64 / (on - rise) as f64;
+            let knee_depth = 0.25 * (1.0 - defect);
+            let knee_pos = 0.25 + 0.35 * defect;
+            let d = (x - knee_pos) / 0.08;
+            1.0 - knee_depth * (-0.5 * d * d).exp()
+        } else {
+            // De-energized decay.
+            let x = (k - on) as f64 / (len - on) as f64;
+            (1.0 - x).powi(3) * 0.2
+        };
+        *o = v + 0.01 * rng.normal();
+    }
+}
+
+/// `cycles` valve actuations of ~`cycle_len` samples; `defect_cycles`
+/// lists cycle indices with a degraded waveform.
+pub fn shuttle_valve(cycles: usize, cycle_len: usize, defect_cycles: &[usize], seed: u64) -> TimeSeries {
+    let mut rng = Rng::seed(seed);
+    let mut values = vec![0.0; cycles * cycle_len];
+    for c in 0..cycles {
+        let defect = if defect_cycles.contains(&c) { 0.9 } else { 0.03 * rng.uniform() };
+        let s = c * cycle_len;
+        cycle(&mut values[s..s + cycle_len], defect, &mut rng);
+    }
+    TimeSeries::new(format!("shuttle_{}", cycles * cycle_len), values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_repeat() {
+        let t = shuttle_valve(10, 200, &[], 1);
+        assert_eq!(t.len(), 2000);
+        // Two healthy cycles should be near-identical.
+        let d: f64 = (0..200)
+            .map(|k| (t.values[200 + k] - t.values[400 + k]).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(d < 1.0, "healthy cycles differ too much: {d}");
+    }
+
+    #[test]
+    fn defect_cycle_differs() {
+        let t = shuttle_valve(10, 200, &[5], 2);
+        let dist = |a: usize, b: usize| -> f64 {
+            (0..200).map(|k| (t.values[a + k] - t.values[b + k]).powi(2)).sum::<f64>().sqrt()
+        };
+        let healthy = dist(200, 400);
+        let defect = dist(1000, 400);
+        assert!(defect > 3.0 * healthy, "defect {defect} vs healthy {healthy}");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            shuttle_valve(5, 100, &[2], 3).values,
+            shuttle_valve(5, 100, &[2], 3).values
+        );
+    }
+}

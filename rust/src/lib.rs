@@ -1,0 +1,34 @@
+//! # PALMAD — Parallel Arbitrary-Length MERLIN-based Anomaly Discovery
+//!
+//! Reproduction of Zymbler & Kraeva, *"High-performance Time Series Anomaly
+//! Discovery on Graphics Processors"* (2023) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1** (`python/compile/kernels/`): Pallas distance-tile and
+//!   recurrent-statistics kernels, AOT-lowered to HLO text.
+//! - **Layer 2** (`python/compile/model.py`): JAX graphs wrapping the
+//!   kernels (window materialization, Eq. 6 distance transform, exclusion
+//!   masking, reductions).
+//! - **Layer 3** (this crate): the coordinator — MERLIN's adaptive-`r`
+//!   driver ([`coordinator::merlin`]), the parallel two-phase DRAG
+//!   ([`coordinator::drag`]), segment scheduling, engines (pure-rust
+//!   [`engines::native`] and PJRT-backed [`engines::xla`]), baseline
+//!   algorithms, generators, benchmarking and analysis tooling.
+//!
+//! Python runs only at build time (`make artifacts`); the binary serves
+//! requests from compiled HLO artifacts via the PJRT C API.
+
+pub mod analysis;
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod core;
+pub mod engines;
+pub mod gen;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+pub use crate::coordinator::drag::Discord;
+pub use crate::coordinator::merlin::{Merlin, MerlinConfig, MerlinResult};
+pub use crate::core::series::TimeSeries;

@@ -1,0 +1,247 @@
+//! `palmad` — the command-line front end.
+//!
+//! ```text
+//! palmad run      --data ecg --min-l 64 --max-l 128 --top-k 3
+//! palmad heatmap  --data heating --min-l 48 --max-l 672 --out heatmap.ppm
+//! palmad serve    --addr 127.0.0.1:7700 --workers 4
+//! palmad generate --data power_demand --out power.txt
+//! palmad datasets
+//! ```
+
+use anyhow::Result;
+
+use palmad::analysis::{heatmap::Heatmap, image, ranking, report::Table};
+use palmad::coordinator::config::{build_engine, EngineChoice, EngineOptions};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig, StatsBackend};
+use palmad::coordinator::service::Service;
+use palmad::core::series::TimeSeries;
+use palmad::gen::registry;
+use palmad::util::cli::{Cli, Command};
+
+fn cli() -> Cli {
+    Cli::new("palmad", "parallel arbitrary-length MERLIN-based anomaly discovery")
+        .command(
+            Command::new("run", "discover discords in a series")
+                .req("data", "dataset name (see `datasets`) or a file path (.txt/.csv/.f64)")
+                .opt("n", "0", "truncate/generate to this length (0 = dataset default)")
+                .opt("seed", "42", "generator seed")
+                .opt("min-l", "64", "minimum discord length")
+                .opt("max-l", "128", "maximum discord length")
+                .opt("top-k", "1", "discords per length (0 = all)")
+                .opt("engine", "native", "tile engine: native | xla")
+                .opt("segn", "256", "tile edge (XLA: a compiled bucket)")
+                .opt("threads", "0", "native engine threads (0 = auto)")
+                .opt("stats", "native", "stats backend: native | aot | naive")
+                .opt("json", "", "write results as JSON to this path")
+                .switch("verbose", "debug logging"),
+        )
+        .command(
+            Command::new("heatmap", "discord heatmap + top interesting discords (case study)")
+                .req("data", "dataset name or file path")
+                .opt("n", "0", "truncate to this length")
+                .opt("seed", "42", "generator seed")
+                .opt("min-l", "48", "minimum discord length")
+                .opt("max-l", "672", "maximum discord length")
+                .opt("stride", "1", "length stride (speeds up wide ranges)")
+                .opt("engine", "native", "tile engine: native | xla")
+                .opt("segn", "256", "tile edge")
+                .opt("top", "6", "interesting discords to report (Eq. 12)")
+                .opt("out", "heatmap.ppm", "output heatmap image (PPM)"),
+        )
+        .command(
+            Command::new("serve", "run the TCP job service")
+                .opt("addr", "127.0.0.1:7700", "listen address")
+                .opt("workers", "2", "worker threads (one engine each)")
+                .opt("engine", "native", "tile engine: native | xla")
+                .opt("segn", "256", "tile edge"),
+        )
+        .command(
+            Command::new("generate", "write a synthetic dataset to a file")
+                .req("data", "dataset name")
+                .opt("n", "0", "truncate to this length")
+                .opt("seed", "42", "generator seed")
+                .req("out", "output path (.txt or .f64)"),
+        )
+        .command(Command::new("datasets", "list the Tab. 1 dataset roster"))
+}
+
+fn load_series(data: &str, n: usize, seed: u64) -> Result<TimeSeries> {
+    if data.contains('/') || data.contains('.') {
+        let p = std::path::Path::new(data);
+        let t = match p.extension().and_then(|e| e.to_str()) {
+            Some("f64") => TimeSeries::from_f64_binary(p)?,
+            Some("csv") => TimeSeries::from_csv(p, 1)?,
+            _ => TimeSeries::from_text(p)?,
+        };
+        Ok(if n > 0 { t.prefix(n) } else { t })
+    } else if n > 0 {
+        Ok(registry::dataset_prefix(data, n, seed)?.series)
+    } else {
+        Ok(registry::dataset(data, seed)?.series)
+    }
+}
+
+fn engine_opts(args: &palmad::util::cli::Args) -> Result<EngineOptions> {
+    let mut opts = EngineOptions {
+        choice: EngineChoice::parse(args.get("engine")?)?,
+        segn: args.get_usize("segn")?,
+        ..Default::default()
+    };
+    if let Ok(t) = args.get_usize("threads") {
+        if t > 0 {
+            opts.threads = t;
+        }
+    }
+    Ok(opts)
+}
+
+fn cmd_run(args: &palmad::util::cli::Args) -> Result<()> {
+    if args.get_switch("verbose") {
+        palmad::util::logger::set_level(palmad::util::logger::Level::Debug);
+    }
+    let series = load_series(args.get("data")?, args.get_usize("n")?, args.get_u64("seed")?)?;
+    let opts = engine_opts(args)?;
+    let engine = build_engine(&opts)?;
+    let stats_backend = match args.get("stats")? {
+        "native" => StatsBackend::Native,
+        "aot" => StatsBackend::Aot,
+        "naive" => StatsBackend::NaivePerLength,
+        other => anyhow::bail!("unknown stats backend {other:?}"),
+    };
+    let cfg = MerlinConfig {
+        min_l: args.get_usize("min-l")?,
+        max_l: args.get_usize("max-l")?,
+        top_k: args.get_usize("top-k")?,
+        stats_backend,
+        ..Default::default()
+    };
+    println!("series: {series}; engine: {} (segn={})", engine.name(), engine.segn());
+    let res = Merlin::new(&*engine, cfg).run(&series)?;
+
+    let mut table = Table::new(
+        format!("discords of {}", series.name),
+        &["m", "idx", "nnDist", "nnDist/2sqrt(m)", "r_used", "retries"],
+    );
+    for lr in &res.lengths {
+        for d in &lr.discords {
+            table.row(&[
+                d.m.to_string(),
+                d.idx.to_string(),
+                format!("{:.4}", d.nn_dist),
+                format!("{:.4}", d.nn_dist / (2.0 * (d.m as f64).sqrt())),
+                format!("{:.4}", lr.r_used),
+                lr.retries.to_string(),
+            ]);
+        }
+    }
+    print!("{}", table.to_text());
+    println!("metrics: {}", res.metrics);
+
+    if let Some(path) = args.get_opt("json") {
+        std::fs::write(path, table.to_json().to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_heatmap(args: &palmad::util::cli::Args) -> Result<()> {
+    let series = load_series(args.get("data")?, args.get_usize("n")?, args.get_u64("seed")?)?;
+    let opts = engine_opts(args)?;
+    let engine = build_engine(&opts)?;
+    let (min_l, max_l) = (args.get_usize("min-l")?, args.get_usize("max-l")?);
+    let stride = args.get_usize("stride")?.max(1);
+    println!("heatmap over {series}, lengths {min_l}..{max_l} stride {stride}");
+
+    // Wide ranges are run in strided sub-ranges (collect-all per length).
+    let mut all_lengths = Vec::new();
+    let mut m = min_l;
+    while m <= max_l {
+        let cfg = MerlinConfig { min_l: m, max_l: m, top_k: 0, ..Default::default() };
+        let res = Merlin::new(&*engine, cfg).run(&series)?;
+        all_lengths.extend(res.lengths);
+        m += stride;
+    }
+    let res = palmad::coordinator::merlin::MerlinResult {
+        lengths: all_lengths,
+        metrics: Default::default(),
+    };
+
+    let hm = Heatmap::from_result(&res, series.len());
+    let out = args.get("out")?;
+    image::render_heatmap(&hm, out, 1600, 400)?;
+    println!("wrote {out}");
+
+    let top = ranking::top_k_interesting(&hm, args.get_usize("top")?);
+    let mut table = Table::new("top interesting discords (Eq. 12)", &["rank", "idx", "m", "score"]);
+    for (k, r) in top.iter().enumerate() {
+        table.row(&[
+            (k + 1).to_string(),
+            r.idx.to_string(),
+            r.m.to_string(),
+            format!("{:.4}", r.score),
+        ]);
+    }
+    print!("{}", table.to_text());
+    Ok(())
+}
+
+fn cmd_serve(args: &palmad::util::cli::Args) -> Result<()> {
+    let opts = engine_opts(args)?;
+    let workers = args.get_usize("workers")?;
+    let svc = Service::start(opts, workers)?;
+    svc.serve(args.get("addr")?)
+}
+
+fn cmd_generate(args: &palmad::util::cli::Args) -> Result<()> {
+    let series = load_series(args.get("data")?, args.get_usize("n")?, args.get_u64("seed")?)?;
+    let out = args.get("out")?;
+    if out.ends_with(".f64") {
+        series.to_f64_binary(out)?;
+    } else {
+        series.to_text(out)?;
+    }
+    println!("wrote {} samples to {out}", series.len());
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut table = Table::new("Tab. 1 dataset roster (synthetic surrogates)", &["name", "n", "discord m", "domain"]);
+    for name in registry::dataset_names() {
+        // Big walks are expensive to generate just for listing; use specs.
+        let (n, m, domain) = match *name {
+            "space_shuttle" => (50_000, 150, "NASA valve current"),
+            "ecg" => (45_000, 200, "electrocardiogram"),
+            "ecg2" => (21_600, 400, "electrocardiogram"),
+            "koski_ecg" => (100_000, 458, "electrocardiogram"),
+            "respiration" => (24_125, 250, "breathing (thorax)"),
+            "power_demand" => (33_220, 750, "office energy"),
+            "random_walk_1m" => (1_000_000, 512, "synthetic"),
+            "random_walk_2m" => (2_000_000, 512, "synthetic"),
+            _ => unreachable!(),
+        };
+        table.row(&[name.to_string(), n.to_string(), m.to_string(), domain.to_string()]);
+    }
+    table.row(&["heating".into(), "35040".into(), "48..672".into(), "smart heating (PolyTER, §5)".into()]);
+    print!("{}", table.to_text());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let (cmd, args) = match cli.parse(&argv) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    match cmd {
+        "run" => cmd_run(&args),
+        "heatmap" => cmd_heatmap(&args),
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "datasets" => cmd_datasets(),
+        _ => unreachable!(),
+    }
+}

@@ -1,0 +1,167 @@
+//! Artifact manifest: what `make artifacts` compiled and where.
+//!
+//! The manifest is line-oriented (`kind segn mmax nmax file`) so no JSON
+//! parser is needed on the rust side.  Shape selection picks the smallest
+//! compiled bucket that fits a request; the coordinator then masks/pads up
+//! to the bucket's shape.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::types::TileShape;
+
+/// Parsed manifest + artifact directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    /// (segn, mmax) -> file name.
+    pub tiles: BTreeMap<TileShape, String>,
+    /// nmax -> file name.
+    pub stats_init: BTreeMap<usize, String>,
+    pub stats_update: BTreeMap<usize, String>,
+}
+
+impl ArtifactSet {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest.display()))?;
+        let mut set = ArtifactSet { dir, ..Default::default() };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 5 {
+                bail!("manifest:{}: expected 5 fields, got {}", lineno + 1, f.len());
+            }
+            let segn: usize = f[1].parse().context("segn")?;
+            let mmax: usize = f[2].parse().context("mmax")?;
+            let nmax: usize = f[3].parse().context("nmax")?;
+            let file = f[4].to_string();
+            match f[0] {
+                "tile" => {
+                    set.tiles.insert(TileShape { segn, mmax }, file);
+                }
+                "stats_init" => {
+                    set.stats_init.insert(nmax, file);
+                }
+                "stats_update" => {
+                    set.stats_update.insert(nmax, file);
+                }
+                other => bail!("manifest:{}: unknown kind {other:?}", lineno + 1),
+            }
+        }
+        Ok(set)
+    }
+
+    /// Default artifact directory: `$PALMAD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PALMAD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Pick a tile shape: prefers `segn` exactly equal to the request (the
+    /// coordinator's segment size is itself chosen from the compiled grid)
+    /// and the smallest `mmax >= m`.
+    pub fn select_tile(&self, segn: usize, m: usize) -> Result<TileShape> {
+        let mut best: Option<TileShape> = None;
+        for shape in self.tiles.keys() {
+            if shape.segn == segn && shape.mmax >= m {
+                match best {
+                    Some(b) if b.mmax <= shape.mmax => {}
+                    _ => best = Some(*shape),
+                }
+            }
+        }
+        best.ok_or_else(|| {
+            anyhow::anyhow!(
+                "no tile artifact with segn={segn}, mmax>={m}; compiled: {:?}",
+                self.tiles.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// All compiled segment sizes (ascending).
+    pub fn tile_segns(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.tiles.keys().map(|s| s.segn).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Largest compiled MMAX for a given segn.
+    pub fn max_m_for_segn(&self, segn: usize) -> Option<usize> {
+        self.tiles.keys().filter(|s| s.segn == segn).map(|s| s.mmax).max()
+    }
+
+    /// Pick the smallest stats bucket >= n.
+    pub fn select_stats(&self, n: usize) -> Result<usize> {
+        self.stats_init
+            .keys()
+            .copied()
+            .find(|&nmax| nmax >= n && self.stats_update.contains_key(&nmax))
+            .ok_or_else(|| anyhow::anyhow!("no stats artifact bucket >= {n}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(lines: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("palmad_manifest_{}", lines.len()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        f.write_all(lines.as_bytes()).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parse_and_select() {
+        let dir = write_manifest(
+            "# kind segn mmax nmax file\n\
+             tile 64 128 0 tile_64x128.hlo.txt\n\
+             tile 64 512 0 tile_64x512.hlo.txt\n\
+             tile 256 512 0 tile_256x512.hlo.txt\n\
+             stats_init 0 0 16384 si.hlo.txt\n\
+             stats_update 0 0 16384 su.hlo.txt\n\
+             stats_init 0 0 65536 si2.hlo.txt\n\
+             stats_update 0 0 65536 su2.hlo.txt\n",
+        );
+        let set = ArtifactSet::load(&dir).unwrap();
+        assert_eq!(set.select_tile(64, 100).unwrap(), TileShape { segn: 64, mmax: 128 });
+        assert_eq!(set.select_tile(64, 200).unwrap(), TileShape { segn: 64, mmax: 512 });
+        assert!(set.select_tile(64, 600).is_err());
+        assert!(set.select_tile(128, 100).is_err());
+        assert_eq!(set.select_stats(10_000).unwrap(), 16384);
+        assert_eq!(set.select_stats(20_000).unwrap(), 65536);
+        assert!(set.select_stats(100_000).is_err());
+        assert_eq!(set.tile_segns(), vec![64, 256]);
+        assert_eq!(set.max_m_for_segn(64), Some(512));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let dir = write_manifest("tile 64 128 tile.hlo.txt\n");
+        assert!(ArtifactSet::load(&dir).is_err());
+        let dir = write_manifest("blob 1 2 3 f\n");
+        assert!(ArtifactSet::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        assert!(ArtifactSet::load("/nonexistent_dir_palmad").is_err());
+    }
+}

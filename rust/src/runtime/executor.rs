@@ -1,0 +1,287 @@
+//! The kernel executor: an actor thread owning the PJRT client.
+//!
+//! The `xla` crate's types wrap raw C pointers and are not `Send`, so one
+//! dedicated thread owns the `PjRtClient` and every compiled executable;
+//! the rest of the system talks to it through typed channel requests.
+//! Executables are compiled lazily from HLO text on first use and cached
+//! for the lifetime of the executor (MERLIN's length sweep reuses one
+//! tile executable for every `m <= MMAX` — no recompiles).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::ArtifactSet;
+use super::types::{TileInputs, TileOutputs, TileShape};
+
+enum Request {
+    TileBatch {
+        shape: TileShape,
+        inputs: Vec<TileInputs>,
+        reply: Sender<Result<Vec<TileOutputs>>>,
+    },
+    StatsInit {
+        nmax: usize,
+        t: Vec<f32>,
+        m: i32,
+        reply: Sender<Result<(Vec<f64>, Vec<f64>)>>,
+    },
+    StatsUpdate {
+        nmax: usize,
+        t: Vec<f32>,
+        mu: Vec<f64>,
+        sig: Vec<f64>,
+        m: i32,
+        reply: Sender<Result<(Vec<f64>, Vec<f64>)>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the executor actor.  Clonable; dropping the last handle shuts
+/// the actor down.
+pub struct Executor {
+    tx: Sender<Request>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Start the actor for a given artifact set.
+    pub fn start(artifacts: ArtifactSet) -> Result<Self> {
+        let (tx, rx) = channel();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("palmad-xla-executor".into())
+            .spawn(move || actor_main(artifacts, rx, ready_tx))
+            .context("spawn executor thread")?;
+        ready_rx.recv().context("executor startup")??;
+        Ok(Self { tx, handle: Some(handle) })
+    }
+
+    /// Execute a batch of tile tasks against the `shape` executable.
+    pub fn tile_batch(&self, shape: TileShape, inputs: Vec<TileInputs>) -> Result<Vec<TileOutputs>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::TileBatch { shape, inputs, reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Run the AOT `stats_init` kernel (Eq. 4).  `t` must be padded to `nmax`.
+    pub fn stats_init(&self, nmax: usize, t: Vec<f32>, m: i32) -> Result<(Vec<f64>, Vec<f64>)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::StatsInit { nmax, t, m, reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Run the AOT `stats_update` kernel (Eqs. 7/8).
+    pub fn stats_update(
+        &self,
+        nmax: usize,
+        t: Vec<f32>,
+        mu: Vec<f64>,
+        sig: Vec<f64>,
+        m: i32,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::StatsUpdate { nmax, t, mu, sig, m, reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// State owned by the actor thread.
+struct Actor {
+    artifacts: ArtifactSet,
+    client: xla::PjRtClient,
+    tiles: HashMap<TileShape, xla::PjRtLoadedExecutable>,
+    stats_init: HashMap<usize, xla::PjRtLoadedExecutable>,
+    stats_update: HashMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+fn actor_main(artifacts: ArtifactSet, rx: Receiver<Request>, ready: Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+    let mut actor = Actor {
+        artifacts,
+        client,
+        tiles: HashMap::new(),
+        stats_init: HashMap::new(),
+        stats_update: HashMap::new(),
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::TileBatch { shape, inputs, reply } => {
+                let _ = reply.send(actor.run_tile_batch(shape, inputs));
+            }
+            Request::StatsInit { nmax, t, m, reply } => {
+                let _ = reply.send(actor.run_stats_init(nmax, t, m));
+            }
+            Request::StatsUpdate { nmax, t, mu, sig, m, reply } => {
+                let _ = reply.send(actor.run_stats_update(nmax, t, mu, sig, m));
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", path.display()))
+}
+
+impl Actor {
+    fn tile_exe(&mut self, shape: TileShape) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.tiles.contains_key(&shape) {
+            let file = self
+                .artifacts
+                .tiles
+                .get(&shape)
+                .ok_or_else(|| anyhow!("no tile artifact for {shape:?}"))?;
+            let exe = compile(&self.client, &self.artifacts.path_of(file))?;
+            self.tiles.insert(shape, exe);
+        }
+        Ok(&self.tiles[&shape])
+    }
+
+    fn run_tile_batch(
+        &mut self,
+        shape: TileShape,
+        inputs: Vec<TileInputs>,
+    ) -> Result<Vec<TileOutputs>> {
+        self.tile_exe(shape)?;
+        let exe = &self.tiles[&shape];
+        let mut out = Vec::with_capacity(inputs.len());
+        for inp in &inputs {
+            out.push(run_tile_one(exe, shape, inp)?);
+        }
+        Ok(out)
+    }
+
+    fn run_stats_init(&mut self, nmax: usize, t: Vec<f32>, m: i32) -> Result<(Vec<f64>, Vec<f64>)> {
+        if !self.stats_init.contains_key(&nmax) {
+            let file = self
+                .artifacts
+                .stats_init
+                .get(&nmax)
+                .ok_or_else(|| anyhow!("no stats_init artifact for nmax={nmax}"))?;
+            let exe = compile(&self.client, &self.artifacts.path_of(file))?;
+            self.stats_init.insert(nmax, exe);
+        }
+        anyhow::ensure!(t.len() == nmax, "stats_init: t must be padded to {nmax}");
+        let exe = &self.stats_init[&nmax];
+        let args = vec![xla::Literal::vec1(&t), xla::Literal::scalar(m)];
+        let mut tup = execute_tuple(exe, &args)?;
+        let sig = tup.pop().unwrap().to_vec::<f64>()?;
+        let mu = tup.pop().unwrap().to_vec::<f64>()?;
+        Ok((mu, sig))
+    }
+
+    fn run_stats_update(
+        &mut self,
+        nmax: usize,
+        t: Vec<f32>,
+        mu: Vec<f64>,
+        sig: Vec<f64>,
+        m: i32,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        if !self.stats_update.contains_key(&nmax) {
+            let file = self
+                .artifacts
+                .stats_update
+                .get(&nmax)
+                .ok_or_else(|| anyhow!("no stats_update artifact for nmax={nmax}"))?;
+            let exe = compile(&self.client, &self.artifacts.path_of(file))?;
+            self.stats_update.insert(nmax, exe);
+        }
+        anyhow::ensure!(
+            t.len() == nmax && mu.len() == nmax && sig.len() == nmax,
+            "stats_update: buffers must be padded to {nmax}"
+        );
+        let exe = &self.stats_update[&nmax];
+        let args = vec![
+            xla::Literal::vec1(&t),
+            xla::Literal::vec1(&mu),
+            xla::Literal::vec1(&sig),
+            xla::Literal::scalar(m),
+        ];
+        let mut tup = execute_tuple(exe, &args)?;
+        let sig2 = tup.pop().unwrap().to_vec::<f64>()?;
+        let mu2 = tup.pop().unwrap().to_vec::<f64>()?;
+        Ok((mu2, sig2))
+    }
+}
+
+/// Execute and unpack the (return_tuple=True) result literal.
+fn execute_tuple(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let bufs = exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute: {e}"))?;
+    let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))
+}
+
+fn run_tile_one(
+    exe: &xla::PjRtLoadedExecutable,
+    shape: TileShape,
+    inp: &TileInputs,
+) -> Result<TileOutputs> {
+    let src_len = shape.src_len();
+    anyhow::ensure!(
+        inp.seg_src.len() == src_len && inp.chunk_src.len() == src_len,
+        "tile src slices must be {src_len} (got {}, {})",
+        inp.seg_src.len(),
+        inp.chunk_src.len()
+    );
+    anyhow::ensure!(
+        inp.mu_a.len() == shape.segn
+            && inp.sig_a.len() == shape.segn
+            && inp.mu_b.len() == shape.segn
+            && inp.sig_b.len() == shape.segn,
+        "tile stats slices must be {}",
+        shape.segn
+    );
+    let args = vec![
+        xla::Literal::vec1(&inp.seg_src),
+        xla::Literal::vec1(&inp.chunk_src),
+        xla::Literal::vec1(&inp.mu_a),
+        xla::Literal::vec1(&inp.sig_a),
+        xla::Literal::vec1(&inp.mu_b),
+        xla::Literal::vec1(&inp.sig_b),
+        xla::Literal::scalar(inp.m),
+        xla::Literal::scalar(inp.delta),
+        xla::Literal::scalar(inp.na),
+        xla::Literal::scalar(inp.nb),
+        xla::Literal::scalar(inp.r2),
+    ];
+    let mut tup = execute_tuple(exe, &args)?;
+    anyhow::ensure!(tup.len() == 4, "tile kernel returned {} outputs", tup.len());
+    let col_kill = tup.pop().unwrap().to_vec::<f32>()?;
+    let row_kill = tup.pop().unwrap().to_vec::<f32>()?;
+    let col_min = tup.pop().unwrap().to_vec::<f32>()?;
+    let row_min = tup.pop().unwrap().to_vec::<f32>()?;
+    Ok(TileOutputs {
+        row_min: row_min.iter().map(|&x| x as f64).collect(),
+        col_min: col_min.iter().map(|&x| x as f64).collect(),
+        row_kill: row_kill.iter().map(|&x| x != 0.0).collect(),
+        col_kill: col_kill.iter().map(|&x| x != 0.0).collect(),
+    })
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and executes them from the rust request path.
+//!
+//! - [`artifact`] — manifest parsing + shape-bucket selection.
+//! - [`executor`] — a dedicated actor thread owning the (non-`Send`)
+//!   `PjRtClient` and compiled executables; callers talk to it through
+//!   typed channel requests.
+//! - [`types`] — plain-old-data request/response structs shared with the
+//!   engines.
+
+pub mod artifact;
+pub mod executor;
+pub mod types;

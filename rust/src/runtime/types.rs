@@ -1,0 +1,70 @@
+//! Plain-old-data request/response types for the kernel executor and the
+//! engines.  Mirrors the layer-2 signatures in `python/compile/model.py`.
+
+/// Inputs for one `tile_min` invocation (one (segment, chunk) pair).
+///
+/// Slice/stat buffers are `f32` — the tile-kernel interchange dtype; the
+/// coordinator keeps its master copies in `f64` and downcasts per task.
+#[derive(Clone, Debug)]
+pub struct TileInputs {
+    /// Raw series slice starting at the segment's first subsequence,
+    /// length `SEGN + MMAX - 1`, zero-padded past the series end.
+    pub seg_src: Vec<f32>,
+    /// Same for the chunk.
+    pub chunk_src: Vec<f32>,
+    /// Window stats for the segment rows / chunk columns, length `SEGN`,
+    /// padded with (mu=0, sig=1).
+    pub mu_a: Vec<f32>,
+    pub sig_a: Vec<f32>,
+    pub mu_b: Vec<f32>,
+    pub sig_b: Vec<f32>,
+    /// Live subsequence length (`m <= MMAX`).
+    pub m: i32,
+    /// `chunk_global_start - seg_global_start` (may be negative in the
+    /// refinement phase's left scan).
+    pub delta: i32,
+    /// Valid window counts in segment / chunk (`<= SEGN`).
+    pub na: i32,
+    pub nb: i32,
+    /// Squared range-discord threshold.
+    pub r2: f32,
+}
+
+/// Outputs of one `tile_min` invocation.
+///
+/// `row_*` refer to segment subsequences, `col_*` to chunk subsequences.
+/// Invalid/excluded entries are `+inf` minima and `false` kills.
+/// Minima are `f64` at the coordinator boundary; the XLA engine upcasts
+/// the kernel's `f32` results.
+#[derive(Clone, Debug)]
+pub struct TileOutputs {
+    pub row_min: Vec<f64>,
+    pub col_min: Vec<f64>,
+    pub row_kill: Vec<bool>,
+    pub col_kill: Vec<bool>,
+}
+
+/// Shape key of a tile artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TileShape {
+    pub segn: usize,
+    pub mmax: usize,
+}
+
+impl TileShape {
+    /// Length of the raw source slice (`tile_src_len` in shapes.py).
+    pub fn src_len(&self) -> usize {
+        self.segn + self.mmax - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn src_len_matches_python() {
+        assert_eq!(TileShape { segn: 64, mmax: 128 }.src_len(), 191);
+        assert_eq!(TileShape { segn: 512, mmax: 512 }.src_len(), 1023);
+    }
+}

@@ -1,0 +1,115 @@
+//! Random-input generators for properties: series shapes that exercise
+//! the distance/stat code differently (walks, noise, periodic, flat
+//! plateaus, large offsets).
+
+use crate::util::rng::Rng;
+
+/// Series generator kinds for property tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeriesGen {
+    Walk,
+    Noise,
+    Periodic,
+    /// Walk with a flat plateau (stuck sensor) somewhere inside.
+    WithPlateau,
+    /// Noise around a huge offset (cancellation stress).
+    LargeOffset,
+}
+
+impl SeriesGen {
+    pub const ALL: [SeriesGen; 5] = [
+        SeriesGen::Walk,
+        SeriesGen::Noise,
+        SeriesGen::Periodic,
+        SeriesGen::WithPlateau,
+        SeriesGen::LargeOffset,
+    ];
+
+    /// Pick a random kind.
+    pub fn random(rng: &mut Rng) -> SeriesGen {
+        Self::ALL[rng.below(Self::ALL.len())]
+    }
+
+    /// Generate `n` samples.
+    pub fn generate(self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        match self {
+            SeriesGen::Walk => {
+                let mut acc = 0.0;
+                (0..n)
+                    .map(|_| {
+                        acc += rng.normal();
+                        acc
+                    })
+                    .collect()
+            }
+            SeriesGen::Noise => (0..n).map(|_| rng.normal()).collect(),
+            SeriesGen::Periodic => {
+                let freq = rng.range(0.05, 0.5);
+                let noise = rng.range(0.0, 0.2);
+                (0..n).map(|i| (i as f64 * freq).sin() + noise * rng.normal()).collect()
+            }
+            SeriesGen::WithPlateau => {
+                let mut acc = 0.0;
+                let mut v: Vec<f64> = (0..n)
+                    .map(|_| {
+                        acc += rng.normal();
+                        acc
+                    })
+                    .collect();
+                if n >= 8 {
+                    let len = rng.int_in(n / 8, n / 2);
+                    let start = rng.below(n - len);
+                    let val = v[start];
+                    for x in &mut v[start..start + len] {
+                        *x = val;
+                    }
+                }
+                v
+            }
+            SeriesGen::LargeOffset => {
+                let off = rng.range(1e4, 1e6);
+                (0..n).map(|_| off + rng.normal() * rng.range(0.1, 10.0)).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_generate_requested_length() {
+        let mut rng = Rng::seed(1);
+        for kind in SeriesGen::ALL {
+            let v = kind.generate(100, &mut rng);
+            assert_eq!(v.len(), 100, "{kind:?}");
+            assert!(v.iter().all(|x| x.is_finite()), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn plateau_exists() {
+        let mut rng = Rng::seed(2);
+        let v = SeriesGen::WithPlateau.generate(200, &mut rng);
+        // Find at least 10 consecutive equal values.
+        let mut run = 1;
+        let mut best = 1;
+        for w in v.windows(2) {
+            if w[0] == w[1] {
+                run += 1;
+                best = best.max(run);
+            } else {
+                run = 1;
+            }
+        }
+        assert!(best >= 10, "longest run {best}");
+    }
+
+    #[test]
+    fn large_offset_is_large() {
+        let mut rng = Rng::seed(3);
+        let v = SeriesGen::LargeOffset.generate(50, &mut rng);
+        assert!(v[0].abs() > 1e3);
+    }
+}

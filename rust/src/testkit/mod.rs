@@ -1,0 +1,11 @@
+//! Property-based testing mini-framework (proptest replacement).
+//!
+//! A property runs against `cases` deterministically-seeded random inputs;
+//! on failure the framework reports the failing case number and seed so
+//! the case reproduces with `PALMAD_PROP_SEED=<seed> cargo test <name>`.
+
+pub mod gen;
+pub mod prop;
+
+pub use gen::SeriesGen;
+pub use prop::{check, Config};

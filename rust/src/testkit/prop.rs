@@ -1,0 +1,87 @@
+//! The property runner.
+
+use crate::util::rng::Rng;
+
+/// Property-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u64,
+    /// Base seed; each case `k` runs with seed `base ^ k`-derived stream.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 32, base_seed: 0x9E3779B97F4A7C15 }
+    }
+}
+
+/// Run `property(case_rng)` for each case; the closure returns
+/// `Err(message)` to fail.  Panics (like proptest) with a reproduction
+/// seed on the first failure.
+///
+/// If `PALMAD_PROP_SEED` is set, only that single seed is run — the
+/// reproduction path.
+pub fn check<F>(name: &str, cfg: Config, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    if let Ok(s) = std::env::var("PALMAD_PROP_SEED") {
+        let seed: u64 = s.parse().expect("PALMAD_PROP_SEED must be a u64");
+        let mut rng = Rng::seed(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property {name:?} failed under PALMAD_PROP_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_mul(case.wrapping_add(1)).wrapping_add(case);
+        let mut rng = Rng::seed(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case}/{} — reproduce with \
+                 PALMAD_PROP_SEED={seed}: {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("tautology", Config { cases: 10, ..Default::default() }, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("uniform out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "PALMAD_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        check("always-fails", Config { cases: 3, ..Default::default() }, |_| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn cases_get_distinct_streams() {
+        let mut first_draws = Vec::new();
+        check("collect", Config { cases: 8, ..Default::default() }, |rng| {
+            first_draws.push(rng.next_u64());
+            Ok(())
+        });
+        let mut dedup = first_draws.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), first_draws.len());
+    }
+}

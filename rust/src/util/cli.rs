@@ -1,0 +1,238 @@
+//! Minimal declarative CLI parser (clap replacement).
+//!
+//! Supports `program <subcommand> --flag value --switch` with typed
+//! accessors, defaults, and generated help text.  Only what the `palmad`
+//! binary and the bench harnesses need.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_switch: bool,
+}
+
+/// Declarative command spec: name, help, options.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub help: &'static str,
+    opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, opts: Vec::new() }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_switch: false });
+        self
+    }
+
+    /// `--name <value>`, required.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_switch: false });
+        self
+    }
+
+    /// Boolean `--name` switch (defaults to false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_switch: true });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "  {} — {}", self.name, self.help);
+        for o in &self.opts {
+            let kind = if o.is_switch {
+                "(switch)".to_string()
+            } else {
+                match &o.default {
+                    Some(d) => format!("(default: {d})"),
+                    None => "(required)".to_string(),
+                }
+            };
+            let _ = writeln!(s, "      --{:<18} {} {}", o.name, o.help, kind);
+        }
+        s
+    }
+}
+
+/// Parsed arguments for one command.
+#[derive(Clone, Debug)]
+pub struct Args {
+    values: BTreeMap<&'static str, String>,
+    switches: BTreeMap<&'static str, bool>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Result<&str> {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)?.parse().with_context(|| format!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)?.parse().with_context(|| format!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)?.parse().with_context(|| format!("--{name} expects a number"))
+    }
+
+    pub fn get_switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    /// Option that may be absent (declared with default "" meaning unset).
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str()).filter(|s| !s.is_empty())
+    }
+}
+
+/// Top-level parser: a set of commands.
+#[derive(Default)]
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    commands: Vec<Command>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self { program, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.program, self.about);
+        let _ = writeln!(s, "USAGE: {} <command> [--opt value ...]\n\nCOMMANDS:", self.program);
+        for c in &self.commands {
+            s.push_str(&c.usage());
+        }
+        s
+    }
+
+    /// Parse `argv[1..]`.  Returns the command name and its parsed args.
+    pub fn parse(&self, argv: &[String]) -> Result<(&'static str, Args)> {
+        let Some(cmd_name) = argv.first() else {
+            bail!("no command given\n\n{}", self.help());
+        };
+        if cmd_name == "help" || cmd_name == "--help" || cmd_name == "-h" {
+            bail!("{}", self.help());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| anyhow!("unknown command {cmd_name:?}\n\n{}", self.help()))?;
+
+        let mut values = BTreeMap::new();
+        let mut switches = BTreeMap::new();
+        for o in &cmd.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name, d.clone());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let name = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --option, got {a:?}\n\n{}", cmd.usage()))?;
+            let opt = cmd
+                .opts
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| anyhow!("unknown option --{name}\n\n{}", cmd.usage()))?;
+            if opt.is_switch {
+                switches.insert(opt.name, true);
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--{name} expects a value"))?;
+                values.insert(opt.name, v.clone());
+                i += 2;
+            }
+        }
+        for o in &cmd.opts {
+            if !o.is_switch && !values.contains_key(o.name) {
+                bail!("missing required option --{}\n\n{}", o.name, cmd.usage());
+            }
+        }
+        Ok((cmd.name, Args { values, switches }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("palmad", "test").command(
+            Command::new("run", "run discovery")
+                .req("input", "series path")
+                .opt("min-l", "64", "min length")
+                .switch("verbose", "chatty"),
+        )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_defaults_switches() {
+        let (cmd, args) =
+            cli().parse(&argv(&["run", "--input", "x.txt", "--verbose"])).unwrap();
+        assert_eq!(cmd, "run");
+        assert_eq!(args.get("input").unwrap(), "x.txt");
+        assert_eq!(args.get_usize("min-l").unwrap(), 64);
+        assert!(args.get_switch("verbose"));
+    }
+
+    #[test]
+    fn override_default() {
+        let (_, args) =
+            cli().parse(&argv(&["run", "--input", "x", "--min-l", "128"])).unwrap();
+        assert_eq!(args.get_usize("min-l").unwrap(), 128);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv(&["run"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(cli().parse(&argv(&["nope"])).is_err());
+        assert!(cli().parse(&argv(&["run", "--input", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_commands() {
+        let h = cli().help();
+        assert!(h.contains("run"));
+        assert!(h.contains("--input"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Offline-environment substrates (DESIGN.md §3): the crates a project
+//! would normally pull from crates.io (rayon/clap/serde/criterion) are not
+//! available here, so minimal purpose-built replacements live in this
+//! module tree.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod rng;

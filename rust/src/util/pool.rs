@@ -1,0 +1,184 @@
+//! A small fixed-size thread pool (rayon replacement).
+//!
+//! Two entry points:
+//!
+//! - [`ThreadPool::run`] — execute a batch of independent closures and
+//!   wait for all of them (panics are propagated).
+//! - [`parallel_map_indexed`] — convenience for "apply f to 0..n in
+//!   parallel, collect results in order", the shape of every tile batch in
+//!   the native engine.
+//!
+//! Jobs are `'static` at the channel level; the scoped-borrow use cases go
+//! through `std::thread::scope` inside `parallel_map_indexed`, so callers
+//! can borrow locals freely.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed worker pool over an mpsc queue.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("palmad-pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx, handles }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run all jobs, blocking until every one has finished.
+    pub fn run(&self, jobs: Vec<Job>) {
+        let (done_tx, done_rx) = channel();
+        let n = jobs.len();
+        for job in jobs {
+            let done = done_tx.clone();
+            self.tx
+                .send(Msg::Run(Box::new(move || {
+                    job();
+                    let _ = done.send(());
+                })))
+                .expect("pool send");
+        }
+        for _ in 0..n {
+            done_rx.recv().expect("pool worker panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Default parallelism: available cores, capped at 16 (the tile batches
+/// are memory-bandwidth-bound; more threads stop helping well before 16).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Apply `f(i)` for `i in 0..n` across `threads` scoped workers; results
+/// are returned in index order.  Work is distributed by an atomic cursor
+/// (dynamic scheduling — tile costs are skewed by early abandons).
+pub fn parallel_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let cursor = AtomicUsize::new(0);
+    let slots = Mutex::new(&mut out);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY-free approach: short critical section per item.
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker filled slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<Job> = (0..100)
+            .map(|i| {
+                let c = Arc::clone(&counter);
+                Box::new(move || {
+                    c.fetch_add(i as u64, Ordering::Relaxed);
+                }) as Job
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn pool_reusable_across_batches() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..5 {
+            let c = Arc::clone(&counter);
+            pool.run(vec![Box::new(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            })]);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let got = parallel_map_indexed(1000, 8, |i| i * 2);
+        assert_eq!(got, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_borrows_locals() {
+        let data: Vec<f64> = (0..100).map(|x| x as f64).collect();
+        let got = parallel_map_indexed(100, 4, |i| data[i] + 1.0);
+        assert_eq!(got[99], 100.0);
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        assert!(parallel_map_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map_indexed(1, 4, |i| i + 7), vec![7]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Cross-algorithm integration: every baseline must agree with the brute
+//! oracle (and with PALMAD) on what the discords are — the precondition
+//! for the Fig. 4/5 comparisons to be meaningful.
+
+use palmad::baselines::{brute, hotsax, kbf, stomp, zhu};
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::core::series::TimeSeries;
+use palmad::engines::native::NativeEngine;
+use palmad::gen::ecg;
+use palmad::gen::random_walk::random_walk;
+
+fn top1_all_algorithms(t: &[f64], m: usize) -> Vec<(&'static str, f64)> {
+    let brute = brute::top_k_discords(t, m, 1)[0];
+    let hotsax = hotsax::top1_discord(t, m, &hotsax::HotsaxConfig::default()).unwrap();
+    let zhu = zhu::zhu_top1(t, m, 4).unwrap();
+    let stomp = stomp::top_k_discords(t, m, 1, 4)[0];
+    let kbf = kbf::kbf_top1(t, m, 1, 4).unwrap();
+    let series = TimeSeries::new("t", t.to_vec());
+    let engine = NativeEngine::with_segn(64);
+    let cfg = MerlinConfig { min_l: m, max_l: m, top_k: 1, ..Default::default() };
+    let palmad = Merlin::new(&engine, cfg).run(&series).unwrap().lengths[0].discords[0];
+    vec![
+        ("brute", brute.nn_dist),
+        ("hotsax", hotsax.nn_dist),
+        ("zhu", zhu.nn_dist),
+        ("stomp", stomp.nn_dist),
+        ("kbf(k=1)", kbf.nn_dist),
+        ("palmad", palmad.nn_dist),
+    ]
+}
+
+#[test]
+fn all_algorithms_agree_on_random_walk() {
+    let t = random_walk(1_500, 41);
+    let results = top1_all_algorithms(&t.values, 32);
+    let reference = results[0].1;
+    for (name, d) in &results {
+        assert!(
+            (d - reference).abs() < 1e-5 * (1.0 + reference),
+            "{name}: {d} vs brute {reference}"
+        );
+    }
+}
+
+#[test]
+fn all_algorithms_agree_on_ecg() {
+    let t = ecg::ecg_with_pvc(4_000, 128.0, 70.0, &[12], 43);
+    let results = top1_all_algorithms(&t.values, 100);
+    let reference = results[0].1;
+    for (name, d) in &results {
+        assert!(
+            (d - reference).abs() < 1e-5 * (1.0 + reference),
+            "{name}: {d} vs brute {reference}"
+        );
+    }
+}
+
+#[test]
+fn stomp_profile_equals_pd3_with_r_zero() {
+    // PD3 at r=0 computes the exact matrix profile (nothing prunes).
+    use palmad::coordinator::drag::{pd3, Pd3Config};
+    use palmad::coordinator::metrics::DragMetrics;
+    use palmad::core::stats::RollingStats;
+    use palmad::engines::SeriesView;
+
+    let t = random_walk(800, 45);
+    let m = 20;
+    let mp = stomp::matrix_profile(&t.values, m, 4);
+    let stats = RollingStats::compute(&t.values, m);
+    let view = SeriesView { t: &t.values, stats: &stats };
+    let engine = NativeEngine::with_segn(64);
+    let mut metrics = DragMetrics::default();
+    let all = pd3(&engine, &view, 0.0, &Pd3Config::default(), &mut metrics).unwrap();
+    assert_eq!(all.len(), mp.len());
+    for d in &all {
+        let want = mp[d.idx].max(0.0).sqrt();
+        assert!(
+            (d.nn_dist - want).abs() < 1e-6 * (1.0 + want),
+            "idx {}: {} vs {}",
+            d.idx,
+            d.nn_dist,
+            want
+        );
+    }
+}
+
+#[test]
+fn hotsax_and_merlin_rank_same_top3() {
+    let t = random_walk(1_200, 47);
+    let m = 24;
+    let hs = hotsax::top_k_discords(&t.values, m, 3, &hotsax::HotsaxConfig::default());
+    let series = TimeSeries::new("t", t.values.clone());
+    let engine = NativeEngine::with_segn(64);
+    let cfg = MerlinConfig { min_l: m, max_l: m, top_k: 3, ..Default::default() };
+    let pm = Merlin::new(&engine, cfg).run(&series).unwrap().lengths[0].discords.clone();
+    assert_eq!(hs.len(), pm.len());
+    for (a, b) in hs.iter().zip(&pm) {
+        assert!(
+            (a.nn_dist - b.nn_dist).abs() < 1e-5 * (1.0 + a.nn_dist),
+            "hotsax {} vs palmad {}",
+            a.nn_dist,
+            b.nn_dist
+        );
+    }
+}
+
+#[test]
+fn kbf_k3_differs_from_k1_on_twins() {
+    // Sanity of the K-distance concept on the twin-freak construction.
+    let mut t: Vec<f64> = (0..800).map(|i| (i as f64 * 0.15).sin()).collect();
+    for off in [200usize, 600] {
+        for k in 0..24 {
+            t[off + k] += if k % 2 == 0 { 1.5 } else { -1.5 };
+        }
+    }
+    let k1 = kbf::kbf_top1(&t, 24, 1, 4).unwrap();
+    let k3 = kbf::kbf_top1(&t, 24, 3, 4).unwrap();
+    let planted = |i: usize| (177..=223).contains(&i) || (577..=623).contains(&i);
+    assert!(planted(k3.idx), "K=3 missed the twins: {}", k3.idx);
+    assert!(k3.nn_dist > k1.nn_dist);
+}

@@ -1,0 +1,197 @@
+//! End-to-end MERLIN integration: accuracy against planted anomalies on
+//! every generator, serial/parallel equivalence, engine equivalence, and
+//! the heatmap/ranking pipeline.
+
+use palmad::analysis::heatmap::Heatmap;
+use palmad::analysis::ranking::top_k_interesting;
+use palmad::baselines::merlin_serial;
+use palmad::coordinator::merlin::{Merlin, MerlinConfig, StatsBackend};
+use palmad::core::series::TimeSeries;
+use palmad::engines::native::NativeEngine;
+use palmad::gen::inject::{inject_random, InjectionKind};
+use palmad::gen::{ecg, heating, power, random_walk, respiration, shuttle};
+
+fn run_merlin(t: &TimeSeries, min_l: usize, max_l: usize, top_k: usize) -> Vec<palmad::Discord> {
+    let engine = NativeEngine::with_segn(128);
+    let cfg = MerlinConfig { min_l, max_l, top_k, ..Default::default() };
+    Merlin::new(&engine, cfg).run(t).unwrap().all_discords().copied().collect()
+}
+
+#[test]
+fn finds_planted_anomalies_in_random_walk() {
+    let mut t = random_walk::random_walk(8_000, 3);
+    // Three *distinct* anomaly shapes: identical injections would be
+    // twins (mutually nearest neighbors with small distances) — the
+    // classic "twin freak" problem discords are known not to solve (§1).
+    let planted = inject_random(
+        &mut t,
+        3,
+        64,
+        &[InjectionKind::SpikeTrain, InjectionKind::NoiseBurst, InjectionKind::LevelShift],
+        17,
+    );
+    assert_eq!(planted.len(), 3);
+    let discords = run_merlin(&t, 48, 64, 3);
+    // At least two of the three planted anomalies must be discovered (the
+    // third can legitimately be out-scored by a natural walk discord when
+    // its local spike scale lands in a low-variance stretch).
+    let found = planted
+        .iter()
+        .filter(|p| discords.iter().any(|d| p.hit(d.idx, d.m)))
+        .count();
+    assert!(found >= 2, "only {found}/3 planted anomalies discovered");
+    // And the single best discord must be a planted one.
+    let top = discords
+        .iter()
+        .max_by(|a, b| a.nn_dist.partial_cmp(&b.nn_dist).unwrap())
+        .unwrap();
+    assert!(
+        planted.iter().any(|p| p.hit(top.idx, top.m)),
+        "top discord at {} is not a planted anomaly",
+        top.idx
+    );
+}
+
+#[test]
+fn finds_pvc_in_ecg() {
+    let t = ecg::ecg_with_pvc(12_000, 128.0, 70.0, &[40], 5);
+    let pvc = ecg::beat_sample(128.0, 70.0, 40);
+    let discords = run_merlin(&t, 96, 112, 1);
+    let hits = discords.iter().filter(|d| d.idx + d.m > pvc && d.idx < pvc + 250).count();
+    assert!(hits * 2 > discords.len(), "{hits}/{}", discords.len());
+}
+
+#[test]
+fn finds_defective_valve_cycle() {
+    let t = shuttle::shuttle_valve(40, 150, &[23], 7);
+    let defect_start = 23 * 150;
+    let discords = run_merlin(&t, 120, 150, 1);
+    let top = discords
+        .iter()
+        .max_by(|a, b| {
+            let na = a.nn_dist / (a.m as f64).sqrt();
+            let nb = b.nn_dist / (b.m as f64).sqrt();
+            na.partial_cmp(&nb).unwrap()
+        })
+        .unwrap();
+    assert!(
+        top.idx + top.m > defect_start && top.idx < defect_start + 300,
+        "top discord at {} not in defect cycle {defect_start}",
+        top.idx
+    );
+}
+
+#[test]
+fn finds_holiday_in_power_demand() {
+    let t = power::power_demand(28, &[9], 9); // day 9 (Wed) is a holiday
+    let discords = run_merlin(&t, 96, 96, 1); // one-day windows
+    let d = discords[0];
+    let holiday = 9 * power::SAMPLES_PER_DAY;
+    // The discord window should cover part of the holiday.
+    assert!(
+        d.idx + d.m > holiday && d.idx < holiday + power::SAMPLES_PER_DAY,
+        "discord at {} misses holiday {holiday}",
+        d.idx
+    );
+}
+
+#[test]
+fn finds_wake_transition_in_respiration() {
+    let t = respiration::respiration(10_000, 10.0, 6_000, 11);
+    let discords = run_merlin(&t, 200, 220, 1);
+    // The discord should sit near the regime transition (the only
+    // non-repeating structure).
+    let hits = discords.iter().filter(|d| (5_200..7_000).contains(&d.idx)).count();
+    assert!(hits * 2 > discords.len(), "{hits}/{} near transition", discords.len());
+}
+
+#[test]
+fn serial_merlin_equivalence_on_heating_slice() {
+    let (t, _) = heating::heating_year(13);
+    let t = t.prefix(4_000);
+    let serial = merlin_serial::merlin(&t.values, 24, 32, 1);
+    let parallel = {
+        let engine = NativeEngine::with_segn(64);
+        let cfg = MerlinConfig { min_l: 24, max_l: 32, top_k: 1, ..Default::default() };
+        Merlin::new(&engine, cfg).run(&t).unwrap()
+    };
+    for (s, p) in serial.iter().zip(&parallel.lengths) {
+        assert_eq!(s.m, p.m);
+        let (sd, pd) = (&s.discords[0], &p.discords[0]);
+        assert!(
+            (sd.nn_dist - pd.nn_dist).abs() < 1e-6 * (1.0 + sd.nn_dist),
+            "m={}: {} vs {}",
+            s.m,
+            sd.nn_dist,
+            pd.nn_dist
+        );
+    }
+}
+
+#[test]
+fn aot_stats_backend_equals_native_backend() {
+    // Only runs when artifacts exist (XLA engine needed for AOT stats).
+    let Ok(artifacts) = palmad::runtime::artifact::ArtifactSet::load(
+        palmad::runtime::artifact::ArtifactSet::default_dir(),
+    ) else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let segn = *artifacts.tile_segns().first().unwrap();
+    let engine = palmad::engines::xla::XlaEngine::new(artifacts, segn).unwrap();
+    let t = random_walk::random_walk(3_000, 21);
+    let base = MerlinConfig { min_l: 32, max_l: 40, top_k: 1, ..Default::default() };
+    let native = Merlin::new(&engine, base.clone()).run(&t).unwrap();
+    let aot = Merlin::new(
+        &engine,
+        MerlinConfig { stats_backend: StatsBackend::Aot, ..base },
+    )
+    .run(&t)
+    .unwrap();
+    for (a, b) in native.lengths.iter().zip(&aot.lengths) {
+        assert_eq!(a.discords[0].idx, b.discords[0].idx, "m={}", a.m);
+        assert!((a.discords[0].nn_dist - b.discords[0].nn_dist).abs() < 1e-2);
+    }
+}
+
+#[test]
+fn heatmap_pipeline_surfaces_stuck_sensor() {
+    let (t, planted) = heating::heating_year(29);
+    let t = t.prefix(10_000);
+    let planted: Vec<_> = planted.into_iter().filter(|p| p.start + p.len < 10_000).collect();
+    assert!(!planted.is_empty());
+    let engine = NativeEngine::with_segn(128);
+    let mut lengths = Vec::new();
+    for m in [48usize, 96, 192] {
+        let cfg = MerlinConfig { min_l: m, max_l: m, top_k: 0, ..Default::default() };
+        lengths.extend(Merlin::new(&engine, cfg).run(&t).unwrap().lengths);
+    }
+    let res = palmad::coordinator::merlin::MerlinResult { lengths, metrics: Default::default() };
+    let hm = Heatmap::from_result(&res, t.len());
+    let top = top_k_interesting(&hm, 3);
+    assert!(!top.is_empty());
+    let hit = top.iter().any(|r| {
+        planted.iter().any(|p| p.start < r.idx + r.m && r.idx < p.start + p.len)
+    });
+    assert!(hit, "top-3 interesting discords missed all planted anomalies: {top:?}");
+}
+
+#[test]
+fn segn_invariance_of_results() {
+    let t = random_walk::random_walk(3_000, 33);
+    let mut reference: Option<Vec<(usize, u64)>> = None;
+    for segn in [32usize, 100, 256, 1024] {
+        let engine = NativeEngine::with_segn(segn);
+        let cfg = MerlinConfig { min_l: 24, max_l: 28, top_k: 1, ..Default::default() };
+        let res = Merlin::new(&engine, cfg).run(&t).unwrap();
+        let sig: Vec<(usize, u64)> = res
+            .lengths
+            .iter()
+            .map(|l| (l.discords[0].idx, (l.discords[0].nn_dist * 1e9) as u64))
+            .collect();
+        match &reference {
+            None => reference = Some(sig),
+            Some(r) => assert_eq!(r, &sig, "segn={segn} changed the result"),
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Service-level integration: job lifecycle under load, failure isolation,
+//! and protocol robustness against malformed input.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use palmad::coordinator::config::EngineOptions;
+use palmad::coordinator::service::{JobSpec, JobState, Service};
+
+fn spec(seed: u64) -> JobSpec {
+    JobSpec { dataset: "respiration".into(), n: Some(3_000), seed, min_l: 32, max_l: 36, top_k: 1 }
+}
+
+#[test]
+fn mixed_success_and_failure_batch() {
+    let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 3).unwrap();
+    let ok_ids: Vec<u64> = (0..4).map(|k| svc.submit(spec(k))).collect();
+    let bad_dataset = svc.submit(JobSpec { dataset: "missing".into(), ..spec(9) });
+    let bad_range = svc.submit(JobSpec { min_l: 2_000, max_l: 2_100, ..spec(10) });
+    for id in ok_ids {
+        match svc.wait(id) {
+            Some(JobState::Done { discords, .. }) => assert_eq!(discords.len(), 5),
+            other => panic!("job {id}: {other:?}"),
+        }
+    }
+    assert!(matches!(svc.wait(bad_dataset), Some(JobState::Failed(_))));
+    assert!(matches!(svc.wait(bad_range), Some(JobState::Failed(_))));
+    let (submitted, done, failed, _) = svc.metrics();
+    assert_eq!((submitted, done, failed), (6, 4, 2));
+    svc.shutdown();
+}
+
+#[test]
+fn protocol_rejects_garbage_without_dying() {
+    let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let svc = std::sync::Arc::new(svc);
+    let svc2 = std::sync::Arc::clone(&svc);
+    let server = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if svc2.handle_conn_public(stream.unwrap()) {
+                break;
+            }
+        }
+    });
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    let mut roundtrip = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
+        writeln!(conn, "{req}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    };
+    assert!(roundtrip(&mut conn, &mut reader, "FROBNICATE").starts_with("ERR"));
+    assert!(roundtrip(&mut conn, &mut reader, "RUN nonsense").starts_with("ERR"));
+    assert!(roundtrip(&mut conn, &mut reader, "RUN gen=ecg2").starts_with("ERR"));
+    assert!(roundtrip(&mut conn, &mut reader, "STATUS 999").starts_with("ERR"));
+    assert!(roundtrip(&mut conn, &mut reader, "STATUS notanumber").starts_with("ERR"));
+    // Still alive for a well-formed request.
+    let ok = roundtrip(&mut conn, &mut reader, "RUN gen=respiration n=3000 minl=32 maxl=33 seed=1");
+    assert!(ok.starts_with("OK JOB"), "{ok}");
+    assert_eq!(roundtrip(&mut conn, &mut reader, "SHUTDOWN"), "OK BYE");
+    server.join().unwrap();
+}
+
+#[test]
+fn many_small_jobs_saturate_workers() {
+    let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 4).unwrap();
+    let ids: Vec<u64> = (0..12)
+        .map(|k| {
+            svc.submit(JobSpec {
+                dataset: "ecg2".into(),
+                n: Some(2_000),
+                seed: k,
+                min_l: 20,
+                max_l: 22,
+                top_k: 1,
+            })
+        })
+        .collect();
+    let mut total = 0;
+    for id in ids {
+        match svc.wait(id) {
+            Some(JobState::Done { discords, .. }) => total += discords.len(),
+            other => panic!("{other:?}"),
+        }
+    }
+    assert_eq!(total, 12 * 3);
+    svc.shutdown();
+}

@@ -1,0 +1,155 @@
+//! End-to-end check of the AOT bridge: the Pallas/JAX tile and stats
+//! kernels (compiled to HLO text by `make artifacts`) must agree with the
+//! native f64 engine on identical inputs.
+//!
+//! Requires artifacts; skipped (with a loud note) when
+//! `artifacts/manifest.txt` is missing so plain `cargo test` still works
+//! before the first `make artifacts`.
+
+use palmad::core::stats::RollingStats;
+use palmad::coordinator::drag::{pd3, Pd3Config};
+use palmad::coordinator::metrics::DragMetrics;
+use palmad::engines::native::{compute_tile, NativeEngine};
+use palmad::engines::{Engine, SeriesView, TileTask};
+use palmad::runtime::artifact::ArtifactSet;
+use palmad::engines::xla::XlaEngine;
+use palmad::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactSet> {
+    let dir = ArtifactSet::default_dir();
+    match ArtifactSet::load(&dir) {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("SKIP: no artifacts in {dir:?}; run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn random_walk(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed(seed);
+    let mut acc = 0.0;
+    (0..n)
+        .map(|_| {
+            acc += rng.normal();
+            acc
+        })
+        .collect()
+}
+
+/// Compare XLA tile outputs against the native engine within f32 slack.
+fn compare_tiles(t: &[f64], m: usize, segn: usize, r2: f64, tasks: &[TileTask], xla: &XlaEngine) {
+    let stats = RollingStats::compute(t, m);
+    let view = SeriesView { t, stats: &stats };
+    let got = xla.compute_tiles(&view, r2, tasks).unwrap();
+    for (k, task) in tasks.iter().enumerate() {
+        let want = compute_tile(&view, segn, r2, *task);
+        for i in 0..segn {
+            let (g, w) = (got[k].row_min[i], want.row_min[i]);
+            assert_eq!(g.is_finite(), w.is_finite(), "task {k} row {i} finiteness: {g} vs {w}");
+            if w.is_finite() {
+                // f32 kernel vs f64 native: tolerance scales with m.
+                let tol = 2e-3 * (1.0 + w);
+                assert!((g - w).abs() < tol, "task {k} row {i}: {g} vs {w}");
+            }
+            let (g, w) = (got[k].col_min[i], want.col_min[i]);
+            assert_eq!(g.is_finite(), w.is_finite(), "task {k} col {i} finiteness");
+            if w.is_finite() {
+                let tol = 2e-3 * (1.0 + w);
+                assert!((g - w).abs() < tol, "task {k} col {i}: {g} vs {w}");
+            }
+            // Kill flags may legitimately differ within f32 slack of the
+            // threshold; only check where the native distance is clearly
+            // on one side.
+            let margin = 1e-3 * (1.0 + r2);
+            if want.row_min[i].is_finite() && (want.row_min[i] - r2).abs() > margin {
+                assert_eq!(got[k].row_kill[i], want.row_kill[i], "task {k} row_kill {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn tile_kernel_matches_native_engine() {
+    let Some(set) = artifacts() else { return };
+    let segn = *set.tile_segns().first().expect("tile artifacts");
+    let xla = XlaEngine::new(set, segn).unwrap();
+    let t = random_walk(1200, 42);
+    let m = 50;
+    let tasks = vec![
+        TileTask { seg_start: 0, chunk_start: 0 },      // self tile
+        TileTask { seg_start: 0, chunk_start: segn },   // adjacent
+        TileTask { seg_start: segn, chunk_start: 640 }, // disjoint
+        TileTask { seg_start: 640, chunk_start: 0 },    // left scan
+        TileTask { seg_start: 1100, chunk_start: 0 },   // ragged tail rows
+    ];
+    compare_tiles(&t, m, segn, 30.0, &tasks, &xla);
+}
+
+#[test]
+fn tile_kernel_handles_flat_windows() {
+    let Some(set) = artifacts() else { return };
+    let segn = *set.tile_segns().first().unwrap();
+    let xla = XlaEngine::new(set, segn).unwrap();
+    let mut t = random_walk(800, 7);
+    for v in &mut t[300..450] {
+        *v = 21.5; // stuck sensor
+    }
+    let tasks = vec![
+        TileTask { seg_start: 256, chunk_start: 384 },
+        TileTask { seg_start: 320, chunk_start: 320 },
+    ];
+    compare_tiles(&t, 40, segn, 10.0, &tasks, &xla);
+}
+
+#[test]
+fn aot_stats_match_native() {
+    let Some(set) = artifacts() else { return };
+    let segn = *set.tile_segns().first().unwrap();
+    let xla = XlaEngine::new(set, segn).unwrap();
+    let t = random_walk(5000, 9);
+    let m = 64;
+    let aot = xla.aot_stats_init(&t, m).unwrap();
+    let native = RollingStats::compute(&t, m);
+    assert_eq!(aot.len(), native.len());
+    for i in 0..native.len() {
+        // f32 series input limits the agreement.
+        assert!((aot.mu[i] - native.mu[i]).abs() < 1e-3 * (1.0 + native.mu[i].abs()), "mu {i}");
+        assert!((aot.sig[i] - native.sig[i]).abs() < 1e-2 * (1.0 + native.sig[i]), "sig {i}");
+    }
+    // Recurrent update (Eqs. 7/8) via the Pallas kernel.
+    let aot2 = xla.aot_stats_update(&t, &aot).unwrap();
+    let native2 = RollingStats::compute(&t, m + 1);
+    assert_eq!(aot2.m, m + 1);
+    assert_eq!(aot2.len(), native2.len());
+    for i in 0..native2.len() {
+        assert!((aot2.mu[i] - native2.mu[i]).abs() < 1e-3 * (1.0 + native2.mu[i].abs()));
+        assert!((aot2.sig[i] - native2.sig[i]).abs() < 1e-2 * (1.0 + native2.sig[i]));
+    }
+}
+
+#[test]
+fn pd3_same_discords_on_both_engines() {
+    let Some(set) = artifacts() else { return };
+    let segn = *set.tile_segns().first().unwrap();
+    let xla = XlaEngine::new(set, segn).unwrap();
+    let native = NativeEngine::with_segn(segn);
+    let t = random_walk(3000, 77);
+    let m = 48;
+    let stats = RollingStats::compute(&t, m);
+    let view = SeriesView { t: &t, stats: &stats };
+    let r = 3.0;
+    let cfg = Pd3Config::default();
+    let mut mx = DragMetrics::default();
+    let mut mn = DragMetrics::default();
+    let mut dx = pd3(&xla, &view, r, &cfg, &mut mx).unwrap();
+    let mut dn = pd3(&native, &view, r, &cfg, &mut mn).unwrap();
+    dx.sort_by_key(|d| d.idx);
+    dn.sort_by_key(|d| d.idx);
+    let ix: Vec<usize> = dx.iter().map(|d| d.idx).collect();
+    let i_n: Vec<usize> = dn.iter().map(|d| d.idx).collect();
+    assert_eq!(ix, i_n, "survivor sets differ between engines");
+    for (a, b) in dx.iter().zip(&dn) {
+        assert!((a.nn_dist - b.nn_dist).abs() < 1e-2 * (1.0 + b.nn_dist));
+    }
+}

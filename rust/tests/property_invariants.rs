@@ -1,0 +1,348 @@
+//! Property-based invariant suites (DESIGN.md §6) over randomized series
+//! shapes: walks, noise, periodic, flat plateaus, huge offsets.
+
+use palmad::baselines::{brute, drag_serial};
+use palmad::coordinator::drag::{pd3, Pd3Config};
+use palmad::coordinator::metrics::DragMetrics;
+use palmad::coordinator::segmentation::Segmentation;
+use palmad::core::distance::{ed2norm, max_ed};
+use palmad::core::stats::RollingStats;
+use palmad::engines::native::NativeEngine;
+use palmad::engines::SeriesView;
+use palmad::testkit::{check, Config, SeriesGen};
+use palmad::util::rng::Rng;
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Eqs. 7/8: chained recurrent stats equal fresh per-length stats for any
+/// series shape and any number of steps.
+#[test]
+fn prop_stats_recurrence_exact() {
+    check("stats-recurrence", Config { cases: 40, ..Default::default() }, |rng| {
+        let n = rng.int_in(40, 400);
+        let kind = SeriesGen::random(rng);
+        let t = kind.generate(n, rng);
+        let m0 = rng.int_in(2, (n / 4).max(3).min(40));
+        let steps = rng.int_in(1, (n - m0 - 1).min(30));
+        let mut s = RollingStats::compute(&t, m0);
+        for _ in 0..steps {
+            s.advance(&t);
+        }
+        let fresh = RollingStats::naive(&t, m0 + steps);
+        for i in 0..fresh.len() {
+            if !close(s.mu[i], fresh.mu[i], 1e-8) {
+                return Err(format!("{kind:?} n={n} m0={m0} steps={steps} mu[{i}]: {} vs {}", s.mu[i], fresh.mu[i]));
+            }
+            // 1e-4: LargeOffset series lose ~11 digits to the E[x^2]-mu^2
+            // cancellation; recurrence and two-pass round differently.
+            if !close(s.sig[i], fresh.sig[i], 1e-4) {
+                return Err(format!("{kind:?} n={n} m0={m0} steps={steps} sig[{i}]: {} vs {}", s.sig[i], fresh.sig[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Distance bounds: 0 <= ED^2 <= 4m for any window pair, and symmetry.
+#[test]
+fn prop_distance_bounds_and_symmetry() {
+    check("distance-bounds", Config { cases: 60, ..Default::default() }, |rng| {
+        let m = rng.int_in(3, 64);
+        let kind = SeriesGen::random(rng);
+        // i <= m-1, j <= i + 2m - 1, so j + m <= 4m - 2 < 4m.
+        let t = kind.generate(4 * m, rng);
+        let i = rng.below(m);
+        let j = i + m + rng.below(m);
+        let a = &t[i..i + m];
+        let b = &t[j..j + m];
+        let d1 = ed2norm(a, b);
+        let d2 = ed2norm(b, a);
+        if !(d1 >= 0.0 && d1 <= max_ed(m).powi(2) + 1e-6) {
+            return Err(format!("{kind:?} m={m}: out of bounds d={d1}"));
+        }
+        if !close(d1, d2, 1e-12) {
+            return Err(format!("asymmetry {d1} vs {d2}"));
+        }
+        Ok(())
+    });
+}
+
+/// PD3 == serial DRAG == brute force for arbitrary r and segn, including
+/// flat-plateau and large-offset series.
+#[test]
+fn prop_pd3_equals_serial_and_brute() {
+    check("pd3-vs-oracles", Config { cases: 25, ..Default::default() }, |rng| {
+        let n = rng.int_in(80, 260);
+        let kind = SeriesGen::random(rng);
+        let t = kind.generate(n, rng);
+        let m = rng.int_in(4, (n / 4).min(24));
+        let r_frac = rng.range(0.05, 1.1);
+        let r = r_frac * max_ed(m);
+        let segn = rng.int_in(4, 80);
+
+        let stats = RollingStats::compute(&t, m);
+        let view = SeriesView { t: &t, stats: &stats };
+        let engine = NativeEngine::with_segn(segn);
+        let mut metrics = DragMetrics::default();
+        let cfg = Pd3Config {
+            deferred_neighbor_kill: rng.chance(0.5),
+            early_stop: rng.chance(0.9),
+        };
+        let mut par = pd3(&engine, &view, r, &cfg, &mut metrics)
+            .map_err(|e| format!("pd3: {e}"))?;
+        par.sort_by_key(|d| d.idx);
+
+        let serial = drag_serial::drag(&t, m, r);
+        let mut want = brute::range_discords(&t, m, r);
+        want.sort_by_key(|d| d.idx);
+
+        let pi: Vec<usize> = par.iter().map(|d| d.idx).collect();
+        let si: Vec<usize> = serial.iter().map(|d| d.idx).collect();
+        let wi: Vec<usize> = want.iter().map(|d| d.idx).collect();
+        if pi != wi {
+            return Err(format!("{kind:?} n={n} m={m} r={r:.3} segn={segn}: pd3 {pi:?} vs brute {wi:?}"));
+        }
+        if si != wi {
+            return Err(format!("{kind:?} n={n} m={m} r={r:.3}: serial {si:?} vs brute {wi:?}"));
+        }
+        // 1e-4: the Eq. 6 dot-product form and the direct znorm form round
+        // differently under large offsets (both are exact up to f64
+        // cancellation; see DESIGN.md §6).
+        for (g, w) in par.iter().zip(&want) {
+            if !close(g.nn_dist, w.nn_dist, 1e-4) {
+                return Err(format!("nnDist at {}: {} vs {}", g.idx, g.nn_dist, w.nn_dist));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Survivors of PD3 always satisfy the range-discord definition
+/// (nnDist >= r), and every non-survivor has a match closer than r.
+#[test]
+fn prop_pd3_survivor_definition() {
+    check("pd3-survivor-def", Config { cases: 20, ..Default::default() }, |rng| {
+        let n = rng.int_in(80, 200);
+        let t = SeriesGen::random(rng).generate(n, rng);
+        let m = rng.int_in(4, 16);
+        let r = rng.range(0.2, 0.9) * max_ed(m);
+        let stats = RollingStats::compute(&t, m);
+        let view = SeriesView { t: &t, stats: &stats };
+        let engine = NativeEngine::with_segn(16);
+        let mut metrics = DragMetrics::default();
+        let found = pd3(&engine, &view, r, &Pd3Config::default(), &mut metrics)
+            .map_err(|e| format!("{e}"))?;
+        let nn = brute::nn_profile(&t, m);
+        let found_idx: std::collections::HashSet<usize> = found.iter().map(|d| d.idx).collect();
+        for (i, &d2) in nn.iter().enumerate() {
+            let is_discord = d2.is_finite() && d2 >= r * r;
+            if is_discord != found_idx.contains(&i) {
+                return Err(format!("window {i}: nn2={d2}, r2={}, in set: {}", r * r, found_idx.contains(&i)));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Segmentation covers every window exactly once.
+#[test]
+fn prop_segmentation_partition() {
+    check("segmentation-partition", Config { cases: 50, ..Default::default() }, |rng| {
+        let nwin = rng.int_in(1, 5000);
+        let segn = rng.int_in(1, 600);
+        let seg = Segmentation::new(nwin, segn);
+        let mut covered = vec![0u8; nwin];
+        for s in 0..seg.nseg {
+            for i in seg.seg_range(s) {
+                covered[i] += 1;
+                if seg.segment_of(i) != s {
+                    return Err(format!("segment_of({i}) != {s}"));
+                }
+            }
+        }
+        if covered.iter().any(|&c| c != 1) {
+            return Err(format!("nwin={nwin} segn={segn}: not a partition"));
+        }
+        Ok(())
+    });
+}
+
+/// Bitmap any_in_range agrees with a naive scan for random operations.
+#[test]
+fn prop_bitmap_matches_naive() {
+    use palmad::core::bitmap::Bitmap;
+    check("bitmap-naive", Config { cases: 40, ..Default::default() }, |rng| {
+        let len = rng.int_in(1, 400);
+        let mut bm = Bitmap::ones(len);
+        let mut naive = vec![true; len];
+        for _ in 0..rng.int_in(0, 3 * len) {
+            let i = rng.below(len);
+            let v = rng.chance(0.4);
+            bm.set(i, v);
+            naive[i] = v;
+        }
+        if bm.count() != naive.iter().filter(|&&b| b).count() {
+            return Err("count mismatch".into());
+        }
+        for _ in 0..20 {
+            let a = rng.below(len + 1);
+            let b = rng.below(len + 2);
+            let got = bm.any_in_range(a, b);
+            let want = naive[a.min(len)..b.min(len).max(a.min(len))].iter().any(|&x| x);
+            if got != want {
+                return Err(format!("any_in_range({a},{b}): {got} vs {want}"));
+            }
+        }
+        let set_bits: Vec<usize> = bm.iter_set().collect();
+        let naive_bits: Vec<usize> =
+            naive.iter().enumerate().filter(|(_, &b)| b).map(|(i, _)| i).collect();
+        if set_bits != naive_bits {
+            return Err("iter_set mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// Eq. 9 padding always yields enough full segments (paper's invariant).
+#[test]
+fn prop_eq9_padding() {
+    use palmad::coordinator::segmentation::pad_len;
+    check("eq9-padding", Config { cases: 60, ..Default::default() }, |rng| {
+        let m = rng.int_in(3, 100);
+        let seglen = m + rng.int_in(1, 200);
+        let n = seglen + rng.int_in(1, 10_000);
+        let pad = pad_len(n, m, seglen);
+        let segn = seglen - m + 1;
+        let nwin = n - m + 1;
+        let nseg = nwin.div_ceil(segn);
+        let padded_nwin = n + pad - m + 1;
+        if padded_nwin < nseg * segn {
+            return Err(format!("n={n} m={m} seglen={seglen}: pad {pad} too small"));
+        }
+        if pad < m - 1 {
+            return Err(format!("pad {pad} < m-1"));
+        }
+        Ok(())
+    });
+}
+
+/// Top-k selection: results are sorted, non-overlapping, and dominated by
+/// no excluded candidate.
+#[test]
+fn prop_topk_dominance() {
+    use palmad::core::topk::{top_k_non_overlapping, Scored};
+    check("topk-dominance", Config { cases: 40, ..Default::default() }, |rng| {
+        let n = rng.int_in(1, 120);
+        let m = rng.int_in(1, 20);
+        let k = rng.int_in(0, 8);
+        let items: Vec<Scored> = (0..n)
+            .map(|_| Scored { idx: rng.below(1000), nn_dist: rng.range(0.0, 10.0) })
+            .collect();
+        let picked = top_k_non_overlapping(&items, m, k);
+        // Sorted descending.
+        for w in picked.windows(2) {
+            if w[0].nn_dist < w[1].nn_dist {
+                return Err("not sorted".into());
+            }
+        }
+        // Non-overlapping.
+        for a in 0..picked.len() {
+            for b in a + 1..picked.len() {
+                if picked[a].idx.abs_diff(picked[b].idx) < m {
+                    return Err("overlap".into());
+                }
+            }
+        }
+        // Every unpicked item is either overlapped by a better pick or
+        // k was reached.
+        if k > 0 && picked.len() < k {
+            for it in &items {
+                let excluded = picked.iter().any(|p| {
+                    p.idx.abs_diff(it.idx) < m
+                });
+                if !excluded {
+                    return Err(format!("item {it:?} unexplainedly dropped"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A planted flat plateau never crashes discovery and never yields a
+/// discord with non-finite distance (the FLAT_EPS semantics).
+#[test]
+fn prop_flat_plateaus_safe() {
+    check("flat-safe", Config { cases: 20, ..Default::default() }, |rng| {
+        let n = rng.int_in(100, 300);
+        let t = SeriesGen::WithPlateau.generate(n, rng);
+        let m = rng.int_in(4, 20);
+        let r = rng.range(0.1, 0.8) * max_ed(m);
+        let stats = RollingStats::compute(&t, m);
+        let view = SeriesView { t: &t, stats: &stats };
+        let engine = NativeEngine::with_segn(32);
+        let mut metrics = DragMetrics::default();
+        let found = pd3(&engine, &view, r, &Pd3Config::default(), &mut metrics)
+            .map_err(|e| format!("{e}"))?;
+        for d in &found {
+            if !d.nn_dist.is_finite() || d.nn_dist < 0.0 {
+                return Err(format!("bad discord {d:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Determinism: the same seed-built workload gives identical results
+/// across thread counts.
+#[test]
+fn prop_thread_determinism() {
+    check("thread-determinism", Config { cases: 8, ..Default::default() }, |rng| {
+        let t = SeriesGen::Walk.generate(400, rng);
+        let m = 16;
+        let r = 0.4 * max_ed(m);
+        let stats = RollingStats::compute(&t, m);
+        let view = SeriesView { t: &t, stats: &stats };
+        let mut results = Vec::new();
+        for threads in [1usize, 4] {
+            let engine = NativeEngine::new(palmad::engines::native::NativeConfig {
+                segn: 32,
+                threads,
+            });
+            let mut metrics = DragMetrics::default();
+            let mut found = pd3(&engine, &view, r, &Pd3Config::default(), &mut metrics)
+                .map_err(|e| format!("{e}"))?;
+            found.sort_by_key(|d| d.idx);
+            results.push(found);
+        }
+        if results[0].len() != results[1].len() {
+            return Err("different survivor counts across thread counts".into());
+        }
+        for (a, b) in results[0].iter().zip(&results[1]) {
+            if a.idx != b.idx || (a.nn_dist - b.nn_dist).abs() > 1e-12 {
+                return Err(format!("{a:?} vs {b:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Rng sanity: uniform in range, below() in bounds (meta-test of the
+/// substrate the properties rely on).
+#[test]
+fn prop_rng_bounds() {
+    check("rng-bounds", Config { cases: 20, ..Default::default() }, |rng| {
+        let lo = rng.range(-100.0, 0.0);
+        let hi = lo + rng.range(0.1, 100.0);
+        let mut inner = Rng::seed(rng.next_u64());
+        for _ in 0..100 {
+            let v = inner.range(lo, hi);
+            if !(lo..hi).contains(&v) {
+                return Err(format!("range({lo},{hi}) gave {v}"));
+            }
+        }
+        Ok(())
+    });
+}
