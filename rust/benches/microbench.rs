@@ -1,13 +1,44 @@
 //! Hot-path microbenchmarks for the L3 perf pass (EXPERIMENTS.md §Perf):
-//! dot products, early-abandon distance, the rolling-stat recurrence, one
-//! native tile, and the PJRT tile call, with derived throughput rates.
+//! dot products, early-abandon distance, the rolling-stat recurrence, the
+//! native tile in both pipelines (legacy alloc-per-tile vs scratch-arena),
+//! the end-to-end MERLIN before/after, and the PJRT tile call.
+//!
+//! Besides the human-readable table (and the usual dump under
+//! `target/bench-results/`), this bench emits two machine-readable
+//! artifacts at the repo root so the perf trajectory is trackable across
+//! PRs:
+//!
+//! - `BENCH_native_tile.json` — single-tile cost, legacy vs scratch
+//!   pipeline, with cells/s rates and the speedup ratio.
+//! - `BENCH_merlin.json` — end-to-end MERLIN (n = 2^16, lengths 64..128,
+//!   native engine) for the pre-PR baseline pipeline and the current one.
 
 use palmad::bench::harness::{default_reps, measure, quick_mode, Bench};
+use palmad::bench::stats::Summary;
+use palmad::coordinator::merlin::{Merlin, MerlinConfig};
 use palmad::core::distance::{dot, ed2_early_abandon, znorm};
 use palmad::core::stats::RollingStats;
-use palmad::engines::native::compute_tile;
+use palmad::engines::native::{
+    compute_tile, compute_tile_alloc, NativeConfig, NativeEngine, TilePipeline,
+};
 use palmad::engines::{Engine, SeriesView, TileTask};
 use palmad::gen::random_walk::random_walk;
+use palmad::util::json::Json;
+
+fn summary_json(s: &Summary) -> Json {
+    Json::obj()
+        .set("median_s", s.median)
+        .set("min_s", s.min)
+        .set("mean_s", s.mean)
+        .set("reps", s.reps)
+}
+
+fn write_root_json(name: &str, json: Json) {
+    match std::fs::write(name, json.to_string()) {
+        Ok(()) => println!("wrote {name}"),
+        Err(e) => eprintln!("warn: could not write {name}: {e}"),
+    }
+}
 
 fn main() {
     let mut bench = Bench::new("microbench");
@@ -54,46 +85,137 @@ fn main() {
     });
     bench.record("stats_advance_incl_init", "n=100k", s, vec![]);
 
-    // One native tile: the inner-loop workhorse.
+    // One native tile, both pipelines: the inner-loop workhorse and the
+    // headline before/after of the zero-allocation refactor.
     let stats = RollingStats::compute(&t.values, m);
     let view = SeriesView { t: &t.values, stats: &stats };
-    let s = measure(1, default_reps(), || {
-        std::hint::black_box(compute_tile(
-            &view,
-            segn,
-            1.0,
-            TileTask { seg_start: 0, chunk_start: 4096 },
-        ));
-    });
+    let task = TileTask { seg_start: 0, chunk_start: 4096 };
     let cells = (segn * segn) as f64;
+
+    let s_legacy = measure(1, default_reps(), || {
+        std::hint::black_box(compute_tile_alloc(&view, segn, 1.0, task));
+    });
     bench.record(
-        "native_tile_256x256_m256",
-        "one tile",
-        s,
-        vec![("mcells_per_s".into(), format!("{:.1}", cells / s.median / 1e6))],
+        "native_tile_legacy_256x256_m256",
+        "alloc-per-tile pipeline",
+        s_legacy,
+        vec![("mcells_per_s".into(), format!("{:.1}", cells / s_legacy.median / 1e6))],
     );
 
-    // PJRT tile call (when artifacts exist): per-call overhead + compute.
-    if let Ok(artifacts) =
-        palmad::runtime::artifact::ArtifactSet::load(palmad::runtime::artifact::ArtifactSet::default_dir())
-    {
-        if artifacts.tiles.keys().any(|s| s.segn == segn && s.mmax >= m) {
-            let engine = palmad::engines::xla::XlaEngine::new(artifacts, segn).unwrap();
-            let tasks: Vec<TileTask> = (0..8)
-                .map(|k| TileTask { seg_start: k * segn, chunk_start: 4096 + k * segn })
-                .collect();
-            // Warm the executable cache first.
-            engine.compute_tiles(&view, 1.0, &tasks[..1]).unwrap();
-            let s = measure(1, default_reps(), || {
-                std::hint::black_box(engine.compute_tiles(&view, 1.0, &tasks).unwrap());
-            });
-            bench.record(
-                "xla_tile_batch8_256x512",
-                "8 tiles/call",
-                s,
-                vec![("ms_per_tile".into(), format!("{:.2}", s.median * 1e3 / 8.0))],
-            );
+    let s_scratch = measure(1, default_reps(), || {
+        std::hint::black_box(compute_tile(&view, segn, 1.0, task));
+    });
+    bench.record(
+        "native_tile_scratch_256x256_m256",
+        "scratch-arena SoA pipeline",
+        s_scratch,
+        vec![
+            ("mcells_per_s".into(), format!("{:.1}", cells / s_scratch.median / 1e6)),
+            ("speedup_vs_legacy".into(), format!("{:.2}", s_legacy.median / s_scratch.median)),
+        ],
+    );
+
+    write_root_json(
+        "BENCH_native_tile.json",
+        Json::obj()
+            .set("bench", "native_tile")
+            .set("quick", quick_mode())
+            .set("segn", segn)
+            .set("m", m)
+            .set("series_n", t.len())
+            .set(
+                "legacy",
+                summary_json(&s_legacy)
+                    .set("mcells_per_s", cells / s_legacy.median / 1e6),
+            )
+            .set(
+                "scratch",
+                summary_json(&s_scratch)
+                    .set("mcells_per_s", cells / s_scratch.median / 1e6),
+            )
+            .set("speedup", s_legacy.median / s_scratch.median),
+    );
+
+    // End-to-end MERLIN before/after: the acceptance workload
+    // (n = 2^16, lengths 64..128, top-1, native engine).  Engines are
+    // reused across reps, so the scratch side runs in its steady state
+    // (warm pools, warm seed cache) — exactly the regime the refactor
+    // targets; the legacy side has no reusable state by construction.
+    let n = if quick_mode() { 1 << 14 } else { 1 << 16 };
+    let series = random_walk(n, 7);
+    let merlin_cfg = MerlinConfig { min_l: 64, max_l: 128, top_k: 1, ..Default::default() };
+
+    let legacy_engine = NativeEngine::new(NativeConfig {
+        segn,
+        pipeline: TilePipeline::Legacy,
+        ..Default::default()
+    });
+    let s_merlin_legacy = measure(1, default_reps(), || {
+        let res = Merlin::new(&legacy_engine, merlin_cfg.clone()).run(&series).unwrap();
+        std::hint::black_box(res.lengths.len());
+    });
+    bench.record(
+        "merlin_e2e_legacy",
+        format!("n={n} l=64..128"),
+        s_merlin_legacy,
+        vec![],
+    );
+
+    let scratch_engine = NativeEngine::new(NativeConfig { segn, ..Default::default() });
+    let s_merlin_scratch = measure(1, default_reps(), || {
+        let res = Merlin::new(&scratch_engine, merlin_cfg.clone()).run(&series).unwrap();
+        std::hint::black_box(res.lengths.len());
+    });
+    let merlin_speedup = s_merlin_legacy.median / s_merlin_scratch.median;
+    bench.record(
+        "merlin_e2e_scratch",
+        format!("n={n} l=64..128"),
+        s_merlin_scratch,
+        vec![("speedup_vs_legacy".into(), format!("{merlin_speedup:.2}"))],
+    );
+
+    write_root_json(
+        "BENCH_merlin.json",
+        Json::obj()
+            .set("bench", "merlin_e2e")
+            .set("quick", quick_mode())
+            .set("engine", "native")
+            .set("segn", segn)
+            .set("n", n)
+            .set("min_l", 64usize)
+            .set("max_l", 128usize)
+            .set("top_k", 1usize)
+            .set("baseline_legacy", summary_json(&s_merlin_legacy))
+            .set("scratch", summary_json(&s_merlin_scratch))
+            .set("speedup", merlin_speedup),
+    );
+
+    // PJRT tile call (when a runtime and artifacts exist): per-call
+    // overhead + compute.
+    if palmad::runtime::pjrt_runtime_available() {
+        if let Ok(artifacts) = palmad::runtime::artifact::ArtifactSet::load(
+            palmad::runtime::artifact::ArtifactSet::default_dir(),
+        ) {
+            if artifacts.tiles.keys().any(|s| s.segn == segn && s.mmax >= m) {
+                let engine = palmad::engines::xla::XlaEngine::new(artifacts, segn).unwrap();
+                let tasks: Vec<TileTask> = (0..8)
+                    .map(|k| TileTask { seg_start: k * segn, chunk_start: 4096 + k * segn })
+                    .collect();
+                // Warm the executable cache first.
+                engine.compute_tiles(&view, 1.0, &tasks[..1]).unwrap();
+                let s = measure(1, default_reps(), || {
+                    std::hint::black_box(engine.compute_tiles(&view, 1.0, &tasks).unwrap());
+                });
+                bench.record(
+                    "xla_tile_batch8_256x512",
+                    "8 tiles/call",
+                    s,
+                    vec![("ms_per_tile".into(), format!("{:.2}", s.median * 1e3 / 8.0))],
+                );
+            }
         }
+    } else {
+        println!("  (xla tile bench skipped: PJRT runtime unavailable)");
     }
 
     // Bitmap scan rate (segment-liveness checks).

@@ -58,6 +58,7 @@ pub fn build_engine(opts: &EngineOptions) -> Result<Box<dyn Engine>> {
         EngineChoice::Native => Ok(Box::new(NativeEngine::new(NativeConfig {
             segn: opts.segn,
             threads: opts.threads,
+            ..Default::default()
         }))),
         EngineChoice::Xla => {
             let dir = opts

@@ -33,6 +33,7 @@ use super::metrics::DragMetrics;
 use super::segmentation::Segmentation;
 use crate::core::bitmap::Bitmap;
 use crate::engines::{Engine, SeriesView, TileTask};
+use crate::runtime::types::TileOutputs;
 
 /// A discovered discord: subsequence index, length, and the exact distance
 /// to its nearest non-self match (ED units, not squared).
@@ -79,15 +80,26 @@ pub fn pd3(
     let seg = Segmentation::new(nwin, segn);
     let r2 = r_ed * r_ed;
 
+    // Let the engine bind per-series state (e.g. the native QT seed
+    // cache) before any tile is evaluated.
+    engine.prepare_series(view);
+
     let mut cand = Bitmap::ones(nwin);
     let mut neighbor = Bitmap::ones(nwin);
     let mut nn_dist = vec![f64::INFINITY; nwin];
 
+    // Round-scoped buffers, reused across every round of both phases so
+    // the engine can recycle its tile-output blocks (zero allocations in
+    // the steady-state loop).
+    let mut tasks: Vec<TileTask> = Vec::new();
+    let mut rows: Vec<(usize, usize)> = Vec::new(); // segment index per task
+    let mut tile_buf: Vec<TileOutputs> = Vec::new();
+
     // ---- Phase 1: selection (self + right scan) --------------------------
     let t0 = Instant::now();
     for k in 0..seg.nseg {
-        let mut tasks = Vec::new();
-        let mut rows = Vec::new(); // segment index per task
+        tasks.clear();
+        rows.clear();
         for i in 0..seg.nseg - k {
             let j = i + k;
             let ri = seg.seg_range(i);
@@ -102,8 +114,8 @@ pub fn pd3(
             continue;
         }
         metrics.tiles_computed += tasks.len() as u64;
-        let results = engine.compute_tiles(view, r2, &tasks)?;
-        for ((i, j), out) in rows.into_iter().zip(results) {
+        engine.compute_tiles_into(view, r2, &tasks, &mut tile_buf)?;
+        for (&(i, j), out) in rows.iter().zip(&tile_buf) {
             apply_side(
                 &mut cand,
                 &mut nn_dist,
@@ -135,8 +147,8 @@ pub fn pd3(
         cand.and_with(&neighbor); // Alg. 4 l.1-2
     }
     for k in 1..seg.nseg {
-        let mut tasks = Vec::new();
-        let mut rows = Vec::new();
+        tasks.clear();
+        rows.clear();
         for i in k..seg.nseg {
             let j = i - k;
             let ri = seg.seg_range(i);
@@ -151,8 +163,8 @@ pub fn pd3(
             continue;
         }
         metrics.tiles_computed += tasks.len() as u64;
-        let results = engine.compute_tiles(view, r2, &tasks)?;
-        for ((i, j), out) in rows.into_iter().zip(results) {
+        engine.compute_tiles_into(view, r2, &tasks, &mut tile_buf)?;
+        for (&(i, j), out) in rows.iter().zip(&tile_buf) {
             apply_side(
                 &mut cand,
                 &mut nn_dist,

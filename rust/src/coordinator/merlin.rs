@@ -140,6 +140,7 @@ impl<'e> Merlin<'e> {
 
         let t_start = Instant::now();
         let mut metrics = MerlinMetrics::default();
+        let counters_start = self.engine.perf_counters();
         let mut lengths: Vec<LengthResult> = Vec::new();
         // Ring of the last 5 nnDist minima (ED units).
         let mut last5: Vec<f64> = Vec::new();
@@ -218,6 +219,7 @@ impl<'e> Merlin<'e> {
         }
 
         metrics.total_time = t_start.elapsed();
+        metrics.seed = self.engine.perf_counters().since(counters_start);
         Ok(MerlinResult { lengths, metrics })
     }
 
@@ -372,6 +374,19 @@ mod tests {
                 assert!(d[a - 1].nn_dist >= d[a].nn_dist);
             }
         }
+    }
+
+    #[test]
+    fn seed_cache_is_exercised_across_lengths() {
+        let t = random_walk_series(600, 26);
+        let engine = NativeEngine::with_segn(64);
+        let cfg = MerlinConfig { min_l: 16, max_l: 24, top_k: 1, ..Default::default() };
+        let res = Merlin::new(&engine, cfg).run(&t).unwrap();
+        let seed = res.metrics.seed;
+        assert!(seed.seed_total() > 0, "native engine must report seed traffic");
+        // Round 0 (self tiles) is computed at every length, so the sweep
+        // must advance at least those cached rows m -> m+1.
+        assert!(seed.seed_advances > 0, "length sweep advanced no seeds: {seed:?}");
     }
 
     #[test]

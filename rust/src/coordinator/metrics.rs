@@ -3,6 +3,8 @@
 
 use std::time::Duration;
 
+use crate::engines::EnginePerfCounters;
+
 /// Counters for one DRAG (PD3) invocation.
 #[derive(Clone, Debug, Default)]
 pub struct DragMetrics {
@@ -51,6 +53,10 @@ pub struct MerlinMetrics {
     pub retries: u64,
     /// Total discords reported across lengths.
     pub discords: u64,
+    /// Engine QT seed cache traffic during this run (hits = same-length
+    /// reuse, advances = cross-length `m -> m'` recurrence updates,
+    /// misses = full seed passes).  All-zero for cache-less engines.
+    pub seed: EnginePerfCounters,
     pub stats_time: Duration,
     pub total_time: Duration,
 }
@@ -60,13 +66,16 @@ impl std::fmt::Display for MerlinMetrics {
         write!(
             f,
             "drag_calls={} retries={} discords={} tiles={} skipped={} ({:.1}% early-stop) \
-             select={:.3}s refine={:.3}s stats={:.3}s total={:.3}s",
+             seeds(hit/adv/miss)={}/{}/{} select={:.3}s refine={:.3}s stats={:.3}s total={:.3}s",
             self.drag_calls,
             self.retries,
             self.discords,
             self.drag.tiles_computed,
             self.drag.tiles_skipped,
             100.0 * self.drag.skip_ratio(),
+            self.seed.seed_hits,
+            self.seed.seed_advances,
+            self.seed.seed_misses,
             self.drag.select_time.as_secs_f64(),
             self.drag.refine_time.as_secs_f64(),
             self.stats_time.as_secs_f64(),

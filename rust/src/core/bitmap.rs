@@ -186,6 +186,80 @@ mod tests {
     }
 
     #[test]
+    fn any_in_range_boundary_cases() {
+        // Empty bitmap: every query is false.
+        let b = Bitmap::zeros(0);
+        assert!(!b.any_in_range(0, 0));
+        assert!(!b.any_in_range(0, 10));
+        assert!(!b.any_in_range(5, 3));
+
+        // Single-bit bitmap.
+        let mut b = Bitmap::zeros(1);
+        assert!(!b.any_in_range(0, 1));
+        b.set(0, true);
+        assert!(b.any_in_range(0, 1));
+        assert!(b.any_in_range(0, usize::MAX)); // end clamps
+        assert!(!b.any_in_range(1, 1));
+
+        // start >= len.
+        let mut b = Bitmap::zeros(100);
+        b.set(99, true);
+        assert!(!b.any_in_range(100, 200));
+        assert!(b.any_in_range(99, 100));
+        assert!(b.any_in_range(99, 1_000_000));
+
+        // Inverted / empty ranges.
+        assert!(!b.any_in_range(50, 50));
+        assert!(!b.any_in_range(60, 40));
+    }
+
+    #[test]
+    fn any_in_range_exact_word_edges() {
+        // Bits at every word edge of a 3-word bitmap.
+        for bit in [0usize, 63, 64, 127, 128, 191] {
+            let mut b = Bitmap::zeros(192);
+            b.set(bit, true);
+            // Tight range hits.
+            assert!(b.any_in_range(bit, bit + 1), "bit {bit}");
+            // One-off ranges miss.
+            if bit > 0 {
+                assert!(!b.any_in_range(0, bit), "bit {bit} [0,bit)");
+            }
+            assert!(!b.any_in_range(bit + 1, 192), "bit {bit} (bit,192)");
+            // Ranges spanning multiple words still find it.
+            assert!(b.any_in_range(0, 192));
+            assert!(b.any_in_range(bit.saturating_sub(65), (bit + 66).min(192)));
+        }
+    }
+
+    #[test]
+    fn any_in_range_full_word_span_middle() {
+        // A set bit in a middle whole word must be found by ranges that
+        // enter the word-span loop (start and end in different words).
+        let mut b = Bitmap::zeros(256);
+        b.set(100, true);
+        assert!(b.any_in_range(10, 250));
+        assert!(b.any_in_range(64, 128));
+        assert!(b.any_in_range(65, 127));
+        b.clear(100);
+        assert!(!b.any_in_range(10, 250));
+    }
+
+    #[test]
+    fn any_in_range_tail_word_masking() {
+        // len not a multiple of 64: the tail mask must not leak phantom
+        // bits into range queries ending at/after len.
+        let b = Bitmap::ones(70);
+        assert!(b.any_in_range(64, 70));
+        assert!(b.any_in_range(69, 70));
+        assert!(b.any_in_range(69, 100)); // clamped
+        let mut b = Bitmap::zeros(70);
+        b.set(69, true);
+        assert!(b.any_in_range(64, 70));
+        assert!(!b.any_in_range(64, 69));
+    }
+
+    #[test]
     fn iter_set() {
         let mut b = Bitmap::zeros(200);
         for i in [0, 3, 64, 65, 199] {

@@ -59,4 +59,47 @@ mod tests {
     fn empty_input() {
         assert!(top_k_non_overlapping(&[], 4, 3).is_empty());
     }
+
+    #[test]
+    fn exact_score_ties_break_by_lowest_index() {
+        // Equal scores must pick deterministically: index ascending.
+        let items = vec![s(500, 3.0), s(100, 3.0), s(300, 3.0)];
+        let got = top_k_non_overlapping(&items, 10, 2);
+        assert_eq!(got, vec![s(100, 3.0), s(300, 3.0)]);
+    }
+
+    #[test]
+    fn tied_overlapping_candidates_keep_earliest() {
+        // Three mutually overlapping items with identical scores: exactly
+        // one survives and it is the lowest index.
+        let items = vec![s(12, 7.0), s(10, 7.0), s(11, 7.0)];
+        let got = top_k_non_overlapping(&items, 5, 0);
+        assert_eq!(got, vec![s(10, 7.0)]);
+    }
+
+    #[test]
+    fn adjacent_windows_at_exact_overlap_boundary() {
+        // |i - j| == m is NOT an overlap: both survive; |i - j| == m - 1 is.
+        let items = vec![s(0, 9.0), s(4, 8.0), s(9, 7.0)];
+        let got = top_k_non_overlapping(&items, 4, 3);
+        // 0 kills nothing at distance 4 (= m); 4 survives; 9 is 5 away
+        // from 4 — survives too.
+        assert_eq!(got, vec![s(0, 9.0), s(4, 8.0), s(9, 7.0)]);
+        let got = top_k_non_overlapping(&[s(0, 9.0), s(3, 8.0)], 4, 2);
+        assert_eq!(got, vec![s(0, 9.0)], "|i-j| = m-1 must be de-overlapped");
+    }
+
+    #[test]
+    fn k_larger_than_survivors_returns_all() {
+        let items = vec![s(0, 1.0), s(50, 2.0)];
+        let got = top_k_non_overlapping(&items, 10, 99);
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_indices_collapse_to_one() {
+        let items = vec![s(20, 5.0), s(20, 4.0)];
+        let got = top_k_non_overlapping(&items, 3, 2);
+        assert_eq!(got, vec![s(20, 5.0)]);
+    }
 }

@@ -6,10 +6,15 @@
 //!
 //! - [`native::NativeEngine`] — pure rust, thread-pooled, `f64`
 //!   throughout; the correctness oracle and the CPU-performance baseline.
+//!   Its steady-state tile loop is allocation-free: output blocks are
+//!   recycled through [`Engine::compute_tiles_into`], per-worker buffers
+//!   live in a [`scratch::TileScratch`] arena, and QT seed rows are
+//!   reused across subsequence lengths ([`scratch::QtSeedCache`]).
 //! - [`xla::XlaEngine`] — the AOT path: Pallas/JAX-compiled HLO executed
 //!   via PJRT, exactly what would run on a TPU (interpret-lowered here).
 
 pub mod native;
+pub mod scratch;
 pub mod xla;
 
 use anyhow::Result;
@@ -39,6 +44,37 @@ impl SeriesView<'_> {
     }
 }
 
+/// Cumulative per-engine performance counters (QT seed cache traffic).
+///
+/// Engines without internal caches report all-zero.  Counters are
+/// lifetime totals; use [`EnginePerfCounters::since`] to scope them to
+/// one run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EnginePerfCounters {
+    /// Seed rows reused verbatim (same length — MERLIN `r`-retries).
+    pub seed_hits: u64,
+    /// Seed rows advanced `m -> m'` by the dot-product recurrence.
+    pub seed_advances: u64,
+    /// Seed rows computed by the full `O(segn * m)` pass.
+    pub seed_misses: u64,
+}
+
+impl EnginePerfCounters {
+    /// Counter deltas relative to an earlier snapshot.
+    pub fn since(self, earlier: EnginePerfCounters) -> EnginePerfCounters {
+        EnginePerfCounters {
+            seed_hits: self.seed_hits.saturating_sub(earlier.seed_hits),
+            seed_advances: self.seed_advances.saturating_sub(earlier.seed_advances),
+            seed_misses: self.seed_misses.saturating_sub(earlier.seed_misses),
+        }
+    }
+
+    /// Total seed requests.
+    pub fn seed_total(&self) -> u64 {
+        self.seed_hits + self.seed_advances + self.seed_misses
+    }
+}
+
 /// A tile-computation backend.
 pub trait Engine: Send + Sync {
     fn name(&self) -> &'static str;
@@ -58,6 +94,35 @@ pub trait Engine: Send + Sync {
         r2: f64,
         tasks: &[TileTask],
     ) -> Result<Vec<TileOutputs>>;
+
+    /// Like [`Engine::compute_tiles`], but recycles the caller's output
+    /// blocks: on return `out.len() == tasks.len()` and `out[i]` holds
+    /// task `i`'s result.  Callers that keep `out` alive across rounds
+    /// (the PD3 driver does) avoid re-allocating the four result vectors
+    /// per tile — the native engine's round loop is allocation-free once
+    /// warmed.  The default forwards to `compute_tiles`.
+    fn compute_tiles_into(
+        &self,
+        view: &SeriesView<'_>,
+        r2: f64,
+        tasks: &[TileTask],
+        out: &mut Vec<TileOutputs>,
+    ) -> Result<()> {
+        let results = self.compute_tiles(view, r2, tasks)?;
+        out.clear();
+        out.extend(results);
+        Ok(())
+    }
+
+    /// Called once per PD3 run before any tile of `view` is evaluated.
+    /// Engines with per-series caches validate / reset them here; the
+    /// default is a no-op.
+    fn prepare_series(&self, _view: &SeriesView<'_>) {}
+
+    /// Snapshot of the engine's cumulative performance counters.
+    fn perf_counters(&self) -> EnginePerfCounters {
+        EnginePerfCounters::default()
+    }
 
     /// Run the AOT `stats_init` kernel (Eq. 4), if this engine has one.
     fn aot_stats_init(&self, _t: &[f64], _m: usize) -> Result<RollingStats> {

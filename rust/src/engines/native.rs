@@ -6,16 +6,49 @@
 //! multiply-add, so a whole `segn x segn` tile costs
 //! `O(segn * m + segn^2)` instead of `O(segn^2 * m)`.
 //!
-//! Tasks in a batch run across a scoped thread pool
-//! ([`crate::util::pool::parallel_map_indexed`]); each task is
-//! independent, so the batch scales to the tile-skew limit.
+//! The tile pipeline is built for **steady-state zero allocation** and
+//! **cross-length reuse** (EXPERIMENTS.md §Perf):
+//!
+//! - every intermediate lives in a per-worker [`TileScratch`] arena;
+//! - output blocks are recycled through [`Engine::compute_tiles_into`];
+//! - tile batches run on a persistent [`RoundPool`] whose round
+//!   submission allocates nothing (no job boxing, no per-item lock —
+//!   results go to disjoint slots);
+//! - the `O(segn * m)` QT seed pass of each tile is served from a
+//!   [`QtSeedCache`] that MERLIN's length sweep advances `m -> m+1` with
+//!   one multiply-add per column (`dot_{m+1}(a,b) = dot_m(a,b) +
+//!   t[a+m] * t[b+m]`) — the paper's Eq. 7/8 redundancy elimination
+//!   extended to the dot-product layer;
+//! - the inner distance loop is a set of branchless SoA passes over
+//!   contiguous scratch (distances, exclusion mask, min-folds, kill
+//!   masks), which autovectorizes; the old fused per-cell closure did
+//!   not.
+//!
+//! The pre-optimization pipeline is preserved as
+//! [`TilePipeline::Legacy`] / [`compute_tile_alloc`] so the microbench
+//! reports an honest before/after from one binary.
+
+use std::sync::OnceLock;
 
 use anyhow::Result;
 
-use super::{Engine, SeriesView, TileTask};
+use super::scratch::{with_tile_scratch, QtSeedCache, TileScratch};
+use super::{Engine, EnginePerfCounters, SeriesView, TileTask};
 use crate::core::distance::{dot, ed2norm_from_qt, is_flat};
 use crate::runtime::types::TileOutputs;
-use crate::util::pool;
+use crate::util::pool::{self, RoundPool, SliceWriter};
+
+/// Which tile pipeline [`NativeEngine`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TilePipeline {
+    /// Zero-allocation scratch-arena pipeline with QT seed reuse.
+    #[default]
+    Scratch,
+    /// Pre-optimization reference: per-tile heap allocation, fused
+    /// per-cell loop, mutex-collected results.  Kept as the bench
+    /// baseline and a second oracle.
+    Legacy,
+}
 
 /// Configuration for [`NativeEngine`].
 #[derive(Clone, Debug)]
@@ -24,27 +57,43 @@ pub struct NativeConfig {
     pub segn: usize,
     /// Worker threads for tile batches.
     pub threads: usize,
+    /// Pipeline selection (benches flip this; default [`TilePipeline::Scratch`]).
+    pub pipeline: TilePipeline,
 }
 
 impl Default for NativeConfig {
     fn default() -> Self {
-        Self { segn: 256, threads: pool::default_threads() }
+        Self {
+            segn: 256,
+            threads: pool::default_threads(),
+            pipeline: TilePipeline::default(),
+        }
     }
 }
 
 /// Pure-rust engine.
 pub struct NativeEngine {
     cfg: NativeConfig,
+    /// Persistent workers (spawned on first parallel batch; the
+    /// submitting thread participates, so this holds `threads - 1`).
+    round_pool: OnceLock<RoundPool>,
+    /// Cross-length QT seed cache (scratch pipeline only).
+    seeds: QtSeedCache,
 }
 
 impl NativeEngine {
     pub fn new(cfg: NativeConfig) -> Self {
         assert!(cfg.segn >= 1);
-        Self { cfg }
+        Self { cfg, round_pool: OnceLock::new(), seeds: QtSeedCache::new() }
     }
 
     pub fn with_segn(segn: usize) -> Self {
         Self::new(NativeConfig { segn, ..Default::default() })
+    }
+
+    fn pool(&self) -> &RoundPool {
+        self.round_pool
+            .get_or_init(|| RoundPool::new(self.cfg.threads.saturating_sub(1)))
     }
 }
 
@@ -67,19 +116,222 @@ impl Engine for NativeEngine {
         r2: f64,
         tasks: &[TileTask],
     ) -> Result<Vec<TileOutputs>> {
+        let mut out = Vec::new();
+        self.compute_tiles_into(view, r2, tasks, &mut out)?;
+        Ok(out)
+    }
+
+    fn compute_tiles_into(
+        &self,
+        view: &SeriesView<'_>,
+        r2: f64,
+        tasks: &[TileTask],
+        out: &mut Vec<TileOutputs>,
+    ) -> Result<()> {
         let segn = self.cfg.segn;
-        Ok(pool::parallel_map_indexed(tasks.len(), self.cfg.threads, |i| {
-            compute_tile(view, segn, r2, tasks[i])
-        }))
+        if self.cfg.pipeline == TilePipeline::Legacy {
+            let results =
+                pool::parallel_map_indexed_locked(tasks.len(), self.cfg.threads, |i| {
+                    compute_tile_alloc(view, segn, r2, tasks[i])
+                });
+            out.clear();
+            out.extend(results);
+            return Ok(());
+        }
+
+        // Guard against callers switching series without prepare_series
+        // (the identity check is O(1); a mismatch triggers the full
+        // content fingerprint + cache invalidation).
+        if !self.seeds.is_bound(view.t) {
+            self.seeds.prepare(view.t);
+        }
+
+        // Recycle the caller's output blocks: only growth allocates.
+        out.truncate(tasks.len());
+        while out.len() < tasks.len() {
+            out.push(TileOutputs::sized(segn));
+        }
+        let threads = self.cfg.threads.max(1).min(tasks.len().max(1));
+        if threads <= 1 || tasks.len() <= 1 {
+            for (task, o) in tasks.iter().zip(out.iter_mut()) {
+                with_tile_scratch(|s| {
+                    compute_tile_into(view, segn, r2, *task, s, Some(&self.seeds), o)
+                });
+            }
+            return Ok(());
+        }
+        let seeds = &self.seeds;
+        let slots = SliceWriter::new(&mut out[..]);
+        self.pool().run(tasks.len(), |i| {
+            // SAFETY: the round cursor hands out each index exactly
+            // once, and `out` outlives the (blocking) round.
+            let o = unsafe { slots.slot(i) };
+            with_tile_scratch(|s| {
+                compute_tile_into(view, segn, r2, tasks[i], s, Some(seeds), o)
+            });
+        });
+        Ok(())
+    }
+
+    fn prepare_series(&self, view: &SeriesView<'_>) {
+        if self.cfg.pipeline == TilePipeline::Scratch {
+            self.seeds.prepare(view.t);
+        }
+    }
+
+    fn perf_counters(&self) -> EnginePerfCounters {
+        self.seeds.counters()
     }
 }
 
-/// Evaluate one (segment, chunk) tile; see module docs.
+/// Evaluate one (segment, chunk) tile into recycled buffers.
 ///
 /// Semantics identical to the AOT kernel: pairs inside the exclusion zone
 /// `|gi - gj| < m` or out of window bounds contribute `+inf` minima and
-/// never kill.
+/// never kill.  With `seeds: None` the first row's QT products are
+/// computed fresh (bit-identical to [`compute_tile_alloc`]); with a cache
+/// they are reused/advanced across lengths (equal within the oracle
+/// tolerance — the recurrence rounds differently).
+pub(crate) fn compute_tile_into(
+    view: &SeriesView<'_>,
+    segn: usize,
+    r2: f64,
+    task: TileTask,
+    scratch: &mut TileScratch,
+    seeds: Option<&QtSeedCache>,
+    out: &mut TileOutputs,
+) {
+    let m = view.stats.m;
+    let t = view.t;
+    let nwin = view.n_windows();
+    let (ss, cs) = (task.seg_start, task.chunk_start);
+    let na = segn.min(nwin.saturating_sub(ss));
+    let nb = segn.min(nwin.saturating_sub(cs));
+
+    out.reset(segn);
+    if na == 0 || nb == 0 {
+        return;
+    }
+    scratch.ensure(segn);
+    let TileScratch { mmu_b, inv_msig_b, qt, qt_prev, dist } = scratch;
+
+    let mu = &view.stats.mu;
+    let sig = &view.stats.sig;
+
+    // Per-column precomputation for the fast path (reused by every row):
+    // dist = 2m - 2m * clamp((qt - (m*mu_b)*mu_a) * (1/(m*sig_b)) / sig_a).
+    let mf = m as f64;
+    let two_m = 2.0 * mf;
+    let mut any_flat = false;
+    for j in 0..nb {
+        let b = cs + j;
+        mmu_b[j] = mf * mu[b];
+        inv_msig_b[j] = 1.0 / (mf * sig[b]);
+        any_flat |= is_flat(sig[b], mu[b]);
+    }
+
+    for i in 0..na {
+        let a = ss + i;
+        // Exclusion zone |a - b| < m, b = cs + j: hoisted to a j-interval
+        // and applied as a mask over the distance row below.
+        let jlo = (a + 1).saturating_sub(m).saturating_sub(cs).min(nb); // first excluded
+        let jhi = (a + m).saturating_sub(cs).min(nb); // one past last excluded
+
+        let mu_a = mu[a];
+        let sig_a = sig[a];
+        let inv_sig_a = 1.0 / sig_a;
+        let general = any_flat || is_flat(sig_a, mu_a);
+
+        if i == 0 {
+            // Seed row: cached/advanced when possible, else direct dot
+            // products, O(nb * m).
+            match seeds {
+                Some(cache) => cache.seed_into(t, m, a, cs, nb, &mut qt[..nb]),
+                None => {
+                    let wa = &t[a..a + m];
+                    for (j, q) in qt[..nb].iter_mut().enumerate() {
+                        *q = dot(wa, &t[cs + j..cs + j + m]);
+                    }
+                }
+            }
+        } else {
+            // Diagonal recurrence (Eq. 10): O(1) per cell, branch-free,
+            // vectorizable (kept as its own pass — fusing it with the
+            // distance loop measured slower; EXPERIMENTS.md §Perf).
+            let head = t[a - 1];
+            let tail = t[a + m - 1];
+            qt[0] = dot(&t[a..a + m], &t[cs..cs + m]);
+            for j in 1..nb {
+                let b = cs + j;
+                qt[j] = qt_prev[j - 1] + tail * t[b + m - 1] - head * t[b - 1];
+            }
+        }
+
+        // Pass 1 — distances into contiguous scratch, branchless.  The
+        // excluded interval is computed too (cheaper than branching) and
+        // masked right after, so the loop autovectorizes cleanly.
+        if !general {
+            for j in 0..nb {
+                let corr = (qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a);
+                dist[j] = two_m * (1.0 - corr.clamp(-1.0, 1.0));
+            }
+        } else {
+            // Flat-window path: full Eq. 6 semantics per cell.
+            for j in 0..nb {
+                let b = cs + j;
+                dist[j] = ed2norm_from_qt(qt[j], m, mu_a, sig_a, mu[b], sig[b]);
+            }
+        }
+        for d in &mut dist[jlo..jhi] {
+            *d = f64::INFINITY;
+        }
+
+        // Pass 2 — row folds (min + kill-any) over the distance row.
+        let mut rmin = f64::INFINITY;
+        for &d in &dist[..nb] {
+            rmin = rmin.min(d);
+        }
+        let mut rkill = false;
+        for &d in &dist[..nb] {
+            rkill |= d < r2;
+        }
+        out.row_min[i] = rmin;
+        out.row_kill[i] = rkill;
+
+        // Pass 3 — column folds (elementwise min + kill mask).
+        for (c, &d) in out.col_min[..nb].iter_mut().zip(&dist[..nb]) {
+            if d < *c {
+                *c = d;
+            }
+        }
+        for (k, &d) in out.col_kill[..nb].iter_mut().zip(&dist[..nb]) {
+            *k |= d < r2;
+        }
+
+        std::mem::swap(qt, qt_prev);
+    }
+}
+
+/// Evaluate one (segment, chunk) tile, allocating a fresh output block.
+///
+/// Uses this thread's scratch arena and no seed cache — deterministic and
+/// bit-identical to the engine's cold-cache batch path; the oracle entry
+/// point for tests and benches.
 pub fn compute_tile(view: &SeriesView<'_>, segn: usize, r2: f64, task: TileTask) -> TileOutputs {
+    let mut out = TileOutputs::sized(segn);
+    with_tile_scratch(|scratch| compute_tile_into(view, segn, r2, task, scratch, None, &mut out));
+    out
+}
+
+/// The pre-optimization tile evaluation, verbatim: allocates ~8 vectors
+/// per tile and folds everything through one fused per-cell closure.
+/// Kept as the microbench "before" side and as an independent oracle.
+pub fn compute_tile_alloc(
+    view: &SeriesView<'_>,
+    segn: usize,
+    r2: f64,
+    task: TileTask,
+) -> TileOutputs {
     let m = view.stats.m;
     let t = view.t;
     let nwin = view.n_windows();
@@ -100,8 +352,6 @@ pub fn compute_tile(view: &SeriesView<'_>, segn: usize, r2: f64, task: TileTask)
     let mu = &view.stats.mu;
     let sig = &view.stats.sig;
 
-    // Per-column precomputation for the fast path (reused by every row):
-    // dist = 2m - 2m * clamp((qt - (m*mu_b)*mu_a) * (1/(m*sig_b)) / sig_a).
     let mf = m as f64;
     let two_m = 2.0 * mf;
     let mut mmu_b = vec![0.0f64; nb];
@@ -120,9 +370,6 @@ pub fn compute_tile(view: &SeriesView<'_>, segn: usize, r2: f64, task: TileTask)
 
     for i in 0..na {
         let a = ss + i;
-        // Exclusion zone |a - b| < m, b = cs + j: hoist to a j-interval so
-        // the inner loop stays branch-light (perf pass; see EXPERIMENTS.md
-        // §Perf for the before/after).
         let jlo = (a + 1).saturating_sub(m).saturating_sub(cs).min(nb); // first excluded
         let jhi = (a + m).saturating_sub(cs).min(nb); // one past last excluded
 
@@ -134,16 +381,12 @@ pub fn compute_tile(view: &SeriesView<'_>, segn: usize, r2: f64, task: TileTask)
         let general = any_flat || is_flat(sig_a, mu_a);
 
         if i == 0 {
-            // Seed row: direct dot products, O(nb * m).
             let wa = &t[a..a + m];
             for (j, q) in qt.iter_mut().enumerate() {
                 let b = cs + j;
                 *q = dot(wa, &t[b..b + m]);
             }
         } else {
-            // Diagonal recurrence (Eq. 10): O(1) per cell, branch-free,
-            // vectorizable (kept as its own pass — fusing it with the
-            // distance loop measured slower; EXPERIMENTS.md §Perf).
             let head = t[a - 1];
             let tail = t[a + m - 1];
             qt[0] = dot(&t[a..a + m], &t[cs..cs + m]);
@@ -158,7 +401,6 @@ pub fn compute_tile(view: &SeriesView<'_>, segn: usize, r2: f64, task: TileTask)
                 let b = cs + j;
                 ed2norm_from_qt(qt[j], m, mu_a, sig_a, mu[b], sig[b])
             } else {
-                // dist = 2m * (1 - clamp((qt - (m*mu_b)*mu_a) / (m*sig_b*sig_a)))
                 let corr = (qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a);
                 two_m * (1.0 - corr.clamp(-1.0, 1.0))
             };
@@ -224,11 +466,7 @@ mod tests {
         out
     }
 
-    fn check(t: &[f64], ss: usize, cs: usize, segn: usize, m: usize, r2: f64) {
-        let stats = RollingStats::compute(t, m);
-        let view = SeriesView { t, stats: &stats };
-        let got = compute_tile(&view, segn, r2, TileTask { seg_start: ss, chunk_start: cs });
-        let want = oracle(t, ss, cs, segn, m, r2);
+    fn assert_outputs_close(got: &TileOutputs, want: &TileOutputs, segn: usize) {
         for k in 0..segn {
             let (g, w) = (got.row_min[k], want.row_min[k]);
             assert_eq!(g.is_finite(), w.is_finite(), "row {k} finiteness");
@@ -243,6 +481,22 @@ mod tests {
             assert_eq!(got.row_kill[k], want.row_kill[k], "row_kill {k}");
             assert_eq!(got.col_kill[k], want.col_kill[k], "col_kill {k}");
         }
+    }
+
+    fn check(t: &[f64], ss: usize, cs: usize, segn: usize, m: usize, r2: f64) {
+        let stats = RollingStats::compute(t, m);
+        let view = SeriesView { t, stats: &stats };
+        let want = oracle(t, ss, cs, segn, m, r2);
+        let task = TileTask { seg_start: ss, chunk_start: cs };
+        let got = compute_tile(&view, segn, r2, task);
+        assert_outputs_close(&got, &want, segn);
+        // The legacy pipeline is a second oracle: must agree bit-exactly
+        // with the scratch pipeline on the cold path.
+        let legacy = compute_tile_alloc(&view, segn, r2, task);
+        assert_eq!(got.row_min, legacy.row_min);
+        assert_eq!(got.col_min, legacy.col_min);
+        assert_eq!(got.row_kill, legacy.row_kill);
+        assert_eq!(got.col_kill, legacy.col_kill);
     }
 
     fn random_walk(n: usize, seed: u64) -> Vec<f64> {
@@ -300,6 +554,7 @@ mod tests {
         let stats = RollingStats::compute(&t, 32);
         let view = SeriesView { t: &t, stats: &stats };
         let engine = NativeEngine::with_segn(64);
+        engine.prepare_series(&view);
         let tasks = vec![
             TileTask { seg_start: 0, chunk_start: 0 },
             TileTask { seg_start: 0, chunk_start: 64 },
@@ -321,5 +576,122 @@ mod tests {
             *v = 42.0;
         }
         check(&t, 32, 96, 32, 16, 4.0);
+    }
+
+    #[test]
+    fn recycled_buffers_and_seed_hits_stay_exact() {
+        let t = random_walk(600, 8);
+        let stats = RollingStats::compute(&t, 24);
+        let view = SeriesView { t: &t, stats: &stats };
+        let engine = NativeEngine::with_segn(64);
+        engine.prepare_series(&view);
+        let tasks: Vec<TileTask> = (0..4)
+            .map(|k| TileTask { seg_start: 64 * k, chunk_start: 64 * ((k + 2) % 5) })
+            .collect();
+        let mut first = Vec::new();
+        engine.compute_tiles_into(&view, 6.0, &tasks, &mut first).unwrap();
+        // Second round: recycled outputs + warm seed cache (pure hits)
+        // must reproduce the first round verbatim.
+        let mut second = Vec::new();
+        engine.compute_tiles_into(&view, 6.0, &tasks, &mut second).unwrap();
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.row_min, b.row_min);
+            assert_eq!(a.col_min, b.col_min);
+            assert_eq!(a.row_kill, b.row_kill);
+            assert_eq!(a.col_kill, b.col_kill);
+        }
+        let c = engine.perf_counters();
+        assert_eq!(c.seed_misses, 4, "first round seeds fresh");
+        assert_eq!(c.seed_hits, 4, "second round served from cache");
+    }
+
+    #[test]
+    fn cross_length_seed_advance_matches_fresh_engine() {
+        let t = random_walk(700, 9);
+        let engine = NativeEngine::with_segn(64);
+        let tasks: Vec<TileTask> = (0..3)
+            .map(|k| TileTask { seg_start: 64 * k, chunk_start: 64 * (k + 3) })
+            .collect();
+        let mut buf = Vec::new();
+        // Sweep m = 20..28 on one engine (cache advances across lengths).
+        let mut stats = RollingStats::compute(&t, 20);
+        let mut swept: Vec<Vec<TileOutputs>> = Vec::new();
+        for _ in 20..=28 {
+            let view = SeriesView { t: &t, stats: &stats };
+            engine.prepare_series(&view);
+            engine.compute_tiles_into(&view, 5.0, &tasks, &mut buf).unwrap();
+            swept.push(buf.clone());
+            stats.advance(&t);
+        }
+        assert!(engine.perf_counters().seed_advances > 0, "sweep must advance seeds");
+        // Every swept length must match a cold evaluation within the
+        // oracle tolerance (the advance recurrence rounds differently).
+        for (step, got) in swept.iter().enumerate() {
+            let m = 20 + step;
+            let fresh_stats = RollingStats::compute(&t, m);
+            let view = SeriesView { t: &t, stats: &fresh_stats };
+            for (k, task) in tasks.iter().enumerate() {
+                let want = compute_tile(&view, 64, 5.0, *task);
+                for i in 0..64 {
+                    let (g, w) = (got[k].row_min[i], want.row_min[i]);
+                    assert_eq!(g.is_finite(), w.is_finite(), "m={m} task {k} row {i}");
+                    if w.is_finite() {
+                        assert!((g - w).abs() < 1e-6 * (1.0 + w), "m={m} task {k} row {i}: {g} vs {w}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn switching_series_without_prepare_is_safe() {
+        // Callers that alternate series through the plain compute_tiles
+        // API (no prepare_series) must never see another series' cached
+        // seeds: the engine's O(1) identity guard re-binds the cache.
+        let t1 = random_walk(500, 11);
+        let t2 = random_walk(500, 12);
+        let m = 20;
+        let engine = NativeEngine::with_segn(64);
+        let tasks = vec![
+            TileTask { seg_start: 0, chunk_start: 128 },
+            TileTask { seg_start: 64, chunk_start: 256 },
+        ];
+        let s1 = RollingStats::compute(&t1, m);
+        let v1 = SeriesView { t: &t1, stats: &s1 };
+        engine.compute_tiles(&v1, 4.0, &tasks).unwrap(); // caches t1 seeds
+        let s2 = RollingStats::compute(&t2, m);
+        let v2 = SeriesView { t: &t2, stats: &s2 };
+        let got = engine.compute_tiles(&v2, 4.0, &tasks).unwrap();
+        for (k, task) in tasks.iter().enumerate() {
+            let want = compute_tile(&v2, 64, 4.0, *task);
+            assert_eq!(got[k].row_min, want.row_min, "task {k}");
+            assert_eq!(got[k].col_min, want.col_min, "task {k}");
+            assert_eq!(got[k].col_kill, want.col_kill, "task {k}");
+        }
+    }
+
+    #[test]
+    fn legacy_pipeline_engine_matches_scratch_engine() {
+        let t = random_walk(900, 10);
+        let stats = RollingStats::compute(&t, 32);
+        let view = SeriesView { t: &t, stats: &stats };
+        let scratch = NativeEngine::new(NativeConfig { segn: 64, ..Default::default() });
+        let legacy = NativeEngine::new(NativeConfig {
+            segn: 64,
+            pipeline: TilePipeline::Legacy,
+            ..Default::default()
+        });
+        scratch.prepare_series(&view);
+        let tasks: Vec<TileTask> = (0..6)
+            .map(|k| TileTask { seg_start: 128 * (k % 3), chunk_start: 64 * k })
+            .collect();
+        let a = scratch.compute_tiles(&view, 8.0, &tasks).unwrap();
+        let b = legacy.compute_tiles(&view, 8.0, &tasks).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.row_min, y.row_min);
+            assert_eq!(x.col_min, y.col_min);
+            assert_eq!(x.row_kill, y.row_kill);
+            assert_eq!(x.col_kill, y.col_kill);
+        }
     }
 }

@@ -1,0 +1,335 @@
+//! Per-worker scratch arena and the cross-length QT seed cache — the
+//! allocation-free substrate of the native tile pipeline.
+//!
+//! **Scratch arena.**  One [`TileScratch`] per worker thread holds every
+//! intermediate buffer a tile evaluation needs (per-column stat products,
+//! the two QT diagonal rows, the SoA distance row).  Buffers are sized
+//! once per tile edge and reused for every subsequent tile, so the
+//! steady-state inner loop performs zero heap allocations (verified by
+//! the counting-allocator integration test).
+//!
+//! **QT seed cache.**  The paper eliminates cross-length redundancy for
+//! the rolling statistics (Eqs. 7/8); this cache extends the same idea to
+//! the dot-product layer.  Every tile's first row needs the seed products
+//! `QT[j] = dot(T[a..a+m], T[b..b+m])` — an `O(segn * m)` pass.  But the
+//! dot products of a *fixed* index pair obey their own recurrence in `m`:
+//!
+//! ```text
+//! dot_{m+1}(a, b) = dot_m(a, b) + t[a+m] * t[b+m]
+//! ```
+//!
+//! so when MERLIN re-visits a (segment, chunk) tile at the next length,
+//! the cached seed row advances with one multiply-add per column instead
+//! of being recomputed from scratch, and a retry at the *same* length
+//! (MERLIN's adaptive-`r` loop re-runs PD3 constantly) reuses it outright.
+//! Keys are `(seg_start, chunk_start)` global indices, which are
+//! length-independent (segment boundaries are multiples of `segn`).
+//!
+//! The cache is validated against the live series by a full-content
+//! fingerprint ([`QtSeedCache::prepare`], called by PD3 once per run); a
+//! different series clears it.  Entries whose stored length exceeds the
+//! requested one (MERLIN restarting a sweep) are recomputed in place.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::EnginePerfCounters;
+use crate::core::distance::dot;
+
+/// Reusable per-worker buffers for one tile evaluation.
+///
+/// All vectors are kept at the engine's tile edge (`segn`) and only the
+/// `[..nb]` prefix of each is meaningful during a given tile.
+#[derive(Debug, Default)]
+pub struct TileScratch {
+    /// `m * mu[b]` per column (fast-path distance transform).
+    pub(crate) mmu_b: Vec<f64>,
+    /// `1 / (m * sig[b])` per column.
+    pub(crate) inv_msig_b: Vec<f64>,
+    /// QT diagonal row for the current segment row.
+    pub(crate) qt: Vec<f64>,
+    /// QT row of the previous segment row (Eq. 10 recurrence input).
+    pub(crate) qt_prev: Vec<f64>,
+    /// SoA distance row: distances first, folds after (branchless).
+    pub(crate) dist: Vec<f64>,
+}
+
+impl TileScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow every buffer to tile edge `segn` (no-op once warmed).
+    pub(crate) fn ensure(&mut self, segn: usize) {
+        if self.qt.len() < segn {
+            self.mmu_b.resize(segn, 0.0);
+            self.inv_msig_b.resize(segn, 0.0);
+            self.qt.resize(segn, 0.0);
+            self.qt_prev.resize(segn, 0.0);
+            self.dist.resize(segn, 0.0);
+        }
+    }
+}
+
+thread_local! {
+    static TILE_SCRATCH: RefCell<TileScratch> = RefCell::new(TileScratch::new());
+}
+
+/// Run `f` with this thread's scratch arena (lazily created, then reused
+/// for the thread's lifetime — persistent pool workers pay once).
+pub(crate) fn with_tile_scratch<R>(f: impl FnOnce(&mut TileScratch) -> R) -> R {
+    TILE_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// One cached seed row: `qt[j] = dot_m(a, cs + j)` for a tile's first
+/// segment row `a` against its chunk columns.
+#[derive(Debug)]
+struct SeedRow {
+    /// Subsequence length the products are valid for.
+    m: usize,
+    qt: Vec<f64>,
+}
+
+/// Bound on cached rows: with `segn = 256` this caps the cache at
+/// ~8 MiB.  The near-diagonal tiles that PD3 revisits at every length
+/// are inserted first (round 0 of selection), which is exactly the set
+/// worth keeping; overflow keys simply stay uncached.
+const MAX_CACHED_ROWS: usize = 4096;
+
+#[derive(Debug, Default)]
+struct SeedMap {
+    /// Full-content fingerprint of the series the rows belong to.
+    fingerprint: u64,
+    /// Identity (`as_ptr`, `len`) of the last-bound series buffer: the
+    /// O(1) fast check the engine runs per batch to catch callers that
+    /// switch series without [`QtSeedCache::prepare`].
+    bound: (usize, usize),
+    rows: HashMap<(usize, usize), SeedRow>,
+}
+
+fn identity(t: &[f64]) -> (usize, usize) {
+    (t.as_ptr() as usize, t.len())
+}
+
+/// Concurrent cross-length QT seed cache (see module docs).
+#[derive(Debug, Default)]
+pub struct QtSeedCache {
+    inner: Mutex<SeedMap>,
+    hits: AtomicU64,
+    advances: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Full-content series fingerprint (FNV-1a over the length and every
+/// sample's bit pattern).  An O(n) pass per PD3 call is noise next to
+/// the tile work it guards, and — unlike sampled hashing — it cannot
+/// miss an in-place edit (e.g. anomaly injection between runs on the
+/// same buffer), which would silently corrupt every cached seed.
+fn fingerprint(t: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h ^= t.len() as u64;
+    h = h.wrapping_mul(0x1_0000_0001_b3);
+    for &v in t {
+        h ^= v.to_bits();
+        h = h.wrapping_mul(0x1_0000_0001_b3);
+    }
+    h
+}
+
+impl QtSeedCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind the cache to `t`: clears all rows when the series *content*
+    /// changed since the last call (no-op on the hot path).  This is the
+    /// authoritative validation — callers that mutate a series buffer in
+    /// place must go through it (PD3 calls it once per run).
+    pub fn prepare(&self, t: &[f64]) {
+        let fp = fingerprint(t);
+        let mut g = self.inner.lock().unwrap();
+        if g.fingerprint != fp {
+            g.fingerprint = fp;
+            g.rows.clear();
+        }
+        g.bound = identity(t);
+    }
+
+    /// O(1) check that `t` is the buffer the cache was last bound to.
+    /// The engine consults this per batch and re-`prepare`s on mismatch,
+    /// so even direct `compute_tiles` callers that alternate series
+    /// without preparing get correct seeds.  (A different series at the
+    /// same address and length is indistinguishable here — that case is
+    /// what `prepare`'s content fingerprint covers.)
+    pub fn is_bound(&self, t: &[f64]) -> bool {
+        self.inner.lock().unwrap().bound == identity(t)
+    }
+
+    /// Drop every cached row (tests / memory pressure).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().rows.clear();
+    }
+
+    /// Lifetime counters (hits / cross-length advances / misses).
+    pub fn counters(&self) -> EnginePerfCounters {
+        EnginePerfCounters {
+            seed_hits: self.hits.load(Ordering::Relaxed),
+            seed_advances: self.advances.load(Ordering::Relaxed),
+            seed_misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Produce the seed row `qt_out[j] = dot_m(a, cs + j)` for
+    /// `j in 0..nb`, reusing / advancing the cached row for
+    /// `(a, cs)` when possible.  `qt_out.len()` must equal `nb`.
+    pub(crate) fn seed_into(
+        &self,
+        t: &[f64],
+        m: usize,
+        a: usize,
+        cs: usize,
+        nb: usize,
+        qt_out: &mut [f64],
+    ) {
+        debug_assert_eq!(qt_out.len(), nb);
+        let key = (a, cs);
+        let taken = self.inner.lock().unwrap().rows.remove(&key);
+        let row = match taken {
+            // Same length: verbatim reuse (MERLIN's r-retries).
+            Some(mut row) if row.m == m && row.qt.len() >= nb => {
+                row.qt.truncate(nb);
+                qt_out.copy_from_slice(&row.qt);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                row
+            }
+            // Shorter cached length: advance each product with one
+            // multiply-add per step (the dot-product recurrence).  The
+            // window count only shrinks as m grows, so `nb` here is
+            // never larger than the cached row.
+            Some(mut row) if row.m < m && row.qt.len() >= nb => {
+                row.qt.truncate(nb);
+                for k in row.m..m {
+                    let ta = t[a + k];
+                    let tb = &t[cs + k..cs + k + nb];
+                    for (q, &b) in row.qt.iter_mut().zip(tb) {
+                        *q += ta * b;
+                    }
+                }
+                row.m = m;
+                qt_out.copy_from_slice(&row.qt);
+                self.advances.fetch_add(1, Ordering::Relaxed);
+                row
+            }
+            // Miss (cold, or a sweep restarted at a shorter length):
+            // full O(nb * m) seed pass, stored for next time.  The
+            // evicted row's allocation is recycled when present.
+            other => {
+                let wa = &t[a..a + m];
+                for (j, q) in qt_out.iter_mut().enumerate() {
+                    *q = dot(wa, &t[cs + j..cs + j + m]);
+                }
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let mut row = other.unwrap_or_else(|| SeedRow { m, qt: Vec::new() });
+                row.m = m;
+                row.qt.clear();
+                row.qt.extend_from_slice(qt_out);
+                row
+            }
+        };
+        let mut g = self.inner.lock().unwrap();
+        if g.rows.len() < MAX_CACHED_ROWS || g.rows.contains_key(&key) {
+            g.rows.insert(key, row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(n: usize) -> Vec<f64> {
+        (0..n).map(|i| ((i * 37 + 11) % 101) as f64 * 0.25 - 7.0).collect()
+    }
+
+    fn fresh_seed(t: &[f64], m: usize, a: usize, cs: usize, nb: usize) -> Vec<f64> {
+        (0..nb).map(|j| dot(&t[a..a + m], &t[cs + j..cs + j + m])).collect()
+    }
+
+    #[test]
+    fn miss_then_hit_is_exact() {
+        let t = series(256);
+        let cache = QtSeedCache::new();
+        cache.prepare(&t);
+        let (m, a, cs, nb) = (16, 3, 40, 32);
+        let mut first = vec![0.0; nb];
+        cache.seed_into(&t, m, a, cs, nb, &mut first);
+        assert_eq!(first, fresh_seed(&t, m, a, cs, nb));
+        let mut second = vec![0.0; nb];
+        cache.seed_into(&t, m, a, cs, nb, &mut second);
+        assert_eq!(first, second, "hit must return the stored row verbatim");
+        let c = cache.counters();
+        assert_eq!((c.seed_misses, c.seed_hits, c.seed_advances), (1, 1, 0));
+    }
+
+    #[test]
+    fn cross_length_advance_matches_fresh_dots() {
+        let t = series(300);
+        let cache = QtSeedCache::new();
+        cache.prepare(&t);
+        let (a, cs) = (5, 64);
+        let mut buf = vec![0.0; 48];
+        cache.seed_into(&t, 12, a, cs, 48, &mut buf);
+        // Advance 12 -> 20 in one step; columns shrink too.
+        let nb = 40;
+        let mut got = vec![0.0; nb];
+        cache.seed_into(&t, 20, a, cs, nb, &mut got);
+        let want = fresh_seed(&t, 20, a, cs, nb);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+        assert_eq!(cache.counters().seed_advances, 1);
+    }
+
+    #[test]
+    fn shorter_request_recomputes() {
+        let t = series(200);
+        let cache = QtSeedCache::new();
+        cache.prepare(&t);
+        let mut buf = vec![0.0; 16];
+        cache.seed_into(&t, 24, 0, 50, 16, &mut buf);
+        let mut back = vec![0.0; 16];
+        cache.seed_into(&t, 10, 0, 50, 16, &mut back);
+        assert_eq!(back, fresh_seed(&t, 10, 0, 50, 16));
+        assert_eq!(cache.counters().seed_misses, 2);
+    }
+
+    #[test]
+    fn prepare_invalidates_on_series_change() {
+        let t1 = series(128);
+        let mut t2 = t1.clone();
+        t2[60] += 1.0;
+        let cache = QtSeedCache::new();
+        cache.prepare(&t1);
+        let mut buf = vec![0.0; 8];
+        cache.seed_into(&t1, 8, 0, 30, 8, &mut buf);
+        cache.prepare(&t2);
+        let mut after = vec![0.0; 8];
+        cache.seed_into(&t2, 8, 0, 30, 8, &mut after);
+        assert_eq!(after, fresh_seed(&t2, 8, 0, 30, 8));
+        let c = cache.counters();
+        assert_eq!((c.seed_misses, c.seed_hits), (2, 0));
+    }
+
+    #[test]
+    fn scratch_ensure_is_idempotent() {
+        let mut s = TileScratch::new();
+        s.ensure(64);
+        let p = s.qt.as_ptr();
+        s.ensure(64);
+        s.ensure(32);
+        assert_eq!(s.qt.as_ptr(), p);
+        assert_eq!(s.qt.len(), 64);
+    }
+}

@@ -11,3 +11,13 @@
 pub mod artifact;
 pub mod executor;
 pub mod types;
+
+/// Probe whether a PJRT client can actually be constructed in this build.
+///
+/// `false` when the workspace is built against the offline `xla` stub
+/// (vendor/xla) or when no PJRT plugin is loadable.  AOT-dependent tests
+/// and benches gate on this (plus artifact presence) so `cargo test -q`
+/// is green in every environment.
+pub fn pjrt_runtime_available() -> bool {
+    std::panic::catch_unwind(|| xla::PjRtClient::cpu().is_ok()).unwrap_or(false)
+}

@@ -36,12 +36,42 @@ pub struct TileInputs {
 /// Invalid/excluded entries are `+inf` minima and `false` kills.
 /// Minima are `f64` at the coordinator boundary; the XLA engine upcasts
 /// the kernel's `f32` results.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct TileOutputs {
     pub row_min: Vec<f64>,
     pub col_min: Vec<f64>,
     pub row_kill: Vec<bool>,
     pub col_kill: Vec<bool>,
+}
+
+impl TileOutputs {
+    /// Fresh output block for tile edge `segn`, initialized to the
+    /// neutral values (`+inf` minima, no kills).
+    pub fn sized(segn: usize) -> Self {
+        Self {
+            row_min: vec![f64::INFINITY; segn],
+            col_min: vec![f64::INFINITY; segn],
+            row_kill: vec![false; segn],
+            col_kill: vec![false; segn],
+        }
+    }
+
+    /// Reinitialize in place for tile edge `segn`.
+    ///
+    /// This is the buffer-recycling hook of the zero-allocation tile
+    /// pipeline: once the four vectors have reached `segn` capacity,
+    /// `reset` never touches the allocator again (`clear` + `resize`
+    /// reuse the existing storage).
+    pub fn reset(&mut self, segn: usize) {
+        self.row_min.clear();
+        self.row_min.resize(segn, f64::INFINITY);
+        self.col_min.clear();
+        self.col_min.resize(segn, f64::INFINITY);
+        self.row_kill.clear();
+        self.row_kill.resize(segn, false);
+        self.col_kill.clear();
+        self.col_kill.resize(segn, false);
+    }
 }
 
 /// Shape key of a tile artifact.
@@ -66,5 +96,21 @@ mod tests {
     fn src_len_matches_python() {
         assert_eq!(TileShape { segn: 64, mmax: 128 }.src_len(), 191);
         assert_eq!(TileShape { segn: 512, mmax: 512 }.src_len(), 1023);
+    }
+
+    #[test]
+    fn tile_outputs_reset_recycles_storage() {
+        let mut o = TileOutputs::sized(8);
+        o.row_min[3] = 1.5;
+        o.col_kill[7] = true;
+        let ptr = o.row_min.as_ptr();
+        o.reset(8);
+        assert!(o.row_min.iter().all(|x| x.is_infinite()));
+        assert!(o.col_kill.iter().all(|&k| !k));
+        assert_eq!(o.row_min.as_ptr(), ptr, "reset must not reallocate");
+        // Shrinking reuses storage too.
+        o.reset(4);
+        assert_eq!(o.row_min.len(), 4);
+        assert_eq!(o.row_min.as_ptr(), ptr);
     }
 }

@@ -1,20 +1,29 @@
-//! A small fixed-size thread pool (rayon replacement).
+//! Thread-pool primitives (rayon replacement).
 //!
-//! Two entry points:
+//! Three entry points:
 //!
-//! - [`ThreadPool::run`] — execute a batch of independent closures and
-//!   wait for all of them (panics are propagated).
-//! - [`parallel_map_indexed`] — convenience for "apply f to 0..n in
-//!   parallel, collect results in order", the shape of every tile batch in
-//!   the native engine.
+//! - [`ThreadPool::run`] — execute a batch of independent boxed closures
+//!   and wait for all of them (panics are propagated).
+//! - [`parallel_map_indexed`] — "apply f to 0..n in parallel, collect
+//!   results in order", the shape of every baseline sweep.  Results are
+//!   written lock-free into disjoint slots; the old mutex-per-item
+//!   collection is preserved as [`parallel_map_indexed_locked`] for the
+//!   regression test and the bench baseline.
+//! - [`RoundPool`] — a *persistent* worker pool for the native tile
+//!   engine's steady-state loop: submitting a round performs **zero heap
+//!   allocations** (no job boxing, no channel sends — a condvar broadcast
+//!   plus an atomic work cursor), which `std::thread::scope` +
+//!   per-job `Box` fundamentally cannot do.
 //!
-//! Jobs are `'static` at the channel level; the scoped-borrow use cases go
-//! through `std::thread::scope` inside `parallel_map_indexed`, so callers
-//! can borrow locals freely.
+//! Work is always distributed by an atomic cursor (dynamic scheduling —
+//! tile costs are skewed by early abandons), and writes go to disjoint
+//! slots through [`SliceWriter`], so no ordering lock is ever taken on
+//! the result path.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -94,10 +103,95 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
+/// Shared writer over **disjoint** slots of a mutable slice.
+///
+/// The work-distribution cursor hands every index to exactly one worker,
+/// so slot writes never alias; this type just carries the pointer across
+/// the thread boundary without a lock.
+pub(crate) struct SliceWriter<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+// SAFETY: SliceWriter only moves `T` values across threads (each slot is
+// written/borrowed by at most one thread at a time, enforced by the
+// callers' index-claiming protocol), so `T: Send` suffices.
+unsafe impl<T: Send> Send for SliceWriter<T> {}
+unsafe impl<T: Send> Sync for SliceWriter<T> {}
+
+impl<T> SliceWriter<T> {
+    pub(crate) fn new(slice: &mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    /// Overwrite slot `i`.
+    ///
+    /// # Safety
+    /// `i` must be claimed by exactly one thread (no concurrent access to
+    /// the same slot), and the underlying slice must outlive the write.
+    pub(crate) unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = value;
+    }
+
+    /// Exclusive reference to slot `i`.
+    ///
+    /// # Safety
+    /// Same contract as [`SliceWriter::write`]: the caller must guarantee
+    /// no other live reference to slot `i` exists for the borrow's life.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slot(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
 /// Apply `f(i)` for `i in 0..n` across `threads` scoped workers; results
 /// are returned in index order.  Work is distributed by an atomic cursor
-/// (dynamic scheduling — tile costs are skewed by early abandons).
+/// (dynamic scheduling); each result is written lock-free into its own
+/// slot — the former mutex-per-item critical section serialized workers
+/// exactly when tiles finished close together (see
+/// [`parallel_map_indexed_locked`], kept as the reference).
 pub fn parallel_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = SliceWriter::new(&mut out);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let slots = &slots;
+            let cursor = &cursor;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: the cursor hands out each index exactly once,
+                // and `out` outlives the scope.
+                unsafe { slots.write(i, Some(v)) };
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker filled slot")).collect()
+}
+
+/// The pre-optimization collection strategy: a global `Mutex` around the
+/// result vector, locked once per finished item.  Kept (unused by
+/// production code) as the semantic reference for the regression test and
+/// as the "before" side of the pool microbench.
+pub fn parallel_map_indexed_locked<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
@@ -120,13 +214,185 @@ where
                     break;
                 }
                 let v = f(i);
-                // SAFETY-free approach: short critical section per item.
                 let mut guard = slots.lock().unwrap();
                 guard[i] = Some(v);
             });
         }
     });
     out.into_iter().map(|v| v.expect("worker filled slot")).collect()
+}
+
+/// One round's shared state (guarded by [`RoundShared::state`]).
+struct RoundState {
+    /// Round counter; workers wake when it moves past what they've seen.
+    epoch: u64,
+    /// Item count of the current round.
+    n: usize,
+    /// Erased pointer to the round's job closure.  Only valid while the
+    /// round is in flight; cleared by `run` before it returns.
+    job: Option<&'static (dyn Fn(usize) + Sync)>,
+    /// Workers still executing the current round.
+    active: usize,
+    shutdown: bool,
+}
+
+struct RoundShared {
+    state: Mutex<RoundState>,
+    start: Condvar,
+    done: Condvar,
+    cursor: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+/// Persistent worker pool with allocation-free round submission.
+///
+/// Workers park on a condvar between rounds.  [`RoundPool::run`] installs
+/// a lifetime-erased reference to the round closure, bumps the epoch,
+/// broadcasts, participates in the round itself, then blocks until every
+/// worker has drained the cursor — so the closure (and everything it
+/// borrows) is guaranteed live for exactly the duration workers can see
+/// it.  No `Box`, no channel message, no per-item lock.
+pub struct RoundPool {
+    shared: Arc<RoundShared>,
+    /// Serializes concurrent submitters: the round protocol runs one
+    /// round at a time (an engine shared across threads stays correct;
+    /// rounds just queue up behind each other).
+    submit: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RoundPool {
+    /// Spawn `workers` persistent threads (0 is allowed: rounds then run
+    /// entirely on the submitting thread).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(RoundShared {
+            state: Mutex::new(RoundState {
+                epoch: 0,
+                n: 0,
+                job: None,
+                active: 0,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("palmad-round-{w}"))
+                    .spawn(move || worker_main(&shared))
+                    .expect("spawn round-pool worker")
+            })
+            .collect();
+        Self { shared, submit: Mutex::new(()), handles }
+    }
+
+    /// Worker-thread count (the submitter participates on top of this).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the workers plus the
+    /// calling thread; returns when all items are done.  Steady-state
+    /// cost: one mutex broadcast in, one mutex wait out, zero allocations.
+    pub fn run<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        // One round at a time; a poisoned lock (panicked round) is fine
+        // to reuse — the protocol state is reset per round.
+        let _round_guard = match self.submit.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let job: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the erased 'static lifetime never escapes this call —
+        // workers only dereference `job` between the epoch bump below and
+        // their `active` decrement, and this function does not return
+        // until `active == 0` and the slot is cleared.
+        let job: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            self.shared.cursor.store(0, Ordering::Relaxed);
+            st.n = n;
+            st.job = Some(job);
+            st.active = self.handles.len();
+            st.epoch += 1;
+            self.shared.start.notify_all();
+        }
+        // The submitting thread pulls items too (a 1-thread engine never
+        // pays a handoff).
+        loop {
+            let i = self.shared.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            run_item(&self.shared, job, i);
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        drop(st);
+        if self.shared.panicked.swap(false, Ordering::SeqCst) {
+            panic!("RoundPool worker panicked during round");
+        }
+    }
+}
+
+fn run_item(shared: &RoundShared, job: &(dyn Fn(usize) + Sync), i: usize) {
+    if catch_unwind(AssertUnwindSafe(|| job(i))).is_err() {
+        shared.panicked.store(true, Ordering::SeqCst);
+    }
+}
+
+fn worker_main(shared: &RoundShared) {
+    let mut seen = 0u64;
+    loop {
+        let (job, n) = {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown && st.epoch == seen {
+                st = shared.start.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            seen = st.epoch;
+            (st.job.expect("round job installed"), st.n)
+        };
+        loop {
+            let i = shared.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            run_item(shared, job, i);
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+impl Drop for RoundPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -180,5 +446,117 @@ mod tests {
     fn parallel_map_empty_and_single() {
         assert!(parallel_map_indexed(0, 4, |i| i).is_empty());
         assert_eq!(parallel_map_indexed(1, 4, |i| i + 7), vec![7]);
+    }
+
+    /// Contention regression: tiny items maximize pressure on the result
+    /// path.  The lock-free writer must stay correct under it and agree
+    /// with the mutex-collected reference exactly.
+    #[test]
+    fn parallel_map_contention_regression() {
+        for round in 0..5u64 {
+            let n = 50_000;
+            let free = parallel_map_indexed(n, 8, |i| i as u64 ^ round);
+            assert_eq!(free.len(), n);
+            for (i, v) in free.iter().enumerate() {
+                assert_eq!(*v, i as u64 ^ round, "slot {i} torn/misplaced");
+            }
+            let locked = parallel_map_indexed_locked(n, 8, |i| i as u64 ^ round);
+            assert_eq!(free, locked, "lock-free diverged from mutex reference");
+        }
+    }
+
+    /// Drop-heavy payloads through the lock-free path: every value must
+    /// land intact (no double drops / leaks corrupting content).
+    #[test]
+    fn parallel_map_owned_payloads() {
+        let got = parallel_map_indexed(500, 6, |i| vec![i; (i % 7) + 1]);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(v.len(), (i % 7) + 1);
+            assert!(v.iter().all(|&x| x == i));
+        }
+    }
+
+    #[test]
+    fn round_pool_runs_rounds_and_reuses_workers() {
+        let pool = RoundPool::new(3);
+        let counter = AtomicU64::new(0);
+        for _ in 0..10 {
+            pool.run(1000, |i| {
+                counter.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 10 * (1000 * 1001 / 2));
+    }
+
+    #[test]
+    fn round_pool_writes_disjoint_slots() {
+        let pool = RoundPool::new(4);
+        let mut out = vec![0u64; 20_000];
+        let slots = SliceWriter::new(&mut out);
+        pool.run(20_000, |i| {
+            // SAFETY: cursor gives each index to exactly one thread.
+            unsafe { slots.write(i, (i as u64).wrapping_mul(3) + 1) };
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i as u64).wrapping_mul(3) + 1);
+        }
+    }
+
+    #[test]
+    fn round_pool_zero_workers_runs_inline() {
+        let pool = RoundPool::new(0);
+        let counter = AtomicU64::new(0);
+        pool.run(100, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn round_pool_empty_round_is_noop() {
+        let pool = RoundPool::new(2);
+        pool.run(0, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn round_pool_concurrent_submitters_serialize() {
+        let pool = Arc::new(RoundPool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        pool.run(500, |i| {
+                            total.fetch_add(i as u64, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * (499 * 500 / 2));
+    }
+
+    #[test]
+    fn round_pool_propagates_worker_panic() {
+        let pool = RoundPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(64, |i| {
+                if i == 13 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // The pool must stay usable after a panicked round.
+        let counter = AtomicU64::new(0);
+        pool.run(32, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
     }
 }

@@ -1,0 +1,113 @@
+//! Zero-allocation proof for the native tile pipeline.
+//!
+//! A counting global allocator wraps `System`; after warmup (scratch
+//! arenas sized, seed cache populated, worker pool spawned, output
+//! blocks grown) the steady-state tile loop must perform **zero** heap
+//! allocations.  This file contains only this test so no concurrent
+//! test can pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use palmad::core::stats::RollingStats;
+use palmad::engines::native::{NativeConfig, NativeEngine};
+use palmad::engines::{Engine, SeriesView, TileTask};
+use palmad::runtime::types::TileOutputs;
+use palmad::util::rng::Rng;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAllocator;
+
+// SAFETY: defers entirely to `System`; only counts on the side.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+fn random_walk(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed(seed);
+    let mut acc = 0.0;
+    (0..n)
+        .map(|_| {
+            acc += rng.normal();
+            acc
+        })
+        .collect()
+}
+
+#[test]
+fn steady_state_tile_loop_is_allocation_free() {
+    let t = random_walk(4096, 99);
+    let m = 64;
+    let segn = 128;
+    let stats = RollingStats::compute(&t, m);
+    let view = SeriesView { t: &t, stats: &stats };
+    // Multiple workers so the parallel (RoundPool + SliceWriter) path is
+    // the one under test, and enough tasks that every worker gets items
+    // during warmup (thread-local scratch arenas are per-thread).
+    let engine = NativeEngine::new(NativeConfig { segn, threads: 4, ..Default::default() });
+    engine.prepare_series(&view);
+    // A 4x4 grid of tiles: 16 *distinct* cache keys (a duplicated key in
+    // one concurrent batch would race its cache row and legitimately
+    // re-seed), covering self tiles, exclusion overlaps and both scan
+    // directions.  All well inside the 4033 valid windows.
+    let tasks: Vec<TileTask> = (0..16)
+        .map(|k| TileTask { seg_start: (k % 4) * segn, chunk_start: (k / 4) * segn })
+        .collect();
+    let r2 = 9.0;
+
+    let mut out: Vec<TileOutputs> = Vec::new();
+    // Warmup: spawns the pool, sizes every scratch arena and output
+    // block, and fills the seed cache (first round misses, later rounds
+    // hit; both paths execute).  Worker scratch arenas are thread-local
+    // and populated lazily, so a worker that loses every cursor race
+    // during warmup would first allocate *inside* the measured window —
+    // that is still warmup, not steady state.  Hence: measure, and on a
+    // nonzero count warm further and re-measure; the claim under test is
+    // that a zero-allocation steady state is *reached and stays*, which
+    // the final attempt must prove.
+    for _ in 0..5 {
+        engine.compute_tiles_into(&view, r2, &tasks, &mut out).unwrap();
+    }
+
+    let mut last_delta = u64::MAX;
+    for _attempt in 0..5 {
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            engine.compute_tiles_into(&view, r2, &tasks, &mut out).unwrap();
+        }
+        last_delta = ALLOC_CALLS.load(Ordering::SeqCst) - before;
+        if last_delta == 0 {
+            break;
+        }
+    }
+    assert_eq!(
+        last_delta, 0,
+        "steady-state tile loop still performed {last_delta} heap allocations \
+         across 10 rounds after extended warmup"
+    );
+
+    // Sanity: the measured rounds really computed tiles (not a no-op).
+    assert_eq!(out.len(), tasks.len());
+    assert!(out.iter().any(|o| o.row_min.iter().any(|d| d.is_finite())));
+}

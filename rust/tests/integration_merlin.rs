@@ -130,7 +130,12 @@ fn serial_merlin_equivalence_on_heating_slice() {
 
 #[test]
 fn aot_stats_backend_equals_native_backend() {
-    // Only runs when artifacts exist (XLA engine needed for AOT stats).
+    // Only runs when a PJRT runtime is linked AND artifacts exist (the
+    // XLA engine is needed for AOT stats).
+    if !palmad::runtime::pjrt_runtime_available() {
+        eprintln!("SKIP: PJRT runtime unavailable (offline xla stub build)");
+        return;
+    }
     let Ok(artifacts) = palmad::runtime::artifact::ArtifactSet::load(
         palmad::runtime::artifact::ArtifactSet::default_dir(),
     ) else {

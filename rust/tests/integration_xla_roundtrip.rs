@@ -15,7 +15,17 @@ use palmad::runtime::artifact::ArtifactSet;
 use palmad::engines::xla::XlaEngine;
 use palmad::util::rng::Rng;
 
+/// Gate: these tests need both compiled AOT artifacts *and* a linked
+/// PJRT runtime (the offline `xla` stub reports unavailable).  Without
+/// either, skip loudly so `cargo test -q` stays green everywhere.
 fn artifacts() -> Option<ArtifactSet> {
+    if !palmad::runtime::pjrt_runtime_available() {
+        eprintln!(
+            "SKIP: PJRT runtime unavailable (offline xla stub build); \
+             link the real xla bindings to run the AOT roundtrip tests"
+        );
+        return None;
+    }
     let dir = ArtifactSet::default_dir();
     match ArtifactSet::load(&dir) {
         Ok(s) => Some(s),

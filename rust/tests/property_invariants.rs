@@ -310,6 +310,7 @@ fn prop_thread_determinism() {
             let engine = NativeEngine::new(palmad::engines::native::NativeConfig {
                 segn: 32,
                 threads,
+                ..Default::default()
             });
             let mut metrics = DragMetrics::default();
             let mut found = pd3(&engine, &view, r, &Pd3Config::default(), &mut metrics)
@@ -323,6 +324,108 @@ fn prop_thread_determinism() {
         for (a, b) in results[0].iter().zip(&results[1]) {
             if a.idx != b.idx || (a.nn_dist - b.nn_dist).abs() > 1e-12 {
                 return Err(format!("{a:?} vs {b:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The scratch-arena tile kernel — recycled output blocks, per-worker
+/// scratch, QT seed cache including its cross-length `m -> m+1` advance —
+/// matches the brute-force distance oracle on random walks at every step
+/// of a length sweep.
+#[test]
+fn prop_scratch_tile_kernel_matches_oracle() {
+    use palmad::engines::{Engine, TileTask};
+    use palmad::runtime::types::TileOutputs;
+
+    /// Brute-force tile oracle (direct z-normalized distances).
+    fn oracle(t: &[f64], task: TileTask, segn: usize, m: usize, r2: f64) -> TileOutputs {
+        let nwin = t.len() - m + 1;
+        let mut out = TileOutputs::sized(segn);
+        for i in 0..segn {
+            let a = task.seg_start + i;
+            if a >= nwin {
+                continue;
+            }
+            for j in 0..segn {
+                let b = task.chunk_start + j;
+                if b >= nwin || a.abs_diff(b) < m {
+                    continue;
+                }
+                let d = ed2norm(&t[a..a + m], &t[b..b + m]);
+                out.row_min[i] = out.row_min[i].min(d);
+                out.col_min[j] = out.col_min[j].min(d);
+                if d < r2 {
+                    out.row_kill[i] = true;
+                    out.col_kill[j] = true;
+                }
+            }
+        }
+        out
+    }
+
+    check("scratch-tile-oracle", Config { cases: 12, ..Default::default() }, |rng| {
+        let n = rng.int_in(150, 400);
+        let t = SeriesGen::Walk.generate(n, rng);
+        let m0 = rng.int_in(4, 24);
+        let steps = rng.int_in(1, 5);
+        let segn = rng.int_in(8, 48);
+        let nwin0 = n - m0 + 1;
+        let r2 = rng.range(0.5, 2.0 * m0 as f64);
+        let engine = NativeEngine::new(palmad::engines::native::NativeConfig {
+            segn,
+            ..Default::default()
+        });
+        let mut tasks = vec![TileTask { seg_start: 0, chunk_start: 0 }]; // self tile
+        for _ in 0..3 {
+            tasks.push(TileTask { seg_start: rng.below(nwin0), chunk_start: rng.below(nwin0) });
+        }
+        let mut stats = RollingStats::compute(&t, m0);
+        let mut buf: Vec<TileOutputs> = Vec::new();
+        for step in 0..=steps {
+            let m = m0 + step;
+            let view = SeriesView { t: &t, stats: &stats };
+            engine.prepare_series(&view);
+            engine
+                .compute_tiles_into(&view, r2, &tasks, &mut buf)
+                .map_err(|e| format!("{e}"))?;
+            for (task, got) in tasks.iter().zip(&buf) {
+                let want = oracle(&t, *task, segn, m, r2);
+                for k in 0..segn {
+                    for (side, g, w) in [
+                        ("row", got.row_min[k], want.row_min[k]),
+                        ("col", got.col_min[k], want.col_min[k]),
+                    ] {
+                        if g.is_finite() != w.is_finite() {
+                            return Err(format!(
+                                "m={m} {task:?} {side} {k}: finiteness {g} vs {w}"
+                            ));
+                        }
+                        if w.is_finite() && !close(g, w, 1e-6) {
+                            return Err(format!("m={m} {task:?} {side} {k}: {g} vs {w}"));
+                        }
+                    }
+                    // Kill flags are only checked away from the r2
+                    // boundary: the qt-form and direct-form distances
+                    // legitimately round to different sides within eps.
+                    let margin = 1e-9 * (1.0 + r2);
+                    if want.row_min[k].is_finite()
+                        && (want.row_min[k] - r2).abs() > margin
+                        && got.row_kill[k] != want.row_kill[k]
+                    {
+                        return Err(format!("m={m} {task:?} row_kill {k}"));
+                    }
+                    if want.col_min[k].is_finite()
+                        && (want.col_min[k] - r2).abs() > margin
+                        && got.col_kill[k] != want.col_kill[k]
+                    {
+                        return Err(format!("m={m} {task:?} col_kill {k}"));
+                    }
+                }
+            }
+            if step < steps {
+                stats.advance(&t);
             }
         }
         Ok(())

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# CI gate for the rust workspace: formatting, lints, build, tests.
+#
+#   scripts/ci.sh          # full gate
+#   scripts/ci.sh --fast   # skip the release build (debug tests only)
+#
+# The workspace is fully offline (vendored path deps), so no network is
+# needed.  Benches are NOT run here — see scripts in EXPERIMENTS.md §Perf
+# for the perf tracking flow (BENCH_*.json).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FAST=0
+[ "${1:-}" = "--fast" ] && FAST=1
+
+echo "== cargo fmt --check =="
+cargo fmt --all --check
+
+echo "== cargo clippy (-D warnings) =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+if [ "$FAST" -eq 0 ]; then
+  echo "== cargo build --release =="
+  cargo build --release
+fi
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "CI gate passed."

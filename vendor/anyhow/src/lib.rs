@@ -1,0 +1,167 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The workspace must build with no crates.io access, so this vendored
+//! shim provides exactly the surface the repo uses:
+//!
+//! - [`Error`] / [`Result`] (message-carrying, `Send + Sync`)
+//! - the [`anyhow!`], [`bail!`] and [`ensure!`] macros
+//! - the [`Context`] extension trait on `Result` and `Option`
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`; that is what makes the blanket
+//! `impl<E: std::error::Error> From<E> for Error` coherent, which in turn
+//! makes `?` work on any standard error type.
+
+use std::fmt;
+
+/// A message-carrying error. Context layers are joined as
+/// `"outer: inner"` (the shim keeps one flattened string rather than a
+/// source chain — enough for log/CLI output).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse().context("not an int")?;
+        ensure!(v >= 0, "negative: {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_and_context() {
+        assert_eq!(parse("4").unwrap(), 4);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not an int: "), "{e}");
+        assert_eq!(parse("-1").unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<i32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        let x = 3;
+        assert_eq!(anyhow!("got {x}").to_string(), "got 3");
+        assert_eq!(anyhow!("got {}", 9).to_string(), "got 9");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f(ok: bool) -> Result<()> {
+            ensure!(ok);
+            Ok(())
+        }
+        assert!(f(true).is_ok());
+        assert!(f(false).unwrap_err().to_string().contains("condition failed"));
+    }
+}
