@@ -16,6 +16,7 @@
 use palmad::bench::harness::{default_reps, measure, quick_mode, Bench};
 use palmad::bench::stats::Summary;
 use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::coordinator::streaming::{StreamConfig, StreamMonitor};
 use palmad::core::distance::{dot, ed2_early_abandon, znorm};
 use palmad::core::stats::RollingStats;
 use palmad::engines::native::{
@@ -174,6 +175,57 @@ fn main() {
         vec![("speedup_vs_legacy".into(), format!("{merlin_speedup:.2}"))],
     );
 
+    // Streaming ingest: steady-state points/sec through the monitor —
+    // the amortized ring slide vs the pre-PR O(window)-per-push drain
+    // slide (`StreamConfig::legacy_slide`), same engine, same stream.
+    let stream_points = if quick_mode() { 10_000 } else { 100_000 };
+    let (stream_window, stream_m, stream_refresh) = (4_096usize, 64usize, 2_048usize);
+    let stream_engine = NativeEngine::new(NativeConfig { segn, ..Default::default() });
+    let mut ingest = |legacy: bool| -> Summary {
+        let mut mon = StreamMonitor::new(
+            &stream_engine,
+            StreamConfig {
+                window: stream_window,
+                m: stream_m,
+                refresh: stream_refresh,
+                alert_frac: 1.1,
+                legacy_slide: legacy,
+            },
+        );
+        let mut i = 0usize;
+        measure(1, default_reps(), || {
+            for _ in 0..stream_points {
+                let x = (i as f64 * 0.2).sin() + 0.05 * (i as f64 * 0.013).sin();
+                let _ = mon.push(x).unwrap();
+                i += 1;
+            }
+        })
+    };
+    let s_ingest_legacy = ingest(true);
+    let s_ingest_ring = ingest(false);
+    let ingest_speedup = s_ingest_legacy.median / s_ingest_ring.median;
+    bench.record(
+        "stream_ingest_legacy_drain",
+        format!("{stream_points} pts w={stream_window} m={stream_m}"),
+        s_ingest_legacy,
+        vec![(
+            "mpts_per_s".into(),
+            format!("{:.2}", stream_points as f64 / s_ingest_legacy.median / 1e6),
+        )],
+    );
+    bench.record(
+        "stream_ingest_ring",
+        format!("{stream_points} pts w={stream_window} m={stream_m}"),
+        s_ingest_ring,
+        vec![
+            (
+                "mpts_per_s".into(),
+                format!("{:.2}", stream_points as f64 / s_ingest_ring.median / 1e6),
+            ),
+            ("speedup_vs_drain".into(), format!("{ingest_speedup:.2}")),
+        ],
+    );
+
     write_root_json(
         "BENCH_merlin.json",
         Json::obj()
@@ -187,7 +239,30 @@ fn main() {
             .set("top_k", 1usize)
             .set("baseline_legacy", summary_json(&s_merlin_legacy))
             .set("scratch", summary_json(&s_merlin_scratch))
-            .set("speedup", merlin_speedup),
+            .set("speedup", merlin_speedup)
+            .set(
+                "streaming_ingest",
+                Json::obj()
+                    .set("window", stream_window)
+                    .set("m", stream_m)
+                    .set("refresh", stream_refresh)
+                    .set("points_per_rep", stream_points)
+                    .set(
+                        "legacy_drain",
+                        summary_json(&s_ingest_legacy).set(
+                            "mpts_per_s",
+                            stream_points as f64 / s_ingest_legacy.median / 1e6,
+                        ),
+                    )
+                    .set(
+                        "ring",
+                        summary_json(&s_ingest_ring).set(
+                            "mpts_per_s",
+                            stream_points as f64 / s_ingest_ring.median / 1e6,
+                        ),
+                    )
+                    .set("speedup", ingest_speedup),
+            ),
     );
 
     // PJRT tile call (when a runtime and artifacts exist): per-call

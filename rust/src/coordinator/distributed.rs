@@ -1,26 +1,42 @@
 //! Distributed DRAG simulation — the cluster-of-nodes scheme the paper
 //! reviews (§1) and lists as future work (a).
 //!
-//! The series' subsequences are partitioned across `P` simulated nodes.
-//! Each node selects range-discord candidates *within its partition*;
-//! the candidate sets are exchanged and refined globally:
+//! The series' subsequences are partitioned across `P` simulated nodes
+//! as consecutive, tile-aligned *segment* ranges, so every node's work
+//! runs through [`crate::engines::Engine::compute_tiles_into`] and one
+//! shared, recycled [`MerlinWorkspace`] — the same zero-allocation
+//! machinery as PD3 itself (the pre-port implementation materialized a
+//! `Vec<Vec<f64>>` of z-normalized windows up front and walked it
+//! pairwise).  Each node selects range-discord candidates *within its
+//! partition*; the candidate sets are exchanged and refined globally:
 //!
-//! - **Yankov** (Yankov/Keogh 2008, MapReduce DRAG): exchange the raw
-//!   local candidate sets `C = U C_i`.
-//! - **LocalRefine** (Zymbler et al. 2021): each node first refines its
-//!   own candidates against its own partition, exchanging only the
+//! - **Yankov** (Yankov/Keogh 2008, MapReduce DRAG): nodes run only the
+//!   selection scan and exchange the raw local candidate sets
+//!   `C = U C_i`.
+//! - **LocalRefine** (Zymbler et al. 2021): each node additionally runs
+//!   the refinement scan against its own partition, exchanging only the
 //!   survivors `C = U C~_i` — the paper reports this significantly
 //!   shrinks the exchange, which [`DistMetrics::exchanged`] measures.
 //!
-//! Both variants return exactly the brute-force range-discord set
-//! (integration-tested); they differ only in intermediate traffic — the
-//! quantity a real cluster pays for.  Nodes here are loop iterations (the
-//! testbed exposes one core); the communication structure is what is
-//! being reproduced.
+//! The global refinement is a candidate-seeded PD3 pass (both scan
+//! directions over every chunk, early-stopping segments whose
+//! candidates die), so both variants return exactly the brute-force
+//! range-discord set with exact nnDist (integration- and
+//! property-tested); they differ only in intermediate traffic — the
+//! quantity a real cluster pays for.  Nodes here are loop iterations
+//! (the testbed exposes one core); the communication structure is what
+//! is being reproduced.
 
-use crate::core::distance::{ed2_early_abandon, is_flat, znorm};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::drag::{pd3_prepared, scan_phase, Discord, Pd3Config, Scan};
+use super::metrics::DragMetrics;
+use super::segmentation::Segmentation;
+use super::workspace::MerlinWorkspace;
 use crate::core::stats::RollingStats;
-use crate::coordinator::drag::Discord;
+use crate::engines::{Engine, SeriesView};
 
 /// Exchange strategy (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,7 +46,7 @@ pub enum ExchangeMode {
 }
 
 /// Simulated-cluster counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct DistMetrics {
     /// Candidates surviving local selection, summed over nodes.
     pub local_candidates: usize,
@@ -38,145 +54,105 @@ pub struct DistMetrics {
     pub exchanged: usize,
     /// Final discords.
     pub survivors: usize,
+    /// Engine-level PD3 counters across the local and global scans
+    /// (tile volume, early-stop skips, kills, phase timings) — the
+    /// measurable side of the within-partition recompute trade-off.
+    pub drag: DragMetrics,
 }
 
-struct Partitioned {
-    m: usize,
-    bounds: Vec<(usize, usize)>,
-    norms: Vec<Vec<f64>>,
-    flat: Vec<bool>,
-}
-
-impl Partitioned {
-    fn new(t: &[f64], m: usize, parts: usize) -> Self {
-        let nwin = t.len() + 1 - m;
-        let parts = parts.clamp(1, nwin.max(1));
-        let chunk = nwin.div_ceil(parts);
-        let bounds: Vec<(usize, usize)> =
-            (0..parts).map(|p| (p * chunk, ((p + 1) * chunk).min(nwin))).filter(|(a, b)| a < b).collect();
-        let stats = RollingStats::compute(t, m);
-        let flat = stats.sig.iter().zip(&stats.mu).map(|(&s, &mu)| is_flat(s, mu)).collect();
-        let norms = (0..nwin).map(|i| znorm(&t[i..i + m])).collect();
-        Self { m, bounds, norms, flat }
-    }
-
-    /// Flat-aware pairwise squared distance with early abandon.
-    #[inline]
-    fn dist(&self, i: usize, j: usize, cutoff: f64) -> Option<f64> {
-        if self.flat[i] || self.flat[j] {
-            let d = if self.flat[i] && self.flat[j] { 0.0 } else { 2.0 * self.m as f64 };
-            if d >= cutoff {
-                None
-            } else {
-                Some(d)
-            }
-        } else {
-            ed2_early_abandon(&self.norms[i], &self.norms[j], cutoff)
-        }
-    }
-}
-
-/// Run distributed DRAG over `parts` simulated nodes.
+/// Run distributed DRAG over `parts` simulated nodes on `engine`.
 ///
 /// Returns the exact range-discord set (nnDist in ED units) plus the
-/// communication metrics.
+/// communication metrics.  `parts` is clamped to the number of tile
+/// segments; partitions are tile-aligned so every node's scans touch
+/// only windows it owns.
 pub fn distributed_drag(
+    engine: &dyn Engine,
     t: &[f64],
     m: usize,
     r: f64,
     parts: usize,
     mode: ExchangeMode,
-) -> (Vec<Discord>, DistMetrics) {
+) -> Result<(Vec<Discord>, DistMetrics)> {
     let mut metrics = DistMetrics::default();
-    if t.len() < m {
-        return (Vec::new(), metrics);
+    if t.len() < m || m < 2 {
+        return Ok((Vec::new(), metrics));
     }
-    let pt = Partitioned::new(t, m, parts);
+    let stats = RollingStats::compute(t, m);
+    let view = SeriesView { t, stats: &stats };
+    let nwin = view.n_windows();
+    if nwin == 0 {
+        return Ok((Vec::new(), metrics));
+    }
+
+    let seg = Segmentation::new(nwin, engine.segn());
+    let parts = parts.clamp(1, seg.nseg);
+    let seg_chunk = seg.nseg.div_ceil(parts);
+    let cfg = Pd3Config::default();
+    let mut drag = DragMetrics::default();
+    let mut ws = MerlinWorkspace::new();
+    ws.reset_all_candidates(nwin);
+    engine.prepare_series(&view);
     let r2 = r * r;
 
-    // ---- Per-node local selection (serial DRAG phase 1 on the slice) ----
-    let mut local_sets: Vec<Vec<usize>> = Vec::with_capacity(pt.bounds.len());
-    for &(lo, hi) in &pt.bounds {
-        let mut cands: Vec<usize> = Vec::new();
-        for s in lo..hi {
-            let mut is_cand = true;
-            let mut k = 0;
-            while k < cands.len() {
-                let c = cands[k];
-                if s.abs_diff(c) >= pt.m && pt.dist(s, c, r2).is_some() {
-                    cands.swap_remove(k);
-                    is_cand = false;
-                    continue;
-                }
-                k += 1;
-            }
-            if is_cand {
-                cands.push(s);
-            }
+    // ---- Per-node local phase -------------------------------------------
+    // Nodes own disjoint segment ranges, and a restricted scan only ever
+    // reads/writes windows inside its range — so one shared bitmap
+    // carries every node's local result without interference.
+    for p in 0..parts {
+        let lo = p * seg_chunk;
+        let hi = ((p + 1) * seg_chunk).min(seg.nseg);
+        if lo >= hi {
+            continue;
         }
-        metrics.local_candidates += cands.len();
-
+        let t0 = Instant::now();
+        scan_phase(engine, &view, r2, &cfg, &mut drag, &mut ws, &seg, lo, hi, Scan::Select)?;
+        drag.select_time += t0.elapsed();
+        // Selection survivors are counted *before* any local refinement,
+        // so `local_candidates - exchanged` exposes exactly the traffic
+        // reduction the LocalRefine variant buys.
+        let win_lo = seg.seg_start(lo);
+        let win_hi = seg.seg_range(hi - 1).end;
+        metrics.local_candidates += ws.candidate_count_in(win_lo, win_hi);
         if mode == ExchangeMode::LocalRefine {
             // Zymbler-style: refine against the whole local partition
             // before exchanging (kills twins the selection order missed).
-            cands.retain(|&c| {
-                for s in lo..hi {
-                    if s.abs_diff(c) >= pt.m && pt.dist(s, c, r2).is_some() {
-                        return false;
-                    }
-                }
-                true
-            });
+            let t1 = Instant::now();
+            scan_phase(engine, &view, r2, &cfg, &mut drag, &mut ws, &seg, lo, hi, Scan::Refine)?;
+            drag.refine_time += t1.elapsed();
         }
-        local_sets.push(cands);
     }
 
     // ---- Exchange: the global candidate set ------------------------------
-    let mut global: Vec<(usize, f64)> =
-        local_sets.into_iter().flatten().map(|idx| (idx, f64::INFINITY)).collect();
-    global.sort_by_key(|&(idx, _)| idx);
-    metrics.exchanged = global.len();
+    // The union of the local sets is exactly what is left in the bitmap.
+    metrics.exchanged = ws.candidate_count();
 
     // ---- Global refinement: every node checks every candidate -----------
-    for &(lo, hi) in &pt.bounds {
-        let mut k = 0;
-        while k < global.len() {
-            let (c, ref mut nn2) = global[k];
-            let mut killed = false;
-            for s in lo..hi {
-                if s.abs_diff(c) < pt.m {
-                    continue;
-                }
-                if let Some(d) = pt.dist(s, c, *nn2) {
-                    if d < r2 {
-                        killed = true;
-                        break;
-                    }
-                    *nn2 = d;
-                }
-            }
-            if killed {
-                global.swap_remove(k);
-            } else {
-                k += 1;
-            }
-        }
-    }
-    global.sort_by_key(|&(idx, _)| idx);
+    // A candidate-seeded PD3 pass: surviving candidates' rows cover every
+    // chunk across both scan directions, so their nnDist is exact and
+    // every non-discord in the exchange gets killed by a real distance.
+    //
+    // Within-partition tiles of still-live segments are recomputed here
+    // even though the local phase measured them: under Yankov (no local
+    // refine) a candidate's within-partition *left* coverage can be
+    // incomplete when early-stop skipped a dead segment's tiles, so
+    // skipping same-partition pairs would be unsound for that mode.
+    // The QT seed rows are served from the engine cache either way;
+    // mode-aware pair skipping is a possible future optimization.
+    pd3_prepared(engine, &view, r, &cfg, &mut drag, &mut ws)?;
 
-    let discords: Vec<Discord> = global
-        .into_iter()
-        .filter(|(_, nn2)| nn2.is_finite())
-        .map(|(idx, nn2)| Discord { idx, m: pt.m, nn_dist: nn2.max(0.0).sqrt() })
-        .collect();
+    let mut discords = std::mem::take(&mut ws.discords);
+    discords.sort_by_key(|d| d.idx);
     metrics.survivors = discords.len();
-    (discords, metrics)
+    metrics.drag = drag;
+    Ok((discords, metrics))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::baselines::brute;
+    use crate::engines::native::NativeEngine;
     use crate::util::rng::Rng;
 
     fn walk(n: usize, seed: u64) -> Vec<f64> {
@@ -191,7 +167,8 @@ mod tests {
     }
 
     fn check_equals_brute(t: &[f64], m: usize, r: f64, parts: usize, mode: ExchangeMode) {
-        let (got, _) = distributed_drag(t, m, r, parts, mode);
+        let engine = NativeEngine::with_segn(24);
+        let (got, metrics) = distributed_drag(&engine, t, m, r, parts, mode).unwrap();
         let mut want = brute::range_discords(t, m, r);
         want.sort_by_key(|d| d.idx);
         assert_eq!(
@@ -199,9 +176,13 @@ mod tests {
             want.iter().map(|d| d.idx).collect::<Vec<_>>(),
             "parts={parts} mode={mode:?}"
         );
+        // 1e-6 relative: the engine's Eq. 6 dot-product form and the
+        // oracle's direct z-norm form round differently.
         for (g, w) in got.iter().zip(&want) {
-            assert!((g.nn_dist - w.nn_dist).abs() < 1e-9 * (1.0 + w.nn_dist));
+            assert!((g.nn_dist - w.nn_dist).abs() < 1e-6 * (1.0 + w.nn_dist));
         }
+        assert!(metrics.exchanged >= metrics.survivors);
+        assert_eq!(metrics.survivors, got.len());
     }
 
     #[test]
@@ -216,16 +197,29 @@ mod tests {
     #[test]
     fn local_refine_exchanges_fewer() {
         let t = walk(800, 62);
-        let (_, my) = distributed_drag(&t, 16, 2.5, 4, ExchangeMode::Yankov);
-        let (_, ml) = distributed_drag(&t, 16, 2.5, 4, ExchangeMode::LocalRefine);
+        let engine = NativeEngine::with_segn(32);
+        let (_, my) = distributed_drag(&engine, &t, 16, 2.5, 4, ExchangeMode::Yankov).unwrap();
+        let (_, ml) =
+            distributed_drag(&engine, &t, 16, 2.5, 4, ExchangeMode::LocalRefine).unwrap();
         assert!(ml.exchanged <= my.exchanged, "{} vs {}", ml.exchanged, my.exchanged);
         assert_eq!(my.survivors, ml.survivors);
+        // Identical deterministic selection phases => identical
+        // pre-refinement counts, and under Yankov the raw selection set
+        // goes on the wire verbatim.
+        assert_eq!(my.local_candidates, ml.local_candidates);
+        assert_eq!(my.exchanged, my.local_candidates);
+        assert!(ml.exchanged <= ml.local_candidates);
+        // The engine-level counters surface the scan volume.
+        assert!(my.drag.tiles_computed > 0);
+        assert!(ml.drag.tiles_computed > 0);
     }
 
     #[test]
     fn single_partition_degenerates_to_serial() {
         let t = walk(200, 63);
-        let (got, metrics) = distributed_drag(&t, 10, 3.0, 1, ExchangeMode::Yankov);
+        let engine = NativeEngine::with_segn(32);
+        let (got, metrics) =
+            distributed_drag(&engine, &t, 10, 3.0, 1, ExchangeMode::Yankov).unwrap();
         let serial = crate::baselines::drag_serial::drag(&t, 10, 3.0);
         assert_eq!(
             got.iter().map(|d| d.idx).collect::<Vec<_>>(),
@@ -235,10 +229,21 @@ mod tests {
     }
 
     #[test]
-    fn more_partitions_than_windows_is_safe() {
+    fn more_partitions_than_segments_is_safe() {
         let t = walk(40, 64);
-        let (got, _) = distributed_drag(&t, 8, 2.0, 1000, ExchangeMode::LocalRefine);
+        let engine = NativeEngine::with_segn(8);
+        let (got, _) =
+            distributed_drag(&engine, &t, 8, 2.0, 1000, ExchangeMode::LocalRefine).unwrap();
         let want = brute::range_discords(&t, 8, 2.0);
         assert_eq!(got.len(), want.len());
+    }
+
+    #[test]
+    fn short_series_returns_empty() {
+        let engine = NativeEngine::with_segn(8);
+        let (got, metrics) =
+            distributed_drag(&engine, &[1.0, 2.0], 8, 1.0, 2, ExchangeMode::Yankov).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(metrics.exchanged, 0);
     }
 }

@@ -31,9 +31,9 @@ use anyhow::Result;
 
 use super::metrics::DragMetrics;
 use super::segmentation::Segmentation;
+use super::workspace::MerlinWorkspace;
 use crate::core::bitmap::Bitmap;
 use crate::engines::{Engine, SeriesView, TileTask};
-use crate::runtime::types::TileOutputs;
 
 /// A discovered discord: subsequence index, length, and the exact distance
 /// to its nearest non-self match (ED units, not squared).
@@ -64,6 +64,9 @@ impl Default for Pd3Config {
 /// Range-discord discovery at the view's current subsequence length.
 ///
 /// Returns all survivors (unfiltered by top-k) with exact `nn_dist`.
+/// Allocating convenience wrapper over [`pd3_into`]; hot callers
+/// (MERLIN's retry loop, the streaming monitor) keep a
+/// [`MerlinWorkspace`] alive instead.
 pub fn pd3(
     engine: &dyn Engine,
     view: &SeriesView<'_>,
@@ -71,141 +74,185 @@ pub fn pd3(
     cfg: &Pd3Config,
     metrics: &mut DragMetrics,
 ) -> Result<Vec<Discord>> {
-    let m = view.stats.m;
-    let nwin = view.n_windows();
-    if nwin == 0 {
-        return Ok(Vec::new());
-    }
-    let segn = engine.segn();
-    let seg = Segmentation::new(nwin, segn);
-    let r2 = r_ed * r_ed;
+    let mut ws = MerlinWorkspace::new();
+    pd3_into(engine, view, r_ed, cfg, metrics, &mut ws)?;
+    Ok(std::mem::take(&mut ws.discords))
+}
 
+/// Range-discord discovery into a recycled [`MerlinWorkspace`].
+///
+/// Survivors land in `ws.discords()`; every buffer (bitmaps, nnDist
+/// minima, round task lists, tile-output blocks) is reused across calls,
+/// so a warmed workspace makes repeated invocations allocation-free
+/// (proved by `rust/tests/alloc_steady_state.rs`).
+pub fn pd3_into(
+    engine: &dyn Engine,
+    view: &SeriesView<'_>,
+    r_ed: f64,
+    cfg: &Pd3Config,
+    metrics: &mut DragMetrics,
+    ws: &mut MerlinWorkspace,
+) -> Result<()> {
+    let nwin = view.n_windows();
+    ws.reset_all_candidates(nwin);
+    if nwin == 0 {
+        return Ok(());
+    }
     // Let the engine bind per-series state (e.g. the native QT seed
     // cache) before any tile is evaluated.
     engine.prepare_series(view);
+    pd3_prepared(engine, view, r_ed, cfg, metrics, ws)
+}
 
-    let mut cand = Bitmap::ones(nwin);
-    let mut neighbor = Bitmap::ones(nwin);
-    let mut nn_dist = vec![f64::INFINITY; nwin];
+/// Which scan a phase performs (and which kill counter it feeds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Scan {
+    /// Alg. 3: every segment scans itself and the chunks to its right.
+    Select,
+    /// Alg. 4: surviving segments scan the chunks to their left.
+    Refine,
+}
 
-    // Round-scoped buffers, reused across every round of both phases so
-    // the engine can recycle its tile-output blocks (zero allocations in
-    // the steady-state loop).
-    let mut tasks: Vec<TileTask> = Vec::new();
-    let mut rows: Vec<(usize, usize)> = Vec::new(); // segment index per task
-    let mut tile_buf: Vec<TileOutputs> = Vec::new();
+/// Run both PD3 phases over a workspace whose candidate bitmap the
+/// caller has already bound to `view` (all-ones for classic PD3, the
+/// exchanged candidate set for the distributed refinement).  Survivors
+/// land in `ws.discords` with exact nnDist.  The caller must have run
+/// [`Engine::prepare_series`] for `view` (its O(n) content fingerprint
+/// is thus paid once per outer run, not per phase pass).
+pub(crate) fn pd3_prepared(
+    engine: &dyn Engine,
+    view: &SeriesView<'_>,
+    r_ed: f64,
+    cfg: &Pd3Config,
+    metrics: &mut DragMetrics,
+    ws: &mut MerlinWorkspace,
+) -> Result<()> {
+    let nwin = view.n_windows();
+    debug_assert_eq!(ws.cand.len(), nwin, "workspace not bound to this view");
+    let seg = Segmentation::new(nwin, engine.segn());
+    let r2 = r_ed * r_ed;
 
     // ---- Phase 1: selection (self + right scan) --------------------------
     let t0 = Instant::now();
-    for k in 0..seg.nseg {
-        tasks.clear();
-        rows.clear();
-        for i in 0..seg.nseg - k {
-            let j = i + k;
-            let ri = seg.seg_range(i);
-            if cfg.early_stop && !cand.any_in_range(ri.start, ri.end) {
-                metrics.tiles_skipped += 1;
-                continue;
-            }
-            tasks.push(TileTask { seg_start: seg.seg_start(i), chunk_start: seg.seg_start(j) });
-            rows.push((i, j));
-        }
-        if tasks.is_empty() {
-            continue;
-        }
-        metrics.tiles_computed += tasks.len() as u64;
-        engine.compute_tiles_into(view, r2, &tasks, &mut tile_buf)?;
-        for (&(i, j), out) in rows.iter().zip(&tile_buf) {
-            apply_side(
-                &mut cand,
-                &mut nn_dist,
-                seg.seg_start(i),
-                nwin,
-                &out.row_min,
-                &out.row_kill,
-                None,
-                &mut metrics.kills_select,
-            );
-            let neighbor_bm = if cfg.deferred_neighbor_kill { Some(&mut neighbor) } else { None };
-            apply_side(
-                &mut cand,
-                &mut nn_dist,
-                seg.seg_start(j),
-                nwin,
-                &out.col_min,
-                &out.col_kill,
-                neighbor_bm,
-                &mut metrics.kills_select,
-            );
-        }
-    }
+    scan_phase(engine, view, r2, cfg, metrics, ws, &seg, 0, seg.nseg, Scan::Select)?;
     metrics.select_time += t0.elapsed();
 
     // ---- Phase 2: refinement (left scan) ---------------------------------
     let t1 = Instant::now();
     if cfg.deferred_neighbor_kill {
-        cand.and_with(&neighbor); // Alg. 4 l.1-2
+        ws.cand.and_with(&ws.neighbor); // Alg. 4 l.1-2
     }
-    for k in 1..seg.nseg {
-        tasks.clear();
-        rows.clear();
-        for i in k..seg.nseg {
-            let j = i - k;
+    scan_phase(engine, view, r2, cfg, metrics, ws, &seg, 0, seg.nseg, Scan::Refine)?;
+    metrics.refine_time += t1.elapsed();
+
+    collect_survivors(view.stats.m, r2, metrics, ws);
+    Ok(())
+}
+
+/// One scan phase over the segments `[seg_lo, seg_hi)`, with both tile
+/// sides restricted to that range — `[0, nseg)` for classic PD3; a
+/// node's own segment span for the distributed local phases.  Round `k`
+/// pairs every live segment `i` with chunk `i + k` (Select) or `i - k`
+/// (Refine); each round is one engine batch through the workspace's
+/// recycled task/output buffers.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scan_phase(
+    engine: &dyn Engine,
+    view: &SeriesView<'_>,
+    r2: f64,
+    cfg: &Pd3Config,
+    metrics: &mut DragMetrics,
+    ws: &mut MerlinWorkspace,
+    seg: &Segmentation,
+    seg_lo: usize,
+    seg_hi: usize,
+    scan: Scan,
+) -> Result<()> {
+    let nwin = view.n_windows();
+    let span = seg_hi - seg_lo;
+    let k_from = match scan {
+        Scan::Select => 0,
+        Scan::Refine => 1,
+    };
+    for k in k_from..span {
+        ws.tasks.clear();
+        ws.rows.clear();
+        let pair_of = |i: usize| match scan {
+            Scan::Select => (i, i + k),
+            Scan::Refine => (i, i - k),
+        };
+        let i_range = match scan {
+            Scan::Select => seg_lo..seg_hi - k,
+            Scan::Refine => seg_lo + k..seg_hi,
+        };
+        for (i, j) in i_range.map(pair_of) {
             let ri = seg.seg_range(i);
-            if cfg.early_stop && !cand.any_in_range(ri.start, ri.end) {
+            if cfg.early_stop && !ws.cand.any_in_range(ri.start, ri.end) {
                 metrics.tiles_skipped += 1;
                 continue;
             }
-            tasks.push(TileTask { seg_start: seg.seg_start(i), chunk_start: seg.seg_start(j) });
-            rows.push((i, j));
+            ws.tasks.push(TileTask { seg_start: seg.seg_start(i), chunk_start: seg.seg_start(j) });
+            ws.rows.push((i, j));
         }
-        if tasks.is_empty() {
+        if ws.tasks.is_empty() {
             continue;
         }
-        metrics.tiles_computed += tasks.len() as u64;
-        engine.compute_tiles_into(view, r2, &tasks, &mut tile_buf)?;
-        for (&(i, j), out) in rows.iter().zip(&tile_buf) {
+        metrics.tiles_computed += ws.tasks.len() as u64;
+        engine.compute_tiles_into(view, r2, &ws.tasks, &mut ws.tile_buf)?;
+        let kill_counter = match scan {
+            Scan::Select => &mut metrics.kills_select,
+            Scan::Refine => &mut metrics.kills_refine,
+        };
+        for (&(i, j), out) in ws.rows.iter().zip(&ws.tile_buf) {
             apply_side(
-                &mut cand,
-                &mut nn_dist,
+                &mut ws.cand,
+                &mut ws.nn_dist,
                 seg.seg_start(i),
                 nwin,
                 &out.row_min,
                 &out.row_kill,
                 None,
-                &mut metrics.kills_refine,
+                kill_counter,
             );
-            // Chunk-side kills are equally valid in the left scan.
+            // Chunk-side kills are equally valid in either direction; in
+            // the selection phase they optionally transit the Neighbor
+            // bitmap (the paper's deferred merge).
+            let neighbor_bm = if scan == Scan::Select && cfg.deferred_neighbor_kill {
+                Some(&mut ws.neighbor)
+            } else {
+                None
+            };
             apply_side(
-                &mut cand,
-                &mut nn_dist,
+                &mut ws.cand,
+                &mut ws.nn_dist,
                 seg.seg_start(j),
                 nwin,
                 &out.col_min,
                 &out.col_kill,
-                None,
-                &mut metrics.kills_refine,
+                neighbor_bm,
+                kill_counter,
             );
         }
     }
-    metrics.refine_time += t1.elapsed();
+    Ok(())
+}
 
-    // ---- Collect survivors ------------------------------------------------
-    let mut discords = Vec::new();
-    for idx in cand.iter_set() {
-        let d2 = nn_dist[idx];
+/// Fold the candidate bitmap + minima into `ws.discords`.
+fn collect_survivors(m: usize, r2: f64, metrics: &mut DragMetrics, ws: &mut MerlinWorkspace) {
+    ws.discords.clear();
+    for idx in ws.cand.iter_set() {
+        let d2 = ws.nn_dist[idx];
         debug_assert!(
             d2.is_infinite() || d2 >= r2 - 1e-6 * (1.0 + r2),
             "survivor {idx} has nnDist^2 {d2} < r^2 {r2}"
         );
         if d2.is_finite() {
-            discords.push(Discord { idx, m, nn_dist: d2.max(0.0).sqrt() });
+            ws.discords.push(Discord { idx, m, nn_dist: d2.max(0.0).sqrt() });
         }
         // A survivor with infinite nnDist means the series has no valid
         // non-self match for it (nwin <= m); nothing to report.
     }
-    metrics.survivors += discords.len() as u64;
-    Ok(discords)
+    metrics.survivors += ws.discords.len() as u64;
 }
 
 /// Fold one tile side (rows or cols) into the global state.
@@ -388,6 +435,34 @@ mod tests {
             "best discord at {} not near planted anomaly",
             best.idx
         );
+    }
+
+    #[test]
+    fn recycled_workspace_matches_fresh_runs() {
+        // The MERLIN retry-loop shape: one workspace, descending r at a
+        // fixed length.  Every recycled run must agree with a fresh
+        // (allocating) pd3 call, and only the cold rebind may grow.
+        let t = random_walk(400, 18);
+        let stats = RollingStats::compute(&t, 16);
+        let view = SeriesView { t: &t, stats: &stats };
+        let engine = NativeEngine::with_segn(32);
+        let mut ws = MerlinWorkspace::new();
+        let mut metrics = DragMetrics::default();
+        let rs = [6.0, 4.0, 2.5, 0.5];
+        let mut recycled: Vec<Vec<Discord>> = Vec::new();
+        for &r in &rs {
+            pd3_into(&engine, &view, r, &Pd3Config::default(), &mut metrics, &mut ws).unwrap();
+            recycled.push(ws.discords().to_vec());
+        }
+        for (k, &r) in rs.iter().enumerate() {
+            let fresh =
+                pd3(&engine, &view, r, &Pd3Config::default(), &mut DragMetrics::default())
+                    .unwrap();
+            assert_eq!(recycled[k], fresh, "r={r}");
+        }
+        let c = ws.counters();
+        assert_eq!(c.resets, rs.len() as u64);
+        assert_eq!(c.grows, 1, "only the cold rebind may grow the arena");
     }
 
     #[test]

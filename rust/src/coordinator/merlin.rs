@@ -22,8 +22,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::drag::{pd3, Discord, Pd3Config};
+use super::drag::{pd3_into, Discord, Pd3Config};
 use super::metrics::MerlinMetrics;
+use super::workspace::MerlinWorkspace;
 use crate::core::series::TimeSeries;
 use crate::core::stats::RollingStats;
 use crate::core::topk::{top_k_non_overlapping, Scored};
@@ -144,6 +145,11 @@ impl<'e> Merlin<'e> {
         let mut lengths: Vec<LengthResult> = Vec::new();
         // Ring of the last 5 nnDist minima (ED units).
         let mut last5: Vec<f64> = Vec::new();
+        // Hoisted PD3 arena: every length and every adaptive-r retry of
+        // this run recycles one set of bitmaps / minima / tile buffers
+        // instead of reallocating them per pd3 call (ROADMAP:
+        // "pd3-level workspace reuse").
+        let mut ws = MerlinWorkspace::new();
 
         let st0 = Instant::now();
         let mut stats = self.stats_init(&t.values, cfg.min_l)?;
@@ -160,7 +166,11 @@ impl<'e> Merlin<'e> {
             let mut r = if step == 0 {
                 max_r
             } else if step <= 4 {
-                0.99 * last5.last().copied().unwrap()
+                // Invariant: `last5` gains exactly one entry per completed
+                // length — the no-discord outcome pushes a carry value (see
+                // below) — so at step >= 1 it is provably non-empty.  The
+                // all-flat-series unit test exercises the carry branch.
+                0.99 * last5.last().copied().expect("last5 carries an entry per completed length")
             } else {
                 let (mu, sigma) = mean_std(&last5);
                 (mu - 2.0 * sigma).clamp(r_floor, max_r)
@@ -169,9 +179,8 @@ impl<'e> Merlin<'e> {
             let mut retries = 0usize;
             let result = loop {
                 metrics.drag_calls += 1;
-                let discords =
-                    pd3(self.engine, &view, r, &cfg.pd3, &mut metrics.drag)?;
-                let picked = pick_top_k(&discords, m, cfg.top_k);
+                pd3_into(self.engine, &view, r, &cfg.pd3, &mut metrics.drag, &mut ws)?;
+                let picked = pick_top_k(ws.discords(), m, cfg.top_k);
                 let enough = if cfg.top_k == 0 { !picked.is_empty() } else { picked.len() >= cfg.top_k };
                 if enough || r <= r_floor || retries >= cfg.max_retries {
                     break LengthResult { m, r_used: r, retries, discords: picked };
@@ -220,6 +229,7 @@ impl<'e> Merlin<'e> {
 
         metrics.total_time = t_start.elapsed();
         metrics.seed = self.engine.perf_counters().since(counters_start);
+        metrics.workspace = ws.counters();
         Ok(MerlinResult { lengths, metrics })
     }
 
@@ -427,5 +437,44 @@ mod tests {
                 assert!(d.nn_dist <= 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn flat_series_carry_seeds_early_length_thresholds() {
+        // All-flat series: no length ever reports a discord, so the r
+        // schedule for steps 1..=4 must be seeded by the carry value the
+        // no-discord path pushes into `last5` — the invariant behind the
+        // `expect` in the step <= 4 branch.  A missing carry would panic
+        // right at m = min_l + 1.
+        let t = TimeSeries::new("flat", vec![5.0; 160]);
+        let engine = NativeEngine::with_segn(16);
+        let cfg = MerlinConfig {
+            min_l: 8,
+            max_l: 13, // covers steps 0..=5: both carry-seeded regimes
+            top_k: 1,
+            max_retries: 3,
+            ..Default::default()
+        };
+        let res = Merlin::new(&engine, cfg).run(&t).unwrap();
+        assert_eq!(res.lengths.len(), 6);
+        for lr in &res.lengths {
+            assert!(lr.discords.is_empty(), "m={}: flat series has only twins", lr.m);
+            assert!(lr.r_used > 0.0 && lr.r_used.is_finite());
+        }
+    }
+
+    #[test]
+    fn workspace_is_recycled_across_lengths_and_retries() {
+        let t = random_walk_series(500, 27);
+        let engine = NativeEngine::with_segn(64);
+        let cfg = MerlinConfig { min_l: 12, max_l: 20, top_k: 1, ..Default::default() };
+        let res = Merlin::new(&engine, cfg).run(&t).unwrap();
+        let ws = res.metrics.workspace;
+        assert_eq!(ws.resets, res.metrics.drag_calls, "one rebind per pd3 call");
+        // The window count only shrinks as m grows, so after the first
+        // call every rebind must reuse the arena.
+        assert_eq!(ws.grows, 1, "only the cold pd3 call may grow: {ws:?}");
+        let s = format!("{}", res.metrics);
+        assert!(s.contains("ws(resets/grows)="), "metrics line reports workspace reuse: {s}");
     }
 }

@@ -3,6 +3,7 @@
 
 use std::time::Duration;
 
+use super::workspace::WorkspaceCounters;
 use crate::engines::EnginePerfCounters;
 
 /// Counters for one DRAG (PD3) invocation.
@@ -57,6 +58,11 @@ pub struct MerlinMetrics {
     /// reuse, advances = cross-length `m -> m'` recurrence updates,
     /// misses = full seed passes).  All-zero for cache-less engines.
     pub seed: EnginePerfCounters,
+    /// Coordinator arena reuse during this run (resets = PD3 calls
+    /// through the hoisted workspace; grows = calls whose window count
+    /// grew the minima vector — see [`WorkspaceCounters::grows`] for
+    /// what that gauge does and does not cover).
+    pub workspace: WorkspaceCounters,
     pub stats_time: Duration,
     pub total_time: Duration,
 }
@@ -66,7 +72,8 @@ impl std::fmt::Display for MerlinMetrics {
         write!(
             f,
             "drag_calls={} retries={} discords={} tiles={} skipped={} ({:.1}% early-stop) \
-             seeds(hit/adv/miss)={}/{}/{} select={:.3}s refine={:.3}s stats={:.3}s total={:.3}s",
+             seeds(hit/adv/miss)={}/{}/{} ws(resets/grows)={}/{} \
+             select={:.3}s refine={:.3}s stats={:.3}s total={:.3}s",
             self.drag_calls,
             self.retries,
             self.discords,
@@ -76,6 +83,8 @@ impl std::fmt::Display for MerlinMetrics {
             self.seed.seed_hits,
             self.seed.seed_advances,
             self.seed.seed_misses,
+            self.workspace.resets,
+            self.workspace.grows,
             self.drag.select_time.as_secs_f64(),
             self.drag.refine_time.as_secs_f64(),
             self.stats_time.as_secs_f64(),

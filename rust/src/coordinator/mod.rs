@@ -9,3 +9,4 @@ pub mod metrics;
 pub mod segmentation;
 pub mod service;
 pub mod streaming;
+pub mod workspace;

@@ -1,0 +1,123 @@
+//! Reusable PD3/MERLIN working set — the coordinator-level analogue of
+//! the engine's per-worker `TileScratch` arena (ROADMAP item
+//! "pd3-level workspace reuse").
+//!
+//! One [`MerlinWorkspace`] holds every per-run buffer a PD3 invocation
+//! needs: the candidate / neighbor bitmaps, the nearest-neighbor minima
+//! vector, the per-round task and row lists, the recycled tile-output
+//! blocks, and the survivor list.  MERLIN's per-length retry loop
+//! (`coordinator/merlin.rs`), the streaming monitor's refresh path
+//! (`coordinator/streaming.rs`), and the distributed exchange simulation
+//! (`coordinator/distributed.rs`) all recycle one arena across every
+//! [`super::drag::pd3_into`] call instead of reallocating ~five vectors
+//! plus two bitmaps per call.  The counting-allocator suite
+//! (`rust/tests/alloc_steady_state.rs`) proves the retry loop and the
+//! warm streaming ingest loop reach a zero-allocation steady state.
+
+use crate::core::bitmap::Bitmap;
+use crate::engines::TileTask;
+use crate::runtime::types::TileOutputs;
+
+use super::drag::Discord;
+
+/// Arena reuse counters (see [`MerlinWorkspace::counters`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkspaceCounters {
+    /// PD3 runs that rebound this arena.
+    pub resets: u64,
+    /// Rebinds whose window count exceeded every earlier run's (cold
+    /// start, or a longer series).  Gauged by the minima vector only —
+    /// round-scoped buffers (tasks, tile blocks) can still grow to
+    /// their own high-water marks on later calls without being counted
+    /// here.
+    pub grows: u64,
+}
+
+/// Reusable working set for [`super::drag::pd3_into`] (module docs).
+#[derive(Debug, Default)]
+pub struct MerlinWorkspace {
+    /// `Cand` bitmap (Alg. 3 l.1).
+    pub(crate) cand: Bitmap,
+    /// `Neighbor` bitmap (only consulted under
+    /// [`super::drag::Pd3Config::deferred_neighbor_kill`]).
+    pub(crate) neighbor: Bitmap,
+    /// Running nearest-neighbor squared-distance minima per window.
+    pub(crate) nn_dist: Vec<f64>,
+    /// Tile tasks of the current round.
+    pub(crate) tasks: Vec<TileTask>,
+    /// (segment, chunk) index pair per task of the current round.
+    pub(crate) rows: Vec<(usize, usize)>,
+    /// Recycled engine output blocks (`Engine::compute_tiles_into`).
+    pub(crate) tile_buf: Vec<TileOutputs>,
+    /// Survivors of the last run.
+    pub(crate) discords: Vec<Discord>,
+    counters: WorkspaceCounters,
+}
+
+impl MerlinWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Survivors of the last PD3 run (exact nnDist, ED units).
+    pub fn discords(&self) -> &[Discord] {
+        &self.discords
+    }
+
+    /// Number of currently live candidates (the distributed
+    /// coordinator's exchanged-set size).
+    pub fn candidate_count(&self) -> usize {
+        self.cand.count()
+    }
+
+    /// Number of live candidates with window index in `[lo, hi)` —
+    /// word-masked, so a node counting its own slice pays O(slice).
+    pub fn candidate_count_in(&self, lo: usize, hi: usize) -> usize {
+        self.cand.count_in_range(lo, hi)
+    }
+
+    /// Lifetime reuse counters.
+    pub fn counters(&self) -> WorkspaceCounters {
+        self.counters
+    }
+
+    /// Rebind to `nwin` windows with every window a live candidate
+    /// (classic PD3).  Reuses all storage; only growth allocates.
+    pub(crate) fn reset_all_candidates(&mut self, nwin: usize) {
+        self.counters.resets += 1;
+        if self.nn_dist.capacity() < nwin {
+            self.counters.grows += 1;
+        }
+        self.cand.reset_ones(nwin);
+        self.neighbor.reset_ones(nwin);
+        self.nn_dist.clear();
+        self.nn_dist.resize(nwin, f64::INFINITY);
+        self.discords.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_recycles_and_counts() {
+        let mut ws = MerlinWorkspace::new();
+        ws.reset_all_candidates(500);
+        assert_eq!(ws.cand.count(), 500);
+        assert_eq!(ws.nn_dist.len(), 500);
+        assert!(ws.nn_dist.iter().all(|d| d.is_infinite()));
+        let ptr = ws.nn_dist.as_ptr();
+        ws.cand.clear(3);
+        ws.nn_dist[3] = 1.0;
+        ws.discords.push(Discord { idx: 3, m: 8, nn_dist: 1.0 });
+        ws.reset_all_candidates(400);
+        assert_eq!(ws.cand.count(), 400);
+        assert!(ws.discords.is_empty());
+        assert!(ws.nn_dist.iter().all(|d| d.is_infinite()));
+        assert_eq!(ws.nn_dist.as_ptr(), ptr, "shrinking reset reallocated");
+        let c = ws.counters();
+        assert_eq!(c.resets, 2);
+        assert_eq!(c.grows, 1, "only the cold reset grows");
+    }
+}

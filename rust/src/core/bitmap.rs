@@ -7,7 +7,7 @@
 //! (elementwise conjunction, any-in-range for segment early-stop).
 
 /// Dense bitset over subsequence indices.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Bitmap {
     len: usize,
     words: Vec<u64>,
@@ -25,6 +25,17 @@ impl Bitmap {
     /// All-false bitmap.
     pub fn zeros(len: usize) -> Self {
         Self { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    /// Reinitialize in place to all-true over `len` bits, reusing the
+    /// word storage — the workspace-recycling hook: once the buffer has
+    /// reached capacity this never touches the allocator.
+    pub fn reset_ones(&mut self, len: usize) {
+        let nwords = len.div_ceil(64);
+        self.words.clear();
+        self.words.resize(nwords, u64::MAX);
+        Self::mask_tail(len, &mut self.words);
+        self.len = len;
     }
 
     fn mask_tail(len: usize, words: &mut [u64]) {
@@ -101,6 +112,28 @@ impl Bitmap {
             }
         }
         self.words[we] & (u64::MAX >> (64 - eo)) != 0
+    }
+
+    /// Number of set bits in `[start, end)` (`end` clamped to `len`).
+    /// Word-masked, so counting a narrow slice of a huge bitmap costs
+    /// O(slice), not O(len) — the distributed coordinator's per-node
+    /// metric path.
+    pub fn count_in_range(&self, start: usize, end: usize) -> usize {
+        let end = end.min(self.len);
+        if start >= end {
+            return 0;
+        }
+        let (ws, wo) = (start / 64, start % 64);
+        let (we, eo) = ((end - 1) / 64, (end - 1) % 64 + 1);
+        if ws == we {
+            let mask = (u64::MAX << wo) & (u64::MAX >> (64 - eo));
+            return (self.words[ws] & mask).count_ones() as usize;
+        }
+        let mut c = (self.words[ws] & (u64::MAX << wo)).count_ones() as usize;
+        for w in &self.words[ws + 1..we] {
+            c += w.count_ones() as usize;
+        }
+        c + (self.words[we] & (u64::MAX >> (64 - eo))).count_ones() as usize
     }
 
     /// Iterate indices of set bits.
@@ -257,6 +290,44 @@ mod tests {
         b.set(69, true);
         assert!(b.any_in_range(64, 70));
         assert!(!b.any_in_range(64, 69));
+    }
+
+    #[test]
+    fn count_in_range_matches_naive() {
+        let mut b = Bitmap::zeros(200);
+        for i in [0, 3, 63, 64, 65, 127, 128, 150, 199] {
+            b.set(i, true);
+        }
+        for (s, e) in [(0, 200), (0, 64), (64, 128), (63, 65), (150, 150), (150, 151), (10, 63),
+            (128, 1_000), (199, 200), (5, 3)]
+        {
+            let naive = b.iter_set().filter(|&i| i >= s && i < e.min(200)).count();
+            assert_eq!(b.count_in_range(s, e), naive, "[{s},{e})");
+        }
+        assert_eq!(b.count_in_range(0, 200), b.count());
+    }
+
+    #[test]
+    fn reset_reuses_storage() {
+        let mut b = Bitmap::ones(200);
+        b.clear(5);
+        let ptr = {
+            b.reset_ones(130);
+            assert_eq!(b.len(), 130);
+            assert_eq!(b.count(), 130, "reset_ones must revive cleared bits");
+            assert!(b.get(129) && !b.any_in_range(130, 200));
+            b.words.as_ptr()
+        };
+        // Shrinking and re-growing within capacity must not reallocate.
+        b.reset_ones(64);
+        assert_eq!(b.count(), 64);
+        b.reset_ones(190);
+        assert_eq!(b.count(), 190);
+        assert_eq!(b.words.as_ptr(), ptr, "reset within capacity reallocated");
+        // Tail masking after a reset: phantom bits must not leak.
+        b.reset_ones(70);
+        assert_eq!(b.count(), 70);
+        assert!(!b.any_in_range(70, 1_000));
     }
 
     #[test]

@@ -38,6 +38,38 @@ pub fn is_flat(sig: f64, mu: f64) -> bool {
     sig <= FLAT_EPS * mu.abs().max(1.0)
 }
 
+/// [`is_flat`] for a raw window, deriving mu/sigma on the fly (one
+/// O(m) pass; used where no precomputed rolling stats cover the
+/// window, e.g. the stream monitor's incremental check).
+pub fn window_is_flat(w: &[f64]) -> bool {
+    let (mu, sig) = window_stats(w);
+    is_flat(sig, mu)
+}
+
+/// z-normalize `w` into `out` and report its flatness in one pass
+/// (mu/sigma are derived once and shared — the stream monitor's
+/// per-push path would otherwise compute them twice).
+pub fn znorm_into_flat(w: &[f64], out: &mut [f64]) -> bool {
+    let (mu, sig) = window_stats(w);
+    for (o, &x) in out.iter_mut().zip(w) {
+        *o = (x - mu) / sig;
+    }
+    is_flat(sig, mu)
+}
+
+fn window_stats(w: &[f64]) -> (f64, f64) {
+    let m = w.len() as f64;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    for &x in w {
+        s1 += x;
+        s2 += x * x;
+    }
+    let mu = s1 / m;
+    let sig = (s2 / m - mu * mu).max(0.0).sqrt().max(SIGMA_FLOOR);
+    (mu, sig)
+}
+
 /// z-normalize a window into `out` (Eq. 4 with the sigma floor).
 pub fn znorm_into(w: &[f64], out: &mut [f64]) {
     let m = w.len() as f64;

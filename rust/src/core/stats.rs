@@ -40,10 +40,23 @@ impl RollingStats {
     /// value ranges in this repo keeps |err| well under the test tolerance
     /// (verified against [`naive`] by unit + property tests).
     pub fn compute(t: &[f64], m: usize) -> Self {
+        let mut s = Self { m, mu: Vec::new(), sig: Vec::new() };
+        s.recompute(t, m);
+        s
+    }
+
+    /// Recompute in place for a (possibly different) series and length,
+    /// reusing the existing `mu`/`sig` storage.  The streaming monitor's
+    /// refresh path depends on this: once the buffers have reached the
+    /// window's capacity, re-statting a slid window allocates nothing.
+    pub fn recompute(&mut self, t: &[f64], m: usize) {
         assert!(m >= 2 && m <= t.len(), "m={m} out of range for n={}", t.len());
         let cnt = t.len() - m + 1;
-        let mut mu = Vec::with_capacity(cnt);
-        let mut sig = Vec::with_capacity(cnt);
+        self.m = m;
+        self.mu.clear();
+        self.sig.clear();
+        self.mu.reserve(cnt);
+        self.sig.reserve(cnt);
         // Seed window.
         let mut s1 = 0.0f64;
         let mut s2 = 0.0f64;
@@ -61,13 +74,12 @@ impl RollingStats {
             }
             let mean = s1 / mf;
             let var = (s2 / mf - mean * mean).max(0.0);
-            mu.push(mean);
-            sig.push(var.sqrt().max(SIGMA_FLOOR));
+            self.mu.push(mean);
+            self.sig.push(var.sqrt().max(SIGMA_FLOOR));
         }
         // One re-accumulation pass every few thousand slides would guard
         // drift; for n <= 2^24 and the magnitudes exercised here the drift
         // is < 1e-9 relative (property-tested), so we keep the single pass.
-        Self { m, mu, sig }
     }
 
     /// Reference implementation: direct two-pass mean/std per window.
@@ -182,6 +194,24 @@ mod tests {
                 assert!(close(s.mu[i], fresh.mu[i], 1e-9), "mu m={m} i={i}");
                 assert!(close(s.sig[i], fresh.sig[i], 1e-7), "sig m={m} i={i}");
             }
+        }
+    }
+
+    #[test]
+    fn recompute_reuses_storage_and_matches_fresh() {
+        let mut rng = Rng::seed(17);
+        let t1: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        let t2: Vec<f64> = (0..280).map(|_| rng.normal() * 3.0 + 1.0).collect();
+        let mut s = RollingStats::compute(&t1, 12);
+        let ptr = s.mu.as_ptr();
+        s.recompute(&t2, 20);
+        assert_eq!(s.mu.as_ptr(), ptr, "recompute within capacity reallocated");
+        let fresh = RollingStats::naive(&t2, 20);
+        assert_eq!(s.m, 20);
+        assert_eq!(s.len(), fresh.len());
+        for i in 0..s.len() {
+            assert!(close(s.mu[i], fresh.mu[i], 1e-10), "mu i={i}");
+            assert!(close(s.sig[i], fresh.sig[i], 1e-8), "sig i={i}");
         }
     }
 

@@ -44,11 +44,12 @@ impl SeriesView<'_> {
     }
 }
 
-/// Cumulative per-engine performance counters (QT seed cache traffic).
+/// Cumulative per-engine performance counters (QT seed cache traffic
+/// and batch-submission volume).
 ///
-/// Engines without internal caches report all-zero.  Counters are
-/// lifetime totals; use [`EnginePerfCounters::since`] to scope them to
-/// one run.
+/// Engines without internal caches report all-zero seed fields.
+/// Counters are lifetime totals; use [`EnginePerfCounters::since`] to
+/// scope them to one run.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct EnginePerfCounters {
     /// Seed rows reused verbatim (same length — MERLIN `r`-retries).
@@ -57,6 +58,10 @@ pub struct EnginePerfCounters {
     pub seed_advances: u64,
     /// Seed rows computed by the full `O(segn * m)` pass.
     pub seed_misses: u64,
+    /// Tile batches submitted (one per coordinator round).
+    pub batches: u64,
+    /// Tiles evaluated across those batches.
+    pub batch_tiles: u64,
 }
 
 impl EnginePerfCounters {
@@ -66,6 +71,8 @@ impl EnginePerfCounters {
             seed_hits: self.seed_hits.saturating_sub(earlier.seed_hits),
             seed_advances: self.seed_advances.saturating_sub(earlier.seed_advances),
             seed_misses: self.seed_misses.saturating_sub(earlier.seed_misses),
+            batches: self.batches.saturating_sub(earlier.batches),
+            batch_tiles: self.batch_tiles.saturating_sub(earlier.batch_tiles),
         }
     }
 
@@ -96,11 +103,15 @@ pub trait Engine: Send + Sync {
     ) -> Result<Vec<TileOutputs>>;
 
     /// Like [`Engine::compute_tiles`], but recycles the caller's output
-    /// blocks: on return `out.len() == tasks.len()` and `out[i]` holds
-    /// task `i`'s result.  Callers that keep `out` alive across rounds
-    /// (the PD3 driver does) avoid re-allocating the four result vectors
-    /// per tile — the native engine's round loop is allocation-free once
-    /// warmed.  The default forwards to `compute_tiles`.
+    /// blocks: on return `out[i]` holds task `i`'s result for every
+    /// `i < tasks.len()`.  Implementations may leave additional recycled
+    /// blocks past that index (the native engine grows `out` but never
+    /// shrinks it, so PD3's tapering rounds keep block storage alive);
+    /// callers must index by task, not drain the vector.  Callers that
+    /// keep `out` alive across rounds (the PD3 driver's workspace does)
+    /// avoid re-allocating the four result vectors per tile — the native
+    /// engine's round loop is allocation-free once warmed.  The default
+    /// forwards to `compute_tiles`.
     fn compute_tiles_into(
         &self,
         view: &SeriesView<'_>,

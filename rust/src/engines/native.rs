@@ -28,6 +28,7 @@
 //! [`TilePipeline::Legacy`] / [`compute_tile_alloc`] so the microbench
 //! reports an honest before/after from one binary.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 use anyhow::Result;
@@ -79,12 +80,21 @@ pub struct NativeEngine {
     round_pool: OnceLock<RoundPool>,
     /// Cross-length QT seed cache (scratch pipeline only).
     seeds: QtSeedCache,
+    /// Batch-submission volume (reported via `perf_counters`).
+    batches: AtomicU64,
+    batch_tiles: AtomicU64,
 }
 
 impl NativeEngine {
     pub fn new(cfg: NativeConfig) -> Self {
         assert!(cfg.segn >= 1);
-        Self { cfg, round_pool: OnceLock::new(), seeds: QtSeedCache::new() }
+        Self {
+            cfg,
+            round_pool: OnceLock::new(),
+            seeds: QtSeedCache::new(),
+            batches: AtomicU64::new(0),
+            batch_tiles: AtomicU64::new(0),
+        }
     }
 
     pub fn with_segn(segn: usize) -> Self {
@@ -129,6 +139,8 @@ impl Engine for NativeEngine {
         out: &mut Vec<TileOutputs>,
     ) -> Result<()> {
         let segn = self.cfg.segn;
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_tiles.fetch_add(tasks.len() as u64, Ordering::Relaxed);
         if self.cfg.pipeline == TilePipeline::Legacy {
             let results =
                 pool::parallel_map_indexed_locked(tasks.len(), self.cfg.threads, |i| {
@@ -146,10 +158,13 @@ impl Engine for NativeEngine {
             self.seeds.prepare(view.t);
         }
 
-        // Recycle the caller's output blocks: only growth allocates.
-        out.truncate(tasks.len());
-        while out.len() < tasks.len() {
-            out.push(TileOutputs::sized(segn));
+        // Recycle the caller's output blocks, grow-only: a shrinking
+        // round (PD3's rounds taper as `nseg - k`) must not drop block
+        // storage that the next round — or the next PD3 call over the
+        // same workspace — would have to reallocate.  Entries past
+        // `tasks.len()` are simply left untouched.
+        if out.len() < tasks.len() {
+            out.resize_with(tasks.len(), || TileOutputs::sized(segn));
         }
         let threads = self.cfg.threads.max(1).min(tasks.len().max(1));
         if threads <= 1 || tasks.len() <= 1 {
@@ -161,7 +176,7 @@ impl Engine for NativeEngine {
             return Ok(());
         }
         let seeds = &self.seeds;
-        let slots = SliceWriter::new(&mut out[..]);
+        let slots = SliceWriter::new(&mut out[..tasks.len()]);
         self.pool().run(tasks.len(), |i| {
             // SAFETY: the round cursor hands out each index exactly
             // once, and `out` outlives the (blocking) round.
@@ -180,7 +195,10 @@ impl Engine for NativeEngine {
     }
 
     fn perf_counters(&self) -> EnginePerfCounters {
-        self.seeds.counters()
+        let mut c = self.seeds.counters();
+        c.batches = self.batches.load(Ordering::Relaxed);
+        c.batch_tiles = self.batch_tiles.load(Ordering::Relaxed);
+        c
     }
 }
 
@@ -566,6 +584,24 @@ mod tests {
             assert_eq!(batch[k].row_min, single.row_min);
             assert_eq!(batch[k].col_kill, single.col_kill);
         }
+    }
+
+    #[test]
+    fn batch_counters_track_submissions() {
+        let t = random_walk(300, 13);
+        let stats = RollingStats::compute(&t, 16);
+        let view = SeriesView { t: &t, stats: &stats };
+        let engine = NativeEngine::with_segn(32);
+        engine.prepare_series(&view);
+        let tasks = vec![
+            TileTask { seg_start: 0, chunk_start: 0 },
+            TileTask { seg_start: 0, chunk_start: 32 },
+        ];
+        engine.compute_tiles(&view, 4.0, &tasks).unwrap();
+        engine.compute_tiles(&view, 4.0, &tasks[..1]).unwrap();
+        let c = engine.perf_counters();
+        assert_eq!(c.batches, 2);
+        assert_eq!(c.batch_tiles, 3);
     }
 
     #[test]

@@ -107,6 +107,12 @@ struct SeedMap {
     /// switch series without [`QtSeedCache::prepare`].
     bound: (usize, usize),
     rows: HashMap<(usize, usize), SeedRow>,
+    /// Rows evicted by a series change, kept so their allocations can
+    /// be recycled by the next misses.  The streaming monitor re-binds
+    /// the cache on every refresh (the window's *content* slides), so
+    /// without this free-list each refresh would reallocate every seed
+    /// row — the counting-allocator test pins the recycled behavior.
+    spares: Vec<SeedRow>,
 }
 
 fn identity(t: &[f64]) -> (usize, usize) {
@@ -152,7 +158,9 @@ impl QtSeedCache {
         let mut g = self.inner.lock().unwrap();
         if g.fingerprint != fp {
             g.fingerprint = fp;
-            g.rows.clear();
+            let SeedMap { rows, spares, .. } = &mut *g;
+            spares.extend(rows.drain().map(|(_, row)| row));
+            spares.truncate(MAX_CACHED_ROWS);
         }
         g.bound = identity(t);
     }
@@ -178,6 +186,7 @@ impl QtSeedCache {
             seed_hits: self.hits.load(Ordering::Relaxed),
             seed_advances: self.advances.load(Ordering::Relaxed),
             seed_misses: self.misses.load(Ordering::Relaxed),
+            ..EnginePerfCounters::default()
         }
     }
 
@@ -195,14 +204,30 @@ impl QtSeedCache {
     ) {
         debug_assert_eq!(qt_out.len(), nb);
         let key = (a, cs);
-        let taken = self.inner.lock().unwrap().rows.remove(&key);
+        let ident = identity(t);
+        // Both critical sections verify the cache is still bound to
+        // *this* buffer: two PD3 runs on one shared engine with
+        // different (live, hence non-aliasing) series would otherwise
+        // race `prepare` and cross-pollinate rows mid-flight.  On a
+        // binding mismatch this call simply computes fresh products and
+        // leaves the cache alone.
+        let (taken, spare, bound_ok) = {
+            let mut g = self.inner.lock().unwrap();
+            if g.bound == ident {
+                let taken = g.rows.remove(&key);
+                let spare = if taken.is_none() { g.spares.pop() } else { None };
+                (taken, spare, true)
+            } else {
+                (None, None, false)
+            }
+        };
         let row = match taken {
             // Same length: verbatim reuse (MERLIN's r-retries).
             Some(mut row) if row.m == m && row.qt.len() >= nb => {
                 row.qt.truncate(nb);
                 qt_out.copy_from_slice(&row.qt);
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                row
+                Some(row)
             }
             // Shorter cached length: advance each product with one
             // multiply-add per step (the dot-product recurrence).  The
@@ -220,27 +245,37 @@ impl QtSeedCache {
                 row.m = m;
                 qt_out.copy_from_slice(&row.qt);
                 self.advances.fetch_add(1, Ordering::Relaxed);
-                row
+                Some(row)
             }
-            // Miss (cold, or a sweep restarted at a shorter length):
-            // full O(nb * m) seed pass, stored for next time.  The
-            // evicted row's allocation is recycled when present.
+            // Miss (cold, a sweep restarted at a shorter length, or a
+            // fresh series): full O(nb * m) seed pass, stored for next
+            // time.  The stale row's allocation — or a spare evicted by
+            // a series change — is recycled when present.
             other => {
                 let wa = &t[a..a + m];
                 for (j, q) in qt_out.iter_mut().enumerate() {
                     *q = dot(wa, &t[cs + j..cs + j + m]);
                 }
                 self.misses.fetch_add(1, Ordering::Relaxed);
-                let mut row = other.unwrap_or_else(|| SeedRow { m, qt: Vec::new() });
-                row.m = m;
-                row.qt.clear();
-                row.qt.extend_from_slice(qt_out);
-                row
+                if bound_ok {
+                    let mut row =
+                        other.or(spare).unwrap_or_else(|| SeedRow { m, qt: Vec::new() });
+                    row.m = m;
+                    row.qt.clear();
+                    row.qt.extend_from_slice(qt_out);
+                    Some(row)
+                } else {
+                    // Binding race: don't build a row the guarded
+                    // insert below would just drop.
+                    None
+                }
             }
         };
-        let mut g = self.inner.lock().unwrap();
-        if g.rows.len() < MAX_CACHED_ROWS || g.rows.contains_key(&key) {
-            g.rows.insert(key, row);
+        if let Some(row) = row {
+            let mut g = self.inner.lock().unwrap();
+            if g.bound == ident && (g.rows.len() < MAX_CACHED_ROWS || g.rows.contains_key(&key)) {
+                g.rows.insert(key, row);
+            }
         }
     }
 }
@@ -320,6 +355,27 @@ mod tests {
         assert_eq!(after, fresh_seed(&t2, 8, 0, 30, 8));
         let c = cache.counters();
         assert_eq!((c.seed_misses, c.seed_hits), (2, 0));
+    }
+
+    #[test]
+    fn rebinding_series_recycles_rows_correctly() {
+        // The streaming-refresh pattern: the bound content changes on
+        // every prepare.  Recycled spare rows must never leak another
+        // series' products.
+        let t1 = series(200);
+        let t2: Vec<f64> = t1.iter().map(|v| v * 1.5 + 2.0).collect();
+        let cache = QtSeedCache::new();
+        for _ in 0..4 {
+            for t in [&t1, &t2] {
+                cache.prepare(t);
+                let mut buf = vec![0.0; 24];
+                cache.seed_into(t, 12, 4, 60, 24, &mut buf);
+                assert_eq!(buf, fresh_seed(t, 12, 4, 60, 24));
+            }
+        }
+        let c = cache.counters();
+        assert_eq!(c.seed_hits, 0, "every rebind must invalidate: {c:?}");
+        assert_eq!(c.seed_misses, 8);
     }
 
     #[test]

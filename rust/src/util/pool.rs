@@ -305,6 +305,16 @@ impl RoundPool {
         if n == 0 {
             return;
         }
+        // Inline fast path: with no workers — or a single item, which
+        // the submitting thread would claim anyway — the broadcast +
+        // wait round protocol is pure overhead.  The streaming
+        // monitor's small refresh rounds hit this constantly.
+        if self.handles.is_empty() || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
         // One round at a time; a poisoned lock (panicked round) is fine
         // to reuse — the protocol state is reset per round.
         let _round_guard = match self.submit.lock() {
@@ -516,6 +526,19 @@ mod tests {
     fn round_pool_empty_round_is_noop() {
         let pool = RoundPool::new(2);
         pool.run(0, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn round_pool_single_item_runs_inline() {
+        let pool = RoundPool::new(2);
+        let counter = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run(1, |i| {
+                assert_eq!(i, 0);
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
     }
 
     #[test]

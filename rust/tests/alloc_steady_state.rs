@@ -1,14 +1,28 @@
-//! Zero-allocation proof for the native tile pipeline.
+//! Zero-allocation proofs for the hot loops.
 //!
 //! A counting global allocator wraps `System`; after warmup (scratch
 //! arenas sized, seed cache populated, worker pool spawned, output
-//! blocks grown) the steady-state tile loop must perform **zero** heap
-//! allocations.  This file contains only this test so no concurrent
-//! test can pollute the counter.
+//! blocks grown, coordinator workspace bound) each steady-state loop
+//! must perform **zero** heap allocations:
+//!
+//! 1. the native engine's raw tile-batch loop (PR 1),
+//! 2. MERLIN's per-length adaptive-r retry loop over a hoisted
+//!    [`MerlinWorkspace`] (this PR's tentpole), and
+//! 3. the streaming monitor's warm `push()` loop — **including** its
+//!    scheduled PD3 refreshes, which recycle the monitor's stats
+//!    buffer, workspace, and the engine's spare seed rows.
+//!
+//! This file contains only these tests, serialized through one mutex so
+//! no concurrent test pollutes the shared counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
+use palmad::coordinator::drag::{pd3_into, Pd3Config};
+use palmad::coordinator::metrics::DragMetrics;
+use palmad::coordinator::streaming::{StreamConfig, StreamMonitor};
+use palmad::coordinator::workspace::MerlinWorkspace;
 use palmad::core::stats::RollingStats;
 use palmad::engines::native::{NativeConfig, NativeEngine};
 use palmad::engines::{Engine, SeriesView, TileTask};
@@ -16,6 +30,7 @@ use palmad::runtime::types::TileOutputs;
 use palmad::util::rng::Rng;
 
 static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static SERIAL: Mutex<()> = Mutex::new(());
 
 struct CountingAllocator;
 
@@ -55,8 +70,30 @@ fn random_walk(n: usize, seed: u64) -> Vec<f64> {
         .collect()
 }
 
+/// Run `body` until a pass of it performs zero allocations (buffers
+/// ratchet to their high-water marks on early passes), failing after
+/// `attempts` non-clean passes.  The claim under test is always that a
+/// zero-allocation steady state is *reached and stays*.
+fn assert_reaches_alloc_free_steady_state(
+    what: &str,
+    attempts: usize,
+    mut body: impl FnMut(),
+) {
+    let mut last_delta = u64::MAX;
+    for _ in 0..attempts {
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        body();
+        last_delta = ALLOC_CALLS.load(Ordering::SeqCst) - before;
+        if last_delta == 0 {
+            return;
+        }
+    }
+    panic!("{what}: still {last_delta} heap allocations per pass after {attempts} attempts");
+}
+
 #[test]
 fn steady_state_tile_loop_is_allocation_free() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
     let t = random_walk(4096, 99);
     let m = 64;
     let segn = 128;
@@ -79,35 +116,86 @@ fn steady_state_tile_loop_is_allocation_free() {
     let mut out: Vec<TileOutputs> = Vec::new();
     // Warmup: spawns the pool, sizes every scratch arena and output
     // block, and fills the seed cache (first round misses, later rounds
-    // hit; both paths execute).  Worker scratch arenas are thread-local
-    // and populated lazily, so a worker that loses every cursor race
-    // during warmup would first allocate *inside* the measured window —
-    // that is still warmup, not steady state.  Hence: measure, and on a
-    // nonzero count warm further and re-measure; the claim under test is
-    // that a zero-allocation steady state is *reached and stays*, which
-    // the final attempt must prove.
+    // hit; both paths execute).  A worker that loses every cursor race
+    // during warmup would first allocate its thread-local arena *inside*
+    // the measured window — that is still warmup, which the retry helper
+    // absorbs.
     for _ in 0..5 {
         engine.compute_tiles_into(&view, r2, &tasks, &mut out).unwrap();
     }
-
-    let mut last_delta = u64::MAX;
-    for _attempt in 0..5 {
-        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_reaches_alloc_free_steady_state("tile batch loop", 5, || {
         for _ in 0..10 {
             engine.compute_tiles_into(&view, r2, &tasks, &mut out).unwrap();
         }
-        last_delta = ALLOC_CALLS.load(Ordering::SeqCst) - before;
-        if last_delta == 0 {
-            break;
-        }
-    }
-    assert_eq!(
-        last_delta, 0,
-        "steady-state tile loop still performed {last_delta} heap allocations \
-         across 10 rounds after extended warmup"
-    );
+    });
 
     // Sanity: the measured rounds really computed tiles (not a no-op).
     assert_eq!(out.len(), tasks.len());
     assert!(out.iter().any(|o| o.row_min.iter().any(|d| d.is_finite())));
+}
+
+#[test]
+fn merlin_retry_loop_is_allocation_free() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let t = random_walk(2048, 5);
+    let stats = RollingStats::compute(&t, 48);
+    let view = SeriesView { t: &t, stats: &stats };
+    let engine = NativeEngine::new(NativeConfig { segn: 128, threads: 4, ..Default::default() });
+    let mut ws = MerlinWorkspace::new();
+    let mut metrics = DragMetrics::default();
+    // The retry-loop shape at one length: descending thresholds, every
+    // call through the same hoisted workspace.  Later (lower-r) calls
+    // keep more candidates alive, so round task counts and survivor
+    // counts both grow along the schedule — exactly the buffer-growth
+    // pattern the arena must absorb once and then recycle.
+    // Ends at r = 0.0: nothing can be killed there, so the final call
+    // exercises the maximal task/survivor volume (every buffer's
+    // high-water mark) on the very first pass.
+    let schedule = [12.0, 9.0, 7.0, 5.5, 4.2, 3.0, 0.0];
+    let mut run_schedule = |metrics: &mut DragMetrics, ws: &mut MerlinWorkspace| {
+        for &r in &schedule {
+            pd3_into(&engine, &view, r, &Pd3Config::default(), metrics, ws).unwrap();
+        }
+    };
+    // Warmup: two full passes (cold caches, pool spawn, arena growth).
+    run_schedule(&mut metrics, &mut ws);
+    run_schedule(&mut metrics, &mut ws);
+    assert_reaches_alloc_free_steady_state("MERLIN retry loop", 5, || {
+        run_schedule(&mut metrics, &mut ws);
+    });
+    // Sanity: the r = 0 call reports every window with a finite nn, and
+    // the arena was recycled rather than rebuilt.
+    assert!(!ws.discords().is_empty(), "r=0.0 must leave survivors");
+    let c = ws.counters();
+    assert!(c.resets >= 3 * schedule.len() as u64, "2 warmup + >=1 measured passes: {c:?}");
+    assert_eq!(c.grows, 1, "only the cold rebind may grow: {c:?}");
+}
+
+#[test]
+fn stream_monitor_push_loop_is_allocation_free() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let engine = NativeEngine::new(NativeConfig { segn: 64, threads: 2, ..Default::default() });
+    let mut mon = StreamMonitor::new(
+        &engine,
+        StreamConfig { window: 512, m: 32, refresh: 128, alert_frac: 1.0, legacy_slide: false },
+    );
+    let mut rng = Rng::seed(31);
+    let mut acc = 0.0;
+    let mut push_points = |mon: &mut StreamMonitor<'_>, count: usize| {
+        for _ in 0..count {
+            acc += rng.normal();
+            mon.push(acc).unwrap();
+        }
+    };
+    // Warmup: several full windows — ring wraps, PD3 refreshes (stats
+    // recompute + workspace + engine seed-row recycling), alert paths.
+    push_points(&mut mon, 2048);
+    // Steady state: each pass covers 512 pushes spanning multiple
+    // scheduled refreshes and at least one ring wrap.
+    assert_reaches_alloc_free_steady_state("stream push loop", 8, || {
+        push_points(&mut mon, 512);
+    });
+    let c = mon.ingest_counters();
+    assert!(c.refreshes >= 16, "the pass schedule must include refreshes: {c:?}");
+    assert_eq!(mon.window_len(), 512, "window must be full and sliding");
 }

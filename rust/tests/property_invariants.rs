@@ -2,6 +2,7 @@
 //! shapes: walks, noise, periodic, flat plateaus, huge offsets.
 
 use palmad::baselines::{brute, drag_serial};
+use palmad::coordinator::distributed::{distributed_drag, ExchangeMode};
 use palmad::coordinator::drag::{pd3, Pd3Config};
 use palmad::coordinator::metrics::DragMetrics;
 use palmad::coordinator::segmentation::Segmentation;
@@ -141,6 +142,59 @@ fn prop_pd3_survivor_definition() {
             if is_discord != found_idx.contains(&i) {
                 return Err(format!("window {i}: nn2={d2}, r2={}, in set: {}", r * r, found_idx.contains(&i)));
             }
+        }
+        Ok(())
+    });
+}
+
+/// Distributed DRAG: both exchange modes (Yankov raw-candidate exchange
+/// and Zymbler local refinement) return exactly the brute-force
+/// range-discord set on random walks for any partition count / tile
+/// edge, and local refinement never puts more candidates on the wire.
+#[test]
+fn prop_distributed_exchange_modes_match_brute() {
+    check("distributed-exchange", Config { cases: 15, ..Default::default() }, |rng| {
+        let n = rng.int_in(80, 240);
+        let mut acc = 0.0;
+        let t: Vec<f64> = (0..n)
+            .map(|_| {
+                acc += rng.normal();
+                acc
+            })
+            .collect();
+        let m = rng.int_in(4, 16);
+        let r = rng.range(0.25, 0.95) * max_ed(m);
+        let segn = rng.int_in(4, 40);
+        let parts = rng.int_in(1, 6);
+        let engine = NativeEngine::with_segn(segn);
+        let (gy, my) = distributed_drag(&engine, &t, m, r, parts, ExchangeMode::Yankov)
+            .map_err(|e| format!("yankov: {e}"))?;
+        let (gl, ml) = distributed_drag(&engine, &t, m, r, parts, ExchangeMode::LocalRefine)
+            .map_err(|e| format!("local-refine: {e}"))?;
+        let mut want = brute::range_discords(&t, m, r);
+        want.sort_by_key(|d| d.idx);
+        let wi: Vec<usize> = want.iter().map(|d| d.idx).collect();
+        for (label, got) in [("yankov", &gy), ("local-refine", &gl)] {
+            let gi: Vec<usize> = got.iter().map(|d| d.idx).collect();
+            if gi != wi {
+                return Err(format!(
+                    "n={n} m={m} r={r:.3} segn={segn} parts={parts}: {label} {gi:?} vs brute {wi:?}"
+                ));
+            }
+            for (g, w) in got.iter().zip(&want) {
+                if !close(g.nn_dist, w.nn_dist, 1e-4) {
+                    return Err(format!(
+                        "{label} nnDist at {}: {} vs {}",
+                        g.idx, g.nn_dist, w.nn_dist
+                    ));
+                }
+            }
+        }
+        if ml.exchanged > my.exchanged {
+            return Err(format!(
+                "n={n} m={m} parts={parts}: local-refine exchanged {} > yankov {}",
+                ml.exchanged, my.exchanged
+            ));
         }
         Ok(())
     });

@@ -1,18 +1,32 @@
 #!/usr/bin/env bash
 # CI gate for the rust workspace: formatting, lints, build, tests.
 #
-#   scripts/ci.sh          # full gate
-#   scripts/ci.sh --fast   # skip the release build (debug tests only)
+#   scripts/ci.sh                # full gate
+#   scripts/ci.sh --fast         # skip the release build (debug tests only)
+#   scripts/ci.sh --bench-smoke  # additionally smoke-run the microbench
+#                                # (PALMAD_BENCH_QUICK=1; catches bench
+#                                # bitrot and regenerates BENCH_*.json)
 #
 # The workspace is fully offline (vendored path deps), so no network is
-# needed.  Benches are NOT run here — see scripts in EXPERIMENTS.md §Perf
-# for the perf tracking flow (BENCH_*.json).
+# needed.  `cargo fmt --check` and `cargo clippy -- -D warnings` keep the
+# legacy/new dual pipelines (TilePipeline::Legacy vs Scratch, drain vs
+# ring slide) warning-clean; no lint allowlist is needed at the moment —
+# add targeted `#[allow]`s in code rather than blanket flags here.
+# Benches are NOT timed here — see EXPERIMENTS.md §Perf / §Streaming for
+# the perf tracking flow (BENCH_*.json).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 FAST=0
-[ "${1:-}" = "--fast" ] && FAST=1
+BENCH_SMOKE=0
+for arg in "$@"; do
+  case "$arg" in
+    --fast) FAST=1 ;;
+    --bench-smoke) BENCH_SMOKE=1 ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
 
 echo "== cargo fmt --check =="
 cargo fmt --all --check
@@ -27,5 +41,10 @@ fi
 
 echo "== cargo test -q =="
 cargo test -q
+
+if [ "$BENCH_SMOKE" -eq 1 ]; then
+  echo "== microbench smoke (PALMAD_BENCH_QUICK=1) =="
+  PALMAD_BENCH_QUICK=1 cargo bench --bench microbench
+fi
 
 echo "CI gate passed."
