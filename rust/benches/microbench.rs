@@ -22,9 +22,11 @@ use palmad::core::stats::RollingStats;
 use palmad::engines::native::{
     compute_tile, compute_tile_alloc, NativeConfig, NativeEngine, TilePipeline,
 };
+use palmad::engines::scratch::QtSeedCache;
 use palmad::engines::{Engine, SeriesView, TileTask};
 use palmad::gen::random_walk::random_walk;
 use palmad::util::json::Json;
+use palmad::util::pool::{self, RoundPool};
 
 fn summary_json(s: &Summary) -> Json {
     Json::obj()
@@ -116,6 +118,68 @@ fn main() {
         ],
     );
 
+    // Seed prefetch: K cached QT rows walked m0 -> m1, lazily (one
+    // seed_into advance per row, serialized through the shard locks) vs
+    // the bulk advance_all sweep (one parallel pass).  Seeding the rows
+    // at m0 is common setup, measured separately so the JSON lets the
+    // net advance cost be recovered by subtraction.
+    let (pf_rows, pf_nb, pf_m0, pf_m1) = (512usize, 256usize, 64usize, 320usize);
+    let pf_keys: Vec<(usize, usize)> = (0..pf_rows)
+        .map(|k| (k * 7 % 4096, 8192 + (k * 131) % 32768))
+        .collect();
+    let mut pf_buf = vec![0.0; pf_nb];
+    let seed_all = |cache: &QtSeedCache, m: usize, buf: &mut [f64]| {
+        cache.prepare(&t.values);
+        for &(a, cs) in &pf_keys {
+            cache.seed_into(&t.values, m, a, cs, pf_nb, buf);
+        }
+    };
+    let s_pf_setup = measure(1, default_reps(), || {
+        let cache = QtSeedCache::new();
+        seed_all(&cache, pf_m0, &mut pf_buf);
+        std::hint::black_box(&pf_buf);
+    });
+    bench.record(
+        "seed_prefetch_setup",
+        format!("{pf_rows} rows nb={pf_nb} seed m={pf_m0}"),
+        s_pf_setup,
+        vec![],
+    );
+    let s_pf_lazy = measure(1, default_reps(), || {
+        let cache = QtSeedCache::new();
+        seed_all(&cache, pf_m0, &mut pf_buf);
+        for &(a, cs) in &pf_keys {
+            cache.seed_into(&t.values, pf_m1, a, cs, pf_nb, &mut pf_buf);
+        }
+        std::hint::black_box(&pf_buf);
+    });
+    let pf_pool = RoundPool::new(pool::default_threads().saturating_sub(1));
+    let mut prefetched_rows = 0u64;
+    let s_pf_bulk = measure(1, default_reps(), || {
+        let cache = QtSeedCache::new();
+        seed_all(&cache, pf_m0, &mut pf_buf);
+        prefetched_rows = cache.advance_all(&t.values, pf_m1, Some(&pf_pool));
+        std::hint::black_box(prefetched_rows);
+    });
+    let pf_lazy_net = (s_pf_lazy.median - s_pf_setup.median).max(0.0);
+    let pf_bulk_net = (s_pf_bulk.median - s_pf_setup.median).max(1e-12);
+    bench.record(
+        "seed_prefetch_lazy",
+        format!("{pf_rows} rows m{pf_m0}->{pf_m1}"),
+        s_pf_lazy,
+        vec![("net_s".into(), format!("{pf_lazy_net:.6}"))],
+    );
+    bench.record(
+        "seed_prefetch_bulk",
+        format!("{pf_rows} rows m{pf_m0}->{pf_m1}"),
+        s_pf_bulk,
+        vec![
+            ("net_s".into(), format!("{pf_bulk_net:.6}")),
+            ("speedup_net".into(), format!("{:.2}", pf_lazy_net / pf_bulk_net)),
+            ("prefetched_rows".into(), format!("{prefetched_rows}")),
+        ],
+    );
+
     write_root_json(
         "BENCH_native_tile.json",
         Json::obj()
@@ -134,7 +198,20 @@ fn main() {
                 summary_json(&s_scratch)
                     .set("mcells_per_s", cells / s_scratch.median / 1e6),
             )
-            .set("speedup", s_legacy.median / s_scratch.median),
+            .set("speedup", s_legacy.median / s_scratch.median)
+            .set(
+                "seed_prefetch",
+                Json::obj()
+                    .set("rows", pf_rows)
+                    .set("nb", pf_nb)
+                    .set("m_from", pf_m0)
+                    .set("m_to", pf_m1)
+                    .set("prefetched_rows", prefetched_rows as usize)
+                    .set("setup", summary_json(&s_pf_setup))
+                    .set("lazy", summary_json(&s_pf_lazy).set("net_s", pf_lazy_net))
+                    .set("bulk", summary_json(&s_pf_bulk).set("net_s", pf_bulk_net))
+                    .set("speedup_net", pf_lazy_net / pf_bulk_net),
+            ),
     );
 
     // End-to-end MERLIN before/after: the acceptance workload

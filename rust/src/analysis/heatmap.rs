@@ -1,6 +1,6 @@
-//! Discord heatmap (Eq. 11): a `(maxL - minL + 1) x (n - minL)` intensity
-//! matrix where cell `(m, i)` is the normalized nearest-neighbor distance
-//! of discord `T[i, m]`:
+//! Discord heatmap (Eq. 11): a `(maxL - minL + 1) x (n - minL + 1)`
+//! intensity matrix where cell `(m, i)` is the normalized
+//! nearest-neighbor distance of discord `T[i, m]`:
 //!
 //! ```text
 //! heatmap(m, i) = nnDist^2(T_i,m) / (2m)        (Eq. 11, squared form)
@@ -10,13 +10,17 @@
 //! (collect all survivors per length).
 
 use crate::coordinator::merlin::MerlinResult;
+use crate::core::windows::window_count;
 
 /// Dense heatmap with length-major rows.
 #[derive(Clone, Debug)]
 pub struct Heatmap {
     pub min_l: usize,
     pub max_l: usize,
-    /// Number of index columns (`n - minL`).
+    /// Number of index columns: the window count at `minL`
+    /// (`n - minL + 1` — the final window index `n - minL` is a valid
+    /// column; an earlier `n - minL` sizing silently dropped discords at
+    /// the last window).
     pub width: usize,
     /// Row-major `(maxL - minL + 1) x width` scores in `[0, 1]`-ish range
     /// (Eq. 11's normalization bounds scores by 2).
@@ -24,8 +28,19 @@ pub struct Heatmap {
 }
 
 impl Heatmap {
+    /// Row count; 0 for the empty heatmap (no cells at all).
     pub fn rows(&self) -> usize {
-        self.max_l - self.min_l + 1
+        if self.data.is_empty() {
+            0
+        } else {
+            self.max_l - self.min_l + 1
+        }
+    }
+
+    /// True when the heatmap has no cells (empty MERLIN result, or a
+    /// series shorter than `min_l`).
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
     }
 
     #[inline]
@@ -47,9 +62,14 @@ impl Heatmap {
     pub fn from_result(res: &MerlinResult, n: usize) -> Heatmap {
         let (min_l, max_l) = match (res.lengths.first(), res.lengths.last()) {
             (Some(a), Some(b)) => (a.m, b.m),
-            _ => (0, 0),
+            // No lengths: an actually-empty heatmap (no rows, no cells)
+            // instead of a fabricated 1 x n all-zero matrix.
+            _ => return Heatmap { min_l: 0, max_l: 0, width: 0, data: Vec::new() },
         };
-        let width = n.saturating_sub(min_l);
+        // Length-m windows start at 0..=n-m, so row minL has
+        // `n - minL + 1` valid columns (0 when the series is shorter
+        // than minL, making the heatmap empty).
+        let width = window_count(n, min_l);
         let mut hm = Heatmap {
             min_l,
             max_l,
@@ -75,6 +95,9 @@ impl Heatmap {
     /// Downsample by max-pooling to at most `(max_rows, max_cols)` — the
     /// rendering path for year-long series.
     pub fn downsample(&self, max_rows: usize, max_cols: usize) -> Heatmap {
+        if self.data.is_empty() {
+            return self.clone();
+        }
         let rows = self.rows();
         let r_factor = rows.div_ceil(max_rows.max(1)).max(1);
         let c_factor = self.width.div_ceil(max_cols.max(1)).max(1);
@@ -133,12 +156,58 @@ mod tests {
     fn scores_match_eq11() {
         let hm = Heatmap::from_result(&fake_result(), 20);
         assert_eq!(hm.rows(), 2);
-        assert_eq!(hm.width, 16);
+        // n = 20, minL = 4: windows 0..=16, so 17 columns.
+        assert_eq!(hm.width, 17);
         assert!((hm.get(4, 2) - 4.0 / 8.0).abs() < 1e-12);
         assert!((hm.get(5, 7) - 9.0 / 10.0).abs() < 1e-12);
         assert!((hm.get(5, 0) - 1.0 / 10.0).abs() < 1e-12);
         assert_eq!(hm.get(4, 3), 0.0);
         assert!((hm.max_score() - 0.9).abs() < 1e-12);
+    }
+
+    /// Regression for the off-by-one: a discord at the *last* valid
+    /// window index (`idx == n - minL` at `m == minL`) used to fail the
+    /// `idx < width` guard and silently vanish from the heatmap and
+    /// every ranking built on it.
+    #[test]
+    fn last_window_discord_is_kept() {
+        let n = 20;
+        let res = MerlinResult {
+            lengths: vec![LengthResult {
+                m: 4,
+                r_used: 1.0,
+                retries: 0,
+                discords: vec![Discord { idx: 16, m: 4, nn_dist: 2.0 }],
+            }],
+            metrics: MerlinMetrics::default(),
+        };
+        let hm = Heatmap::from_result(&res, n);
+        assert_eq!(hm.width, 17);
+        assert!((hm.get(4, 16) - 4.0 / 8.0).abs() < 1e-12, "last-window discord dropped");
+        assert!((hm.max_score() - 0.5).abs() < 1e-12);
+        let top = crate::analysis::ranking::top_k_interesting(&hm, 1);
+        assert_eq!(top.len(), 1);
+        assert_eq!((top[0].idx, top[0].m), (16, 4));
+    }
+
+    #[test]
+    fn empty_result_gives_empty_heatmap() {
+        let res = MerlinResult { lengths: Vec::new(), metrics: MerlinMetrics::default() };
+        let hm = Heatmap::from_result(&res, 50);
+        assert!(hm.is_empty());
+        assert_eq!((hm.rows(), hm.width, hm.data.len()), (0, 0, 0));
+        assert_eq!(hm.max_score(), 0.0);
+        let small = hm.downsample(4, 4);
+        assert!(small.is_empty(), "downsampling empty stays empty");
+        assert!(crate::analysis::ranking::top_k_interesting(&hm, 3).is_empty());
+    }
+
+    #[test]
+    fn series_shorter_than_min_l_gives_empty_heatmap() {
+        // Zero windows at minL: no fabricated columns.
+        let hm = Heatmap::from_result(&fake_result(), 3);
+        assert!(hm.is_empty());
+        assert_eq!(hm.rows(), 0);
     }
 
     #[test]

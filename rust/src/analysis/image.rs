@@ -135,4 +135,17 @@ mod tests {
         }};
         render_heatmap(&hm, tmp("hm.ppm"), 10, 2).unwrap();
     }
+
+    #[test]
+    fn empty_heatmap_renders_placeholder() {
+        // The degenerate (no-result) heatmap must stay renderable: a
+        // 1 x 1 black placeholder, not a panic or a zero-sized header.
+        use crate::analysis::heatmap::Heatmap;
+        let hm = Heatmap { min_l: 0, max_l: 0, width: 0, data: Vec::new() };
+        let p = tmp("hm_empty.ppm");
+        render_heatmap(&hm, &p, 10, 2).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n1 1\n255\n"));
+        assert_eq!(bytes.len(), b"P6\n1 1\n255\n".len() + 3);
+    }
 }

@@ -6,6 +6,12 @@
 //!   across lengths from the heatmap.
 //! - [`image`] — PGM/PPM writers (no image crates offline).
 //! - [`report`] — text/JSON experiment tables.
+//!
+//! This layer faces user-supplied data (parsed CSVs with NaN cells,
+//! empty discovery results), so panicking `unwrap`s are denied outright
+//! — handle the degenerate case or use a total ordering instead.  The
+//! same gate covers `core::windows`; `scripts/ci.sh --clippy` runs it.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod heatmap;
 pub mod image;

@@ -1,6 +1,13 @@
 //! Discord interest ranking across lengths (Eq. 12): the most interesting
 //! discord maximizes the heatmap score over all lengths sharing its index;
 //! top-k extraction de-overlaps by index (using each winner's own length).
+//!
+//! NaN placement: a NaN heatmap cell (a NaN sample in the source series
+//! propagates into nnDist) never wins a ranking — the per-index max
+//! ignores it, and the ordering is the total [`cmp_score_desc`] (NaN
+//! last), so ranking can no longer panic on such input.
+
+use crate::core::windows::cmp_score_desc;
 
 use super::heatmap::Heatmap;
 
@@ -30,7 +37,7 @@ pub fn top_k_interesting(hm: &Heatmap, k: usize) -> Vec<RankedDiscord> {
         }
     }
     let mut order: Vec<usize> = (0..hm.width).filter(|&i| best[i].0 > 0.0).collect();
-    order.sort_by(|&a, &b| best[b].0.partial_cmp(&best[a].0).unwrap().then(a.cmp(&b)));
+    order.sort_by(|&a, &b| cmp_score_desc(best[a].0, best[b].0).then(a.cmp(&b)));
 
     let mut out: Vec<RankedDiscord> = Vec::new();
     'outer: for i in order {
@@ -95,5 +102,24 @@ mod tests {
     fn empty_heatmap_empty_result() {
         let h = hm(5, 2, 10);
         assert!(top_k_interesting(&h, 3).is_empty());
+    }
+
+    #[test]
+    fn zero_cell_heatmap_empty_result() {
+        // The degenerate (empty MerlinResult) heatmap: no rows, no cells.
+        let h = Heatmap { min_l: 0, max_l: 0, width: 0, data: Vec::new() };
+        assert_eq!(h.rows(), 0);
+        assert!(top_k_interesting(&h, 3).is_empty());
+    }
+
+    #[test]
+    fn nan_cells_never_panic_or_win() {
+        let mut h = hm(8, 1, 40);
+        h.data[5] = f64::NAN;
+        h.data[25] = 0.5;
+        h.data[33] = f64::NAN;
+        let top = top_k_interesting(&h, 5);
+        assert_eq!(top.len(), 1, "NaN cells are not rankable: {top:?}");
+        assert_eq!(top[0].idx, 25);
     }
 }

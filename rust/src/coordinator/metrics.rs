@@ -56,8 +56,13 @@ pub struct MerlinMetrics {
     pub discords: u64,
     /// Engine QT seed cache traffic during this run (hits = same-length
     /// reuse, advances = cross-length `m -> m'` recurrence updates,
-    /// misses = full seed passes).  All-zero for cache-less engines.
+    /// misses = full seed passes, prefetched/prefetch_batches = rows and
+    /// sweeps of the bulk between-length prefetch).  All-zero for
+    /// cache-less engines.
     pub seed: EnginePerfCounters,
+    /// Wall time spent in the bulk seed-prefetch sweeps
+    /// (`Engine::prefetch_length` between lengths).
+    pub prefetch_time: Duration,
     /// Coordinator arena reuse during this run (resets = PD3 calls
     /// through the hoisted workspace; grows = calls whose window count
     /// grew the minima vector — see [`WorkspaceCounters::grows`] for
@@ -72,8 +77,9 @@ impl std::fmt::Display for MerlinMetrics {
         write!(
             f,
             "drag_calls={} retries={} discords={} tiles={} skipped={} ({:.1}% early-stop) \
-             seeds(hit/adv/miss)={}/{}/{} ws(resets/grows)={}/{} \
-             select={:.3}s refine={:.3}s stats={:.3}s total={:.3}s",
+             seeds(hit/adv/miss)={}/{}/{} prefetch(rows/batches)={}/{} \
+             ws(resets/grows)={}/{} \
+             select={:.3}s refine={:.3}s stats={:.3}s prefetch={:.3}s total={:.3}s",
             self.drag_calls,
             self.retries,
             self.discords,
@@ -83,11 +89,14 @@ impl std::fmt::Display for MerlinMetrics {
             self.seed.seed_hits,
             self.seed.seed_advances,
             self.seed.seed_misses,
+            self.seed.seed_prefetched,
+            self.seed.prefetch_batches,
             self.workspace.resets,
             self.workspace.grows,
             self.drag.select_time.as_secs_f64(),
             self.drag.refine_time.as_secs_f64(),
             self.stats_time.as_secs_f64(),
+            self.prefetch_time.as_secs_f64(),
             self.total_time.as_secs_f64(),
         )
     }

@@ -371,6 +371,20 @@ impl<'e> StreamMonitor<'e> {
         let base = self.ingested - win.len();
         self.stats.recompute(win, m);
         let view = SeriesView { t: win, stats: &self.stats };
+        // Bind, then give the engine its bulk-prefetch hook before the
+        // retry loop.  The bind must be the unconditional prepare_series
+        // (content fingerprint), not prefetch_length's identity-guarded
+        // fast path: the ring's slice identity (ptr, len) cycles with
+        // period window+1 pushes, so a slid window can present the
+        // *same* identity as the previous refresh while holding new
+        // content.  For the native engine the hook itself is a no-op
+        // here — the monitor runs one fixed length, so after a slide the
+        // cache is empty and otherwise every row already sits at `m`
+        // (nothing advances, no batch is counted) — but engines carrying
+        // other cross-refresh per-length state get their bulk pass
+        // before the first pd3 call of the retry loop.
+        self.engine.prepare_series(&view);
+        self.engine.prefetch_length(win, m);
         // Adaptive r: reuse the last known (possibly drained-out)
         // discord distance, else start from the MERLIN seed.
         let mut r = match self.current.map(|d| d.nn_dist).or(self.stale_thr) {

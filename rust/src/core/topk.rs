@@ -102,4 +102,17 @@ mod tests {
         let got = top_k_non_overlapping(&items, 3, 2);
         assert_eq!(got, vec![s(20, 5.0)]);
     }
+
+    #[test]
+    fn nan_scores_rank_last_without_panicking() {
+        // A NaN sample in an input series propagates into nnDist; the
+        // selection must neither panic (the old partial_cmp unwrap) nor
+        // let the NaN outrank a real discord.
+        let items = vec![s(0, f64::NAN), s(50, 2.0), s(100, f64::NAN)];
+        let got = top_k_non_overlapping(&items, 10, 2);
+        assert_eq!(got[0], s(50, 2.0));
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1].idx, 0, "NaN entries keep deterministic index order");
+        assert!(got[1].nn_dist.is_nan());
+    }
 }

@@ -1,5 +1,9 @@
-//! Subsequence-window helpers: overlap predicates and index arithmetic
-//! shared by the coordinator, the baselines, and the tests.
+//! Subsequence-window helpers: overlap predicates, index arithmetic, and
+//! the NaN-total score ordering shared by the coordinator, the analysis
+//! layer, the baselines, and the tests.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+use std::cmp::Ordering;
 
 /// Do the `m`-windows starting at `i` and `j` trivially match
 /// (overlap), i.e. is `|i - j| < m`?  Non-self matches require
@@ -19,11 +23,31 @@ pub fn window_count(n: usize, m: usize) -> usize {
     }
 }
 
-/// Greedily filter `(index, score)` pairs (sorted by caller) so that kept
-/// indices are mutually non-overlapping for window length `m`.
+/// Total descending order over scores, with NaN pinned *last*.
+///
+/// Ranking paths used `partial_cmp(..).unwrap()`, so a single NaN score
+/// — one bad CSV cell survives every parsing path and propagates into
+/// nnDist — panicked the whole run.  This comparator is total
+/// ([`f64::total_cmp`] on the non-NaN side) and pins the NaN placement:
+/// a NaN score ranks below every real score, `-inf` included, so it can
+/// neither panic a sort nor displace a finite candidate; equal-score
+/// ties (NaN vs NaN included) are left to the caller's tie-breaker.
+#[inline]
+pub fn cmp_score_desc(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (false, false) => b.total_cmp(&a),
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater, // NaN sorts after any real b
+        (false, true) => Ordering::Less,
+    }
+}
+
+/// Greedily filter `(index, score)` pairs so that kept indices are
+/// mutually non-overlapping for window length `m`.  Ordering is
+/// [`cmp_score_desc`] (score descending, NaN last) with index-ascending
+/// tie-breaks, so the result is deterministic for any input.
 pub fn non_overlapping(mut items: Vec<(usize, f64)>, m: usize) -> Vec<(usize, f64)> {
-    // Stable on equal scores: sort by (score desc, index asc).
-    items.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    items.sort_by(|a, b| cmp_score_desc(a.1, b.1).then(a.0.cmp(&b.0)));
     let mut kept: Vec<(usize, f64)> = Vec::new();
     'outer: for (i, s) in items {
         for &(j, _) in &kept {
@@ -70,5 +94,33 @@ mod tests {
         let items = vec![(5, 2.0), (1, 2.0)];
         let kept = non_overlapping(items, 10);
         assert_eq!(kept, vec![(1, 2.0)]);
+    }
+
+    #[test]
+    fn non_overlapping_survives_nan_scores() {
+        // Regression: a NaN sample in an input series panicked the
+        // partial_cmp sort.  NaN entries now rank last and never
+        // displace a real candidate.
+        let items = vec![(20, f64::NAN), (10, 1.0), (0, f64::NAN), (30, 2.0)];
+        let kept = non_overlapping(items, 4);
+        assert_eq!(kept[0].0, 30);
+        assert_eq!(kept[1].0, 10);
+        assert_eq!(kept[2].0, 0, "NaN ties break by index");
+        assert!(kept[2].1.is_nan());
+        assert_eq!(kept[3].0, 20);
+        assert!(kept[3].1.is_nan());
+    }
+
+    #[test]
+    fn cmp_score_desc_is_total_and_pins_nan_last() {
+        use std::cmp::Ordering::*;
+        assert_eq!(cmp_score_desc(2.0, 1.0), Less, "bigger score first");
+        assert_eq!(cmp_score_desc(1.0, 2.0), Greater);
+        assert_eq!(cmp_score_desc(1.0, 1.0), Equal);
+        assert_eq!(cmp_score_desc(f64::NAN, f64::NEG_INFINITY), Greater, "NaN after -inf");
+        assert_eq!(cmp_score_desc(f64::INFINITY, f64::NAN), Less);
+        assert_eq!(cmp_score_desc(f64::NAN, f64::NAN), Equal);
+        // Both NaN sign bits get the same placement.
+        assert_eq!(cmp_score_desc(-f64::NAN, f64::NEG_INFINITY), Greater);
     }
 }

@@ -58,6 +58,14 @@ pub struct EnginePerfCounters {
     pub seed_advances: u64,
     /// Seed rows computed by the full `O(segn * m)` pass.
     pub seed_misses: u64,
+    /// Seed rows advanced by the bulk prefetch sweep
+    /// ([`Engine::prefetch_length`]); these resurface as `seed_hits`
+    /// when the next length's tiles consume them.
+    pub seed_prefetched: u64,
+    /// Bulk prefetch sweeps that found rows to advance (one per
+    /// advanced length on a warm cache; sweeps over an empty or
+    /// already-current cache are not counted).
+    pub prefetch_batches: u64,
     /// Tile batches submitted (one per coordinator round).
     pub batches: u64,
     /// Tiles evaluated across those batches.
@@ -71,6 +79,8 @@ impl EnginePerfCounters {
             seed_hits: self.seed_hits.saturating_sub(earlier.seed_hits),
             seed_advances: self.seed_advances.saturating_sub(earlier.seed_advances),
             seed_misses: self.seed_misses.saturating_sub(earlier.seed_misses),
+            seed_prefetched: self.seed_prefetched.saturating_sub(earlier.seed_prefetched),
+            prefetch_batches: self.prefetch_batches.saturating_sub(earlier.prefetch_batches),
             batches: self.batches.saturating_sub(earlier.batches),
             batch_tiles: self.batch_tiles.saturating_sub(earlier.batch_tiles),
         }
@@ -129,6 +139,18 @@ pub trait Engine: Send + Sync {
     /// Engines with per-series caches validate / reset them here; the
     /// default is a no-op.
     fn prepare_series(&self, _view: &SeriesView<'_>) {}
+
+    /// Advance engine-internal per-series state (e.g. the native QT seed
+    /// cache) to subsequence length `next_m` in one bulk pass, so the
+    /// next length's tiles find their seed rows ready instead of
+    /// advancing them one at a time under the cache locks.  MERLIN's
+    /// length loop calls this between lengths (after length `m`
+    /// completes, before any `m + 1` tile is scheduled) and the stream
+    /// monitor's refresh calls it before its retry loop.  Returns the
+    /// number of rows prefetched; engines without such caches ignore it.
+    fn prefetch_length(&self, _t: &[f64], _next_m: usize) -> u64 {
+        0
+    }
 
     /// Snapshot of the engine's cumulative performance counters.
     fn perf_counters(&self) -> EnginePerfCounters {

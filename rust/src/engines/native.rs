@@ -105,6 +105,14 @@ impl NativeEngine {
         self.round_pool
             .get_or_init(|| RoundPool::new(self.cfg.threads.saturating_sub(1)))
     }
+
+    /// Retire every cached QT seed row into the cache's spare pools
+    /// (memory-pressure hook).  The row allocations are recycled by
+    /// subsequent misses, so a clear does not break the engine's
+    /// zero-steady-state-allocation guarantee.
+    pub fn clear_seed_cache(&self) {
+        self.seeds.clear();
+    }
 }
 
 impl Engine for NativeEngine {
@@ -192,6 +200,24 @@ impl Engine for NativeEngine {
         if self.cfg.pipeline == TilePipeline::Scratch {
             self.seeds.prepare(view.t);
         }
+    }
+
+    fn prefetch_length(&self, t: &[f64], next_m: usize) -> u64 {
+        if self.cfg.pipeline != TilePipeline::Scratch {
+            return 0;
+        }
+        // O(1) identity guard only — callers switching series should
+        // bind via prepare_series first (the streaming refresh does;
+        // MERLIN's length loop is already bound).  This re-prepare is a
+        // safety net for direct callers, and cannot see through an
+        // identity collision (same ptr/len, new content) — exactly why
+        // the cache's authoritative validation stays the content
+        // fingerprint in prepare.
+        if !self.seeds.is_bound(t) {
+            self.seeds.prepare(t);
+        }
+        let pool = if self.cfg.threads > 1 { Some(self.pool()) } else { None };
+        self.seeds.advance_all(t, next_m, pool)
     }
 
     fn perf_counters(&self) -> EnginePerfCounters {
@@ -677,6 +703,96 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn bulk_prefetch_keeps_seed_misses_flat_across_lengths() {
+        // The tentpole counter pin: with prefetch_length called between
+        // lengths, every length after the first is served entirely from
+        // prefetched rows — seed_misses never moves again, and no tile
+        // ever falls back to the lazy per-row advance.
+        let t = random_walk(900, 14);
+        let engine = NativeEngine::with_segn(64);
+        let tasks: Vec<TileTask> = (0..4)
+            .map(|k| TileTask { seg_start: 64 * k, chunk_start: 64 * (k + 4) })
+            .collect();
+        let (m0, steps) = (24usize, 8usize);
+        let mut stats = RollingStats::compute(&t, m0);
+        let mut buf = Vec::new();
+        for step in 0..=steps {
+            let view = SeriesView { t: &t, stats: &stats };
+            engine.prepare_series(&view);
+            engine.compute_tiles_into(&view, 5.0, &tasks, &mut buf).unwrap();
+            let c = engine.perf_counters();
+            assert_eq!(
+                c.seed_misses,
+                tasks.len() as u64,
+                "step {step}: misses must stay flat after the first length"
+            );
+            if step < steps {
+                stats.advance(&t);
+                assert_eq!(
+                    engine.prefetch_length(&t, m0 + step + 1),
+                    tasks.len() as u64,
+                    "step {step}: every cached row advances"
+                );
+            }
+        }
+        let c = engine.perf_counters();
+        assert_eq!(c.seed_advances, 0, "prefetch subsumes all lazy advances");
+        assert_eq!(c.seed_prefetched, (steps * tasks.len()) as u64);
+        assert_eq!(c.prefetch_batches, steps as u64);
+        assert_eq!(c.seed_hits, (steps * tasks.len()) as u64);
+    }
+
+    #[test]
+    fn bulk_prefetch_is_bit_exact_with_lazy_advance() {
+        // Two engines over the same sweep: one advances rows lazily
+        // (per-tile, under the shard locks), one through the bulk sweep.
+        // The sweep uses the lazy advance's operation order, so every
+        // tile output must agree bit-for-bit.
+        let t = random_walk(800, 15);
+        let lazy = NativeEngine::with_segn(64);
+        let bulk = NativeEngine::with_segn(64);
+        let tasks: Vec<TileTask> = (0..4)
+            .map(|k| TileTask { seg_start: 64 * k, chunk_start: 64 * ((k + 2) % 6) })
+            .collect();
+        let (m0, steps) = (20usize, 6usize);
+        let mut stats = RollingStats::compute(&t, m0);
+        let (mut lbuf, mut bbuf) = (Vec::new(), Vec::new());
+        for step in 0..=steps {
+            let view = SeriesView { t: &t, stats: &stats };
+            lazy.prepare_series(&view);
+            bulk.prepare_series(&view);
+            lazy.compute_tiles_into(&view, 5.0, &tasks, &mut lbuf).unwrap();
+            bulk.compute_tiles_into(&view, 5.0, &tasks, &mut bbuf).unwrap();
+            for (k, (a, b)) in lbuf.iter().zip(&bbuf).enumerate() {
+                assert_eq!(a.row_min, b.row_min, "m={} task {k}", m0 + step);
+                assert_eq!(a.col_min, b.col_min, "m={} task {k}", m0 + step);
+                assert_eq!(a.row_kill, b.row_kill, "m={} task {k}", m0 + step);
+                assert_eq!(a.col_kill, b.col_kill, "m={} task {k}", m0 + step);
+            }
+            if step < steps {
+                stats.advance(&t);
+                bulk.prefetch_length(&t, m0 + step + 1);
+            }
+        }
+        let (cl, cb) = (lazy.perf_counters(), bulk.perf_counters());
+        assert_eq!(cl.seed_misses, cb.seed_misses, "prefetch must not add misses");
+        assert!(cl.seed_advances > 0 && cb.seed_advances == 0);
+        assert!(cb.seed_prefetched > 0);
+    }
+
+    #[test]
+    fn legacy_pipeline_ignores_prefetch() {
+        let t = random_walk(300, 16);
+        let engine = NativeEngine::new(NativeConfig {
+            segn: 32,
+            pipeline: TilePipeline::Legacy,
+            ..Default::default()
+        });
+        assert_eq!(engine.prefetch_length(&t, 10), 0);
+        assert_eq!(engine.perf_counters().prefetch_batches, 0);
     }
 
     #[test]

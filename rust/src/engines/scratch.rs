@@ -25,18 +25,42 @@
 //! Keys are `(seg_start, chunk_start)` global indices, which are
 //! length-independent (segment boundaries are multiples of `segn`).
 //!
+//! **Storage layout.**  Rows live in [`SHARD_COUNT`] independently locked
+//! shards (key-hashed), not one global `Mutex<HashMap>`: concurrent tile
+//! workers of one batch touch disjoint shards with high probability, and
+//! the engine's per-batch "is this still the bound series?" guard is a
+//! pair of atomic loads ([`QtSeedCache::is_bound`]) instead of a mutex
+//! round trip.  Content rebinds bump an epoch counter; any row taken out
+//! of a shard before a rebind fails the epoch check on reinsertion, so a
+//! racing [`QtSeedCache::prepare`] can never cross-pollinate series.
+//!
+//! **Bulk prefetch.**  Lazy per-tile advances serialize on the shard
+//! locks and only fire when a tile happens to revisit its key.
+//! [`QtSeedCache::advance_all`] instead advances *every* cached row to
+//! the next length in one contiguous sweep — rows are pulled out of
+//! their shards into a reusable work list, advanced in parallel through
+//! the engine's persistent `RoundPool` (chunked, so the per-item claim
+//! cost stays negligible), and reinserted.  MERLIN's length loop calls
+//! it between lengths (via `Engine::prefetch_length`), so the next
+//! length's tiles open on verbatim cache hits.  The sweep uses the exact
+//! per-column operation order of the lazy advance, so a prefetched row
+//! is bit-identical to a lazily advanced one.
+//!
 //! The cache is validated against the live series by a full-content
 //! fingerprint ([`QtSeedCache::prepare`], called by PD3 once per run); a
-//! different series clears it.  Entries whose stored length exceeds the
+//! different series evicts every row into a per-shard spare pool so the
+//! allocations are recycled by later misses ([`QtSeedCache::clear`]
+//! recycles the same way).  Entries whose stored length exceeds the
 //! requested one (MERLIN restarting a sweep) are recomputed in place.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::EnginePerfCounters;
 use crate::core::distance::dot;
+use crate::util::pool::{RoundPool, SliceWriter};
 
 /// Reusable per-worker buffers for one tile evaluation.
 ///
@@ -92,40 +116,143 @@ struct SeedRow {
     qt: Vec<f64>,
 }
 
-/// Bound on cached rows: with `segn = 256` this caps the cache at
-/// ~8 MiB.  The near-diagonal tiles that PD3 revisits at every length
-/// are inserted first (round 0 of selection), which is exactly the set
-/// worth keeping; overflow keys simply stay uncached.
-const MAX_CACHED_ROWS: usize = 4096;
+/// Shard fan-out (power of two).  Concurrent workers of one tile batch
+/// hash to distinct shards with high probability, so the take/insert
+/// critical sections stop convoying the way the old single-map mutex did.
+const SHARD_COUNT: usize = 16;
 
+/// Bound on cached rows *per shard*: with `segn = 256` the 16-shard total
+/// of 4096 rows caps the cache at ~8 MiB.  The near-diagonal tiles that
+/// PD3 revisits at every length are inserted first (round 0 of
+/// selection), which is exactly the set worth keeping; overflow keys
+/// simply stay uncached.  The spare pools honor the same per-shard bound.
+const MAX_ROWS_PER_SHARD: usize = 256;
+
+/// Indices per cursor claim in the bulk-prefetch fan-out: one row's
+/// advance is a single multiply-add pass over a few hundred columns, so
+/// per-item claims would rival the work itself.
+const PREFETCH_CHUNK: usize = 8;
+
+/// One key-hashed slice of the cache.
 #[derive(Debug, Default)]
-struct SeedMap {
-    /// Full-content fingerprint of the series the rows belong to.
-    fingerprint: u64,
-    /// Identity (`as_ptr`, `len`) of the last-bound series buffer: the
-    /// O(1) fast check the engine runs per batch to catch callers that
-    /// switch series without [`QtSeedCache::prepare`].
-    bound: (usize, usize),
+struct Shard {
     rows: HashMap<(usize, usize), SeedRow>,
-    /// Rows evicted by a series change, kept so their allocations can
-    /// be recycled by the next misses.  The streaming monitor re-binds
-    /// the cache on every refresh (the window's *content* slides), so
-    /// without this free-list each refresh would reallocate every seed
-    /// row — the counting-allocator test pins the recycled behavior.
+    /// Rows evicted by a series change, a `clear()`, or the prefetch
+    /// sweep's range cut, kept so their allocations can be recycled by
+    /// the next misses.  The streaming monitor re-binds the cache on
+    /// every refresh (the window's *content* slides), so without this
+    /// free-list each refresh would reallocate every seed row — the
+    /// counting-allocator test pins the recycled behavior.
     spares: Vec<SeedRow>,
+}
+
+impl Shard {
+    /// Keep `row`'s allocation for a future miss (content is treated as
+    /// garbage: reuse always rewrites it in full).
+    fn recycle(&mut self, row: SeedRow) {
+        if self.spares.len() < MAX_ROWS_PER_SHARD {
+            self.spares.push(row);
+        }
+    }
+
+    /// Move every live row into the spare pool.
+    fn evict_all(&mut self) {
+        let Shard { rows, spares } = self;
+        for (_, row) in rows.drain() {
+            if spares.len() < MAX_ROWS_PER_SHARD {
+                spares.push(row);
+            }
+        }
+    }
+}
+
+fn shard_of(key: (usize, usize)) -> usize {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in [key.0 as u64, key.1 as u64] {
+        h ^= v;
+        h = h.wrapping_mul(0x1_0000_0001_b3);
+    }
+    (h >> 32) as usize & (SHARD_COUNT - 1)
 }
 
 fn identity(t: &[f64]) -> (usize, usize) {
     (t.as_ptr() as usize, t.len())
 }
 
+/// Advance `row` — seed products `dot_{row.m}(a, cs + j)` for
+/// `j in 0..row.qt.len()` — to length `next_m` via the dot-product
+/// recurrence (one fused multiply-add per column per step).
+///
+/// The single source of truth for the advance operation order: the lazy
+/// per-tile path ([`QtSeedCache::seed_into`]) and the bulk prefetch
+/// sweep ([`QtSeedCache::advance_all`]) both call it, so their products
+/// are bit-identical by construction — the invariant the prefetch
+/// property tests pin.
+#[inline]
+fn advance_row(t: &[f64], a: usize, cs: usize, row: &mut SeedRow, next_m: usize) {
+    let nb = row.qt.len();
+    for k in row.m..next_m {
+        let ta = t[a + k];
+        let tb = &t[cs + k..cs + k + nb];
+        for (q, &b) in row.qt.iter_mut().zip(tb) {
+            *q += ta * b;
+        }
+    }
+    row.m = next_m;
+}
+
+/// A row pulled out of its shard for one bulk-prefetch sweep.
+#[derive(Debug)]
+struct SweepItem {
+    a: usize,
+    cs: usize,
+    row: SeedRow,
+}
+
 /// Concurrent cross-length QT seed cache (see module docs).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct QtSeedCache {
-    inner: Mutex<SeedMap>,
+    shards: [Mutex<Shard>; SHARD_COUNT],
+    /// `(as_ptr, len)` identity of the last-bound series buffer, split
+    /// over two atomics: the read-mostly fast check the engine runs per
+    /// batch ([`QtSeedCache::is_bound`]) without taking any lock.  A
+    /// mixed (torn) read cannot impersonate a live series — two live
+    /// buffers never share a base pointer — and every decision that
+    /// touches rows re-reads it under the owning shard's lock.
+    bound_ptr: AtomicUsize,
+    bound_len: AtomicUsize,
+    /// Bumped by every content rebind; take/insert pairs verify it
+    /// unchanged so in-flight rows of a previous binding are dropped to
+    /// the spare pool instead of poisoning the new one.
+    epoch: AtomicU64,
+    /// Full-content fingerprint of the bound series (prepare-only; also
+    /// serializes concurrent prepares end-to-end).
+    fingerprint: Mutex<u64>,
+    /// Reusable work list for [`QtSeedCache::advance_all`].
+    sweep: Mutex<Vec<SweepItem>>,
     hits: AtomicU64,
     advances: AtomicU64,
     misses: AtomicU64,
+    prefetched: AtomicU64,
+    prefetch_batches: AtomicU64,
+}
+
+impl Default for QtSeedCache {
+    fn default() -> Self {
+        Self {
+            shards: std::array::from_fn(|_| Mutex::new(Shard::default())),
+            bound_ptr: AtomicUsize::new(0),
+            bound_len: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
+            fingerprint: Mutex::new(0),
+            sweep: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            advances: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            prefetched: AtomicU64::new(0),
+            prefetch_batches: AtomicU64::new(0),
+        }
+    }
 }
 
 /// Full-content series fingerprint (FNV-1a over the length and every
@@ -149,51 +276,202 @@ impl QtSeedCache {
         Self::default()
     }
 
-    /// Bind the cache to `t`: clears all rows when the series *content*
-    /// changed since the last call (no-op on the hot path).  This is the
-    /// authoritative validation — callers that mutate a series buffer in
-    /// place must go through it (PD3 calls it once per run).
+    fn bound(&self) -> (usize, usize) {
+        (self.bound_ptr.load(Ordering::Acquire), self.bound_len.load(Ordering::Acquire))
+    }
+
+    /// Bind the cache to `t`: evicts all rows (into the spare pools)
+    /// when the series *content* changed since the last call (no-op on
+    /// the hot path).  This is the authoritative validation — callers
+    /// that mutate a series buffer in place must go through it (PD3
+    /// calls it once per run).
     pub fn prepare(&self, t: &[f64]) {
         let fp = fingerprint(t);
-        let mut g = self.inner.lock().unwrap();
-        if g.fingerprint != fp {
-            g.fingerprint = fp;
-            let SeedMap { rows, spares, .. } = &mut *g;
-            spares.extend(rows.drain().map(|(_, row)| row));
-            spares.truncate(MAX_CACHED_ROWS);
+        let mut guard = self.fingerprint.lock().unwrap();
+        if *guard != fp {
+            *guard = fp;
+            // New content.  Order matters: retire the binding to the
+            // unreachable sentinel `(0, 0)` (no live slice has a null
+            // base pointer) *before* bumping the epoch and evicting, so
+            // that for the whole eviction window every take/reinsert
+            // that re-reads the binding under a shard lock sees either
+            // (old epoch) — its reinsert then fails the epoch check —
+            // or the sentinel — its take computes fresh and caches
+            // nothing.  Publishing the new identity first (or last,
+            // with the old one still visible) would let a racing
+            // seed_into slip a stale-series row into an already-evicted
+            // shard.
+            self.bound_ptr.store(0, Ordering::Release);
+            self.bound_len.store(0, Ordering::Release);
+            self.epoch.fetch_add(1, Ordering::AcqRel);
+            for shard in &self.shards {
+                shard.lock().unwrap().evict_all();
+            }
         }
-        g.bound = identity(t);
+        let ident = identity(t);
+        self.bound_ptr.store(ident.0, Ordering::Release);
+        self.bound_len.store(ident.1, Ordering::Release);
     }
 
-    /// O(1) check that `t` is the buffer the cache was last bound to.
-    /// The engine consults this per batch and re-`prepare`s on mismatch,
-    /// so even direct `compute_tiles` callers that alternate series
-    /// without preparing get correct seeds.  (A different series at the
-    /// same address and length is indistinguishable here — that case is
-    /// what `prepare`'s content fingerprint covers.)
+    /// O(1) lock-free check that `t` is the buffer the cache was last
+    /// bound to.  The engine consults this per batch and re-`prepare`s
+    /// on mismatch, so even direct `compute_tiles` callers that
+    /// alternate series without preparing get correct seeds.  (A
+    /// different series at the same address and length is
+    /// indistinguishable here — that case is what `prepare`'s content
+    /// fingerprint covers.)
     pub fn is_bound(&self, t: &[f64]) -> bool {
-        self.inner.lock().unwrap().bound == identity(t)
+        self.bound() == identity(t)
     }
 
-    /// Drop every cached row (tests / memory pressure).
+    /// Retire every cached row (tests / memory pressure).  Rows go to
+    /// the per-shard spare pools, not the allocator: a pressure-driven
+    /// clear must not break the zero-steady-state-allocation guarantee,
+    /// so the next misses rebuild into recycled storage.
     pub fn clear(&self) {
-        self.inner.lock().unwrap().rows.clear();
+        for shard in &self.shards {
+            shard.lock().unwrap().evict_all();
+        }
     }
 
-    /// Lifetime counters (hits / cross-length advances / misses).
+    /// Lifetime counters (hits / cross-length advances / misses /
+    /// bulk-prefetch volume).
     pub fn counters(&self) -> EnginePerfCounters {
         EnginePerfCounters {
             seed_hits: self.hits.load(Ordering::Relaxed),
             seed_advances: self.advances.load(Ordering::Relaxed),
             seed_misses: self.misses.load(Ordering::Relaxed),
+            seed_prefetched: self.prefetched.load(Ordering::Relaxed),
+            prefetch_batches: self.prefetch_batches.load(Ordering::Relaxed),
             ..EnginePerfCounters::default()
         }
+    }
+
+    #[cfg(test)]
+    fn spare_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().spares.len()).sum()
+    }
+
+    #[cfg(test)]
+    fn live_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().rows.len()).sum()
+    }
+
+    /// Advance every cached seed row to subsequence length `next_m` in
+    /// one bulk sweep (the ROADMAP "batch-level seed prefetch" item):
+    ///
+    /// 1. pull each advanceable row (`row.m < next_m`, still inside the
+    ///    next length's window range) out of its shard into a reusable
+    ///    work list — rows already at/past `next_m` stay put, rows that
+    ///    fall off the range are recycled;
+    /// 2. run the dot-product recurrence over the work list — fanned out
+    ///    through `pool` in [`PREFETCH_CHUNK`]-sized index chunks when
+    ///    one is supplied, inline otherwise — using the exact per-column
+    ///    operation order of the lazy advance in
+    ///    [`QtSeedCache::seed_into`], so prefetched rows are
+    ///    bit-identical to lazily advanced ones;
+    /// 3. reinsert the rows (dropping to the spare pools if a racing
+    ///    [`QtSeedCache::prepare`] rebound the cache mid-sweep).
+    ///
+    /// No-op unless the cache is currently bound to `t`.  Returns the
+    /// number of rows advanced and reinserted.
+    pub fn advance_all(&self, t: &[f64], next_m: usize, pool: Option<&RoundPool>) -> u64 {
+        if next_m == 0 || !self.is_bound(t) {
+            return 0;
+        }
+        let nwin_next = match t.len().checked_sub(next_m) {
+            Some(d) => d + 1,
+            None => return 0,
+        };
+        let epoch0 = self.epoch.load(Ordering::Acquire);
+        let ident = identity(t);
+        let mut work = self.sweep.lock().unwrap();
+        work.clear();
+        for shard in &self.shards {
+            let mut g = shard.lock().unwrap();
+            if self.epoch.load(Ordering::Acquire) != epoch0 || self.bound() != ident {
+                break; // racing prepare: stop collecting
+            }
+            let Shard { rows, spares } = &mut *g;
+            rows.retain(|&(a, cs), row| {
+                if row.m >= next_m {
+                    // Same-length retry reuse, or a restarted (shorter)
+                    // sweep whose stale rows the next miss rebuilds.
+                    return true;
+                }
+                let keep_cols = nwin_next.saturating_sub(cs).min(row.qt.len());
+                if a >= nwin_next || keep_cols == 0 {
+                    // Off the end of the next length's window range.
+                    if spares.len() < MAX_ROWS_PER_SHARD {
+                        spares.push(SeedRow { m: 0, qt: std::mem::take(&mut row.qt) });
+                    }
+                    return false;
+                }
+                row.qt.truncate(keep_cols);
+                work.push(SweepItem {
+                    a,
+                    cs,
+                    row: SeedRow { m: row.m, qt: std::mem::take(&mut row.qt) },
+                });
+                false
+            });
+        }
+
+        let n = work.len();
+        if n > 0 {
+            let advance_one =
+                |item: &mut SweepItem| advance_row(t, item.a, item.cs, &mut item.row, next_m);
+            match pool {
+                Some(pool) if n > 1 => {
+                    let slots = SliceWriter::new(&mut work[..]);
+                    pool.run_chunked(n, PREFETCH_CHUNK, |i| {
+                        // SAFETY: the round cursor hands out each index
+                        // exactly once, and `work` (held under the sweep
+                        // mutex) outlives the blocking round.
+                        advance_one(unsafe { slots.slot(i) });
+                    });
+                }
+                _ => work.iter_mut().for_each(advance_one),
+            }
+        }
+
+        // Reinsert with one lock acquisition per shard: group the work
+        // list by shard (in-place sort, no allocation) and drain each
+        // run under a single guard, re-reading the binding once per
+        // shard — the same freshness protocol as seed_into's insert.
+        work.sort_unstable_by_key(|it| shard_of((it.a, it.cs)));
+        let mut advanced = 0u64;
+        while !work.is_empty() {
+            let s = shard_of((work[0].a, work[0].cs));
+            let run = work.iter().take_while(|it| shard_of((it.a, it.cs)) == s).count();
+            let mut g = self.shards[s].lock().unwrap();
+            let fresh =
+                self.epoch.load(Ordering::Acquire) == epoch0 && self.bound() == ident;
+            for item in work.drain(..run) {
+                let key = (item.a, item.cs);
+                if fresh && (g.rows.len() < MAX_ROWS_PER_SHARD || g.rows.contains_key(&key)) {
+                    g.rows.insert(key, item.row);
+                    advanced += 1;
+                } else {
+                    g.recycle(item.row);
+                }
+            }
+        }
+        // Only sweeps that found rows to advance count as batches — a
+        // bound cache with nothing below `next_m` (e.g. the streaming
+        // monitor's fixed-length refreshes) must not skew the
+        // rows-per-batch metric with empty entries.
+        if n > 0 {
+            self.prefetched.fetch_add(advanced, Ordering::Relaxed);
+            self.prefetch_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        advanced
     }
 
     /// Produce the seed row `qt_out[j] = dot_m(a, cs + j)` for
     /// `j in 0..nb`, reusing / advancing the cached row for
     /// `(a, cs)` when possible.  `qt_out.len()` must equal `nb`.
-    pub(crate) fn seed_into(
+    pub fn seed_into(
         &self,
         t: &[f64],
         m: usize,
@@ -205,44 +483,39 @@ impl QtSeedCache {
         debug_assert_eq!(qt_out.len(), nb);
         let key = (a, cs);
         let ident = identity(t);
-        // Both critical sections verify the cache is still bound to
-        // *this* buffer: two PD3 runs on one shared engine with
-        // different (live, hence non-aliasing) series would otherwise
-        // race `prepare` and cross-pollinate rows mid-flight.  On a
-        // binding mismatch this call simply computes fresh products and
-        // leaves the cache alone.
-        let (taken, spare, bound_ok) = {
-            let mut g = self.inner.lock().unwrap();
-            if g.bound == ident {
+        let shard = &self.shards[shard_of(key)];
+        // Both critical sections re-read the binding under the shard
+        // lock: two PD3 runs on one shared engine with different (live,
+        // hence non-aliasing) series would otherwise race `prepare` and
+        // cross-pollinate rows mid-flight.  On a binding mismatch this
+        // call simply computes fresh products and leaves the cache alone.
+        let (taken, spare, epoch0, bound_ok) = {
+            let mut g = shard.lock().unwrap();
+            let epoch0 = self.epoch.load(Ordering::Acquire);
+            if self.bound() == ident {
                 let taken = g.rows.remove(&key);
                 let spare = if taken.is_none() { g.spares.pop() } else { None };
-                (taken, spare, true)
+                (taken, spare, epoch0, true)
             } else {
-                (None, None, false)
+                (None, None, epoch0, false)
             }
         };
         let row = match taken {
-            // Same length: verbatim reuse (MERLIN's r-retries).
+            // Same length: verbatim reuse (MERLIN's r-retries, and every
+            // post-prefetch tile of a swept length).
             Some(mut row) if row.m == m && row.qt.len() >= nb => {
                 row.qt.truncate(nb);
                 qt_out.copy_from_slice(&row.qt);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(row)
             }
-            // Shorter cached length: advance each product with one
-            // multiply-add per step (the dot-product recurrence).  The
-            // window count only shrinks as m grows, so `nb` here is
+            // Shorter cached length: advance via the shared recurrence
+            // ([`advance_row`] — the same code the bulk sweep runs).
+            // The window count only shrinks as m grows, so `nb` here is
             // never larger than the cached row.
             Some(mut row) if row.m < m && row.qt.len() >= nb => {
                 row.qt.truncate(nb);
-                for k in row.m..m {
-                    let ta = t[a + k];
-                    let tb = &t[cs + k..cs + k + nb];
-                    for (q, &b) in row.qt.iter_mut().zip(tb) {
-                        *q += ta * b;
-                    }
-                }
-                row.m = m;
+                advance_row(t, a, cs, &mut row, m);
                 qt_out.copy_from_slice(&row.qt);
                 self.advances.fetch_add(1, Ordering::Relaxed);
                 Some(row)
@@ -272,9 +545,16 @@ impl QtSeedCache {
             }
         };
         if let Some(row) = row {
-            let mut g = self.inner.lock().unwrap();
-            if g.bound == ident && (g.rows.len() < MAX_CACHED_ROWS || g.rows.contains_key(&key)) {
+            let mut g = shard.lock().unwrap();
+            let fresh =
+                self.epoch.load(Ordering::Acquire) == epoch0 && self.bound() == ident;
+            if fresh && (g.rows.len() < MAX_ROWS_PER_SHARD || g.rows.contains_key(&key)) {
                 g.rows.insert(key, row);
+            } else {
+                // The binding moved while we computed (or the shard is
+                // full): the products may belong to a retired series —
+                // keep only the allocation.
+                g.recycle(row);
             }
         }
     }
@@ -376,6 +656,151 @@ mod tests {
         let c = cache.counters();
         assert_eq!(c.seed_hits, 0, "every rebind must invalidate: {c:?}");
         assert_eq!(c.seed_misses, 8);
+    }
+
+    #[test]
+    fn concurrent_rebinds_never_serve_stale_products() {
+        // Stress regression for the eviction-window race: prepare()
+        // retires the binding to the sentinel before bumping the epoch
+        // and evicting, so a seed_into racing a rebind can neither trust
+        // a mid-eviction binding nor slip a stale-series row past the
+        // reinsert epoch check.  Every returned row must match the
+        // caller's own series, always.
+        use std::sync::atomic::AtomicBool;
+        let t1 = series(300);
+        let t2: Vec<f64> = t1.iter().map(|v| v * -1.25 + 3.0).collect();
+        let cache = QtSeedCache::new();
+        let stop = AtomicBool::new(false);
+        let (cache_ref, stop_ref) = (&cache, &stop);
+        std::thread::scope(|scope| {
+            for t in [&t1, &t2] {
+                scope.spawn(move || {
+                    let want = fresh_seed(t, 10, 2, 50, 32);
+                    let mut buf = vec![0.0; 32];
+                    while !stop_ref.load(Ordering::Relaxed) {
+                        cache_ref.prepare(t);
+                        cache_ref.seed_into(t, 10, 2, 50, 32, &mut buf);
+                        assert_eq!(buf, want, "stale products for another series");
+                    }
+                });
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            stop.store(true, Ordering::Relaxed);
+        });
+    }
+
+    #[test]
+    fn clear_recycles_rows_into_spares() {
+        let t = series(400);
+        let cache = QtSeedCache::new();
+        cache.prepare(&t);
+        let mut buf = vec![0.0; 32];
+        for k in 0..6 {
+            cache.seed_into(&t, 16, k * 3, 100 + k * 40, 32, &mut buf);
+        }
+        assert_eq!(cache.live_rows(), 6);
+        assert_eq!(cache.spare_rows(), 0);
+        cache.clear();
+        assert_eq!(cache.live_rows(), 0);
+        assert_eq!(cache.spare_rows(), 6, "clear must recycle, not drop");
+        // Re-seeding pops the spares back into service and stays exact.
+        cache.seed_into(&t, 16, 0, 100, 32, &mut buf);
+        assert_eq!(buf, fresh_seed(&t, 16, 0, 100, 32));
+        assert_eq!(cache.spare_rows(), 5);
+    }
+
+    #[test]
+    fn advance_all_matches_lazy_advance_bit_exact() {
+        let t = series(500);
+        let lazy = QtSeedCache::new();
+        let bulk = QtSeedCache::new();
+        lazy.prepare(&t);
+        bulk.prepare(&t);
+        let keys = [(0usize, 60usize), (7, 130), (31, 222), (64, 300)];
+        let nb = 48;
+        let mut buf = vec![0.0; nb];
+        for &(a, cs) in &keys {
+            lazy.seed_into(&t, 10, a, cs, nb, &mut buf);
+            bulk.seed_into(&t, 10, a, cs, nb, &mut buf);
+        }
+        // Walk both caches 10 -> 14, the bulk one through the sweep.
+        for next_m in 11..=14 {
+            assert_eq!(bulk.advance_all(&t, next_m, None), keys.len() as u64);
+            for &(a, cs) in &keys {
+                let mut l = vec![0.0; nb];
+                let mut b = vec![0.0; nb];
+                lazy.seed_into(&t, next_m, a, cs, nb, &mut l);
+                bulk.seed_into(&t, next_m, a, cs, nb, &mut b);
+                assert_eq!(l, b, "prefetched row differs at m={next_m} key=({a},{cs})");
+            }
+        }
+        let (cl, cb) = (lazy.counters(), bulk.counters());
+        assert_eq!(cl.seed_misses, cb.seed_misses, "prefetch must not add misses");
+        assert_eq!(cb.seed_advances, 0, "prefetch subsumes the lazy advances");
+        assert_eq!(cb.seed_prefetched, 4 * keys.len() as u64);
+        assert_eq!(cb.prefetch_batches, 4);
+        assert_eq!(cl.seed_advances, 4 * keys.len() as u64);
+    }
+
+    #[test]
+    fn advance_all_parallel_matches_serial() {
+        let t = series(2000);
+        let serial = QtSeedCache::new();
+        let parallel = QtSeedCache::new();
+        serial.prepare(&t);
+        parallel.prepare(&t);
+        let nb = 64;
+        let mut buf = vec![0.0; nb];
+        let keys: Vec<(usize, usize)> =
+            (0..60).map(|k| (k * 17 % 900, 900 + (k * 13) % 900)).collect();
+        for &(a, cs) in &keys {
+            serial.seed_into(&t, 20, a, cs, nb, &mut buf);
+            parallel.seed_into(&t, 20, a, cs, nb, &mut buf);
+        }
+        let pool = RoundPool::new(3);
+        assert_eq!(serial.advance_all(&t, 25, None), keys.len() as u64);
+        assert_eq!(parallel.advance_all(&t, 25, Some(&pool)), keys.len() as u64);
+        for &(a, cs) in &keys {
+            let mut s = vec![0.0; nb];
+            let mut p = vec![0.0; nb];
+            serial.seed_into(&t, 25, a, cs, nb, &mut s);
+            parallel.seed_into(&t, 25, a, cs, nb, &mut p);
+            assert_eq!(s, p, "pool fan-out changed a row at key ({a},{cs})");
+        }
+    }
+
+    #[test]
+    fn advance_all_unbound_is_noop() {
+        let t1 = series(200);
+        let t2 = series(201);
+        let cache = QtSeedCache::new();
+        cache.prepare(&t1);
+        let mut buf = vec![0.0; 16];
+        cache.seed_into(&t1, 8, 0, 50, 16, &mut buf);
+        assert_eq!(cache.advance_all(&t2, 9, None), 0, "unbound series must not sweep");
+        assert_eq!(cache.counters().prefetch_batches, 0);
+        // The t1 row is untouched and still hits at its own length.
+        cache.seed_into(&t1, 8, 0, 50, 16, &mut buf);
+        assert_eq!(cache.counters().seed_hits, 1);
+    }
+
+    #[test]
+    fn advance_all_recycles_rows_past_the_window_range() {
+        // With n = 100 and next_m = 21 there are 80 windows (0..=79); a
+        // row keyed at cs = 79 keeps one column, one keyed at the last
+        // m=20 row index (a = 80) falls off the range.
+        let t = series(100);
+        let cache = QtSeedCache::new();
+        cache.prepare(&t);
+        let mut buf = vec![0.0; 1];
+        cache.seed_into(&t, 20, 0, 79, 1, &mut buf);
+        cache.seed_into(&t, 20, 80, 0, 1, &mut buf);
+        assert_eq!(cache.advance_all(&t, 21, None), 1, "only the in-range row advances");
+        assert_eq!(cache.live_rows(), 1);
+        assert_eq!(cache.spare_rows(), 1, "the out-of-range row is recycled");
+        cache.seed_into(&t, 21, 0, 79, 1, &mut buf);
+        assert_eq!(buf, fresh_seed(&t, 21, 0, 79, 1));
+        assert_eq!(cache.counters().seed_hits, 1);
     }
 
     #[test]

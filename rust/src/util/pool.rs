@@ -355,6 +355,25 @@ impl RoundPool {
             panic!("RoundPool worker panicked during round");
         }
     }
+
+    /// Like [`RoundPool::run`], but workers claim `chunk` consecutive
+    /// indices per cursor bump instead of one: `f` is still called once
+    /// per index in `0..n`, each index by exactly one thread.  The right
+    /// shape for rounds of many tiny items (e.g. the seed-prefetch row
+    /// sweep: one multiply-add pass over a few hundred columns per item),
+    /// where a per-item atomic claim would rival the item's work.
+    pub fn run_chunked<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let chunk = chunk.max(1);
+        self.run(n.div_ceil(chunk), |c| {
+            let lo = c * chunk;
+            for i in lo..(lo + chunk).min(n) {
+                f(i);
+            }
+        });
+    }
 }
 
 fn run_item(shared: &RoundShared, job: &(dyn Fn(usize) + Sync), i: usize) {
@@ -509,6 +528,20 @@ mod tests {
         });
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, (i as u64).wrapping_mul(3) + 1);
+        }
+    }
+
+    #[test]
+    fn round_pool_chunked_covers_every_index_once() {
+        let pool = RoundPool::new(3);
+        for (n, chunk) in [(0usize, 4usize), (1, 4), (7, 3), (1000, 8), (1000, 1), (5, 100)] {
+            let mut out = vec![0u8; n];
+            let slots = SliceWriter::new(&mut out);
+            pool.run_chunked(n, chunk, |i| {
+                // SAFETY: chunked cursor hands out each index exactly once.
+                unsafe { *slots.slot(i) += 1 };
+            });
+            assert!(out.iter().all(|&c| c == 1), "n={n} chunk={chunk}: {out:?}");
         }
     }
 

@@ -135,6 +135,50 @@ fn steady_state_tile_loop_is_allocation_free() {
 }
 
 #[test]
+fn seed_prefetch_and_clear_recycle_are_allocation_free() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let t = random_walk(2048, 23);
+    let (m_lo, m_hi) = (32usize, 33usize);
+    let segn = 64;
+    let stats_lo = RollingStats::compute(&t, m_lo);
+    let stats_hi = RollingStats::compute(&t, m_hi);
+    let engine = NativeEngine::new(NativeConfig { segn, threads: 4, ..Default::default() });
+    // Distinct keys well inside both lengths' window ranges (no prefetch
+    // drop-offs, no same-batch key races).
+    let tasks: Vec<TileTask> = (0..8)
+        .map(|k| TileTask { seg_start: (k % 4) * segn, chunk_start: 4 * segn + (k / 4) * segn })
+        .collect();
+    let mut out: Vec<TileOutputs> = Vec::new();
+    // One pass = the length-loop shape: tiles at m_lo (cold: misses;
+    // warm: recompute into recycled rows), bulk prefetch to m_hi, tiles
+    // at m_hi (pure hits from prefetched rows), then a memory-pressure
+    // clear + another m_hi batch that must rebuild entirely from the
+    // spare pool.  The prefetch sweep's work list, the shard maps, and
+    // every seed row ratchet to their high-water marks during warmup and
+    // are recycled afterwards.
+    let mut pass = |engine: &NativeEngine, out: &mut Vec<TileOutputs>| {
+        let view_lo = SeriesView { t: &t, stats: &stats_lo };
+        engine.compute_tiles_into(&view_lo, 9.0, &tasks, out).unwrap();
+        assert_eq!(engine.prefetch_length(&t, m_hi), tasks.len() as u64);
+        let view_hi = SeriesView { t: &t, stats: &stats_hi };
+        engine.compute_tiles_into(&view_hi, 9.0, &tasks, out).unwrap();
+        engine.clear_seed_cache();
+        engine.compute_tiles_into(&view_hi, 9.0, &tasks, out).unwrap();
+    };
+    for _ in 0..3 {
+        pass(&engine, &mut out);
+    }
+    assert_reaches_alloc_free_steady_state("seed prefetch + clear loop", 5, || {
+        pass(&engine, &mut out);
+    });
+    // Sanity: the passes really exercised the bulk path and the cache.
+    let c = engine.perf_counters();
+    assert!(c.seed_prefetched >= 4 * tasks.len() as u64, "{c:?}");
+    assert!(c.prefetch_batches >= 4, "{c:?}");
+    assert!(c.seed_hits > 0 && c.seed_misses > 0, "{c:?}");
+}
+
+#[test]
 fn merlin_retry_loop_is_allocation_free() {
     let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
     let t = random_walk(2048, 5);

@@ -486,6 +486,107 @@ fn prop_scratch_tile_kernel_matches_oracle() {
     });
 }
 
+/// The bulk seed-prefetch sweep is invisible to results: an engine that
+/// prefetches between lengths (`Engine::prefetch_length`) produces
+/// bit-identical tile outputs to one that advances its seed rows lazily
+/// per tile, across a full `min_l..=max_l` sweep *including a mid-sweep
+/// series re-bind*, and both stay within the oracle tolerance of fresh
+/// (cache-less) evaluation.  Prefetch must also never change the miss
+/// count — it only converts lazy advances into bulk ones.
+#[test]
+fn prop_bulk_prefetch_matches_lazy_sweep() {
+    use palmad::engines::{Engine, TileTask};
+    use palmad::runtime::types::TileOutputs;
+
+    check("seed-prefetch-sweep", Config { cases: 10, ..Default::default() }, |rng| {
+        let n = rng.int_in(200, 400);
+        let t1 = SeriesGen::Walk.generate(n, rng);
+        let t2 = SeriesGen::Walk.generate(n, rng);
+        let m0 = rng.int_in(5, 18);
+        let steps = rng.int_in(2, 6);
+        let rebind_at = rng.int_in(1, steps);
+        let segn = rng.int_in(8, 40);
+        let nwin_last = n - (m0 + steps) + 1;
+        let r2 = rng.range(0.5, 2.0 * m0 as f64);
+        let lazy = NativeEngine::with_segn(segn);
+        let bulk = NativeEngine::with_segn(segn);
+        // Distinct keys only: a duplicated key inside one concurrent
+        // batch legitimately races its own cache row, which would make
+        // hit/miss counts (and advance-vs-fresh rounding) scheduling-
+        // dependent on both engines.
+        let mut tasks = vec![TileTask { seg_start: 0, chunk_start: 0 }];
+        while tasks.len() < 4 {
+            let cand = TileTask {
+                seg_start: rng.below(nwin_last),
+                chunk_start: rng.below(nwin_last),
+            };
+            if !tasks.contains(&cand) {
+                tasks.push(cand);
+            }
+        }
+        let mut lbuf: Vec<TileOutputs> = Vec::new();
+        let mut bbuf: Vec<TileOutputs> = Vec::new();
+        for step in 0..=steps {
+            let m = m0 + step;
+            let t = if step >= rebind_at { &t2 } else { &t1 };
+            let stats = RollingStats::compute(t, m);
+            let view = SeriesView { t, stats: &stats };
+            lazy.prepare_series(&view);
+            bulk.prepare_series(&view);
+            lazy.compute_tiles_into(&view, r2, &tasks, &mut lbuf)
+                .map_err(|e| format!("{e}"))?;
+            bulk.compute_tiles_into(&view, r2, &tasks, &mut bbuf)
+                .map_err(|e| format!("{e}"))?;
+            for (k, (a, b)) in lbuf.iter().zip(&bbuf).enumerate() {
+                if a.row_min != b.row_min
+                    || a.col_min != b.col_min
+                    || a.row_kill != b.row_kill
+                    || a.col_kill != b.col_kill
+                {
+                    return Err(format!(
+                        "m={m} step={step} task {k}: prefetched engine diverged bit-wise"
+                    ));
+                }
+            }
+            for (k, task) in tasks.iter().enumerate() {
+                let fresh = palmad::engines::native::compute_tile(&view, segn, r2, *task);
+                for i in 0..segn {
+                    for (side, g, w) in [
+                        ("row", bbuf[k].row_min[i], fresh.row_min[i]),
+                        ("col", bbuf[k].col_min[i], fresh.col_min[i]),
+                    ] {
+                        if g.is_finite() != w.is_finite() {
+                            return Err(format!(
+                                "m={m} task {k} {side} {i}: finiteness {g} vs {w}"
+                            ));
+                        }
+                        if w.is_finite() && !close(g, w, 1e-6) {
+                            return Err(format!("m={m} task {k} {side} {i}: {g} vs {w}"));
+                        }
+                    }
+                }
+            }
+            if step < steps {
+                bulk.prefetch_length(t, m + 1);
+            }
+        }
+        let (cl, cb) = (lazy.perf_counters(), bulk.perf_counters());
+        if cl.seed_misses != cb.seed_misses {
+            return Err(format!(
+                "prefetch changed the miss count: lazy {} vs bulk {}",
+                cl.seed_misses, cb.seed_misses
+            ));
+        }
+        if cb.seed_prefetched == 0 {
+            return Err("sweep never prefetched a row".into());
+        }
+        if cb.seed_advances != 0 {
+            return Err(format!("bulk engine still advanced {} rows lazily", cb.seed_advances));
+        }
+        Ok(())
+    });
+}
+
 /// Rng sanity: uniform in range, below() in bounds (meta-test of the
 /// substrate the properties rely on).
 #[test]

@@ -3,27 +3,38 @@
 #
 #   scripts/ci.sh                # full gate
 #   scripts/ci.sh --fast         # skip the release build (debug tests only)
+#   scripts/ci.sh --clippy       # lint-only gate: fmt + clippy, then exit.
+#                                # Includes the scoped unwrap_used denies
+#                                # (src/analysis + src/core/windows.rs carry
+#                                # #![cfg_attr(not(test), deny(clippy::unwrap_used))]
+#                                # — user-facing analysis paths must not panic
+#                                # on NaN/degenerate input).
 #   scripts/ci.sh --bench-smoke  # additionally smoke-run the microbench
 #                                # (PALMAD_BENCH_QUICK=1; catches bench
-#                                # bitrot and regenerates BENCH_*.json)
+#                                # bitrot, regenerates BENCH_*.json, and
+#                                # asserts the seed-prefetch sweep counters
+#                                # are non-zero)
 #
 # The workspace is fully offline (vendored path deps), so no network is
 # needed.  `cargo fmt --check` and `cargo clippy -- -D warnings` keep the
 # legacy/new dual pipelines (TilePipeline::Legacy vs Scratch, drain vs
-# ring slide) warning-clean; no lint allowlist is needed at the moment —
-# add targeted `#[allow]`s in code rather than blanket flags here.
-# Benches are NOT timed here — see EXPERIMENTS.md §Perf / §Streaming for
-# the perf tracking flow (BENCH_*.json).
+# ring slide) warning-clean; path-scoped lints live as in-source
+# attributes (clippy cannot scope lints per path from the CLI) — add
+# targeted `#[allow]`s in code rather than blanket flags here.
+# Benches are NOT timed here — see EXPERIMENTS.md §Perf / §Streaming /
+# §Prefetch for the perf tracking flow (BENCH_*.json).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 FAST=0
 BENCH_SMOKE=0
+CLIPPY_ONLY=0
 for arg in "$@"; do
   case "$arg" in
     --fast) FAST=1 ;;
     --bench-smoke) BENCH_SMOKE=1 ;;
+    --clippy) CLIPPY_ONLY=1 ;;
     *) echo "unknown flag: $arg" >&2; exit 2 ;;
   esac
 done
@@ -33,6 +44,11 @@ cargo fmt --all --check
 
 echo "== cargo clippy (-D warnings) =="
 cargo clippy --workspace --all-targets -- -D warnings
+
+if [ "$CLIPPY_ONLY" -eq 1 ]; then
+  echo "CI lint gate passed."
+  exit 0
+fi
 
 if [ "$FAST" -eq 0 ]; then
   echo "== cargo build --release =="
@@ -45,6 +61,17 @@ cargo test -q
 if [ "$BENCH_SMOKE" -eq 1 ]; then
   echo "== microbench smoke (PALMAD_BENCH_QUICK=1) =="
   PALMAD_BENCH_QUICK=1 cargo bench --bench microbench
+  # The bulk seed-prefetch sweep must actually run: a zero or missing
+  # counter in the artifact means the path silently degraded to lazy
+  # per-row advances.
+  # `|| true`: a missing key must reach the diagnostic below, not let
+  # pipefail+set -e kill the script silently at this assignment.
+  rows=$(grep -o '"prefetched_rows":[0-9]*' BENCH_native_tile.json | head -n1 | cut -d: -f2 || true)
+  if [ -z "${rows:-}" ] || [ "$rows" -eq 0 ]; then
+    echo "bench smoke: prefetched_rows missing or zero in BENCH_native_tile.json" >&2
+    exit 1
+  fi
+  echo "bench smoke: seed_prefetch advanced $rows rows"
 fi
 
 echo "CI gate passed."
