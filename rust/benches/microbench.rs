@@ -20,10 +20,11 @@ use palmad::coordinator::streaming::{StreamConfig, StreamMonitor};
 use palmad::core::distance::{dot, ed2_early_abandon, znorm};
 use palmad::core::stats::RollingStats;
 use palmad::engines::native::{
-    compute_tile, compute_tile_alloc, NativeConfig, NativeEngine, TilePipeline,
+    compute_tile, compute_tile_alloc, compute_tile_with_kernel, NativeConfig, NativeEngine,
+    TilePipeline,
 };
 use palmad::engines::scratch::QtSeedCache;
-use palmad::engines::{Engine, SeriesView, TileTask};
+use palmad::engines::{Engine, SeriesView, TileKernel, TileTask, LANES};
 use palmad::gen::random_walk::random_walk;
 use palmad::util::json::Json;
 use palmad::util::pool::{self, RoundPool};
@@ -115,6 +116,44 @@ fn main() {
         vec![
             ("mcells_per_s".into(), format!("{:.1}", cells / s_scratch.median / 1e6)),
             ("speedup_vs_legacy".into(), format!("{:.2}", s_legacy.median / s_scratch.median)),
+        ],
+    );
+
+    // Explicit SIMD kernel vs the scalar oracle on the same tile: the
+    // before/after of the lane-chunked inner loop (EXPERIMENTS.md
+    // §SIMD).  Same scratch pipeline, same seedless entry point — the
+    // only variable is the TileKernel dispatch.
+    let s_k_scalar = measure(1, default_reps(), || {
+        std::hint::black_box(compute_tile_with_kernel(
+            &view,
+            segn,
+            1.0,
+            task,
+            TileKernel::Scalar,
+        ));
+    });
+    bench.record(
+        "native_tile_kernel_scalar",
+        "per-column scalar inner loop",
+        s_k_scalar,
+        vec![("mcells_per_s".into(), format!("{:.1}", cells / s_k_scalar.median / 1e6))],
+    );
+    let s_k_lanes = measure(1, default_reps(), || {
+        std::hint::black_box(compute_tile_with_kernel(
+            &view,
+            segn,
+            1.0,
+            task,
+            TileKernel::Lanes4,
+        ));
+    });
+    bench.record(
+        "native_tile_kernel_lanes4",
+        format!("LANES={LANES} chunked inner loop"),
+        s_k_lanes,
+        vec![
+            ("mcells_per_s".into(), format!("{:.1}", cells / s_k_lanes.median / 1e6)),
+            ("speedup_vs_scalar".into(), format!("{:.2}", s_k_scalar.median / s_k_lanes.median)),
         ],
     );
 
@@ -211,6 +250,22 @@ fn main() {
                     .set("lazy", summary_json(&s_pf_lazy).set("net_s", pf_lazy_net))
                     .set("bulk", summary_json(&s_pf_bulk).set("net_s", pf_bulk_net))
                     .set("speedup_net", pf_lazy_net / pf_bulk_net),
+            )
+            .set(
+                "simd_kernel",
+                Json::obj()
+                    .set("lanes", LANES)
+                    .set(
+                        "scalar",
+                        summary_json(&s_k_scalar)
+                            .set("mcells_per_s", cells / s_k_scalar.median / 1e6),
+                    )
+                    .set(
+                        "lanes4",
+                        summary_json(&s_k_lanes)
+                            .set("mcells_per_s", cells / s_k_lanes.median / 1e6),
+                    )
+                    .set("speedup", s_k_scalar.median / s_k_lanes.median),
             ),
     );
 

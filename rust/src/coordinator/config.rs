@@ -5,7 +5,7 @@ use anyhow::Result;
 
 use crate::engines::native::{NativeConfig, NativeEngine};
 use crate::engines::xla::XlaEngine;
-use crate::engines::Engine;
+use crate::engines::{Engine, TileKernel};
 use crate::runtime::artifact::ArtifactSet;
 use crate::util::pool;
 
@@ -37,6 +37,9 @@ pub struct EngineOptions {
     pub segn: usize,
     /// Native-engine worker threads.
     pub threads: usize,
+    /// Native tile kernel (`--kernel` / `PALMAD_TILE_KERNEL`); the XLA
+    /// engine has its own compiled kernel and ignores this.
+    pub kernel: TileKernel,
     /// Artifact directory override (`None` = `$PALMAD_ARTIFACTS` or ./artifacts).
     pub artifacts_dir: Option<std::path::PathBuf>,
 }
@@ -47,6 +50,7 @@ impl Default for EngineOptions {
             choice: EngineChoice::Native,
             segn: 256,
             threads: pool::default_threads(),
+            kernel: TileKernel::from_env(),
             artifacts_dir: None,
         }
     }
@@ -58,6 +62,7 @@ pub fn build_engine(opts: &EngineOptions) -> Result<Box<dyn Engine>> {
         EngineChoice::Native => Ok(Box::new(NativeEngine::new(NativeConfig {
             segn: opts.segn,
             threads: opts.threads,
+            kernel: opts.kernel,
             ..Default::default()
         }))),
         EngineChoice::Xla => {
@@ -80,6 +85,24 @@ mod tests {
         assert_eq!(EngineChoice::parse("native").unwrap(), EngineChoice::Native);
         assert_eq!(EngineChoice::parse("xla").unwrap(), EngineChoice::Xla);
         assert!(EngineChoice::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn parse_kernels() {
+        assert_eq!(TileKernel::parse("scalar").unwrap(), TileKernel::Scalar);
+        assert_eq!(TileKernel::parse("lanes4").unwrap(), TileKernel::Lanes4);
+        assert!(TileKernel::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn kernel_threads_through_to_native_engine() {
+        // Both kernels build; selection is observable only through the
+        // conformance counters (outputs are bit-identical by design), so
+        // here we just pin that construction accepts each.
+        for kernel in [TileKernel::Scalar, TileKernel::Lanes4] {
+            let e = build_engine(&EngineOptions { kernel, ..Default::default() }).unwrap();
+            assert_eq!(e.name(), "native");
+        }
     }
 
     #[test]

@@ -78,7 +78,7 @@ impl std::fmt::Display for MerlinMetrics {
             f,
             "drag_calls={} retries={} discords={} tiles={} skipped={} ({:.1}% early-stop) \
              seeds(hit/adv/miss)={}/{}/{} prefetch(rows/batches)={}/{} \
-             ws(resets/grows)={}/{} \
+             kernel(sat/flat)={}/{} ws(resets/grows)={}/{} \
              select={:.3}s refine={:.3}s stats={:.3}s prefetch={:.3}s total={:.3}s",
             self.drag_calls,
             self.retries,
@@ -91,6 +91,8 @@ impl std::fmt::Display for MerlinMetrics {
             self.seed.seed_misses,
             self.seed.seed_prefetched,
             self.seed.prefetch_batches,
+            self.seed.clamp_saturations,
+            self.seed.flat_cells,
             self.workspace.resets,
             self.workspace.grows,
             self.drag.select_time.as_secs_f64(),
@@ -126,5 +128,6 @@ mod tests {
         let m = MerlinMetrics { drag_calls: 3, ..Default::default() };
         let s = format!("{m}");
         assert!(s.contains("drag_calls=3"));
+        assert!(s.contains("kernel(sat/flat)="), "kernel decision gauges missing: {s}");
     }
 }

@@ -15,6 +15,13 @@
 
 use super::stats::SIGMA_FLOOR;
 
+/// Lane width of the explicit multi-lane tile kernel
+/// (`TileKernel::Lanes4`): columns are processed in fixed `[f64; LANES]`
+/// chunks with a scalar tail.  f64x4 is one AVX2 register; widening to
+/// AVX-512 (LANES = 8) is a mechanical change once `cargo asm` confirms
+/// the codegen (ROADMAP / EXPERIMENTS.md §SIMD).
+pub const LANES: usize = 4;
+
 /// Relative threshold for treating a window as constant ("flat"):
 /// `sigma <= FLAT_EPS * max(|mu|, 1)` (see [`is_flat`]).
 ///
@@ -134,8 +141,64 @@ pub fn ed2norm_from_qt(qt: f64, m: usize, mu_a: f64, sig_a: f64, mu_b: f64, sig_
         return if flat_a && flat_b { 0.0 } else { 2.0 * mf };
     }
     let corr = (qt - mf * mu_a * mu_b) / (mf * sig_a * sig_b);
-    let corr = corr.clamp(-1.0, 1.0);
-    2.0 * mf * (1.0 - corr)
+    corr_to_ed2(corr, 2.0 * mf)
+}
+
+/// Clamped Eq. 6 correlation → squared distance: `two_m * (1 - clamp(corr))`.
+///
+/// The single definition of the clamp both tile kernels share — keeping
+/// it here (rather than inlined per kernel) is what makes "same clamp
+/// decisions" a structural property instead of a testing hope.  NaN
+/// passes through (`clamp(NaN) = NaN`), so a NaN-contaminated column
+/// yields a NaN distance, which every downstream fold ignores (`min`
+/// keeps the other operand, `d < r2` is false).
+#[inline]
+pub fn corr_to_ed2(corr: f64, two_m: f64) -> f64 {
+    two_m * (1.0 - corr.clamp(-1.0, 1.0))
+}
+
+/// Did the Eq. 6 correlation leave `[-1, 1]` — i.e. will
+/// [`corr_to_ed2`]'s clamp bite?  NaN reports `false` (the clamp
+/// propagates it rather than saturating).  Both tile kernels count this
+/// per fast-path column into `EnginePerfCounters::clamp_saturations`;
+/// equal counts across kernels certify equal clamp decisions.
+#[inline]
+pub fn corr_saturates(corr: f64) -> bool {
+    corr > 1.0 || corr < -1.0
+}
+
+/// One `LANES`-wide chunk of the tile kernel's fast distance path:
+/// `dist[l] = two_m * (1 - clamp((qt[l] - mmu_b[l]*mu_a) *
+/// (inv_msig_b[l]*inv_sig_a)))`, all lanes independent and branchless.
+/// Returns the number of saturated (clamped) lanes.
+///
+/// Per-element operation order is identical to the scalar loop, so the
+/// lane kernel's outputs are bit-identical to the scalar oracle (Rust
+/// never contracts float ops into FMAs; pinned by
+/// `rust/tests/kernel_conformance.rs`).  Fixed-size array refs give the
+/// autovectorizer exact extents — no in-loop bounds checks.
+#[inline]
+pub fn ed2_lane_chunk(
+    qt: &[f64; LANES],
+    mmu_b: &[f64; LANES],
+    inv_msig_b: &[f64; LANES],
+    mu_a: f64,
+    inv_sig_a: f64,
+    two_m: f64,
+    dist: &mut [f64; LANES],
+) -> u64 {
+    let mut corr = [0.0f64; LANES];
+    for l in 0..LANES {
+        corr[l] = (qt[l] - mmu_b[l] * mu_a) * (inv_msig_b[l] * inv_sig_a);
+    }
+    let mut sat = 0u64;
+    for &c in &corr {
+        sat += corr_saturates(c) as u64;
+    }
+    for l in 0..LANES {
+        dist[l] = corr_to_ed2(corr[l], two_m);
+    }
+    sat
 }
 
 /// Dot product of two raw windows.
@@ -273,5 +336,58 @@ mod tests {
         // Force corr slightly above 1 via rounding-sized perturbation.
         let d = ed2norm_from_qt(16.0000001, 16, 0.0, 1.0, 0.0, 1.0);
         assert!(d >= 0.0);
+    }
+
+    #[test]
+    fn corr_saturation_predicate_matches_clamp() {
+        for (corr, sat) in [
+            (0.5, false),
+            (1.0, false),
+            (-1.0, false),
+            (1.0 + 1e-12, true),
+            (-1.5, true),
+            (f64::INFINITY, true),
+            (f64::NEG_INFINITY, true),
+            (f64::NAN, false),
+        ] {
+            assert_eq!(corr_saturates(corr), sat, "corr={corr}");
+            let d = corr_to_ed2(corr, 8.0);
+            if corr.is_nan() {
+                assert!(d.is_nan(), "NaN must propagate, got {d}");
+            } else {
+                // Saturation iff the clamp changed the value.
+                let clamped = corr.clamp(-1.0, 1.0);
+                assert_eq!(sat, clamped != corr);
+                assert!((0.0..=16.0).contains(&d), "corr={corr}: d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_chunk_is_bit_identical_to_scalar_ops() {
+        let mut rng = Rng::seed(11);
+        for case in 0..50 {
+            let qt: [f64; LANES] = std::array::from_fn(|_| rng.normal() * 40.0);
+            let mmu_b: [f64; LANES] = std::array::from_fn(|_| rng.normal() * 3.0);
+            let inv_msig_b: [f64; LANES] = std::array::from_fn(|_| rng.range(0.01, 2.0));
+            let (mu_a, inv_sig_a) = (rng.normal(), rng.range(0.05, 3.0));
+            let two_m = 2.0 * rng.int_in(4, 64) as f64;
+            let mut lane = [0.0f64; LANES];
+            let got_sat =
+                ed2_lane_chunk(&qt, &mmu_b, &inv_msig_b, mu_a, inv_sig_a, two_m, &mut lane);
+            let mut want_sat = 0u64;
+            for l in 0..LANES {
+                let corr = (qt[l] - mmu_b[l] * mu_a) * (inv_msig_b[l] * inv_sig_a);
+                want_sat += corr_saturates(corr) as u64;
+                let want = corr_to_ed2(corr, two_m);
+                assert_eq!(
+                    lane[l].to_bits(),
+                    want.to_bits(),
+                    "case {case} lane {l}: {} vs {want}",
+                    lane[l]
+                );
+            }
+            assert_eq!(got_sat, want_sat, "case {case}");
+        }
     }
 }

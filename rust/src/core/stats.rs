@@ -17,8 +17,53 @@
 //! (stuck-sensor) windows produce finite distances — required by the
 //! PolyTER case study (§5) and matching matrix-profile practice.
 
+use super::distance::{is_flat, LANES};
+
 /// Floor applied to every sigma.  Must equal `python/compile/shapes.py::SIGMA_FLOOR`.
 pub const SIGMA_FLOOR: f64 = 1e-8;
+
+/// Per-column stat products of the tile kernel's fast distance path:
+/// `mmu_b[j] = m * mu[j]`, `inv_msig_b[j] = 1 / (m * sig[j])`; returns
+/// whether any column is flat (which routes the whole tile through the
+/// general Eq. 6 path).  `mu`/`sig` are the chunk's window stats
+/// (`stats.mu[cs..cs+nb]`).
+///
+/// Chunked over [`LANES`] columns with a scalar tail, but every lane
+/// performs the exact scalar operation sequence — elementwise maps are
+/// bit-identical under any chunking, so both tile kernels share this
+/// one implementation (one more place where "same decisions" is
+/// structural, not tested-for).
+pub fn stat_products_into(
+    mu: &[f64],
+    sig: &[f64],
+    mf: f64,
+    mmu_b: &mut [f64],
+    inv_msig_b: &mut [f64],
+) -> bool {
+    let nb = mu.len();
+    debug_assert!(sig.len() == nb && mmu_b.len() == nb && inv_msig_b.len() == nb);
+    let mut flat = [false; LANES];
+    let chunks = nb / LANES;
+    for c in 0..chunks {
+        let j = c * LANES;
+        for l in 0..LANES {
+            mmu_b[j + l] = mf * mu[j + l];
+        }
+        for l in 0..LANES {
+            inv_msig_b[j + l] = 1.0 / (mf * sig[j + l]);
+        }
+        for l in 0..LANES {
+            flat[l] |= is_flat(sig[j + l], mu[j + l]);
+        }
+    }
+    let mut any_flat = flat.iter().any(|&f| f);
+    for j in chunks * LANES..nb {
+        mmu_b[j] = mf * mu[j];
+        inv_msig_b[j] = 1.0 / (mf * sig[j]);
+        any_flat |= is_flat(sig[j], mu[j]);
+    }
+    any_flat
+}
 
 /// Mean/std vectors for all `m`-length windows of one series.
 ///
@@ -236,6 +281,31 @@ mod tests {
         s.advance(&t);
         assert_eq!(s.len(), 46);
         assert_eq!(s.m, 5);
+    }
+
+    #[test]
+    fn stat_products_match_direct_loop_any_width() {
+        let mut rng = Rng::seed(29);
+        // Widths off the lane grid: tail-only, tail + chunks, exact.
+        for nb in [0usize, 1, 2, 3, 4, 5, 7, 8, 11, 16, 33] {
+            let mu: Vec<f64> = (0..nb).map(|_| rng.normal() * 5.0).collect();
+            let mut sig: Vec<f64> = (0..nb).map(|_| rng.range(0.01, 4.0)).collect();
+            if nb > 2 {
+                sig[nb / 2] = SIGMA_FLOOR; // a flat column
+            }
+            let mf = 16.0;
+            let mut mmu = vec![0.0; nb];
+            let mut inv = vec![0.0; nb];
+            let any_flat = stat_products_into(&mu, &sig, mf, &mut mmu, &mut inv);
+            let mut want_flat = false;
+            for j in 0..nb {
+                assert_eq!(mmu[j].to_bits(), (mf * mu[j]).to_bits(), "nb={nb} j={j}");
+                assert_eq!(inv[j].to_bits(), (1.0 / (mf * sig[j])).to_bits(), "nb={nb} j={j}");
+                want_flat |= is_flat(sig[j], mu[j]);
+            }
+            assert_eq!(any_flat, want_flat, "nb={nb}");
+            assert_eq!(any_flat, nb > 2, "nb={nb}: planted flat column must be seen");
+        }
     }
 
     #[test]

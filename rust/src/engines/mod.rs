@@ -22,6 +22,53 @@ use anyhow::Result;
 use crate::core::stats::RollingStats;
 use crate::runtime::types::TileOutputs;
 
+pub use crate::core::distance::LANES;
+
+/// Inner-loop kernel of the native tile pipeline.
+///
+/// Both kernels are bit-identical by construction: every pass is either
+/// an elementwise map (distances, QT recurrence, column folds — chunking
+/// cannot change per-element rounding, and Rust never contracts float
+/// ops into FMAs) or a reduction whose operator is insensitive to lane
+/// regrouping over these inputs (`min` with `+inf` identities and
+/// NaN-dropping semantics, boolean OR).  The differential harness in
+/// `rust/tests/kernel_conformance.rs` pins that claim, so `Scalar` stays
+/// available as the bit-level oracle and the bench baseline while
+/// `Lanes4` is what production configs run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TileKernel {
+    /// Per-column scalar loops — the oracle and the `simd_kernel` bench
+    /// baseline.
+    Scalar,
+    /// Explicit [`LANES`]-wide chunks of `[f64; LANES]` accumulators
+    /// (branchless, fixed-extent array refs for the vectorizer) with a
+    /// scalar tail for widths off the lane grid.
+    #[default]
+    Lanes4,
+}
+
+impl TileKernel {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "scalar" => Ok(Self::Scalar),
+            "lanes4" => Ok(Self::Lanes4),
+            other => anyhow::bail!("unknown tile kernel {other:?} (scalar|lanes4)"),
+        }
+    }
+
+    /// `PALMAD_TILE_KERNEL` override, else the default.  This is the
+    /// hook `scripts/ci.sh --kernel-matrix` uses to run the whole
+    /// conformance + allocation suite under each kernel without code
+    /// changes; an unparseable value panics rather than silently testing
+    /// the default kernel twice.
+    pub fn from_env() -> Self {
+        match std::env::var("PALMAD_TILE_KERNEL") {
+            Ok(s) => Self::parse(&s).expect("PALMAD_TILE_KERNEL must be `scalar` or `lanes4`"),
+            Err(_) => Self::default(),
+        }
+    }
+}
+
 /// One (segment, chunk) pair to evaluate at the current length `m`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TileTask {
@@ -70,6 +117,18 @@ pub struct EnginePerfCounters {
     pub batches: u64,
     /// Tiles evaluated across those batches.
     pub batch_tiles: u64,
+    /// Fast-path columns whose Eq. 6 correlation left `[-1, 1]` and was
+    /// clamped.  Deterministic for a given workload and — because both
+    /// kernels share one clamp definition — identical across
+    /// [`TileKernel`]s; the conformance suite compares it directly to
+    /// certify equal clamp decisions.  Zero on the legacy pipeline
+    /// (which predates the counter) and on cache-less engines.
+    pub clamp_saturations: u64,
+    /// Columns evaluated through the flat-window (general Eq. 6) path —
+    /// rows where the segment window or any chunk column is flat.  Both
+    /// kernels route these through one shared scalar implementation, so
+    /// the count is kernel-invariant by construction.
+    pub flat_cells: u64,
 }
 
 impl EnginePerfCounters {
@@ -83,6 +142,8 @@ impl EnginePerfCounters {
             prefetch_batches: self.prefetch_batches.saturating_sub(earlier.prefetch_batches),
             batches: self.batches.saturating_sub(earlier.batches),
             batch_tiles: self.batch_tiles.saturating_sub(earlier.batch_tiles),
+            clamp_saturations: self.clamp_saturations.saturating_sub(earlier.clamp_saturations),
+            flat_cells: self.flat_cells.saturating_sub(earlier.flat_cells),
         }
     }
 

@@ -21,8 +21,10 @@
 //!   extended to the dot-product layer;
 //! - the inner distance loop is a set of branchless SoA passes over
 //!   contiguous scratch (distances, exclusion mask, min-folds, kill
-//!   masks), which autovectorizes; the old fused per-cell closure did
-//!   not.
+//!   masks), dispatched on [`TileKernel`]: `Lanes4` (default) runs
+//!   explicit `[f64; LANES]` chunks so vectorization is pinned by
+//!   construction, `Scalar` keeps the per-column loops as the bit-level
+//!   oracle; the old fused per-cell closure vectorized not at all.
 //!
 //! The pre-optimization pipeline is preserved as
 //! [`TilePipeline::Legacy`] / [`compute_tile_alloc`] so the microbench
@@ -33,9 +35,13 @@ use std::sync::OnceLock;
 
 use anyhow::Result;
 
-use super::scratch::{with_tile_scratch, QtSeedCache, TileScratch};
-use super::{Engine, EnginePerfCounters, SeriesView, TileTask};
+use super::scratch::{
+    col_folds, distance_row, general_distance_row, qt_recurrence_row, row_folds,
+    with_tile_scratch, QtSeedCache, TileKernelStats, TileScratch,
+};
+use super::{Engine, EnginePerfCounters, SeriesView, TileKernel, TileTask};
 use crate::core::distance::{dot, ed2norm_from_qt, is_flat};
+use crate::core::stats::stat_products_into;
 use crate::runtime::types::TileOutputs;
 use crate::util::pool::{self, RoundPool, SliceWriter};
 
@@ -60,6 +66,11 @@ pub struct NativeConfig {
     pub threads: usize,
     /// Pipeline selection (benches flip this; default [`TilePipeline::Scratch`]).
     pub pipeline: TilePipeline,
+    /// Inner-loop kernel of the scratch pipeline (the legacy pipeline
+    /// predates the kernel split and ignores this).  Default:
+    /// `PALMAD_TILE_KERNEL` env override, else [`TileKernel::Lanes4`] —
+    /// the env hook is what `scripts/ci.sh --kernel-matrix` flips.
+    pub kernel: TileKernel,
 }
 
 impl Default for NativeConfig {
@@ -68,6 +79,7 @@ impl Default for NativeConfig {
             segn: 256,
             threads: pool::default_threads(),
             pipeline: TilePipeline::default(),
+            kernel: TileKernel::from_env(),
         }
     }
 }
@@ -83,6 +95,10 @@ pub struct NativeEngine {
     /// Batch-submission volume (reported via `perf_counters`).
     batches: AtomicU64,
     batch_tiles: AtomicU64,
+    /// Kernel decision gauges (scratch pipeline only): fast-path clamp
+    /// saturations and flat-routed columns, flushed once per tile.
+    clamp_saturations: AtomicU64,
+    flat_cells: AtomicU64,
 }
 
 impl NativeEngine {
@@ -94,6 +110,8 @@ impl NativeEngine {
             seeds: QtSeedCache::new(),
             batches: AtomicU64::new(0),
             batch_tiles: AtomicU64::new(0),
+            clamp_saturations: AtomicU64::new(0),
+            flat_cells: AtomicU64::new(0),
         }
     }
 
@@ -104,6 +122,18 @@ impl NativeEngine {
     fn pool(&self) -> &RoundPool {
         self.round_pool
             .get_or_init(|| RoundPool::new(self.cfg.threads.saturating_sub(1)))
+    }
+
+    /// Fold one tile's kernel event counts into the engine gauges.  The
+    /// zero check keeps quiet workloads (no saturation, no flat windows
+    /// — the common case) off the shared cache lines entirely.
+    fn note_kernel_stats(&self, ks: TileKernelStats) {
+        if ks.saturated != 0 {
+            self.clamp_saturations.fetch_add(ks.saturated, Ordering::Relaxed);
+        }
+        if ks.flat_cells != 0 {
+            self.flat_cells.fetch_add(ks.flat_cells, Ordering::Relaxed);
+        }
     }
 
     /// Retire every cached QT seed row into the cache's spare pools
@@ -174,12 +204,14 @@ impl Engine for NativeEngine {
         if out.len() < tasks.len() {
             out.resize_with(tasks.len(), || TileOutputs::sized(segn));
         }
+        let kernel = self.cfg.kernel;
         let threads = self.cfg.threads.max(1).min(tasks.len().max(1));
         if threads <= 1 || tasks.len() <= 1 {
             for (task, o) in tasks.iter().zip(out.iter_mut()) {
-                with_tile_scratch(|s| {
-                    compute_tile_into(view, segn, r2, *task, s, Some(&self.seeds), o)
+                let ks = with_tile_scratch(|s| {
+                    compute_tile_into(view, segn, r2, *task, kernel, s, Some(&self.seeds), o)
                 });
+                self.note_kernel_stats(ks);
             }
             return Ok(());
         }
@@ -189,9 +221,10 @@ impl Engine for NativeEngine {
             // SAFETY: the round cursor hands out each index exactly
             // once, and `out` outlives the (blocking) round.
             let o = unsafe { slots.slot(i) };
-            with_tile_scratch(|s| {
-                compute_tile_into(view, segn, r2, tasks[i], s, Some(seeds), o)
+            let ks = with_tile_scratch(|s| {
+                compute_tile_into(view, segn, r2, tasks[i], kernel, s, Some(seeds), o)
             });
+            self.note_kernel_stats(ks);
         });
         Ok(())
     }
@@ -224,6 +257,8 @@ impl Engine for NativeEngine {
         let mut c = self.seeds.counters();
         c.batches = self.batches.load(Ordering::Relaxed);
         c.batch_tiles = self.batch_tiles.load(Ordering::Relaxed);
+        c.clamp_saturations = self.clamp_saturations.load(Ordering::Relaxed);
+        c.flat_cells = self.flat_cells.load(Ordering::Relaxed);
         c
     }
 }
@@ -235,16 +270,21 @@ impl Engine for NativeEngine {
 /// never kill.  With `seeds: None` the first row's QT products are
 /// computed fresh (bit-identical to [`compute_tile_alloc`]); with a cache
 /// they are reused/advanced across lengths (equal within the oracle
-/// tolerance — the recurrence rounds differently).
+/// tolerance — the recurrence rounds differently).  The per-row SoA
+/// passes live in [`super::scratch`] and dispatch on `kernel`; both
+/// kernels produce bit-identical outputs (see [`TileKernel`]).  Returns
+/// the tile's kernel event counts for the engine gauges.
+#[allow(clippy::too_many_arguments)] // the tile pipeline's full context
 pub(crate) fn compute_tile_into(
     view: &SeriesView<'_>,
     segn: usize,
     r2: f64,
     task: TileTask,
+    kernel: TileKernel,
     scratch: &mut TileScratch,
     seeds: Option<&QtSeedCache>,
     out: &mut TileOutputs,
-) {
+) -> TileKernelStats {
     let m = view.stats.m;
     let t = view.t;
     let nwin = view.n_windows();
@@ -252,9 +292,10 @@ pub(crate) fn compute_tile_into(
     let na = segn.min(nwin.saturating_sub(ss));
     let nb = segn.min(nwin.saturating_sub(cs));
 
+    let mut kstats = TileKernelStats::default();
     out.reset(segn);
     if na == 0 || nb == 0 {
-        return;
+        return kstats;
     }
     scratch.ensure(segn);
     let TileScratch { mmu_b, inv_msig_b, qt, qt_prev, dist } = scratch;
@@ -266,13 +307,13 @@ pub(crate) fn compute_tile_into(
     // dist = 2m - 2m * clamp((qt - (m*mu_b)*mu_a) * (1/(m*sig_b)) / sig_a).
     let mf = m as f64;
     let two_m = 2.0 * mf;
-    let mut any_flat = false;
-    for j in 0..nb {
-        let b = cs + j;
-        mmu_b[j] = mf * mu[b];
-        inv_msig_b[j] = 1.0 / (mf * sig[b]);
-        any_flat |= is_flat(sig[b], mu[b]);
-    }
+    let any_flat = stat_products_into(
+        &mu[cs..cs + nb],
+        &sig[cs..cs + nb],
+        mf,
+        &mut mmu_b[..nb],
+        &mut inv_msig_b[..nb],
+    );
 
     for i in 0..na {
         let a = ss + i;
@@ -299,71 +340,74 @@ pub(crate) fn compute_tile_into(
                 }
             }
         } else {
-            // Diagonal recurrence (Eq. 10): O(1) per cell, branch-free,
-            // vectorizable (kept as its own pass — fusing it with the
-            // distance loop measured slower; EXPERIMENTS.md §Perf).
-            let head = t[a - 1];
-            let tail = t[a + m - 1];
-            qt[0] = dot(&t[a..a + m], &t[cs..cs + m]);
-            for j in 1..nb {
-                let b = cs + j;
-                qt[j] = qt_prev[j - 1] + tail * t[b + m - 1] - head * t[b - 1];
-            }
+            // Diagonal recurrence (Eq. 10): O(1) per cell, branch-free
+            // (kept as its own pass — fusing it with the distance loop
+            // measured slower; EXPERIMENTS.md §Perf).
+            qt_recurrence_row(kernel, t, m, a, cs, &qt_prev[..nb], &mut qt[..nb]);
         }
 
         // Pass 1 — distances into contiguous scratch, branchless.  The
         // excluded interval is computed too (cheaper than branching) and
-        // masked right after, so the loop autovectorizes cleanly.
+        // masked right after.
         if !general {
-            for j in 0..nb {
-                let corr = (qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a);
-                dist[j] = two_m * (1.0 - corr.clamp(-1.0, 1.0));
-            }
+            kstats.saturated += distance_row(
+                kernel,
+                &qt[..nb],
+                &mmu_b[..nb],
+                &inv_msig_b[..nb],
+                mu_a,
+                inv_sig_a,
+                two_m,
+                &mut dist[..nb],
+            );
         } else {
-            // Flat-window path: full Eq. 6 semantics per cell.
-            for j in 0..nb {
-                let b = cs + j;
-                dist[j] = ed2norm_from_qt(qt[j], m, mu_a, sig_a, mu[b], sig[b]);
-            }
+            // Flat-window path: full Eq. 6 semantics per cell, one
+            // shared implementation for both kernels.
+            kstats.flat_cells += nb as u64;
+            general_distance_row(&qt[..nb], m, mu_a, sig_a, mu, sig, cs, &mut dist[..nb]);
         }
         for d in &mut dist[jlo..jhi] {
             *d = f64::INFINITY;
         }
 
         // Pass 2 — row folds (min + kill-any) over the distance row.
-        let mut rmin = f64::INFINITY;
-        for &d in &dist[..nb] {
-            rmin = rmin.min(d);
-        }
-        let mut rkill = false;
-        for &d in &dist[..nb] {
-            rkill |= d < r2;
-        }
+        let (rmin, rkill) = row_folds(kernel, &dist[..nb], r2);
         out.row_min[i] = rmin;
         out.row_kill[i] = rkill;
 
         // Pass 3 — column folds (elementwise min + kill mask).
-        for (c, &d) in out.col_min[..nb].iter_mut().zip(&dist[..nb]) {
-            if d < *c {
-                *c = d;
-            }
-        }
-        for (k, &d) in out.col_kill[..nb].iter_mut().zip(&dist[..nb]) {
-            *k |= d < r2;
-        }
+        col_folds(kernel, &dist[..nb], r2, &mut out.col_min[..nb], &mut out.col_kill[..nb]);
 
         std::mem::swap(qt, qt_prev);
     }
+    kstats
 }
 
-/// Evaluate one (segment, chunk) tile, allocating a fresh output block.
+/// Evaluate one (segment, chunk) tile, allocating a fresh output block,
+/// with the default kernel.
 ///
 /// Uses this thread's scratch arena and no seed cache — deterministic and
 /// bit-identical to the engine's cold-cache batch path; the oracle entry
 /// point for tests and benches.
 pub fn compute_tile(view: &SeriesView<'_>, segn: usize, r2: f64, task: TileTask) -> TileOutputs {
+    compute_tile_with_kernel(view, segn, r2, task, TileKernel::default())
+}
+
+/// [`compute_tile`] with an explicit kernel — the entry point the
+/// differential conformance harness and the `simd_kernel` microbench
+/// drive (kernels are bit-identical, so which one [`compute_tile`]
+/// defaults to is a performance choice, not a semantic one).
+pub fn compute_tile_with_kernel(
+    view: &SeriesView<'_>,
+    segn: usize,
+    r2: f64,
+    task: TileTask,
+    kernel: TileKernel,
+) -> TileOutputs {
     let mut out = TileOutputs::sized(segn);
-    with_tile_scratch(|scratch| compute_tile_into(view, segn, r2, task, scratch, None, &mut out));
+    with_tile_scratch(|scratch| {
+        compute_tile_into(view, segn, r2, task, kernel, scratch, None, &mut out);
+    });
     out
 }
 
@@ -820,6 +864,51 @@ mod tests {
             assert_eq!(got[k].col_min, want.col_min, "task {k}");
             assert_eq!(got[k].col_kill, want.col_kill, "task {k}");
         }
+    }
+
+    #[test]
+    fn kernels_agree_bitwise_and_count_identically() {
+        // Off-grid tile edge (33 % LANES != 0) plus a stuck-sensor
+        // plateau, so the lane tail loop AND the shared flat path are
+        // both on the hot path; threads > 1 exercises the per-tile
+        // counter flush through the pool.
+        let mut t = random_walk(700, 17);
+        for v in &mut t[300..420] {
+            *v = 7.5;
+        }
+        let m = 24;
+        let stats = RollingStats::compute(&t, m);
+        let view = SeriesView { t: &t, stats: &stats };
+        let nwin = view.n_windows();
+        let mk = |kernel| {
+            NativeEngine::new(NativeConfig { segn: 33, threads: 4, kernel, ..Default::default() })
+        };
+        let scalar = mk(TileKernel::Scalar);
+        let lanes = mk(TileKernel::Lanes4);
+        let mut tasks: Vec<TileTask> = (0..8)
+            .map(|k| TileTask { seg_start: 33 * (k % 4) + 250, chunk_start: 33 * k })
+            .collect();
+        // Tail tiles: a single-column chunk and a single-row segment.
+        tasks.push(TileTask { seg_start: 0, chunk_start: nwin - 1 });
+        tasks.push(TileTask { seg_start: nwin - 1, chunk_start: 100 });
+        scalar.prepare_series(&view);
+        lanes.prepare_series(&view);
+        let a = scalar.compute_tiles(&view, 6.0, &tasks).unwrap();
+        let b = lanes.compute_tiles(&view, 6.0, &tasks).unwrap();
+        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+            let bits = |v: &[f64]| v.iter().map(|d| d.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&x.row_min), bits(&y.row_min), "task {k} row_min");
+            assert_eq!(bits(&x.col_min), bits(&y.col_min), "task {k} col_min");
+            assert_eq!(x.row_kill, y.row_kill, "task {k} row_kill");
+            assert_eq!(x.col_kill, y.col_kill, "task {k} col_kill");
+        }
+        let (ca, cb) = (scalar.perf_counters(), lanes.perf_counters());
+        assert_eq!(
+            ca.clamp_saturations, cb.clamp_saturations,
+            "kernels took different clamp decisions"
+        );
+        assert_eq!(ca.flat_cells, cb.flat_cells, "kernels routed the flat path differently");
+        assert!(ca.flat_cells > 0, "plateau rows must be counted through the flat path");
     }
 
     #[test]

@@ -1,12 +1,29 @@
-//! Per-worker scratch arena and the cross-length QT seed cache — the
-//! allocation-free substrate of the native tile pipeline.
+//! Per-worker scratch arena, the SoA tile-kernel row passes, and the
+//! cross-length QT seed cache — the allocation-free substrate of the
+//! native tile pipeline.
 //!
 //! **Scratch arena.**  One [`TileScratch`] per worker thread holds every
 //! intermediate buffer a tile evaluation needs (per-column stat products,
 //! the two QT diagonal rows, the SoA distance row).  Buffers are sized
-//! once per tile edge and reused for every subsequent tile, so the
-//! steady-state inner loop performs zero heap allocations (verified by
-//! the counting-allocator integration test).
+//! once per tile edge — rounded up to a [`LANES`] multiple so lane
+//! chunks never meet a short row — and reused for every subsequent tile,
+//! so the steady-state inner loop performs zero heap allocations
+//! (verified by the counting-allocator integration test).
+//!
+//! **Tile-kernel row passes.**  The SoA inner loop lives here as four
+//! explicit per-row passes ([`qt_recurrence_row`], [`distance_row`] /
+//! [`general_distance_row`], [`row_folds`], [`col_folds`]), each
+//! dispatched on [`TileKernel`]: `Scalar` keeps the pre-refactor
+//! per-column loops verbatim (the bit-level oracle), `Lanes4` processes
+//! columns in fixed `[f64; LANES]` chunks with explicit accumulators and
+//! a scalar tail — vectorization pinned down by construction instead of
+//! autovectorizer hope.  Every lane performs the exact scalar operation
+//! sequence and the only reductions (`min`, OR) are regroup-insensitive
+//! here, so the two kernels are bit-identical (differentially tested by
+//! `rust/tests/kernel_conformance.rs`).  The flat-window general path is
+//! one shared scalar implementation, so clamp/flat decisions cannot
+//! diverge; both kernels count them ([`TileKernelStats`]) into
+//! `EnginePerfCounters` as the observable certificate.
 //!
 //! **QT seed cache.**  The paper eliminates cross-length redundancy for
 //! the rolling statistics (Eqs. 7/8); this cache extends the same idea to
@@ -58,14 +75,17 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use super::EnginePerfCounters;
-use crate::core::distance::dot;
+use super::{EnginePerfCounters, TileKernel};
+use crate::core::distance::{
+    corr_saturates, corr_to_ed2, dot, ed2_lane_chunk, ed2norm_from_qt, LANES,
+};
 use crate::util::pool::{RoundPool, SliceWriter};
 
 /// Reusable per-worker buffers for one tile evaluation.
 ///
-/// All vectors are kept at the engine's tile edge (`segn`) and only the
-/// `[..nb]` prefix of each is meaningful during a given tile.
+/// All vectors are kept at the engine's tile edge (`segn`), rounded up
+/// to a [`LANES`] multiple so a lane chunk can never touch a short row;
+/// only the `[..nb]` prefix of each is meaningful during a given tile.
 #[derive(Debug, Default)]
 pub struct TileScratch {
     /// `m * mu[b]` per column (fast-path distance transform).
@@ -85,16 +105,272 @@ impl TileScratch {
         Self::default()
     }
 
-    /// Grow every buffer to tile edge `segn` (no-op once warmed).
+    /// Grow every buffer to tile edge `segn`, lane-aligned (no-op once
+    /// warmed).  The rounding to a [`LANES`] multiple guarantees the
+    /// tail of every row stays in-bounds for a full `[f64; LANES]` load
+    /// even if a future kernel revision replaces the scalar tail loop
+    /// with a masked/overlapping full chunk.
     pub(crate) fn ensure(&mut self, segn: usize) {
-        if self.qt.len() < segn {
-            self.mmu_b.resize(segn, 0.0);
-            self.inv_msig_b.resize(segn, 0.0);
-            self.qt.resize(segn, 0.0);
-            self.qt_prev.resize(segn, 0.0);
-            self.dist.resize(segn, 0.0);
+        let cap = segn.next_multiple_of(LANES);
+        if self.qt.len() < cap {
+            self.mmu_b.resize(cap, 0.0);
+            self.inv_msig_b.resize(cap, 0.0);
+            self.qt.resize(cap, 0.0);
+            self.qt_prev.resize(cap, 0.0);
+            self.dist.resize(cap, 0.0);
         }
     }
+}
+
+/// Per-tile kernel event counts, accumulated locally during one tile
+/// evaluation and flushed into the engine's atomics once per tile (two
+/// relaxed adds — the hot loop itself touches no shared state).
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct TileKernelStats {
+    /// Fast-path columns whose correlation saturated the clamp.
+    pub saturated: u64,
+    /// Columns evaluated through the shared flat-window general path.
+    pub flat_cells: u64,
+}
+
+/// Eq. 10 diagonal-recurrence row fill:
+/// `qt[j] = qt_prev[j-1] + tail * t[cs+j+m-1] - head * t[cs+j-1]` for
+/// `j >= 1`, with `qt[0]` re-seeded by a direct dot product.  `qt` and
+/// `qt_prev` are the `[..nb]` prefixes of the scratch rows.
+///
+/// Elementwise given `qt_prev`, so the lane chunking is bit-identical to
+/// the scalar loop.
+#[inline]
+pub(crate) fn qt_recurrence_row(
+    kernel: TileKernel,
+    t: &[f64],
+    m: usize,
+    a: usize,
+    cs: usize,
+    qt_prev: &[f64],
+    qt: &mut [f64],
+) {
+    let nb = qt.len();
+    debug_assert!(nb >= 1 && qt_prev.len() == nb);
+    let head = t[a - 1];
+    let tail = t[a + m - 1];
+    qt[0] = dot(&t[a..a + m], &t[cs..cs + m]);
+    match kernel {
+        TileKernel::Scalar => {
+            for j in 1..nb {
+                let b = cs + j;
+                qt[j] = qt_prev[j - 1] + tail * t[b + m - 1] - head * t[b - 1];
+            }
+        }
+        TileKernel::Lanes4 => {
+            let mut j = 1;
+            while j + LANES <= nb {
+                let p: &[f64; LANES] = t_chunk(&qt_prev[j - 1..], "qt_prev");
+                let tt: &[f64; LANES] = t_chunk(&t[cs + j + m - 1..], "t tail");
+                let th: &[f64; LANES] = t_chunk(&t[cs + j - 1..], "t head");
+                let q: &mut [f64; LANES] = t_chunk_mut(&mut qt[j..]);
+                for l in 0..LANES {
+                    q[l] = p[l] + tail * tt[l] - head * th[l];
+                }
+                j += LANES;
+            }
+            for j in j..nb {
+                let b = cs + j;
+                qt[j] = qt_prev[j - 1] + tail * t[b + m - 1] - head * t[b - 1];
+            }
+        }
+    }
+}
+
+/// Fast-path distance row (Eq. 6 with precomputed column products):
+/// `dist[j] = two_m * (1 - clamp((qt[j] - mmu_b[j]*mu_a) *
+/// (inv_msig_b[j]*inv_sig_a)))`.  Returns the number of saturated
+/// (clamped) columns — the clamp-decision gauge both kernels must agree
+/// on.  All slices are the `[..nb]` prefixes.
+#[inline]
+#[allow(clippy::too_many_arguments)] // one row's full operand set
+pub(crate) fn distance_row(
+    kernel: TileKernel,
+    qt: &[f64],
+    mmu_b: &[f64],
+    inv_msig_b: &[f64],
+    mu_a: f64,
+    inv_sig_a: f64,
+    two_m: f64,
+    dist: &mut [f64],
+) -> u64 {
+    let nb = dist.len();
+    debug_assert!(qt.len() == nb && mmu_b.len() == nb && inv_msig_b.len() == nb);
+    let mut sat = 0u64;
+    let tail_from = match kernel {
+        TileKernel::Scalar => 0,
+        TileKernel::Lanes4 => {
+            let chunks = nb / LANES;
+            for c in 0..chunks {
+                let j = c * LANES;
+                sat += ed2_lane_chunk(
+                    t_chunk(&qt[j..], "qt"),
+                    t_chunk(&mmu_b[j..], "mmu_b"),
+                    t_chunk(&inv_msig_b[j..], "inv_msig_b"),
+                    mu_a,
+                    inv_sig_a,
+                    two_m,
+                    t_chunk_mut(&mut dist[j..]),
+                );
+            }
+            chunks * LANES
+        }
+    };
+    for j in tail_from..nb {
+        let corr = (qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a);
+        sat += corr_saturates(corr) as u64;
+        dist[j] = corr_to_ed2(corr, two_m);
+    }
+    sat
+}
+
+/// Flat-window (general Eq. 6) distance row — deliberately **shared
+/// verbatim** by both kernels, so flat-vs-fast routing and the clamp
+/// decisions inside [`ed2norm_from_qt`] are kernel-invariant by
+/// construction.  The flat path is rare (stuck-sensor plateaus,
+/// NaN-contaminated windows, which stat NaN mu and floored sigma and
+/// therefore classify flat); lane-chunking it would buy nothing.
+#[inline]
+#[allow(clippy::too_many_arguments)] // one row's full operand set
+pub(crate) fn general_distance_row(
+    qt: &[f64],
+    m: usize,
+    mu_a: f64,
+    sig_a: f64,
+    mu: &[f64],
+    sig: &[f64],
+    cs: usize,
+    dist: &mut [f64],
+) {
+    for (j, d) in dist.iter_mut().enumerate() {
+        let b = cs + j;
+        *d = ed2norm_from_qt(qt[j], m, mu_a, sig_a, mu[b], sig[b]);
+    }
+}
+
+/// Row folds over the distance row: `(min, any < r2)`.
+///
+/// The lane variant keeps [`LANES`] independent accumulators and
+/// combines them once; `min` over f64 distances is insensitive to that
+/// regrouping (the identity is `+inf`, NaNs are dropped by `min`'s
+/// IEEE minNum semantics, and `-0.0` cannot occur — distances are
+/// produced as `two_m * (1 - clamp)` or by the flat conventions, all
+/// `>= +0.0`), so both variants return bit-identical results.
+#[inline]
+pub(crate) fn row_folds(kernel: TileKernel, dist: &[f64], r2: f64) -> (f64, bool) {
+    match kernel {
+        TileKernel::Scalar => {
+            let mut rmin = f64::INFINITY;
+            for &d in dist {
+                rmin = rmin.min(d);
+            }
+            let mut rkill = false;
+            for &d in dist {
+                rkill |= d < r2;
+            }
+            (rmin, rkill)
+        }
+        TileKernel::Lanes4 => {
+            let mut minacc = [f64::INFINITY; LANES];
+            let mut killacc = [false; LANES];
+            let chunks = dist.len() / LANES;
+            for c in 0..chunks {
+                let j = c * LANES;
+                let dc: &[f64; LANES] = t_chunk(&dist[j..], "dist");
+                for l in 0..LANES {
+                    minacc[l] = minacc[l].min(dc[l]);
+                }
+                for l in 0..LANES {
+                    killacc[l] |= dc[l] < r2;
+                }
+            }
+            // Width-generic combine so an AVX-512 LANES bump cannot
+            // silently drop accumulators.
+            let mut rmin = f64::INFINITY;
+            for &v in &minacc {
+                rmin = rmin.min(v);
+            }
+            let mut rkill = killacc.iter().any(|&k| k);
+            for &d in &dist[chunks * LANES..] {
+                rmin = rmin.min(d);
+                rkill |= d < r2;
+            }
+            (rmin, rkill)
+        }
+    }
+}
+
+/// Column folds: elementwise `col_min[j] = min(col_min[j], dist[j])` and
+/// `col_kill[j] |= dist[j] < r2`.  Elementwise, hence bit-identical
+/// across kernels; the lane variant is branchless (`min` instead of the
+/// scalar oracle's compare-and-store, equivalent because `col_min` can
+/// never hold NaN — it starts at `+inf` and only adopts values that won
+/// a `<` comparison).
+#[inline]
+pub(crate) fn col_folds(
+    kernel: TileKernel,
+    dist: &[f64],
+    r2: f64,
+    col_min: &mut [f64],
+    col_kill: &mut [bool],
+) {
+    let nb = dist.len();
+    debug_assert!(col_min.len() == nb && col_kill.len() == nb);
+    match kernel {
+        TileKernel::Scalar => {
+            for (c, &d) in col_min.iter_mut().zip(dist) {
+                if d < *c {
+                    *c = d;
+                }
+            }
+            for (k, &d) in col_kill.iter_mut().zip(dist) {
+                *k |= d < r2;
+            }
+        }
+        TileKernel::Lanes4 => {
+            let chunks = nb / LANES;
+            for c in 0..chunks {
+                let j = c * LANES;
+                let dc: &[f64; LANES] = t_chunk(&dist[j..], "dist");
+                let cm: &mut [f64; LANES] = t_chunk_mut(&mut col_min[j..]);
+                for l in 0..LANES {
+                    cm[l] = cm[l].min(dc[l]);
+                }
+                let ck: &mut [bool; LANES] = bool_chunk_mut(&mut col_kill[j..]);
+                for l in 0..LANES {
+                    ck[l] |= dc[l] < r2;
+                }
+            }
+            for j in chunks * LANES..nb {
+                if dist[j] < col_min[j] {
+                    col_min[j] = dist[j];
+                }
+                col_kill[j] |= dist[j] < r2;
+            }
+        }
+    }
+}
+
+/// First [`LANES`] elements of `s` as a fixed-extent array ref (the
+/// compiler folds the length check into the chunk loop's bound).
+#[inline]
+fn t_chunk<'a>(s: &'a [f64], what: &str) -> &'a [f64; LANES] {
+    s[..LANES].try_into().unwrap_or_else(|_| panic!("short {what} lane chunk"))
+}
+
+#[inline]
+fn t_chunk_mut(s: &mut [f64]) -> &mut [f64; LANES] {
+    (&mut s[..LANES]).try_into().expect("short mutable lane chunk")
+}
+
+#[inline]
+fn bool_chunk_mut(s: &mut [bool]) -> &mut [bool; LANES] {
+    (&mut s[..LANES]).try_into().expect("short kill lane chunk")
 }
 
 thread_local! {
@@ -812,5 +1088,134 @@ mod tests {
         s.ensure(32);
         assert_eq!(s.qt.as_ptr(), p);
         assert_eq!(s.qt.len(), 64);
+    }
+
+    #[test]
+    fn scratch_rows_are_lane_aligned() {
+        // The satellite fix: an off-grid tile edge gets LANES-aligned
+        // rows, so a lane chunk ending at the row boundary stays
+        // in-bounds, and re-ensuring at the aligned size reuses storage.
+        let mut s = TileScratch::new();
+        s.ensure(33);
+        assert_eq!(s.qt.len(), 36);
+        assert_eq!(s.dist.len(), 36);
+        assert_eq!(s.mmu_b.len(), 36);
+        let p = s.qt.as_ptr();
+        s.ensure(36);
+        s.ensure(1);
+        assert_eq!(s.qt.as_ptr(), p, "aligned re-ensure must not reallocate");
+        assert_eq!(s.qt.len(), 36);
+    }
+
+    /// Deterministic-but-irregular row data for the kernel-pass tests.
+    fn row(n: usize, salt: u64) -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                let x = (i as u64).wrapping_mul(0x9E37_79B9).wrapping_add(salt) % 1009;
+                x as f64 * 0.37 - 180.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn distance_row_lanes_matches_scalar_and_counts_saturation() {
+        // Widths off the lane grid, plus synthetic products that force
+        // every clamp outcome: in-range, saturated high/low, and NaN.
+        for nb in [1usize, 2, 3, 4, 5, 7, 8, 11, 19] {
+            let mut qt = row(nb, 1);
+            let mmu_b = vec![0.0; nb];
+            let mut inv_msig_b = vec![0.25; nb];
+            // Column 0: corr = 4 * qt[0] -> saturate for |qt[0]| large.
+            qt[0] = 10.0; // corr 10 -> clamped to 1, dist 0
+            if nb > 2 {
+                qt[2] = -10.0; // clamped to -1, dist 4m
+            }
+            if nb > 4 {
+                qt[4] = f64::NAN; // NaN propagates, never counts
+                inv_msig_b[4] = 1.0;
+            }
+            let (mu_a, inv_sig_a, two_m) = (0.0, 4.0, 32.0);
+            let mut ds = vec![0.0; nb];
+            let mut dl = vec![0.0; nb];
+            let ss = distance_row(
+                TileKernel::Scalar, &qt, &mmu_b, &inv_msig_b, mu_a, inv_sig_a, two_m, &mut ds,
+            );
+            let sl = distance_row(
+                TileKernel::Lanes4, &qt, &mmu_b, &inv_msig_b, mu_a, inv_sig_a, two_m, &mut dl,
+            );
+            assert_eq!(ss, sl, "nb={nb}: saturation counts diverge");
+            let want_sat = (0..nb)
+                .filter(|&j| {
+                    corr_saturates((qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a))
+                })
+                .count() as u64;
+            assert_eq!(ss, want_sat, "nb={nb}");
+            assert!(ss >= 1 + (nb > 2) as u64, "nb={nb}: planted saturations missed");
+            for j in 0..nb {
+                assert_eq!(ds[j].to_bits(), dl[j].to_bits(), "nb={nb} j={j}: {} vs {}", ds[j], dl[j]);
+            }
+            assert_eq!(dl[0], 0.0, "clamped-high distance");
+            if nb > 2 {
+                assert_eq!(dl[2], 2.0 * two_m, "clamped-low distance");
+            }
+            if nb > 4 {
+                assert!(dl[4].is_nan(), "NaN column must propagate");
+            }
+        }
+    }
+
+    #[test]
+    fn folds_match_scalar_with_nan_inf_and_tail() {
+        for nb in [1usize, 3, 4, 6, 8, 13] {
+            let mut dist = row(nb, 7).iter().map(|x| x.abs()).collect::<Vec<_>>();
+            dist[0] = f64::INFINITY;
+            if nb > 1 {
+                dist[1] = f64::NAN;
+            }
+            if nb > 5 {
+                dist[5] = 0.0;
+            }
+            let r2 = 40.0;
+            let (ms, ks) = row_folds(TileKernel::Scalar, &dist, r2);
+            let (ml, kl) = row_folds(TileKernel::Lanes4, &dist, r2);
+            assert_eq!(ms.to_bits(), ml.to_bits(), "nb={nb}: row min {ms} vs {ml}");
+            assert_eq!(ks, kl, "nb={nb}: row kill");
+            assert!(!ml.is_nan(), "NaN must never survive a min fold");
+
+            let mut cm_s = vec![f64::INFINITY; nb];
+            let mut cm_l = vec![f64::INFINITY; nb];
+            let mut ck_s = vec![false; nb];
+            let mut ck_l = vec![false; nb];
+            // Two passes so the second folds into non-trivial state.
+            for pass in 0..2 {
+                let shifted: Vec<f64> =
+                    dist.iter().map(|d| d * (1.0 + pass as f64 * 0.5)).collect();
+                col_folds(TileKernel::Scalar, &shifted, r2, &mut cm_s, &mut ck_s);
+                col_folds(TileKernel::Lanes4, &shifted, r2, &mut cm_l, &mut ck_l);
+            }
+            for j in 0..nb {
+                assert_eq!(cm_s[j].to_bits(), cm_l[j].to_bits(), "nb={nb} col {j}");
+                assert_eq!(ck_s[j], ck_l[j], "nb={nb} col kill {j}");
+            }
+            if nb > 1 {
+                assert!(cm_l[1].is_infinite(), "NaN column must leave col_min untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn qt_recurrence_lanes_matches_scalar() {
+        let t = series(300);
+        let (m, a, cs) = (17, 40, 90);
+        for nb in [1usize, 2, 4, 5, 9, 32, 61] {
+            let prev = row(nb, 3);
+            let mut qs = vec![0.0; nb];
+            let mut ql = vec![0.0; nb];
+            qt_recurrence_row(TileKernel::Scalar, &t, m, a, cs, &prev, &mut qs);
+            qt_recurrence_row(TileKernel::Lanes4, &t, m, a, cs, &prev, &mut ql);
+            for j in 0..nb {
+                assert_eq!(qs[j].to_bits(), ql[j].to_bits(), "nb={nb} j={j}");
+            }
+        }
     }
 }

@@ -31,6 +31,7 @@ fn cli() -> Cli {
                 .opt("engine", "native", "tile engine: native | xla")
                 .opt("segn", "256", "tile edge (XLA: a compiled bucket)")
                 .opt("threads", "0", "native engine threads (0 = auto)")
+                .opt("kernel", "", "native tile kernel: lanes4 | scalar (default: $PALMAD_TILE_KERNEL or lanes4)")
                 .opt("stats", "native", "stats backend: native | aot | naive")
                 .opt("json", "", "write results as JSON to this path")
                 .switch("verbose", "debug logging"),
@@ -45,6 +46,7 @@ fn cli() -> Cli {
                 .opt("stride", "1", "length stride (speeds up wide ranges)")
                 .opt("engine", "native", "tile engine: native | xla")
                 .opt("segn", "256", "tile edge")
+                .opt("kernel", "", "native tile kernel: lanes4 | scalar")
                 .opt("top", "6", "interesting discords to report (Eq. 12)")
                 .opt("out", "heatmap.ppm", "output heatmap image (PPM)"),
         )
@@ -53,7 +55,8 @@ fn cli() -> Cli {
                 .opt("addr", "127.0.0.1:7700", "listen address")
                 .opt("workers", "2", "worker threads (one engine each)")
                 .opt("engine", "native", "tile engine: native | xla")
-                .opt("segn", "256", "tile edge"),
+                .opt("segn", "256", "tile edge")
+                .opt("kernel", "", "native tile kernel: lanes4 | scalar"),
         )
         .command(
             Command::new("generate", "write a synthetic dataset to a file")
@@ -91,6 +94,9 @@ fn engine_opts(args: &palmad::util::cli::Args) -> Result<EngineOptions> {
         if t > 0 {
             opts.threads = t;
         }
+    }
+    if let Some(k) = args.get_opt("kernel") {
+        opts.kernel = palmad::engines::TileKernel::parse(k)?;
     }
     Ok(opts)
 }

@@ -5,12 +5,19 @@
 //! blocks grown, coordinator workspace bound) each steady-state loop
 //! must perform **zero** heap allocations:
 //!
-//! 1. the native engine's raw tile-batch loop (PR 1),
+//! 1. the native engine's raw tile-batch loop (PR 1) — and the explicit
+//!    `TileKernel::Lanes4` variant at a tile edge off the lane grid,
+//!    where the scalar tail and the lane-aligned scratch rows are hot,
 //! 2. MERLIN's per-length adaptive-r retry loop over a hoisted
-//!    [`MerlinWorkspace`] (this PR's tentpole), and
+//!    [`MerlinWorkspace`], and
 //! 3. the streaming monitor's warm `push()` loop — **including** its
 //!    scheduled PD3 refreshes, which recycle the monitor's stats
 //!    buffer, workspace, and the engine's spare seed rows.
+//!
+//! `scripts/ci.sh --kernel-matrix` re-runs this whole file under
+//! `PALMAD_TILE_KERNEL=scalar` and `=lanes4` (the default-config engines
+//! above follow the env), so both kernels carry the zero-allocation
+//! guarantee.
 //!
 //! This file contains only these tests, serialized through one mutex so
 //! no concurrent test pollutes the shared counter.
@@ -25,7 +32,7 @@ use palmad::coordinator::streaming::{StreamConfig, StreamMonitor};
 use palmad::coordinator::workspace::MerlinWorkspace;
 use palmad::core::stats::RollingStats;
 use palmad::engines::native::{NativeConfig, NativeEngine};
-use palmad::engines::{Engine, SeriesView, TileTask};
+use palmad::engines::{Engine, SeriesView, TileKernel, TileTask};
 use palmad::runtime::types::TileOutputs;
 use palmad::util::rng::Rng;
 
@@ -130,6 +137,42 @@ fn steady_state_tile_loop_is_allocation_free() {
     });
 
     // Sanity: the measured rounds really computed tiles (not a no-op).
+    assert_eq!(out.len(), tasks.len());
+    assert!(out.iter().any(|o| o.row_min.iter().any(|d| d.is_finite())));
+}
+
+#[test]
+fn lane_kernel_tile_loop_is_allocation_free_at_unaligned_edge() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    // Explicit Lanes4 kernel at a tile edge off the lane grid (66 % 4 !=
+    // 0): the lane chunks, the scalar tail loop, and the LANES-aligned
+    // scratch rows are all on the measured path — the satellite claim is
+    // that lane alignment is a capacity rounding, not a per-tile
+    // allocation.
+    let t = random_walk(4096, 77);
+    let m = 48;
+    let segn = 66;
+    let stats = RollingStats::compute(&t, m);
+    let view = SeriesView { t: &t, stats: &stats };
+    let engine = NativeEngine::new(NativeConfig {
+        segn,
+        threads: 4,
+        kernel: TileKernel::Lanes4,
+        ..Default::default()
+    });
+    engine.prepare_series(&view);
+    let tasks: Vec<TileTask> = (0..16)
+        .map(|k| TileTask { seg_start: (k % 4) * segn, chunk_start: 8 * segn + (k / 4) * segn })
+        .collect();
+    let mut out: Vec<TileOutputs> = Vec::new();
+    for _ in 0..5 {
+        engine.compute_tiles_into(&view, 9.0, &tasks, &mut out).unwrap();
+    }
+    assert_reaches_alloc_free_steady_state("lane-kernel tile loop", 5, || {
+        for _ in 0..10 {
+            engine.compute_tiles_into(&view, 9.0, &tasks, &mut out).unwrap();
+        }
+    });
     assert_eq!(out.len(), tasks.len());
     assert!(out.iter().any(|o| o.row_min.iter().any(|d| d.is_finite())));
 }

@@ -350,9 +350,12 @@ fn prop_flat_plateaus_safe() {
 }
 
 /// Determinism: the same seed-built workload gives identical results
-/// across thread counts.
+/// across thread counts AND tile kernels (the kernels are bit-identical
+/// by construction, so a 1-thread scalar run and a 4-thread lane run
+/// must agree exactly).
 #[test]
 fn prop_thread_determinism() {
+    use palmad::engines::TileKernel;
     check("thread-determinism", Config { cases: 8, ..Default::default() }, |rng| {
         let t = SeriesGen::Walk.generate(400, rng);
         let m = 16;
@@ -360,10 +363,16 @@ fn prop_thread_determinism() {
         let stats = RollingStats::compute(&t, m);
         let view = SeriesView { t: &t, stats: &stats };
         let mut results = Vec::new();
-        for threads in [1usize, 4] {
+        for (threads, kernel) in [
+            (1usize, TileKernel::Scalar),
+            (4, TileKernel::Scalar),
+            (1, TileKernel::Lanes4),
+            (4, TileKernel::Lanes4),
+        ] {
             let engine = NativeEngine::new(palmad::engines::native::NativeConfig {
                 segn: 32,
                 threads,
+                kernel,
                 ..Default::default()
             });
             let mut metrics = DragMetrics::default();
@@ -372,12 +381,14 @@ fn prop_thread_determinism() {
             found.sort_by_key(|d| d.idx);
             results.push(found);
         }
-        if results[0].len() != results[1].len() {
-            return Err("different survivor counts across thread counts".into());
-        }
-        for (a, b) in results[0].iter().zip(&results[1]) {
-            if a.idx != b.idx || (a.nn_dist - b.nn_dist).abs() > 1e-12 {
-                return Err(format!("{a:?} vs {b:?}"));
+        for other in &results[1..] {
+            if results[0].len() != other.len() {
+                return Err("different survivor counts across threads/kernels".into());
+            }
+            for (a, b) in results[0].iter().zip(other) {
+                if a.idx != b.idx || (a.nn_dist - b.nn_dist).abs() > 1e-12 {
+                    return Err(format!("{a:?} vs {b:?}"));
+                }
             }
         }
         Ok(())
@@ -427,8 +438,17 @@ fn prop_scratch_tile_kernel_matches_oracle() {
         let segn = rng.int_in(8, 48);
         let nwin0 = n - m0 + 1;
         let r2 = rng.range(0.5, 2.0 * m0 as f64);
+        // Either tile kernel can be on duty — the oracle bound is
+        // kernel-independent (and the kernels themselves are bit-equal,
+        // pinned separately by the conformance suite).
+        let kernel = if rng.chance(0.5) {
+            palmad::engines::TileKernel::Scalar
+        } else {
+            palmad::engines::TileKernel::Lanes4
+        };
         let engine = NativeEngine::new(palmad::engines::native::NativeConfig {
             segn,
+            kernel,
             ..Default::default()
         });
         let mut tasks = vec![TileTask { seg_start: 0, chunk_start: 0 }]; // self tile

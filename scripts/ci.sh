@@ -13,7 +13,17 @@
 #                                # (PALMAD_BENCH_QUICK=1; catches bench
 #                                # bitrot, regenerates BENCH_*.json, and
 #                                # asserts the seed-prefetch sweep counters
-#                                # are non-zero)
+#                                # are non-zero and the simd_kernel
+#                                # before/after object is emitted)
+#   scripts/ci.sh --kernel-matrix
+#                                # additionally re-run the kernel
+#                                # conformance + allocation suites under
+#                                # BOTH tile kernels (PALMAD_TILE_KERNEL=
+#                                # scalar, then lanes4) — every engine
+#                                # built with default config follows the
+#                                # env, so the whole differential harness
+#                                # and the zero-allocation proofs gate
+#                                # each kernel.
 #
 # The workspace is fully offline (vendored path deps), so no network is
 # needed.  `cargo fmt --check` and `cargo clippy -- -D warnings` keep the
@@ -30,11 +40,13 @@ cd "$(dirname "$0")/.."
 FAST=0
 BENCH_SMOKE=0
 CLIPPY_ONLY=0
+KERNEL_MATRIX=0
 for arg in "$@"; do
   case "$arg" in
     --fast) FAST=1 ;;
     --bench-smoke) BENCH_SMOKE=1 ;;
     --clippy) CLIPPY_ONLY=1 ;;
+    --kernel-matrix) KERNEL_MATRIX=1 ;;
     *) echo "unknown flag: $arg" >&2; exit 2 ;;
   esac
 done
@@ -58,6 +70,17 @@ fi
 echo "== cargo test -q =="
 cargo test -q
 
+if [ "$KERNEL_MATRIX" -eq 1 ]; then
+  # The conformance + allocation suites under each tile kernel.  The
+  # env flips every default-config engine (NativeConfig::default reads
+  # PALMAD_TILE_KERNEL), while the conformance tests additionally pin
+  # explicit scalar-vs-lanes4 pairs regardless of the env.
+  for k in scalar lanes4; do
+    echo "== kernel matrix ($k): conformance + alloc steady state =="
+    PALMAD_TILE_KERNEL=$k cargo test -q --test kernel_conformance --test alloc_steady_state
+  done
+fi
+
 if [ "$BENCH_SMOKE" -eq 1 ]; then
   echo "== microbench smoke (PALMAD_BENCH_QUICK=1) =="
   PALMAD_BENCH_QUICK=1 cargo bench --bench microbench
@@ -72,6 +95,19 @@ if [ "$BENCH_SMOKE" -eq 1 ]; then
     exit 1
   fi
   echo "bench smoke: seed_prefetch advanced $rows rows"
+  # The lane-vs-scalar before/after must be in the artifact: a missing
+  # object means the kernel bench silently fell off the emit path.
+  if ! grep -q '"simd_kernel"' BENCH_native_tile.json; then
+    echo "bench smoke: simd_kernel object missing from BENCH_native_tile.json" >&2
+    exit 1
+  fi
+  # Any lane width is fine (the AVX-512 follow-up bumps it); only its
+  # absence means the object lost its shape.
+  if ! grep -q '"lanes":[0-9]' BENCH_native_tile.json; then
+    echo "bench smoke: simd_kernel lane width missing from BENCH_native_tile.json" >&2
+    exit 1
+  fi
+  echo "bench smoke: simd_kernel before/after emitted"
 fi
 
 echo "CI gate passed."
