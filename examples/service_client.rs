@@ -1,0 +1,148 @@
+//! Scripted protocol client for the service smoke test
+//! (`scripts/ci.sh --service-smoke`): drives a full session —
+//! parse-time rejections, a DATA upload swept end-to-end, a large job
+//! cancelled mid-sweep, METRICS introspection, graceful SHUTDOWN —
+//! against a live `palmad serve`, exiting non-zero on any deviation.
+//!
+//! ```bash
+//! target/release/palmad serve --addr 127.0.0.1:0 &  # prints LISTENING <addr>
+//! target/release/examples/service_client <addr>
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, ensure, Context, Result};
+
+struct Client {
+    conn: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Result<Self> {
+        let conn = TcpStream::connect(addr).context("connect")?;
+        let reader = BufReader::new(conn.try_clone()?);
+        Ok(Self { conn, reader })
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(line.trim().to_string())
+    }
+
+    fn send(&mut self, req: &str) -> Result<String> {
+        writeln!(self.conn, "{req}")?;
+        self.read_line()
+    }
+
+    fn expect_err(&mut self, req: &str, why: &str) -> Result<()> {
+        let resp = self.send(req)?;
+        ensure!(resp.starts_with("ERR"), "{why}: expected ERR, got {resp:?} for {req:?}");
+        println!("  rejected as expected ({why}): {resp}");
+        Ok(())
+    }
+
+    fn run(&mut self, req: &str) -> Result<u64> {
+        let resp = self.send(req)?;
+        ensure!(resp.starts_with("OK JOB "), "{req:?} -> {resp:?}");
+        let id = resp.rsplit(' ').next().unwrap_or("").parse()?;
+        println!("  submitted job {id}");
+        Ok(id)
+    }
+
+    /// Poll STATUS until DONE; returns the number of DISCORD lines.
+    fn wait_done(&mut self, id: u64) -> Result<usize> {
+        for _ in 0..2_000 {
+            let resp = self.send(&format!("STATUS {id}"))?;
+            if resp.starts_with("OK DONE") {
+                let mut count = 0;
+                loop {
+                    let l = self.read_line()?;
+                    if l == "END" {
+                        break;
+                    }
+                    ensure!(l.starts_with("DISCORD "), "{l:?}");
+                    count += 1;
+                }
+                return Ok(count);
+            }
+            ensure!(
+                resp.starts_with("OK QUEUED") || resp.starts_with("OK RUNNING"),
+                "job {id}: {resp:?}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        bail!("job {id} did not finish in time");
+    }
+}
+
+fn main() -> Result<()> {
+    let addr = std::env::args().nth(1).context("usage: service_client <host:port>")?;
+    let mut c = Client::connect(&addr)?;
+
+    println!("== parse-time validation");
+    c.expect_err("RUN gen=ecg2 n=3000 minl=64 maxl=32", "minl > maxl")?;
+    c.expect_err("RUN gen=ecg2 n=3000 minl=2 maxl=32", "minl < 4")?;
+    c.expect_err("RUN gen=ecg2 n=3000 minl=16 maxl=32 topk=0", "topk = 0")?;
+    c.expect_err("RUN gen=ecg2 n=99999999999 minl=16 maxl=32", "absurd n")?;
+    c.expect_err("RUN data=ghost minl=16 maxl=32", "unknown upload")?;
+
+    println!("== DATA upload + sweep");
+    writeln!(c.conn, "DATA name=smoke n=600")?;
+    for chunk_start in (0..600).step_by(100) {
+        let vals: Vec<String> = (chunk_start..chunk_start + 100)
+            .map(|i| {
+                let base = (i as f64 * 0.2).sin();
+                let v = if (300..316).contains(&i) { base + 3.0 } else { base };
+                format!("{v}")
+            })
+            .collect();
+        writeln!(c.conn, "{}", vals.join(" "))?;
+    }
+    let resp = c.read_line()?;
+    ensure!(resp == "OK DATA smoke n=600", "{resp:?}");
+    let uploaded = c.run("RUN data=smoke minl=16 maxl=18 topk=1")?;
+    let count = c.wait_done(uploaded)?;
+    ensure!(count == 3, "expected 3 discords (one per length), got {count}");
+    println!("  swept uploaded series: {count} discords");
+
+    println!("== cancellation mid-sweep");
+    let big = c.run("RUN gen=respiration n=8000 minl=32 maxl=400 seed=1")?;
+    let resp = c.send(&format!("CANCEL {big}"))?;
+    ensure!(resp == format!("OK CANCELLED {big}"), "{resp:?}");
+    // The cancel lands at the next step boundary.
+    for _ in 0..2_000 {
+        let s = c.send(&format!("STATUS {big}"))?;
+        if s == "OK CANCELLED" {
+            break;
+        }
+        ensure!(s.starts_with("OK RUNNING") || s.starts_with("OK QUEUED"), "{s:?}");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    ensure!(c.send(&format!("STATUS {big}"))? == "OK CANCELLED", "cancel never landed");
+    println!("  job {big} cancelled at a step boundary");
+
+    println!("== metrics");
+    let metrics = c.send("METRICS")?;
+    println!("  {metrics}");
+    let needles = [
+        "done=1",
+        "cancelled=1",
+        "uploads=1",
+        "sched(steps/preempts/leases)=",
+        "lease(sticky/rebinds)=",
+    ];
+    for needle in needles {
+        ensure!(metrics.contains(needle), "METRICS missing {needle:?}: {metrics}");
+    }
+
+    println!("== shutdown");
+    let bye = c.send("SHUTDOWN")?;
+    ensure!(bye == "OK BYE", "{bye:?}");
+    println!("service_client OK");
+    Ok(())
+}

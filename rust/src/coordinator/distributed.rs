@@ -32,6 +32,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::drag::{pd3_prepared, scan_phase, Discord, Pd3Config, Scan};
+use super::merlin::{MerlinConfig, MerlinResult, MerlinSweep, SweepExecutor};
 use super::metrics::DragMetrics;
 use super::segmentation::Segmentation;
 use super::workspace::MerlinWorkspace;
@@ -85,14 +86,42 @@ pub fn distributed_drag(
         return Ok((Vec::new(), metrics));
     }
 
-    let seg = Segmentation::new(nwin, engine.segn());
-    let parts = parts.clamp(1, seg.nseg);
-    let seg_chunk = seg.nseg.div_ceil(parts);
     let cfg = Pd3Config::default();
     let mut drag = DragMetrics::default();
     let mut ws = MerlinWorkspace::new();
-    ws.reset_all_candidates(nwin);
     engine.prepare_series(&view);
+    distributed_pass(engine, &view, r, &cfg, parts, mode, &mut drag, &mut ws, &mut metrics)?;
+
+    let mut discords = std::mem::take(&mut ws.discords);
+    discords.sort_by_key(|d| d.idx);
+    metrics.drag = drag;
+    Ok((discords, metrics))
+}
+
+/// One complete distributed pass at a single (length, threshold):
+/// per-node local selection (+ optional local refinement), exchange,
+/// global candidate-seeded refinement.  Shared by [`distributed_drag`]
+/// (fixed threshold, the paper's range-discord setting) and
+/// [`DistributedExecutor`] (MERLIN's adaptive threshold schedule), and
+/// accumulates into `metrics` so multi-length sweeps report cumulative
+/// traffic.  The caller must have run `Engine::prepare_series`.
+#[allow(clippy::too_many_arguments)]
+fn distributed_pass(
+    engine: &dyn Engine,
+    view: &SeriesView<'_>,
+    r: f64,
+    cfg: &Pd3Config,
+    parts: usize,
+    mode: ExchangeMode,
+    drag: &mut DragMetrics,
+    ws: &mut MerlinWorkspace,
+    metrics: &mut DistMetrics,
+) -> Result<()> {
+    let nwin = view.n_windows();
+    let seg = Segmentation::new(nwin, engine.segn());
+    let parts = parts.clamp(1, seg.nseg);
+    let seg_chunk = seg.nseg.div_ceil(parts);
+    ws.reset_all_candidates(nwin);
     let r2 = r * r;
 
     // ---- Per-node local phase -------------------------------------------
@@ -106,7 +135,7 @@ pub fn distributed_drag(
             continue;
         }
         let t0 = Instant::now();
-        scan_phase(engine, &view, r2, &cfg, &mut drag, &mut ws, &seg, lo, hi, Scan::Select)?;
+        scan_phase(engine, view, r2, cfg, drag, ws, &seg, lo, hi, Scan::Select)?;
         drag.select_time += t0.elapsed();
         // Selection survivors are counted *before* any local refinement,
         // so `local_candidates - exchanged` exposes exactly the traffic
@@ -118,14 +147,14 @@ pub fn distributed_drag(
             // Zymbler-style: refine against the whole local partition
             // before exchanging (kills twins the selection order missed).
             let t1 = Instant::now();
-            scan_phase(engine, &view, r2, &cfg, &mut drag, &mut ws, &seg, lo, hi, Scan::Refine)?;
+            scan_phase(engine, view, r2, cfg, drag, ws, &seg, lo, hi, Scan::Refine)?;
             drag.refine_time += t1.elapsed();
         }
     }
 
     // ---- Exchange: the global candidate set ------------------------------
     // The union of the local sets is exactly what is left in the bitmap.
-    metrics.exchanged = ws.candidate_count();
+    metrics.exchanged += ws.candidate_count();
 
     // ---- Global refinement: every node checks every candidate -----------
     // A candidate-seeded PD3 pass: surviving candidates' rows cover every
@@ -139,13 +168,77 @@ pub fn distributed_drag(
     // skipping same-partition pairs would be unsound for that mode.
     // The QT seed rows are served from the engine cache either way;
     // mode-aware pair skipping is a possible future optimization.
-    pd3_prepared(engine, &view, r, &cfg, &mut drag, &mut ws)?;
+    pd3_prepared(engine, view, r, cfg, drag, ws)?;
+    metrics.survivors += ws.discords().len();
+    Ok(())
+}
 
-    let mut discords = std::mem::take(&mut ws.discords);
-    discords.sort_by_key(|d| d.idx);
-    metrics.survivors = discords.len();
-    metrics.drag = drag;
-    Ok((discords, metrics))
+/// [`SweepExecutor`] that swaps MERLIN's per-length PD3 call for the
+/// distributed exchange procedure, so arbitrary-length discovery runs
+/// with the cluster communication structure while sharing the exact
+/// threshold schedule, retry policy, and per-length selection of every
+/// other sweep client ([`MerlinSweep`] is the only sweep driver).
+pub struct DistributedExecutor {
+    pub parts: usize,
+    pub mode: ExchangeMode,
+    /// Cumulative exchange traffic across every (length, threshold)
+    /// pass of the sweep.
+    pub metrics: DistMetrics,
+}
+
+impl DistributedExecutor {
+    pub fn new(parts: usize, mode: ExchangeMode) -> Self {
+        Self { parts, mode, metrics: DistMetrics::default() }
+    }
+}
+
+impl SweepExecutor for DistributedExecutor {
+    fn discover(
+        &mut self,
+        engine: &dyn Engine,
+        view: &SeriesView<'_>,
+        r: f64,
+        pd3: &Pd3Config,
+        drag: &mut DragMetrics,
+        ws: &mut MerlinWorkspace,
+    ) -> Result<()> {
+        engine.prepare_series(view);
+        distributed_pass(
+            engine,
+            view,
+            r,
+            pd3,
+            self.parts,
+            self.mode,
+            drag,
+            ws,
+            &mut self.metrics,
+        )
+    }
+}
+
+/// Arbitrary-length (MERLIN) discovery over the simulated cluster: a
+/// [`MerlinSweep`] whose per-length discovery is [`distributed_pass`].
+/// Because every pass returns the exact range-discord set — property-
+/// tested equal to brute force for both exchange modes — the adaptive
+/// threshold schedule evolves exactly as the single-node sweep's, and
+/// the per-length results match `Merlin::run` (unit-tested below).
+/// Returns the sweep result plus cumulative communication metrics.
+pub fn distributed_merlin(
+    engine: &dyn Engine,
+    t: &[f64],
+    cfg: MerlinConfig,
+    parts: usize,
+    mode: ExchangeMode,
+) -> Result<(MerlinResult, DistMetrics)> {
+    let mut sweep = MerlinSweep::new(cfg, t.len())?;
+    let mut ws = MerlinWorkspace::new();
+    let mut exec = DistributedExecutor::new(parts, mode);
+    while sweep.step_with(engine, t, &mut ws, &mut exec)?.is_pending() {}
+    let res = sweep.finish();
+    let mut metrics = exec.metrics;
+    metrics.drag = res.metrics.drag.clone();
+    Ok((res, metrics))
 }
 
 #[cfg(test)]
@@ -236,6 +329,47 @@ mod tests {
             distributed_drag(&engine, &t, 8, 2.0, 1000, ExchangeMode::LocalRefine).unwrap();
         let want = brute::range_discords(&t, 8, 2.0);
         assert_eq!(got.len(), want.len());
+    }
+
+    #[test]
+    fn distributed_merlin_matches_single_node_sweep() {
+        use crate::coordinator::merlin::Merlin;
+        use crate::core::series::TimeSeries;
+        let t = walk(420, 65);
+        let cfg = MerlinConfig { min_l: 10, max_l: 18, top_k: 1, ..Default::default() };
+        let engine = NativeEngine::with_segn(32);
+        let want = Merlin::new(&engine, cfg.clone())
+            .run(&TimeSeries::new("walk", t.clone()))
+            .unwrap();
+        for mode in [ExchangeMode::Yankov, ExchangeMode::LocalRefine] {
+            let node = NativeEngine::with_segn(32);
+            let (got, dm) = distributed_merlin(&node, &t, cfg.clone(), 3, mode).unwrap();
+            assert_eq!(got.lengths.len(), want.lengths.len(), "{mode:?}");
+            for (w, g) in want.lengths.iter().zip(&got.lengths) {
+                assert_eq!(w.m, g.m);
+                assert_eq!(w.retries, g.retries, "m={} {mode:?}", w.m);
+                assert_eq!(
+                    w.discords.iter().map(|d| d.idx).collect::<Vec<_>>(),
+                    g.discords.iter().map(|d| d.idx).collect::<Vec<_>>(),
+                    "m={} {mode:?}",
+                    w.m
+                );
+                for (wd, gd) in w.discords.iter().zip(&g.discords) {
+                    assert!(
+                        (wd.nn_dist - gd.nn_dist).abs() < 1e-9 * (1.0 + wd.nn_dist.abs()),
+                        "m={} {mode:?}: {} vs {}",
+                        w.m,
+                        wd.nn_dist,
+                        gd.nn_dist
+                    );
+                }
+            }
+            // Every (length, retry) pass contributes to the exchange
+            // traffic, and survivors accumulate across lengths.
+            assert!(dm.exchanged >= dm.survivors, "{mode:?}");
+            assert!(dm.survivors as u64 >= got.metrics.discords, "{mode:?}");
+            assert!(dm.drag.tiles_computed > 0, "{mode:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Keyed engine/workspace lease pool — the serving layer's shared
+//! substrate for interleaved tenants.
+//!
+//! The pre-scheduler service gave every worker thread its own engine
+//! for its whole lifetime, so a worker's QT seed cache and PD3 arena
+//! served exactly one job at a time and sat idle between jobs.  The
+//! step scheduler (`coordinator/service.rs`) instead checks an
+//! `(engine, MerlinWorkspace)` pair out of this pool *per step*, keyed
+//! by job id:
+//!
+//! - **Sticky checkout**: a tenant prefers the entry it used last.  The
+//!   native engine's seed cache is bound to one series at a time
+//!   (content fingerprint, `engines/scratch.rs`), so stickiness is what
+//!   preserves the paper's cross-length QT reuse when many jobs
+//!   interleave — a sticky hit re-enters `prepare_series` as a no-op
+//!   and the next length opens on prefetched rows.
+//! - **LRU steal**: with more tenants than entries, a checkout takes
+//!   the least-recently-used entry; the victim tenant's binding is
+//!   evicted on the thief's first `prepare_series` (rows recycle
+//!   through the cache's spare pools, so steals churn bindings, not
+//!   allocations).
+//! - **Blocking**: checkouts beyond capacity wait on a condvar; the
+//!   service sizes the pool to its worker count so steps never queue
+//!   here in the default configuration.
+//!
+//! `rust/tests/alloc_steady_state.rs` proves a warm pool is
+//! allocation-free across interleaved jobs: checkout, step, and return
+//! touch no heap once every arena has reached its high-water mark.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+use super::config::{build_engine, EngineOptions};
+use super::workspace::MerlinWorkspace;
+use crate::engines::Engine;
+
+/// Pool traffic counters (the `lease(sticky/rebinds)=` gauges of the
+/// service metrics line).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    /// Total checkouts.
+    pub leases: u64,
+    /// Checkouts that found an entry already keyed to the caller (warm
+    /// engine cache + warm workspace).
+    pub sticky_hits: u64,
+    /// Checkouts that had to steal an entry keyed to a *different*
+    /// tenant, evicting its series binding.
+    pub rebinds: u64,
+}
+
+struct PoolEntry {
+    engine: Box<dyn Engine>,
+    ws: MerlinWorkspace,
+    /// Tenant that last used this entry (None = never keyed).
+    key: Option<u64>,
+    /// Monotonic return tick, for LRU victim selection.
+    last_used: u64,
+}
+
+/// Fixed-capacity pool of engine/workspace pairs (module docs).
+pub struct EnginePool {
+    /// `None` marks a slot whose entry is currently leased out.
+    slots: Mutex<Vec<Option<PoolEntry>>>,
+    free: Condvar,
+    tick: AtomicU64,
+    leases: AtomicU64,
+    sticky_hits: AtomicU64,
+    rebinds: AtomicU64,
+}
+
+impl EnginePool {
+    /// Build `capacity` engines up front (clamped to >= 1).
+    pub fn new(opts: &EngineOptions, capacity: usize) -> Result<Self> {
+        let capacity = capacity.max(1);
+        let mut slots = Vec::with_capacity(capacity);
+        for _ in 0..capacity {
+            slots.push(Some(PoolEntry {
+                engine: build_engine(opts)?,
+                ws: MerlinWorkspace::new(),
+                key: None,
+                last_used: 0,
+            }));
+        }
+        Ok(Self {
+            slots: Mutex::new(slots),
+            free: Condvar::new(),
+            tick: AtomicU64::new(0),
+            leases: AtomicU64::new(0),
+            sticky_hits: AtomicU64::new(0),
+            rebinds: AtomicU64::new(0),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn counters(&self) -> PoolCounters {
+        PoolCounters {
+            leases: self.leases.load(Ordering::Relaxed),
+            sticky_hits: self.sticky_hits.load(Ordering::Relaxed),
+            rebinds: self.rebinds.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Check out an engine + workspace for tenant `key`, blocking until
+    /// one is free.  Preference order: the entry last used by `key`
+    /// (sticky), then a never-keyed entry, then the least-recently-used
+    /// entry of another tenant (steal).
+    pub fn checkout(&self, key: u64) -> Lease<'_> {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            let mut sticky: Option<usize> = None;
+            let mut unkeyed: Option<(usize, u64)> = None;
+            let mut other: Option<(usize, u64)> = None;
+            for (i, slot) in slots.iter().enumerate() {
+                let Some(e) = slot else { continue };
+                if e.key == Some(key) {
+                    sticky = Some(i);
+                    break;
+                }
+                let best = if e.key.is_none() { &mut unkeyed } else { &mut other };
+                let better = match *best {
+                    None => true,
+                    Some((_, lu)) => e.last_used < lu,
+                };
+                if better {
+                    *best = Some((i, e.last_used));
+                }
+            }
+            let (idx, stolen) = match (sticky, unkeyed, other) {
+                (Some(i), _, _) => (i, false),
+                (None, Some((i, _)), _) => (i, false),
+                (None, None, Some((i, _))) => (i, true),
+                (None, None, None) => {
+                    slots = self.free.wait(slots).unwrap();
+                    continue;
+                }
+            };
+            let mut entry = slots[idx].take().expect("picked slot holds an entry");
+            self.leases.fetch_add(1, Ordering::Relaxed);
+            if sticky.is_some() {
+                self.sticky_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            if stolen {
+                self.rebinds.fetch_add(1, Ordering::Relaxed);
+            }
+            entry.key = Some(key);
+            return Lease { pool: self, slot: idx, entry: Some(entry) };
+        }
+    }
+}
+
+/// A checked-out engine/workspace pair; returns to its pool on drop.
+pub struct Lease<'p> {
+    pool: &'p EnginePool,
+    slot: usize,
+    entry: Option<PoolEntry>,
+}
+
+impl Lease<'_> {
+    pub fn engine(&self) -> &dyn Engine {
+        &*self.entry.as_ref().expect("live lease").engine
+    }
+
+    /// Split borrow for [`super::merlin::MerlinSweep::step`], which
+    /// needs the engine and the workspace simultaneously.
+    pub fn engine_and_workspace(&mut self) -> (&dyn Engine, &mut MerlinWorkspace) {
+        let e = self.entry.as_mut().expect("live lease");
+        (&*e.engine, &mut e.ws)
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        if let Some(mut e) = self.entry.take() {
+            e.last_used = self.pool.tick.fetch_add(1, Ordering::Relaxed) + 1;
+            let mut slots = self.pool.slots.lock().unwrap();
+            slots[self.slot] = Some(e);
+            self.pool.free.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(capacity: usize) -> EnginePool {
+        EnginePool::new(&EngineOptions { segn: 32, threads: 1, ..Default::default() }, capacity)
+            .unwrap()
+    }
+
+    #[test]
+    fn sticky_checkout_returns_the_same_engine() {
+        let p = pool(2);
+        let first = {
+            let lease = p.checkout(7);
+            lease.engine() as *const dyn Engine as *const ()
+        };
+        // Another tenant takes the *other* (unkeyed) entry, not ours.
+        {
+            let other = p.checkout(8);
+            assert_ne!(other.engine() as *const dyn Engine as *const (), first);
+        }
+        let again = {
+            let lease = p.checkout(7);
+            lease.engine() as *const dyn Engine as *const ()
+        };
+        assert_eq!(again, first, "tenant 7 must get its sticky entry back");
+        let c = p.counters();
+        assert_eq!(c.leases, 3);
+        assert_eq!(c.sticky_hits, 1);
+        assert_eq!(c.rebinds, 0);
+    }
+
+    #[test]
+    fn steal_prefers_least_recently_used() {
+        let p = pool(2);
+        // Key both entries, touching tenant 1 last.
+        drop(p.checkout(1));
+        let two = {
+            let lease = p.checkout(2);
+            lease.engine() as *const dyn Engine as *const ()
+        };
+        drop(p.checkout(1));
+        // Tenant 3 must steal tenant 2's entry (older return tick).
+        let three = {
+            let lease = p.checkout(3);
+            lease.engine() as *const dyn Engine as *const ()
+        };
+        assert_eq!(three, two, "the steal victim is the LRU entry");
+        let c = p.counters();
+        assert_eq!(c.rebinds, 1);
+        assert_eq!(c.sticky_hits, 1);
+    }
+
+    #[test]
+    fn exhausted_pool_blocks_until_a_lease_returns() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let p = Arc::new(pool(1));
+        let lease = p.checkout(1);
+        let got_it = Arc::new(AtomicBool::new(false));
+        let (p2, flag) = (Arc::clone(&p), Arc::clone(&got_it));
+        let waiter = std::thread::spawn(move || {
+            let _lease = p2.checkout(2);
+            flag.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!got_it.load(Ordering::SeqCst), "checkout must block while the pool is empty");
+        drop(lease);
+        waiter.join().unwrap();
+        assert!(got_it.load(Ordering::SeqCst));
+        assert_eq!(p.counters().leases, 2);
+    }
+
+    #[test]
+    fn capacity_is_clamped_to_one() {
+        assert_eq!(pool(0).capacity(), 1);
+    }
+}

@@ -17,17 +17,29 @@
 //! redundant-calculation elimination that headlines the paper — either
 //! natively or through the AOT `stats_update` kernel
 //! ([`MerlinConfig::stats_backend`]).
+//!
+//! The driver itself is a resumable state machine, [`MerlinSweep`]: one
+//! [`MerlinSweep::step`] advances exactly one length (threshold
+//! selection + adaptive-r PD3 retries) and returns
+//! [`SweepStatus::Pending`] or [`SweepStatus::Done`], carrying the
+//! rolling stats, the last-five nnDist ring, and the accumulated
+//! metrics between steps.  [`Merlin::run`] is a thin loop over `step`;
+//! the job service schedules *steps* of many concurrent sweeps over a
+//! shared engine lease pool (`coordinator/service.rs`), the streaming
+//! monitor drives a single-length sweep per refresh, and the
+//! distributed coordinator plugs its exchange procedure in via
+//! [`SweepExecutor`] — one sweep driver for every path in the tree.
 
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use super::drag::{pd3_into, Discord, Pd3Config};
-use super::metrics::MerlinMetrics;
+use super::metrics::{DragMetrics, MerlinMetrics};
 use super::workspace::MerlinWorkspace;
 use crate::core::series::TimeSeries;
 use crate::core::stats::RollingStats;
-use crate::core::topk::{top_k_non_overlapping, Scored};
+use crate::core::topk::{top_k_non_overlapping_into, Scored};
 use crate::core::windows::cmp_score_desc;
 use crate::engines::{Engine, SeriesView};
 
@@ -113,7 +125,404 @@ impl MerlinResult {
     }
 }
 
-/// The MERLIN driver bound to an engine.
+/// Outcome of one [`MerlinSweep::step`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepStatus {
+    /// More lengths remain; call `step` again.
+    Pending,
+    /// Every length in `[min_l, max_l]` has been processed.
+    Done,
+}
+
+impl SweepStatus {
+    pub fn is_pending(self) -> bool {
+        matches!(self, SweepStatus::Pending)
+    }
+}
+
+/// Per-length discovery hook: given the current view and threshold,
+/// leave the exact range-discord set in `ws.discords()`.
+///
+/// The default ([`Pd3Executor`]) is classic single-node PD3; the
+/// distributed coordinator substitutes its partition/exchange/global
+/// refinement procedure (`coordinator/distributed.rs`) so multi-node
+/// sweeps share the threshold schedule, retry policy, and metrics of
+/// every other path instead of reimplementing them.
+pub trait SweepExecutor {
+    fn discover(
+        &mut self,
+        engine: &dyn Engine,
+        view: &SeriesView<'_>,
+        r: f64,
+        pd3: &Pd3Config,
+        drag: &mut DragMetrics,
+        ws: &mut MerlinWorkspace,
+    ) -> Result<()>;
+}
+
+/// The default executor: one PD3 pass over the whole series.
+pub struct Pd3Executor;
+
+impl SweepExecutor for Pd3Executor {
+    fn discover(
+        &mut self,
+        engine: &dyn Engine,
+        view: &SeriesView<'_>,
+        r: f64,
+        pd3: &Pd3Config,
+        drag: &mut DragMetrics,
+        ws: &mut MerlinWorkspace,
+    ) -> Result<()> {
+        pd3_into(engine, view, r, pd3, drag, ws)
+    }
+}
+
+/// Fixed-capacity ring of the last five per-length nnDist minima (the
+/// Alg. 1 threshold schedule's memory).  Plain array so sweep steps
+/// never touch the heap for it.
+#[derive(Clone, Copy, Debug, Default)]
+struct Last5 {
+    buf: [f64; 5],
+    len: usize,
+}
+
+impl Last5 {
+    fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    fn push(&mut self, x: f64) {
+        if self.len == 5 {
+            self.buf.copy_within(1..5, 0);
+            self.buf[4] = x;
+        } else {
+            self.buf[self.len] = x;
+            self.len += 1;
+        }
+    }
+
+    fn last(&self) -> Option<f64> {
+        self.len.checked_sub(1).map(|i| self.buf[i])
+    }
+
+    fn mean_std(&self) -> (f64, f64) {
+        let xs = &self.buf[..self.len];
+        let n = xs.len() as f64;
+        let mu = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / n;
+        (mu, var.max(0.0).sqrt())
+    }
+}
+
+/// Resumable MERLIN sweep (module docs): the per-length loop of Alg. 1
+/// decomposed into an explicit state machine.
+///
+/// The sweep owns everything that must survive between lengths — the
+/// rolling stats, the last-five nnDist ring, the per-length results,
+/// and recycled selection scratch — while the engine and the PD3
+/// workspace arrive *per step* (the job service leases them from a
+/// shared pool keyed by job id, so interleaved tenants reuse warm
+/// arenas).  A warmed sweep's `step` performs zero heap allocations,
+/// and [`rebind`](MerlinSweep::rebind) recycles a finished sweep for
+/// the next run over a same-shape series (the streaming monitor's
+/// refresh path) — both proved in `rust/tests/alloc_steady_state.rs`.
+pub struct MerlinSweep {
+    cfg: MerlinConfig,
+    /// Expected series length (re-checked every step: the series is
+    /// caller-owned and must not change under a parked sweep).
+    n: usize,
+    /// Next length to process (`> cfg.max_l` once done).
+    next_m: usize,
+    /// Initial-threshold override for the first length (the streaming
+    /// monitor seeds it with 0.99x the previous discord distance).
+    r_start: Option<f64>,
+    stats: RollingStats,
+    stats_ready: bool,
+    last5: Last5,
+    lengths: Vec<LengthResult>,
+    metrics: MerlinMetrics,
+    /// Selection scratch + spare per-length discord vectors, recycled
+    /// across lengths and rebinds.
+    scored: Vec<Scored>,
+    picked: Vec<Scored>,
+    spare: Vec<Vec<Discord>>,
+}
+
+impl MerlinSweep {
+    /// Create a sweep over a series of length `n`.  Engine-independent
+    /// validation happens here; engine limits (`max_m`) are checked by
+    /// the first `step`, which is where an engine first appears.
+    pub fn new(cfg: MerlinConfig, n: usize) -> Result<Self> {
+        validate(&cfg, n)?;
+        let min_l = cfg.min_l;
+        Ok(Self {
+            cfg,
+            n,
+            next_m: min_l,
+            r_start: None,
+            stats: RollingStats { m: min_l, mu: Vec::new(), sig: Vec::new() },
+            stats_ready: false,
+            last5: Last5::default(),
+            lengths: Vec::new(),
+            metrics: MerlinMetrics::default(),
+            scored: Vec::new(),
+            picked: Vec::new(),
+            spare: Vec::new(),
+        })
+    }
+
+    pub fn config(&self) -> &MerlinConfig {
+        &self.cfg
+    }
+
+    /// True once every length has been processed.
+    pub fn done(&self) -> bool {
+        self.next_m > self.cfg.max_l
+    }
+
+    /// (lengths completed, lengths total).
+    pub fn progress(&self) -> (usize, usize) {
+        (self.lengths.len(), self.cfg.max_l - self.cfg.min_l + 1)
+    }
+
+    /// Per-length results so far.
+    pub fn lengths(&self) -> &[LengthResult] {
+        &self.lengths
+    }
+
+    /// Metrics accumulated so far.
+    pub fn metrics(&self) -> &MerlinMetrics {
+        &self.metrics
+    }
+
+    /// Reset for a fresh run over a series of length `n`, recycling
+    /// every internal buffer (stats storage, result vectors, scratch).
+    pub fn rebind(&mut self, n: usize) -> Result<()> {
+        self.rebind_with(n, None)
+    }
+
+    /// [`rebind`](Self::rebind) with an initial-threshold override for
+    /// the first length (clamped to the theoretical max `2*sqrt(m)`).
+    pub fn rebind_with(&mut self, n: usize, r_start: Option<f64>) -> Result<()> {
+        validate(&self.cfg, n)?;
+        self.n = n;
+        self.next_m = self.cfg.min_l;
+        self.r_start = r_start;
+        self.stats_ready = false;
+        self.last5.clear();
+        for lr in self.lengths.drain(..) {
+            let mut v = lr.discords;
+            v.clear();
+            self.spare.push(v);
+        }
+        self.metrics = MerlinMetrics::default();
+        Ok(())
+    }
+
+    /// Bind the engine's per-series state to `t` and run its bulk
+    /// prefetch hook for the next length, *before* the step's retry
+    /// loop.  Plain sweeps don't need this (PD3 prepares lazily and
+    /// MERLIN only prefetches between lengths); the streaming monitor
+    /// does, because its ring buffer can recycle a slice identity while
+    /// the content slides — the unconditional content-fingerprint bind
+    /// must precede the identity-guarded prefetch fast path.
+    pub fn bind_series(&mut self, engine: &dyn Engine, t: &[f64]) -> Result<()> {
+        if t.len() != self.n {
+            bail!("series length changed under the sweep ({} != {})", t.len(), self.n);
+        }
+        self.ensure_stats(engine, t)?;
+        let view = SeriesView { t, stats: &self.stats };
+        engine.prepare_series(&view);
+        engine.prefetch_length(t, self.next_m);
+        Ok(())
+    }
+
+    /// Advance the sweep by exactly one length (threshold selection +
+    /// adaptive-r PD3 retries) through the default [`Pd3Executor`].
+    ///
+    /// The engine and workspace are borrowed for this step only: the
+    /// caller may hand a different (leased) pair to every step, as the
+    /// job service does.  Engine perf counters and workspace reuse
+    /// counters are snapshotted around the step, so shared resources
+    /// attribute their traffic to this sweep's metrics correctly.
+    pub fn step(
+        &mut self,
+        engine: &dyn Engine,
+        t: &[f64],
+        ws: &mut MerlinWorkspace,
+    ) -> Result<SweepStatus> {
+        self.step_with(engine, t, ws, &mut Pd3Executor)
+    }
+
+    /// [`step`](Self::step) with a custom per-length discovery
+    /// procedure (see [`SweepExecutor`]).
+    pub fn step_with(
+        &mut self,
+        engine: &dyn Engine,
+        t: &[f64],
+        ws: &mut MerlinWorkspace,
+        exec: &mut dyn SweepExecutor,
+    ) -> Result<SweepStatus> {
+        if self.done() {
+            return Ok(SweepStatus::Done);
+        }
+        if self.cfg.max_l > engine.max_m() {
+            bail!("max_l {} exceeds engine max_m {}", self.cfg.max_l, engine.max_m());
+        }
+        if t.len() != self.n {
+            bail!("series length changed under the sweep ({} != {})", t.len(), self.n);
+        }
+
+        let t_start = Instant::now();
+        let seed0 = engine.perf_counters();
+        let ws0 = ws.counters();
+        self.ensure_stats(engine, t)?;
+        let m = self.next_m;
+        debug_assert_eq!(self.stats.m, m);
+        let view = SeriesView { t, stats: &self.stats };
+        let step = m - self.cfg.min_l;
+        let max_r = 2.0 * (m as f64).sqrt();
+        let r_floor = self.cfg.r_floor_frac * max_r;
+
+        // Initial threshold per Alg. 1.
+        let mut r = if step == 0 {
+            self.r_start.unwrap_or(max_r).min(max_r)
+        } else if step <= 4 {
+            // Invariant: `last5` gains exactly one entry per completed
+            // length — the no-discord outcome pushes a carry value (see
+            // below) — so at step >= 1 it is provably non-empty.  The
+            // all-flat-series unit test exercises the carry branch.
+            0.99 * self.last5.last().expect("last5 carries an entry per completed length")
+        } else {
+            let (mu, sigma) = self.last5.mean_std();
+            (mu - 2.0 * sigma).clamp(r_floor, max_r)
+        };
+
+        let mut retries = 0usize;
+        let result = loop {
+            self.metrics.drag_calls += 1;
+            exec.discover(engine, &view, r, &self.cfg.pd3, &mut self.metrics.drag, ws)?;
+            self.scored.clear();
+            self.scored
+                .extend(ws.discords().iter().map(|d| Scored { idx: d.idx, nn_dist: d.nn_dist }));
+            top_k_non_overlapping_into(&mut self.scored, m, self.cfg.top_k, &mut self.picked);
+            let enough = if self.cfg.top_k == 0 {
+                !self.picked.is_empty()
+            } else {
+                self.picked.len() >= self.cfg.top_k
+            };
+            if enough || r <= r_floor || retries >= self.cfg.max_retries {
+                let mut discords = self.spare.pop().unwrap_or_default();
+                discords.clear();
+                discords.extend(
+                    self.picked.iter().map(|s| Discord { idx: s.idx, m, nn_dist: s.nn_dist }),
+                );
+                break LengthResult { m, r_used: r, retries, discords };
+            }
+            // Lower r per Alg. 1 and retry.
+            retries += 1;
+            self.metrics.retries += 1;
+            r = if step == 0 {
+                0.5 * r
+            } else if step <= 4 {
+                0.99 * r
+            } else {
+                let (mu, sigma) = self.last5.mean_std();
+                let dec = if sigma > 1e-12 * (1.0 + mu) { sigma } else { 0.05 * mu.max(1e-9) };
+                (r - dec).max(r_floor)
+            };
+        };
+
+        // Track min nnDist among reported discords for the r schedule.
+        let min_nn =
+            result.discords.iter().map(|d| d.nn_dist).fold(f64::INFINITY, f64::min);
+        if min_nn.is_finite() {
+            self.last5.push(min_nn);
+        } else {
+            // Total failure at this length (pathological series):
+            // carry the previous value so the schedule can continue.
+            let carry = self.last5.last().unwrap_or(0.5 * max_r);
+            self.last5.push(carry);
+        }
+        self.metrics.discords += result.discords.len() as u64;
+        self.lengths.push(result);
+
+        // Advance stats m -> m+1 (Eqs. 7/8) unless this was the last.
+        let status = if m < self.cfg.max_l {
+            let st = Instant::now();
+            self.advance_stats(engine, t)?;
+            self.metrics.stats_time += st.elapsed();
+            // Bulk seed prefetch: advance every cached QT seed row to
+            // m+1 in one engine-side sweep while no tiles are in
+            // flight, so the next length's tiles open on verbatim
+            // cache hits instead of serialized per-row advances under
+            // the shard locks (ROADMAP "batch-level seed prefetch").
+            // Under sticky leases the same engine usually serves this
+            // sweep's next step, so the hint lands where it pays off.
+            let pf = Instant::now();
+            engine.prefetch_length(t, m + 1);
+            self.metrics.prefetch_time += pf.elapsed();
+            SweepStatus::Pending
+        } else {
+            SweepStatus::Done
+        };
+        self.next_m = m + 1;
+        self.metrics.seed.accumulate(engine.perf_counters().since(seed0));
+        self.metrics.workspace.accumulate(ws.counters().since(ws0));
+        self.metrics.total_time += t_start.elapsed();
+        Ok(status)
+    }
+
+    /// Consume the sweep into its result.
+    pub fn finish(self) -> MerlinResult {
+        MerlinResult { lengths: self.lengths, metrics: self.metrics }
+    }
+
+    fn ensure_stats(&mut self, engine: &dyn Engine, t: &[f64]) -> Result<()> {
+        if self.stats_ready {
+            return Ok(());
+        }
+        let st = Instant::now();
+        match self.cfg.stats_backend {
+            StatsBackend::Native | StatsBackend::NaivePerLength => {
+                self.stats.recompute(t, self.cfg.min_l);
+            }
+            StatsBackend::Aot => {
+                let s = engine.aot_stats_init(t, self.cfg.min_l)?;
+                self.stats = s;
+            }
+        }
+        self.metrics.stats_time += st.elapsed();
+        self.stats_ready = true;
+        Ok(())
+    }
+
+    fn advance_stats(&mut self, engine: &dyn Engine, t: &[f64]) -> Result<()> {
+        match self.cfg.stats_backend {
+            StatsBackend::Native => self.stats.advance(t),
+            StatsBackend::NaivePerLength => self.stats.recompute(t, self.stats.m + 1),
+            StatsBackend::Aot => {
+                let s = engine.aot_stats_update(t, &self.stats)?;
+                self.stats = s;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn validate(cfg: &MerlinConfig, n: usize) -> Result<()> {
+    if !(3 <= cfg.min_l && cfg.min_l <= cfg.max_l) {
+        bail!("bad length range [{}, {}]", cfg.min_l, cfg.max_l);
+    }
+    // Need at least one non-self match at max_l.
+    if n < 2 * cfg.max_l {
+        bail!("series too short (n={n}) for max_l={} (need n >= 2*max_l)", cfg.max_l);
+    }
+    Ok(())
+}
+
+/// The MERLIN driver bound to an engine: a thin run-to-completion loop
+/// over [`MerlinSweep::step`] with a private workspace.
 pub struct Merlin<'e> {
     engine: &'e dyn Engine,
     cfg: MerlinConfig,
@@ -130,158 +539,15 @@ impl<'e> Merlin<'e> {
 
     /// Run arbitrary-length discovery over `t`.
     pub fn run(&self, t: &TimeSeries) -> Result<MerlinResult> {
-        let cfg = &self.cfg;
-        let n = t.len();
-        if !(3 <= cfg.min_l && cfg.min_l <= cfg.max_l) {
-            bail!("bad length range [{}, {}]", cfg.min_l, cfg.max_l);
-        }
-        if cfg.max_l > self.engine.max_m() {
-            bail!("max_l {} exceeds engine max_m {}", cfg.max_l, self.engine.max_m());
-        }
-        // Need at least one non-self match at max_l.
-        if n < 2 * cfg.max_l {
-            bail!("series too short (n={n}) for max_l={} (need n >= 2*max_l)", cfg.max_l);
-        }
-
-        let t_start = Instant::now();
-        let mut metrics = MerlinMetrics::default();
-        let counters_start = self.engine.perf_counters();
-        let mut lengths: Vec<LengthResult> = Vec::new();
-        // Ring of the last 5 nnDist minima (ED units).
-        let mut last5: Vec<f64> = Vec::new();
+        let mut sweep = MerlinSweep::new(self.cfg.clone(), t.len())?;
         // Hoisted PD3 arena: every length and every adaptive-r retry of
         // this run recycles one set of bitmaps / minima / tile buffers
         // instead of reallocating them per pd3 call (ROADMAP:
         // "pd3-level workspace reuse").
         let mut ws = MerlinWorkspace::new();
-
-        let st0 = Instant::now();
-        let mut stats = self.stats_init(&t.values, cfg.min_l)?;
-        metrics.stats_time += st0.elapsed();
-
-        for m in cfg.min_l..=cfg.max_l {
-            debug_assert_eq!(stats.m, m);
-            let view = SeriesView { t: &t.values, stats: &stats };
-            let step = m - cfg.min_l;
-            let max_r = 2.0 * (m as f64).sqrt();
-            let r_floor = cfg.r_floor_frac * max_r;
-
-            // Initial threshold per Alg. 1.
-            let mut r = if step == 0 {
-                max_r
-            } else if step <= 4 {
-                // Invariant: `last5` gains exactly one entry per completed
-                // length — the no-discord outcome pushes a carry value (see
-                // below) — so at step >= 1 it is provably non-empty.  The
-                // all-flat-series unit test exercises the carry branch.
-                0.99 * last5.last().copied().expect("last5 carries an entry per completed length")
-            } else {
-                let (mu, sigma) = mean_std(&last5);
-                (mu - 2.0 * sigma).clamp(r_floor, max_r)
-            };
-
-            let mut retries = 0usize;
-            let result = loop {
-                metrics.drag_calls += 1;
-                pd3_into(self.engine, &view, r, &cfg.pd3, &mut metrics.drag, &mut ws)?;
-                let picked = pick_top_k(ws.discords(), m, cfg.top_k);
-                let enough = if cfg.top_k == 0 { !picked.is_empty() } else { picked.len() >= cfg.top_k };
-                if enough || r <= r_floor || retries >= cfg.max_retries {
-                    break LengthResult { m, r_used: r, retries, discords: picked };
-                }
-                // Lower r per Alg. 1 and retry.
-                retries += 1;
-                metrics.retries += 1;
-                r = if step == 0 {
-                    0.5 * r
-                } else if step <= 4 {
-                    0.99 * r
-                } else {
-                    let (mu, sigma) = mean_std(&last5);
-                    let dec = if sigma > 1e-12 * (1.0 + mu) { sigma } else { 0.05 * mu.max(1e-9) };
-                    (r - dec).max(r_floor)
-                };
-            };
-
-            // Track min nnDist among reported discords for the r schedule.
-            let min_nn = result
-                .discords
-                .iter()
-                .map(|d| d.nn_dist)
-                .fold(f64::INFINITY, f64::min);
-            if min_nn.is_finite() {
-                last5.push(min_nn);
-            } else {
-                // Total failure at this length (pathological series):
-                // carry the previous value so the schedule can continue.
-                let carry = last5.last().copied().unwrap_or(0.5 * max_r);
-                last5.push(carry);
-            }
-            if last5.len() > 5 {
-                last5.remove(0);
-            }
-            metrics.discords += result.discords.len() as u64;
-            lengths.push(result);
-
-            // Advance stats m -> m+1 (Eqs. 7/8) unless this was the last.
-            if m < cfg.max_l {
-                let st = Instant::now();
-                stats = self.stats_advance(stats, &t.values)?;
-                metrics.stats_time += st.elapsed();
-                // Bulk seed prefetch: advance every cached QT seed row to
-                // m+1 in one engine-side sweep while no tiles are in
-                // flight, so the next length's tiles open on verbatim
-                // cache hits instead of serialized per-row advances under
-                // the shard locks (ROADMAP "batch-level seed prefetch").
-                let pf = Instant::now();
-                self.engine.prefetch_length(&t.values, m + 1);
-                metrics.prefetch_time += pf.elapsed();
-            }
-        }
-
-        metrics.total_time = t_start.elapsed();
-        metrics.seed = self.engine.perf_counters().since(counters_start);
-        metrics.workspace = ws.counters();
-        Ok(MerlinResult { lengths, metrics })
+        while sweep.step(self.engine, &t.values, &mut ws)?.is_pending() {}
+        Ok(sweep.finish())
     }
-
-    fn stats_init(&self, t: &[f64], m: usize) -> Result<RollingStats> {
-        match self.cfg.stats_backend {
-            StatsBackend::Native | StatsBackend::NaivePerLength => {
-                Ok(RollingStats::compute(t, m))
-            }
-            StatsBackend::Aot => self.engine.aot_stats_init(t, m),
-        }
-    }
-
-    fn stats_advance(&self, stats: RollingStats, t: &[f64]) -> Result<RollingStats> {
-        match self.cfg.stats_backend {
-            StatsBackend::Native => {
-                let mut s = stats;
-                s.advance(t);
-                Ok(s)
-            }
-            StatsBackend::NaivePerLength => Ok(RollingStats::compute(t, stats.m + 1)),
-            StatsBackend::Aot => self.engine.aot_stats_update(t, &stats),
-        }
-    }
-}
-
-/// Sort by nnDist descending, de-overlap, truncate to k (0 = all).
-fn pick_top_k(discords: &[Discord], m: usize, k: usize) -> Vec<Discord> {
-    let scored: Vec<Scored> =
-        discords.iter().map(|d| Scored { idx: d.idx, nn_dist: d.nn_dist }).collect();
-    top_k_non_overlapping(&scored, m, k)
-        .into_iter()
-        .map(|s| Discord { idx: s.idx, m, nn_dist: s.nn_dist })
-        .collect()
-}
-
-fn mean_std(xs: &[f64]) -> (f64, f64) {
-    let n = xs.len() as f64;
-    let mu = xs.iter().sum::<f64>() / n;
-    let var = xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / n;
-    (mu, var.max(0.0).sqrt())
 }
 
 #[cfg(test)]
@@ -500,6 +766,136 @@ mod tests {
             assert!(lr.discords.is_empty(), "m={}: flat series has only twins", lr.m);
             assert!(lr.r_used > 0.0 && lr.r_used.is_finite());
         }
+    }
+
+    /// Acceptance pin (exact): a manually stepped sweep on a dedicated
+    /// engine replays the single-call `Merlin::run` op order verbatim,
+    /// so thresholds, retry counts, and discords are bit-identical.
+    #[test]
+    fn stepped_sweep_is_bit_identical_to_run() {
+        let t = random_walk_series(520, 31);
+        let cfg = MerlinConfig { min_l: 12, max_l: 24, top_k: 2, ..Default::default() };
+        let want = Merlin::new(&NativeEngine::with_segn(64), cfg.clone()).run(&t).unwrap();
+
+        let engine = NativeEngine::with_segn(64);
+        let mut ws = MerlinWorkspace::new();
+        let mut sweep = MerlinSweep::new(cfg, t.len()).unwrap();
+        let mut steps = 0;
+        while sweep.step(&engine, &t.values, &mut ws).unwrap().is_pending() {
+            steps += 1;
+            assert!(steps <= 13, "one step per length");
+        }
+        let got = sweep.finish();
+
+        assert_eq!(want.lengths.len(), got.lengths.len());
+        for (w, g) in want.lengths.iter().zip(&got.lengths) {
+            assert_eq!(w.m, g.m);
+            assert_eq!(w.retries, g.retries, "m={}", w.m);
+            assert_eq!(w.r_used, g.r_used, "m={}", w.m);
+            assert_eq!(w.discords, g.discords, "m={}: stepped sweep diverged", w.m);
+        }
+        assert_eq!(want.metrics.drag_calls, got.metrics.drag_calls);
+        assert_eq!(want.metrics.discords, got.metrics.discords);
+    }
+
+    /// Acceptance pin (shared state): two sweeps interleaved on *one*
+    /// engine + *one* workspace — the scheduler's worst case, where
+    /// every step evicts the other tenant's seed-cache binding — still
+    /// reproduce their dedicated-engine runs.  Re-seeded rows are only
+    /// guaranteed numerically (not bit-) equal to incrementally
+    /// advanced ones (the fresh pass uses the four-lane `dot`), hence
+    /// the tolerance on distances; indices must match exactly.
+    #[test]
+    fn interleaved_sweeps_match_dedicated_runs() {
+        let t_a = random_walk_series(520, 31);
+        let t_b = random_walk_series(520, 32);
+        let cfg = MerlinConfig { min_l: 12, max_l: 24, top_k: 2, ..Default::default() };
+
+        let want_a = Merlin::new(&NativeEngine::with_segn(64), cfg.clone()).run(&t_a).unwrap();
+        let want_b = Merlin::new(&NativeEngine::with_segn(64), cfg.clone()).run(&t_b).unwrap();
+
+        let engine = NativeEngine::with_segn(64);
+        let mut ws = MerlinWorkspace::new();
+        let mut sweep_a = MerlinSweep::new(cfg.clone(), t_a.len()).unwrap();
+        let mut sweep_b = MerlinSweep::new(cfg, t_b.len()).unwrap();
+        while !(sweep_a.done() && sweep_b.done()) {
+            if !sweep_a.done() {
+                sweep_a.step(&engine, &t_a.values, &mut ws).unwrap();
+            }
+            if !sweep_b.done() {
+                sweep_b.step(&engine, &t_b.values, &mut ws).unwrap();
+            }
+        }
+        let got_a = sweep_a.finish();
+        let got_b = sweep_b.finish();
+
+        for (want, got) in [(&want_a, &got_a), (&want_b, &got_b)] {
+            assert_eq!(want.lengths.len(), got.lengths.len());
+            for (w, g) in want.lengths.iter().zip(&got.lengths) {
+                assert_eq!(w.m, g.m);
+                assert_eq!(w.discords.len(), g.discords.len(), "m={}", w.m);
+                for (wd, gd) in w.discords.iter().zip(&g.discords) {
+                    assert_eq!(wd.idx, gd.idx, "m={}", w.m);
+                    assert!(
+                        (wd.nn_dist - gd.nn_dist).abs() < 1e-9 * (1.0 + wd.nn_dist.abs()),
+                        "m={}: {} vs {}",
+                        w.m,
+                        wd.nn_dist,
+                        gd.nn_dist
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_reports_progress_and_is_idempotent_after_done() {
+        let t = random_walk_series(300, 33);
+        let engine = NativeEngine::with_segn(32);
+        let cfg = MerlinConfig { min_l: 10, max_l: 12, top_k: 1, ..Default::default() };
+        let mut ws = MerlinWorkspace::new();
+        let mut sweep = MerlinSweep::new(cfg, t.len()).unwrap();
+        assert_eq!(sweep.progress(), (0, 3));
+        assert_eq!(sweep.step(&engine, &t.values, &mut ws).unwrap(), SweepStatus::Pending);
+        assert_eq!(sweep.progress(), (1, 3));
+        assert_eq!(sweep.step(&engine, &t.values, &mut ws).unwrap(), SweepStatus::Pending);
+        assert_eq!(sweep.step(&engine, &t.values, &mut ws).unwrap(), SweepStatus::Done);
+        assert!(sweep.done());
+        assert_eq!(sweep.progress(), (3, 3));
+        // Stepping a finished sweep is a no-op Done, not a panic.
+        assert_eq!(sweep.step(&engine, &t.values, &mut ws).unwrap(), SweepStatus::Done);
+        assert_eq!(sweep.lengths().len(), 3);
+    }
+
+    #[test]
+    fn sweep_rejects_series_length_change_between_steps() {
+        let t = random_walk_series(300, 34);
+        let engine = NativeEngine::with_segn(32);
+        let cfg = MerlinConfig { min_l: 10, max_l: 14, top_k: 1, ..Default::default() };
+        let mut ws = MerlinWorkspace::new();
+        let mut sweep = MerlinSweep::new(cfg, t.len()).unwrap();
+        sweep.step(&engine, &t.values, &mut ws).unwrap();
+        let err = sweep.step(&engine, &t.values[..299], &mut ws).unwrap_err();
+        assert!(err.to_string().contains("series length changed"), "{err}");
+    }
+
+    #[test]
+    fn rebound_sweep_reproduces_and_recycles() {
+        let t = random_walk_series(400, 35);
+        let engine = NativeEngine::with_segn(64);
+        let cfg = MerlinConfig { min_l: 12, max_l: 16, top_k: 1, ..Default::default() };
+        let mut ws = MerlinWorkspace::new();
+        let mut sweep = MerlinSweep::new(cfg, t.len()).unwrap();
+        while sweep.step(&engine, &t.values, &mut ws).unwrap().is_pending() {}
+        let first: Vec<Discord> =
+            sweep.lengths().iter().flat_map(|l| l.discords.iter().copied()).collect();
+        sweep.rebind(t.len()).unwrap();
+        assert!(!sweep.done());
+        assert_eq!(sweep.progress(), (0, 5));
+        while sweep.step(&engine, &t.values, &mut ws).unwrap().is_pending() {}
+        let second: Vec<Discord> =
+            sweep.lengths().iter().flat_map(|l| l.discords.iter().copied()).collect();
+        assert_eq!(first, second, "a rebound sweep must reproduce the run exactly");
     }
 
     #[test]

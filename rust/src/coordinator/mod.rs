@@ -4,6 +4,7 @@
 pub mod config;
 pub mod distributed;
 pub mod drag;
+pub mod lease;
 pub mod merlin;
 pub mod metrics;
 pub mod segmentation;

@@ -1,38 +1,92 @@
-//! The anomaly-discovery job service: a queue + worker-pool front end over
-//! the MERLIN coordinator, with a line-oriented TCP protocol.
+//! The anomaly-discovery job service: a fair-share *step* scheduler over
+//! resumable [`MerlinSweep`]s, fronted by a line-oriented TCP protocol.
 //!
-//! Shape follows the serving-system framing of the repro (vLLM-router
-//! style): clients submit jobs (series spec + length range + top-k), a
-//! router thread assigns them to workers, each worker owns an engine and
-//! runs MERLIN; clients poll status or run synchronously.
+//! The pre-scheduler service ran whole jobs to completion on dedicated
+//! per-worker engines, so one 10M-point sweep head-of-line-blocked every
+//! small request behind it.  The scheduler instead keeps a round-robin
+//! run queue of *job ids* and a fixed worker pool that pulls **steps**:
+//! a worker claims a job, checks an engine/workspace pair out of the
+//! shared [`EnginePool`] (keyed by job id, so a job's seed cache and
+//! arenas come back warm — see `coordinator/lease.rs`), advances the
+//! job's sweep by exactly one length, and requeues it at the back.
+//! Small jobs therefore complete while large ones are still sweeping
+//! (fairness is integration-tested), cancellation and deadlines take
+//! effect at step granularity, and steady-state zero allocation holds
+//! across interleaved tenants (`rust/tests/alloc_steady_state.rs`).
 //!
 //! Protocol (one request per line, responses `OK ...` / `ERR ...`):
 //!
 //! ```text
-//! RUN gen=<dataset> [n=<len>] [seed=<u64>] minl=<m> maxl=<m> [topk=<k>]
-//!   -> OK JOB <id>
+//! RUN gen=<dataset>|data=<upload> [n=<len>] [seed=<u64>] minl=<m> maxl=<m>
+//!     [topk=<k>] [deadline=<ms>]
+//!   -> OK JOB <id>          (parameters are validated at parse time)
+//! DATA name=<key> n=<count>
+//!     ... then <count> whitespace-separated f64 values on following lines
+//!   -> OK DATA <key> n=<count>
 //! STATUS <id>
-//!   -> OK QUEUED | OK RUNNING | OK FAILED <msg>
-//!    | OK DONE <njobs-line>; then one `DISCORD m=<m> idx=<i> dist=<d>`
+//!   -> OK QUEUED | OK RUNNING <done>/<total> | OK CANCELLED
+//!    | OK FAILED <msg>
+//!    | OK DONE count=<n> seconds=<s>; then one `DISCORD m= idx= dist=`
 //!      line per discord and a final `END`
+//! CANCEL <id>  -> OK CANCELLED <id>    (queued or mid-sweep jobs only)
+//! FORGET <id>  -> OK FORGOTTEN <id>    (terminal jobs only; TTL eviction
+//!                                       reclaims forgotten stragglers)
+//! FORGET data=<name> -> OK FORGOTTEN data=<name>  (frees an upload slot)
 //! METRICS
-//!   -> OK METRICS jobs=<n> done=<n> failed=<n> discords=<n>
-//! SHUTDOWN -> OK BYE (stops the listener)
+//!   -> OK METRICS jobs= done= failed= cancelled= discords= table=
+//!      uploads= sched(steps/preempts/leases)=s/p/l lease(sticky/rebinds)=x/y
+//! SHUTDOWN -> OK BYE (drains the scheduler: in-flight steps finish,
+//!             queued jobs fail with "shutdown", workers are joined)
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::config::{build_engine, EngineOptions};
+use super::config::EngineOptions;
 use super::drag::Discord;
-use super::merlin::{Merlin, MerlinConfig};
+use super::lease::{EnginePool, PoolCounters};
+use super::merlin::{MerlinConfig, MerlinSweep, SweepStatus};
 use crate::core::series::TimeSeries;
 use crate::gen::registry;
+
+/// Scheduler + protocol limits (see [`Service::start_with`]).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub engine_opts: EngineOptions,
+    /// Step-worker threads.
+    pub workers: usize,
+    /// Engines in the shared lease pool (0 = one per worker).
+    pub pool_capacity: usize,
+    /// How long terminal (done/failed/cancelled) jobs stay queryable
+    /// before TTL eviction drops them from the job table.
+    pub job_ttl: Duration,
+    /// Maximum client-uploaded series held at once (DATA verb).
+    pub max_uploads: usize,
+    /// Maximum points per uploaded series.
+    pub max_upload_len: usize,
+    /// Parse-time absurdity bound on `RUN n=`.
+    pub max_series_len: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            engine_opts: EngineOptions::default(),
+            workers: 2,
+            pool_capacity: 0,
+            job_ttl: Duration::from_secs(600),
+            max_uploads: 64,
+            max_upload_len: 4_000_000,
+            max_series_len: 50_000_000,
+        }
+    }
+}
 
 /// A submitted job.
 #[derive(Clone, Debug)]
@@ -43,6 +97,27 @@ pub struct JobSpec {
     pub min_l: usize,
     pub max_l: usize,
     pub top_k: usize,
+    /// Client-supplied series (DATA upload); takes precedence over
+    /// `dataset`.
+    pub series: Option<Arc<TimeSeries>>,
+    /// Wall-clock budget from submission; exceeding it between steps
+    /// fails the job with "deadline exceeded".
+    pub deadline: Option<Duration>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self {
+            dataset: String::new(),
+            n: None,
+            seed: 42,
+            min_l: 0,
+            max_l: 0,
+            top_k: 1,
+            series: None,
+            deadline: None,
+        }
+    }
 }
 
 /// Job lifecycle.
@@ -52,6 +127,30 @@ pub enum JobState {
     Running,
     Done { discords: Vec<Discord>, seconds: f64 },
     Failed(String),
+    Cancelled,
+}
+
+impl JobState {
+    fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+}
+
+struct Job {
+    spec: JobSpec,
+    state: JobState,
+    /// The resumable sweep, parked here between steps (None before the
+    /// first step and while a worker has it checked out).
+    sweep: Option<MerlinSweep>,
+    series: Option<Arc<TimeSeries>>,
+    /// A worker currently holds this job's sweep.
+    stepping: bool,
+    /// Cancellation requested while stepping; honored at step end.
+    cancel: bool,
+    deadline_at: Option<Instant>,
+    finished_at: Option<Instant>,
+    /// (lengths completed, lengths total).
+    progress: (usize, usize),
 }
 
 #[derive(Default)]
@@ -59,39 +158,71 @@ struct Counters {
     submitted: AtomicU64,
     done: AtomicU64,
     failed: AtomicU64,
+    cancelled: AtomicU64,
     discords: AtomicU64,
+    steps: AtomicU64,
+    preempts: AtomicU64,
+}
+
+/// Scheduler observability snapshot (the `sched(...)=` metrics line).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedMetrics {
+    /// Sweep steps executed.
+    pub steps: u64,
+    /// Steps after which a still-pending job was requeued behind the
+    /// other runnable jobs (the fairness mechanism at work).
+    pub preempts: u64,
+    /// Jobs cancelled.
+    pub cancelled: u64,
+    /// Lease-pool traffic.
+    pub lease: PoolCounters,
 }
 
 struct Inner {
-    queue: Mutex<Vec<(u64, JobSpec)>>,
-    jobs: Mutex<HashMap<u64, JobState>>,
+    cfg: ServiceConfig,
+    /// Round-robin run queue of job ids (guarded with `cv`).
+    queue: Mutex<VecDeque<u64>>,
+    jobs: Mutex<HashMap<u64, Job>>,
     cv: Condvar,
     counters: Counters,
     stop: AtomicBool,
+    listener_stop: AtomicBool,
     next_id: AtomicU64,
-    engine_opts: EngineOptions,
+    pool: EnginePool,
+    uploads: Mutex<HashMap<String, Arc<TimeSeries>>>,
 }
 
 /// The job service handle.
 pub struct Service {
     inner: Arc<Inner>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl Service {
-    /// Start `workers` worker threads, each owning its own engine.
+    /// Start with `workers` step workers and a same-sized engine pool.
     pub fn start(engine_opts: EngineOptions, workers: usize) -> Result<Self> {
+        Self::start_with(ServiceConfig { engine_opts, workers, ..Default::default() })
+    }
+
+    /// Start with explicit scheduler configuration.
+    pub fn start_with(cfg: ServiceConfig) -> Result<Self> {
+        let workers = cfg.workers.max(1);
+        let capacity = if cfg.pool_capacity == 0 { workers } else { cfg.pool_capacity };
+        let pool = EnginePool::new(&cfg.engine_opts, capacity)?;
         let inner = Arc::new(Inner {
-            queue: Mutex::new(Vec::new()),
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
             jobs: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
             counters: Counters::default(),
             stop: AtomicBool::new(false),
+            listener_stop: AtomicBool::new(false),
             next_id: AtomicU64::new(1),
-            engine_opts,
+            pool,
+            uploads: Mutex::new(HashMap::new()),
         });
         let mut handles = Vec::new();
-        for w in 0..workers.max(1) {
+        for w in 0..workers {
             let inner = Arc::clone(&inner);
             handles.push(
                 std::thread::Builder::new()
@@ -100,22 +231,61 @@ impl Service {
                     .map_err(|e| anyhow!("spawn worker: {e}"))?,
             );
         }
-        Ok(Self { inner, workers: handles })
+        Ok(Self { inner, workers: Mutex::new(handles) })
     }
 
-    /// Submit a job; returns its id.
+    /// Submit a job; returns its id.  Submission also runs a TTL sweep
+    /// over the job table so terminal entries cannot pile up under
+    /// churn.
     pub fn submit(&self, spec: JobSpec) -> u64 {
+        self.evict_expired();
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         self.inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
-        self.inner.jobs.lock().unwrap().insert(id, JobState::Queued);
-        self.inner.queue.lock().unwrap().push((id, spec));
+        let total = spec.max_l.saturating_sub(spec.min_l) + 1;
+        let mut job = Job {
+            deadline_at: spec.deadline.map(|d| Instant::now() + d),
+            series: spec.series.clone(),
+            spec,
+            state: JobState::Queued,
+            sweep: None,
+            stepping: false,
+            cancel: false,
+            finished_at: None,
+            progress: (0, total),
+        };
+        // A submission racing (or following) shutdown would sit Queued
+        // forever — no worker will ever run it.  Fail it up front so
+        // `wait` terminates and the drain invariant holds.
+        if self.inner.stop.load(Ordering::Acquire) {
+            finalize(&mut job, JobState::Failed("shutdown".into()), &self.inner.counters);
+            self.inner.jobs.lock().unwrap().insert(id, job);
+            return id;
+        }
+        self.inner.jobs.lock().unwrap().insert(id, job);
+        self.inner.queue.lock().unwrap().push_back(id);
         self.inner.cv.notify_one();
+        // Close the race with a concurrent shutdown(): if stop was set
+        // after the check above, the drain pass may already have run
+        // without seeing this job — fail it here instead.
+        if self.inner.stop.load(Ordering::Acquire) {
+            let mut jobs = self.inner.jobs.lock().unwrap();
+            if let Some(job) = jobs.get_mut(&id) {
+                if !job.state.is_terminal() {
+                    finalize(job, JobState::Failed("shutdown".into()), &self.inner.counters);
+                }
+            }
+        }
         id
     }
 
     /// Current state of a job.
     pub fn status(&self, id: u64) -> Option<JobState> {
-        self.inner.jobs.lock().unwrap().get(&id).cloned()
+        self.inner.jobs.lock().unwrap().get(&id).map(|j| j.state.clone())
+    }
+
+    /// (lengths completed, lengths total) for a job.
+    pub fn progress(&self, id: u64) -> Option<(usize, usize)> {
+        self.inner.jobs.lock().unwrap().get(&id).map(|j| j.progress)
     }
 
     /// Block until the job leaves Queued/Running.
@@ -130,6 +300,87 @@ impl Service {
         }
     }
 
+    /// Cancel a queued or running job.  A job mid-step finishes its
+    /// current length first; the cancellation lands at the step
+    /// boundary.
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let job = jobs.get_mut(&id).ok_or_else(|| anyhow!("no such job {id}"))?;
+        match job.state {
+            JobState::Queued | JobState::Running => {
+                if job.stepping {
+                    job.cancel = true;
+                } else {
+                    finalize(job, JobState::Cancelled, &self.inner.counters);
+                }
+                Ok(())
+            }
+            _ => bail!("job {id} already finished"),
+        }
+    }
+
+    /// Drop a terminal job from the table immediately (TTL eviction
+    /// handles the rest).
+    pub fn forget(&self, id: u64) -> Result<()> {
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        match jobs.get(&id) {
+            None => bail!("no such job {id}"),
+            Some(j) if !j.state.is_terminal() => {
+                bail!("job {id} is still active; CANCEL it first")
+            }
+            Some(_) => {
+                jobs.remove(&id);
+                Ok(())
+            }
+        }
+    }
+
+    /// Drop terminal jobs older than [`ServiceConfig::job_ttl`].
+    pub fn evict_expired(&self) {
+        let ttl = self.inner.cfg.job_ttl;
+        let now = Instant::now();
+        self.inner.jobs.lock().unwrap().retain(|_, j| match j.finished_at {
+            Some(t) => now.duration_since(t) < ttl,
+            None => true,
+        });
+    }
+
+    /// Jobs currently in the table (any state).
+    pub fn job_count(&self) -> usize {
+        self.inner.jobs.lock().unwrap().len()
+    }
+
+    /// Store a client-supplied series under `name` (replaces an
+    /// existing upload of the same name).
+    pub fn upload(&self, name: &str, series: TimeSeries) -> Result<()> {
+        let mut up = self.inner.uploads.lock().unwrap();
+        if !up.contains_key(name) && up.len() >= self.inner.cfg.max_uploads {
+            bail!("upload table full ({} series); re-upload an existing name", up.len());
+        }
+        up.insert(name.to_string(), Arc::new(series));
+        Ok(())
+    }
+
+    /// Fetch an uploaded series.
+    pub fn uploaded(&self, name: &str) -> Option<Arc<TimeSeries>> {
+        self.inner.uploads.lock().unwrap().get(name).cloned()
+    }
+
+    /// Drop an uploaded series (`FORGET data=<name>`) — the eviction
+    /// path that keeps the capped upload table reusable.  Jobs already
+    /// holding the series keep their `Arc` until they finish.
+    pub fn forget_upload(&self, name: &str) -> Result<()> {
+        match self.inner.uploads.lock().unwrap().remove(name) {
+            Some(_) => Ok(()),
+            None => bail!("no uploaded series {name:?}"),
+        }
+    }
+
+    /// Uploaded series currently held.
+    pub fn upload_count(&self) -> usize {
+        self.inner.uploads.lock().unwrap().len()
+    }
+
     /// (submitted, done, failed, discords)
     pub fn metrics(&self) -> (u64, u64, u64, u64) {
         let c = &self.inner.counters;
@@ -141,38 +392,84 @@ impl Service {
         )
     }
 
-    /// Stop workers (idempotent).
-    pub fn shutdown(&mut self) {
-        self.inner.stop.store(true, Ordering::Relaxed);
+    /// Scheduler observability counters.
+    pub fn sched_metrics(&self) -> SchedMetrics {
+        let c = &self.inner.counters;
+        SchedMetrics {
+            steps: c.steps.load(Ordering::Relaxed),
+            preempts: c.preempts.load(Ordering::Relaxed),
+            cancelled: c.cancelled.load(Ordering::Relaxed),
+            lease: self.inner.pool.counters(),
+        }
+    }
+
+    /// Stop the scheduler gracefully (idempotent): workers finish their
+    /// in-flight steps and are joined; every job still queued or parked
+    /// mid-sweep is marked `Failed("shutdown")` rather than silently
+    /// lost.
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::Release);
         self.inner.cv.notify_all();
-        for h in self.workers.drain(..) {
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
+        }
+        self.inner.queue.lock().unwrap().clear();
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        for job in jobs.values_mut() {
+            if !job.state.is_terminal() {
+                finalize(job, JobState::Failed("shutdown".into()), &self.inner.counters);
+            }
         }
     }
 
     /// Serve the TCP protocol until a SHUTDOWN request arrives.
+    /// Connections are handled concurrently (one thread each); binding
+    /// port 0 picks an ephemeral port, printed as a parseable
+    /// `LISTENING <addr>` line for scripts (`scripts/ci.sh
+    /// --service-smoke`).
     pub fn serve(&self, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
-        crate::log_info!("palmad service listening on {addr}");
-        for stream in listener.incoming() {
-            let stream = stream?;
-            let done = self.handle_conn(stream);
-            if done {
-                break;
+        let local = listener.local_addr()?;
+        println!("LISTENING {local}");
+        std::io::stdout().flush().ok();
+        crate::log_info!("palmad service listening on {local}");
+        std::thread::scope(|scope| -> Result<()> {
+            for stream in listener.incoming() {
+                let stream = stream?;
+                if self.inner.listener_stop.load(Ordering::Acquire) {
+                    break;
+                }
+                scope.spawn(move || {
+                    if self.handle_conn(stream) {
+                        // SHUTDOWN: drain the scheduler, then poke the
+                        // accept loop awake so it can exit.
+                        self.inner.listener_stop.store(true, Ordering::Release);
+                        self.shutdown();
+                        let _ = TcpStream::connect(local);
+                    }
+                });
             }
-        }
-        Ok(())
+            Ok(())
+        })
     }
 
     /// Public wrapper over [`Self::handle_conn`] for embedders that run
-    /// their own accept loop (see `examples/serve_demo.rs`).
+    /// their own accept loop (see `examples/serve_demo.rs`).  Returns
+    /// true if the connection requested SHUTDOWN; draining the
+    /// scheduler is then the embedder's call (`Service::shutdown`).
     pub fn handle_conn_public(&self, stream: TcpStream) -> bool {
         self.handle_conn(stream)
     }
 
     /// Handle one connection; returns true if SHUTDOWN was requested.
+    ///
+    /// Reads run with a short timeout so an idle connection notices a
+    /// SHUTDOWN initiated elsewhere and exits instead of pinning the
+    /// accept scope open until the client hangs up.
     fn handle_conn(&self, stream: TcpStream) -> bool {
         let peer = stream.peer_addr().ok();
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
         let mut reader = BufReader::new(match stream.try_clone() {
             Ok(s) => s,
             Err(_) => return false,
@@ -181,16 +478,26 @@ impl Service {
         let mut line = String::new();
         loop {
             line.clear();
-            match reader.read_line(&mut line) {
-                Ok(0) | Err(_) => return false,
-                Ok(_) => {}
+            // Retry timeouts without clearing: a timeout mid-line keeps
+            // the partial bytes already appended to `line`.
+            loop {
+                match reader.read_line(&mut line) {
+                    Ok(0) => return false,
+                    Ok(_) => break,
+                    Err(e) if is_timeout(&e) => {
+                        if self.inner.listener_stop.load(Ordering::Acquire) {
+                            return false;
+                        }
+                    }
+                    Err(_) => return false,
+                }
             }
-            let req = line.trim();
+            let req = line.trim().to_string();
             if req.is_empty() {
                 continue;
             }
             crate::log_debug!("request from {peer:?}: {req}");
-            match self.dispatch(req, &mut out) {
+            match self.dispatch(&req, &mut reader, &mut out) {
                 Ok(true) => return true,
                 Ok(false) => {}
                 Err(e) => {
@@ -200,20 +507,57 @@ impl Service {
         }
     }
 
-    fn dispatch(&self, req: &str, out: &mut TcpStream) -> Result<bool> {
+    fn dispatch(
+        &self,
+        req: &str,
+        reader: &mut BufReader<TcpStream>,
+        out: &mut TcpStream,
+    ) -> Result<bool> {
         let mut parts = req.split_whitespace();
         match parts.next().unwrap_or("") {
             "RUN" => {
-                let spec = parse_spec(parts)?;
+                if self.inner.stop.load(Ordering::Acquire) {
+                    bail!("service is shutting down");
+                }
+                let (mut spec, data_key) = parse_run_parts(parts)?;
+                if let Some(key) = data_key {
+                    spec.series = Some(
+                        self.uploaded(&key)
+                            .ok_or_else(|| anyhow!("no uploaded series {key:?} (see DATA)"))?,
+                    );
+                }
+                validate_spec(&spec, &self.inner.cfg)?;
                 let id = self.submit(spec);
                 writeln!(out, "OK JOB {id}")?;
+            }
+            "DATA" => {
+                let (name, n) = parse_data_header(parts)?;
+                let max = self.inner.cfg.max_upload_len;
+                if n == 0 || n > max {
+                    // The client sends its values regardless of our
+                    // verdict, so drain them (sanely bounded claims
+                    // only) before erroring — otherwise every value
+                    // line would be misread as a command and the
+                    // connection would desynchronize permanently.
+                    if n > 0 && n <= max.saturating_mul(4) {
+                        drain_data_values(reader, n, &self.inner.listener_stop)?;
+                    }
+                    bail!("DATA n={n} out of range (1..={max})");
+                }
+                let values = read_data_values(reader, n, &self.inner.listener_stop)?;
+                self.upload(&name, TimeSeries::new(name.as_str(), values))?;
+                writeln!(out, "OK DATA {name} n={n}")?;
             }
             "STATUS" => {
                 let id: u64 = parts.next().ok_or_else(|| anyhow!("STATUS <id>"))?.parse()?;
                 match self.status(id) {
                     None => bail!("no such job {id}"),
                     Some(JobState::Queued) => writeln!(out, "OK QUEUED")?,
-                    Some(JobState::Running) => writeln!(out, "OK RUNNING")?,
+                    Some(JobState::Running) => {
+                        let (done, total) = self.progress(id).unwrap_or((0, 0));
+                        writeln!(out, "OK RUNNING {done}/{total}")?;
+                    }
+                    Some(JobState::Cancelled) => writeln!(out, "OK CANCELLED")?,
                     Some(JobState::Failed(e)) => writeln!(out, "OK FAILED {e}")?,
                     Some(JobState::Done { discords, seconds }) => {
                         writeln!(out, "OK DONE count={} seconds={seconds:.3}", discords.len())?;
@@ -224,9 +568,41 @@ impl Service {
                     }
                 }
             }
+            "CANCEL" => {
+                let id: u64 = parts.next().ok_or_else(|| anyhow!("CANCEL <id>"))?.parse()?;
+                self.cancel(id)?;
+                writeln!(out, "OK CANCELLED {id}")?;
+            }
+            "FORGET" => {
+                let arg =
+                    parts.next().ok_or_else(|| anyhow!("FORGET <id> | FORGET data=<name>"))?;
+                if let Some(name) = arg.strip_prefix("data=") {
+                    self.forget_upload(name)?;
+                    writeln!(out, "OK FORGOTTEN data={name}")?;
+                } else {
+                    let id: u64 = arg.parse()?;
+                    self.forget(id)?;
+                    writeln!(out, "OK FORGOTTEN {id}")?;
+                }
+            }
             "METRICS" => {
+                self.evict_expired();
                 let (s, d, f, n) = self.metrics();
-                writeln!(out, "OK METRICS jobs={s} done={d} failed={f} discords={n}")?;
+                let sm = self.sched_metrics();
+                writeln!(
+                    out,
+                    "OK METRICS jobs={s} done={d} failed={f} cancelled={} discords={n} \
+                     table={} uploads={} sched(steps/preempts/leases)={}/{}/{} \
+                     lease(sticky/rebinds)={}/{}",
+                    sm.cancelled,
+                    self.job_count(),
+                    self.upload_count(),
+                    sm.steps,
+                    sm.preempts,
+                    sm.lease.leases,
+                    sm.lease.sticky_hits,
+                    sm.lease.rebinds,
+                )?;
             }
             "SHUTDOWN" => {
                 writeln!(out, "OK BYE")?;
@@ -244,87 +620,319 @@ impl Drop for Service {
     }
 }
 
-fn parse_spec<'a>(parts: impl Iterator<Item = &'a str>) -> Result<JobSpec> {
-    let mut spec = JobSpec {
-        dataset: String::new(),
-        n: None,
-        seed: 42,
-        min_l: 0,
-        max_l: 0,
-        top_k: 1,
-    };
+/// Mark a job terminal, bump the matching counters, and release its
+/// per-job state (sweep, series).
+fn finalize(job: &mut Job, state: JobState, counters: &Counters) {
+    match &state {
+        JobState::Done { discords, .. } => {
+            counters.done.fetch_add(1, Ordering::Relaxed);
+            counters.discords.fetch_add(discords.len() as u64, Ordering::Relaxed);
+        }
+        JobState::Failed(_) => {
+            counters.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        JobState::Cancelled => {
+            counters.cancelled.fetch_add(1, Ordering::Relaxed);
+        }
+        JobState::Queued | JobState::Running => {}
+    }
+    job.state = state;
+    job.sweep = None;
+    job.series = None;
+    // The spec holds a second Arc to an uploaded series (set at submit);
+    // drop it too, or a terminal job pins the buffer for its whole TTL.
+    job.spec.series = None;
+    job.stepping = false;
+    job.finished_at = Some(Instant::now());
+}
+
+/// Parse `RUN` key=value pairs; returns the spec plus the `data=`
+/// upload key (resolved by the caller, which owns the upload table).
+fn parse_run_parts<'a>(
+    parts: impl Iterator<Item = &'a str>,
+) -> Result<(JobSpec, Option<String>)> {
+    let mut spec = JobSpec::default();
+    let mut data_key: Option<String> = None;
     for p in parts {
         let (k, v) = p.split_once('=').ok_or_else(|| anyhow!("expected key=value, got {p:?}"))?;
         match k {
             "gen" => spec.dataset = v.to_string(),
+            "data" => data_key = Some(v.to_string()),
             "n" => spec.n = Some(v.parse()?),
             "seed" => spec.seed = v.parse()?,
             "minl" => spec.min_l = v.parse()?,
             "maxl" => spec.max_l = v.parse()?,
             "topk" => spec.top_k = v.parse()?,
+            "deadline" => spec.deadline = Some(Duration::from_millis(v.parse()?)),
             other => bail!("unknown key {other:?}"),
         }
     }
-    if spec.dataset.is_empty() || spec.min_l == 0 || spec.max_l == 0 {
-        bail!("RUN requires gen=, minl=, maxl=");
+    if data_key.is_some() && !spec.dataset.is_empty() {
+        bail!("RUN takes gen= or data=, not both");
     }
-    Ok(spec)
+    if data_key.is_none() && spec.dataset.is_empty() {
+        bail!("RUN requires gen=<dataset> or data=<upload>");
+    }
+    if spec.min_l == 0 || spec.max_l == 0 {
+        bail!("RUN requires minl= and maxl=");
+    }
+    Ok((spec, data_key))
+}
+
+/// Parse-time request validation: reject impossible jobs with `ERR`
+/// instead of letting a worker thread fail them mid-run.
+fn validate_spec(spec: &JobSpec, cfg: &ServiceConfig) -> Result<()> {
+    if spec.min_l < 4 {
+        bail!("minl must be >= 4 (got {})", spec.min_l);
+    }
+    if spec.min_l > spec.max_l {
+        bail!("minl {} > maxl {}", spec.min_l, spec.max_l);
+    }
+    if spec.top_k == 0 {
+        bail!("topk must be >= 1");
+    }
+    if let Some(n) = spec.n {
+        if n > cfg.max_series_len {
+            bail!("n={n} exceeds the service limit {}", cfg.max_series_len);
+        }
+    }
+    // Uploaded series have a known length; generated ones only when n=
+    // is explicit (dataset defaults are checked by the first step).
+    let known_n = spec.series.as_ref().map(|s| s.len()).or(spec.n);
+    if let Some(n) = known_n {
+        if n < 2 * spec.max_l {
+            bail!("series too short (n={n}) for maxl={} (need n >= 2*maxl)", spec.max_l);
+        }
+    }
+    Ok(())
+}
+
+fn parse_data_header<'a>(parts: impl Iterator<Item = &'a str>) -> Result<(String, usize)> {
+    let mut name: Option<String> = None;
+    let mut n: Option<usize> = None;
+    for p in parts {
+        let (k, v) = p.split_once('=').ok_or_else(|| anyhow!("expected key=value, got {p:?}"))?;
+        match k {
+            "name" => name = Some(v.to_string()),
+            "n" => n = Some(v.parse()?),
+            other => bail!("unknown key {other:?}"),
+        }
+    }
+    match (name, n) {
+        (Some(name), Some(n)) => Ok((name, n)),
+        _ => bail!("DATA requires name= and n="),
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// `read_line` that rides out the connection's read timeout (retrying
+/// with the partial bytes kept in `line`) unless `stop` flips.
+fn read_data_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    stop: &AtomicBool,
+) -> Result<usize> {
+    loop {
+        match reader.read_line(line) {
+            Ok(n) => return Ok(n),
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::Acquire) {
+                    bail!("shutdown");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Read exactly `n` whitespace-separated f64 values from the
+/// connection (any line split).  Values are consumed before any error
+/// is raised, so a rejected upload leaves the protocol in sync.
+fn read_data_values(
+    reader: &mut BufReader<TcpStream>,
+    n: usize,
+    stop: &AtomicBool,
+) -> Result<Vec<f64>> {
+    let mut values = Vec::with_capacity(n);
+    let mut bad: Option<String> = None;
+    let mut line = String::new();
+    while values.len() < n {
+        line.clear();
+        if read_data_line(reader, &mut line, stop)? == 0 {
+            bail!("DATA truncated at {}/{n} values", values.len());
+        }
+        for tok in line.split_whitespace() {
+            if values.len() >= n {
+                break;
+            }
+            match tok.parse::<f64>() {
+                Ok(v) => values.push(v),
+                Err(_) => {
+                    // Keep consuming to stay in sync; remember the
+                    // first offender and count it toward `n`.
+                    if bad.is_none() {
+                        bad = Some(tok.to_string());
+                    }
+                    values.push(f64::NAN);
+                }
+            }
+        }
+    }
+    if let Some(tok) = bad {
+        bail!("DATA bad value {tok:?}");
+    }
+    Ok(values)
+}
+
+/// Consume (and discard) an announced batch of DATA values so a
+/// rejected header leaves the connection's request stream in sync.
+/// EOF just stops — there is nothing left to desynchronize.
+fn drain_data_values(
+    reader: &mut BufReader<TcpStream>,
+    n: usize,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let mut seen = 0usize;
+    let mut line = String::new();
+    while seen < n {
+        line.clear();
+        if read_data_line(reader, &mut line, stop)? == 0 {
+            break;
+        }
+        seen += line.split_whitespace().count();
+    }
+    Ok(())
 }
 
 fn worker_main(inner: Arc<Inner>) {
-    // Each worker owns its engine (XLA executors are per-thread actors).
-    let engine = match build_engine(&inner.engine_opts) {
-        Ok(e) => e,
-        Err(e) => {
-            crate::log_error!("worker failed to build engine: {e}");
-            return;
-        }
-    };
     loop {
-        let job = {
+        let id = {
             let mut q = inner.queue.lock().unwrap();
             loop {
-                if inner.stop.load(Ordering::Relaxed) {
+                if inner.stop.load(Ordering::Acquire) {
                     return;
                 }
-                if let Some(j) = q.pop() {
-                    break j;
+                if let Some(id) = q.pop_front() {
+                    break id;
                 }
                 q = inner.cv.wait(q).unwrap();
             }
         };
-        let (id, spec) = job;
-        inner.jobs.lock().unwrap().insert(id, JobState::Running);
-        let start = std::time::Instant::now();
-        let outcome = run_job(&*engine, &spec);
-        let state = match outcome {
-            Ok(discords) => {
-                inner.counters.done.fetch_add(1, Ordering::Relaxed);
-                inner.counters.discords.fetch_add(discords.len() as u64, Ordering::Relaxed);
-                JobState::Done { discords, seconds: start.elapsed().as_secs_f64() }
-            }
-            Err(e) => {
-                inner.counters.failed.fetch_add(1, Ordering::Relaxed);
-                JobState::Failed(e.to_string())
-            }
-        };
-        inner.jobs.lock().unwrap().insert(id, state);
+        step_job(&inner, id);
     }
 }
 
-fn run_job(engine: &dyn crate::engines::Engine, spec: &JobSpec) -> Result<Vec<Discord>> {
-    let series: TimeSeries = match spec.n {
+/// Advance one job by one sweep step through a leased engine/workspace.
+fn step_job(inner: &Inner, id: u64) {
+    // ---- Claim: move the sweep out of the table so the step runs
+    // without holding the jobs lock.
+    let (sweep0, series0, spec) = {
+        let mut jobs = inner.jobs.lock().unwrap();
+        let Some(job) = jobs.get_mut(&id) else { return }; // FORGOTten
+        if job.stepping || job.state.is_terminal() {
+            return; // stale queue entry (cancelled/failed meanwhile)
+        }
+        if job.cancel {
+            finalize(job, JobState::Cancelled, &inner.counters);
+            return;
+        }
+        if job.deadline_at.is_some_and(|d| Instant::now() > d) {
+            finalize(job, JobState::Failed("deadline exceeded".into()), &inner.counters);
+            return;
+        }
+        job.state = JobState::Running;
+        job.stepping = true;
+        (job.sweep.take(), job.series.clone(), job.spec.clone())
+    };
+
+    // ---- Materialize the series + sweep on first step (generation can
+    // be expensive; it must not run under the lock or on the protocol
+    // thread).
+    let fail = |msg: String| {
+        let mut jobs = inner.jobs.lock().unwrap();
+        if let Some(job) = jobs.get_mut(&id) {
+            finalize(job, JobState::Failed(msg), &inner.counters);
+        }
+    };
+    let series = match series0 {
+        Some(s) => s,
+        None => match materialize(&spec) {
+            Ok(s) => s,
+            Err(e) => return fail(e.to_string()),
+        },
+    };
+    let mut sweep = match sweep0 {
+        Some(s) => s,
+        None => {
+            let cfg = MerlinConfig {
+                min_l: spec.min_l,
+                max_l: spec.max_l,
+                top_k: spec.top_k,
+                ..Default::default()
+            };
+            match MerlinSweep::new(cfg, series.len()) {
+                Ok(s) => s,
+                Err(e) => return fail(e.to_string()),
+            }
+        }
+    };
+
+    // ---- One step through a keyed lease: same job -> same engine ->
+    // warm seed cache and workspace.
+    let status = {
+        let mut lease = inner.pool.checkout(id);
+        let (engine, ws) = lease.engine_and_workspace();
+        sweep.step(engine, &series.values, ws)
+    };
+    inner.counters.steps.fetch_add(1, Ordering::Relaxed);
+
+    // ---- Park or finalize.
+    let mut jobs = inner.jobs.lock().unwrap();
+    let Some(job) = jobs.get_mut(&id) else { return };
+    job.stepping = false;
+    job.progress = sweep.progress();
+    // An acknowledged CANCEL (the client was already told OK CANCELLED)
+    // outranks whatever the in-flight step concluded — even a final
+    // step that completed the sweep.
+    if job.cancel {
+        finalize(job, JobState::Cancelled, &inner.counters);
+        return;
+    }
+    match status {
+        Err(e) => finalize(job, JobState::Failed(e.to_string()), &inner.counters),
+        Ok(SweepStatus::Done) => {
+            let res = sweep.finish();
+            let discords: Vec<Discord> = res.all_discords().copied().collect();
+            let seconds = res.metrics.total_time.as_secs_f64();
+            finalize(job, JobState::Done { discords, seconds }, &inner.counters);
+        }
+        Ok(SweepStatus::Pending) => {
+            if job.deadline_at.is_some_and(|d| Instant::now() > d) {
+                finalize(job, JobState::Failed("deadline exceeded".into()), &inner.counters);
+            } else {
+                // Requeue at the back: round-robin across runnable jobs.
+                job.sweep = Some(sweep);
+                job.series = Some(series);
+                inner.queue.lock().unwrap().push_back(id);
+                inner.counters.preempts.fetch_add(1, Ordering::Relaxed);
+                inner.cv.notify_one();
+            }
+        }
+    }
+}
+
+fn materialize(spec: &JobSpec) -> Result<Arc<TimeSeries>> {
+    if let Some(s) = &spec.series {
+        return Ok(Arc::clone(s));
+    }
+    let series = match spec.n {
         Some(n) => registry::dataset_prefix(&spec.dataset, n, spec.seed)?.series,
         None => registry::dataset(&spec.dataset, spec.seed)?.series,
     };
-    let cfg = MerlinConfig {
-        min_l: spec.min_l,
-        max_l: spec.max_l,
-        top_k: spec.top_k,
-        ..Default::default()
-    };
-    let res = Merlin::new(engine, cfg).run(&series)?;
-    Ok(res.all_discords().copied().collect())
+    Ok(Arc::new(series))
 }
 
 #[cfg(test)]
@@ -339,12 +947,13 @@ mod tests {
             min_l: 16,
             max_l: 20,
             top_k: 1,
+            ..Default::default()
         }
     }
 
     #[test]
     fn submit_and_wait() {
-        let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 2).unwrap();
+        let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 2).unwrap();
         let id = svc.submit(spec());
         match svc.wait(id) {
             Some(JobState::Done { discords, .. }) => {
@@ -355,12 +964,17 @@ mod tests {
         let (s, d, f, n) = svc.metrics();
         assert_eq!((s, d, f), (1, 1, 0));
         assert_eq!(n, 5);
+        let sm = svc.sched_metrics();
+        assert_eq!(sm.steps, 5, "one step per length");
+        assert_eq!(sm.preempts, 4, "every non-final step requeues");
+        assert_eq!(sm.lease.leases, 5);
+        assert_eq!(sm.lease.sticky_hits, 4, "a lone job always gets its engine back");
         svc.shutdown();
     }
 
     #[test]
     fn bad_dataset_fails_cleanly() {
-        let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+        let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
         let id = svc.submit(JobSpec { dataset: "nope".into(), ..spec() });
         match svc.wait(id) {
             Some(JobState::Failed(msg)) => assert!(msg.contains("unknown dataset")),
@@ -371,7 +985,7 @@ mod tests {
 
     #[test]
     fn parallel_jobs_complete() {
-        let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 4).unwrap();
+        let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 4).unwrap();
         let ids: Vec<u64> = (0..6).map(|k| svc.submit(JobSpec { seed: k, ..spec() })).collect();
         for id in ids {
             match svc.wait(id) {
@@ -384,18 +998,162 @@ mod tests {
     }
 
     #[test]
-    fn parse_spec_requires_fields() {
-        assert!(parse_spec("gen=ecg minl=8".split_whitespace()).is_err());
-        let s = parse_spec("gen=ecg minl=8 maxl=12 topk=2 seed=9".split_whitespace()).unwrap();
-        assert_eq!(s.top_k, 2);
-        assert_eq!(s.seed, 9);
-        assert!(parse_spec("bogus".split_whitespace()).is_err());
+    fn cancel_queued_job_before_any_step() {
+        // Zero workers are clamped to one, so make that worker busy
+        // with a first job long enough that the second is still queued
+        // when the cancel lands.
+        let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+        let big = svc.submit(JobSpec { min_l: 16, max_l: 120, ..spec() });
+        let victim = svc.submit(spec());
+        svc.cancel(victim).unwrap();
+        assert!(matches!(svc.wait(victim), Some(JobState::Cancelled)));
+        // Terminal jobs cannot be re-cancelled.
+        assert!(svc.cancel(victim).is_err());
+        svc.cancel(big).unwrap();
+        assert!(matches!(svc.wait(big), Some(JobState::Cancelled)));
+        assert_eq!(svc.sched_metrics().cancelled, 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_exceeded_fails_between_steps() {
+        let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+        let id = svc.submit(JobSpec {
+            min_l: 16,
+            max_l: 200,
+            n: Some(4_000),
+            deadline: Some(Duration::from_millis(1)),
+            ..spec()
+        });
+        match svc.wait(id) {
+            Some(JobState::Failed(msg)) => {
+                assert!(msg.contains("deadline exceeded"), "{msg}")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn job_table_stays_bounded_under_churn() {
+        let svc = Service::start_with(ServiceConfig {
+            engine_opts: EngineOptions { segn: 64, ..Default::default() },
+            workers: 2,
+            job_ttl: Duration::ZERO,
+            ..Default::default()
+        })
+        .unwrap();
+        for k in 0..20 {
+            let id = svc.submit(JobSpec { seed: k, min_l: 16, max_l: 17, ..spec() });
+            assert!(matches!(svc.wait(id), Some(JobState::Done { .. })));
+            // Terminal + zero TTL: the next submission's eviction sweep
+            // clears it, so the table never accumulates history.
+            assert!(
+                svc.job_count() <= 3,
+                "job table grew to {} after {k} churn rounds",
+                svc.job_count()
+            );
+        }
+        svc.evict_expired();
+        assert_eq!(svc.job_count(), 0);
+        let (s, d, _, _) = svc.metrics();
+        assert_eq!((s, d), (20, 20), "eviction drops table entries, not counters");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn forget_drops_terminal_jobs_only() {
+        let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 2).unwrap();
+        let id = svc.submit(spec());
+        assert!(matches!(svc.wait(id), Some(JobState::Done { .. })));
+        svc.forget(id).unwrap();
+        assert!(svc.status(id).is_none());
+        assert!(svc.forget(id).is_err(), "double FORGET reports no such job");
+        let running = svc.submit(JobSpec { max_l: 120, ..spec() });
+        assert!(svc.forget(running).is_err(), "active jobs cannot be forgotten");
+        svc.cancel(running).unwrap();
+        svc.wait(running);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_as_failed() {
+        let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+        // One long job occupies the single worker; the rest must still
+        // be queued (or parked mid-sweep) when shutdown lands.
+        let ids: Vec<u64> =
+            (0..5).map(|k| svc.submit(JobSpec { seed: k, max_l: 120, ..spec() })).collect();
+        svc.shutdown();
+        let mut failed_shutdown = 0;
+        for id in ids {
+            match svc.status(id).unwrap() {
+                JobState::Failed(msg) if msg == "shutdown" => failed_shutdown += 1,
+                JobState::Done { .. } => {} // the in-flight step finished the job
+                other => panic!("job {id} after shutdown: {other:?}"),
+            }
+        }
+        assert!(failed_shutdown >= 4, "queued jobs must fail deterministically on shutdown");
+        // Idempotent.
+        svc.shutdown();
+    }
+
+    #[test]
+    fn parse_and_validate_reject_bad_runs() {
+        let cfg = ServiceConfig::default();
+        let parse = |s: &str| parse_run_parts(s.split_whitespace());
+        // Parse-shape errors.
+        assert!(parse("gen=ecg minl=8").is_err(), "missing maxl");
+        assert!(parse("minl=8 maxl=12").is_err(), "missing source");
+        assert!(parse("gen=ecg data=x minl=8 maxl=12").is_err(), "both sources");
+        assert!(parse("bogus").is_err());
+        // Validation errors (each satellite rejection).
+        let check = |s: &str| -> Result<()> {
+            let (spec, _) = parse(s)?;
+            validate_spec(&spec, &cfg)
+        };
+        assert!(check("gen=ecg minl=64 maxl=32").is_err(), "minl > maxl");
+        assert!(check("gen=ecg minl=2 maxl=32").is_err(), "minl < 4");
+        assert!(check("gen=ecg minl=8 maxl=32 topk=0").is_err(), "topk = 0");
+        assert!(check("gen=ecg minl=8 maxl=32 n=999999999999").is_err(), "absurd n");
+        assert!(check("gen=ecg minl=8 maxl=32 n=40").is_err(), "n < 2*maxl");
+        // A well-formed request passes.
+        let (spec, key) = parse("gen=ecg minl=8 maxl=12 topk=2 seed=9 deadline=5000").unwrap();
+        assert!(key.is_none());
+        assert_eq!(spec.top_k, 2);
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.deadline, Some(Duration::from_millis(5000)));
+        assert!(validate_spec(&spec, &cfg).is_ok());
+        let (_, key) = parse("data=mine minl=8 maxl=12").unwrap();
+        assert_eq!(key.as_deref(), Some("mine"));
+    }
+
+    #[test]
+    fn upload_table_is_bounded_and_replaces() {
+        let svc = Service::start_with(ServiceConfig {
+            workers: 1,
+            max_uploads: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        svc.upload("a", TimeSeries::new("a", vec![0.0; 64])).unwrap();
+        svc.upload("b", TimeSeries::new("b", vec![0.0; 64])).unwrap();
+        assert!(svc.upload("c", TimeSeries::new("c", vec![0.0; 64])).is_err(), "table full");
+        // Replacing an existing key is always allowed.
+        svc.upload("a", TimeSeries::new("a", vec![1.0; 64])).unwrap();
+        assert_eq!(svc.upload_count(), 2);
+        assert_eq!(svc.uploaded("a").unwrap().values[0], 1.0);
+        // Forgetting an upload frees its slot for a new name.
+        svc.forget_upload("b").unwrap();
+        assert!(svc.forget_upload("b").is_err(), "double forget reports missing");
+        svc.upload("c", TimeSeries::new("c", vec![0.0; 64])).unwrap();
+        assert_eq!(svc.upload_count(), 2);
+        svc.shutdown();
     }
 
     #[test]
     fn tcp_protocol_end_to_end() {
         let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
-        let svc = std::sync::Arc::new(std::sync::Mutex::new(svc));
+        let svc = std::sync::Arc::new(svc);
         // Bind on an ephemeral port.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -403,7 +1161,7 @@ mod tests {
         let server = std::thread::spawn(move || {
             for stream in listener.incoming() {
                 let stream = stream.unwrap();
-                let done = svc2.lock().unwrap().handle_conn(stream);
+                let done = svc2.handle_conn(stream);
                 if done {
                     break;
                 }
@@ -442,6 +1200,7 @@ mod tests {
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("done=1"), "{line}");
+        assert!(line.contains("sched(steps/preempts/leases)=2/1/2"), "{line}");
         writeln!(conn, "SHUTDOWN").unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();

@@ -23,10 +23,11 @@
 //!   per compared pair) and scans candidates **newest-first**, so on
 //!   signals with any recurrent structure it early-exits after a
 //!   handful of distance evaluations regardless of window size;
-//! - the refresh pass reuses the monitor's [`RollingStats`] storage and
-//!   PD3 workspace, so a warmed monitor's whole ingest loop — refreshes
-//!   included — performs zero heap allocations (proved by the counting
-//!   allocator in `rust/tests/alloc_steady_state.rs`).
+//! - the refresh pass is one rebind + step of a recycled single-length
+//!   [`MerlinSweep`] (which owns the rolling-stats storage) over the
+//!   monitor's PD3 workspace, so a warmed monitor's whole ingest loop —
+//!   refreshes included — performs zero heap allocations (proved by the
+//!   counting allocator in `rust/tests/alloc_steady_state.rs`).
 //!
 //! The alert rule follows the range-discord semantics: a new subsequence
 //! whose nearest non-self match within the window is at least the
@@ -39,12 +40,12 @@
 
 use anyhow::Result;
 
-use super::drag::{pd3_into, Discord, Pd3Config};
+use super::drag::Discord;
+use super::merlin::{MerlinConfig, MerlinSweep, SweepStatus};
 use super::metrics::DragMetrics;
 use super::workspace::MerlinWorkspace;
 use crate::core::distance::{ed2_early_abandon, window_is_flat, znorm_into, znorm_into_flat};
-use crate::core::stats::RollingStats;
-use crate::engines::{Engine, SeriesView};
+use crate::engines::Engine;
 
 /// Configuration for the monitor.
 #[derive(Clone, Debug)]
@@ -177,8 +178,11 @@ pub struct StreamMonitor<'e> {
     /// the scheduled cadence rather than every push — the same
     /// storm-avoidance rationale as `stale_thr`.
     warmed: bool,
-    /// Recycled window statistics (refresh path).
-    stats: RollingStats,
+    /// Recycled single-length MERLIN sweep (refresh path): the monitor
+    /// is just another client of [`MerlinSweep::step`] — one rebind +
+    /// one step per refresh, with the initial threshold seeded from the
+    /// tracked discord.  The sweep owns the recycled window statistics.
+    sweep: MerlinSweep,
     /// Recycled PD3 arena (refresh path).
     ws: MerlinWorkspace,
     /// Cumulative PD3 counters across refreshes.
@@ -195,6 +199,25 @@ impl<'e> StreamMonitor<'e> {
         assert!(cfg.m >= 3 && cfg.window >= 2 * cfg.m, "window must hold >= 2 subsequences");
         let win = SlidingWindow::new(cfg.window, cfg.legacy_slide);
         let m = cfg.m;
+        // Single-length sweep, retry policy matching the legacy refresh
+        // loop: start from the carried threshold (or the MERLIN seed),
+        // halve per retry (the step == 0 schedule), give up after 64
+        // retries or below the legacy *absolute* floor of 1e-4 — the
+        // sweep's floor is `r_floor_frac * 2*sqrt(m)`, so divide it out
+        // rather than silently raising the give-up point (a recurrent
+        // window with a tiny top nnDist would otherwise lose its
+        // tracked discord).  top_k = 0 keeps every survivor in the
+        // workspace for the incremental check's exact-nn lookup.
+        let sweep_cfg = MerlinConfig {
+            min_l: m,
+            max_l: m,
+            top_k: 0,
+            max_retries: 64,
+            r_floor_frac: 1e-4 / (2.0 * (m as f64).sqrt()),
+            ..Default::default()
+        };
+        let sweep = MerlinSweep::new(sweep_cfg, cfg.window)
+            .expect("window must hold >= 2 subsequences");
         Self {
             cfg,
             engine,
@@ -204,7 +227,7 @@ impl<'e> StreamMonitor<'e> {
             current: None,
             stale_thr: None,
             warmed: false,
-            stats: RollingStats { m, mu: Vec::new(), sig: Vec::new() },
+            sweep,
             ws: MerlinWorkspace::new(),
             drag_metrics: DragMetrics::default(),
             new_norm: vec![0.0; m],
@@ -363,63 +386,51 @@ impl<'e> StreamMonitor<'e> {
         Ok(None)
     }
 
-    /// Full PD3 pass over the current window, through the recycled
-    /// stats + workspace (allocation-free once warm).
+    /// Full re-discovery over the current window: one rebind + one step
+    /// of the monitor's single-length [`MerlinSweep`], through the
+    /// recycled workspace (allocation-free once warm).
     fn refresh(&mut self) -> Result<()> {
-        let m = self.cfg.m;
         let win = self.win.as_slice();
         let base = self.ingested - win.len();
-        self.stats.recompute(win, m);
-        let view = SeriesView { t: win, stats: &self.stats };
+        // Adaptive r: seed the sweep's first threshold from the last
+        // known (possibly drained-out) discord distance; `None` falls
+        // back to the MERLIN seed `2*sqrt(m)`.
+        let r_start = self.current.map(|d| d.nn_dist).or(self.stale_thr).map(|d| 0.99 * d);
+        self.sweep.rebind_with(win.len(), r_start)?;
         // Bind, then give the engine its bulk-prefetch hook before the
-        // retry loop.  The bind must be the unconditional prepare_series
-        // (content fingerprint), not prefetch_length's identity-guarded
-        // fast path: the ring's slice identity (ptr, len) cycles with
-        // period window+1 pushes, so a slid window can present the
-        // *same* identity as the previous refresh while holding new
-        // content.  For the native engine the hook itself is a no-op
-        // here — the monitor runs one fixed length, so after a slide the
-        // cache is empty and otherwise every row already sits at `m`
-        // (nothing advances, no batch is counted) — but engines carrying
-        // other cross-refresh per-length state get their bulk pass
-        // before the first pd3 call of the retry loop.
-        self.engine.prepare_series(&view);
-        self.engine.prefetch_length(win, m);
-        // Adaptive r: reuse the last known (possibly drained-out)
-        // discord distance, else start from the MERLIN seed.
-        let mut r = match self.current.map(|d| d.nn_dist).or(self.stale_thr) {
-            Some(d) => 0.99 * d,
-            None => 2.0 * (m as f64).sqrt(),
-        };
+        // step's retry loop.  The bind must be the unconditional
+        // prepare_series (content fingerprint), not prefetch_length's
+        // identity-guarded fast path: the ring's slice identity
+        // (ptr, len) cycles with period window+1 pushes, so a slid
+        // window can present the *same* identity as the previous
+        // refresh while holding new content.  For the native engine the
+        // hook itself is a no-op here — the monitor runs one fixed
+        // length, so after a slide the cache is empty and otherwise
+        // every row already sits at `m` (nothing advances, no batch is
+        // counted) — but engines carrying other cross-refresh
+        // per-length state get their bulk pass before the first pd3
+        // call of the retry loop.
+        self.sweep.bind_series(self.engine, win)?;
         self.refreshes += 1;
         self.warmed = true;
-        for _ in 0..64 {
-            pd3_into(
-                self.engine,
-                &view,
-                r,
-                &Pd3Config::default(),
-                &mut self.drag_metrics,
-                &mut self.ws,
-            )?;
-            let best = self
-                .ws
-                .discords()
-                .iter()
-                .max_by(|a, b| a.nn_dist.partial_cmp(&b.nn_dist).unwrap());
-            if let Some(best) = best {
-                // Rebase the window-local survivor to global coordinates.
+        let _status = self.sweep.step(self.engine, win, &mut self.ws)?;
+        debug_assert_eq!(_status, SweepStatus::Done, "single-length sweep completes in one step");
+        self.drag_metrics.merge(&self.sweep.metrics().drag);
+        let lr = self.sweep.lengths().last().expect("completed sweep has its length result");
+        match lr.discords.first() {
+            // Rebase the window-local top survivor (sorted nnDist-
+            // descending, NaN-last) to global coordinates.  A "discord"
+            // below the legacy absolute floor is an all-twins artifact
+            // of the final floor-clamped pass (the sweep evaluates once
+            // *at* the floor, where the legacy loop stopped short):
+            // latching it would set a near-zero alert threshold and
+            // storm alerts, so treat it as pathological instead.
+            Some(best) if best.nn_dist >= 1e-4 => {
                 self.current =
                     Some(Discord { idx: base + best.idx, m: best.m, nn_dist: best.nn_dist });
-                self.stale_thr = None;
-                return Ok(());
             }
-            r *= 0.5;
-            if r < 1e-4 {
-                break;
-            }
+            _ => self.current = None, // pathological window (all twins)
         }
-        self.current = None; // pathological window (all twins)
         self.stale_thr = None;
         Ok(())
     }

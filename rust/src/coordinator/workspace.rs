@@ -33,6 +33,24 @@ pub struct WorkspaceCounters {
     pub grows: u64,
 }
 
+impl WorkspaceCounters {
+    /// Counter deltas relative to an earlier snapshot (the arena is
+    /// lifetime-counted; stepped sweeps scope it per step so pooled
+    /// arenas attribute reuse to the tenant that actually ran).
+    pub fn since(self, earlier: WorkspaceCounters) -> WorkspaceCounters {
+        WorkspaceCounters {
+            resets: self.resets.saturating_sub(earlier.resets),
+            grows: self.grows.saturating_sub(earlier.grows),
+        }
+    }
+
+    /// Fold another snapshot's counts into this one.
+    pub fn accumulate(&mut self, other: WorkspaceCounters) {
+        self.resets += other.resets;
+        self.grows += other.grows;
+    }
+}
+
 /// Reusable working set for [`super::drag::pd3_into`] (module docs).
 #[derive(Debug, Default)]
 pub struct MerlinWorkspace {

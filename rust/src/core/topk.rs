@@ -5,7 +5,7 @@
 //! per length: the k mutually non-overlapping survivors with the largest
 //! nearest-neighbor distances (§2.1, top-k generalization).
 
-use super::windows::non_overlapping;
+use super::windows::{cmp_score_desc, overlaps};
 
 /// One scored subsequence (index + nearest-neighbor distance, ED units).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -19,10 +19,39 @@ pub struct Scored {
 /// `k = 0` means "all survivors" (still de-overlapped) — used when
 /// collecting every discord for the heatmap.
 pub fn top_k_non_overlapping(items: &[Scored], m: usize, k: usize) -> Vec<Scored> {
-    let pairs: Vec<(usize, f64)> = items.iter().map(|s| (s.idx, s.nn_dist)).collect();
-    let kept = non_overlapping(pairs, m);
-    let take = if k == 0 { kept.len() } else { k.min(kept.len()) };
-    kept[..take].iter().map(|&(idx, nn_dist)| Scored { idx, nn_dist }).collect()
+    let mut scratch = items.to_vec();
+    let mut out = Vec::new();
+    top_k_non_overlapping_into(&mut scratch, m, k, &mut out);
+    out
+}
+
+/// In-place variant of [`top_k_non_overlapping`] for hot callers
+/// (MERLIN's per-length step): sorts `items` (score descending, NaN
+/// last, index-ascending ties — the same total order as
+/// [`super::windows::non_overlapping`]) and fills `out` with the
+/// greedy non-overlapping prefix, truncated to `k` (0 = all).  Both
+/// buffers are caller-owned scratch, so a warmed caller allocates
+/// nothing (the sort is unstable and the comparator total, hence no
+/// merge buffer and a deterministic result).
+pub fn top_k_non_overlapping_into(
+    items: &mut [Scored],
+    m: usize,
+    k: usize,
+    out: &mut Vec<Scored>,
+) {
+    items.sort_unstable_by(|a, b| cmp_score_desc(a.nn_dist, b.nn_dist).then(a.idx.cmp(&b.idx)));
+    out.clear();
+    'outer: for s in items.iter() {
+        if k != 0 && out.len() >= k {
+            break;
+        }
+        for kept in out.iter() {
+            if overlaps(s.idx, kept.idx, m) {
+                continue 'outer;
+            }
+        }
+        out.push(*s);
+    }
 }
 
 #[cfg(test)]

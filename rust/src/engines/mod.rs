@@ -151,6 +151,23 @@ impl EnginePerfCounters {
     pub fn seed_total(&self) -> u64 {
         self.seed_hits + self.seed_advances + self.seed_misses
     }
+
+    /// Fold another snapshot's counts into this one.  Stepped MERLIN
+    /// sweeps scope the engine counters per step (snapshot before,
+    /// [`EnginePerfCounters::since`] after, accumulate into the run's
+    /// metrics), so a shared engine interleaving several tenants still
+    /// attributes traffic to the job that caused it.
+    pub fn accumulate(&mut self, other: EnginePerfCounters) {
+        self.seed_hits += other.seed_hits;
+        self.seed_advances += other.seed_advances;
+        self.seed_misses += other.seed_misses;
+        self.seed_prefetched += other.seed_prefetched;
+        self.prefetch_batches += other.prefetch_batches;
+        self.batches += other.batches;
+        self.batch_tiles += other.batch_tiles;
+        self.clamp_saturations += other.clamp_saturations;
+        self.flat_cells += other.flat_cells;
+    }
 }
 
 /// A tile-computation backend.

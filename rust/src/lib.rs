@@ -30,5 +30,5 @@ pub mod testkit;
 pub mod util;
 
 pub use crate::coordinator::drag::Discord;
-pub use crate::coordinator::merlin::{Merlin, MerlinConfig, MerlinResult};
+pub use crate::coordinator::merlin::{Merlin, MerlinConfig, MerlinResult, MerlinSweep, SweepStatus};
 pub use crate::core::series::TimeSeries;

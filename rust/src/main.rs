@@ -13,7 +13,7 @@ use anyhow::Result;
 use palmad::analysis::{heatmap::Heatmap, image, ranking, report::Table};
 use palmad::coordinator::config::{build_engine, EngineChoice, EngineOptions};
 use palmad::coordinator::merlin::{Merlin, MerlinConfig, StatsBackend};
-use palmad::coordinator::service::Service;
+use palmad::coordinator::service::{Service, ServiceConfig};
 use palmad::core::series::TimeSeries;
 use palmad::gen::registry;
 use palmad::util::cli::{Cli, Command};
@@ -51,9 +51,11 @@ fn cli() -> Cli {
                 .opt("out", "heatmap.ppm", "output heatmap image (PPM)"),
         )
         .command(
-            Command::new("serve", "run the TCP job service")
-                .opt("addr", "127.0.0.1:7700", "listen address")
-                .opt("workers", "2", "worker threads (one engine each)")
+            Command::new("serve", "run the TCP job service (step scheduler)")
+                .opt("addr", "127.0.0.1:7700", "listen address (port 0 = ephemeral)")
+                .opt("workers", "2", "step-worker threads")
+                .opt("pool", "0", "engine lease pool capacity (0 = one per worker)")
+                .opt("ttl-secs", "600", "terminal-job retention before TTL eviction")
                 .opt("engine", "native", "tile engine: native | xla")
                 .opt("segn", "256", "tile edge")
                 .opt("kernel", "", "native tile kernel: lanes4 | scalar"),
@@ -192,9 +194,14 @@ fn cmd_heatmap(args: &palmad::util::cli::Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &palmad::util::cli::Args) -> Result<()> {
-    let opts = engine_opts(args)?;
-    let workers = args.get_usize("workers")?;
-    let svc = Service::start(opts, workers)?;
+    let cfg = ServiceConfig {
+        engine_opts: engine_opts(args)?,
+        workers: args.get_usize("workers")?,
+        pool_capacity: args.get_usize("pool")?,
+        job_ttl: std::time::Duration::from_secs(args.get_u64("ttl-secs")?),
+        ..Default::default()
+    };
+    let svc = Service::start_with(cfg)?;
     svc.serve(args.get("addr")?)
 }
 

@@ -26,7 +26,10 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use palmad::coordinator::config::EngineOptions;
 use palmad::coordinator::drag::{pd3_into, Pd3Config};
+use palmad::coordinator::lease::EnginePool;
+use palmad::coordinator::merlin::{MerlinConfig, MerlinSweep};
 use palmad::coordinator::metrics::DragMetrics;
 use palmad::coordinator::streaming::{StreamConfig, StreamMonitor};
 use palmad::coordinator::workspace::MerlinWorkspace;
@@ -256,6 +259,70 @@ fn merlin_retry_loop_is_allocation_free() {
     let c = ws.counters();
     assert!(c.resets >= 3 * schedule.len() as u64, "2 warmup + >=1 measured passes: {c:?}");
     assert_eq!(c.grows, 1, "only the cold rebind may grow: {c:?}");
+}
+
+/// The multi-tenant claim behind the step scheduler: two jobs on
+/// *different* series, interleaving sweep steps through a shared keyed
+/// lease pool, reach a zero-allocation steady state.  Sticky checkouts
+/// hand each tenant back the engine whose seed cache is bound to its
+/// series (so no fingerprint rebinds churn rows) and the workspace it
+/// warmed; the sweeps themselves recycle their stats, result, and
+/// selection buffers across `rebind`s.
+#[test]
+fn interleaved_lease_pool_steps_are_allocation_free() {
+    let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let t_a = random_walk(1_500, 11);
+    let t_b = random_walk(1_500, 12);
+    let pool = EnginePool::new(
+        &EngineOptions { segn: 64, threads: 2, ..Default::default() },
+        2,
+    )
+    .unwrap();
+    let cfg = MerlinConfig { min_l: 24, max_l: 30, top_k: 1, ..Default::default() };
+    let mut sweep_a = MerlinSweep::new(cfg.clone(), t_a.len()).unwrap();
+    let mut sweep_b = MerlinSweep::new(cfg, t_b.len()).unwrap();
+    // One pass = both jobs swept to completion with strictly
+    // interleaved steps, each through a fresh keyed checkout — the
+    // scheduler's steady-state shape.
+    let mut pass = |sa: &mut MerlinSweep, sb: &mut MerlinSweep| {
+        sa.rebind(t_a.len()).unwrap();
+        sb.rebind(t_b.len()).unwrap();
+        while !(sa.done() && sb.done()) {
+            if !sa.done() {
+                let mut lease = pool.checkout(1);
+                let (engine, ws) = lease.engine_and_workspace();
+                sa.step(engine, &t_a, ws).unwrap();
+            }
+            if !sb.done() {
+                let mut lease = pool.checkout(2);
+                let (engine, ws) = lease.engine_and_workspace();
+                sb.step(engine, &t_b, ws).unwrap();
+            }
+        }
+    };
+    // Warmup: seed caches fill, arenas and sweep buffers ratchet to
+    // their high-water marks, both tenants key their pool entries.
+    for _ in 0..3 {
+        pass(&mut sweep_a, &mut sweep_b);
+    }
+    assert_reaches_alloc_free_steady_state("interleaved lease-pool sweeps", 5, || {
+        pass(&mut sweep_a, &mut sweep_b);
+    });
+    // Sanity: both sweeps really ran and the pool stayed sticky — no
+    // tenant ever had to steal the other's engine.
+    assert_eq!(sweep_a.lengths().len(), 7);
+    assert_eq!(sweep_b.lengths().len(), 7);
+    assert!(sweep_a.lengths().iter().all(|l| !l.discords.is_empty()));
+    let c = pool.counters();
+    assert_eq!(c.rebinds, 0, "sticky checkouts must never steal here: {c:?}");
+    assert!(c.sticky_hits >= c.leases - 2, "all but the first checkouts are sticky: {c:?}");
+    // Tenant A's final pass (metrics reset on rebind) restarted at
+    // min_l on a cache full of max_l rows — misses into recycled row
+    // storage — and then swept on prefetched hits, one bulk batch per
+    // advanced length.
+    let seed = sweep_a.metrics().seed;
+    assert!(seed.seed_hits > 0, "tenant A's steps must hit its warm seed cache: {seed:?}");
+    assert_eq!(seed.prefetch_batches, 6, "one bulk prefetch per advanced length: {seed:?}");
 }
 
 #[test]

@@ -1,19 +1,117 @@
-//! Service-level integration: job lifecycle under load, failure isolation,
-//! and protocol robustness against malformed input.
+//! Service-level integration: job lifecycle under load, scheduler
+//! fairness, failure isolation, the DATA/CANCEL protocol verbs, and
+//! robustness against malformed input.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
 
 use palmad::coordinator::config::EngineOptions;
 use palmad::coordinator::service::{JobSpec, JobState, Service};
 
 fn spec(seed: u64) -> JobSpec {
-    JobSpec { dataset: "respiration".into(), n: Some(3_000), seed, min_l: 32, max_l: 36, top_k: 1 }
+    JobSpec {
+        dataset: "respiration".into(),
+        n: Some(3_000),
+        seed,
+        min_l: 32,
+        max_l: 36,
+        top_k: 1,
+        ..Default::default()
+    }
+}
+
+/// In-process accept loop handling each connection on its own thread
+/// (the `Service::serve` shape), for tests that drive the TCP surface
+/// directly.  A SHUTDOWN on any connection stops the listener.
+fn spawn_accept_loop(svc: &Arc<Service>) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let svc = Arc::clone(svc);
+    let server = std::thread::spawn(move || {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut conns = Vec::new();
+        for stream in listener.incoming() {
+            let stream = stream.unwrap();
+            if stop.load(Ordering::Acquire) {
+                break;
+            }
+            let svc = Arc::clone(&svc);
+            let stop = Arc::clone(&stop);
+            conns.push(std::thread::spawn(move || {
+                if svc.handle_conn_public(stream) {
+                    stop.store(true, Ordering::Release);
+                    let _ = TcpStream::connect(addr); // wake the accept loop
+                }
+            }));
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+    });
+    (addr, server)
+}
+
+struct Client {
+    conn: TcpStream,
+    reader: BufReader<TcpStream>,
+    line: String,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let conn = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        Self { conn, reader, line: String::new() }
+    }
+
+    fn send(&mut self, req: &str) -> String {
+        writeln!(self.conn, "{req}").unwrap();
+        self.read_line()
+    }
+
+    fn read_line(&mut self) -> String {
+        self.line.clear();
+        self.reader.read_line(&mut self.line).unwrap();
+        self.line.trim().to_string()
+    }
+
+    /// RUN …, asserting acceptance; returns the job id.
+    fn run(&mut self, req: &str) -> u64 {
+        let resp = self.send(req);
+        assert!(resp.starts_with("OK JOB "), "{req} -> {resp}");
+        resp.rsplit(' ').next().unwrap().parse().unwrap()
+    }
+
+    /// Poll STATUS until DONE; returns the DISCORD line count.
+    fn wait_done(&mut self, id: u64) -> usize {
+        loop {
+            let resp = self.send(&format!("STATUS {id}"));
+            if resp.starts_with("OK DONE") {
+                let mut count = 0;
+                loop {
+                    let l = self.read_line();
+                    if l == "END" {
+                        break;
+                    }
+                    assert!(l.starts_with("DISCORD "), "{l}");
+                    count += 1;
+                }
+                return count;
+            }
+            assert!(
+                resp.starts_with("OK QUEUED") || resp.starts_with("OK RUNNING"),
+                "job {id}: {resp}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
 }
 
 #[test]
 fn mixed_success_and_failure_batch() {
-    let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 3).unwrap();
+    let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 3).unwrap();
     let ok_ids: Vec<u64> = (0..4).map(|k| svc.submit(spec(k))).collect();
     let bad_dataset = svc.submit(JobSpec { dataset: "missing".into(), ..spec(9) });
     let bad_range = svc.submit(JobSpec { min_l: 2_000, max_l: 2_100, ..spec(10) });
@@ -32,42 +130,38 @@ fn mixed_success_and_failure_batch() {
 
 #[test]
 fn protocol_rejects_garbage_without_dying() {
-    let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap();
-    let svc = std::sync::Arc::new(svc);
-    let svc2 = std::sync::Arc::clone(&svc);
-    let server = std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            if svc2.handle_conn_public(stream.unwrap()) {
-                break;
-            }
-        }
-    });
-    let mut conn = TcpStream::connect(addr).unwrap();
-    let mut reader = BufReader::new(conn.try_clone().unwrap());
-    let mut line = String::new();
-    let mut roundtrip = |conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str| {
-        writeln!(conn, "{req}").unwrap();
-        line.clear();
-        reader.read_line(&mut line).unwrap();
-        line.trim().to_string()
-    };
-    assert!(roundtrip(&mut conn, &mut reader, "FROBNICATE").starts_with("ERR"));
-    assert!(roundtrip(&mut conn, &mut reader, "RUN nonsense").starts_with("ERR"));
-    assert!(roundtrip(&mut conn, &mut reader, "RUN gen=ecg2").starts_with("ERR"));
-    assert!(roundtrip(&mut conn, &mut reader, "STATUS 999").starts_with("ERR"));
-    assert!(roundtrip(&mut conn, &mut reader, "STATUS notanumber").starts_with("ERR"));
+    let svc =
+        Arc::new(Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap());
+    let (addr, server) = spawn_accept_loop(&svc);
+    let mut c = Client::connect(addr);
+    assert!(c.send("FROBNICATE").starts_with("ERR"));
+    assert!(c.send("RUN nonsense").starts_with("ERR"));
+    assert!(c.send("RUN gen=ecg2").starts_with("ERR"));
+    assert!(c.send("STATUS 999").starts_with("ERR"));
+    assert!(c.send("STATUS notanumber").starts_with("ERR"));
+    assert!(c.send("CANCEL 999").starts_with("ERR"));
+    assert!(c.send("FORGET 999").starts_with("ERR"));
+    assert!(c.send("DATA name=x").starts_with("ERR"), "DATA without n=");
+    // Parse-time validation: rejected before any worker sees the job.
+    assert!(c.send("RUN gen=ecg2 n=3000 minl=64 maxl=32").starts_with("ERR"), "minl > maxl");
+    assert!(c.send("RUN gen=ecg2 n=3000 minl=2 maxl=32").starts_with("ERR"), "minl < 4");
+    assert!(c.send("RUN gen=ecg2 n=3000 minl=32 maxl=40 topk=0").starts_with("ERR"), "topk=0");
+    assert!(c.send("RUN gen=ecg2 n=99999999999 minl=32 maxl=40").starts_with("ERR"), "absurd n");
+    assert!(c.send("RUN gen=ecg2 n=60 minl=32 maxl=40").starts_with("ERR"), "n < 2*maxl");
+    assert!(c.send("RUN data=ghost minl=32 maxl=40").starts_with("ERR"), "unknown upload");
     // Still alive for a well-formed request.
-    let ok = roundtrip(&mut conn, &mut reader, "RUN gen=respiration n=3000 minl=32 maxl=33 seed=1");
+    let ok = c.send("RUN gen=respiration n=3000 minl=32 maxl=33 seed=1");
     assert!(ok.starts_with("OK JOB"), "{ok}");
-    assert_eq!(roundtrip(&mut conn, &mut reader, "SHUTDOWN"), "OK BYE");
+    // Nothing above ever reached a worker: jobs=1 submitted total.
+    let metrics = c.send("METRICS");
+    assert!(metrics.contains("jobs=1"), "{metrics}");
+    assert_eq!(c.send("SHUTDOWN"), "OK BYE");
     server.join().unwrap();
 }
 
 #[test]
 fn many_small_jobs_saturate_workers() {
-    let mut svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 4).unwrap();
+    let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 4).unwrap();
     let ids: Vec<u64> = (0..12)
         .map(|k| {
             svc.submit(JobSpec {
@@ -76,7 +170,7 @@ fn many_small_jobs_saturate_workers() {
                 seed: k,
                 min_l: 20,
                 max_l: 22,
-                top_k: 1,
+                ..spec(k)
             })
         })
         .collect();
@@ -88,5 +182,154 @@ fn many_small_jobs_saturate_workers() {
         }
     }
     assert_eq!(total, 12 * 3);
+    svc.shutdown();
+}
+
+/// Scheduler-fairness acceptance: one large job and several small jobs
+/// submitted together (large first, single worker — the configuration
+/// where the old run-to-completion service head-of-line-blocked
+/// everything).  Under the step scheduler every small job completes
+/// while the large one is still sweeping.
+#[test]
+fn small_jobs_finish_before_the_large_one() {
+    let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+    let large = svc.submit(JobSpec { min_l: 32, max_l: 140, n: Some(4_000), ..spec(1) });
+    let small_ids: Vec<u64> = (0..3)
+        .map(|k| svc.submit(JobSpec { min_l: 32, max_l: 34, ..spec(k + 2) }))
+        .collect();
+    for id in &small_ids {
+        match svc.wait(*id) {
+            Some(JobState::Done { discords, .. }) => assert_eq!(discords.len(), 3),
+            other => panic!("small job {id}: {other:?}"),
+        }
+    }
+    // The large job (109 lengths) is still going: round-robin stepping
+    // let the 3-length jobs through after at most a few of its steps.
+    match svc.status(large).unwrap() {
+        JobState::Queued | JobState::Running => {}
+        other => panic!("large job already terminal: {other:?}"),
+    }
+    let (done, total) = svc.progress(large).unwrap();
+    assert_eq!(total, 109);
+    assert!(done < total, "large job must not have finished yet");
+    let sm = svc.sched_metrics();
+    assert!(sm.preempts >= 3, "small jobs required preemptive requeues: {sm:?}");
+    svc.cancel(large).unwrap();
+    assert!(matches!(svc.wait(large), Some(JobState::Cancelled)));
+    svc.shutdown();
+}
+
+/// Protocol end-to-end under concurrency: three clients drive
+/// RUN/DATA/STATUS/CANCEL/METRICS simultaneously against one service,
+/// and small jobs complete (interleaved) before a deliberately large
+/// one finishes.
+#[test]
+fn three_concurrent_clients_interleave() {
+    let svc =
+        Arc::new(Service::start(EngineOptions { segn: 64, ..Default::default() }, 2).unwrap());
+    let (addr, server) = spawn_accept_loop(&svc);
+
+    // Client A: a large job it will cancel once the others are done.
+    let mut a = Client::connect(addr);
+    let large = a.run("RUN gen=respiration n=6000 minl=32 maxl=240 seed=1");
+
+    // Clients B and C run concurrently: B uploads a series and sweeps
+    // it; C runs small generated jobs.
+    let b = std::thread::spawn(move || {
+        let mut c = Client::connect(addr);
+        writeln!(c.conn, "DATA name=mine n=600").unwrap();
+        // An obvious anomaly at 300..316 in a sine wave, uploaded in
+        // chunks of 100 values per line.
+        let vals: Vec<f64> = (0..600)
+            .map(|i| {
+                let base = (i as f64 * 0.2).sin();
+                if (300..316).contains(&i) {
+                    base + 3.0
+                } else {
+                    base
+                }
+            })
+            .collect();
+        for chunk in vals.chunks(100) {
+            let line: Vec<String> = chunk.iter().map(|v| format!("{v}")).collect();
+            writeln!(c.conn, "{}", line.join(" ")).unwrap();
+        }
+        assert_eq!(c.read_line(), "OK DATA mine n=600");
+        let id = c.run("RUN data=mine minl=16 maxl=18 topk=1");
+        assert_eq!(c.wait_done(id), 3);
+        id
+    });
+    let c_thread = std::thread::spawn(move || {
+        let mut c = Client::connect(addr);
+        let mut ids = Vec::new();
+        for k in 0..3 {
+            ids.push(c.run(&format!("RUN gen=ecg2 n=2000 minl=16 maxl=17 seed={k}")));
+        }
+        for id in &ids {
+            assert_eq!(c.wait_done(*id), 2);
+        }
+        ids
+    });
+
+    let b_id = b.join().unwrap();
+    let c_ids = c_thread.join().unwrap();
+    assert!(!c_ids.contains(&b_id), "job ids are unique across clients");
+
+    // Every small job finished; the 209-length job must still be
+    // running — that is the interleaved completion order the step
+    // scheduler guarantees.
+    let status = a.send(&format!("STATUS {large}"));
+    assert!(
+        status.starts_with("OK RUNNING") || status.starts_with("OK QUEUED"),
+        "large job should still be in flight: {status}"
+    );
+    assert_eq!(a.send(&format!("CANCEL {large}")), format!("OK CANCELLED {large}"));
+    // The cancel lands at the next step boundary.
+    loop {
+        let s = a.send(&format!("STATUS {large}"));
+        if s == "OK CANCELLED" {
+            break;
+        }
+        assert!(s.starts_with("OK RUNNING"), "{s}");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let metrics = a.send("METRICS");
+    assert!(metrics.contains("done=4"), "{metrics}");
+    assert!(metrics.contains("cancelled=1"), "{metrics}");
+    assert!(metrics.contains("uploads=1"), "{metrics}");
+    assert!(metrics.contains("sched(steps/preempts/leases)="), "{metrics}");
+    assert_eq!(a.send("SHUTDOWN"), "OK BYE");
+    drop(a);
+    server.join().unwrap();
+    svc.shutdown();
+}
+
+/// Graceful-drain satellite, via an in-process listener: SHUTDOWN over
+/// the wire lets in-flight steps finish, fails queued jobs with
+/// "shutdown", and joins the workers (handle_conn_public reports the
+/// request; the embedder calls Service::shutdown, as serve() does).
+#[test]
+fn tcp_shutdown_drains_queued_jobs() {
+    let svc =
+        Arc::new(Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap());
+    let (addr, server) = spawn_accept_loop(&svc);
+    let mut c = Client::connect(addr);
+    let ids: Vec<u64> = (0..4)
+        .map(|k| c.run(&format!("RUN gen=respiration n=4000 minl=32 maxl=140 seed={k}")))
+        .collect();
+    assert_eq!(c.send("SHUTDOWN"), "OK BYE");
+    server.join().unwrap();
+    svc.shutdown(); // the drain the serve() accept loop would run
+    let mut failed = 0;
+    for id in ids {
+        match svc.status(id).unwrap() {
+            JobState::Failed(msg) if msg == "shutdown" => failed += 1,
+            JobState::Done { .. } => {}
+            other => panic!("job {id} after drain: {other:?}"),
+        }
+    }
+    assert!(failed >= 3, "queued jobs must fail with 'shutdown', got {failed}");
+    // Workers are joined: a second shutdown is a no-op and the service
+    // accepts no more steps.
     svc.shutdown();
 }

@@ -24,6 +24,16 @@
 #                                # env, so the whole differential harness
 #                                # and the zero-allocation proofs gate
 #                                # each kernel.
+#   scripts/ci.sh --service-smoke
+#                                # boot the TCP job service on an
+#                                # ephemeral port and drive a scripted
+#                                # client session (parse rejections, a
+#                                # DATA upload swept end-to-end, a job
+#                                # cancelled mid-sweep, METRICS, graceful
+#                                # SHUTDOWN), asserting the server exits
+#                                # cleanly.  Also part of the default
+#                                # (non --fast) gate, which builds the
+#                                # release binary it needs anyway.
 #
 # The workspace is fully offline (vendored path deps), so no network is
 # needed.  `cargo fmt --check` and `cargo clippy -- -D warnings` keep the
@@ -41,12 +51,14 @@ FAST=0
 BENCH_SMOKE=0
 CLIPPY_ONLY=0
 KERNEL_MATRIX=0
+SERVICE_SMOKE=0
 for arg in "$@"; do
   case "$arg" in
     --fast) FAST=1 ;;
     --bench-smoke) BENCH_SMOKE=1 ;;
     --clippy) CLIPPY_ONLY=1 ;;
     --kernel-matrix) KERNEL_MATRIX=1 ;;
+    --service-smoke) SERVICE_SMOKE=1 ;;
     *) echo "unknown flag: $arg" >&2; exit 2 ;;
   esac
 done
@@ -65,10 +77,53 @@ fi
 if [ "$FAST" -eq 0 ]; then
   echo "== cargo build --release =="
   cargo build --release
+  # The service smoke rides the default gate: the release binary is
+  # already built, the scripted client is one small example on top.
+  SERVICE_SMOKE=1
 fi
 
 echo "== cargo test -q =="
 cargo test -q
+
+if [ "$SERVICE_SMOKE" -eq 1 ]; then
+  echo "== service smoke (ephemeral port, scripted client) =="
+  cargo build --release --bin palmad --example service_client
+  SMOKE_LOG=$(mktemp)
+  target/release/palmad serve --addr 127.0.0.1:0 --workers 2 >"$SMOKE_LOG" 2>&1 &
+  SERVER_PID=$!
+  ADDR=""
+  for _ in $(seq 1 100); do
+    ADDR=$(grep -m1 '^LISTENING ' "$SMOKE_LOG" | cut -d' ' -f2 || true)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+      echo "service smoke: server died before listening" >&2
+      cat "$SMOKE_LOG" >&2
+      exit 1
+    fi
+    sleep 0.1
+  done
+  if [ -z "$ADDR" ]; then
+    echo "service smoke: no LISTENING line from the server" >&2
+    cat "$SMOKE_LOG" >&2
+    kill "$SERVER_PID" 2>/dev/null || true
+    exit 1
+  fi
+  if ! target/release/examples/service_client "$ADDR"; then
+    echo "service smoke: scripted client session failed" >&2
+    cat "$SMOKE_LOG" >&2
+    kill "$SERVER_PID" 2>/dev/null || true
+    exit 1
+  fi
+  # The client ends with SHUTDOWN: the server must drain and exit 0 on
+  # its own (no kill).
+  if ! wait "$SERVER_PID"; then
+    echo "service smoke: server did not shut down cleanly" >&2
+    cat "$SMOKE_LOG" >&2
+    exit 1
+  fi
+  rm -f "$SMOKE_LOG"
+  echo "service smoke: clean shutdown"
+fi
 
 if [ "$KERNEL_MATRIX" -eq 1 ]; then
   # The conformance + allocation suites under each tile kernel.  The
