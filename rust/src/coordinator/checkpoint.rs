@@ -1,0 +1,345 @@
+//! Crash-safe job checkpoints: a versioned binary snapshot of a
+//! service job (spec + [`MerlinSweep`] state + engine seed-cache rows)
+//! written at step boundaries so an interrupted sweep resumes exactly
+//! where it stopped — bit-identically, see `rust/tests/chaos_faults.rs`.
+//!
+//! Durability discipline: [`CheckpointStore::save`] writes a temp file
+//! in the same directory, `sync_all`s it, then atomically renames it
+//! over `job-<id>.ckpt`.  A crash at any instant therefore leaves
+//! either the previous complete checkpoint or the new complete
+//! checkpoint, never a torn file; the [`binio`] envelope (magic,
+//! version, FNV-1a checksum) rejects anything that slipped through
+//! anyway (filesystem corruption, manual tampering).
+//!
+//! What is and is not persisted:
+//! - generated series (`gen=` jobs) are *not* stored — they
+//!   rematerialize deterministically from `(dataset, n, seed)`;
+//! - uploaded series (`data=` jobs) *are* stored verbatim, because the
+//!   upload table does not survive a restart;
+//! - engine seed-cache rows are carried because a fresh QT seed dot
+//!   rounds differently in the low-order bits than the incremental
+//!   cross-length advance — without them a resume would be numerically
+//!   close but not bit-identical (see `engines::SeedRowSnapshot`);
+//! - deadlines restart from resume time (the wall-clock budget is a
+//!   protection against runaway jobs, not a promise about outages).
+//!
+//! [`binio`]: crate::util::binio
+//! [`MerlinSweep`]: super::merlin::MerlinSweep
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::engines::SeedRowSnapshot;
+use crate::util::binio::{seal, unseal, ByteReader, ByteWriter};
+
+const JOB_MAGIC: &[u8; 8] = b"PALMJOB\0";
+const JOB_VERSION: u32 = 1;
+
+/// Everything needed to reconstruct a parked job after a crash.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobCheckpoint {
+    pub job_id: u64,
+    /// Generator dataset name (`gen=` jobs); empty for uploads.
+    pub dataset: String,
+    pub n: Option<u64>,
+    pub seed: u64,
+    pub min_l: u64,
+    pub max_l: u64,
+    pub top_k: u64,
+    /// Original deadline budget in ms; re-armed from resume time.
+    pub deadline_ms: Option<u64>,
+    /// `(name, values)` for uploaded series; `None` for generated ones.
+    pub series: Option<(String, Vec<f64>)>,
+    /// Sealed [`MerlinSweep::snapshot`] blob (its own inner envelope —
+    /// cheap, and it keeps the sweep codec independently verifiable).
+    ///
+    /// [`MerlinSweep::snapshot`]: super::merlin::MerlinSweep::snapshot
+    pub sweep: Vec<u8>,
+    /// Seed-cache rows exported from the leased engine right after the
+    /// checkpointed step (i.e. already advanced/prefetched to the next
+    /// length), so the resumed engine replays verbatim-hit seeding.
+    pub seed_rows: Vec<SeedRowSnapshot>,
+}
+
+impl JobCheckpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(self.job_id);
+        w.put_str(&self.dataset);
+        w.put_opt_u64(self.n);
+        w.put_u64(self.seed);
+        w.put_u64(self.min_l);
+        w.put_u64(self.max_l);
+        w.put_u64(self.top_k);
+        w.put_opt_u64(self.deadline_ms);
+        match &self.series {
+            Some((name, values)) => {
+                w.put_bool(true);
+                w.put_str(name);
+                w.put_f64s(values);
+            }
+            None => w.put_bool(false),
+        }
+        w.put_bytes(&self.sweep);
+        w.put_usize(self.seed_rows.len());
+        for r in &self.seed_rows {
+            w.put_usize(r.a);
+            w.put_usize(r.cs);
+            w.put_usize(r.m);
+            w.put_f64s(&r.qt);
+        }
+        seal(JOB_MAGIC, JOB_VERSION, w.bytes())
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let payload = unseal(JOB_MAGIC, JOB_VERSION, bytes)?;
+        let mut r = ByteReader::new(payload);
+        let job_id = r.get_u64()?;
+        let dataset = r.get_str()?;
+        let n = r.get_opt_u64()?;
+        let seed = r.get_u64()?;
+        let min_l = r.get_u64()?;
+        let max_l = r.get_u64()?;
+        let top_k = r.get_u64()?;
+        let deadline_ms = r.get_opt_u64()?;
+        let series = if r.get_bool()? {
+            let name = r.get_str()?;
+            let values = r.get_f64s()?;
+            Some((name, values))
+        } else {
+            None
+        };
+        let sweep = r.get_bytes()?.to_vec();
+        let n_rows = r.get_usize()?;
+        let mut seed_rows = Vec::with_capacity(n_rows.min(4096));
+        for _ in 0..n_rows {
+            let a = r.get_usize()?;
+            let cs = r.get_usize()?;
+            let m = r.get_usize()?;
+            let qt = r.get_f64s()?;
+            seed_rows.push(SeedRowSnapshot { a, cs, m, qt });
+        }
+        r.finish()?;
+        let ckpt = Self {
+            job_id,
+            dataset,
+            n,
+            seed,
+            min_l,
+            max_l,
+            top_k,
+            deadline_ms,
+            series,
+            sweep,
+            seed_rows,
+        };
+        if ckpt.dataset.is_empty() && ckpt.series.is_none() {
+            bail!("checkpoint for job {job_id} names no series source");
+        }
+        Ok(ckpt)
+    }
+}
+
+/// A directory of `job-<id>.ckpt` files with atomic-rename saves.
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a checkpoint directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path(&self, job_id: u64) -> PathBuf {
+        self.dir.join(format!("job-{job_id}.ckpt"))
+    }
+
+    /// Durably persist a checkpoint: write `.palmad-tmp-<id>` in the
+    /// same directory, fsync it, rename over the final name.  Readers
+    /// never observe a partial file.
+    pub fn save(&self, ckpt: &JobCheckpoint) -> Result<()> {
+        let bytes = ckpt.encode();
+        let tmp = self.dir.join(format!(".palmad-tmp-{}", ckpt.job_id));
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            use std::io::Write;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        let dst = self.path(ckpt.job_id);
+        std::fs::rename(&tmp, &dst)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), dst.display()))?;
+        Ok(())
+    }
+
+    pub fn load(&self, job_id: u64) -> Result<JobCheckpoint> {
+        let path = self.path(job_id);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
+        let ckpt = JobCheckpoint::decode(&bytes)
+            .with_context(|| format!("decode checkpoint {}", path.display()))?;
+        if ckpt.job_id != job_id {
+            bail!("checkpoint {} claims job id {}", path.display(), ckpt.job_id);
+        }
+        Ok(ckpt)
+    }
+
+    pub fn exists(&self, job_id: u64) -> bool {
+        self.path(job_id).is_file()
+    }
+
+    /// Remove a job's checkpoint (no-op if absent — removal races with
+    /// nothing since saves go through rename).
+    pub fn remove(&self, job_id: u64) {
+        let _ = std::fs::remove_file(self.path(job_id));
+    }
+
+    /// Job ids with a checkpoint on disk, ascending.  Temp files and
+    /// foreign names are ignored.
+    pub fn scan(&self) -> Vec<u64> {
+        let mut ids = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return ids };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(id) = name
+                .strip_prefix("job-")
+                .and_then(|s| s.strip_suffix(".ckpt"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                ids.push(id);
+            }
+        }
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_store(tag: &str) -> CheckpointStore {
+        let dir = std::env::temp_dir()
+            .join(format!("palmad-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        CheckpointStore::new(dir).unwrap()
+    }
+
+    fn sample(job_id: u64) -> JobCheckpoint {
+        JobCheckpoint {
+            job_id,
+            dataset: "ecg2".into(),
+            n: Some(2_000),
+            seed: 7,
+            min_l: 16,
+            max_l: 20,
+            top_k: 1,
+            deadline_ms: Some(5_000),
+            series: None,
+            sweep: vec![1, 2, 3, 4, 5],
+            seed_rows: vec![
+                SeedRowSnapshot { a: 0, cs: 64, m: 16, qt: vec![1.5, -0.0, f64::NAN] },
+                SeedRowSnapshot { a: 128, cs: 0, m: 16, qt: vec![2.25] },
+            ],
+        }
+    }
+
+    #[test]
+    fn codec_round_trips_every_field() {
+        let ckpt = sample(42);
+        let back = JobCheckpoint::decode(&ckpt.encode()).unwrap();
+        // NaN != NaN breaks PartialEq; compare bits for the qt rows.
+        assert_eq!(back.job_id, 42);
+        assert_eq!(back.dataset, "ecg2");
+        assert_eq!(back.n, Some(2_000));
+        assert_eq!(
+            (back.seed, back.min_l, back.max_l, back.top_k, back.deadline_ms),
+            (7, 16, 20, 1, Some(5_000))
+        );
+        assert_eq!(back.sweep, vec![1, 2, 3, 4, 5]);
+        assert_eq!(back.seed_rows.len(), 2);
+        for (a, b) in ckpt.seed_rows.iter().zip(&back.seed_rows) {
+            assert_eq!((a.a, a.cs, a.m), (b.a, b.cs, b.m));
+            let ab: Vec<u64> = a.qt.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u64> = b.qt.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "qt rows must round-trip to the bit");
+        }
+
+        let uploaded = JobCheckpoint {
+            dataset: String::new(),
+            series: Some(("mine".into(), vec![0.5, 1.5, 2.5])),
+            deadline_ms: None,
+            n: None,
+            // NaN != NaN would defeat the PartialEq comparison below.
+            seed_rows: vec![SeedRowSnapshot { a: 4, cs: 0, m: 8, qt: vec![3.75] }],
+            ..sample(9)
+        };
+        let back = JobCheckpoint::decode(&uploaded.encode()).unwrap();
+        assert_eq!(back, uploaded);
+    }
+
+    #[test]
+    fn decode_rejects_corruption_and_sourceless_jobs() {
+        let bytes = sample(1).encode();
+        for cut in 0..bytes.len() {
+            assert!(JobCheckpoint::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        for i in (0..bytes.len()).step_by(5) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x10;
+            assert!(JobCheckpoint::decode(&bad).is_err(), "flip at {i}");
+        }
+        let orphan = JobCheckpoint { dataset: String::new(), series: None, ..sample(2) };
+        assert!(JobCheckpoint::decode(&orphan.encode()).is_err());
+    }
+
+    #[test]
+    fn store_saves_atomically_and_scans() {
+        let store = temp_store("scan");
+        assert!(store.scan().is_empty());
+        assert!(!store.exists(3));
+        assert!(store.load(3).is_err(), "missing checkpoint is an error");
+
+        store.save(&sample(3)).unwrap();
+        store.save(&sample(11)).unwrap();
+        // Overwrite in place: still one file per job.
+        store.save(&JobCheckpoint { top_k: 2, ..sample(3) }).unwrap();
+        assert_eq!(store.scan(), vec![3, 11]);
+        assert!(store.exists(3));
+        assert_eq!(store.load(3).unwrap().top_k, 2, "save replaces");
+
+        // No temp droppings survive a completed save.
+        let leftovers: Vec<_> = std::fs::read_dir(store.dir())
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".palmad-tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must be renamed away");
+
+        store.remove(3);
+        store.remove(3); // idempotent
+        assert_eq!(store.scan(), vec![11]);
+
+        // A torn/corrupt file on disk loads as Err, never a panic.
+        std::fs::write(store.dir().join("job-12.ckpt"), b"garbage").unwrap();
+        assert!(store.load(12).is_err());
+        assert_eq!(store.scan(), vec![11, 12], "scan lists it; load rejects it");
+
+        // An id-mismatched but otherwise valid file is rejected.
+        std::fs::write(store.dir().join("job-13.ckpt"), sample(14).encode()).unwrap();
+        assert!(store.load(13).is_err());
+
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+}

@@ -3,6 +3,7 @@
 
 use anyhow::Result;
 
+use crate::engines::fault::{FaultPlan, FaultyEngine};
 use crate::engines::native::{NativeConfig, NativeEngine};
 use crate::engines::xla::XlaEngine;
 use crate::engines::{Engine, TileKernel};
@@ -42,6 +43,9 @@ pub struct EngineOptions {
     pub kernel: TileKernel,
     /// Artifact directory override (`None` = `$PALMAD_ARTIFACTS` or ./artifacts).
     pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Wrap the built engine in a [`FaultyEngine`] with this
+    /// misbehavior schedule (chaos tests only; `None` in production).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for EngineOptions {
@@ -52,28 +56,33 @@ impl Default for EngineOptions {
             threads: pool::default_threads(),
             kernel: TileKernel::from_env(),
             artifacts_dir: None,
+            fault: None,
         }
     }
 }
 
 /// Build the chosen engine.
 pub fn build_engine(opts: &EngineOptions) -> Result<Box<dyn Engine>> {
-    match opts.choice {
-        EngineChoice::Native => Ok(Box::new(NativeEngine::new(NativeConfig {
+    let inner: Box<dyn Engine> = match opts.choice {
+        EngineChoice::Native => Box::new(NativeEngine::new(NativeConfig {
             segn: opts.segn,
             threads: opts.threads,
             kernel: opts.kernel,
             ..Default::default()
-        }))),
+        })),
         EngineChoice::Xla => {
             let dir = opts
                 .artifacts_dir
                 .clone()
                 .unwrap_or_else(ArtifactSet::default_dir);
             let artifacts = ArtifactSet::load(&dir)?;
-            Ok(Box::new(XlaEngine::new(artifacts, opts.segn)?))
+            Box::new(XlaEngine::new(artifacts, opts.segn)?)
         }
-    }
+    };
+    Ok(match &opts.fault {
+        Some(plan) => Box::new(FaultyEngine::new(inner, plan.clone())),
+        None => inner,
+    })
 }
 
 #[cfg(test)]
@@ -110,6 +119,17 @@ mod tests {
         let e = build_engine(&EngineOptions::default()).unwrap();
         assert_eq!(e.name(), "native");
         assert_eq!(e.segn(), 256);
+    }
+
+    #[test]
+    fn fault_plan_wraps_the_built_engine() {
+        let e = build_engine(&EngineOptions {
+            fault: Some(FaultPlan { error_every: 4, ..Default::default() }),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(e.name(), "faulty");
+        assert_eq!(e.segn(), 256, "wrapper must delegate geometry");
     }
 
     #[test]

@@ -35,6 +35,7 @@ use anyhow::Result;
 use super::config::{build_engine, EngineOptions};
 use super::workspace::MerlinWorkspace;
 use crate::engines::Engine;
+use crate::util::sync::{lock_recover, wait_recover};
 
 /// Pool traffic counters (the `lease(sticky/rebinds)=` gauges of the
 /// service metrics line).
@@ -94,7 +95,7 @@ impl EnginePool {
     }
 
     pub fn capacity(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        lock_recover(&self.slots).len()
     }
 
     pub fn counters(&self) -> PoolCounters {
@@ -110,7 +111,7 @@ impl EnginePool {
     /// (sticky), then a never-keyed entry, then the least-recently-used
     /// entry of another tenant (steal).
     pub fn checkout(&self, key: u64) -> Lease<'_> {
-        let mut slots = self.slots.lock().unwrap();
+        let mut slots = lock_recover(&self.slots);
         loop {
             let mut sticky: Option<usize> = None;
             let mut unkeyed: Option<(usize, u64)> = None;
@@ -135,7 +136,7 @@ impl EnginePool {
                 (None, Some((i, _)), _) => (i, false),
                 (None, None, Some((i, _))) => (i, true),
                 (None, None, None) => {
-                    slots = self.free.wait(slots).unwrap();
+                    slots = wait_recover(&self.free, slots);
                     continue;
                 }
             };
@@ -177,7 +178,7 @@ impl Drop for Lease<'_> {
     fn drop(&mut self) {
         if let Some(mut e) = self.entry.take() {
             e.last_used = self.pool.tick.fetch_add(1, Ordering::Relaxed) + 1;
-            let mut slots = self.pool.slots.lock().unwrap();
+            let mut slots = lock_recover(&self.pool.slots);
             slots[self.slot] = Some(e);
             self.pool.free.notify_one();
         }

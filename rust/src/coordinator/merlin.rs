@@ -43,6 +43,11 @@ use crate::core::topk::{top_k_non_overlapping_into, Scored};
 use crate::core::windows::cmp_score_desc;
 use crate::engines::{Engine, SeriesView};
 
+/// Envelope identity for [`MerlinSweep::snapshot`] buffers.  Bump the
+/// version on any wire-format change; `restore` rejects other versions.
+const SNAPSHOT_MAGIC: &[u8; 8] = b"PALMSWP\0";
+const SNAPSHOT_VERSION: u32 = 1;
+
 /// How the rolling stats vectors are produced.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum StatsBackend {
@@ -478,6 +483,239 @@ impl MerlinSweep {
         MerlinResult { lengths: self.lengths, metrics: self.metrics }
     }
 
+    /// Serialize the sweep's durable state to a versioned, checksummed
+    /// byte buffer (see `util::binio` for the envelope convention).
+    ///
+    /// Everything that decides future control flow or appears in the
+    /// final [`MerlinResult`] is captured exactly: the config, the
+    /// progress cursor, the rolling stats (raw `f64` bits), the
+    /// `Last5` threshold ring (which encodes mid-sweep adaptive-r
+    /// state), the per-length results, and the accumulated metrics.
+    /// Selection scratch (`scored`/`picked`/`spare`) is per-step
+    /// recycling only and is deliberately excluded — a restored sweep
+    /// re-warms it on the first step.
+    ///
+    /// Restoring onto a *cold* engine replays the same indices and
+    /// thresholds but can differ from an uninterrupted run in the
+    /// low-order distance bits, because a fresh QT seed pass rounds
+    /// differently from the incremental cross-length advance (see
+    /// `engines::scratch`).  For bit-identical resume, also persist
+    /// [`Engine::export_seed_rows`](crate::engines::Engine::export_seed_rows)
+    /// and re-import them before the first step — the job service's
+    /// checkpoints (`coordinator::checkpoint`) do exactly that.
+    pub fn snapshot(&self) -> Vec<u8> {
+        use crate::util::binio::{seal, ByteWriter};
+        let mut w = ByteWriter::new();
+        // Config.
+        w.put_usize(self.cfg.min_l);
+        w.put_usize(self.cfg.max_l);
+        w.put_usize(self.cfg.top_k);
+        w.put_bool(self.cfg.pd3.deferred_neighbor_kill);
+        w.put_bool(self.cfg.pd3.early_stop);
+        w.put_u8(match self.cfg.stats_backend {
+            StatsBackend::Native => 0,
+            StatsBackend::Aot => 1,
+            StatsBackend::NaivePerLength => 2,
+        });
+        w.put_usize(self.cfg.max_retries);
+        w.put_f64(self.cfg.r_floor_frac);
+        // Cursor.
+        w.put_usize(self.n);
+        w.put_usize(self.next_m);
+        w.put_opt_f64(self.r_start);
+        // Rolling stats.
+        w.put_bool(self.stats_ready);
+        w.put_usize(self.stats.m);
+        w.put_f64s(&self.stats.mu);
+        w.put_f64s(&self.stats.sig);
+        // Threshold-schedule ring.
+        w.put_u8(self.last5.len as u8);
+        for &x in &self.last5.buf[..self.last5.len] {
+            w.put_f64(x);
+        }
+        // Per-length results.
+        w.put_usize(self.lengths.len());
+        for lr in &self.lengths {
+            w.put_usize(lr.m);
+            w.put_f64(lr.r_used);
+            w.put_usize(lr.retries);
+            w.put_usize(lr.discords.len());
+            for d in &lr.discords {
+                w.put_usize(d.idx);
+                w.put_usize(d.m);
+                w.put_f64(d.nn_dist);
+            }
+        }
+        // Metrics (Durations as nanoseconds; saturating at u64::MAX,
+        // which is ~584 years of wall time).
+        let dur = |d: std::time::Duration| u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        let dm = &self.metrics.drag;
+        for v in [dm.tiles_computed, dm.tiles_skipped, dm.kills_select, dm.kills_refine, dm.survivors] {
+            w.put_u64(v);
+        }
+        w.put_u64(dur(dm.select_time));
+        w.put_u64(dur(dm.refine_time));
+        w.put_u64(self.metrics.drag_calls);
+        w.put_u64(self.metrics.retries);
+        w.put_u64(self.metrics.discords);
+        let s = &self.metrics.seed;
+        for v in [
+            s.seed_hits,
+            s.seed_advances,
+            s.seed_misses,
+            s.seed_prefetched,
+            s.prefetch_batches,
+            s.batches,
+            s.batch_tiles,
+            s.clamp_saturations,
+            s.flat_cells,
+        ] {
+            w.put_u64(v);
+        }
+        w.put_u64(dur(self.metrics.prefetch_time));
+        w.put_u64(self.metrics.workspace.resets);
+        w.put_u64(self.metrics.workspace.grows);
+        w.put_u64(dur(self.metrics.stats_time));
+        w.put_u64(dur(self.metrics.total_time));
+        seal(SNAPSHOT_MAGIC, SNAPSHOT_VERSION, w.bytes())
+    }
+
+    /// Rebuild a sweep from [`snapshot`](Self::snapshot) bytes.
+    ///
+    /// Rejects (with `Err`, never a panic) truncation, checksum or
+    /// version mismatches, and payloads whose decoded state violates
+    /// the sweep invariants — a tampered checkpoint must not produce a
+    /// sweep that panics later.
+    pub fn restore(bytes: &[u8]) -> Result<Self> {
+        use crate::util::binio::{unseal, ByteReader};
+        let payload = unseal(SNAPSHOT_MAGIC, SNAPSHOT_VERSION, bytes)?;
+        let mut r = ByteReader::new(payload);
+        let cfg = MerlinConfig {
+            min_l: r.get_usize()?,
+            max_l: r.get_usize()?,
+            top_k: r.get_usize()?,
+            pd3: Pd3Config {
+                deferred_neighbor_kill: r.get_bool()?,
+                early_stop: r.get_bool()?,
+            },
+            stats_backend: match r.get_u8()? {
+                0 => StatsBackend::Native,
+                1 => StatsBackend::Aot,
+                2 => StatsBackend::NaivePerLength,
+                other => bail!("unknown stats backend tag {other}"),
+            },
+            max_retries: r.get_usize()?,
+            r_floor_frac: r.get_f64()?,
+        };
+        let n = r.get_usize()?;
+        let next_m = r.get_usize()?;
+        let r_start = r.get_opt_f64()?;
+        let stats_ready = r.get_bool()?;
+        let stats =
+            RollingStats { m: r.get_usize()?, mu: r.get_f64s()?, sig: r.get_f64s()? };
+        let l5_len = r.get_u8()? as usize;
+        if l5_len > 5 {
+            bail!("last5 ring length {l5_len} out of range");
+        }
+        let mut last5 = Last5::default();
+        for _ in 0..l5_len {
+            last5.push(r.get_f64()?);
+        }
+        let n_lengths = r.get_usize()?;
+        let mut lengths = Vec::with_capacity(n_lengths.min(payload.len() / 24 + 1));
+        for _ in 0..n_lengths {
+            let m = r.get_usize()?;
+            let r_used = r.get_f64()?;
+            let retries = r.get_usize()?;
+            let n_disc = r.get_usize()?;
+            let mut discords = Vec::with_capacity(n_disc.min(payload.len() / 24 + 1));
+            for _ in 0..n_disc {
+                discords.push(Discord {
+                    idx: r.get_usize()?,
+                    m: r.get_usize()?,
+                    nn_dist: r.get_f64()?,
+                });
+            }
+            lengths.push(LengthResult { m, r_used, retries, discords });
+        }
+        let dur = |nanos: u64| std::time::Duration::from_nanos(nanos);
+        let mut metrics = MerlinMetrics::default();
+        metrics.drag.tiles_computed = r.get_u64()?;
+        metrics.drag.tiles_skipped = r.get_u64()?;
+        metrics.drag.kills_select = r.get_u64()?;
+        metrics.drag.kills_refine = r.get_u64()?;
+        metrics.drag.survivors = r.get_u64()?;
+        metrics.drag.select_time = dur(r.get_u64()?);
+        metrics.drag.refine_time = dur(r.get_u64()?);
+        metrics.drag_calls = r.get_u64()?;
+        metrics.retries = r.get_u64()?;
+        metrics.discords = r.get_u64()?;
+        metrics.seed.seed_hits = r.get_u64()?;
+        metrics.seed.seed_advances = r.get_u64()?;
+        metrics.seed.seed_misses = r.get_u64()?;
+        metrics.seed.seed_prefetched = r.get_u64()?;
+        metrics.seed.prefetch_batches = r.get_u64()?;
+        metrics.seed.batches = r.get_u64()?;
+        metrics.seed.batch_tiles = r.get_u64()?;
+        metrics.seed.clamp_saturations = r.get_u64()?;
+        metrics.seed.flat_cells = r.get_u64()?;
+        metrics.prefetch_time = dur(r.get_u64()?);
+        metrics.workspace.resets = r.get_u64()?;
+        metrics.workspace.grows = r.get_u64()?;
+        metrics.stats_time = dur(r.get_u64()?);
+        metrics.total_time = dur(r.get_u64()?);
+        r.finish()?;
+
+        // Invariant checks: a decoded state that violates them would
+        // trip debug asserts (or worse, index out of bounds) later.
+        validate(&cfg, n)?;
+        if !(cfg.min_l <= next_m && next_m <= cfg.max_l + 1) {
+            bail!("progress cursor {next_m} outside [{}, {}]", cfg.min_l, cfg.max_l + 1);
+        }
+        if lengths.len() != next_m - cfg.min_l {
+            bail!(
+                "length results ({}) inconsistent with cursor (expected {})",
+                lengths.len(),
+                next_m - cfg.min_l
+            );
+        }
+        if last5.len != lengths.len().min(5) {
+            bail!("last5 ring length {} inconsistent with {} completed lengths", last5.len, lengths.len());
+        }
+        if stats_ready {
+            let want_m = next_m.min(cfg.max_l);
+            let want_len = n - want_m + 1;
+            if stats.m != want_m || stats.mu.len() != want_len || stats.sig.len() != want_len {
+                bail!(
+                    "rolling stats shape (m={}, {} windows) inconsistent with cursor m={want_m} over n={n}",
+                    stats.m,
+                    stats.mu.len()
+                );
+            }
+        }
+        for lr in &lengths {
+            for d in &lr.discords {
+                if d.idx + lr.m > n {
+                    bail!("discord [{}..+{}] outside series of length {n}", d.idx, lr.m);
+                }
+            }
+        }
+        Ok(Self {
+            cfg,
+            n,
+            next_m,
+            r_start,
+            stats,
+            stats_ready,
+            last5,
+            lengths,
+            metrics,
+            scored: Vec::new(),
+            picked: Vec::new(),
+            spare: Vec::new(),
+        })
+    }
+
     fn ensure_stats(&mut self, engine: &dyn Engine, t: &[f64]) -> Result<()> {
         if self.stats_ready {
             return Ok(());
@@ -911,5 +1149,102 @@ mod tests {
         assert_eq!(ws.grows, 1, "only the cold pd3 call may grow: {ws:?}");
         let s = format!("{}", res.metrics);
         assert!(s.contains("ws(resets/grows)="), "metrics line reports workspace reuse: {s}");
+    }
+
+    /// `snapshot` → `restore` mid-sweep, continued on the SAME warm
+    /// engine, is indistinguishable from never snapshotting.  (The
+    /// cold-engine / seed-row-transfer variants live in
+    /// `rust/tests/chaos_faults.rs`.)
+    #[test]
+    fn snapshot_restore_midsweep_continues_identically() {
+        let t = random_walk_series(520, 31);
+        let cfg = MerlinConfig { min_l: 12, max_l: 24, top_k: 2, ..Default::default() };
+        let engine = NativeEngine::with_segn(64);
+        let mut ws = MerlinWorkspace::new();
+
+        let mut reference = MerlinSweep::new(cfg.clone(), t.len()).unwrap();
+        while reference.step(&engine, &t.values, &mut ws).unwrap().is_pending() {}
+        let want = reference.finish();
+
+        let engine = NativeEngine::with_segn(64);
+        let mut sweep = MerlinSweep::new(cfg, t.len()).unwrap();
+        for _ in 0..6 {
+            assert!(sweep.step(&engine, &t.values, &mut ws).unwrap().is_pending());
+        }
+        let bytes = sweep.snapshot();
+        drop(sweep);
+        let mut sweep = MerlinSweep::restore(&bytes).unwrap();
+        assert_eq!(sweep.progress(), (6, 13));
+        while sweep.step(&engine, &t.values, &mut ws).unwrap().is_pending() {}
+        let got = sweep.finish();
+
+        assert_eq!(want.lengths.len(), got.lengths.len());
+        for (w, g) in want.lengths.iter().zip(&got.lengths) {
+            assert_eq!(w.retries, g.retries, "m={}", w.m);
+            assert_eq!(w.r_used.to_bits(), g.r_used.to_bits(), "m={}", w.m);
+            assert_eq!(w.discords, g.discords, "m={}: restored sweep diverged", w.m);
+        }
+        assert_eq!(want.metrics.drag_calls, got.metrics.drag_calls);
+        assert_eq!(want.metrics.retries, got.metrics.retries);
+    }
+
+    /// Snapshot edge cases: a fresh (zero-step) sweep and a finished
+    /// sweep both round-trip, and restored sweeps keep behaving
+    /// (fresh one runs to the same result; done one stays done).
+    #[test]
+    fn snapshot_restore_fresh_and_done_edges() {
+        let t = random_walk_series(300, 33);
+        let cfg = MerlinConfig { min_l: 10, max_l: 14, top_k: 1, ..Default::default() };
+        let engine = NativeEngine::with_segn(64);
+        let mut ws = MerlinWorkspace::new();
+
+        let fresh = MerlinSweep::new(cfg.clone(), t.len()).unwrap();
+        let mut a = MerlinSweep::restore(&fresh.snapshot()).unwrap();
+        assert_eq!(a.progress(), (0, 5));
+        while a.step(&engine, &t.values, &mut ws).unwrap().is_pending() {}
+        let res_a = a.finish();
+
+        let mut b = MerlinSweep::new(cfg, t.len()).unwrap();
+        while b.step(&engine, &t.values, &mut ws).unwrap().is_pending() {}
+        let done_bytes = b.snapshot();
+        let mut c = MerlinSweep::restore(&done_bytes).unwrap();
+        assert!(c.done());
+        assert_eq!(c.step(&engine, &t.values, &mut ws).unwrap(), SweepStatus::Done);
+        let res_c = c.finish();
+        assert_eq!(res_a.lengths.len(), res_c.lengths.len());
+        for (x, y) in res_a.lengths.iter().zip(&res_c.lengths) {
+            assert_eq!(x.discords, y.discords);
+        }
+    }
+
+    /// Corruption anywhere in the buffer is an `Err`, never a panic,
+    /// and metrics/results survive the round-trip exactly.
+    #[test]
+    fn snapshot_rejects_corruption_and_preserves_metrics() {
+        let t = random_walk_series(400, 35);
+        let cfg = MerlinConfig { min_l: 12, max_l: 18, top_k: 1, ..Default::default() };
+        let engine = NativeEngine::with_segn(64);
+        let mut ws = MerlinWorkspace::new();
+        let mut sweep = MerlinSweep::new(cfg, t.len()).unwrap();
+        for _ in 0..4 {
+            sweep.step(&engine, &t.values, &mut ws).unwrap();
+        }
+        let bytes = sweep.snapshot();
+
+        let back = MerlinSweep::restore(&bytes).unwrap();
+        assert_eq!(back.metrics().drag_calls, sweep.metrics().drag_calls);
+        assert_eq!(back.metrics().seed.seed_hits, sweep.metrics().seed.seed_hits);
+        assert_eq!(back.lengths().len(), sweep.lengths().len());
+
+        // Truncations at every prefix length.
+        for cut in 0..bytes.len() {
+            assert!(MerlinSweep::restore(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // Single-bit flips through the buffer (stride keeps it fast).
+        for i in (0..bytes.len()).step_by(7) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x10;
+            assert!(MerlinSweep::restore(&bad).is_err(), "flip at {i} accepted");
+        }
     }
 }

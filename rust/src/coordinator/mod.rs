@@ -1,6 +1,7 @@
 //! The layer-3 coordinator: MERLIN driver, parallel DRAG (PD3), segment
 //! scheduling, the job service, and configuration.
 
+pub mod checkpoint;
 pub mod config;
 pub mod distributed;
 pub mod drag;

@@ -32,28 +32,52 @@
 //! FORGET <id>  -> OK FORGOTTEN <id>    (terminal jobs only; TTL eviction
 //!                                       reclaims forgotten stragglers)
 //! FORGET data=<name> -> OK FORGOTTEN data=<name>  (frees an upload slot)
+//! RESUME <id> -> OK RESUMED <id>   (reload a checkpointed job; needs a
+//!                checkpoint dir and no active job under that id)
 //! METRICS
 //!   -> OK METRICS jobs= done= failed= cancelled= discords= table=
 //!      uploads= sched(steps/preempts/leases)=s/p/l lease(sticky/rebinds)=x/y
+//!      faults(retries/panics)=r/p ckpt(saved/resumed)=c/u
 //! SHUTDOWN -> OK BYE (drains the scheduler: in-flight steps finish,
 //!             queued jobs fail with "shutdown", workers are joined)
 //! ```
+//!
+//! Robustness (see `rust/tests/chaos_faults.rs`):
+//!
+//! - **Checkpointing**: with [`ServiceConfig::checkpoint_dir`] set, a
+//!   job's sweep state (plus engine seed-cache rows, for bit-identical
+//!   resume) is durably saved every [`ServiceConfig::checkpoint_every`]
+//!   completed lengths via atomic rename (`coordinator/checkpoint.rs`).
+//!   Checkpoints are removed when a job completes or is cancelled and
+//!   *kept* when it fails (panic, engine error, deadline, shutdown), so
+//!   a restarted service auto-resumes interrupted jobs from its boot
+//!   journal scan and `RESUME` can re-run post-mortem failures.
+//! - **Fault isolation**: a panic inside a sweep step is caught and
+//!   fails only that job; transient engine `Err`s are retried with
+//!   backoff ([`ServiceConfig::step_retries`]); every service mutex is
+//!   acquired through a poison-recovering helper (`util::sync`), so a
+//!   panicking worker can never wedge the job table or run queue.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::checkpoint::{CheckpointStore, JobCheckpoint};
 use super::config::EngineOptions;
 use super::drag::Discord;
 use super::lease::{EnginePool, PoolCounters};
 use super::merlin::{MerlinConfig, MerlinSweep, SweepStatus};
 use crate::core::series::TimeSeries;
+use crate::engines::SeedRowSnapshot;
 use crate::gen::registry;
+use crate::util::sync::{lock_recover, wait_recover};
 
 /// Scheduler + protocol limits (see [`Service::start_with`]).
 #[derive(Clone, Debug)]
@@ -68,10 +92,20 @@ pub struct ServiceConfig {
     pub job_ttl: Duration,
     /// Maximum client-uploaded series held at once (DATA verb).
     pub max_uploads: usize,
-    /// Maximum points per uploaded series.
-    pub max_upload_len: usize,
+    /// Maximum points per uploaded series (DATA headers beyond it are
+    /// rejected with `ERR` before any allocation; `Service::upload`
+    /// enforces the same bound for embedders).
+    pub max_upload_points: usize,
     /// Parse-time absurdity bound on `RUN n=`.
     pub max_series_len: usize,
+    /// Where job checkpoints live (`None` = checkpointing off).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Save a checkpoint every K completed lengths (min 1).
+    pub checkpoint_every: u64,
+    /// Transient engine errors tolerated per step before the job fails.
+    pub step_retries: usize,
+    /// Base backoff between step retries (attempt k sleeps k * this).
+    pub step_retry_backoff: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -82,8 +116,12 @@ impl Default for ServiceConfig {
             pool_capacity: 0,
             job_ttl: Duration::from_secs(600),
             max_uploads: 64,
-            max_upload_len: 4_000_000,
+            max_upload_points: 4_000_000,
             max_series_len: 50_000_000,
+            checkpoint_dir: None,
+            checkpoint_every: 4,
+            step_retries: 2,
+            step_retry_backoff: Duration::from_millis(10),
         }
     }
 }
@@ -151,6 +189,9 @@ struct Job {
     finished_at: Option<Instant>,
     /// (lengths completed, lengths total).
     progress: (usize, usize),
+    /// Seed-cache rows from a checkpoint, imported into the leased
+    /// engine on this job's next step (resume path only).
+    pending_seed_rows: Option<Vec<SeedRowSnapshot>>,
 }
 
 #[derive(Default)]
@@ -162,6 +203,10 @@ struct Counters {
     discords: AtomicU64,
     steps: AtomicU64,
     preempts: AtomicU64,
+    step_retries: AtomicU64,
+    panics: AtomicU64,
+    checkpoints: AtomicU64,
+    resumes: AtomicU64,
 }
 
 /// Scheduler observability snapshot (the `sched(...)=` metrics line).
@@ -174,6 +219,14 @@ pub struct SchedMetrics {
     pub preempts: u64,
     /// Jobs cancelled.
     pub cancelled: u64,
+    /// Step attempts retried after a transient engine error.
+    pub step_retries: u64,
+    /// Panics caught and converted into single-job failures.
+    pub panics: u64,
+    /// Checkpoints durably saved.
+    pub checkpoints: u64,
+    /// Jobs rebuilt from checkpoints (boot scan + RESUME verb).
+    pub resumes: u64,
     /// Lease-pool traffic.
     pub lease: PoolCounters,
 }
@@ -190,6 +243,8 @@ struct Inner {
     next_id: AtomicU64,
     pool: EnginePool,
     uploads: Mutex<HashMap<String, Arc<TimeSeries>>>,
+    /// Durable job checkpoints (None = checkpointing off).
+    store: Option<CheckpointStore>,
 }
 
 /// The job service handle.
@@ -204,11 +259,18 @@ impl Service {
         Self::start_with(ServiceConfig { engine_opts, workers, ..Default::default() })
     }
 
-    /// Start with explicit scheduler configuration.
+    /// Start with explicit scheduler configuration.  With a checkpoint
+    /// dir configured, the boot journal scan re-enqueues every job with
+    /// a checkpoint on disk (jobs interrupted by a crash or shutdown);
+    /// unreadable checkpoints are skipped with a warning, never fatal.
     pub fn start_with(cfg: ServiceConfig) -> Result<Self> {
         let workers = cfg.workers.max(1);
         let capacity = if cfg.pool_capacity == 0 { workers } else { cfg.pool_capacity };
         let pool = EnginePool::new(&cfg.engine_opts, capacity)?;
+        let store = match &cfg.checkpoint_dir {
+            Some(dir) => Some(CheckpointStore::new(dir.clone())?),
+            None => None,
+        };
         let inner = Arc::new(Inner {
             cfg,
             queue: Mutex::new(VecDeque::new()),
@@ -220,7 +282,18 @@ impl Service {
             next_id: AtomicU64::new(1),
             pool,
             uploads: Mutex::new(HashMap::new()),
+            store,
         });
+        // Resume before the workers exist: no lock contention, and the
+        // first worker to start finds the recovered queue ready.
+        if let Some(store) = &inner.store {
+            for id in store.scan() {
+                let outcome = store.load(id).and_then(|c| resume_job(&inner, c));
+                if let Err(e) = outcome {
+                    crate::log_warn!("skipping checkpoint for job {id}: {e:#}");
+                }
+            }
+        }
         let mut handles = Vec::new();
         for w in 0..workers {
             let inner = Arc::clone(&inner);
@@ -252,23 +325,24 @@ impl Service {
             cancel: false,
             finished_at: None,
             progress: (0, total),
+            pending_seed_rows: None,
         };
         // A submission racing (or following) shutdown would sit Queued
         // forever — no worker will ever run it.  Fail it up front so
         // `wait` terminates and the drain invariant holds.
         if self.inner.stop.load(Ordering::Acquire) {
             finalize(&mut job, JobState::Failed("shutdown".into()), &self.inner.counters);
-            self.inner.jobs.lock().unwrap().insert(id, job);
+            lock_recover(&self.inner.jobs).insert(id, job);
             return id;
         }
-        self.inner.jobs.lock().unwrap().insert(id, job);
-        self.inner.queue.lock().unwrap().push_back(id);
+        lock_recover(&self.inner.jobs).insert(id, job);
+        lock_recover(&self.inner.queue).push_back(id);
         self.inner.cv.notify_one();
         // Close the race with a concurrent shutdown(): if stop was set
         // after the check above, the drain pass may already have run
         // without seeing this job — fail it here instead.
         if self.inner.stop.load(Ordering::Acquire) {
-            let mut jobs = self.inner.jobs.lock().unwrap();
+            let mut jobs = lock_recover(&self.inner.jobs);
             if let Some(job) = jobs.get_mut(&id) {
                 if !job.state.is_terminal() {
                     finalize(job, JobState::Failed("shutdown".into()), &self.inner.counters);
@@ -280,12 +354,12 @@ impl Service {
 
     /// Current state of a job.
     pub fn status(&self, id: u64) -> Option<JobState> {
-        self.inner.jobs.lock().unwrap().get(&id).map(|j| j.state.clone())
+        lock_recover(&self.inner.jobs).get(&id).map(|j| j.state.clone())
     }
 
     /// (lengths completed, lengths total) for a job.
     pub fn progress(&self, id: u64) -> Option<(usize, usize)> {
-        self.inner.jobs.lock().unwrap().get(&id).map(|j| j.progress)
+        lock_recover(&self.inner.jobs).get(&id).map(|j| j.progress)
     }
 
     /// Block until the job leaves Queued/Running.
@@ -304,7 +378,7 @@ impl Service {
     /// current length first; the cancellation lands at the step
     /// boundary.
     pub fn cancel(&self, id: u64) -> Result<()> {
-        let mut jobs = self.inner.jobs.lock().unwrap();
+        let mut jobs = lock_recover(&self.inner.jobs);
         let job = jobs.get_mut(&id).ok_or_else(|| anyhow!("no such job {id}"))?;
         match job.state {
             JobState::Queued | JobState::Running => {
@@ -312,6 +386,10 @@ impl Service {
                     job.cancel = true;
                 } else {
                     finalize(job, JobState::Cancelled, &self.inner.counters);
+                    // A cancelled job must not resurrect at next boot.
+                    if let Some(store) = &self.inner.store {
+                        store.remove(id);
+                    }
                 }
                 Ok(())
             }
@@ -322,7 +400,7 @@ impl Service {
     /// Drop a terminal job from the table immediately (TTL eviction
     /// handles the rest).
     pub fn forget(&self, id: u64) -> Result<()> {
-        let mut jobs = self.inner.jobs.lock().unwrap();
+        let mut jobs = lock_recover(&self.inner.jobs);
         match jobs.get(&id) {
             None => bail!("no such job {id}"),
             Some(j) if !j.state.is_terminal() => {
@@ -330,6 +408,12 @@ impl Service {
             }
             Some(_) => {
                 jobs.remove(&id);
+                // FORGET is an explicit discard: drop the checkpoint
+                // too (a kept Failed checkpoint stays resumable only
+                // while the client still wants the job).
+                if let Some(store) = &self.inner.store {
+                    store.remove(id);
+                }
                 Ok(())
             }
         }
@@ -339,7 +423,7 @@ impl Service {
     pub fn evict_expired(&self) {
         let ttl = self.inner.cfg.job_ttl;
         let now = Instant::now();
-        self.inner.jobs.lock().unwrap().retain(|_, j| match j.finished_at {
+        lock_recover(&self.inner.jobs).retain(|_, j| match j.finished_at {
             Some(t) => now.duration_since(t) < ttl,
             None => true,
         });
@@ -347,13 +431,17 @@ impl Service {
 
     /// Jobs currently in the table (any state).
     pub fn job_count(&self) -> usize {
-        self.inner.jobs.lock().unwrap().len()
+        lock_recover(&self.inner.jobs).len()
     }
 
     /// Store a client-supplied series under `name` (replaces an
     /// existing upload of the same name).
     pub fn upload(&self, name: &str, series: TimeSeries) -> Result<()> {
-        let mut up = self.inner.uploads.lock().unwrap();
+        let max = self.inner.cfg.max_upload_points;
+        if series.is_empty() || series.len() > max {
+            bail!("upload {name:?} has {} points (allowed 1..={max})", series.len());
+        }
+        let mut up = lock_recover(&self.inner.uploads);
         if !up.contains_key(name) && up.len() >= self.inner.cfg.max_uploads {
             bail!("upload table full ({} series); re-upload an existing name", up.len());
         }
@@ -363,14 +451,14 @@ impl Service {
 
     /// Fetch an uploaded series.
     pub fn uploaded(&self, name: &str) -> Option<Arc<TimeSeries>> {
-        self.inner.uploads.lock().unwrap().get(name).cloned()
+        lock_recover(&self.inner.uploads).get(name).cloned()
     }
 
     /// Drop an uploaded series (`FORGET data=<name>`) — the eviction
     /// path that keeps the capped upload table reusable.  Jobs already
     /// holding the series keep their `Arc` until they finish.
     pub fn forget_upload(&self, name: &str) -> Result<()> {
-        match self.inner.uploads.lock().unwrap().remove(name) {
+        match lock_recover(&self.inner.uploads).remove(name) {
             Some(_) => Ok(()),
             None => bail!("no uploaded series {name:?}"),
         }
@@ -378,7 +466,7 @@ impl Service {
 
     /// Uploaded series currently held.
     pub fn upload_count(&self) -> usize {
-        self.inner.uploads.lock().unwrap().len()
+        lock_recover(&self.inner.uploads).len()
     }
 
     /// (submitted, done, failed, discords)
@@ -399,8 +487,30 @@ impl Service {
             steps: c.steps.load(Ordering::Relaxed),
             preempts: c.preempts.load(Ordering::Relaxed),
             cancelled: c.cancelled.load(Ordering::Relaxed),
+            step_retries: c.step_retries.load(Ordering::Relaxed),
+            panics: c.panics.load(Ordering::Relaxed),
+            checkpoints: c.checkpoints.load(Ordering::Relaxed),
+            resumes: c.resumes.load(Ordering::Relaxed),
             lease: self.inner.pool.counters(),
         }
+    }
+
+    /// Rebuild a checkpointed job and enqueue it (the `RESUME` verb).
+    /// Errors if checkpointing is off, the checkpoint is missing or
+    /// corrupt, or a job with that id is still active.
+    pub fn resume(&self, id: u64) -> Result<u64> {
+        if self.inner.stop.load(Ordering::Acquire) {
+            bail!("service is shutting down");
+        }
+        let store = self
+            .inner
+            .store
+            .as_ref()
+            .ok_or_else(|| anyhow!("checkpointing is not enabled (no checkpoint dir)"))?;
+        let ckpt = store.load(id)?;
+        let id = resume_job(&self.inner, ckpt)?;
+        self.inner.cv.notify_one();
+        Ok(id)
     }
 
     /// Stop the scheduler gracefully (idempotent): workers finish their
@@ -410,12 +520,12 @@ impl Service {
     pub fn shutdown(&self) {
         self.inner.stop.store(true, Ordering::Release);
         self.inner.cv.notify_all();
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        let handles: Vec<_> = lock_recover(&self.workers).drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
-        self.inner.queue.lock().unwrap().clear();
-        let mut jobs = self.inner.jobs.lock().unwrap();
+        lock_recover(&self.inner.queue).clear();
+        let mut jobs = lock_recover(&self.inner.jobs);
         for job in jobs.values_mut() {
             if !job.state.is_terminal() {
                 finalize(job, JobState::Failed("shutdown".into()), &self.inner.counters);
@@ -532,7 +642,7 @@ impl Service {
             }
             "DATA" => {
                 let (name, n) = parse_data_header(parts)?;
-                let max = self.inner.cfg.max_upload_len;
+                let max = self.inner.cfg.max_upload_points;
                 if n == 0 || n > max {
                     // The client sends its values regardless of our
                     // verdict, so drain them (sanely bounded claims
@@ -585,6 +695,11 @@ impl Service {
                     writeln!(out, "OK FORGOTTEN {id}")?;
                 }
             }
+            "RESUME" => {
+                let id: u64 = parts.next().ok_or_else(|| anyhow!("RESUME <id>"))?.parse()?;
+                let id = self.resume(id)?;
+                writeln!(out, "OK RESUMED {id}")?;
+            }
             "METRICS" => {
                 self.evict_expired();
                 let (s, d, f, n) = self.metrics();
@@ -593,7 +708,8 @@ impl Service {
                     out,
                     "OK METRICS jobs={s} done={d} failed={f} cancelled={} discords={n} \
                      table={} uploads={} sched(steps/preempts/leases)={}/{}/{} \
-                     lease(sticky/rebinds)={}/{}",
+                     lease(sticky/rebinds)={}/{} faults(retries/panics)={}/{} \
+                     ckpt(saved/resumed)={}/{}",
                     sm.cancelled,
                     self.job_count(),
                     self.upload_count(),
@@ -602,6 +718,10 @@ impl Service {
                     sm.lease.leases,
                     sm.lease.sticky_hits,
                     sm.lease.rebinds,
+                    sm.step_retries,
+                    sm.panics,
+                    sm.checkpoints,
+                    sm.resumes,
                 )?;
             }
             "SHUTDOWN" => {
@@ -810,7 +930,7 @@ fn drain_data_values(
 fn worker_main(inner: Arc<Inner>) {
     loop {
         let id = {
-            let mut q = inner.queue.lock().unwrap();
+            let mut q = lock_recover(&inner.queue);
             loop {
                 if inner.stop.load(Ordering::Acquire) {
                     return;
@@ -818,10 +938,57 @@ fn worker_main(inner: Arc<Inner>) {
                 if let Some(id) = q.pop_front() {
                     break id;
                 }
-                q = inner.cv.wait(q).unwrap();
+                q = wait_recover(&inner.cv, q);
             }
         };
-        step_job(&inner, id);
+        // Backstop isolation: `step_job` already catches sweep panics,
+        // but a panic anywhere else in the step path must fail only
+        // this job, not retire the worker thread (which would silently
+        // shrink the scheduler until no steps run at all).
+        if catch_unwind(AssertUnwindSafe(|| step_job(&inner, id))).is_err() {
+            inner.counters.panics.fetch_add(1, Ordering::Relaxed);
+            let mut jobs = lock_recover(&inner.jobs);
+            if let Some(job) = jobs.get_mut(&id) {
+                if !job.state.is_terminal() {
+                    finalize(
+                        job,
+                        JobState::Failed("panic: worker step".into()),
+                        &inner.counters,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// How one step's outcome maps onto the job's durable checkpoint.
+enum CkptAction {
+    /// Save the freshly captured state (job parked, or failed at a
+    /// clean boundary worth resuming from).
+    Save,
+    /// Drop the checkpoint (job done or cancelled — must not
+    /// resurrect at the next boot scan).
+    Remove,
+    /// Leave whatever is on disk (failed mid-step: the last saved
+    /// boundary is the best consistent state we have).
+    Keep,
+}
+
+/// One step attempt, with panics reified as data.
+enum StepOutcome {
+    Ok(SweepStatus),
+    Err(anyhow::Error),
+    Panicked(String),
+}
+
+/// Best-effort text from a `catch_unwind` payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
@@ -829,14 +996,17 @@ fn worker_main(inner: Arc<Inner>) {
 fn step_job(inner: &Inner, id: u64) {
     // ---- Claim: move the sweep out of the table so the step runs
     // without holding the jobs lock.
-    let (sweep0, series0, spec) = {
-        let mut jobs = inner.jobs.lock().unwrap();
+    let (sweep0, series0, spec, seed_rows) = {
+        let mut jobs = lock_recover(&inner.jobs);
         let Some(job) = jobs.get_mut(&id) else { return }; // FORGOTten
         if job.stepping || job.state.is_terminal() {
             return; // stale queue entry (cancelled/failed meanwhile)
         }
         if job.cancel {
             finalize(job, JobState::Cancelled, &inner.counters);
+            if let Some(store) = &inner.store {
+                store.remove(id);
+            }
             return;
         }
         if job.deadline_at.is_some_and(|d| Instant::now() > d) {
@@ -845,14 +1015,14 @@ fn step_job(inner: &Inner, id: u64) {
         }
         job.state = JobState::Running;
         job.stepping = true;
-        (job.sweep.take(), job.series.clone(), job.spec.clone())
+        (job.sweep.take(), job.series.clone(), job.spec.clone(), job.pending_seed_rows.take())
     };
 
     // ---- Materialize the series + sweep on first step (generation can
     // be expensive; it must not run under the lock or on the protocol
     // thread).
     let fail = |msg: String| {
-        let mut jobs = inner.jobs.lock().unwrap();
+        let mut jobs = lock_recover(&inner.jobs);
         if let Some(job) = jobs.get_mut(&id) {
             finalize(job, JobState::Failed(msg), &inner.counters);
         }
@@ -881,47 +1051,223 @@ fn step_job(inner: &Inner, id: u64) {
     };
 
     // ---- One step through a keyed lease: same job -> same engine ->
-    // warm seed cache and workspace.
-    let status = {
+    // warm seed cache and workspace.  The step runs panic-isolated and
+    // transient-error-retried; on a checkpoint boundary the sweep
+    // snapshot and the engine's seed-cache rows are captured while the
+    // lease is still held (the rows live in the leased engine).
+    let mut ckpt_state: Option<(Vec<u8>, Vec<SeedRowSnapshot>)> = None;
+    let outcome = {
         let mut lease = inner.pool.checkout(id);
         let (engine, ws) = lease.engine_and_workspace();
-        sweep.step(engine, &series.values, ws)
+        if let Some(rows) = &seed_rows {
+            // Resume path: re-arm the QT seed cache so the next length
+            // opens on verbatim hits, replaying the uninterrupted
+            // run's exact low-order bits.
+            engine.import_seed_rows(&series.values, rows);
+        }
+        let mut attempt = 0usize;
+        loop {
+            match catch_unwind(AssertUnwindSafe(|| sweep.step(engine, &series.values, ws))) {
+                Err(payload) => {
+                    // A panicking step leaves the sweep in an unknown
+                    // state: never retried, and never parked.
+                    inner.counters.panics.fetch_add(1, Ordering::Relaxed);
+                    break StepOutcome::Panicked(panic_message(payload.as_ref()));
+                }
+                Ok(Err(_)) if attempt < inner.cfg.step_retries => {
+                    // `step` mutates no sweep state before the point a
+                    // transient engine error can surface, so a retry
+                    // re-runs the same length from scratch.
+                    attempt += 1;
+                    inner.counters.step_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(inner.cfg.step_retry_backoff * attempt as u32);
+                }
+                Ok(Err(e)) => break StepOutcome::Err(e),
+                Ok(Ok(status)) => {
+                    let every = inner.cfg.checkpoint_every.max(1);
+                    let at_boundary = sweep.progress().0 as u64 % every == 0;
+                    if inner.store.is_some()
+                        && matches!(status, SweepStatus::Pending)
+                        && at_boundary
+                    {
+                        ckpt_state =
+                            Some((sweep.snapshot(), engine.export_seed_rows(&series.values)));
+                    }
+                    break StepOutcome::Ok(status);
+                }
+            }
+        }
     };
     inner.counters.steps.fetch_add(1, Ordering::Relaxed);
 
     // ---- Park or finalize.
-    let mut jobs = inner.jobs.lock().unwrap();
-    let Some(job) = jobs.get_mut(&id) else { return };
-    job.stepping = false;
-    job.progress = sweep.progress();
-    // An acknowledged CANCEL (the client was already told OK CANCELLED)
-    // outranks whatever the in-flight step concluded — even a final
-    // step that completed the sweep.
-    if job.cancel {
-        finalize(job, JobState::Cancelled, &inner.counters);
-        return;
-    }
-    match status {
-        Err(e) => finalize(job, JobState::Failed(e.to_string()), &inner.counters),
-        Ok(SweepStatus::Done) => {
-            let res = sweep.finish();
-            let discords: Vec<Discord> = res.all_discords().copied().collect();
-            let seconds = res.metrics.total_time.as_secs_f64();
-            finalize(job, JobState::Done { discords, seconds }, &inner.counters);
+    let ckpt_action = {
+        let mut jobs = lock_recover(&inner.jobs);
+        let Some(job) = jobs.get_mut(&id) else { return };
+        job.stepping = false;
+        job.progress = sweep.progress();
+        // An acknowledged CANCEL (the client was already told OK
+        // CANCELLED) outranks whatever the in-flight step concluded —
+        // even a final step that completed the sweep.
+        if job.cancel {
+            finalize(job, JobState::Cancelled, &inner.counters);
+            CkptAction::Remove
+        } else {
+            match outcome {
+                StepOutcome::Panicked(msg) => {
+                    finalize(job, JobState::Failed(format!("panic: {msg}")), &inner.counters);
+                    CkptAction::Keep
+                }
+                StepOutcome::Err(e) => {
+                    finalize(job, JobState::Failed(e.to_string()), &inner.counters);
+                    CkptAction::Keep
+                }
+                StepOutcome::Ok(SweepStatus::Done) => {
+                    let res = sweep.finish();
+                    let discords: Vec<Discord> = res.all_discords().copied().collect();
+                    let seconds = res.metrics.total_time.as_secs_f64();
+                    finalize(job, JobState::Done { discords, seconds }, &inner.counters);
+                    CkptAction::Remove
+                }
+                StepOutcome::Ok(SweepStatus::Pending) => {
+                    if job.deadline_at.is_some_and(|d| Instant::now() > d) {
+                        finalize(
+                            job,
+                            JobState::Failed("deadline exceeded".into()),
+                            &inner.counters,
+                        );
+                        // The just-captured boundary is valid; saving
+                        // it lets RESUME restart with a fresh budget
+                        // from right here instead of an older save.
+                        CkptAction::Save
+                    } else {
+                        // Requeue at the back: round-robin across
+                        // runnable jobs.
+                        job.sweep = Some(sweep);
+                        job.series = Some(series.clone());
+                        lock_recover(&inner.queue).push_back(id);
+                        inner.counters.preempts.fetch_add(1, Ordering::Relaxed);
+                        inner.cv.notify_one();
+                        CkptAction::Save
+                    }
+                }
+            }
         }
-        Ok(SweepStatus::Pending) => {
-            if job.deadline_at.is_some_and(|d| Instant::now() > d) {
-                finalize(job, JobState::Failed("deadline exceeded".into()), &inner.counters);
-            } else {
-                // Requeue at the back: round-robin across runnable jobs.
-                job.sweep = Some(sweep);
-                job.series = Some(series);
-                inner.queue.lock().unwrap().push_back(id);
-                inner.counters.preempts.fetch_add(1, Ordering::Relaxed);
-                inner.cv.notify_one();
+    };
+
+    // ---- Persist outside the jobs lock (file I/O must not stall the
+    // scheduler).  Save uses temp-file + atomic rename, so a crash
+    // right here leaves the previous checkpoint intact.
+    if let Some(store) = &inner.store {
+        match ckpt_action {
+            CkptAction::Remove => store.remove(id),
+            CkptAction::Keep => {}
+            CkptAction::Save => {
+                if let Some((sweep_bytes, rows)) = ckpt_state {
+                    let ckpt = build_checkpoint(id, &spec, &series, sweep_bytes, rows);
+                    match store.save(&ckpt) {
+                        Ok(()) => {
+                            inner.counters.checkpoints.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            crate::log_warn!("checkpoint save for job {id} failed: {e:#}");
+                        }
+                    }
+                }
             }
         }
     }
+}
+
+/// Assemble the durable snapshot of a parked job.  Generated series
+/// rematerialize deterministically from `(dataset, n, seed)` and are
+/// not stored; uploaded series must travel in the checkpoint because
+/// the upload table dies with the process.
+fn build_checkpoint(
+    id: u64,
+    spec: &JobSpec,
+    series: &TimeSeries,
+    sweep: Vec<u8>,
+    seed_rows: Vec<SeedRowSnapshot>,
+) -> JobCheckpoint {
+    let stored_series = if spec.dataset.is_empty() {
+        Some((series.name.clone(), series.values.clone()))
+    } else {
+        None
+    };
+    JobCheckpoint {
+        job_id: id,
+        dataset: spec.dataset.clone(),
+        n: spec.n.map(|v| v as u64),
+        seed: spec.seed,
+        min_l: spec.min_l as u64,
+        max_l: spec.max_l as u64,
+        top_k: spec.top_k as u64,
+        deadline_ms: spec.deadline.map(|d| d.as_millis() as u64),
+        series: stored_series,
+        sweep,
+        seed_rows,
+    }
+}
+
+/// Rebuild a job from its checkpoint and enqueue it.  Shared by the
+/// boot-time journal scan and [`Service::resume`]; the caller notifies
+/// the scheduler condvar if workers are already running.
+fn resume_job(inner: &Inner, ckpt: JobCheckpoint) -> Result<u64> {
+    let id = ckpt.job_id;
+    let sweep = MerlinSweep::restore(&ckpt.sweep)?;
+    let series = ckpt
+        .series
+        .map(|(name, values)| Arc::new(TimeSeries::new(name, values)));
+    let spec = JobSpec {
+        dataset: ckpt.dataset,
+        n: ckpt.n.map(|v| v as usize),
+        seed: ckpt.seed,
+        min_l: ckpt.min_l as usize,
+        max_l: ckpt.max_l as usize,
+        top_k: ckpt.top_k as usize,
+        series: series.clone(),
+        // The budget restarts from resume time: a deadline bounds
+        // runaway work, it is not a promise about outages.
+        deadline: ckpt.deadline_ms.map(Duration::from_millis),
+    };
+    let progress = sweep.progress();
+    let job = Job {
+        deadline_at: spec.deadline.map(|d| Instant::now() + d),
+        series,
+        spec,
+        state: JobState::Queued,
+        sweep: Some(sweep),
+        stepping: false,
+        cancel: false,
+        finished_at: None,
+        progress,
+        pending_seed_rows: Some(ckpt.seed_rows),
+    };
+    {
+        let mut jobs = lock_recover(&inner.jobs);
+        if jobs.get(&id).is_some_and(|j| !j.state.is_terminal()) {
+            bail!("job {id} is still active; cannot resume over it");
+        }
+        jobs.insert(id, job);
+    }
+    // Fresh submissions must never collide with a resumed id.
+    let mut next = inner.next_id.load(Ordering::Relaxed);
+    while next <= id {
+        match inner.next_id.compare_exchange(
+            next,
+            id + 1,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => break,
+            Err(cur) => next = cur,
+        }
+    }
+    inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
+    inner.counters.resumes.fetch_add(1, Ordering::Relaxed);
+    lock_recover(&inner.queue).push_back(id);
+    Ok(id)
 }
 
 fn materialize(spec: &JobSpec) -> Result<Arc<TimeSeries>> {
@@ -1147,6 +1493,29 @@ mod tests {
         assert!(svc.forget_upload("b").is_err(), "double forget reports missing");
         svc.upload("c", TimeSeries::new("c", vec![0.0; 64])).unwrap();
         assert_eq!(svc.upload_count(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn upload_rejects_out_of_bounds_series() {
+        let svc = Service::start_with(ServiceConfig {
+            workers: 1,
+            max_upload_points: 16,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(svc.upload("big", TimeSeries::new("big", vec![0.0; 17])).is_err());
+        assert!(svc.upload("empty", TimeSeries::new("empty", Vec::new())).is_err());
+        svc.upload("ok", TimeSeries::new("ok", vec![0.0; 16])).unwrap();
+        assert_eq!(svc.upload_count(), 1, "only the in-bounds upload landed");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn resume_without_checkpointing_errors() {
+        let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+        let err = svc.resume(1).unwrap_err().to_string();
+        assert!(err.contains("not enabled"), "{err}");
         svc.shutdown();
     }
 

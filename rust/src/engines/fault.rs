@@ -1,0 +1,306 @@
+//! Deterministic fault injection for the chaos suite.
+//!
+//! [`FaultyEngine`] wraps any inner [`Engine`] and misbehaves on a
+//! fixed, seed-driven schedule — transient `Err`s every Nth tile
+//! batch, one injected panic, per-call latency, NaN contamination of
+//! one tile's minima — so the robustness machinery (the step
+//! scheduler's retry-with-backoff, `catch_unwind` worker isolation,
+//! checkpoint/resume) can be exercised reproducibly in tests instead
+//! of waiting for real hardware or concurrency faults.
+//!
+//! Faults are injected on the *calling* thread, above the inner
+//! engine's own thread pool, which is what makes the injected panic
+//! catchable by the scheduler's `catch_unwind` — the wrapper models a
+//! misbehaving engine boundary, not a crashed pool worker.
+//!
+//! Everything is counted: tests assert the faults actually fired
+//! (a chaos test whose fault never triggers is a green light lying).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::{Engine, EnginePerfCounters, SeedRowSnapshot, SeriesView, TileTask};
+use crate::core::stats::RollingStats;
+use crate::runtime::types::TileOutputs;
+use crate::util::rng::Rng;
+
+/// Deterministic misbehavior schedule.  All knobs are off by default;
+/// call indices are 1-based counts of tile-batch computations
+/// (`compute_tiles` / `compute_tiles_into`).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed for the deterministic choices a fault must make (which
+    /// tile to contaminate); two runs with the same plan inject
+    /// identically.
+    pub seed: u64,
+    /// Fail every Nth tile-batch call with a transient `Err`
+    /// (0 = never).  Retried calls advance the counter, so a retry
+    /// after call `N` is call `N + 1` and succeeds.
+    pub error_every: u64,
+    /// Panic on exactly this call index (0 = never).  One-shot by
+    /// construction: the counter moves past it.
+    pub panic_at: u64,
+    /// Contaminate one tile of exactly this call's output with NaN
+    /// minima (0 = never).  The batch itself succeeds — this models
+    /// silent numeric corruption, which downstream ranking must
+    /// tolerate (NaN ranks last) rather than crash on.
+    pub nan_at: u64,
+    /// Sleep this long at the top of every tile-batch call
+    /// (Duration::ZERO = no delay).  For latency/timeout testing.
+    pub latency: Duration,
+}
+
+/// Counts of faults actually injected (tests assert these fired).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InjectedFaults {
+    pub errors: u64,
+    pub panics: u64,
+    pub nans: u64,
+}
+
+/// An [`Engine`] decorator that injects faults per [`FaultPlan`] and
+/// otherwise delegates everything — including the seed-row transfer
+/// and AOT hooks — to the inner engine, so a faulty engine is a
+/// drop-in for any pipeline the service can lease.
+pub struct FaultyEngine {
+    inner: Box<dyn Engine>,
+    plan: FaultPlan,
+    calls: AtomicU64,
+    errors: AtomicU64,
+    panics: AtomicU64,
+    nans: AtomicU64,
+}
+
+impl FaultyEngine {
+    pub fn new(inner: Box<dyn Engine>, plan: FaultPlan) -> Self {
+        Self {
+            inner,
+            plan,
+            calls: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            nans: AtomicU64::new(0),
+        }
+    }
+
+    /// Tile-batch calls seen so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> InjectedFaults {
+        InjectedFaults {
+            errors: self.errors.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            nans: self.nans.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Pre-call fault gate: latency, panic, transient error — in that
+    /// order.  Returns this call's 1-based index for the post-call
+    /// NaN decision.
+    fn gate(&self) -> Result<u64> {
+        let call = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if !self.plan.latency.is_zero() {
+            std::thread::sleep(self.plan.latency);
+        }
+        if self.plan.panic_at != 0 && call == self.plan.panic_at {
+            self.panics.fetch_add(1, Ordering::SeqCst);
+            panic!("injected engine panic (tile-batch call {call})");
+        }
+        if self.plan.error_every != 0 && call % self.plan.error_every == 0 {
+            self.errors.fetch_add(1, Ordering::SeqCst);
+            bail!("injected transient engine fault (tile-batch call {call})");
+        }
+        Ok(call)
+    }
+
+    /// Post-call NaN contamination of one deterministic tile.
+    fn maybe_contaminate(&self, call: u64, out: &mut [TileOutputs]) {
+        if self.plan.nan_at == 0 || call != self.plan.nan_at || out.is_empty() {
+            return;
+        }
+        let pick = (Rng::seed(self.plan.seed ^ call).next_u64() % out.len() as u64) as usize;
+        let tile = &mut out[pick];
+        tile.row_min.fill(f64::NAN);
+        tile.col_min.fill(f64::NAN);
+        self.nans.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+impl Engine for FaultyEngine {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn segn(&self) -> usize {
+        self.inner.segn()
+    }
+
+    fn max_m(&self) -> usize {
+        self.inner.max_m()
+    }
+
+    fn compute_tiles(
+        &self,
+        view: &SeriesView<'_>,
+        r2: f64,
+        tasks: &[TileTask],
+    ) -> Result<Vec<TileOutputs>> {
+        let call = self.gate()?;
+        let mut out = self.inner.compute_tiles(view, r2, tasks)?;
+        self.maybe_contaminate(call, &mut out);
+        Ok(out)
+    }
+
+    fn compute_tiles_into(
+        &self,
+        view: &SeriesView<'_>,
+        r2: f64,
+        tasks: &[TileTask],
+        out: &mut Vec<TileOutputs>,
+    ) -> Result<()> {
+        let call = self.gate()?;
+        self.inner.compute_tiles_into(view, r2, tasks, out)?;
+        self.maybe_contaminate(call, &mut out[..tasks.len()]);
+        Ok(())
+    }
+
+    fn prepare_series(&self, view: &SeriesView<'_>) {
+        self.inner.prepare_series(view);
+    }
+
+    fn prefetch_length(&self, t: &[f64], next_m: usize) -> u64 {
+        self.inner.prefetch_length(t, next_m)
+    }
+
+    fn perf_counters(&self) -> EnginePerfCounters {
+        self.inner.perf_counters()
+    }
+
+    fn export_seed_rows(&self, t: &[f64]) -> Vec<SeedRowSnapshot> {
+        self.inner.export_seed_rows(t)
+    }
+
+    fn import_seed_rows(&self, t: &[f64], rows: &[SeedRowSnapshot]) -> u64 {
+        self.inner.import_seed_rows(t, rows)
+    }
+
+    fn aot_stats_init(&self, t: &[f64], m: usize) -> Result<RollingStats> {
+        self.inner.aot_stats_init(t, m)
+    }
+
+    fn aot_stats_update(&self, t: &[f64], stats: &RollingStats) -> Result<RollingStats> {
+        self.inner.aot_stats_update(t, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::native::NativeEngine;
+
+    fn view_fixture(n: usize, m: usize) -> (Vec<f64>, RollingStats) {
+        let mut acc = 0.0;
+        let t: Vec<f64> = (0..n)
+            .map(|i| {
+                acc += ((i * 37 + 11) % 17) as f64 / 17.0 - 0.5;
+                acc
+            })
+            .collect();
+        let mut stats = RollingStats { m, mu: Vec::new(), sig: Vec::new() };
+        stats.recompute(&t, m);
+        (t, stats)
+    }
+
+    fn tasks() -> Vec<TileTask> {
+        vec![
+            TileTask { seg_start: 0, chunk_start: 0 },
+            TileTask { seg_start: 0, chunk_start: 32 },
+        ]
+    }
+
+    #[test]
+    fn error_cadence_is_every_nth() {
+        let (t, stats) = view_fixture(200, 8);
+        let view = SeriesView { t: &t, stats: &stats };
+        let eng = FaultyEngine::new(
+            Box::new(NativeEngine::with_segn(32)),
+            FaultPlan { error_every: 3, ..Default::default() },
+        );
+        let mut outcomes = Vec::new();
+        for _ in 0..6 {
+            outcomes.push(eng.compute_tiles(&view, 1.0, &tasks()).is_ok());
+        }
+        assert_eq!(outcomes, [true, true, false, true, true, false]);
+        assert_eq!(eng.injected().errors, 2);
+        assert_eq!(eng.calls(), 6);
+    }
+
+    #[test]
+    fn panic_fires_once_and_is_catchable() {
+        let (t, stats) = view_fixture(200, 8);
+        let eng = FaultyEngine::new(
+            Box::new(NativeEngine::with_segn(32)),
+            FaultPlan { panic_at: 2, ..Default::default() },
+        );
+        let run = |eng: &FaultyEngine| {
+            let view = SeriesView { t: &t, stats: &stats };
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                eng.compute_tiles(&view, 1.0, &tasks()).map(|_| ())
+            }))
+        };
+        assert!(matches!(run(&eng), Ok(Ok(()))), "call 1 clean");
+        assert!(run(&eng).is_err(), "call 2 panics");
+        assert!(matches!(run(&eng), Ok(Ok(()))), "call 3 clean again");
+        assert_eq!(eng.injected(), InjectedFaults { errors: 0, panics: 1, nans: 0 });
+    }
+
+    #[test]
+    fn nan_contamination_hits_one_deterministic_tile() {
+        let (t, stats) = view_fixture(200, 8);
+        let view = SeriesView { t: &t, stats: &stats };
+        let plan = FaultPlan { seed: 99, nan_at: 1, ..Default::default() };
+        let poisoned = |eng: &FaultyEngine| {
+            let out = eng.compute_tiles(&view, 1.0, &tasks()).unwrap();
+            let bad: Vec<usize> = out
+                .iter()
+                .enumerate()
+                .filter(|(_, o)| o.row_min.iter().any(|x| x.is_nan()))
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(eng.injected().nans, 1);
+            bad
+        };
+        let a = poisoned(&FaultyEngine::new(
+            Box::new(NativeEngine::with_segn(32)),
+            plan.clone(),
+        ));
+        let b = poisoned(&FaultyEngine::new(Box::new(NativeEngine::with_segn(32)), plan));
+        assert_eq!(a.len(), 1, "exactly one tile contaminated");
+        assert_eq!(a, b, "same seed, same tile");
+    }
+
+    #[test]
+    fn clean_plan_is_transparent() {
+        let (t, stats) = view_fixture(300, 10);
+        let view = SeriesView { t: &t, stats: &stats };
+        let inner = NativeEngine::with_segn(32);
+        let want = inner.compute_tiles(&view, 2.0, &tasks()).unwrap();
+        let eng =
+            FaultyEngine::new(Box::new(NativeEngine::with_segn(32)), FaultPlan::default());
+        let got = eng.compute_tiles(&view, 2.0, &tasks()).unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.row_min, g.row_min);
+            assert_eq!(w.col_min, g.col_min);
+            assert_eq!(w.row_kill, g.row_kill);
+            assert_eq!(w.col_kill, g.col_kill);
+        }
+        assert_eq!(eng.injected(), InjectedFaults::default());
+        assert_eq!(eng.segn(), 32);
+        assert_eq!(eng.name(), "faulty");
+    }
+}

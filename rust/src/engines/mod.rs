@@ -13,6 +13,7 @@
 //! - [`xla::XlaEngine`] — the AOT path: Pallas/JAX-compiled HLO executed
 //!   via PJRT, exactly what would run on a TPU (interpret-lowered here).
 
+pub mod fault;
 pub mod native;
 pub mod scratch;
 pub mod xla;
@@ -170,6 +171,26 @@ impl EnginePerfCounters {
     }
 }
 
+/// One QT seed row lifted out of an engine's per-series cache, in
+/// engine-independent coordinates: segment anchor `a`, chunk start
+/// `cs`, the length `m` the dots are current at, and the raw dot
+/// products themselves.
+///
+/// Exists for crash-safe checkpointing (`coordinator::checkpoint`):
+/// a resumed sweep on a cold engine would *re-seed* rows with the full
+/// four-lane dot pass, which rounds differently in the low-order bits
+/// than the incremental cross-length advance a warm engine performs
+/// (see `engines::scratch`, test `cross_length_advance_matches_fresh_dots`).
+/// Carrying the rows through the checkpoint makes resume bit-identical
+/// to an uninterrupted run, which is what the chaos suite asserts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SeedRowSnapshot {
+    pub a: usize,
+    pub cs: usize,
+    pub m: usize,
+    pub qt: Vec<f64>,
+}
+
 /// A tile-computation backend.
 pub trait Engine: Send + Sync {
     fn name(&self) -> &'static str;
@@ -233,6 +254,23 @@ pub trait Engine: Send + Sync {
     /// Snapshot of the engine's cumulative performance counters.
     fn perf_counters(&self) -> EnginePerfCounters {
         EnginePerfCounters::default()
+    }
+
+    /// Export the QT seed rows currently bound to series `t`, sorted by
+    /// `(a, cs)` so the output is deterministic.  Engines without a
+    /// seed cache (or not bound to `t`) return an empty vector —
+    /// checkpoints then degrade to numerically-equal (not bit-equal)
+    /// resume, never to wrong results.
+    fn export_seed_rows(&self, _t: &[f64]) -> Vec<SeedRowSnapshot> {
+        Vec::new()
+    }
+
+    /// Re-install previously exported rows for series `t`, binding the
+    /// cache to `t` first.  Returns the number of rows accepted (cache
+    /// capacity may drop some; dropped rows cost a re-seed, not
+    /// correctness).  No-op default for cache-less engines.
+    fn import_seed_rows(&self, _t: &[f64], _rows: &[SeedRowSnapshot]) -> u64 {
+        0
     }
 
     /// Run the AOT `stats_init` kernel (Eq. 4), if this engine has one.

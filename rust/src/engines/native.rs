@@ -39,7 +39,7 @@ use super::scratch::{
     col_folds, distance_row, general_distance_row, qt_recurrence_row, row_folds,
     with_tile_scratch, QtSeedCache, TileKernelStats, TileScratch,
 };
-use super::{Engine, EnginePerfCounters, SeriesView, TileKernel, TileTask};
+use super::{Engine, EnginePerfCounters, SeedRowSnapshot, SeriesView, TileKernel, TileTask};
 use crate::core::distance::{dot, ed2norm_from_qt, is_flat};
 use crate::core::stats::stat_products_into;
 use crate::runtime::types::TileOutputs;
@@ -260,6 +260,20 @@ impl Engine for NativeEngine {
         c.clamp_saturations = self.clamp_saturations.load(Ordering::Relaxed);
         c.flat_cells = self.flat_cells.load(Ordering::Relaxed);
         c
+    }
+
+    fn export_seed_rows(&self, t: &[f64]) -> Vec<SeedRowSnapshot> {
+        if self.cfg.pipeline != TilePipeline::Scratch {
+            return Vec::new();
+        }
+        self.seeds.export_rows(t)
+    }
+
+    fn import_seed_rows(&self, t: &[f64], rows: &[SeedRowSnapshot]) -> u64 {
+        if self.cfg.pipeline != TilePipeline::Scratch {
+            return 0;
+        }
+        self.seeds.import_rows(t, rows)
     }
 }
 

@@ -75,11 +75,12 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use super::{EnginePerfCounters, TileKernel};
+use super::{EnginePerfCounters, SeedRowSnapshot, TileKernel};
 use crate::core::distance::{
     corr_saturates, corr_to_ed2, dot, ed2_lane_chunk, ed2norm_from_qt, LANES,
 };
 use crate::util::pool::{RoundPool, SliceWriter};
+use crate::util::sync::lock_recover;
 
 /// Reusable per-worker buffers for one tile evaluation.
 ///
@@ -563,7 +564,7 @@ impl QtSeedCache {
     /// calls it once per run).
     pub fn prepare(&self, t: &[f64]) {
         let fp = fingerprint(t);
-        let mut guard = self.fingerprint.lock().unwrap();
+        let mut guard = lock_recover(&self.fingerprint);
         if *guard != fp {
             *guard = fp;
             // New content.  Order matters: retire the binding to the
@@ -581,7 +582,7 @@ impl QtSeedCache {
             self.bound_len.store(0, Ordering::Release);
             self.epoch.fetch_add(1, Ordering::AcqRel);
             for shard in &self.shards {
-                shard.lock().unwrap().evict_all();
+                lock_recover(shard).evict_all();
             }
         }
         let ident = identity(t);
@@ -606,8 +607,74 @@ impl QtSeedCache {
     /// so the next misses rebuild into recycled storage.
     pub fn clear(&self) {
         for shard in &self.shards {
-            shard.lock().unwrap().evict_all();
+            lock_recover(shard).evict_all();
         }
+    }
+
+    /// Export every cached row bound to `t` in engine-independent
+    /// coordinates, sorted by `(a, cs)` so checkpoints are
+    /// deterministic.  Returns empty when the cache is not bound to
+    /// `t` (or a racing rebind moves the binding mid-export) — callers
+    /// then simply checkpoint without rows, which degrades resume from
+    /// bit-identical to numerically-equal, never to wrong.
+    pub fn export_rows(&self, t: &[f64]) -> Vec<SeedRowSnapshot> {
+        if !self.is_bound(t) {
+            return Vec::new();
+        }
+        let ident = identity(t);
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let g = lock_recover(shard);
+            if self.bound() != ident {
+                // A concurrent prepare() rebound the cache: anything
+                // collected so far may mix series — discard it all.
+                return Vec::new();
+            }
+            for (&(a, cs), row) in &g.rows {
+                out.push(SeedRowSnapshot { a, cs, m: row.m, qt: row.qt.clone() });
+            }
+        }
+        out.sort_unstable_by_key(|r| (r.a, r.cs));
+        out
+    }
+
+    /// Re-install exported rows for series `t`: binds the cache to `t`
+    /// (content fingerprint, so a byte-identical regenerated buffer
+    /// rebinds without eviction), then inserts each row under its
+    /// shard lock, honoring the per-shard capacity.  Rows whose
+    /// coordinates fall outside `t` are skipped — a tampered
+    /// checkpoint must not plant out-of-bounds reads for
+    /// [`advance_row`] to hit later.  Returns the rows accepted.
+    pub fn import_rows(&self, t: &[f64], rows: &[SeedRowSnapshot]) -> u64 {
+        self.prepare(t);
+        let ident = identity(t);
+        let epoch0 = self.epoch.load(Ordering::Acquire);
+        let mut accepted = 0u64;
+        for r in rows {
+            if r.m == 0 || r.qt.is_empty() {
+                continue;
+            }
+            // The row's dots read t[a..a+m] and t[cs+j..cs+j+m] for
+            // j < qt.len(); both ends must stay in bounds even after a
+            // future advance (checked again there via the window cut).
+            if r.a + r.m > t.len() || r.cs + (r.qt.len() - 1) + r.m > t.len() {
+                continue;
+            }
+            let key = (r.a, r.cs);
+            let mut g = lock_recover(&self.shards[shard_of(key)]);
+            if self.epoch.load(Ordering::Acquire) != epoch0 || self.bound() != ident {
+                break; // racing prepare: later rows would poison the new binding
+            }
+            if g.rows.len() < MAX_ROWS_PER_SHARD || g.rows.contains_key(&key) {
+                let mut row = g.spares.pop().unwrap_or_else(|| SeedRow { m: 0, qt: Vec::new() });
+                row.m = r.m;
+                row.qt.clear();
+                row.qt.extend_from_slice(&r.qt);
+                g.rows.insert(key, row);
+                accepted += 1;
+            }
+        }
+        accepted
     }
 
     /// Lifetime counters (hits / cross-length advances / misses /
@@ -625,12 +692,12 @@ impl QtSeedCache {
 
     #[cfg(test)]
     fn spare_rows(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().spares.len()).sum()
+        self.shards.iter().map(|s| lock_recover(s).spares.len()).sum()
     }
 
     #[cfg(test)]
     fn live_rows(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().rows.len()).sum()
+        self.shards.iter().map(|s| lock_recover(s).rows.len()).sum()
     }
 
     /// Advance every cached seed row to subsequence length `next_m` in
@@ -661,10 +728,10 @@ impl QtSeedCache {
         };
         let epoch0 = self.epoch.load(Ordering::Acquire);
         let ident = identity(t);
-        let mut work = self.sweep.lock().unwrap();
+        let mut work = lock_recover(&self.sweep);
         work.clear();
         for shard in &self.shards {
-            let mut g = shard.lock().unwrap();
+            let mut g = lock_recover(shard);
             if self.epoch.load(Ordering::Acquire) != epoch0 || self.bound() != ident {
                 break; // racing prepare: stop collecting
             }
@@ -720,7 +787,7 @@ impl QtSeedCache {
         while !work.is_empty() {
             let s = shard_of((work[0].a, work[0].cs));
             let run = work.iter().take_while(|it| shard_of((it.a, it.cs)) == s).count();
-            let mut g = self.shards[s].lock().unwrap();
+            let mut g = lock_recover(&self.shards[s]);
             let fresh =
                 self.epoch.load(Ordering::Acquire) == epoch0 && self.bound() == ident;
             for item in work.drain(..run) {
@@ -766,7 +833,7 @@ impl QtSeedCache {
         // cross-pollinate rows mid-flight.  On a binding mismatch this
         // call simply computes fresh products and leaves the cache alone.
         let (taken, spare, epoch0, bound_ok) = {
-            let mut g = shard.lock().unwrap();
+            let mut g = lock_recover(shard);
             let epoch0 = self.epoch.load(Ordering::Acquire);
             if self.bound() == ident {
                 let taken = g.rows.remove(&key);
@@ -821,7 +888,7 @@ impl QtSeedCache {
             }
         };
         if let Some(row) = row {
-            let mut g = shard.lock().unwrap();
+            let mut g = lock_recover(shard);
             let fresh =
                 self.epoch.load(Ordering::Acquire) == epoch0 && self.bound() == ident;
             if fresh && (g.rows.len() < MAX_ROWS_PER_SHARD || g.rows.contains_key(&key)) {
@@ -983,6 +1050,48 @@ mod tests {
         cache.seed_into(&t, 16, 0, 100, 32, &mut buf);
         assert_eq!(buf, fresh_seed(&t, 16, 0, 100, 32));
         assert_eq!(cache.spare_rows(), 5);
+    }
+
+    /// Export → import into a fresh cache (bound to a *different* but
+    /// byte-identical buffer, like a service resume that regenerated
+    /// the series) must reproduce the donor's rows bit-exactly: the
+    /// next seed request is a verbatim hit with the donor's products.
+    #[test]
+    fn export_import_round_trips_rows_bit_exact() {
+        let t = series(400);
+        let cache = QtSeedCache::new();
+        cache.prepare(&t);
+        let mut buf = vec![0.0; 32];
+        for k in 0..6 {
+            cache.seed_into(&t, 16, k * 3, 100 + k * 40, 32, &mut buf);
+        }
+        // Advance the rows so the export carries post-recurrence state
+        // (the case a fresh re-seed cannot reproduce bit-for-bit).
+        cache.advance_all(&t, 20, None);
+        let rows = cache.export_rows(&t);
+        assert_eq!(rows.len(), 6);
+        assert!(rows.windows(2).all(|w| (w[0].a, w[0].cs) < (w[1].a, w[1].cs)), "sorted");
+
+        let t2 = t.clone(); // different buffer, identical content
+        let fresh = QtSeedCache::new();
+        assert_eq!(fresh.import_rows(&t2, &rows), 6);
+        let before = fresh.counters();
+        let mut got = vec![0.0; 32];
+        cache.seed_into(&t, 20, 0, 100, 32, &mut buf); // donor's own row (hit)
+        fresh.seed_into(&t2, 20, 0, 100, 32, &mut got);
+        let after = fresh.counters();
+        assert_eq!(after.seed_hits, before.seed_hits + 1, "imported row must hit verbatim");
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            buf.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "imported row diverged from the donor's"
+        );
+
+        // Unbound cache exports nothing; rows outside the series are
+        // rejected on import (tampered-checkpoint defense).
+        assert!(QtSeedCache::new().export_rows(&t).is_empty());
+        let bogus = [SeedRowSnapshot { a: 395, cs: 100, m: 16, qt: vec![1.0; 32] }];
+        assert_eq!(fresh.import_rows(&t2, &bogus), 0);
     }
 
     #[test]

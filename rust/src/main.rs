@@ -34,6 +34,9 @@ fn cli() -> Cli {
                 .opt("kernel", "", "native tile kernel: lanes4 | scalar (default: $PALMAD_TILE_KERNEL or lanes4)")
                 .opt("stats", "native", "stats backend: native | aot | naive")
                 .opt("json", "", "write results as JSON to this path")
+                .opt("checkpoint-dir", "", "save resumable sweep checkpoints here")
+                .opt("checkpoint-every", "4", "checkpoint every K completed lengths")
+                .switch("resume", "resume from the checkpoint in --checkpoint-dir")
                 .switch("verbose", "debug logging"),
         )
         .command(
@@ -58,7 +61,9 @@ fn cli() -> Cli {
                 .opt("ttl-secs", "600", "terminal-job retention before TTL eviction")
                 .opt("engine", "native", "tile engine: native | xla")
                 .opt("segn", "256", "tile edge")
-                .opt("kernel", "", "native tile kernel: lanes4 | scalar"),
+                .opt("kernel", "", "native tile kernel: lanes4 | scalar")
+                .opt("checkpoint-dir", "", "job checkpoint dir (enables RESUME + auto-resume)")
+                .opt("checkpoint-every", "4", "checkpoint every K completed lengths"),
         )
         .command(
             Command::new("generate", "write a synthetic dataset to a file")
@@ -124,7 +129,18 @@ fn cmd_run(args: &palmad::util::cli::Args) -> Result<()> {
         ..Default::default()
     };
     println!("series: {series}; engine: {} (segn={})", engine.name(), engine.segn());
-    let res = Merlin::new(&*engine, cfg).run(&series)?;
+    let res = match args.get_opt("checkpoint-dir") {
+        Some(dir) => run_checkpointed(
+            &*engine,
+            cfg,
+            &series,
+            (args.get("data")?, args.get_u64("seed")?),
+            dir,
+            args.get_u64("checkpoint-every")?,
+            args.get_switch("resume"),
+        )?,
+        None => Merlin::new(&*engine, cfg).run(&series)?,
+    };
 
     let mut table = Table::new(
         format!("discords of {}", series.name),
@@ -150,6 +166,74 @@ fn cmd_run(args: &palmad::util::cli::Args) -> Result<()> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// A crash-safe `run`: drive the sweep step by step, durably
+/// checkpointing every `every` completed lengths under `job-0.ckpt` in
+/// `dir`; with `resume`, pick up from that checkpoint (bit-identical to
+/// the uninterrupted run — the engine's QT seed-cache rows travel in
+/// the checkpoint).  The checkpoint is removed once the sweep finishes.
+#[allow(clippy::too_many_arguments)]
+fn run_checkpointed(
+    engine: &dyn palmad::engines::Engine,
+    cfg: MerlinConfig,
+    series: &TimeSeries,
+    (data, seed): (&str, u64),
+    dir: &str,
+    every: u64,
+    resume: bool,
+) -> Result<palmad::coordinator::merlin::MerlinResult> {
+    use palmad::coordinator::checkpoint::{CheckpointStore, JobCheckpoint};
+    use palmad::coordinator::merlin::{MerlinSweep, SweepStatus};
+    use palmad::coordinator::workspace::MerlinWorkspace;
+
+    // The CLI runs one sweep at a time; it always occupies slot 0.
+    const CLI_JOB: u64 = 0;
+    let store = CheckpointStore::new(dir)?;
+    let mut sweep = if resume {
+        let ckpt = store.load(CLI_JOB)?;
+        if ckpt.n != Some(series.len() as u64) {
+            anyhow::bail!(
+                "checkpoint in {dir} was taken on a {}-point series; got {} points \
+                 (same --data/--n/--seed required to resume)",
+                ckpt.n.unwrap_or(0),
+                series.len()
+            );
+        }
+        let sweep = MerlinSweep::restore(&ckpt.sweep)?;
+        let rearmed = engine.import_seed_rows(&series.values, &ckpt.seed_rows);
+        let (done, total) = sweep.progress();
+        println!("resuming at {done}/{total} lengths ({rearmed} seed rows re-armed)");
+        sweep
+    } else {
+        MerlinSweep::new(cfg, series.len())?
+    };
+    let every = every.max(1);
+    let mut ws = MerlinWorkspace::new();
+    loop {
+        match sweep.step(engine, &series.values, &mut ws)? {
+            SweepStatus::Done => break,
+            SweepStatus::Pending => {
+                if sweep.progress().0 as u64 % every == 0 {
+                    store.save(&JobCheckpoint {
+                        job_id: CLI_JOB,
+                        dataset: data.to_string(),
+                        n: Some(series.len() as u64),
+                        seed,
+                        min_l: sweep.config().min_l as u64,
+                        max_l: sweep.config().max_l as u64,
+                        top_k: sweep.config().top_k as u64,
+                        deadline_ms: None,
+                        series: None,
+                        sweep: sweep.snapshot(),
+                        seed_rows: engine.export_seed_rows(&series.values),
+                    })?;
+                }
+            }
+        }
+    }
+    store.remove(CLI_JOB);
+    Ok(sweep.finish())
 }
 
 fn cmd_heatmap(args: &palmad::util::cli::Args) -> Result<()> {
@@ -199,6 +283,8 @@ fn cmd_serve(args: &palmad::util::cli::Args) -> Result<()> {
         workers: args.get_usize("workers")?,
         pool_capacity: args.get_usize("pool")?,
         job_ttl: std::time::Duration::from_secs(args.get_u64("ttl-secs")?),
+        checkpoint_dir: args.get_opt("checkpoint-dir").map(Into::into),
+        checkpoint_every: args.get_u64("checkpoint-every")?,
         ..Default::default()
     };
     let svc = Service::start_with(cfg)?;

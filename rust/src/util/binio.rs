@@ -1,0 +1,329 @@
+//! Minimal binary (de)serialization for checkpoint files.
+//!
+//! serde/bincode are not available offline, so checkpoints use a tiny
+//! hand-rolled little-endian codec: fixed-width integers, `f64` as raw
+//! IEEE-754 bits (`to_bits`/`from_bits`, so round-trips are exact to
+//! the bit, including NaN payloads and signed zeros), and
+//! length-prefixed byte strings.  Every read is bounds-checked and
+//! returns `Err` on truncation — a torn or corrupt checkpoint must be
+//! rejected, never panic.
+//!
+//! Envelope convention (used by `coordinator::checkpoint` and
+//! `MerlinSweep::snapshot`): an 8-byte magic, a `u32` format version,
+//! the payload, then a trailing FNV-1a 64-bit checksum over everything
+//! before it.  The checksum catches torn writes that survived the
+//! atomic-rename discipline (e.g. a corrupted filesystem); the version
+//! gates forward compatibility.
+
+use anyhow::{bail, Result};
+
+/// FNV-1a 64-bit over a byte slice.  Matches the fingerprint family
+/// already used by the engine seed cache (`engines::scratch`).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Append-only little-endian writer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as `u64` so the format is identical across
+    /// pointer widths.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Raw IEEE-754 bits — exact round-trip, no text formatting.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    pub fn put_opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.put_u8(1);
+                self.put_u64(x);
+            }
+            None => self.put_u8(0),
+        }
+    }
+
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.put_u8(1);
+                self.put_f64(x);
+            }
+            None => self.put_u8(0),
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a borrowed slice.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("truncated checkpoint: need {n} bytes, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// `usize` from the wire `u64`, rejecting values that overflow the
+    /// native width (only possible on 32-bit targets).
+    pub fn get_usize(&mut self) -> Result<usize> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("length {v} overflows usize"))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("invalid bool byte {other}"),
+        }
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_usize()?;
+        // A corrupt length prefix must not trigger a huge allocation;
+        // `take` bounds it against the remaining buffer first.
+        self.take(n)
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let b = self.get_bytes()?;
+        Ok(String::from_utf8(b.to_vec())?)
+    }
+
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_usize()?;
+        if n.saturating_mul(8) > self.remaining() {
+            bail!("truncated checkpoint: f64 vector of {n} exceeds remaining bytes");
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_f64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_opt_u64(&mut self) -> Result<Option<u64>> {
+        Ok(if self.get_bool()? { Some(self.get_u64()?) } else { None })
+    }
+
+    pub fn get_opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.get_bool()? { Some(self.get_f64()?) } else { None })
+    }
+
+    /// All payload consumed?  Trailing garbage means a format mismatch.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("checkpoint has {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+/// Wrap a payload in the standard envelope: magic, version, payload,
+/// FNV-1a checksum of everything before the checksum.
+pub fn seal(magic: &[u8; 8], version: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(magic.len() + 4 + payload.len() + 8);
+    out.extend_from_slice(magic);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(payload);
+    let sum = fnv1a64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Verify an envelope and return its payload slice.
+pub fn unseal<'a>(magic: &[u8; 8], version: u32, bytes: &'a [u8]) -> Result<&'a [u8]> {
+    if bytes.len() < magic.len() + 4 + 8 {
+        bail!("checkpoint too short ({} bytes)", bytes.len());
+    }
+    let (head, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(sum_bytes.try_into().expect("8-byte split"));
+    let got = fnv1a64(head);
+    if want != got {
+        bail!("checkpoint checksum mismatch (stored {want:#018x}, computed {got:#018x})");
+    }
+    if &head[..8] != magic {
+        bail!("checkpoint magic mismatch (expected {:?})", std::str::from_utf8(magic).unwrap_or("?"));
+    }
+    let ver = u32::from_le_bytes(head[8..12].try_into().expect("4-byte slice"));
+    if ver != version {
+        bail!("checkpoint format version {ver} unsupported (expected {version})");
+    }
+    Ok(&head[12..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_round_trips() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX);
+        w.put_usize(12345);
+        w.put_f64(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_bool(true);
+        w.put_str("hello ✓");
+        w.put_f64s(&[1.5, -2.25, 1e-300]);
+        w.put_opt_u64(None);
+        w.put_opt_u64(Some(9));
+        w.put_opt_f64(Some(3.125));
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_usize().unwrap(), 12345);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.get_f64().unwrap().is_nan());
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_str().unwrap(), "hello ✓");
+        assert_eq!(r.get_f64s().unwrap(), vec![1.5, -2.25, 1e-300]);
+        assert_eq!(r.get_opt_u64().unwrap(), None);
+        assert_eq!(r.get_opt_u64().unwrap(), Some(9));
+        assert_eq!(r.get_opt_f64().unwrap(), Some(3.125));
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.put_f64s(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(r.get_f64s().is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn corrupt_length_prefix_rejected() {
+        let mut w = ByteWriter::new();
+        w.put_bytes(b"abc");
+        let mut bytes = w.into_bytes();
+        // Inflate the length prefix far beyond the buffer.
+        bytes[0] = 0xFF;
+        bytes[1] = 0xFF;
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_bytes().is_err());
+    }
+
+    #[test]
+    fn envelope_rejects_tampering() {
+        let sealed = seal(b"PALMTEST", 3, b"payload-bytes");
+        assert_eq!(unseal(b"PALMTEST", 3, &sealed).unwrap(), b"payload-bytes");
+        // Flip one payload byte: checksum catches it.
+        let mut bad = sealed.clone();
+        bad[14] ^= 0x40;
+        assert!(unseal(b"PALMTEST", 3, &bad).is_err());
+        // Truncate: too-short error.
+        assert!(unseal(b"PALMTEST", 3, &sealed[..10]).is_err());
+        // Wrong version (re-sealed so the checksum is valid).
+        let other = seal(b"PALMTEST", 4, b"payload-bytes");
+        assert!(unseal(b"PALMTEST", 3, &other).is_err());
+        // Wrong magic (valid checksum).
+        let other = seal(b"PALMWHAT", 3, b"payload-bytes");
+        assert!(unseal(b"PALMTEST", 3, &other).is_err());
+    }
+}

@@ -3,8 +3,10 @@
 //! available here, so minimal purpose-built replacements live in this
 //! module tree.
 
+pub mod binio;
 pub mod cli;
 pub mod json;
 pub mod logger;
 pub mod pool;
 pub mod rng;
+pub mod sync;

@@ -1,0 +1,88 @@
+//! Poison-recovering lock helpers.
+//!
+//! The job service shares its tables (`jobs`, `queue`, `uploads`,
+//! `workers`) and the engine pool slots across worker threads and
+//! connection handlers.  With plain `lock().unwrap()`, one panicking
+//! worker poisons the mutex and every subsequent handler panics in a
+//! cascade — a single bad job takes the whole service down.
+//!
+//! `lock_recover`/`wait_recover` instead take the guard out of the
+//! `PoisonError`.  That is sound here by construction: every critical
+//! section in the service is a single map/queue operation (insert,
+//! remove, push, pop); multi-step mutations happen on values *removed*
+//! from the tables while no lock is held (the claim/park pattern in
+//! `coordinator::service::step_job`).  A panic inside a critical
+//! section therefore cannot leave a table half-updated, so the
+//! recovered state is consistent and the poison flag carries no
+//! information we need.
+//!
+//! `PoisonError::into_inner` is used rather than `Mutex::clear_poison`
+//! so the helpers do not depend on a newer toolchain; the flag stays
+//! set, and every subsequent access goes through recovery again, which
+//! is cheap.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+#[inline]
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// `Condvar::wait` that recovers the guard on poison instead of
+/// panicking.  Spurious-wakeup semantics are unchanged.
+#[inline]
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(0u32));
+        let m2 = Arc::clone(&m);
+        // Poison the mutex: panic while holding the guard.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_recover(&m);
+        *g += 1;
+        assert_eq!(*g, 1);
+    }
+
+    #[test]
+    fn wait_recover_wakes_through_poison() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        // Poison the mutex first.
+        let p3 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _g = p3.0.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let waker = std::thread::spawn(move || {
+            let mut flag = lock_recover(&p2.0);
+            *flag = true;
+            p2.1.notify_all();
+        });
+        let mut g = lock_recover(&pair.0);
+        while !*g {
+            g = wait_recover(&pair.1, g);
+        }
+        waker.join().unwrap();
+    }
+}

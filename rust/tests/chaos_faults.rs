@@ -1,0 +1,457 @@
+//! Chaos suite: crash-safe checkpointing and worker fault isolation,
+//! exercised through the deterministic fault injector
+//! (`engines/fault.rs`).
+//!
+//! The headline properties:
+//!
+//! 1. Killing a sweep at ANY step boundary and resuming it — snapshot +
+//!    engine seed rows into a brand-new engine — yields a final result
+//!    bit-identical to the uninterrupted run (not just numerically
+//!    close: the QT seed rows carried through the checkpoint replay the
+//!    exact low-order rounding of the incremental cross-length
+//!    recurrence).
+//! 2. An injected panic fails only its own job; other tenants, the
+//!    worker pool, and the metrics endpoint keep running.
+//! 3. A killed-and-restarted service auto-resumes interrupted jobs from
+//!    its checkpoint dir and finishes them bit-identically.
+//!
+//! Fault schedules are probed first (`per_step_calls`) so injections
+//! land on exact, reproducible tile-batch call indices — a chaos test
+//! whose fault might not fire is a green light lying.
+
+use palmad::coordinator::checkpoint::CheckpointStore;
+use palmad::coordinator::config::EngineOptions;
+use palmad::coordinator::merlin::{MerlinConfig, MerlinResult, MerlinSweep, SweepStatus};
+use palmad::coordinator::service::{JobSpec, JobState, Service, ServiceConfig};
+use palmad::coordinator::workspace::MerlinWorkspace;
+use palmad::core::series::TimeSeries;
+use palmad::engines::fault::{FaultPlan, FaultyEngine};
+use palmad::engines::native::NativeEngine;
+use palmad::engines::Engine;
+use palmad::gen::registry;
+
+const SEGN: usize = 64;
+
+fn series(n: usize, seed: u64) -> TimeSeries {
+    registry::dataset_prefix("ecg2", n, seed).unwrap().series
+}
+
+fn cfg(min_l: usize, max_l: usize) -> MerlinConfig {
+    MerlinConfig { min_l, max_l, top_k: 2, ..Default::default() }
+}
+
+/// Drive a sweep to completion on `engine` and return the result.
+fn run_sweep(engine: &dyn Engine, cfg: &MerlinConfig, t: &TimeSeries) -> MerlinResult {
+    let mut sweep = MerlinSweep::new(cfg.clone(), t.len()).unwrap();
+    let mut ws = MerlinWorkspace::new();
+    while matches!(sweep.step(engine, &t.values, &mut ws).unwrap(), SweepStatus::Pending) {}
+    sweep.finish()
+}
+
+/// Cumulative tile-batch call count after each step, on a clean faulty
+/// engine.  Engines are deterministic, so a service running the same
+/// job on the same geometry replays exactly these indices.
+fn per_step_calls(cfg: &MerlinConfig, t: &TimeSeries) -> Vec<u64> {
+    let eng = FaultyEngine::new(Box::new(NativeEngine::with_segn(SEGN)), FaultPlan::default());
+    let mut sweep = MerlinSweep::new(cfg.clone(), t.len()).unwrap();
+    let mut ws = MerlinWorkspace::new();
+    let mut counts = Vec::new();
+    loop {
+        let st = sweep.step(&eng, &t.values, &mut ws).unwrap();
+        counts.push(eng.calls());
+        if matches!(st, SweepStatus::Done) {
+            return counts;
+        }
+    }
+}
+
+#[track_caller]
+fn assert_bit_identical(want: &MerlinResult, got: &MerlinResult, what: &str) {
+    assert_eq!(want.lengths.len(), got.lengths.len(), "{what}: length count");
+    for (w, g) in want.lengths.iter().zip(&got.lengths) {
+        assert_eq!(w.m, g.m, "{what}: m");
+        assert_eq!(w.retries, g.retries, "{what}: retries at m={}", w.m);
+        assert_eq!(
+            w.r_used.to_bits(),
+            g.r_used.to_bits(),
+            "{what}: r_used bits at m={} ({} vs {})",
+            w.m,
+            w.r_used,
+            g.r_used
+        );
+        assert_eq!(w.discords.len(), g.discords.len(), "{what}: discords at m={}", w.m);
+        for (dw, dg) in w.discords.iter().zip(&g.discords) {
+            assert_eq!((dw.idx, dw.m), (dg.idx, dg.m), "{what}: discord site at m={}", w.m);
+            assert_eq!(
+                dw.nn_dist.to_bits(),
+                dg.nn_dist.to_bits(),
+                "{what}: nn_dist bits at m={} idx={}",
+                dw.m,
+                dw.idx
+            );
+        }
+    }
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("palmad-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn wait_terminal(svc: &Service, id: u64) -> JobState {
+    svc.wait(id).unwrap_or_else(|| panic!("job {id} vanished"))
+}
+
+/// Property: kill at EVERY step boundary, resume into a brand-new
+/// engine, and the final result is bit-identical to the uninterrupted
+/// run.  Two seeds so the adaptive-r schedule walks different paths.
+#[test]
+fn kill_at_every_boundary_resumes_bit_identically() {
+    for seed in [7u64, 99] {
+        let t = series(1_500, seed);
+        let cfg = cfg(16, 24);
+        let want = run_sweep(&NativeEngine::with_segn(SEGN), &cfg, &t);
+        let total = want.lengths.len();
+        assert!(total >= 2, "property needs interior boundaries");
+        for kill in 1..total {
+            // Phase 1: run `kill` steps, checkpoint, drop everything —
+            // engine included, as a crash would.
+            let (blob, rows) = {
+                let eng = NativeEngine::with_segn(SEGN);
+                let mut sweep = MerlinSweep::new(cfg.clone(), t.len()).unwrap();
+                let mut ws = MerlinWorkspace::new();
+                for _ in 0..kill {
+                    let st = sweep.step(&eng, &t.values, &mut ws).unwrap();
+                    assert!(matches!(st, SweepStatus::Pending));
+                }
+                (sweep.snapshot(), eng.export_seed_rows(&t.values))
+            };
+            // Phase 2: "new process" — fresh engine, restore, re-arm
+            // the seed cache, run to completion.
+            let eng = NativeEngine::with_segn(SEGN);
+            let mut sweep = MerlinSweep::restore(&blob).unwrap();
+            assert_eq!(sweep.progress().0, kill);
+            let imported = eng.import_seed_rows(&t.values, &rows);
+            assert_eq!(imported as usize, rows.len(), "every exported row re-arms");
+            let mut ws = MerlinWorkspace::new();
+            while matches!(sweep.step(&eng, &t.values, &mut ws).unwrap(), SweepStatus::Pending) {
+            }
+            assert_bit_identical(&want, &sweep.finish(), &format!("seed={seed} kill={kill}"));
+        }
+    }
+}
+
+/// An injected panic fails exactly one job; the lone worker survives it
+/// and completes the next tenant's job, and METRICS stays live.
+#[test]
+fn injected_panic_fails_only_that_job() {
+    let svc = Service::start_with(ServiceConfig {
+        engine_opts: EngineOptions {
+            segn: SEGN,
+            fault: Some(FaultPlan { panic_at: 1, ..Default::default() }),
+            ..Default::default()
+        },
+        workers: 1,
+        pool_capacity: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let spec = JobSpec {
+        dataset: "ecg2".into(),
+        n: Some(1_000),
+        seed: 7,
+        min_l: 16,
+        max_l: 18,
+        top_k: 1,
+        ..Default::default()
+    };
+    let victim = svc.submit(spec.clone());
+    match wait_terminal(&svc, victim) {
+        JobState::Failed(msg) => assert!(msg.contains("panic"), "{msg}"),
+        other => panic!("victim should fail from the injected panic, got {other:?}"),
+    }
+    // The same worker and the same pooled engine carry the next job to
+    // completion (the panic index is one-shot and already consumed).
+    let survivor = svc.submit(JobSpec { seed: 8, ..spec });
+    assert!(matches!(wait_terminal(&svc, survivor), JobState::Done { .. }));
+    let sm = svc.sched_metrics();
+    assert_eq!(sm.panics, 1, "exactly one panic caught");
+    let (submitted, done, failed, _) = svc.metrics();
+    assert_eq!((submitted, done, failed), (2, 1, 1));
+    svc.shutdown();
+}
+
+/// A transient engine error inside a step is retried with backoff and
+/// the job still completes — bit-identically to a fault-free run.
+#[test]
+fn transient_engine_error_is_retried_to_success() {
+    let t = series(1_000, 7);
+    let cfg = cfg(16, 20);
+    let want = run_sweep(&NativeEngine::with_segn(SEGN), &cfg, &t);
+    let counts = per_step_calls(&cfg, &t);
+    // Inject exactly one error, on the last tile-batch call of the
+    // final step: the retry re-runs that step and sails past (the next
+    // multiple is beyond the job's total call count).
+    let total_calls = *counts.last().unwrap();
+    let svc = Service::start_with(ServiceConfig {
+        engine_opts: EngineOptions {
+            segn: SEGN,
+            fault: Some(FaultPlan { error_every: total_calls, ..Default::default() }),
+            ..Default::default()
+        },
+        workers: 1,
+        pool_capacity: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let id = svc.submit(JobSpec {
+        dataset: "ecg2".into(),
+        n: Some(1_000),
+        seed: 7,
+        min_l: 16,
+        max_l: 20,
+        top_k: 2,
+        ..Default::default()
+    });
+    match wait_terminal(&svc, id) {
+        JobState::Done { discords, .. } => {
+            let want_d: Vec<_> =
+                want.all_discords().map(|d| (d.m, d.idx, d.nn_dist.to_bits())).collect();
+            let got_d: Vec<_> =
+                discords.iter().map(|d| (d.m, d.idx, d.nn_dist.to_bits())).collect();
+            assert_eq!(want_d, got_d, "retried job must match the fault-free run");
+        }
+        other => panic!("job should survive the transient fault, got {other:?}"),
+    }
+    let sm = svc.sched_metrics();
+    assert!(sm.step_retries >= 1, "the injected fault must actually have fired");
+    assert_eq!(sm.panics, 0);
+    svc.shutdown();
+}
+
+/// Silent NaN contamination of one tile must not crash anything: the
+/// job runs to a terminal Done (NaN ranks last in discord selection).
+#[test]
+fn nan_contamination_completes_without_crash() {
+    let svc = Service::start_with(ServiceConfig {
+        engine_opts: EngineOptions {
+            segn: SEGN,
+            fault: Some(FaultPlan { seed: 5, nan_at: 1, ..Default::default() }),
+            ..Default::default()
+        },
+        workers: 1,
+        pool_capacity: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let id = svc.submit(JobSpec {
+        dataset: "ecg2".into(),
+        n: Some(1_000),
+        seed: 7,
+        min_l: 16,
+        max_l: 18,
+        top_k: 1,
+        ..Default::default()
+    });
+    match wait_terminal(&svc, id) {
+        JobState::Done { discords, .. } => {
+            for d in &discords {
+                assert!(d.idx < 1_000, "discord site must stay in range");
+            }
+        }
+        // Acceptable alternative: the sweep notices the corruption and
+        // fails cleanly.  Either way: no panic, no hang.
+        JobState::Failed(msg) => assert!(!msg.contains("panic"), "{msg}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    svc.shutdown();
+}
+
+/// Kill the service mid-job (shutdown), restart it on the same
+/// checkpoint dir, and the boot journal scan auto-resumes the job to a
+/// bit-identical completion.
+#[test]
+fn service_restart_auto_resumes_bit_identically() {
+    let dir = temp_dir("restart");
+    let t = series(1_500, 7);
+    let cfg = cfg(16, 40);
+    let want = run_sweep(&NativeEngine::with_segn(SEGN), &cfg, &t);
+    let svc_cfg = || ServiceConfig {
+        engine_opts: EngineOptions { segn: SEGN, ..Default::default() },
+        workers: 1,
+        pool_capacity: 1,
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 1,
+        ..Default::default()
+    };
+    let spec = JobSpec {
+        dataset: "ecg2".into(),
+        n: Some(1_500),
+        seed: 7,
+        min_l: 16,
+        max_l: 40,
+        top_k: 2,
+        ..Default::default()
+    };
+
+    // ---- First incarnation: run a few steps, then die.
+    let svc = Service::start_with(svc_cfg()).unwrap();
+    let id = svc.submit(spec);
+    loop {
+        if svc.progress(id).map(|(done, _)| done >= 2).unwrap_or(false) {
+            break;
+        }
+        if matches!(svc.status(id), Some(JobState::Done { .. })) {
+            panic!("job finished before the kill — grow the sweep range");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    svc.shutdown();
+    match svc.status(id).unwrap() {
+        JobState::Failed(msg) => assert_eq!(msg, "shutdown"),
+        other => panic!("job should be interrupted by shutdown, got {other:?}"),
+    }
+    let store = CheckpointStore::new(dir.clone()).unwrap();
+    assert!(store.exists(id), "an interrupted job keeps its checkpoint");
+    drop(svc);
+
+    // ---- Second incarnation: the boot scan picks the job up by itself.
+    let svc = Service::start_with(svc_cfg()).unwrap();
+    match wait_terminal(&svc, id) {
+        JobState::Done { discords, .. } => {
+            let want_d: Vec<_> =
+                want.all_discords().map(|d| (d.m, d.idx, d.nn_dist.to_bits())).collect();
+            let got_d: Vec<_> =
+                discords.iter().map(|d| (d.m, d.idx, d.nn_dist.to_bits())).collect();
+            assert_eq!(want_d, got_d, "resumed run must be bit-identical");
+        }
+        other => panic!("auto-resumed job should finish, got {other:?}"),
+    }
+    let sm = svc.sched_metrics();
+    assert_eq!(sm.resumes, 1, "boot scan resumed exactly one job");
+    assert!(sm.checkpoints >= 1, "the resumed run keeps checkpointing");
+    assert!(!store.exists(id), "a completed job removes its checkpoint");
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A mid-sweep panic fails the job but keeps its checkpoint; RESUME
+/// re-runs it from the last durable boundary to a bit-identical Done.
+#[test]
+fn resume_verb_recovers_a_panicked_job() {
+    let dir = temp_dir("resume-verb");
+    let t = series(1_000, 7);
+    let cfg = cfg(16, 24);
+    let want = run_sweep(&NativeEngine::with_segn(SEGN), &cfg, &t);
+    let counts = per_step_calls(&cfg, &t);
+    assert!(counts.len() >= 4, "panic must land mid-sweep");
+    // Panic on the first tile-batch call of step 4: steps 1-3 have
+    // checkpointed (every=1), so the resume replays from boundary 3.
+    let panic_at = counts[2] + 1;
+    let svc = Service::start_with(ServiceConfig {
+        engine_opts: EngineOptions {
+            segn: SEGN,
+            fault: Some(FaultPlan { panic_at, ..Default::default() }),
+            ..Default::default()
+        },
+        workers: 1,
+        pool_capacity: 1,
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let id = svc.submit(JobSpec {
+        dataset: "ecg2".into(),
+        n: Some(1_000),
+        seed: 7,
+        min_l: 16,
+        max_l: 24,
+        top_k: 2,
+        ..Default::default()
+    });
+    match wait_terminal(&svc, id) {
+        JobState::Failed(msg) => assert!(msg.contains("panic"), "{msg}"),
+        other => panic!("the injected panic should fail the job, got {other:?}"),
+    }
+    let resumed = svc.resume(id).unwrap();
+    assert_eq!(resumed, id, "RESUME keeps the job id");
+    match wait_terminal(&svc, id) {
+        JobState::Done { discords, .. } => {
+            let want_d: Vec<_> =
+                want.all_discords().map(|d| (d.m, d.idx, d.nn_dist.to_bits())).collect();
+            let got_d: Vec<_> =
+                discords.iter().map(|d| (d.m, d.idx, d.nn_dist.to_bits())).collect();
+            assert_eq!(want_d, got_d, "post-panic resume must be bit-identical");
+        }
+        other => panic!("resumed job should finish, got {other:?}"),
+    }
+    let sm = svc.sched_metrics();
+    assert_eq!(sm.panics, 1);
+    assert_eq!(sm.resumes, 1);
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Protocol-level upload hygiene: oversized and malformed DATA are
+/// rejected with ERR, the connection stays in sync afterwards, and
+/// RESUME without checkpointing reports a clean error.
+#[test]
+fn tcp_rejects_bad_uploads_and_stays_in_sync() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::Arc;
+
+    let svc = Arc::new(
+        Service::start_with(ServiceConfig {
+            workers: 1,
+            max_upload_points: 8,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let svc2 = Arc::clone(&svc);
+    let server = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if svc2.handle_conn_public(stream.unwrap()) {
+                svc2.shutdown();
+                break;
+            }
+        }
+    });
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    let mut ask = |conn: &mut TcpStream, req: &str, line: &mut String| {
+        writeln!(conn, "{req}").unwrap();
+        line.clear();
+        reader.read_line(line).unwrap();
+    };
+
+    // Oversized: rejected, values drained, connection still usable.
+    ask(&mut conn, "DATA name=big n=9\n1 2 3 4 5 6 7 8 9", &mut line);
+    assert!(line.starts_with("ERR") && line.contains("out of range"), "{line}");
+    // Malformed value: rejected after consuming the batch.
+    ask(&mut conn, "DATA name=bad n=4\n1 2 oops 4", &mut line);
+    assert!(line.starts_with("ERR") && line.contains("bad value"), "{line}");
+    // Zero points: rejected up front.
+    ask(&mut conn, "DATA name=zero n=0", &mut line);
+    assert!(line.starts_with("ERR"), "{line}");
+    // RESUME without a checkpoint dir: clean error, not a hang.
+    ask(&mut conn, "RESUME 1", &mut line);
+    assert!(line.starts_with("ERR") && line.contains("not enabled"), "{line}");
+    // The connection never desynchronized: a good upload still lands.
+    ask(&mut conn, "DATA name=ok n=4\n1 2 3 4", &mut line);
+    assert_eq!(line.trim(), "OK DATA ok n=4");
+    assert_eq!(svc.upload_count(), 1, "only the well-formed upload landed");
+    // Metrics advertise the robustness gauges.
+    ask(&mut conn, "METRICS", &mut line);
+    assert!(line.contains("faults(retries/panics)=0/0"), "{line}");
+    assert!(line.contains("ckpt(saved/resumed)=0/0"), "{line}");
+    ask(&mut conn, "SHUTDOWN", &mut line);
+    assert_eq!(line.trim(), "OK BYE");
+    server.join().unwrap();
+}

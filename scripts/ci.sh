@@ -34,6 +34,15 @@
 #                                # cleanly.  Also part of the default
 #                                # (non --fast) gate, which builds the
 #                                # release binary it needs anyway.
+#   scripts/ci.sh --chaos        # run the fault-injection / checkpoint
+#                                # chaos suite (rust/tests/chaos_faults.rs)
+#                                # under BOTH tile kernels: kill-and-resume
+#                                # bit-identity at every step boundary,
+#                                # panic isolation, transient-error retry,
+#                                # NaN contamination, service restart
+#                                # auto-resume.  Also part of the default
+#                                # (non --fast) gate — crash-safety claims
+#                                # are gated, not aspirational.
 #
 # The workspace is fully offline (vendored path deps), so no network is
 # needed.  `cargo fmt --check` and `cargo clippy -- -D warnings` keep the
@@ -52,6 +61,7 @@ BENCH_SMOKE=0
 CLIPPY_ONLY=0
 KERNEL_MATRIX=0
 SERVICE_SMOKE=0
+CHAOS=0
 for arg in "$@"; do
   case "$arg" in
     --fast) FAST=1 ;;
@@ -59,6 +69,7 @@ for arg in "$@"; do
     --clippy) CLIPPY_ONLY=1 ;;
     --kernel-matrix) KERNEL_MATRIX=1 ;;
     --service-smoke) SERVICE_SMOKE=1 ;;
+    --chaos) CHAOS=1 ;;
     *) echo "unknown flag: $arg" >&2; exit 2 ;;
   esac
 done
@@ -80,6 +91,9 @@ if [ "$FAST" -eq 0 ]; then
   # The service smoke rides the default gate: the release binary is
   # already built, the scripted client is one small example on top.
   SERVICE_SMOKE=1
+  # So does the chaos suite: robustness regressions (checkpoint drift,
+  # a panic taking down a worker) must not land silently.
+  CHAOS=1
 fi
 
 echo "== cargo test -q =="
@@ -133,6 +147,17 @@ if [ "$KERNEL_MATRIX" -eq 1 ]; then
   for k in scalar lanes4; do
     echo "== kernel matrix ($k): conformance + alloc steady state =="
     PALMAD_TILE_KERNEL=$k cargo test -q --test kernel_conformance --test alloc_steady_state
+  done
+fi
+
+if [ "$CHAOS" -eq 1 ]; then
+  # Checkpoint/resume bit-identity is a per-kernel claim (the seed rows
+  # carried through a checkpoint replay that kernel's exact rounding),
+  # so the chaos suite runs under both tile kernels like the
+  # conformance matrix does.
+  for k in scalar lanes4; do
+    echo "== chaos suite ($k): fault injection + checkpoint/resume =="
+    PALMAD_TILE_KERNEL=$k cargo test -q --test chaos_faults
   done
 fi
 
