@@ -12,6 +12,7 @@
 //! — handle the degenerate case or use a total ordering instead.  The
 //! same gate covers `core::windows`; `scripts/ci.sh --clippy` runs it.
 #![cfg_attr(not(test), deny(clippy::unwrap_used))]
+#![forbid(unsafe_code)]
 
 pub mod heatmap;
 pub mod image;

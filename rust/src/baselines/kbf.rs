@@ -53,7 +53,7 @@ pub fn kbf_top1(t: &[f64], m: usize, k_neighbors: usize, threads: usize) -> Opti
     let (idx, &best) = scores
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())?;
+        .max_by(|a, b| a.1.partial_cmp(b.1).expect("kbf scores are finite or -inf, never NaN"))?;
     if best.is_finite() {
         Some(Discord { idx, m, nn_dist: best.max(0.0).sqrt() })
     } else {

@@ -30,7 +30,7 @@ pub fn merlin(t: &[f64], min_l: usize, max_l: usize, top_k: usize) -> Vec<Serial
         let mut r = if step == 0 {
             max_r
         } else if step <= 4 {
-            0.99 * last5.last().copied().unwrap()
+            0.99 * last5.last().copied().expect("step >= 1 pushed a prior radius")
         } else {
             let (mu, sd) = mean_std(&last5);
             (mu - 2.0 * sd).clamp(r_floor, max_r)

@@ -16,6 +16,7 @@
 //! | [`kbf`]         | Thuy et al. 2021 K-distance brute force| Fig. 4 rival |
 //! | [`zhu`]         | Zhu et al. 2021 top-1 early-stop       | Fig. 5 rival |
 //! | [`stomp`]       | Zhu et al. 2016 matrix profile         | MP comparison (§1) |
+#![forbid(unsafe_code)]
 
 pub mod brute;
 pub mod drag_serial;

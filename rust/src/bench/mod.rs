@@ -7,6 +7,7 @@
 //!
 //! `PALMAD_BENCH_QUICK=1` shrinks workloads (used by the test-path smoke
 //! runs so `cargo bench` can be exercised quickly).
+#![forbid(unsafe_code)]
 
 pub mod harness;
 pub mod stats;

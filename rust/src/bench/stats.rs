@@ -16,14 +16,14 @@ pub struct Summary {
 pub fn summarize(samples: &[f64]) -> Summary {
     assert!(!samples.is_empty());
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("timing samples are finite"));
     let median = percentile_sorted(&sorted, 50.0);
     let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
-    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    devs.sort_by(|a, b| a.partial_cmp(b).expect("deviations of finite samples are finite"));
     Summary {
         reps: samples.len(),
         min: sorted[0],
-        max: *sorted.last().unwrap(),
+        max: *sorted.last().expect("samples asserted non-empty above"),
         mean: samples.iter().sum::<f64>() / samples.len() as f64,
         median,
         mad: percentile_sorted(&devs, 50.0),

@@ -1,0 +1,36 @@
+//! `palmad-lint` — the repo-invariant lint gate.
+//!
+//! Scans `rust/src`, `rust/tests`, and `examples` for violations of the
+//! unsafe-code and concurrency invariants documented in CONCURRENCY.md
+//! (SAFETY comments, transmute containment, the memory-ordering audit
+//! table, coordinator lock discipline, unwrap creep).  Exits non-zero
+//! on any violation; run by `scripts/ci.sh --lint-invariants`, which
+//! falls back to the semantically identical
+//! `scripts/lint_invariants.py` when no Rust toolchain is present.
+//!
+//! Usage: `palmad-lint [repo-root]` (default: current directory).
+
+#![forbid(unsafe_code)]
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    match palmad::util::lint::run(std::path::Path::new(&root)) {
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            println!("lint-invariants: {} violation(s)", violations.len());
+            if violations.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("palmad-lint: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

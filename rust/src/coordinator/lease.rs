@@ -26,9 +26,15 @@
 //! `rust/tests/alloc_steady_state.rs` proves a warm pool is
 //! allocation-free across interleaved jobs: checkout, step, and return
 //! touch no heap once every arena has reached its high-water mark.
+//!
+//! The checkout/blocking/steal protocol is model-checked: primitives
+//! come through [`crate::util::loomsync`], and the `engine_pool_*`
+//! models in `rust/tests/loom_models.rs` explore sticky-vs-steal races
+//! and the condvar wakeup on return.  Orderings are audited in
+//! `CONCURRENCY.md` §lease.rs.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use crate::util::loomsync::atomic::{AtomicU64, Ordering};
+use crate::util::loomsync::{Condvar, Mutex};
 
 use anyhow::Result;
 
@@ -177,9 +183,18 @@ impl Lease<'_> {
 impl Drop for Lease<'_> {
     fn drop(&mut self) {
         if let Some(mut e) = self.entry.take() {
+            // ordering: Relaxed suffices — `tick` is an RMW counter whose
+            // total modification order alone defines LRU age, and
+            // `last_used` is published to readers by the `slots` mutex
+            // below, never by the atomic itself (CONCURRENCY.md
+            // §lease.rs; the ordering was audited, not just assumed).
             e.last_used = self.pool.tick.fetch_add(1, Ordering::Relaxed) + 1;
             let mut slots = lock_recover(&self.pool.slots);
             slots[self.slot] = Some(e);
+            // Notify while still holding `slots`: a blocked checkout is
+            // either already waiting (gets the notify) or has not yet
+            // re-checked the slots it can only scan under this lock — the
+            // loom model `engine_pool_blocked_checkout_wakes` pins this.
             self.pool.free.notify_one();
         }
     }

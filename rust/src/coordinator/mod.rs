@@ -1,5 +1,15 @@
 //! The layer-3 coordinator: MERLIN driver, parallel DRAG (PD3), segment
 //! scheduling, the job service, and configuration.
+//!
+//! This tree owns long-lived multi-tenant state (job queues, engine
+//! leases, checkpoints), so two repo-wide gates are pinned here: no
+//! `unsafe` at all, and no panicking `unwrap` outside test code — a
+//! worker panic must never be a *library* bug, only a job's.  Lock
+//! acquisition goes through `util::sync::{lock_recover, wait_recover}`
+//! (no direct `.lock()`; enforced by `palmad-lint`), so one poisoned
+//! mutex cannot cascade across tenants.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+#![forbid(unsafe_code)]
 
 pub mod checkpoint;
 pub mod config;

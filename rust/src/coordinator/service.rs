@@ -63,9 +63,10 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::loomsync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::loomsync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -518,8 +519,22 @@ impl Service {
     /// mid-sweep is marked `Failed("shutdown")` rather than silently
     /// lost.
     pub fn shutdown(&self) {
-        self.inner.stop.store(true, Ordering::Release);
-        self.inner.cv.notify_all();
+        {
+            // Set `stop` *while holding the queue mutex*.  Workers check
+            // `stop` and then wait on `cv` under this mutex; storing the
+            // flag (and notifying) without it opens a lost-wakeup window:
+            // a worker that has just observed `stop == false` on an empty
+            // queue would miss a bare `notify_all` fired before it parks,
+            // sleep forever, and wedge the `join` below.  Holding the
+            // lock means every worker is either already parked (the
+            // notify reaches it) or has not yet taken the lock (it will
+            // observe `stop == true` once it does).  The loom model
+            // `service_shutdown_no_lost_wakeup` pins this; dropping this
+            // guard reintroduces a deadlock the model finds in seconds.
+            let _q = lock_recover(&self.inner.queue);
+            self.inner.stop.store(true, Ordering::Release);
+            self.inner.cv.notify_all();
+        }
         let handles: Vec<_> = lock_recover(&self.workers).drain(..).collect();
         for h in handles {
             let _ = h.join();

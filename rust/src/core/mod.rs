@@ -1,6 +1,7 @@
 //! Time-series primitives shared by every layer of the coordinator:
 //! series containers, rolling statistics (Eqs. 4/7/8), normalized
 //! Euclidean distance (Eq. 6), candidate bitmaps and top-k selection.
+#![forbid(unsafe_code)]
 
 pub mod bitmap;
 pub mod distance;

@@ -118,7 +118,9 @@ impl TimeSeries {
             bail!("{}: length {} not a multiple of 8", path.display(), buf.len());
         }
         let values =
-            buf.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+            buf.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("chunks_exact yields 8-byte chunks")))
+            .collect();
         let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
         Ok(Self::new(name, values))
     }

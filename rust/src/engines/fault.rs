@@ -15,6 +15,7 @@
 //!
 //! Everything is counted: tests assert the faults actually fired
 //! (a chaos test whose fault never triggers is a green light lying).
+#![forbid(unsafe_code)]
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;

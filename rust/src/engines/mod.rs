@@ -12,6 +12,14 @@
 //!   reused across subsequence lengths ([`scratch::QtSeedCache`]).
 //! - [`xla::XlaEngine`] — the AOT path: Pallas/JAX-compiled HLO executed
 //!   via PJRT, exactly what would run on a TPU (interpret-lowered here).
+//!
+//! Panicking `unwrap`s are denied tree-wide (engines run inside
+//! fault-isolated workers; errors must surface as `Result`s, not
+//! poisoned locks).  `#![forbid(unsafe_code)]` cannot sit here because
+//! it would propagate to [`native`]/[`scratch`] — the two modules
+//! allowlisted for `unsafe` slot writes (CONCURRENCY.md) — so the
+//! unsafe-free children ([`fault`], [`xla`]) carry it per file instead.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod fault;
 pub mod native;

@@ -30,7 +30,10 @@
 //! [`TilePipeline::Legacy`] / [`compute_tile_alloc`] so the microbench
 //! reports an honest before/after from one binary.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+// Gauges go through the loomsync shim (audited in CONCURRENCY.md
+// §native.rs); `OnceLock` stays `std` — it only lazily constructs the
+// round pool, and the loom models never race first-time construction.
+use crate::util::loomsync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 use anyhow::Result;

@@ -72,8 +72,8 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::util::loomsync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::loomsync::Mutex;
 
 use super::{EnginePerfCounters, SeedRowSnapshot, TileKernel};
 use crate::core::distance::{
@@ -1129,15 +1129,17 @@ mod tests {
 
     #[test]
     fn advance_all_parallel_matches_serial() {
-        let t = series(2000);
+        // Scaled-down profile under Miri (interpreted execution): same
+        // protocol, fewer rows — the aliasing checks don't need volume.
+        let (n, nkeys, nb, span) = if cfg!(miri) { (400, 8, 16, 150) } else { (2000, 60, 64, 900) };
+        let t = series(n);
         let serial = QtSeedCache::new();
         let parallel = QtSeedCache::new();
         serial.prepare(&t);
         parallel.prepare(&t);
-        let nb = 64;
         let mut buf = vec![0.0; nb];
         let keys: Vec<(usize, usize)> =
-            (0..60).map(|k| (k * 17 % 900, 900 + (k * 13) % 900)).collect();
+            (0..nkeys).map(|k| (k * 17 % span, span + (k * 13) % span)).collect();
         for &(a, cs) in &keys {
             serial.seed_into(&t, 20, a, cs, nb, &mut buf);
             parallel.seed_into(&t, 20, a, cs, nb, &mut buf);

@@ -6,6 +6,7 @@
 //! PJRT plugin) is loaded once and invoked per tile.  The engine's job is
 //! marshalling: slicing the raw series and the `f64` stats into the fixed
 //! `f32` buffers the artifact expects.
+#![forbid(unsafe_code)]
 
 use anyhow::Result;
 

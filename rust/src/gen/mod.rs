@@ -11,6 +11,7 @@
 //!
 //! Every generator is deterministic in its `u64` seed (see
 //! [`crate::util::rng::Rng`]); EXPERIMENTS.md records the seeds used.
+#![forbid(unsafe_code)]
 
 pub mod ecg;
 pub mod heating;

@@ -18,6 +18,14 @@
 //! Python runs only at build time (`make artifacts`); the binary serves
 //! requests from compiled HLO artifacts via the PJRT C API.
 
+// Unsafe-code discipline (CONCURRENCY.md): every `unsafe` operation
+// must sit in an explicit `unsafe { .. }` block even inside `unsafe fn`,
+// and entire module trees opt out of unsafe wholesale via
+// `#![forbid(unsafe_code)]` — the only modules allowed to contain any
+// are `util::pool` and `engines::{native, scratch}` (enforced both here
+// and by `palmad-lint`'s SAFETY-comment rule).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod analysis;
 pub mod baselines;
 pub mod bench;

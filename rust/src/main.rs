@@ -8,6 +8,8 @@
 //! palmad datasets
 //! ```
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use palmad::analysis::{heatmap::Heatmap, image, ranking, report::Table};

@@ -192,8 +192,8 @@ impl Actor {
         let exe = &self.stats_init[&nmax];
         let args = vec![xla::Literal::vec1(&t), xla::Literal::scalar(m)];
         let mut tup = execute_tuple(exe, &args)?;
-        let sig = tup.pop().unwrap().to_vec::<f64>()?;
-        let mu = tup.pop().unwrap().to_vec::<f64>()?;
+        let sig = tup.pop().expect("stats_init kernel returns (mu, sig)").to_vec::<f64>()?;
+        let mu = tup.pop().expect("stats_init kernel returns (mu, sig)").to_vec::<f64>()?;
         Ok((mu, sig))
     }
 
@@ -226,8 +226,8 @@ impl Actor {
             xla::Literal::scalar(m),
         ];
         let mut tup = execute_tuple(exe, &args)?;
-        let sig2 = tup.pop().unwrap().to_vec::<f64>()?;
-        let mu2 = tup.pop().unwrap().to_vec::<f64>()?;
+        let sig2 = tup.pop().expect("stats_update kernel returns (mu, sig)").to_vec::<f64>()?;
+        let mu2 = tup.pop().expect("stats_update kernel returns (mu, sig)").to_vec::<f64>()?;
         Ok((mu2, sig2))
     }
 }
@@ -274,10 +274,10 @@ fn run_tile_one(
     ];
     let mut tup = execute_tuple(exe, &args)?;
     anyhow::ensure!(tup.len() == 4, "tile kernel returned {} outputs", tup.len());
-    let col_kill = tup.pop().unwrap().to_vec::<f32>()?;
-    let row_kill = tup.pop().unwrap().to_vec::<f32>()?;
-    let col_min = tup.pop().unwrap().to_vec::<f32>()?;
-    let row_min = tup.pop().unwrap().to_vec::<f32>()?;
+    let col_kill = tup.pop().expect("tile tuple arity checked above").to_vec::<f32>()?;
+    let row_kill = tup.pop().expect("tile tuple arity checked above").to_vec::<f32>()?;
+    let col_min = tup.pop().expect("tile tuple arity checked above").to_vec::<f32>()?;
+    let row_min = tup.pop().expect("tile tuple arity checked above").to_vec::<f32>()?;
     Ok(TileOutputs {
         row_min: row_min.iter().map(|&x| x as f64).collect(),
         col_min: col_min.iter().map(|&x| x as f64).collect(),

@@ -7,6 +7,7 @@
 //!   typed channel requests.
 //! - [`types`] — plain-old-data request/response structs shared with the
 //!   engines.
+#![forbid(unsafe_code)]
 
 pub mod artifact;
 pub mod executor;

@@ -3,6 +3,7 @@
 //! A property runs against `cases` deterministically-seeded random inputs;
 //! on failure the framework reports the failing case number and seed so
 //! the case reproduces with `PALMAD_PROP_SEED=<seed> cargo test <name>`.
+#![forbid(unsafe_code)]
 
 pub mod gen;
 pub mod prop;

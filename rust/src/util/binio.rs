@@ -14,6 +14,7 @@
 //! before it.  The checksum catches torn writes that survived the
 //! atomic-rename discipline (e.g. a corrupted filesystem); the version
 //! gates forward compatibility.
+#![forbid(unsafe_code)]
 
 use anyhow::{bail, Result};
 

@@ -3,6 +3,7 @@
 //! Supports `program <subcommand> --flag value --switch` with typed
 //! accessors, defaults, and generated help text.  Only what the `palmad`
 //! binary and the bench harnesses need.
+#![forbid(unsafe_code)]
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;

@@ -3,6 +3,7 @@
 //! The repo emits machine-readable experiment reports (bench rows, discord
 //! lists) as JSON for downstream plotting; inputs use line-oriented
 //! formats, so only serialization is needed.
+#![forbid(unsafe_code)]
 
 use std::fmt::Write;
 

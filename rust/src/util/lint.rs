@@ -1,0 +1,673 @@
+//! Repo-invariant lint (the `palmad-lint` binary's engine).
+//!
+//! Enforces the source-level concurrency/unsafety invariants documented
+//! in `CONCURRENCY.md` §"Invariants enforced by palmad-lint":
+//!
+//! 1. every `unsafe` block/fn/impl carries a `// SAFETY:` comment (or a
+//!    `# Safety` doc section) within the preceding [`SAFETY_WINDOW`]
+//!    lines;
+//! 2. `transmute` appears only in allowlisted files (today: the
+//!    scoped-job lifetime erasure in `util/pool.rs`);
+//! 3. every atomic operation in non-test library code maps to a row of
+//!    the CONCURRENCY.md audit table — with its `Ordering` listed there
+//!    — or carries an inline `// ordering:` comment; `Relaxed` is
+//!    rejected on atomics whose row marks them as publication flags;
+//! 4. no direct `.lock()` in `coordinator/` (poison-recovering helpers
+//!    in `util::sync` only);
+//! 5. no `.unwrap()` in non-test library code outside allowlisted files
+//!    (`expect("...")` with the invariant spelled out is the sanctioned
+//!    alternative).
+//!
+//! The lint is a *textual* scanner, not a parser: comments and string
+//! literal contents are blanked before token rules run, and an atomic
+//! call site is recognised by an `Ordering::` argument inside its own
+//! balanced parens (so `Vec::swap` or a neighbouring statement's
+//! ordering never confuses it).  That keeps the implementation portable
+//! enough to mirror in `scripts/lint_invariants.py`, which runs the
+//! identical rules on machines with no Rust toolchain; the fixtures in
+//! this module's tests and in the script's `--self-test` are the same
+//! inputs with the same expected hits, keeping the two honest.
+#![forbid(unsafe_code)]
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Roots scanned relative to the repo root (`vendor/` is deliberately
+/// absent: the loom checker is test-only infrastructure with its own
+/// suite, never compiled into production builds).
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "examples"];
+
+/// Files allowed to contain `transmute` (see `erase_job_lifetime`).
+const TRANSMUTE_ALLOWLIST: &[&str] = &["rust/src/util/pool.rs"];
+
+/// Files allowed to call `.unwrap()` outside test code: the round-pool
+/// worker-side lock unwraps propagate poison deliberately (a panicked
+/// round must not present half-written results as clean).
+const UNWRAP_ALLOWLIST: &[&str] = &["rust/src/util/pool.rs"];
+
+/// How many lines above an `unsafe` token a SAFETY comment may sit.
+const SAFETY_WINDOW: usize = 12;
+
+/// How many lines above an atomic op an `// ordering:` note may sit.
+const ORDERING_WINDOW: usize = 8;
+
+const ATOMIC_METHODS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "fetch_update",
+    "compare_exchange_weak",
+    "compare_exchange",
+];
+
+/// One row of the CONCURRENCY.md audit table, keyed by (file, atomic).
+pub struct AuditRow {
+    orderings: Vec<String>,
+    publication: bool,
+}
+
+/// The parsed audit table: `(file, atomic name)` → row.
+pub type AuditTable = HashMap<(String, String), AuditRow>;
+
+fn is_word(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Whole-word containment (`unsafe` matches, `unsafe_code` does not).
+fn has_word(s: &str, w: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = s[start..].find(w) {
+        let at = start + pos;
+        let before_ok = at == 0 || !s[..at].chars().next_back().is_some_and(is_word);
+        let after = at + w.len();
+        let after_ok = after >= s.len() || !s[after..].chars().next().is_some_and(is_word);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// Split source into (code, comments) per line: `code[i]` has comments
+/// and string/char-literal contents blanked (quotes kept, non-ASCII
+/// mapped to spaces), `comments[i]` holds line `i`'s comment text.
+pub fn strip_rust(text: &str) -> (Vec<String>, Vec<String>) {
+    enum St {
+        Normal,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(usize),
+    }
+    let chars: Vec<char> = text.chars().collect();
+    let (mut code, mut comments) = (Vec::new(), Vec::new());
+    let (mut cur_code, mut cur_comment) = (String::new(), String::new());
+    let mut st = St::Normal;
+    let mut i = 0;
+    let at = |k: usize| chars.get(k).copied();
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, St::Line) {
+                st = St::Normal;
+            }
+            code.push(std::mem::take(&mut cur_code));
+            comments.push(std::mem::take(&mut cur_comment));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Line => {
+                cur_comment.push(c);
+                i += 1;
+            }
+            St::Block(depth) => {
+                if c == '/' && at(i + 1) == Some('*') {
+                    st = St::Block(depth + 1);
+                    cur_comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && at(i + 1) == Some('/') {
+                    cur_comment.push_str("*/");
+                    st = if depth == 1 { St::Normal } else { St::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    cur_comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    cur_code.push('"');
+                    st = St::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && (0..hashes).all(|k| at(i + 1 + k) == Some('#')) {
+                    cur_code.push('"');
+                    st = St::Normal;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Normal => {
+                let prev_word = i > 0 && is_word(chars[i - 1]);
+                if c == '/' && at(i + 1) == Some('/') {
+                    st = St::Line;
+                    cur_comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && at(i + 1) == Some('*') {
+                    st = St::Block(1);
+                    cur_comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    cur_code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if !prev_word && (c == 'r' || (c == 'b' && at(i + 1) == Some('r'))) {
+                    // Possible raw string: [b]r#*"
+                    let mut j = i + if c == 'b' { 2 } else { 1 };
+                    let mut hashes = 0;
+                    while at(j) == Some('#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if at(j) == Some('"') {
+                        cur_code.push_str("r\"");
+                        st = St::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        cur_code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime tick.
+                    if at(i + 1) == Some('\\') {
+                        let mut j = i + 2;
+                        while j < chars.len() && chars[j] != '\'' && j < i + 12 {
+                            j += 1;
+                        }
+                        cur_code.push_str("''");
+                        i = j + 1;
+                    } else if at(i + 2) == Some('\'') && at(i + 1) != Some('\\') {
+                        cur_code.push_str("''");
+                        i += 3;
+                    } else {
+                        cur_code.push(c); // lifetime
+                        i += 1;
+                    }
+                } else {
+                    cur_code.push(if c.is_ascii() { c } else { ' ' });
+                    i += 1;
+                }
+            }
+        }
+    }
+    code.push(cur_code);
+    comments.push(cur_comment);
+    (code, comments)
+}
+
+/// First line index of the `#[cfg(test)] mod tests` tail (or `len`).
+fn test_region_start(code: &[String]) -> usize {
+    for (i, line) in code.iter().enumerate() {
+        if line.trim() != "#[cfg(test)]" {
+            continue;
+        }
+        for next in code.iter().take((i + 4).min(code.len())).skip(i + 1) {
+            let t = next.trim().strip_prefix("pub ").unwrap_or(next.trim());
+            if let Some(rest) = t.strip_prefix("mod tests") {
+                if !rest.chars().next().is_some_and(is_word) {
+                    return i;
+                }
+            }
+        }
+    }
+    code.len()
+}
+
+/// Parse CONCURRENCY.md's audit table; also returns table self-check
+/// violations (publication=yes rows listing Relaxed).
+pub fn parse_audit_table(md: &str) -> (AuditTable, Vec<String>) {
+    let mut table = AuditTable::new();
+    let mut errors = Vec::new();
+    for (idx, raw) in md.lines().enumerate() {
+        let line = raw.trim();
+        if !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> =
+            line.trim_matches('|').split('|').map(str::trim).collect();
+        if cells.len() < 6
+            || cells[0] == "File"
+            || cells[0].is_empty()
+            || cells[0].chars().all(|c| c == '-' || c == ' ')
+        {
+            continue;
+        }
+        let (path, names, orderings, publication) = (cells[0], cells[1], cells[3], cells[4]);
+        let publication = publication.to_ascii_lowercase().starts_with("yes");
+        let ords: Vec<String> = orderings
+            .split(|c: char| !c.is_ascii_alphanumeric())
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        if publication && ords.iter().any(|o| o == "Relaxed") {
+            errors.push(format!(
+                "CONCURRENCY.md:{}: [relaxed-publication] row '{}' is \
+                 publication=yes but lists Relaxed",
+                idx + 1,
+                names
+            ));
+        }
+        for name in names.split(',') {
+            table.insert(
+                (path.to_string(), name.trim().to_string()),
+                AuditRow { orderings: ords.clone(), publication },
+            );
+        }
+    }
+    (table, errors)
+}
+
+fn has_comment(comments: &[String], upto: usize, window: usize, needles: &[&str]) -> bool {
+    let lo = upto.saturating_sub(window);
+    comments[lo..=upto].iter().any(|l| needles.iter().any(|n| l.contains(n)))
+}
+
+/// One atomic call site found on a code line.
+struct AtomicSite {
+    receiver: Option<String>,
+    method: String,
+    /// Index just past the method's opening paren, within the line.
+    args_from: usize,
+}
+
+/// Trailing `ident` or `ident[...]` of a code line, if any.
+fn trailing_receiver(line: &str) -> Option<String> {
+    let t = line.trim_end();
+    let t = if t.ends_with(']') {
+        let mut depth = 0usize;
+        let mut cut = None;
+        for (k, c) in t.char_indices().rev() {
+            match c {
+                ']' => depth += 1,
+                '[' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        cut = Some(k);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        &t[..cut?]
+    } else {
+        t
+    };
+    let t = t.trim_end();
+    let start = t
+        .char_indices()
+        .rev()
+        .take_while(|(_, c)| is_word(*c))
+        .last()
+        .map(|(k, _)| k)?;
+    let ident = &t[start..];
+    let first = ident.chars().next()?;
+    if first.is_ascii_digit() {
+        return None;
+    }
+    Some(ident.to_string())
+}
+
+/// Scan a code line for `.method(` occurrences of the atomic methods,
+/// resolving the receiver (possibly indexed, possibly on an earlier
+/// line via `prev_lines`).
+fn atomic_sites(line: &str, prev_lines: &[String]) -> Vec<AtomicSite> {
+    let mut sites = Vec::new();
+    let bytes = line.as_bytes();
+    for dot in 0..bytes.len() {
+        if bytes[dot] != b'.' {
+            continue;
+        }
+        let mut j = dot + 1;
+        while j < bytes.len() && (bytes[j] as char).is_ascii_whitespace() {
+            j += 1;
+        }
+        let m0 = j;
+        while j < bytes.len() && is_word(bytes[j] as char) {
+            j += 1;
+        }
+        let method = &line[m0..j];
+        if !ATOMIC_METHODS.contains(&method) {
+            continue;
+        }
+        while j < bytes.len() && (bytes[j] as char).is_ascii_whitespace() {
+            j += 1;
+        }
+        if j >= bytes.len() || bytes[j] != b'(' {
+            continue;
+        }
+        let receiver = trailing_receiver(&line[..dot]).or_else(|| {
+            if line[..dot].trim().is_empty() {
+                prev_lines
+                    .iter()
+                    .rev()
+                    .take(3)
+                    .find_map(|p| trailing_receiver(p))
+            } else {
+                None
+            }
+        });
+        sites.push(AtomicSite { receiver, method: method.to_string(), args_from: j + 1 });
+    }
+    sites
+}
+
+/// `Ordering::X` variants inside the balanced-paren argument list that
+/// starts just before `window[from..]` (the caller strips up to and
+/// including the opening paren).
+fn orderings_in_args(window: &str, from: usize) -> Vec<String> {
+    let mut depth = 1i32;
+    let mut end = window.len();
+    for (k, c) in window[from..].char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = from + k;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let args = &window[from..end];
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = args[start..].find("Ordering::") {
+        let at = start + pos + "Ordering::".len();
+        let name: String = args[at..].chars().take_while(|c| c.is_ascii_alphabetic()).collect();
+        if !name.is_empty() && !out.contains(&name) {
+            out.push(name);
+        }
+        start = at;
+    }
+    out
+}
+
+/// Lint one file's source text; returns `path:line: [rule] msg` lines.
+pub fn scan_file(relpath: &str, text: &str, table: &AuditTable) -> Vec<String> {
+    let mut out = Vec::new();
+    let (code, comments) = strip_rust(text);
+    let is_test_file = relpath.starts_with("rust/tests/") || relpath.starts_with("examples/");
+    let tests_at = if is_test_file { 0 } else { test_region_start(&code) };
+    let in_coordinator = relpath.starts_with("rust/src/coordinator/");
+
+    for (i, line) in code.iter().enumerate() {
+        let lineno = i + 1;
+        let in_test = is_test_file || i >= tests_at;
+
+        if has_word(line, "unsafe")
+            && !has_comment(&comments, i, SAFETY_WINDOW, &["SAFETY:", "# Safety"])
+        {
+            out.push(format!(
+                "{relpath}:{lineno}: [safety-comment] `unsafe` without a // SAFETY: \
+                 comment (or /// # Safety section) in the preceding {SAFETY_WINDOW} lines"
+            ));
+        }
+
+        if has_word(line, "transmute") && !TRANSMUTE_ALLOWLIST.contains(&relpath) {
+            out.push(format!(
+                "{relpath}:{lineno}: [transmute-allowlist] transmute outside {TRANSMUTE_ALLOWLIST:?}"
+            ));
+        }
+
+        if in_test {
+            continue;
+        }
+
+        if in_coordinator && line.contains(".lock()") {
+            out.push(format!(
+                "{relpath}:{lineno}: [coordinator-lock] direct .lock() in coordinator/ \
+                 (use util::sync::{{lock_recover, wait_recover}})"
+            ));
+        }
+
+        if line.contains(".unwrap()") && !UNWRAP_ALLOWLIST.contains(&relpath) {
+            out.push(format!(
+                "{relpath}:{lineno}: [unwrap-allowlist] .unwrap() outside allowlisted \
+                 files (use expect(\"...\") with the invariant)"
+            ));
+        }
+
+        for site in atomic_sites(line, &code[i.saturating_sub(3)..i]) {
+            let mut window = line.clone();
+            for extra in code.iter().take((i + 4).min(code.len())).skip(i + 1) {
+                window.push(' ');
+                window.push_str(extra);
+            }
+            let ords = orderings_in_args(&window, site.args_from);
+            if ords.is_empty() {
+                continue; // not an atomic op (Vec::swap, etc.)
+            }
+            let key = site
+                .receiver
+                .as_ref()
+                .map(|r| (relpath.to_string(), r.clone()));
+            match key.and_then(|k| table.get(&k)) {
+                Some(row) => {
+                    for o in &ords {
+                        if !row.orderings.contains(o) {
+                            out.push(format!(
+                                "{relpath}:{lineno}: [atomic-ordering] {}.{} uses \
+                                 Ordering::{o}, not listed in its CONCURRENCY.md row",
+                                site.receiver.as_deref().unwrap_or("?"),
+                                site.method
+                            ));
+                        }
+                    }
+                    if row.publication && ords.iter().any(|o| o == "Relaxed") {
+                        out.push(format!(
+                            "{relpath}:{lineno}: [relaxed-publication] Relaxed on \
+                             publication flag `{}`",
+                            site.receiver.as_deref().unwrap_or("?")
+                        ));
+                    }
+                }
+                None => {
+                    if !has_comment(&comments, i, ORDERING_WINDOW, &["ordering:"]) {
+                        out.push(format!(
+                            "{relpath}:{lineno}: [atomic-audited] atomic op on `{}` has no \
+                             CONCURRENCY.md row and no inline `// ordering:` comment",
+                            site.receiver.as_deref().unwrap_or("?")
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn walk(dir: &Path, root: &Path, table: &AuditTable, out: &mut Vec<String>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, root, table, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = std::fs::read_to_string(&p)?;
+            out.extend(scan_file(&rel, &text, table));
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole repo rooted at `root`; returns all violations.
+pub fn run(root: &Path) -> std::io::Result<Vec<String>> {
+    let md = std::fs::read_to_string(root.join("CONCURRENCY.md"))?;
+    let (table, mut violations) = parse_audit_table(&md);
+    for sr in SCAN_ROOTS {
+        let top = root.join(sr);
+        if top.is_dir() {
+            walk(&top, root, &table, &mut violations)?;
+        }
+    }
+    Ok(violations)
+}
+
+// The fixtures below are duplicated (same inputs, same expected rule
+// ids) in scripts/lint_invariants.py `--self-test`; change both
+// together.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(relpath: &str, text: &str, table_md: &str) -> Vec<String> {
+        let (table, errs) = parse_audit_table(table_md);
+        assert!(errs.is_empty(), "{errs:?}");
+        scan_file(relpath, text, &table)
+            .iter()
+            .map(|v| v.split('[').nth(1).unwrap().split(']').next().unwrap().to_string())
+            .collect()
+    }
+
+    const TABLE: &str = "| rust/src/audited.rs | good | store | Release | yes | fixture |\n";
+
+    #[test]
+    fn undocumented_unsafe_is_flagged() {
+        assert_eq!(rules("rust/src/x.rs", "fn f() { unsafe { g(); } }\n", ""), ["safety-comment"]);
+    }
+
+    #[test]
+    fn documented_unsafe_passes() {
+        let src = "// SAFETY: g has no preconditions.\nfn f() { unsafe { g(); } }\n";
+        assert!(rules("rust/src/x.rs", src, "").is_empty());
+    }
+
+    #[test]
+    fn strings_are_blanked() {
+        assert!(rules("rust/src/x.rs", "fn f() { let s = \"unsafe transmute\"; }\n", "")
+            .is_empty());
+    }
+
+    #[test]
+    fn transmute_outside_allowlist_is_flagged() {
+        let src = "fn f() { core::mem::transmute::<u8, i8>(0) }\n";
+        assert_eq!(rules("rust/src/x.rs", src, ""), ["transmute-allowlist"]);
+    }
+
+    #[test]
+    fn transmute_in_pool_with_safety_passes() {
+        let src = "// SAFETY: ok.\nunsafe { transmute::<u8, i8>(0) }\n";
+        assert!(rules("rust/src/util/pool.rs", src, "").is_empty());
+    }
+
+    #[test]
+    fn direct_lock_in_coordinator_is_flagged() {
+        let src = "fn f(m: &Mutex<u8>) { let _ = m.lock(); }\n";
+        assert_eq!(rules("rust/src/coordinator/x.rs", src, ""), ["coordinator-lock"]);
+    }
+
+    #[test]
+    fn test_module_is_exempt_from_lock_rule() {
+        let src = "#[cfg(test)]\nmod tests {\n  fn f(m: &Mutex<u8>) { let _ = m.lock(); }\n}\n";
+        assert!(rules("rust/src/coordinator/x.rs", src, "").is_empty());
+    }
+
+    #[test]
+    fn unwrap_outside_allowlist_is_flagged() {
+        let src = "fn f() { None::<u8>.unwrap(); }\n";
+        assert_eq!(rules("rust/src/x.rs", src, ""), ["unwrap-allowlist"]);
+        assert!(rules("examples/x.rs", src, "").is_empty());
+    }
+
+    #[test]
+    fn unannotated_atomic_is_flagged() {
+        let src = "fn f(a: &A) { a.flag.store(true, Ordering::SeqCst); }\n";
+        assert_eq!(rules("rust/src/x.rs", src, ""), ["atomic-audited"]);
+    }
+
+    #[test]
+    fn inline_ordering_comment_passes() {
+        let src = "fn f(a: &A) {\n  // ordering: SeqCst because fixture.\n  \
+                   a.flag.store(true, Ordering::SeqCst);\n}\n";
+        assert!(rules("rust/src/x.rs", src, "").is_empty());
+    }
+
+    #[test]
+    fn vec_swap_is_not_an_atomic() {
+        assert!(rules("rust/src/x.rs", "fn f(v: &mut Vec<u8>) { v.swap(0, 1); }\n", "")
+            .is_empty());
+    }
+
+    #[test]
+    fn audited_atomic_passes_and_relaxed_on_publication_fails() {
+        let ok = "fn f(a: &A) { a.good.store(true, Ordering::Release); }\n";
+        assert!(rules("rust/src/audited.rs", ok, TABLE).is_empty());
+        let bad = "fn f(a: &A) { a.good.store(true, Ordering::Relaxed); }\n";
+        assert_eq!(
+            rules("rust/src/audited.rs", bad, TABLE),
+            ["atomic-ordering", "relaxed-publication"]
+        );
+    }
+
+    #[test]
+    fn publication_row_listing_relaxed_is_rejected() {
+        let (_, errs) =
+            parse_audit_table("| rust/src/y.rs | f | store | Relaxed | yes | bad |\n");
+        assert_eq!(errs.len(), 1);
+    }
+
+    #[test]
+    fn neighbouring_statement_ordering_does_not_bleed() {
+        // Receiver `a` has no row: the `Ordering::` inside *its own*
+        // parens decides, not the next statement's.
+        let src = "fn f(v: &mut Vec<u8>, a: &A) {\n    v.swap(0, 1);\n    \
+                   a.flag.store(true, Ordering::SeqCst);\n}\n";
+        assert_eq!(rules("rust/src/x.rs", src, ""), ["atomic-audited"]);
+    }
+
+    #[test]
+    fn multiline_receiver_resolves() {
+        let src = "fn f(a: &A) {\n    a.counters.really_long_name\n        \
+                   .fetch_add(1, Ordering::Relaxed);\n}\n";
+        assert_eq!(
+            rules("rust/src/x.rs", src, ""),
+            ["atomic-audited"],
+            "receiver on the previous line must still be resolved"
+        );
+    }
+
+    #[test]
+    fn whole_tree_is_clean() {
+        // The real gate: zero violations over the repo, using the
+        // checked-in CONCURRENCY.md (mirrors `ci.sh --lint-invariants`).
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let violations = run(root).expect("lint walks the repo");
+        assert!(violations.is_empty(), "{}", violations.join("\n"));
+    }
+}

@@ -3,6 +3,7 @@
 //! Level comes from `PALMAD_LOG` (`error|warn|info|debug|trace`, default
 //! `info`); output goes to stderr with a monotonic timestamp so bench runs
 //! stay parseable.
+#![forbid(unsafe_code)]
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;

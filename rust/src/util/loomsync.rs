@@ -1,0 +1,50 @@
+//! Sync-primitive shim: `std::sync` in normal builds, the vendored
+//! `loom` model checker under `--cfg palmad_loom`.
+//!
+//! The concurrency core (`util::pool`, `util::sync`, `engines::scratch`,
+//! `engines::native`, `coordinator::lease`) imports its mutexes,
+//! condvars, atomics, and thread-spawning through this module instead of
+//! `std`, so the *production types themselves* — not hand-copied
+//! sketches of them — are what `rust/tests/loom_models.rs` explores
+//! under every bounded interleaving:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg palmad_loom" cargo test --test loom_models --release
+//! ```
+//!
+//! (or `scripts/ci.sh --loom`).  In normal builds every re-export is a
+//! zero-cost alias of the `std` item, so nothing changes for production
+//! code.  Under `palmad_loom`, loom primitives only function inside a
+//! `loom::model(..)` closure; the rest of the test suite is not built
+//! under that cfg (the CI leg runs only `--test loom_models`).
+//!
+//! `std::sync::PoisonError`/`LockResult` are shared by both sides, so
+//! poison-recovery code (`util::sync`) is identical under either cfg.
+//!
+//! What the model checker covers — and what it cannot — is documented in
+//! `vendor/loom/src/lib.rs` and the per-atomic table in `CONCURRENCY.md`.
+#![forbid(unsafe_code)]
+
+#[cfg(not(palmad_loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(palmad_loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+pub use std::sync::{LockResult, PoisonError};
+
+pub mod atomic {
+    #[cfg(not(palmad_loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+
+    #[cfg(palmad_loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+}
+
+pub mod thread {
+    #[cfg(not(palmad_loom))]
+    pub use std::thread::{spawn, yield_now, Builder, JoinHandle};
+
+    #[cfg(palmad_loom)]
+    pub use loom::thread::{spawn, yield_now, Builder, JoinHandle};
+}

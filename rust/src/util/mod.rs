@@ -6,7 +6,9 @@
 pub mod binio;
 pub mod cli;
 pub mod json;
+pub mod lint;
 pub mod logger;
+pub mod loomsync;
 pub mod pool;
 pub mod rng;
 pub mod sync;

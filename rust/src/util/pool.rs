@@ -19,11 +19,20 @@
 //! tile costs are skewed by early abandons), and writes go to disjoint
 //! slots through [`SliceWriter`], so no ordering lock is ever taken on
 //! the result path.
+//!
+//! Concurrency verification: [`RoundPool`] and [`SliceWriter`] take
+//! their primitives from [`crate::util::loomsync`], so
+//! `rust/tests/loom_models.rs` model-checks the round handoff and the
+//! slot-publication protocol on the *production* types under
+//! `--cfg palmad_loom` (see `CONCURRENCY.md` for the ordering audit).
+//! [`ThreadPool`] stays on plain `std` + mpsc: it is the boxed-job
+//! legacy pool, not part of the zero-alloc engine path, and mpsc is
+//! outside the model checker's vocabulary.
 
+use crate::util::loomsync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::loomsync::{thread as lthread, Arc, Condvar, Mutex};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -43,10 +52,11 @@ impl ThreadPool {
     pub fn new(n: usize) -> Self {
         assert!(n >= 1);
         let (tx, rx) = channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
+        // std (not loomsync) on purpose: see the module docs.
+        let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
         let handles = (0..n)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let rx = std::sync::Arc::clone(&rx);
                 std::thread::Builder::new()
                     .name(format!("palmad-pool-{i}"))
                     .spawn(move || loop {
@@ -111,17 +121,45 @@ pub fn default_threads() -> usize {
 pub(crate) struct SliceWriter<T> {
     ptr: *mut T,
     len: usize,
+    /// Model-checking only: per-slot claim flags so a protocol bug that
+    /// hands the same index to two threads fails *deterministically*
+    /// inside the loom models instead of silently double-dropping `T`.
+    /// Gated on `palmad_loom` — NOT `debug_assertions` — because
+    /// `SliceWriter::new` sits on the zero-steady-state-allocation path
+    /// proven by `rust/tests/alloc_steady_state.rs`, which runs in debug
+    /// builds; allocating a claim map there would break the proof.
+    #[cfg(palmad_loom)]
+    claimed: Vec<AtomicBool>,
 }
 
 // SAFETY: SliceWriter only moves `T` values across threads (each slot is
 // written/borrowed by at most one thread at a time, enforced by the
-// callers' index-claiming protocol), so `T: Send` suffices.
+// callers' index-claiming protocol), so `T: Send` suffices.  The loom
+// models in rust/tests/loom_models.rs check the claiming protocol of
+// both production callers (cursor fetch_add in `parallel_map_indexed` /
+// `RoundPool::run`).
 unsafe impl<T: Send> Send for SliceWriter<T> {}
 unsafe impl<T: Send> Sync for SliceWriter<T> {}
 
 impl<T> SliceWriter<T> {
     pub(crate) fn new(slice: &mut [T]) -> Self {
-        Self { ptr: slice.as_mut_ptr(), len: slice.len() }
+        Self {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            #[cfg(palmad_loom)]
+            claimed: (0..slice.len()).map(|_| AtomicBool::new(false)).collect(),
+        }
+    }
+
+    /// Model-checking guard: every slot index must be claimed by exactly
+    /// one `write`/`slot` call per round.  A second claim is a protocol
+    /// violation (two threads got the same index) and fails the model.
+    #[cfg(palmad_loom)]
+    fn claim_once(&self, i: usize) {
+        assert!(
+            !self.claimed[i].swap(true, Ordering::SeqCst),
+            "SliceWriter slot {i} claimed twice — the index-distribution protocol aliased"
+        );
     }
 
     /// Overwrite slot `i`.
@@ -130,8 +168,14 @@ impl<T> SliceWriter<T> {
     /// `i` must be claimed by exactly one thread (no concurrent access to
     /// the same slot), and the underlying slice must outlive the write.
     pub(crate) unsafe fn write(&self, i: usize, value: T) {
-        debug_assert!(i < self.len);
-        *self.ptr.add(i) = value;
+        debug_assert!(i < self.len, "SliceWriter write out of bounds: {i} >= {}", self.len);
+        #[cfg(palmad_loom)]
+        self.claim_once(i);
+        // SAFETY: `i < len` (asserted above in debug builds, guaranteed
+        // by the caller's claiming protocol in release), the slot is not
+        // concurrently accessed (caller contract), and `ptr` outlives
+        // `self` (caller contract on the backing slice).
+        unsafe { *self.ptr.add(i) = value };
     }
 
     /// Exclusive reference to slot `i`.
@@ -141,8 +185,12 @@ impl<T> SliceWriter<T> {
     /// no other live reference to slot `i` exists for the borrow's life.
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn slot(&self, i: usize) -> &mut T {
-        debug_assert!(i < self.len);
-        &mut *self.ptr.add(i)
+        debug_assert!(i < self.len, "SliceWriter slot out of bounds: {i} >= {}", self.len);
+        #[cfg(palmad_loom)]
+        self.claim_once(i);
+        // SAFETY: same argument as in `write` — in-bounds by the claiming
+        // protocol, exclusivity and lifetime by the caller contract.
+        unsafe { &mut *self.ptr.add(i) }
     }
 }
 
@@ -258,7 +306,32 @@ pub struct RoundPool {
     /// round at a time (an engine shared across threads stays correct;
     /// rounds just queue up behind each other).
     submit: Mutex<()>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<lthread::JoinHandle<()>>,
+}
+
+/// Erase the lifetime of a round-job reference for storage in
+/// [`RoundState::job`].
+///
+/// This is the **only** `transmute` in the codebase (enforced by
+/// `palmad-lint`), and its soundness is a protocol property rather than
+/// a type-system one:
+///
+/// - The erased reference is stored in `RoundState::job` under the state
+///   lock, *after* the work cursor has been reset, and only by
+///   [`RoundPool::run`] while it holds the `submit` lock.
+/// - Workers dereference it only between observing the epoch bump (under
+///   the same state lock) and decrementing `active`.
+/// - `run` does not return until `active == 0` **and** it has cleared
+///   the slot back to `None` — so every dereference happens within the
+///   dynamic extent of `run`'s borrow of the closure.
+///
+/// The `round_pool_job_slot_cleared_after_round` unit test pins the
+/// observable half of the invariant, and the RoundPool models in
+/// `rust/tests/loom_models.rs` explore the handoff interleavings.
+fn erase_job_lifetime(job: &(dyn Fn(usize) + Sync)) -> &'static (dyn Fn(usize) + Sync) {
+    // SAFETY: see above — the round protocol contains every dereference
+    // of the erased reference within the lifetime of the original.
+    unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(job) }
 }
 
 impl RoundPool {
@@ -281,7 +354,7 @@ impl RoundPool {
         let handles = (0..workers)
             .map(|w| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
+                lthread::Builder::new()
                     .name(format!("palmad-round-{w}"))
                     .spawn(move || worker_main(&shared))
                     .expect("spawn round-pool worker")
@@ -321,12 +394,9 @@ impl RoundPool {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
         };
-        let job: &(dyn Fn(usize) + Sync) = &f;
-        // SAFETY: the erased 'static lifetime never escapes this call —
-        // workers only dereference `job` between the epoch bump below and
-        // their `active` decrement, and this function does not return
-        // until `active == 0` and the slot is cleared.
-        let job: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
+        // Lifetime containment is the round protocol's core invariant;
+        // see `erase_job_lifetime` for the argument.
+        let job = erase_job_lifetime(&f);
         {
             let mut st = self.shared.state.lock().unwrap();
             self.shared.cursor.store(0, Ordering::Relaxed);
@@ -424,6 +494,94 @@ impl Drop for RoundPool {
     }
 }
 
+/// Model-checking scenario bodies for `rust/tests/loom_models.rs`.
+///
+/// These live here (not in the test file) because they exercise the
+/// crate-private [`SliceWriter`]; the integration test wraps each in
+/// `loom::model(...)`, which explores every bounded interleaving of the
+/// loom threads they spawn.  Compiled only under `--cfg palmad_loom`.
+#[cfg(palmad_loom)]
+pub mod loom_scenarios {
+    use super::*;
+
+    /// Two threads write disjoint slots through one `SliceWriter`: the
+    /// claim map proves no slot is ever claimed twice, and the join
+    /// publishes both writes back to the owning thread.
+    pub fn slice_writer_disjoint_publication() {
+        let mut out: Vec<u64> = vec![0; 2];
+        let slots = Arc::new(SliceWriter::new(&mut out));
+        let writer = {
+            let slots = Arc::clone(&slots);
+            // SAFETY: slot 0 is claimed only by this thread, slot 1 only
+            // by the spawning thread, and `out` outlives the join below.
+            lthread::spawn(move || unsafe { slots.write(0, 11) })
+        };
+        // SAFETY: slot 1 is claimed only by this thread (see above).
+        unsafe { slots.write(1, 22) };
+        writer.join().expect("writer thread completes");
+        drop(slots);
+        assert_eq!(out, [11, 22], "both writes must be visible after the join");
+    }
+
+    /// Aliased claims are a *detected* protocol violation: both threads
+    /// write slot 0, and `claim_once` must fail the model.  The caller
+    /// asserts the model panics — this pins the guard itself, so the
+    /// disjointness proofs above cannot pass vacuously.
+    pub fn slice_writer_aliased_claim() {
+        let mut out: Vec<u64> = vec![0; 1];
+        let slots = Arc::new(SliceWriter::new(&mut out));
+        let writer = {
+            let slots = Arc::clone(&slots);
+            // SAFETY: deliberately violates the disjointness contract to
+            // prove the loom claim guard catches it; both writes store a
+            // plain u64 (no drop, no uninit read), so the only UB risk —
+            // the data race — is exactly what the model serializes.
+            lthread::spawn(move || unsafe { slots.write(0, 1) })
+        };
+        // SAFETY: see above — intentional aliasing under the model.
+        unsafe { slots.write(0, 2) };
+        // Propagate the child's claim failure if the child lost the race
+        // (otherwise the write above already panicked): every schedule
+        // must end in a panic for the caller's catch_unwind to observe.
+        writer.join().expect("child claim must also have succeeded");
+        drop(slots);
+    }
+
+    /// One worker plus the submitting thread drain a two-item round;
+    /// every interleaving of the broadcast/claim/done protocol must run
+    /// each item exactly once, and `Drop`'s shutdown handshake must join
+    /// the worker without deadlock.
+    pub fn round_pool_round_completes() {
+        let pool = RoundPool::new(1);
+        let counter = AtomicUsize::new(0);
+        pool.run(2, |_| {
+            // ordering: SeqCst — model-only completion counter; strongest
+            // ordering since it exists purely to assert the protocol.
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        // ordering: SeqCst — read after the round barrier (see above).
+        assert_eq!(counter.load(Ordering::SeqCst), 2, "each item runs exactly once per round");
+    }
+
+    /// The production slot-write pattern (`engines/scratch.rs`,
+    /// `engines/native.rs`): a round writes disjoint `SliceWriter` slots
+    /// via the cursor protocol.  The claim map rejects any interleaving
+    /// where the cursor hands an index out twice, and `run`'s barrier
+    /// must publish all slots before returning.
+    pub fn round_pool_disjoint_slots() {
+        let pool = RoundPool::new(1);
+        let mut out: Vec<u64> = vec![0; 2];
+        let slots = SliceWriter::new(&mut out);
+        // SAFETY: the round cursor hands each index to exactly one
+        // thread (checked by the claim map under this cfg), and `out`
+        // outlives the round — `run` returns only after all items done.
+        pool.run(2, |i| unsafe { slots.write(i, i as u64 + 1) });
+        drop(pool);
+        drop(slots);
+        assert_eq!(out, [1, 2], "round results must be published by the done barrier");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -479,11 +637,13 @@ mod tests {
 
     /// Contention regression: tiny items maximize pressure on the result
     /// path.  The lock-free writer must stay correct under it and agree
-    /// with the mutex-collected reference exactly.
+    /// with the mutex-collected reference exactly.  (Scaled down under
+    /// Miri — the aliasing checks are per-access, not per-volume.)
     #[test]
     fn parallel_map_contention_regression() {
-        for round in 0..5u64 {
-            let n = 50_000;
+        let rounds = if cfg!(miri) { 2u64 } else { 5u64 };
+        for round in 0..rounds {
+            let n = if cfg!(miri) { 500 } else { 50_000 };
             let free = parallel_map_indexed(n, 8, |i| i as u64 ^ round);
             assert_eq!(free.len(), n);
             for (i, v) in free.iter().enumerate() {
@@ -507,28 +667,42 @@ mod tests {
 
     #[test]
     fn round_pool_runs_rounds_and_reuses_workers() {
+        let (rounds, n) = if cfg!(miri) { (3u64, 100u64) } else { (10, 1000) };
         let pool = RoundPool::new(3);
         let counter = AtomicU64::new(0);
-        for _ in 0..10 {
-            pool.run(1000, |i| {
+        for _ in 0..rounds {
+            pool.run(n as usize, |i| {
                 counter.fetch_add(i as u64 + 1, Ordering::Relaxed);
             });
         }
-        assert_eq!(counter.load(Ordering::Relaxed), 10 * (1000 * 1001 / 2));
+        assert_eq!(counter.load(Ordering::Relaxed), rounds * (n * (n + 1) / 2));
     }
 
     #[test]
     fn round_pool_writes_disjoint_slots() {
+        let n = if cfg!(miri) { 500 } else { 20_000 };
         let pool = RoundPool::new(4);
-        let mut out = vec![0u64; 20_000];
+        let mut out = vec![0u64; n];
         let slots = SliceWriter::new(&mut out);
-        pool.run(20_000, |i| {
+        pool.run(n, |i| {
             // SAFETY: cursor gives each index to exactly one thread.
             unsafe { slots.write(i, (i as u64).wrapping_mul(3) + 1) };
         });
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, (i as u64).wrapping_mul(3) + 1);
         }
+    }
+
+    /// The observable half of the `erase_job_lifetime` invariant: once
+    /// `run` returns, the job slot is cleared and no worker is active, so
+    /// the lifetime-erased reference cannot be dereferenced again.
+    #[test]
+    fn round_pool_job_slot_cleared_after_round() {
+        let pool = RoundPool::new(2);
+        pool.run(8, |_| {});
+        let st = pool.shared.state.lock().expect("round-pool state lock");
+        assert!(st.job.is_none(), "job reference must not outlive its round");
+        assert_eq!(st.active, 0, "no worker may still be inside the round");
     }
 
     #[test]
@@ -576,15 +750,16 @@ mod tests {
 
     #[test]
     fn round_pool_concurrent_submitters_serialize() {
+        let (subs, rounds, n) = if cfg!(miri) { (2u64, 3u64, 50u64) } else { (4, 20, 500) };
         let pool = Arc::new(RoundPool::new(2));
         let total = Arc::new(AtomicU64::new(0));
-        let handles: Vec<_> = (0..4)
+        let handles: Vec<_> = (0..subs)
             .map(|_| {
                 let pool = Arc::clone(&pool);
                 let total = Arc::clone(&total);
                 std::thread::spawn(move || {
-                    for _ in 0..20 {
-                        pool.run(500, |i| {
+                    for _ in 0..rounds {
+                        pool.run(n as usize, |i| {
                             total.fetch_add(i as u64, Ordering::Relaxed);
                         });
                     }
@@ -594,7 +769,7 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * (499 * 500 / 2));
+        assert_eq!(total.load(Ordering::Relaxed), subs * rounds * ((n - 1) * n / 2));
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! workload samplers) goes through this generator so runs are exactly
 //! reproducible from a `u64` seed — a requirement for the experiment
 //! harness (EXPERIMENTS.md records seeds next to results).
+#![forbid(unsafe_code)]
 
 /// xoshiro256** (Blackman & Vigna), seeded via splitmix64.
 #[derive(Clone, Debug)]

@@ -20,8 +20,15 @@
 //! so the helpers do not depend on a newer toolchain; the flag stays
 //! set, and every subsequent access goes through recovery again, which
 //! is cheap.
+//!
+//! The primitives come through [`crate::util::loomsync`], so the
+//! poison-recovery path itself is model-checked: the
+//! `sync_poison_recovery_no_lost_wakeup` model in
+//! `rust/tests/loom_models.rs` proves a panicking lock holder cannot
+//! cost a waiter its wakeup.
+#![forbid(unsafe_code)]
 
-use std::sync::{Condvar, Mutex, MutexGuard};
+use crate::util::loomsync::{Condvar, Mutex, MutexGuard};
 
 /// Lock a mutex, recovering the guard if a previous holder panicked.
 #[inline]

@@ -1,0 +1,299 @@
+//! Bounded model checking of the concurrency core (CONCURRENCY.md).
+//!
+//! Compiled and run only under `RUSTFLAGS="--cfg palmad_loom"`:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg palmad_loom" cargo test --test loom_models --release
+//! ```
+//!
+//! (or `scripts/ci.sh --loom`).  Each test wraps a scenario in
+//! `loom::model`, which explores every interleaving of the loom threads
+//! it spawns, up to the preemption bound (`PALMAD_LOOM_PREEMPTIONS`,
+//! default 2 — the CHESS result: almost all real concurrency bugs
+//! manifest within two forced preemptions).  The production types
+//! themselves are explored — `util::loomsync` swaps their `std::sync`
+//! primitives for the vendored checker under this cfg — not hand-copied
+//! sketches, with two exceptions documented below (`SliceWriter`
+//! scenarios live in `util::pool::loom_scenarios` because the type is
+//! crate-private, and the `Service` shutdown protocol is distilled
+//! because the real service spawns `std` listener/worker threads the
+//! checker cannot schedule).
+//!
+//! Model inventory (referenced by name from CONCURRENCY.md and module
+//! docs):
+//!
+//! | model                                   | protocol under test                 |
+//! |-----------------------------------------|-------------------------------------|
+//! | `slice_writer_disjoint_publication`     | disjoint slot writes + join publish |
+//! | `round_pool_round_completes`            | broadcast/claim/done round handoff  |
+//! | `round_pool_disjoint_slots`             | cursor-claimed `SliceWriter` slots  |
+//! | `qt_seed_cache_rebind_during_read`      | shard epoch/bound rebind protocol   |
+//! | `engine_pool_sticky_vs_steal`           | sticky checkout vs concurrent lease |
+//! | `engine_pool_blocked_checkout_wakes`    | condvar wakeup on lease return      |
+//! | `sync_poison_recovery_no_lost_wakeup`   | `lock_recover`/`wait_recover` under |
+//! |                                         | a poisoned mutex                    |
+//! | `service_shutdown_no_lost_wakeup`       | stop-flag store under queue mutex   |
+//!
+//! Two negative tests (`*_is_caught`) run deliberately broken protocols
+//! and assert the checker fails them — they keep the passing models
+//! honest (a checker that cannot find the seeded bug proves nothing).
+
+#![cfg(palmad_loom)]
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use palmad::coordinator::config::EngineOptions;
+use palmad::coordinator::lease::EnginePool;
+use palmad::engines::scratch::QtSeedCache;
+use palmad::util::loomsync::atomic::{AtomicBool, Ordering};
+use palmad::util::loomsync::{thread, Arc, Condvar, Mutex};
+use palmad::util::pool::loom_scenarios;
+use palmad::util::sync::{lock_recover, wait_recover};
+
+/// Run a model whose explored schedules panic *by design* (deliberate
+/// poisoning, seeded protocol bugs) with the default panic hook
+/// silenced, so thousands of intentional backtraces do not drown the
+/// test log.  The hook is always restored before returning.  Models are
+/// globally serialized inside `loom::model`, and the checker prints
+/// failing schedules straight to stderr (not via the hook), so genuine
+/// failures remain visible.
+fn model_outcome(f: impl Fn()) -> std::thread::Result<()> {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let result = catch_unwind(AssertUnwindSafe(|| loom::model(f)));
+    std::panic::set_hook(prev);
+    result
+}
+
+// ---------------------------------------------------------------------
+// SliceWriter + RoundPool (scenario bodies in util::pool::loom_scenarios)
+// ---------------------------------------------------------------------
+
+#[test]
+fn slice_writer_disjoint_publication() {
+    loom::model(loom_scenarios::slice_writer_disjoint_publication);
+}
+
+#[test]
+fn slice_writer_double_claim_is_caught() {
+    let result = model_outcome(loom_scenarios::slice_writer_aliased_claim);
+    assert!(result.is_err(), "two claims of one slot must fail the model");
+}
+
+#[test]
+fn round_pool_round_completes() {
+    loom::model(loom_scenarios::round_pool_round_completes);
+}
+
+#[test]
+fn round_pool_disjoint_slots() {
+    loom::model(loom_scenarios::round_pool_disjoint_slots);
+}
+
+// ---------------------------------------------------------------------
+// QtSeedCache rebind protocol (engines/scratch.rs)
+// ---------------------------------------------------------------------
+
+/// Reference dot products for window `a` against the `nb` subsequences
+/// starting at `cs`.  All model values are small integers, so every
+/// product and sum is exact in f64 and the asserts can demand equality.
+fn dots(t: &[f64], m: usize, a: usize, cs: usize, nb: usize) -> Vec<f64> {
+    (0..nb).map(|j| (0..m).map(|k| t[a + k] * t[cs + j + k]).sum()).collect()
+}
+
+#[test]
+fn qt_seed_cache_rebind_during_read() {
+    loom::model(|| {
+        let (m, a, cs, nb) = (3usize, 0usize, 3usize, 2usize);
+        let cache = Arc::new(QtSeedCache::new());
+        // Arc<Vec<_>> keeps each buffer (and so its (ptr, len) identity)
+        // stable for the whole model.
+        let t1: Arc<Vec<f64>> = Arc::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let t2: Arc<Vec<f64>> = Arc::new(vec![8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0]);
+        cache.prepare(&t1);
+        // Warm a cached row so the racing rebind contends with a live
+        // entry, not just a cold miss.
+        let mut warm = vec![0.0; nb];
+        cache.seed_into(&t1, m, a, cs, nb, &mut warm);
+
+        let rebinder = {
+            let (cache, t2) = (Arc::clone(&cache), Arc::clone(&t2));
+            thread::spawn(move || cache.prepare(&t2))
+        };
+        // A read racing the sentinel → epoch-bump → evict → rebind
+        // sequence must still produce t1's exact products, recomputing
+        // from scratch if its row was evicted mid-flight.
+        let mut out = vec![0.0; nb];
+        cache.seed_into(&t1, m, a, cs, nb, &mut out);
+        assert_eq!(out, dots(&t1, m, a, cs, nb), "reader racing a rebind saw poisoned rows");
+        rebinder.join().expect("rebinder completes");
+
+        // After the rebind settles, t2 reads must be exact too: a row
+        // cached under the t1 binding must never be served for t2.
+        cache.prepare(&t2);
+        let mut out2 = vec![0.0; nb];
+        cache.seed_into(&t2, m, a, cs, nb, &mut out2);
+        assert_eq!(out2, dots(&t2, m, a, cs, nb), "stale t1 row survived the rebind");
+    });
+}
+
+// ---------------------------------------------------------------------
+// EnginePool checkout protocol (coordinator/lease.rs)
+// ---------------------------------------------------------------------
+
+fn small_pool(capacity: usize) -> EnginePool {
+    let opts = EngineOptions { segn: 32, threads: 1, ..Default::default() };
+    EnginePool::new(&opts, capacity).expect("engine pool builds")
+}
+
+#[test]
+fn engine_pool_sticky_vs_steal() {
+    loom::model(|| {
+        let pool = Arc::new(small_pool(2));
+        // Key one slot to tenant 1, then race tenant 1's sticky
+        // re-checkout against tenant 2's first checkout.
+        drop(pool.checkout(1));
+        let other = {
+            let pool = Arc::clone(&pool);
+            thread::spawn(move || drop(pool.checkout(2)))
+        };
+        drop(pool.checkout(1));
+        other.join().expect("tenant 2 completes");
+        let c = pool.counters();
+        assert_eq!(c.leases, 3);
+        assert_eq!(c.sticky_hits, 1, "tenant 1's re-checkout must hit its keyed slot");
+        assert_eq!(c.rebinds, 0, "two tenants over two slots must never steal");
+        // Epilogue: a third tenant on a fully-keyed pool has no sticky
+        // and no unkeyed slot left — the LRU steal path must fire.
+        drop(pool.checkout(3));
+        assert_eq!(pool.counters().rebinds, 1, "tenant 3 must steal the LRU entry");
+    });
+}
+
+#[test]
+fn engine_pool_blocked_checkout_wakes() {
+    loom::model(|| {
+        let pool = Arc::new(small_pool(1));
+        let held = pool.checkout(1);
+        let waiter = {
+            let pool = Arc::clone(&pool);
+            thread::spawn(move || drop(pool.checkout(2)))
+        };
+        // Lease return re-inserts the entry and notifies *under the
+        // slots lock*; every schedule must wake the blocked waiter.
+        drop(held);
+        waiter.join().expect("blocked checkout must be woken by the returned lease");
+        let c = pool.counters();
+        assert_eq!(c.leases, 2);
+        assert_eq!(c.rebinds, 1, "capacity-1 handoff rebinds the slot to tenant 2");
+    });
+}
+
+// ---------------------------------------------------------------------
+// util::sync poison recovery
+// ---------------------------------------------------------------------
+
+#[test]
+fn sync_poison_recovery_no_lost_wakeup() {
+    // The poisoner panics by design on every explored schedule — run
+    // with the hook silenced (see `model_outcome`).
+    let result = model_outcome(|| {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        // A worker panics while holding the lock, poisoning it.
+        let poisoner = {
+            let pair = Arc::clone(&pair);
+            thread::spawn(move || {
+                let _g = pair.0.lock().unwrap_or_else(|e| e.into_inner());
+                panic!("deliberate: poison the flag mutex");
+            })
+        };
+        assert!(poisoner.join().is_err(), "poisoner must have panicked");
+        // A second worker sets the flag under the (now poisoned) lock
+        // and notifies while still holding it.
+        let setter = {
+            let pair = Arc::clone(&pair);
+            thread::spawn(move || {
+                let mut flag = lock_recover(&pair.0);
+                *flag = true;
+                pair.1.notify_all();
+            })
+        };
+        // The waiter recovers from poison at every acquisition and must
+        // still observe the flag; a lost wakeup deadlocks the model.
+        let mut flag = lock_recover(&pair.0);
+        while !*flag {
+            flag = wait_recover(&pair.1, flag);
+        }
+        drop(flag);
+        setter.join().expect("setter completes");
+    });
+    assert!(result.is_ok(), "poison recovery must not lose the wakeup: {result:?}");
+}
+
+// ---------------------------------------------------------------------
+// Service shutdown handoff (coordinator/service.rs)
+// ---------------------------------------------------------------------
+
+/// Distilled `Service` queue protocol: `worker_main`'s
+/// lock → check-stop → pop → wait loop, `submit`'s push-under-lock +
+/// notify-after, and `shutdown`'s store + broadcast + join.  Distilled
+/// (rather than the real `Service`) because the service spawns `std`
+/// listener/worker threads the checker cannot schedule; the loop bodies
+/// mirror `coordinator/service.rs` line for line.
+///
+/// `store_stop_under_queue_lock` selects the fixed (`true`) or pre-PR-7
+/// (`false`) shutdown: storing `stop` and notifying *without* the queue
+/// mutex can fire between a worker's stop check and its `wait`, after
+/// which the worker sleeps forever and `join` never returns.
+fn service_shutdown_protocol(store_stop_under_queue_lock: bool) {
+    let queue: Arc<Mutex<VecDeque<u64>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let cv = Arc::new(Condvar::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let worker = {
+        let (queue, cv, stop) = (Arc::clone(&queue), Arc::clone(&cv), Arc::clone(&stop));
+        thread::spawn(move || loop {
+            let job: u64 = {
+                let mut q = lock_recover(&queue);
+                loop {
+                    if stop.load(Ordering::Acquire) {
+                        return;
+                    }
+                    if let Some(id) = q.pop_front() {
+                        break id;
+                    }
+                    q = wait_recover(&cv, q);
+                }
+            };
+            let _ = job; // "run" the job outside the lock
+        })
+    };
+    // Service::submit — push under the queue lock, notify after (safe:
+    // the predicate change happened under the waiters' mutex, so the
+    // worker either sees the job or is parked when the notify lands).
+    lock_recover(&queue).push_back(7);
+    cv.notify_one();
+    // Service::shutdown.
+    if store_stop_under_queue_lock {
+        let _q = lock_recover(&queue);
+        stop.store(true, Ordering::Release);
+        cv.notify_all();
+    } else {
+        stop.store(true, Ordering::Release);
+        cv.notify_all();
+    }
+    worker.join().expect("worker must observe shutdown");
+}
+
+#[test]
+fn service_shutdown_no_lost_wakeup() {
+    loom::model(|| service_shutdown_protocol(true));
+}
+
+#[test]
+fn service_shutdown_lost_wakeup_bug_is_caught() {
+    // Regression pin for the PR 7 fix: the old protocol must deadlock
+    // under some schedule (the checker reports it as a failed model).
+    let result = model_outcome(|| service_shutdown_protocol(false));
+    assert!(result.is_err(), "the unfixed shutdown protocol must deadlock under the model");
+}

@@ -43,6 +43,37 @@
 #                                # auto-resume.  Also part of the default
 #                                # (non --fast) gate — crash-safety claims
 #                                # are gated, not aspirational.
+#   scripts/ci.sh --lint-invariants
+#                                # run ONLY the repo-invariant lint
+#                                # (SAFETY comments, transmute/unwrap
+#                                # containment, the CONCURRENCY.md atomic
+#                                # audit, coordinator lock discipline)
+#                                # and exit.  Also part of EVERY gate
+#                                # (default and --fast): it is a pure
+#                                # source scan, needs no toolchain
+#                                # (python fallback), and guards the
+#                                # documented invariants directly.
+#   scripts/ci.sh --loom         # model-check the concurrency core:
+#                                # build with RUSTFLAGS="--cfg palmad_loom"
+#                                # (util::loomsync swaps std::sync for the
+#                                # vendored checker) and run
+#                                # rust/tests/loom_models.rs, which
+#                                # exhaustively explores the SliceWriter /
+#                                # RoundPool / QtSeedCache / EnginePool /
+#                                # Service-shutdown protocols under
+#                                # bounded preemptions.  Standalone leg
+#                                # (separate build cfg); exits after.
+#   scripts/ci.sh --miri         # run the unsafe core (util::pool,
+#                                # util::binio, engines::scratch,
+#                                # engines::native) under Miri's aliasing
+#                                # + UB interpreter.  Needs a nightly
+#                                # toolchain with the miri component;
+#                                # skips with a notice when absent.
+#   scripts/ci.sh --sanitize thread|address
+#                                # rebuild std + tests with TSan/ASan
+#                                # instrumentation (nightly -Zbuild-std)
+#                                # and run the threaded core.  Skips with
+#                                # a notice when nightly is absent.
 #
 # The workspace is fully offline (vendored path deps), so no network is
 # needed.  `cargo fmt --check` and `cargo clippy -- -D warnings` keep the
@@ -62,7 +93,17 @@ CLIPPY_ONLY=0
 KERNEL_MATRIX=0
 SERVICE_SMOKE=0
 CHAOS=0
+LINT_ONLY=0
+LOOM=0
+MIRI=0
+SANITIZE=""
+EXPECT_SANITIZER=0
 for arg in "$@"; do
+  if [ "$EXPECT_SANITIZER" -eq 1 ]; then
+    SANITIZE="$arg"
+    EXPECT_SANITIZER=0
+    continue
+  fi
   case "$arg" in
     --fast) FAST=1 ;;
     --bench-smoke) BENCH_SMOKE=1 ;;
@@ -70,9 +111,96 @@ for arg in "$@"; do
     --kernel-matrix) KERNEL_MATRIX=1 ;;
     --service-smoke) SERVICE_SMOKE=1 ;;
     --chaos) CHAOS=1 ;;
+    --lint-invariants) LINT_ONLY=1 ;;
+    --loom) LOOM=1 ;;
+    --miri) MIRI=1 ;;
+    --sanitize) EXPECT_SANITIZER=1 ;;
+    --sanitize=*) SANITIZE="${arg#*=}" ;;
     *) echo "unknown flag: $arg" >&2; exit 2 ;;
   esac
 done
+if [ "$EXPECT_SANITIZER" -eq 1 ]; then
+  echo "--sanitize needs a value: thread|address" >&2
+  exit 2
+fi
+if [ -n "$SANITIZE" ] && [ "$SANITIZE" != thread ] && [ "$SANITIZE" != address ]; then
+  echo "unknown sanitizer: $SANITIZE (thread|address)" >&2
+  exit 2
+fi
+
+# The invariant lint is part of every gate: a pure source scan of the
+# documented unsafe/concurrency invariants (CONCURRENCY.md).  The cargo
+# binary and scripts/lint_invariants.py implement the same rules over
+# the same fixtures; prefer python here so the gate runs before (and
+# without) any compilation, falling back to the cargo bin where only a
+# Rust toolchain exists.  `cargo test` independently runs the Rust
+# implementation over the whole tree (util::lint::tests).
+run_lint_invariants() {
+  echo "== lint-invariants (unsafe discipline + CONCURRENCY.md audit) =="
+  if command -v python3 >/dev/null 2>&1; then
+    python3 scripts/lint_invariants.py .
+  elif command -v cargo >/dev/null 2>&1; then
+    cargo run -q --bin palmad-lint -- .
+  else
+    echo "lint-invariants: neither python3 nor cargo available" >&2
+    exit 1
+  fi
+}
+
+if [ "$LINT_ONLY" -eq 1 ]; then
+  run_lint_invariants
+  echo "CI invariant-lint gate passed."
+  exit 0
+fi
+
+if [ "$LOOM" -eq 1 ]; then
+  if ! command -v cargo >/dev/null 2>&1; then
+    echo "loom: cargo unavailable — skipping model checking (notice, not failure)"
+    exit 0
+  fi
+  echo "== loom model checking (RUSTFLAGS=--cfg palmad_loom) =="
+  # Release: the checker replays thousands of schedules per model.  Only
+  # the loom_models target is built/run under this cfg — the rest of the
+  # suite uses std primitives that would panic outside loom::model.
+  RUSTFLAGS="${RUSTFLAGS:-} --cfg palmad_loom" cargo test -q --release --test loom_models
+  echo "loom: all models passed."
+  exit 0
+fi
+
+if [ "$MIRI" -eq 1 ]; then
+  if ! cargo +nightly miri --version >/dev/null 2>&1; then
+    echo "miri: nightly toolchain with miri component unavailable — skipping (notice, not failure)"
+    exit 0
+  fi
+  echo "== miri (unsafe core: pool, binio codec, scratch, native) =="
+  # -Zmiri-disable-isolation: the pool/engine tests read env knobs and
+  # the clock.  Scaled-down #[cfg(miri)] profiles keep this tractable;
+  # expect minutes, not seconds.
+  MIRIFLAGS="${MIRIFLAGS:-} -Zmiri-disable-isolation" \
+    cargo +nightly miri test -q --lib -- \
+    util::pool util::binio engines::scratch engines::native
+  echo "miri: unsafe core clean."
+  exit 0
+fi
+
+if [ -n "$SANITIZE" ]; then
+  if ! cargo +nightly --version >/dev/null 2>&1; then
+    echo "sanitize: nightly toolchain unavailable — skipping (notice, not failure)"
+    exit 0
+  fi
+  HOST=$(rustc +nightly -vV | sed -n 's/^host: //p')
+  echo "== ${SANITIZE} sanitizer (nightly, -Zbuild-std, $HOST) =="
+  # std must be instrumented too (TSan especially), hence -Zbuild-std.
+  # Scope: the threaded core (lib unit tests) + the service integration
+  # suite, where cross-thread handoffs actually happen.
+  RUSTFLAGS="${RUSTFLAGS:-} -Zsanitizer=$SANITIZE" \
+    cargo +nightly test -q -Zbuild-std --target "$HOST" \
+    --lib --test integration_service --test chaos_faults
+  echo "sanitize($SANITIZE): clean."
+  exit 0
+fi
+
+run_lint_invariants
 
 echo "== cargo fmt --check =="
 cargo fmt --all --check

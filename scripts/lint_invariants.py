@@ -1,0 +1,385 @@
+#!/usr/bin/env python3
+"""Repo-invariant lint — toolchain-free mirror of `palmad-lint`.
+
+This is a line-for-line semantic mirror of `rust/src/util/lint.rs` (the
+canonical implementation, run by `scripts/ci.sh --lint-invariants` when
+cargo is available).  It exists so the invariant gate runs on machines
+with no Rust toolchain: the rules, allowlists, and CONCURRENCY.md table
+grammar here must match the Rust module exactly, and `--self-test` runs
+the same fixtures as the Rust unit tests to keep the two honest.
+
+Rules (see CONCURRENCY.md "Invariants enforced by palmad-lint"):
+
+  safety-comment      every `unsafe` is preceded (<= 12 lines) by
+                      `// SAFETY:` or a `# Safety` doc section
+  transmute-allowlist `transmute` only in rust/src/util/pool.rs
+  atomic-audited      every atomic op in non-test src code has a
+                      CONCURRENCY.md row or an inline `// ordering:`
+                      comment (<= 8 lines above)
+  atomic-ordering     an op's Ordering must be listed in its row
+  relaxed-publication Relaxed is forbidden on rows marked
+                      publication = yes (site and table self-check)
+  coordinator-lock    no direct `.lock()` in rust/src/coordinator
+                      (use util::sync::{lock_recover, wait_recover})
+  unwrap-allowlist    no `.unwrap()` in non-test src code outside
+                      allowlisted files (`expect("...")` is fine)
+
+Test modules, rust/tests/, and examples/ are exempt from the atomic,
+lock, and unwrap rules; safety/transmute apply everywhere scanned.
+vendor/ is not scanned.
+"""
+
+import os
+import re
+import sys
+
+SCAN_ROOTS = ("rust/src", "rust/tests", "examples")
+TRANSMUTE_ALLOWLIST = {"rust/src/util/pool.rs"}
+UNWRAP_ALLOWLIST = {"rust/src/util/pool.rs"}
+SAFETY_WINDOW = 12
+ORDERING_WINDOW = 8
+
+ATOMIC_METHODS = (
+    "load|store|swap|fetch_add|fetch_sub|fetch_and|fetch_or|fetch_xor"
+    "|fetch_max|fetch_min|fetch_update|compare_exchange_weak|compare_exchange"
+)
+ATOMIC_RE = re.compile(
+    r"(?:([A-Za-z_][A-Za-z0-9_]*)\s*(?:\[[^\]]*\])?\s*)?\.\s*(%s)\s*\(" % ATOMIC_METHODS
+)
+ORDERING_RE = re.compile(r"Ordering::([A-Za-z]+)")
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+TRANSMUTE_RE = re.compile(r"\btransmute\b")
+TRAILING_RECV_RE = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)\s*(?:\[[^\]]*\])?\s*$")
+
+
+def strip_rust(text):
+    """Split source into (code_lines, comment_lines).
+
+    code_lines blanks out comments and string/char-literal contents
+    (quotes kept) so token rules never fire on prose; comment_lines
+    holds each line's comment text for SAFETY / ordering detection.
+    """
+    code, comment = [], []
+    cur_code, cur_comment = [], []
+    i, n = 0, len(text)
+    state = "normal"  # normal | line | block | str | rawstr
+    depth = 0
+    raw_hashes = 0
+
+    def endline():
+        code.append("".join(cur_code))
+        comment.append("".join(cur_comment))
+        cur_code.clear()
+        cur_comment.clear()
+
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            if state == "line":
+                state = "normal"
+            endline()
+            i += 1
+            continue
+        if state == "line":
+            cur_comment.append(c)
+            i += 1
+        elif state == "block":
+            if text.startswith("/*", i):
+                depth += 1
+                cur_comment.append("/*")
+                i += 2
+            elif text.startswith("*/", i):
+                depth -= 1
+                cur_comment.append("*/")
+                i += 2
+                if depth == 0:
+                    state = "normal"
+            else:
+                cur_comment.append(c)
+                i += 1
+        elif state == "str":
+            if c == "\\":
+                i += 2
+            elif c == '"':
+                cur_code.append('"')
+                state = "normal"
+                i += 1
+            else:
+                i += 1
+        elif state == "rawstr":
+            if c == '"' and text[i + 1 : i + 1 + raw_hashes] == "#" * raw_hashes:
+                cur_code.append('"')
+                state = "normal"
+                i += 1 + raw_hashes
+            else:
+                i += 1
+        else:  # normal
+            if text.startswith("//", i):
+                state = "line"
+                cur_comment.append("//")
+                i += 2
+            elif text.startswith("/*", i):
+                state = "block"
+                depth = 1
+                cur_comment.append("/*")
+                i += 2
+            elif c == '"':
+                cur_code.append('"')
+                state = "str"
+                i += 1
+            elif re.match(r'(?:b?r)(#*)"', text[i : i + 8]):
+                m = re.match(r'(?:b?r)(#*)"', text[i : i + 8])
+                raw_hashes = len(m.group(1))
+                cur_code.append('r"')
+                state = "rawstr"
+                i += m.end()
+            elif c == "'":
+                m = re.match(r"'(\\[^']+|[^'\\])'", text[i:])
+                if m:
+                    cur_code.append("''")  # char literal, contents blanked
+                    i += m.end()
+                else:
+                    cur_code.append(c)  # lifetime tick
+                    i += 1
+            else:
+                cur_code.append(c)
+                i += 1
+    endline()
+    return code, comment
+
+
+def test_region_start(code_lines):
+    """First line of the `#[cfg(test)] mod tests` tail, or len(lines)."""
+    for i, line in enumerate(code_lines):
+        if re.match(r"\s*#\[cfg\(test\)\]\s*$", line):
+            for j in range(i + 1, min(i + 4, len(code_lines))):
+                if re.match(r"\s*(pub\s+)?mod\s+tests\b", code_lines[j]):
+                    return i
+    return len(code_lines)
+
+
+def parse_audit_table(md_text):
+    """CONCURRENCY.md rows -> {(file, atomic_name): (orderings, publication)}."""
+    rows = {}
+    errors = []
+    for lineno, line in enumerate(md_text.splitlines(), 1):
+        line = line.strip()
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if len(cells) < 6 or cells[0] in ("File", "") or set(cells[0]) <= {"-", " "}:
+            continue
+        path, names, _ops, orderings, publication, _why = cells[:6]
+        pub = publication.lower().startswith("yes")
+        ords = set(re.findall(r"[A-Za-z]+", orderings))
+        if pub and "Relaxed" in ords:
+            errors.append(
+                "CONCURRENCY.md:%d: [relaxed-publication] row '%s' is "
+                "publication=yes but lists Relaxed" % (lineno, names)
+            )
+        for name in names.split(","):
+            rows[(path, name.strip())] = (ords, pub)
+    return rows, errors
+
+
+def has_comment(comment_lines, upto, window, needles):
+    lo = max(0, upto - window)
+    for line in comment_lines[lo : upto + 1]:
+        if any(n in line for n in needles):
+            return True
+    return False
+
+
+def scan_file(relpath, text, table):
+    """Lint one file; returns a list of 'path:line: [rule] msg' strings."""
+    out = []
+    code, comment = strip_rust(text)
+    relpath = relpath.replace(os.sep, "/")
+    is_test_file = relpath.startswith("rust/tests/") or relpath.startswith("examples/")
+    tests_at = 0 if is_test_file else test_region_start(code)
+    in_coordinator = relpath.startswith("rust/src/coordinator/")
+
+    for i, line in enumerate(code):
+        lineno = i + 1
+        in_test = is_test_file or i >= tests_at
+
+        if UNSAFE_RE.search(line) and not has_comment(
+            comment, i, SAFETY_WINDOW, ("SAFETY:", "# Safety")
+        ):
+            out.append(
+                "%s:%d: [safety-comment] `unsafe` without a // SAFETY: "
+                "comment (or /// # Safety section) in the preceding %d lines"
+                % (relpath, lineno, SAFETY_WINDOW)
+            )
+
+        if TRANSMUTE_RE.search(line) and relpath not in TRANSMUTE_ALLOWLIST:
+            out.append(
+                "%s:%d: [transmute-allowlist] transmute outside %s"
+                % (relpath, lineno, sorted(TRANSMUTE_ALLOWLIST))
+            )
+
+        if in_test:
+            continue
+
+        if in_coordinator and ".lock()" in line:
+            out.append(
+                "%s:%d: [coordinator-lock] direct .lock() in coordinator/ "
+                "(use util::sync::{lock_recover, wait_recover})" % (relpath, lineno)
+            )
+
+        if ".unwrap()" in line and relpath not in UNWRAP_ALLOWLIST:
+            out.append(
+                "%s:%d: [unwrap-allowlist] .unwrap() outside allowlisted "
+                'files (use expect("...") with the invariant)' % (relpath, lineno)
+            )
+
+        for m in ATOMIC_RE.finditer(line):
+            window = " ".join(code[i : i + 4])
+            # Scan only the call's own argument list: from its opening
+            # paren to the balanced close (so a neighbouring statement's
+            # Ordering:: cannot bleed into this site's audit).
+            open_at = m.end() - 1  # the regex ends at the opening paren
+            args, depth_p = [], 0
+            for ch in window[open_at:]:
+                args.append(ch)
+                depth_p += (ch == "(") - (ch == ")")
+                if depth_p == 0:
+                    break
+            # Only calls passing Ordering:: are atomic ops (filters
+            # Vec::swap, slice::swap, non-atomic .store/.load methods).
+            ords = set(ORDERING_RE.findall("".join(args)))
+            if not ords:
+                continue
+            recv = m.group(1)
+            if recv is None:
+                for back in range(i - 1, max(0, i - 3) - 1, -1):
+                    t = TRAILING_RECV_RE.search(code[back].rstrip())
+                    if t:
+                        recv = t.group(1)
+                        break
+            row = table.get((relpath, recv)) if recv else None
+            if row is not None:
+                allowed, publication = row
+                for o in ords:
+                    if o not in allowed:
+                        out.append(
+                            "%s:%d: [atomic-ordering] %s.%s uses Ordering::%s, "
+                            "not listed in its CONCURRENCY.md row"
+                            % (relpath, lineno, recv, m.group(2), o)
+                        )
+                if publication and "Relaxed" in ords:
+                    out.append(
+                        "%s:%d: [relaxed-publication] Relaxed on publication "
+                        "flag `%s`" % (relpath, lineno, recv)
+                    )
+            elif not has_comment(comment, i, ORDERING_WINDOW, ("ordering:",)):
+                out.append(
+                    "%s:%d: [atomic-audited] atomic op on `%s` has no "
+                    "CONCURRENCY.md row and no inline `// ordering:` comment"
+                    % (relpath, lineno, recv or "?")
+                )
+    return out
+
+
+def run(root):
+    with open(os.path.join(root, "CONCURRENCY.md")) as f:
+        table, errors = parse_audit_table(f.read())
+    violations = list(errors)
+    for scan_root in SCAN_ROOTS:
+        top = os.path.join(root, scan_root)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames.sort()
+            for fn in sorted(filenames):
+                if not fn.endswith(".rs"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, root)
+                with open(path) as f:
+                    violations.extend(scan_file(rel, f.read(), table))
+    return violations
+
+
+# --- self-test fixtures: keep in lockstep with the unit tests in
+# --- rust/src/util/lint.rs (same inputs, same expected rule hits).
+FIXTURES = [
+    ("rust/src/x.rs", "fn f() { unsafe { g(); } }\n", ["safety-comment"]),
+    ("rust/src/x.rs", "// SAFETY: g has no preconditions.\nfn f() { unsafe { g(); } }\n", []),
+    ("rust/src/x.rs", 'fn f() { let s = "unsafe transmute"; }\n', []),
+    ("rust/src/x.rs", "fn f() { core::mem::transmute::<u8, i8>(0) }\n", ["transmute-allowlist"]),
+    ("rust/src/util/pool.rs", "// SAFETY: ok.\nunsafe { transmute::<u8, i8>(0) }\n", []),
+    (
+        "rust/src/coordinator/x.rs",
+        "fn f(m: &Mutex<u8>) { let _ = m.lock(); }\n",
+        ["coordinator-lock"],
+    ),
+    (
+        "rust/src/coordinator/x.rs",
+        "#[cfg(test)]\nmod tests {\n  fn f(m: &Mutex<u8>) { let _ = m.lock(); }\n}\n",
+        [],
+    ),
+    ("rust/src/x.rs", "fn f() { None::<u8>.unwrap(); }\n", ["unwrap-allowlist"]),
+    ("examples/x.rs", "fn f() { None::<u8>.unwrap(); }\n", []),
+    ("rust/src/x.rs", "fn f(a: &A) { a.flag.store(true, Ordering::SeqCst); }\n", ["atomic-audited"]),
+    (
+        "rust/src/x.rs",
+        "fn f(a: &A) {\n  // ordering: SeqCst because fixture.\n"
+        "  a.flag.store(true, Ordering::SeqCst);\n}\n",
+        [],
+    ),
+    ("rust/src/x.rs", "fn f(v: &mut Vec<u8>) { v.swap(0, 1); }\n", []),
+    (
+        "rust/src/audited.rs",
+        "fn f(a: &A) { a.good.store(true, Ordering::Release); }\n",
+        [],
+    ),
+    (
+        "rust/src/audited.rs",
+        "fn f(a: &A) { a.good.store(true, Ordering::Relaxed); }\n",
+        ["atomic-ordering", "relaxed-publication"],
+    ),
+    (
+        "rust/src/x.rs",
+        "fn f(v: &mut Vec<u8>, a: &A) {\n    v.swap(0, 1);\n"
+        "    a.flag.store(true, Ordering::SeqCst);\n}\n",
+        ["atomic-audited"],
+    ),
+    (
+        "rust/src/x.rs",
+        "fn f(a: &A) {\n    a.counters.really_long_name\n"
+        "        .fetch_add(1, Ordering::Relaxed);\n}\n",
+        ["atomic-audited"],
+    ),
+]
+FIXTURE_TABLE_MD = "| rust/src/audited.rs | good | store | Release | yes | fixture |\n"
+
+
+def self_test():
+    table, errs = parse_audit_table(FIXTURE_TABLE_MD)
+    assert not errs, errs
+    failed = 0
+    for path, text, want in FIXTURES:
+        got = [v.split("[")[1].split("]")[0] for v in scan_file(path, text, table)]
+        if got != want:
+            failed += 1
+            print("fixture FAILED: %s\n  want %s\n  got  %s" % (path, want, got))
+    bad_row = "| rust/src/y.rs | f | store | Relaxed | yes | bad |\n"
+    if not parse_audit_table(bad_row)[1]:
+        failed += 1
+        print("fixture FAILED: publication=yes + Relaxed row not rejected")
+    print("self-test: %d fixtures, %d failed" % (len(FIXTURES) + 1, failed))
+    return failed
+
+
+def main(argv):
+    if "--self-test" in argv:
+        return 1 if self_test() else 0
+    root = argv[1] if len(argv) > 1 else "."
+    violations = run(root)
+    for v in violations:
+        print(v)
+    print("lint-invariants: %d violation(s)" % len(violations))
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

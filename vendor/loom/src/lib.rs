@@ -1,0 +1,1054 @@
+//! Vendored minimal model checker exposing a `loom`-compatible API subset.
+//!
+//! The real `loom` crate cannot be vendored here (offline build), so this
+//! is a from-scratch reimplementation of the part palmad needs: run a
+//! closure under *every* (bounded) thread interleaving of its
+//! synchronization operations and fail loudly — with the offending
+//! schedule — on assertion failures, deadlocks, and lost wakeups.
+//!
+//! # How it works
+//!
+//! Model threads are real OS threads, but at most one ever runs at a
+//! time: a global token (the `current` thread id in [`rt::Exec`]) is
+//! handed from thread to thread at *switch points* — immediately before
+//! every atomic operation, mutex acquisition, condvar notify, spawn and
+//! join.  At each switch point with more than one runnable thread the
+//! scheduler consults a recorded decision stack: on the first execution
+//! it always picks option 0 and records the fan-out; when the closure
+//! finishes, the deepest non-exhausted decision is incremented and the
+//! whole closure re-runs, replaying the prefix — a depth-first search
+//! over schedules.  `Condvar::notify_one` with several waiters is a
+//! decision point too (which waiter wakes is part of the schedule).
+//!
+//! # Soundness and bounds
+//!
+//! - Execution is *sequentially consistent*: `Ordering` arguments are
+//!   accepted and ignored.  Every interleaving explored is a real SC
+//!   interleaving, so any failure found is a real bug; relaxed-memory
+//!   reorderings beyond SC are **not** explored (that gap is covered by
+//!   the written `CONCURRENCY.md` audit, not this checker).
+//! - Exploration is bounded by a *preemption budget* (default 2,
+//!   overridable via [`model::Builder::max_preemptions`] or
+//!   `PALMAD_LOOM_PREEMPTIONS`): schedules that forcibly switch away
+//!   from a runnable thread more than the budget allows are pruned.
+//!   Within the budget the search is exhaustive, and the CHESS result
+//!   applies: almost all concurrency bugs manifest within 2 forced
+//!   preemptions.  Voluntary switches (blocking on a mutex/condvar/join)
+//!   are free and always fully explored.
+//! - Spurious condvar wakeups are not modeled; `std` permits them, so
+//!   user code must still use predicate loops (the models assert this
+//!   shape by construction).
+//!
+//! A deadlock — every live thread blocked — aborts the model and panics
+//! with the thread states and the schedule that led there.  A lost
+//! wakeup therefore shows up as a deadlock, which is exactly how the
+//! service-shutdown regression model pins its bug.
+//!
+//! Mutexes poison on panic exactly like `std` (guards check
+//! `std::thread::panicking()` on drop), and `thread::spawn` wraps the
+//! child body in `catch_unwind` so a *deliberate* child panic (the
+//! poison-recovery models) is reported through `JoinHandle::join` as
+//! `Err` instead of tearing down the exploration.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod rt {
+    //! The scheduler runtime: global token, decision stack, abort logic.
+
+    use std::cell::Cell;
+    use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard, OnceLock};
+
+    /// Hard cap on model threads; models are meant to be tiny.
+    pub const MAX_THREADS: usize = 16;
+
+    #[derive(Clone, Copy, PartialEq, Eq, Debug)]
+    pub(crate) enum Run {
+        Runnable,
+        BlockedMutex(usize),
+        BlockedCondvar(usize),
+        BlockedJoin(usize),
+        /// The main thread waiting for every spawned thread to finish.
+        BlockedJoinAll,
+        Done,
+    }
+
+    #[derive(Clone, Debug, PartialEq, Eq)]
+    pub(crate) struct Decision {
+        pub options: Vec<usize>,
+        pub chosen: usize,
+    }
+
+    #[derive(Default)]
+    pub(crate) struct Exec {
+        pub active: bool,
+        pub threads: Vec<Run>,
+        pub current: usize,
+        pub decisions: Vec<Decision>,
+        pub depth: usize,
+        pub preemptions: usize,
+        pub max_preemptions: usize,
+        pub aborting: Option<String>,
+    }
+
+    pub(crate) struct Sched {
+        pub m: StdMutex<Exec>,
+        pub cv: StdCondvar,
+    }
+
+    pub(crate) fn sched() -> &'static Sched {
+        static S: OnceLock<Sched> = OnceLock::new();
+        S.get_or_init(|| Sched { m: StdMutex::new(Exec::default()), cv: StdCondvar::new() })
+    }
+
+    thread_local! {
+        pub(crate) static TID: Cell<Option<usize>> = const { Cell::new(None) };
+    }
+
+    pub(crate) fn cur_tid() -> usize {
+        TID.with(|t| t.get()).expect("loom: sync op on a thread that is not part of a model")
+    }
+
+    /// Lock the scheduler state, recovering from poison (a panicking
+    /// model thread must not wedge the checker itself).
+    pub(crate) fn slock() -> StdMutexGuard<'static, Exec> {
+        match sched().m.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    pub(crate) fn fmt_schedule(ex: &Exec) -> String {
+        let picks: Vec<String> =
+            ex.decisions.iter().map(|d| format!("{}/{}", d.chosen, d.options.len())).collect();
+        format!("[{}]", picks.join(" "))
+    }
+
+    /// Mark the model failed and wake every thread so it can unwind.
+    pub(crate) fn abort(ex: &mut Exec, msg: String) {
+        if ex.aborting.is_none() {
+            ex.aborting = Some(msg);
+        }
+        sched().cv.notify_all();
+    }
+
+    /// Panic out of a model thread after an abort — unless this thread is
+    /// already unwinding (a panic inside a panic aborts the process).
+    pub(crate) fn abort_panic(msg: &str) {
+        if !std::thread::panicking() {
+            panic!("loom: model aborted: {msg}");
+        }
+    }
+
+    /// Pick the next thread to run.  Called with the scheduler locked.
+    pub(crate) fn pick_next(ex: &mut Exec) {
+        let mut options: Vec<usize> = ex
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| **r == Run::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        if options.is_empty() {
+            if ex.threads.iter().all(|r| *r == Run::Done) {
+                return; // iteration over; nobody is waiting for the token
+            }
+            let msg = format!(
+                "deadlock: no runnable thread (states: {:?}, schedule: {})",
+                ex.threads,
+                fmt_schedule(ex)
+            );
+            abort(ex, msg);
+            return;
+        }
+        let cur_runnable = ex.threads.get(ex.current).is_some_and(|r| *r == Run::Runnable);
+        if cur_runnable {
+            // Deterministic option order: staying on the current thread is
+            // option 0 (never a preemption), then ascending thread id.
+            options.retain(|&t| t != ex.current);
+            options.insert(0, ex.current);
+            if ex.preemptions >= ex.max_preemptions {
+                options.truncate(1); // budget exhausted: no forced switch
+            }
+        }
+        let chosen = choose(ex, options);
+        if cur_runnable && chosen != ex.current {
+            ex.preemptions += 1;
+        }
+        ex.current = chosen;
+        sched().cv.notify_all();
+    }
+
+    /// Consume one decision (recording it on first visit).  Single-option
+    /// points are free: they record nothing and replay identically.
+    pub(crate) fn choose(ex: &mut Exec, options: Vec<usize>) -> usize {
+        if options.len() == 1 {
+            return options[0];
+        }
+        let idx = if ex.depth < ex.decisions.len() {
+            if ex.decisions[ex.depth].options != options {
+                let msg = format!(
+                    "nondeterministic model: replay diverged at depth {} (recorded {:?}, got {:?})",
+                    ex.depth, ex.decisions[ex.depth].options, options
+                );
+                abort(ex, msg);
+                return options[0];
+            }
+            ex.decisions[ex.depth].chosen
+        } else {
+            ex.decisions.push(Decision { options: options.clone(), chosen: 0 });
+            0
+        };
+        ex.depth += 1;
+        options[idx]
+    }
+
+    /// Block until the token lands on `me` (runnable), or the model
+    /// aborts.  Consumes the scheduler guard.
+    pub(crate) fn handoff(mut g: StdMutexGuard<'static, Exec>, me: usize) {
+        loop {
+            if let Some(msg) = g.aborting.clone() {
+                drop(g);
+                abort_panic(&msg);
+                return; // only reachable while unwinding
+            }
+            if g.current == me && g.threads.get(me) == Some(&Run::Runnable) {
+                return;
+            }
+            g = match sched().cv.wait(g) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// A switch point: offer the scheduler a chance to run someone else.
+    /// Every visible operation calls this first.
+    pub(crate) fn switch_point() {
+        let me = cur_tid();
+        let mut g = slock();
+        if let Some(msg) = g.aborting.clone() {
+            drop(g);
+            abort_panic(&msg);
+            return;
+        }
+        if !g.active {
+            drop(g);
+            if std::thread::panicking() {
+                return;
+            }
+            panic!("loom: sync op outside a model (wrap the code in loom::model)");
+        }
+        pick_next(&mut g);
+        handoff(g, me);
+    }
+
+    /// Mark `tid` finished, wake joiners, and pass the token on.  Must
+    /// never panic: it runs on the exit path of every model thread.
+    pub(crate) fn thread_done(tid: usize) {
+        let mut g = slock();
+        if g.threads.get(tid).is_none() {
+            return;
+        }
+        g.threads[tid] = Run::Done;
+        for r in g.threads.iter_mut() {
+            if *r == Run::BlockedJoin(tid) {
+                *r = Run::Runnable;
+            }
+        }
+        let others_done = g
+            .threads
+            .iter()
+            .all(|r| matches!(r, Run::Done | Run::BlockedJoinAll));
+        if others_done {
+            for r in g.threads.iter_mut() {
+                if *r == Run::BlockedJoinAll {
+                    *r = Run::Runnable;
+                }
+            }
+        }
+        if g.aborting.is_none() {
+            pick_next(&mut g);
+        }
+        sched().cv.notify_all();
+    }
+
+    /// Main-thread wait for every spawned thread to finish (so an
+    /// iteration only ends once all effects are observable).
+    pub(crate) fn wait_all_done() {
+        let me = cur_tid();
+        loop {
+            let mut g = slock();
+            if let Some(msg) = g.aborting.clone() {
+                drop(g);
+                abort_panic(&msg);
+                return;
+            }
+            let others_done =
+                g.threads.iter().enumerate().all(|(i, r)| i == me || *r == Run::Done);
+            if others_done {
+                g.threads[me] = Run::Done;
+                return;
+            }
+            g.threads[me] = Run::BlockedJoinAll;
+            pick_next(&mut g);
+            handoff(g, me);
+        }
+    }
+}
+
+pub mod model {
+    //! Model entry points: [`model`] and the tunable [`Builder`].
+
+    use crate::rt::{self, Run};
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+    /// Exploration bounds; fields mirror the knobs of the real loom.
+    #[derive(Clone, Debug)]
+    pub struct Builder {
+        /// Forced-preemption budget per execution (see crate docs).
+        pub max_preemptions: usize,
+        /// Safety valve: fail the model if exploration exceeds this many
+        /// schedules instead of spinning forever.
+        pub max_iterations: u64,
+        /// Print the schedule count on completion.
+        pub log: bool,
+    }
+
+    impl Default for Builder {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    fn env_u64(key: &str, default: u64) -> u64 {
+        std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Self {
+                max_preemptions: env_u64("PALMAD_LOOM_PREEMPTIONS", 2) as usize,
+                max_iterations: env_u64("PALMAD_LOOM_MAX_ITERS", 1_000_000),
+                log: std::env::var("PALMAD_LOOM_LOG").is_ok(),
+            }
+        }
+
+        /// Run `f` under every schedule within the bounds.  Panics (with
+        /// the failing schedule on stderr) if any execution panics,
+        /// deadlocks, or diverges.
+        pub fn check<F: Fn()>(&self, f: F) {
+            // The scheduler state is a process-wide singleton, but the
+            // test harness runs #[test] fns on several threads: serialize
+            // whole models here (recovering the lock if a failing model
+            // panicked out while holding it) instead of asserting.
+            static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+            let _serial = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+            {
+                let mut g = rt::slock();
+                assert!(!g.active, "loom: nested models are not supported");
+                *g = rt::Exec {
+                    active: true,
+                    max_preemptions: self.max_preemptions,
+                    ..Default::default()
+                };
+            }
+            let mut iterations = 0u64;
+            loop {
+                iterations += 1;
+                {
+                    let mut g = rt::slock();
+                    g.threads = vec![Run::Runnable];
+                    g.current = 0;
+                    g.depth = 0;
+                    g.preemptions = 0;
+                    g.aborting = None;
+                }
+                rt::TID.with(|t| t.set(Some(0)));
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    f();
+                    rt::wait_all_done();
+                }));
+                rt::TID.with(|t| t.set(None));
+                if let Err(e) = result {
+                    let schedule = {
+                        let mut g = rt::slock();
+                        g.active = false;
+                        rt::abort(&mut g, "main model thread panicked".to_string());
+                        rt::fmt_schedule(&g)
+                    };
+                    eprintln!(
+                        "loom: model FAILED on iteration {iterations}; schedule {schedule}"
+                    );
+                    resume_unwind(e);
+                }
+                // Depth-first backtrack: drop exhausted suffix, bump the
+                // deepest live decision, replay.
+                let exhausted = {
+                    let mut g = rt::slock();
+                    loop {
+                        match g.decisions.last_mut() {
+                            None => break true,
+                            Some(d) if d.chosen + 1 < d.options.len() => {
+                                d.chosen += 1;
+                                break false;
+                            }
+                            Some(_) => {
+                                g.decisions.pop();
+                            }
+                        }
+                    }
+                };
+                if exhausted {
+                    break;
+                }
+                if iterations >= self.max_iterations {
+                    let mut g = rt::slock();
+                    g.active = false;
+                    drop(g);
+                    panic!(
+                        "loom: model exceeded {} schedules — shrink the model or raise PALMAD_LOOM_MAX_ITERS",
+                        self.max_iterations
+                    );
+                }
+            }
+            {
+                let mut g = rt::slock();
+                g.active = false;
+            }
+            if self.log {
+                eprintln!("loom: model complete: {iterations} schedules explored");
+            }
+        }
+    }
+
+    /// Explore `f` under the default bounds.
+    pub fn model<F: Fn()>(f: F) {
+        Builder::new().check(f)
+    }
+}
+
+pub use model::model;
+
+pub mod thread {
+    //! Model-aware `std::thread` subset.
+
+    use crate::rt::{self, Run};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Handle to a model thread; `join` blocks *in the model* first, then
+    /// reaps the OS thread.
+    pub struct JoinHandle<T> {
+        tid: usize,
+        os: std::thread::JoinHandle<std::thread::Result<T>>,
+    }
+
+    #[derive(Default)]
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        pub fn name(mut self, name: String) -> Self {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            rt::switch_point();
+            let tid = {
+                let mut g = rt::slock();
+                let tid = g.threads.len();
+                assert!(tid < rt::MAX_THREADS, "loom: model spawned too many threads");
+                g.threads.push(Run::Runnable);
+                tid
+            };
+            let os = std::thread::Builder::new()
+                .name(self.name.unwrap_or_else(|| format!("loom-{tid}")))
+                .spawn(move || {
+                    rt::TID.with(|t| t.set(Some(tid)));
+                    // Wait to be scheduled for the first time.
+                    rt::handoff(rt::slock(), tid);
+                    let r = catch_unwind(AssertUnwindSafe(f));
+                    rt::thread_done(tid);
+                    rt::TID.with(|t| t.set(None));
+                    r
+                })?;
+            Ok(JoinHandle { tid, os })
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("loom: OS thread spawn failed")
+    }
+
+    /// Voluntary switch point.
+    pub fn yield_now() {
+        rt::switch_point();
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Like `std::thread::JoinHandle::join`: `Err` carries the child's
+        /// panic payload (the child body runs under `catch_unwind`).
+        pub fn join(self) -> std::thread::Result<T> {
+            rt::switch_point();
+            loop {
+                let mut g = rt::slock();
+                if g.aborting.is_some() {
+                    // Permissive teardown: the child exits on its own once
+                    // the abort broadcast reaches it.
+                    drop(g);
+                    break;
+                }
+                if g.threads.get(self.tid) == Some(&Run::Done) {
+                    drop(g);
+                    break;
+                }
+                let me = rt::cur_tid();
+                g.threads[me] = Run::BlockedJoin(self.tid);
+                rt::pick_next(&mut g);
+                rt::handoff(g, me);
+            }
+            match self.os.join() {
+                Ok(inner) => inner,
+                Err(e) => Err(e),
+            }
+        }
+    }
+}
+
+pub mod sync {
+    //! Model-aware `std::sync` subset.  `PoisonError`/`LockResult` are
+    //! re-exported from `std` so calling code keeps identical signatures.
+
+    pub use std::sync::{Arc, LockResult, PoisonError};
+
+    use crate::rt::{self, Run};
+    use std::cell::{Cell, UnsafeCell};
+    use std::marker::PhantomData;
+
+    /// Model mutex: non-reentrant, poisoning, blocking is a scheduler
+    /// decision.  All bookkeeping fields are only touched while holding
+    /// the global scheduler lock (or the token, which is exclusive).
+    pub struct Mutex<T> {
+        held_by: Cell<Option<usize>>,
+        poisoned: Cell<bool>,
+        data: UnsafeCell<T>,
+    }
+
+    // SAFETY: `held_by`/`poisoned` are only mutated under the global
+    // scheduler lock or while holding the execution token (at most one
+    // model thread runs at any instant), and `data` is only reachable
+    // through a held guard; the scheduler's own std mutex provides the
+    // inter-thread happens-before edges.
+    unsafe impl<T: Send> Send for Mutex<T> {}
+    unsafe impl<T: Send> Sync for Mutex<T> {}
+
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        /// Guards are `!Send`, like std's.
+        _nosend: PhantomData<*mut ()>,
+    }
+
+    impl<T> Mutex<T> {
+        pub fn new(t: T) -> Self {
+            Self { held_by: Cell::new(None), poisoned: Cell::new(false), data: UnsafeCell::new(t) }
+        }
+
+        fn id(&self) -> usize {
+            self as *const Self as *const () as usize
+        }
+
+        pub fn is_poisoned(&self) -> bool {
+            self.poisoned.get()
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            let poisoned = self.poisoned.get();
+            let v = self.data.into_inner();
+            if poisoned {
+                Err(PoisonError::new(v))
+            } else {
+                Ok(v)
+            }
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            rt::switch_point();
+            self.lock_no_switch()
+        }
+
+        /// Acquire without the leading switch point (used by
+        /// `Condvar::wait` re-acquisition, whose blocking release already
+        /// was a scheduling event).
+        fn lock_no_switch(&self) -> LockResult<MutexGuard<'_, T>> {
+            let me = rt::cur_tid();
+            loop {
+                let mut g = rt::slock();
+                if g.aborting.is_some() {
+                    // Permissive teardown so Drop impls can run while
+                    // every thread unwinds.
+                    self.held_by.set(Some(me));
+                    drop(g);
+                    break;
+                }
+                match self.held_by.get() {
+                    None => {
+                        self.held_by.set(Some(me));
+                        drop(g);
+                        break;
+                    }
+                    Some(owner) if owner == me => {
+                        let msg = format!(
+                            "self-deadlock: thread {me} re-locking a mutex it holds (schedule {})",
+                            rt::fmt_schedule(&g)
+                        );
+                        rt::abort(&mut g, msg.clone());
+                        drop(g);
+                        rt::abort_panic(&msg);
+                        break;
+                    }
+                    Some(_) => {
+                        g.threads[me] = Run::BlockedMutex(self.id());
+                        rt::pick_next(&mut g);
+                        rt::handoff(g, me);
+                        // Woken because the holder released; re-contend.
+                    }
+                }
+            }
+            let guard = MutexGuard { lock: self, _nosend: PhantomData };
+            if self.poisoned.get() {
+                Err(PoisonError::new(guard))
+            } else {
+                Ok(guard)
+            }
+        }
+
+        /// Release and wake contenders.  Never panics (runs in Drop).
+        fn unlock_from_guard(&self) {
+            let mut g = rt::slock();
+            self.held_by.set(None);
+            let id = self.id();
+            for r in g.threads.iter_mut() {
+                if *r == Run::BlockedMutex(id) {
+                    *r = Run::Runnable;
+                }
+            }
+            drop(g);
+            rt::sched().cv.notify_all();
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            // SAFETY: the guard proves exclusive ownership of the lock.
+            unsafe { &*self.lock.data.get() }
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            // SAFETY: the guard proves exclusive ownership of the lock.
+            unsafe { &mut *self.lock.data.get() }
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            if std::thread::panicking() {
+                self.lock.poisoned.set(true);
+            }
+            self.lock.unlock_from_guard();
+        }
+    }
+
+    /// Model condvar.  `notify_one` with several waiters is a scheduling
+    /// decision; there are no spurious wakeups.
+    #[derive(Default)]
+    pub struct Condvar {
+        _private: (),
+    }
+
+    impl Condvar {
+        pub fn new() -> Self {
+            Self { _private: () }
+        }
+
+        fn id(&self) -> usize {
+            self as *const Self as usize
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let me = rt::cur_tid();
+            let lock: &'a Mutex<T> = guard.lock;
+            {
+                let mut g = rt::slock();
+                if let Some(msg) = g.aborting.clone() {
+                    drop(g);
+                    drop(guard);
+                    rt::abort_panic(&msg);
+                    // Unreachable unless already unwinding, where the
+                    // (poisoned) guard re-acquire below is permissive.
+                    return lock.lock_no_switch();
+                }
+                // Atomically release the lock and start waiting: both
+                // transitions happen under the one scheduler lock, so no
+                // notify can slip between them.
+                lock.held_by.set(None);
+                let mid = lock.id();
+                for r in g.threads.iter_mut() {
+                    if *r == Run::BlockedMutex(mid) {
+                        *r = Run::Runnable;
+                    }
+                }
+                std::mem::forget(guard); // released manually above
+                g.threads[me] = Run::BlockedCondvar(self.id());
+                rt::pick_next(&mut g);
+                rt::handoff(g, me);
+            }
+            // Notified (no spurious wakeups): re-acquire.
+            lock.lock_no_switch()
+        }
+
+        pub fn notify_one(&self) {
+            rt::switch_point();
+            let mut g = rt::slock();
+            if g.aborting.is_some() {
+                return;
+            }
+            let id = self.id();
+            let waiters: Vec<usize> = g
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| **r == Run::BlockedCondvar(id))
+                .map(|(i, _)| i)
+                .collect();
+            if waiters.is_empty() {
+                return; // a notify with no waiter is lost — real semantics
+            }
+            let pick = rt::choose(&mut g, waiters);
+            if g.threads.get(pick) == Some(&Run::BlockedCondvar(id)) {
+                g.threads[pick] = Run::Runnable;
+            }
+            drop(g);
+            rt::sched().cv.notify_all();
+        }
+
+        pub fn notify_all(&self) {
+            rt::switch_point();
+            let mut g = rt::slock();
+            if g.aborting.is_some() {
+                return;
+            }
+            let id = self.id();
+            for r in g.threads.iter_mut() {
+                if *r == Run::BlockedCondvar(id) {
+                    *r = Run::Runnable;
+                }
+            }
+            drop(g);
+            rt::sched().cv.notify_all();
+        }
+    }
+
+    pub mod atomic {
+        //! Model atomics: sequentially consistent, every op a switch point.
+
+        pub use std::sync::atomic::Ordering;
+
+        use crate::rt;
+        use std::cell::Cell;
+
+        macro_rules! atomic_int {
+            ($name:ident, $ty:ty) => {
+                /// Model atomic (SC; `Ordering` accepted and ignored).
+                #[derive(Default, Debug)]
+                pub struct $name {
+                    v: Cell<$ty>,
+                }
+
+                // SAFETY: only the token-holding thread touches `v`, and
+                // token handoff goes through the scheduler's std mutex,
+                // which provides the happens-before edges.
+                unsafe impl Send for $name {}
+                unsafe impl Sync for $name {}
+
+                impl $name {
+                    pub fn new(v: $ty) -> Self {
+                        Self { v: Cell::new(v) }
+                    }
+
+                    pub fn load(&self, _o: Ordering) -> $ty {
+                        rt::switch_point();
+                        self.v.get()
+                    }
+
+                    pub fn store(&self, val: $ty, _o: Ordering) {
+                        rt::switch_point();
+                        self.v.set(val);
+                    }
+
+                    pub fn swap(&self, val: $ty, _o: Ordering) -> $ty {
+                        rt::switch_point();
+                        self.v.replace(val)
+                    }
+
+                    pub fn fetch_add(&self, val: $ty, _o: Ordering) -> $ty {
+                        rt::switch_point();
+                        let old = self.v.get();
+                        self.v.set(old.wrapping_add(val));
+                        old
+                    }
+
+                    pub fn fetch_sub(&self, val: $ty, _o: Ordering) -> $ty {
+                        rt::switch_point();
+                        let old = self.v.get();
+                        self.v.set(old.wrapping_sub(val));
+                        old
+                    }
+
+                    pub fn fetch_max(&self, val: $ty, _o: Ordering) -> $ty {
+                        rt::switch_point();
+                        let old = self.v.get();
+                        self.v.set(old.max(val));
+                        old
+                    }
+
+                    pub fn fetch_min(&self, val: $ty, _o: Ordering) -> $ty {
+                        rt::switch_point();
+                        let old = self.v.get();
+                        self.v.set(old.min(val));
+                        old
+                    }
+
+                    pub fn compare_exchange(
+                        &self,
+                        current: $ty,
+                        new: $ty,
+                        _success: Ordering,
+                        _failure: Ordering,
+                    ) -> Result<$ty, $ty> {
+                        rt::switch_point();
+                        let old = self.v.get();
+                        if old == current {
+                            self.v.set(new);
+                            Ok(old)
+                        } else {
+                            Err(old)
+                        }
+                    }
+
+                    pub fn compare_exchange_weak(
+                        &self,
+                        current: $ty,
+                        new: $ty,
+                        success: Ordering,
+                        failure: Ordering,
+                    ) -> Result<$ty, $ty> {
+                        // No spurious CAS failures in the model.
+                        self.compare_exchange(current, new, success, failure)
+                    }
+
+                    pub fn into_inner(self) -> $ty {
+                        self.v.into_inner()
+                    }
+                }
+            };
+        }
+
+        atomic_int!(AtomicUsize, usize);
+        atomic_int!(AtomicU64, u64);
+        atomic_int!(AtomicU32, u32);
+        atomic_int!(AtomicU8, u8);
+
+        /// Model `AtomicBool` (SC; `Ordering` accepted and ignored).
+        #[derive(Default, Debug)]
+        pub struct AtomicBool {
+            v: Cell<bool>,
+        }
+
+        // SAFETY: same argument as the integer atomics above.
+        unsafe impl Send for AtomicBool {}
+        unsafe impl Sync for AtomicBool {}
+
+        impl AtomicBool {
+            pub fn new(v: bool) -> Self {
+                Self { v: Cell::new(v) }
+            }
+
+            pub fn load(&self, _o: Ordering) -> bool {
+                rt::switch_point();
+                self.v.get()
+            }
+
+            pub fn store(&self, val: bool, _o: Ordering) {
+                rt::switch_point();
+                self.v.set(val);
+            }
+
+            pub fn swap(&self, val: bool, _o: Ordering) -> bool {
+                rt::switch_point();
+                self.v.replace(val)
+            }
+
+            pub fn fetch_or(&self, val: bool, _o: Ordering) -> bool {
+                rt::switch_point();
+                let old = self.v.get();
+                self.v.set(old | val);
+                old
+            }
+
+            pub fn fetch_and(&self, val: bool, _o: Ordering) -> bool {
+                rt::switch_point();
+                let old = self.v.get();
+                self.v.set(old & val);
+                old
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: bool,
+                new: bool,
+                _success: Ordering,
+                _failure: Ordering,
+            ) -> Result<bool, bool> {
+                rt::switch_point();
+                let old = self.v.get();
+                if old == current {
+                    self.v.set(new);
+                    Ok(old)
+                } else {
+                    Err(old)
+                }
+            }
+
+            pub fn into_inner(self) -> bool {
+                self.v.into_inner()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Self-checks for the checker.  These run with plain `cargo test -p
+    //! loom` (no special cfg: the checker itself is always compiled).
+
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Unsynchronized read-modify-write across two threads must be caught
+    /// as a lost update in at least one schedule.
+    #[test]
+    fn finds_lost_update() {
+        let failed = catch_unwind(AssertUnwindSafe(|| {
+            super::model(|| {
+                let c = Arc::new(AtomicUsize::new(0));
+                let c2 = Arc::clone(&c);
+                let t = super::thread::spawn(move || {
+                    let v = c2.load(Ordering::SeqCst);
+                    c2.store(v + 1, Ordering::SeqCst);
+                });
+                let v = c.load(Ordering::SeqCst);
+                c.store(v + 1, Ordering::SeqCst);
+                t.join().unwrap();
+                assert_eq!(c.load(Ordering::SeqCst), 2, "lost update");
+            });
+        }));
+        assert!(failed.is_err(), "model must find the lost update");
+    }
+
+    /// The same counter protected by a mutex passes every schedule.
+    #[test]
+    fn mutex_counter_is_sound() {
+        super::model(|| {
+            let c = Arc::new(Mutex::new(0usize));
+            let c2 = Arc::clone(&c);
+            let t = super::thread::spawn(move || {
+                *c2.lock().unwrap() += 1;
+            });
+            *c.lock().unwrap() += 1;
+            t.join().unwrap();
+            assert_eq!(*c.lock().unwrap(), 2);
+        });
+    }
+
+    /// The classic lost wakeup: flag set + notify without holding the
+    /// mutex the waiter checks under.  Must deadlock in some schedule.
+    #[test]
+    fn finds_lost_wakeup() {
+        let failed = catch_unwind(AssertUnwindSafe(|| {
+            super::model(|| {
+                use super::sync::atomic::AtomicBool;
+                let state = Arc::new((Mutex::new(()), Condvar::new(), AtomicBool::new(false)));
+                let s2 = Arc::clone(&state);
+                let t = super::thread::spawn(move || {
+                    let (m, cv, flag) = &*s2;
+                    let mut g = m.lock().unwrap();
+                    while !flag.load(Ordering::SeqCst) {
+                        g = cv.wait(g).unwrap();
+                    }
+                });
+                let (_, cv, flag) = &*state;
+                flag.store(true, Ordering::SeqCst); // BUG: not under the mutex
+                cv.notify_all();
+                t.join().unwrap();
+            });
+        }));
+        assert!(failed.is_err(), "model must find the lost wakeup deadlock");
+    }
+
+    /// Fixed variant: the flag mutates under the mutex — passes.
+    #[test]
+    fn no_lost_wakeup_when_flag_under_lock() {
+        super::model(|| {
+            let state = Arc::new((Mutex::new(false), Condvar::new()));
+            let s2 = Arc::clone(&state);
+            let t = super::thread::spawn(move || {
+                let (m, cv) = &*s2;
+                let mut g = m.lock().unwrap();
+                while !*g {
+                    g = cv.wait(g).unwrap();
+                }
+            });
+            let (m, cv) = &*state;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+            t.join().unwrap();
+        });
+    }
+
+    /// Poisoning round-trips like std: child panics holding the lock,
+    /// parent recovers via `PoisonError::into_inner`.
+    #[test]
+    fn poisoning_matches_std() {
+        super::model(|| {
+            let m = Arc::new(Mutex::new(7u32));
+            let m2 = Arc::clone(&m);
+            let t = super::thread::spawn(move || {
+                let _g = m2.lock().unwrap();
+                panic!("poison");
+            });
+            assert!(t.join().is_err());
+            let g = match m.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            assert_eq!(*g, 7);
+        });
+    }
+}
