@@ -1,0 +1,94 @@
+//! Link-time proof that the annotated distance kernels are panic-free.
+//!
+//! Technique (after dtolnay's `no-panic`): each probed call is wrapped
+//! in a guard whose `Drop` calls an **undefined** extern symbol, and
+//! the guard is `mem::forget`-ed on the normal return path.  The drop
+//! therefore only runs on the unwind edge — if the optimizer can prove
+//! the call never panics, the unwind edge (and the undefined-symbol
+//! reference) is deleted and the probe links; if any panic path
+//! survives into the release build, linking fails with
+//! `undefined reference to PANIC_REACHABLE_IN_<kernel>`.
+//!
+//! Scope: the kernels whose `// panic-free:` notes claim *provable*
+//! freedom — `ed2norm_from_qt`, `corr_to_ed2`, `corr_saturates`,
+//! `ed2_lane_chunk`, `dot`, and `ed2_early_abandon`.  `dot` and
+//! `ed2_early_abandon` document "both slices the same length" as a
+//! caller guarantee, so the probe drives them with statically
+//! equal-length inputs — it proves the annotated claim (panic-free
+//! under the stated precondition), not an unconditional absence the
+//! functions never promised.  Inputs pass through `black_box` so the
+//! proof cannot lean on constant folding.
+//!
+//! Run via `scripts/ci.sh --no-panic` (release build; skipped with a
+//! notice when cargo is absent).
+
+use std::hint::black_box;
+
+use palmad::core::distance::{
+    corr_saturates, corr_to_ed2, dot, ed2_early_abandon, ed2_lane_chunk, ed2norm_from_qt, LANES,
+};
+
+/// Wrap `$body`; reaching a panic from it becomes a link error naming
+/// `$sym`.
+macro_rules! assert_no_panic {
+    ($sym:ident, $body:expr) => {{
+        struct Guard;
+        impl Drop for Guard {
+            fn drop(&mut self) {
+                extern "C" {
+                    fn $sym();
+                }
+                // SAFETY: this call is intentionally unreachable — the
+                // symbol is undefined, and the whole point is that the
+                // linker rejects any build where this path survives.
+                unsafe { $sym() }
+            }
+        }
+        let guard = Guard;
+        let result = $body;
+        std::mem::forget(guard);
+        result
+    }};
+}
+
+fn main() {
+    let qt = black_box(12.5f64);
+    let m = black_box(16usize);
+    let stats = black_box([0.1f64, 1.2, -0.3, 0.9]);
+
+    let d1 = assert_no_panic!(
+        PANIC_REACHABLE_IN_ed2norm_from_qt,
+        ed2norm_from_qt(qt, m, stats[0], stats[1], stats[2], stats[3])
+    );
+
+    let d2 = assert_no_panic!(PANIC_REACHABLE_IN_corr_to_ed2, corr_to_ed2(d1, 32.0));
+
+    let sat = assert_no_panic!(PANIC_REACHABLE_IN_corr_saturates, corr_saturates(d2));
+
+    let lanes_in = black_box([1.0f64; LANES]);
+    let mmu = black_box([0.5f64; LANES]);
+    let inv_sig = black_box([2.0f64; LANES]);
+    let mut dist = [0.0f64; LANES];
+    let sat2 = assert_no_panic!(
+        PANIC_REACHABLE_IN_ed2_lane_chunk,
+        ed2_lane_chunk(&lanes_in, &mmu, &inv_sig, 0.25, 4.0, 32.0, &mut dist)
+    );
+
+    // Statically equal-length windows: the kernels' documented caller
+    // guarantee, under which their panic-free notes hold.
+    let a = black_box([0.125f64; 37]);
+    let b = black_box([0.25f64; 37]);
+    let d3 = assert_no_panic!(PANIC_REACHABLE_IN_dot, dot(&a, &b));
+
+    let d4 = assert_no_panic!(
+        PANIC_REACHABLE_IN_ed2_early_abandon,
+        ed2_early_abandon(&a, &b, black_box(1.0e9))
+    );
+
+    // Consume every result so nothing is dead-code-eliminated before
+    // the guards have done their job.
+    println!(
+        "no-panic probe: {} {} {} {} {} {:?} {:?}",
+        d1, d2, sat, sat2, d3, d4, dist
+    );
+}

@@ -37,17 +37,22 @@ impl Table {
             }
         }
         let mut s = String::new();
+        // ok-drop: fmt::Write into String cannot fail (and the same for
+        // every discarded write!/writeln! in this renderer).
         let _ = writeln!(s, "== {} ==", self.title);
         let line = |cells: &[String], widths: &[usize]| -> String {
             let mut out = String::new();
             for (c, w) in cells.iter().zip(widths) {
+                // ok-drop: infallible String write (see above).
                 let _ = write!(out, "{c:>w$}  ", w = w);
             }
             out.trim_end().to_string()
         };
+        // ok-drop: infallible String writes (see above).
         let _ = writeln!(s, "{}", line(&self.headers, &widths));
         let _ = writeln!(s, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
         for row in &self.rows {
+            // ok-drop: infallible String write (see above).
             let _ = writeln!(s, "{}", line(row, &widths));
         }
         s

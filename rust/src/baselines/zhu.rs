@@ -82,14 +82,14 @@ pub fn zhu_top1(t: &[f64], m: usize, threads: usize) -> Option<Discord> {
         local_best
     });
 
-    let (idx, nn2) = results
+    // The winner's distance is discarded (`_nn2`): the block-parallel
+    // early stop can leave it as an upper-bound tie, so the winner is
+    // recomputed exactly below.
+    let (idx, _nn2) = results
         .into_iter()
         .flatten()
         .max_by(|a, b| a.1.partial_cmp(&b.1).expect("surviving candidates are finite"))?;
-    // The block-parallel early stop can leave the winner's nn as an upper
-    // bound tie; recompute the winner exactly.
     let exact = exact_nn(t, m, &stats, idx);
-    let _ = nn2;
     Some(Discord { idx, m, nn_dist: exact.max(0.0).sqrt() })
 }
 

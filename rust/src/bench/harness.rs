@@ -114,6 +114,8 @@ impl Bench {
         println!("\n{text}");
         // JSON dump (best-effort).
         let dir = std::path::Path::new("target/bench-results");
+        // ok-drop: best-effort mkdir; a real failure surfaces as the write
+        // warning just below, and benches must not abort on dump trouble.
         let _ = std::fs::create_dir_all(dir);
         let json = Json::obj()
             .set("bench", self.name)

@@ -1,0 +1,36 @@
+//! `palmad-analyze` — the hot-path dataflow analysis gate.
+//!
+//! Reconstructs per-function scopes over `rust/src` and enforces the
+//! three passes documented in ANALYSIS.md: P1 panic-freedom in
+//! hot-path functions, P2 numeric determinism in result-bearing
+//! modules, and P3 result discipline everywhere.  Exits non-zero on
+//! any violation; run by `scripts/ci.sh --analyze`, which falls back
+//! to the semantically identical `scripts/analyze_invariants.py` when
+//! no Rust toolchain is present.
+//!
+//! Usage: `palmad-analyze [repo-root]` (default: current directory).
+
+#![forbid(unsafe_code)]
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    match palmad::util::analyze::run(std::path::Path::new(&root)) {
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            println!("analyze-invariants: {} violation(s)", violations.len());
+            if violations.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("palmad-analyze: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

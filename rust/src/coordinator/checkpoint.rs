@@ -198,14 +198,29 @@ impl CheckpointStore {
         self.path(job_id).is_file()
     }
 
-    /// Remove a job's checkpoint (no-op if absent — removal races with
-    /// nothing since saves go through rename).
-    pub fn remove(&self, job_id: u64) {
-        let _ = std::fs::remove_file(self.path(job_id));
+    /// Remove a job's checkpoint.  An absent file is `Ok` (removal races
+    /// with nothing since saves go through rename); any other I/O error
+    /// is returned so the caller can count it — a checkpoint that will
+    /// not delete resurrects a cancelled/forgotten job at next boot,
+    /// which operators should see in METRICS rather than discover.
+    pub fn remove(&self, job_id: u64) -> std::io::Result<()> {
+        match std::fs::remove_file(self.path(job_id)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e),
+        }
     }
 
-    /// Job ids with a checkpoint on disk, ascending.  Temp files and
+    /// Job ids with a checkpoint on disk, **sorted ascending by job id**
+    /// regardless of `read_dir` enumeration order.  Temp files and
     /// foreign names are ignored.
+    ///
+    /// The ordering is a contract, not an accident: boot resume replays
+    /// `scan()` in order, and resume order feeds lease stickiness (the
+    /// first resumed job binds the first engine lease), so a
+    /// filesystem-dependent order would make post-crash engine binding —
+    /// and therefore seed-cache reuse — nondeterministic across hosts.
+    /// Pinned by `scan_sorts_ids_regardless_of_creation_order`.
     pub fn scan(&self) -> Vec<u64> {
         let mut ids = Vec::new();
         let Ok(entries) = std::fs::read_dir(&self.dir) else { return ids };
@@ -327,8 +342,8 @@ mod tests {
             .collect();
         assert!(leftovers.is_empty(), "temp files must be renamed away");
 
-        store.remove(3);
-        store.remove(3); // idempotent
+        store.remove(3).unwrap();
+        store.remove(3).unwrap(); // idempotent (absent file is Ok)
         assert_eq!(store.scan(), vec![11]);
 
         // A torn/corrupt file on disk loads as Err, never a panic.
@@ -341,5 +356,36 @@ mod tests {
         assert!(store.load(13).is_err());
 
         let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    /// The scan() ordering contract: ids come back ascending no matter
+    /// what order the files were created in (and therefore no matter
+    /// what order `read_dir` yields — creation order is the one knob a
+    /// portable test can turn).  A seeded LCG drives the shuffle so a
+    /// failure reproduces exactly.
+    #[test]
+    fn scan_sorts_ids_regardless_of_creation_order() {
+        let store = temp_store("scan-order");
+        let mut ids: Vec<u64> = (0..32u64).map(|i| i * 7 + 1).collect();
+        // Fisher-Yates with a fixed-seed LCG (no rand dep).
+        let mut state = 0x9e37_79b9_7f4a_7c15u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        for i in (1..ids.len()).rev() {
+            let j = (next() % (i as u64 + 1)) as usize;
+            ids.swap(i, j);
+        }
+        let sorted = {
+            let mut v = ids.clone();
+            v.sort_unstable();
+            v
+        };
+        assert_ne!(ids, sorted, "seeded shuffle must actually permute");
+        for &id in &ids {
+            store.save(&sample(id)).unwrap();
+        }
+        assert_eq!(store.scan(), sorted, "boot-resume order is sorted by job id");
     }
 }

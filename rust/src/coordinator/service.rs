@@ -38,6 +38,7 @@
 //!   -> OK METRICS jobs= done= failed= cancelled= discords= table=
 //!      uploads= sched(steps/preempts/leases)=s/p/l lease(sticky/rebinds)=x/y
 //!      faults(retries/panics)=r/p ckpt(saved/resumed)=c/u
+//!      ckpt_rm_errs=e
 //! SHUTDOWN -> OK BYE (drains the scheduler: in-flight steps finish,
 //!             queued jobs fail with "shutdown", workers are joined)
 //! ```
@@ -208,6 +209,7 @@ struct Counters {
     panics: AtomicU64,
     checkpoints: AtomicU64,
     resumes: AtomicU64,
+    ckpt_remove_errs: AtomicU64,
 }
 
 /// Scheduler observability snapshot (the `sched(...)=` metrics line).
@@ -228,6 +230,9 @@ pub struct SchedMetrics {
     pub checkpoints: u64,
     /// Jobs rebuilt from checkpoints (boot scan + RESUME verb).
     pub resumes: u64,
+    /// Checkpoint deletions that failed with a real I/O error (the file
+    /// survives and will resurrect its job at next boot).
+    pub ckpt_remove_errs: u64,
     /// Lease-pool traffic.
     pub lease: PoolCounters,
 }
@@ -389,7 +394,7 @@ impl Service {
                     finalize(job, JobState::Cancelled, &self.inner.counters);
                     // A cancelled job must not resurrect at next boot.
                     if let Some(store) = &self.inner.store {
-                        store.remove(id);
+                        remove_checkpoint(store, &self.inner.counters, id);
                     }
                 }
                 Ok(())
@@ -413,7 +418,7 @@ impl Service {
                 // too (a kept Failed checkpoint stays resumable only
                 // while the client still wants the job).
                 if let Some(store) = &self.inner.store {
-                    store.remove(id);
+                    remove_checkpoint(store, &self.inner.counters, id);
                 }
                 Ok(())
             }
@@ -492,6 +497,7 @@ impl Service {
             panics: c.panics.load(Ordering::Relaxed),
             checkpoints: c.checkpoints.load(Ordering::Relaxed),
             resumes: c.resumes.load(Ordering::Relaxed),
+            ckpt_remove_errs: c.ckpt_remove_errs.load(Ordering::Relaxed),
             lease: self.inner.pool.counters(),
         }
     }
@@ -537,6 +543,9 @@ impl Service {
         }
         let handles: Vec<_> = lock_recover(&self.workers).drain(..).collect();
         for h in handles {
+            // ok-drop: join error = worker panicked; the panic was already
+            // counted (faults panics=) and its job finalized as Failed, and
+            // shutdown must drain the rest regardless.
             let _ = h.join();
         }
         lock_recover(&self.inner.queue).clear();
@@ -557,6 +566,8 @@ impl Service {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         println!("LISTENING {local}");
+        // ok-drop: best-effort flush so script parsers see the LISTENING
+        // line promptly; a broken stdout must not kill the service.
         std::io::stdout().flush().ok();
         crate::log_info!("palmad service listening on {local}");
         std::thread::scope(|scope| -> Result<()> {
@@ -571,6 +582,9 @@ impl Service {
                         // accept loop awake so it can exit.
                         self.inner.listener_stop.store(true, Ordering::Release);
                         self.shutdown();
+                        // ok-drop: self-connect poke; if it fails, another
+                        // client's connect (or process exit) unblocks the
+                        // accept loop — the stop flag is already set.
                         let _ = TcpStream::connect(local);
                     }
                 });
@@ -594,6 +608,8 @@ impl Service {
     /// accept scope open until the client hangs up.
     fn handle_conn(&self, stream: TcpStream) -> bool {
         let peer = stream.peer_addr().ok();
+        // ok-drop: best-effort timeout; without it an idle connection just
+        // lingers until the client hangs up — degraded, not wrong.
         let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
         let mut reader = BufReader::new(match stream.try_clone() {
             Ok(s) => s,
@@ -626,6 +642,8 @@ impl Service {
                 Ok(true) => return true,
                 Ok(false) => {}
                 Err(e) => {
+                    // ok-drop: reporting an error to a client that already
+                    // disconnected; the read loop exits on its own next.
                     let _ = writeln!(out, "ERR {e}");
                 }
             }
@@ -724,7 +742,7 @@ impl Service {
                     "OK METRICS jobs={s} done={d} failed={f} cancelled={} discords={n} \
                      table={} uploads={} sched(steps/preempts/leases)={}/{}/{} \
                      lease(sticky/rebinds)={}/{} faults(retries/panics)={}/{} \
-                     ckpt(saved/resumed)={}/{}",
+                     ckpt(saved/resumed)={}/{} ckpt_rm_errs={}",
                     sm.cancelled,
                     self.job_count(),
                     self.upload_count(),
@@ -737,6 +755,7 @@ impl Service {
                     sm.panics,
                     sm.checkpoints,
                     sm.resumes,
+                    sm.ckpt_remove_errs,
                 )?;
             }
             "SHUTDOWN" => {
@@ -752,6 +771,17 @@ impl Service {
 impl Drop for Service {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Delete a job's checkpoint, counting (and logging) real I/O failures
+/// instead of dropping them: an undeletable checkpoint resurrects its
+/// job at next boot, so the `ckpt_rm_errs=` METRICS segment is the
+/// operator's tell that the store dir needs attention.
+fn remove_checkpoint(store: &CheckpointStore, counters: &Counters, id: u64) {
+    if let Err(e) = store.remove(id) {
+        counters.ckpt_remove_errs.fetch_add(1, Ordering::Relaxed);
+        crate::log_warn!("checkpoint remove for job {id} failed: {e}");
     }
 }
 
@@ -1020,7 +1050,7 @@ fn step_job(inner: &Inner, id: u64) {
         if job.cancel {
             finalize(job, JobState::Cancelled, &inner.counters);
             if let Some(store) = &inner.store {
-                store.remove(id);
+                remove_checkpoint(store, &inner.counters, id);
             }
             return;
         }
@@ -1175,7 +1205,7 @@ fn step_job(inner: &Inner, id: u64) {
     // right here leaves the previous checkpoint intact.
     if let Some(store) = &inner.store {
         match ckpt_action {
-            CkptAction::Remove => store.remove(id),
+            CkptAction::Remove => remove_checkpoint(store, &inner.counters, id),
             CkptAction::Keep => {}
             CkptAction::Save => {
                 if let Some((sweep_bytes, rows)) = ckpt_state {

@@ -132,6 +132,8 @@ pub fn ed2norm(a: &[f64], b: &[f64]) -> f64 {
 /// Squared z-normalized Euclidean distance from a raw dot product (Eq. 6).
 ///
 /// `qt = dot(a, b)` over the *raw* windows; `mu/sig` are their raw stats.
+// hot-path: Eq. 6 distance, evaluated once per candidate pair in every
+// slow-path tile column and stream refresh.
 #[inline]
 pub fn ed2norm_from_qt(qt: f64, m: usize, mu_a: f64, sig_a: f64, mu_b: f64, sig_b: f64) -> f64 {
     let mf = m as f64;
@@ -140,6 +142,8 @@ pub fn ed2norm_from_qt(qt: f64, m: usize, mu_a: f64, sig_a: f64, mu_b: f64, sig_
     if flat_a || flat_b {
         return if flat_a && flat_b { 0.0 } else { 2.0 * mf };
     }
+    // panic-free: float division (f64 operands; sig floored at
+    // SIGMA_FLOOR and the flat guard above keeps it meaningful).
     let corr = (qt - mf * mu_a * mu_b) / (mf * sig_a * sig_b);
     corr_to_ed2(corr, 2.0 * mf)
 }
@@ -152,6 +156,7 @@ pub fn ed2norm_from_qt(qt: f64, m: usize, mu_a: f64, sig_a: f64, mu_b: f64, sig_
 /// passes through (`clamp(NaN) = NaN`), so a NaN-contaminated column
 /// yields a NaN distance, which every downstream fold ignores (`min`
 /// keeps the other operand, `d < r2` is false).
+// hot-path: shared clamp of both tile kernels, once per fast-path column.
 #[inline]
 pub fn corr_to_ed2(corr: f64, two_m: f64) -> f64 {
     two_m * (1.0 - corr.clamp(-1.0, 1.0))
@@ -162,6 +167,7 @@ pub fn corr_to_ed2(corr: f64, two_m: f64) -> f64 {
 /// propagates it rather than saturating).  Both tile kernels count this
 /// per fast-path column into `EnginePerfCounters::clamp_saturations`;
 /// equal counts across kernels certify equal clamp decisions.
+// hot-path: saturation gauge, once per fast-path column.
 #[inline]
 pub fn corr_saturates(corr: f64) -> bool {
     corr > 1.0 || corr < -1.0
@@ -177,6 +183,7 @@ pub fn corr_saturates(corr: f64) -> bool {
 /// never contracts float ops into FMAs; pinned by
 /// `rust/tests/kernel_conformance.rs`).  Fixed-size array refs give the
 /// autovectorizer exact extents — no in-loop bounds checks.
+// hot-path: the Lanes4 kernel's distance chunk, every fast-path column.
 #[inline]
 pub fn ed2_lane_chunk(
     qt: &[f64; LANES],
@@ -202,6 +209,8 @@ pub fn ed2_lane_chunk(
 }
 
 /// Dot product of two raw windows.
+// hot-path: QT seeding — every tile's first row and every seed-cache
+// miss pays one call per column.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -209,6 +218,9 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     // independent accumulators (better rounding + ILP than a single chain).
     let mut acc = [0.0f64; 4];
     let chunks = a.len() / 4;
+    // panic-free: i ranges over c*4 with c < chunks = a.len()/4, so
+    // i+3 < a.len(); the tail loop is bounded by a.len(); b is the
+    // same length (debug-asserted, guaranteed by every caller).
     for c in 0..chunks {
         let i = c * 4;
         acc[0] += a[i] * b[i];
@@ -227,6 +239,7 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 ///
 /// Returns `None` as soon as the partial sum exceeds `cutoff` (the
 /// `EarlyAbandonED` of Alg. 2); otherwise the exact squared distance.
+// hot-path: candidate refinement inner loop (Alg. 2 EarlyAbandonED).
 #[inline]
 pub fn ed2_early_abandon(an: &[f64], bn: &[f64], cutoff: f64) -> Option<f64> {
     debug_assert_eq!(an.len(), bn.len());
@@ -235,6 +248,9 @@ pub fn ed2_early_abandon(an: &[f64], bn: &[f64], cutoff: f64) -> Option<f64> {
     // more than they save (measured in the microbench suite).
     let mut i = 0;
     let n = an.len();
+    // panic-free: k < i+8 <= n = an.len() in the blocked loop and
+    // k < n in the tail; bn has the same length (debug-asserted,
+    // guaranteed by both call sites in the tile pipeline).
     while i + 8 <= n {
         for k in i..i + 8 {
             let d = an[k] - bn[k];
@@ -245,6 +261,7 @@ pub fn ed2_early_abandon(an: &[f64], bn: &[f64], cutoff: f64) -> Option<f64> {
         }
         i += 8;
     }
+    // panic-free: tail indices k < n = an.len() = bn.len().
     for k in i..n {
         let d = an[k] - bn[k];
         s += d * d;

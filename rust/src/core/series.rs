@@ -145,6 +145,9 @@ impl TimeSeries {
 
     /// The series values as `f32` (the tile-kernel interchange dtype).
     pub fn to_f32(&self) -> Vec<f32> {
+        // order: deliberate f64 -> f32 narrowing at the kernel boundary;
+        // every engine consumes the same f32 bits, so cross-engine
+        // conformance is unaffected (see ANALYSIS.md §P2).
         self.values.iter().map(|&v| v as f32).collect()
     }
 }

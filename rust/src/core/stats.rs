@@ -33,6 +33,7 @@ pub const SIGMA_FLOOR: f64 = 1e-8;
 /// bit-identical under any chunking, so both tile kernels share this
 /// one implementation (one more place where "same decisions" is
 /// structural, not tested-for).
+// hot-path: per-column stat products, once per tile bind.
 pub fn stat_products_into(
     mu: &[f64],
     sig: &[f64],
@@ -43,6 +44,10 @@ pub fn stat_products_into(
     let nb = mu.len();
     debug_assert!(sig.len() == nb && mmu_b.len() == nb && inv_msig_b.len() == nb);
     let mut flat = [false; LANES];
+    // panic-free: LANES is a nonzero const; j+l < chunks*LANES <= nb,
+    // and all four slices have length >= nb (debug-asserted above,
+    // sliced to exactly nb by the tile binder).  1/(mf*sig) is float
+    // division (sig floored at SIGMA_FLOOR).
     let chunks = nb / LANES;
     for c in 0..chunks {
         let j = c * LANES;
@@ -53,10 +58,12 @@ pub fn stat_products_into(
             inv_msig_b[j + l] = 1.0 / (mf * sig[j + l]);
         }
         for l in 0..LANES {
+            // panic-free: same j+l < nb bound as the lanes above.
             flat[l] |= is_flat(sig[j + l], mu[j + l]);
         }
     }
     let mut any_flat = flat.iter().any(|&f| f);
+    // panic-free: scalar tail, j < nb bounds every slice access.
     for j in chunks * LANES..nb {
         mmu_b[j] = mf * mu[j];
         inv_msig_b[j] = 1.0 / (mf * sig[j]);
@@ -94,7 +101,11 @@ impl RollingStats {
     /// reusing the existing `mu`/`sig` storage.  The streaming monitor's
     /// refresh path depends on this: once the buffers have reached the
     /// window's capacity, re-statting a slid window allocates nothing.
+    // hot-path: O(n) cumulative stat pass, once per sweep seed and per
+    // stream refresh.
     pub fn recompute(&mut self, t: &[f64], m: usize) {
+        // panic-free: deliberate precondition check at the entry point,
+        // outside the per-window loop (an invalid m is a caller bug).
         assert!(m >= 2 && m <= t.len(), "m={m} out of range for n={}", t.len());
         let cnt = t.len() - m + 1;
         self.m = m;
@@ -103,6 +114,9 @@ impl RollingStats {
         self.mu.reserve(cnt);
         self.sig.reserve(cnt);
         // Seed window.
+        // panic-free: m <= t.len() (asserted above); in the slide loop
+        // i+m-1 <= cnt-1+m-1 < t.len(); mf = m as f64 >= 2.0 so the
+        // mean/var divisions are nonzero float divisions.
         let mut s1 = 0.0f64;
         let mut s2 = 0.0f64;
         for &v in &t[..m] {
@@ -112,11 +126,13 @@ impl RollingStats {
         let mf = m as f64;
         for i in 0..cnt {
             if i > 0 {
+                // panic-free: i >= 1 and i+m-1 <= cnt-1+m-1 < t.len().
                 let out = t[i - 1];
                 let inn = t[i + m - 1];
                 s1 += inn - out;
                 s2 += inn * inn - out * out;
             }
+            // panic-free: mf >= 2.0, nonzero float division.
             let mean = s1 / mf;
             let var = (s2 / mf - mean * mean).max(0.0);
             self.mu.push(mean);
@@ -157,10 +173,14 @@ impl RollingStats {
     ///
     /// After the call the vectors have one fewer live entry.  `t` must be
     /// the same series the stats were computed from.
+    // hot-path: Eqs. 7/8 elementwise m -> m+1 update, once per length.
     pub fn advance(&mut self, t: &[f64]) {
         let m = self.m as f64;
         let m1 = m + 1.0;
         let cnt = self.len() - 1;
+        // panic-free: i < cnt < len() bounds mu/sig; i + self.m <=
+        // cnt-1+m < t.len() for same-series t (documented contract);
+        // m1 >= 3.0 so the divisions are nonzero float divisions.
         for i in 0..cnt {
             let tn = t[i + self.m];
             let mu = self.mu[i];
@@ -183,6 +203,9 @@ impl RollingStats {
         for k in 0..len {
             let i = start + k;
             if i < self.len() {
+                // order: deliberate f64 -> f32 narrowing at the AOT
+                // kernel boundary; both engines consume the same f32
+                // bits, so rounding here cannot diverge across engines.
                 mu_out[k] = self.mu[i] as f32;
                 sig_out[k] = self.sig[i] as f32;
             } else {

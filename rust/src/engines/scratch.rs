@@ -141,6 +141,7 @@ pub(crate) struct TileKernelStats {
 ///
 /// Elementwise given `qt_prev`, so the lane chunking is bit-identical to
 /// the scalar loop.
+// hot-path: Eq. 10 QT recurrence, every non-first tile row.
 #[inline]
 pub(crate) fn qt_recurrence_row(
     kernel: TileKernel,
@@ -153,6 +154,10 @@ pub(crate) fn qt_recurrence_row(
 ) {
     let nb = qt.len();
     debug_assert!(nb >= 1 && qt_prev.len() == nb);
+    // panic-free: tile geometry — the caller iterates rows a >= 1 with
+    // a+m-1 < t.len() and columns cs..cs+nb where every column is a
+    // valid window start (cs+nb-1+m <= t.len()), so all t/qt/qt_prev
+    // accesses below stay in bounds; nb >= 1 covers qt[0].
     let head = t[a - 1];
     let tail = t[a + m - 1];
     qt[0] = dot(&t[a..a + m], &t[cs..cs + m]);
@@ -165,6 +170,9 @@ pub(crate) fn qt_recurrence_row(
         }
         TileKernel::Lanes4 => {
             let mut j = 1;
+            // panic-free: j+LANES <= nb bounds every lane slice (rows
+            // are lane-aligned by TileScratch::ensure); the tail loop
+            // is bounded by nb with the same geometry as the scalar arm.
             while j + LANES <= nb {
                 let p: &[f64; LANES] = t_chunk(&qt_prev[j - 1..], "qt_prev");
                 let tt: &[f64; LANES] = t_chunk(&t[cs + j + m - 1..], "t tail");
@@ -175,6 +183,7 @@ pub(crate) fn qt_recurrence_row(
                 }
                 j += LANES;
             }
+            // panic-free: tail columns j < nb, same bounds as above.
             for j in j..nb {
                 let b = cs + j;
                 qt[j] = qt_prev[j - 1] + tail * t[b + m - 1] - head * t[b - 1];
@@ -188,6 +197,7 @@ pub(crate) fn qt_recurrence_row(
 /// (inv_msig_b[j]*inv_sig_a)))`.  Returns the number of saturated
 /// (clamped) columns — the clamp-decision gauge both kernels must agree
 /// on.  All slices are the `[..nb]` prefixes.
+// hot-path: fast-path distance row, every tile row.
 #[inline]
 #[allow(clippy::too_many_arguments)] // one row's full operand set
 pub(crate) fn distance_row(
@@ -206,6 +216,9 @@ pub(crate) fn distance_row(
     let tail_from = match kernel {
         TileKernel::Scalar => 0,
         TileKernel::Lanes4 => {
+            // panic-free: LANES is a nonzero const; j+LANES <= nb for
+            // every chunk and all operand slices have length nb
+            // (debug-asserted above, sized by the tile binder).
             let chunks = nb / LANES;
             for c in 0..chunks {
                 let j = c * LANES;
@@ -216,12 +229,14 @@ pub(crate) fn distance_row(
                     mu_a,
                     inv_sig_a,
                     two_m,
+                    // panic-free: same j+LANES <= nb chunk bound.
                     t_chunk_mut(&mut dist[j..]),
                 );
             }
             chunks * LANES
         }
     };
+    // panic-free: scalar tail, j < nb bounds every slice access.
     for j in tail_from..nb {
         let corr = (qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a);
         sat += corr_saturates(corr) as u64;
@@ -236,6 +251,7 @@ pub(crate) fn distance_row(
 /// construction.  The flat path is rare (stuck-sensor plateaus,
 /// NaN-contaminated windows, which stat NaN mu and floored sigma and
 /// therefore classify flat); lane-chunking it would buy nothing.
+// hot-path: flat-tile distance row (rare route, still per-column work).
 #[inline]
 #[allow(clippy::too_many_arguments)] // one row's full operand set
 pub(crate) fn general_distance_row(
@@ -248,6 +264,9 @@ pub(crate) fn general_distance_row(
     cs: usize,
     dist: &mut [f64],
 ) {
+    // panic-free: j < dist.len() = nb <= qt.len(), and b = cs+j stays
+    // under mu/sig len because every tile column is a valid window
+    // start (binder invariant).
     for (j, d) in dist.iter_mut().enumerate() {
         let b = cs + j;
         *d = ed2norm_from_qt(qt[j], m, mu_a, sig_a, mu[b], sig[b]);
@@ -262,6 +281,7 @@ pub(crate) fn general_distance_row(
 /// IEEE minNum semantics, and `-0.0` cannot occur — distances are
 /// produced as `two_m * (1 - clamp)` or by the flat conventions, all
 /// `>= +0.0`), so both variants return bit-identical results.
+// hot-path: per-row min/kill folds, every tile row.
 #[inline]
 pub(crate) fn row_folds(kernel: TileKernel, dist: &[f64], r2: f64) -> (f64, bool) {
     match kernel {
@@ -279,6 +299,9 @@ pub(crate) fn row_folds(kernel: TileKernel, dist: &[f64], r2: f64) -> (f64, bool
         TileKernel::Lanes4 => {
             let mut minacc = [f64::INFINITY; LANES];
             let mut killacc = [false; LANES];
+            // panic-free: LANES is a nonzero const and j+LANES <=
+            // chunks*LANES <= dist.len() bounds each chunk; the tail
+            // slice below starts at chunks*LANES <= dist.len().
             let chunks = dist.len() / LANES;
             for c in 0..chunks {
                 let j = c * LANES;
@@ -297,6 +320,7 @@ pub(crate) fn row_folds(kernel: TileKernel, dist: &[f64], r2: f64) -> (f64, bool
                 rmin = rmin.min(v);
             }
             let mut rkill = killacc.iter().any(|&k| k);
+            // panic-free: chunks*LANES <= dist.len(), valid range start.
             for &d in &dist[chunks * LANES..] {
                 rmin = rmin.min(d);
                 rkill |= d < r2;
@@ -312,6 +336,7 @@ pub(crate) fn row_folds(kernel: TileKernel, dist: &[f64], r2: f64) -> (f64, bool
 /// scalar oracle's compare-and-store, equivalent because `col_min` can
 /// never hold NaN — it starts at `+inf` and only adopts values that won
 /// a `<` comparison).
+// hot-path: per-column min/kill folds, every tile row.
 #[inline]
 pub(crate) fn col_folds(
     kernel: TileKernel,
@@ -334,6 +359,8 @@ pub(crate) fn col_folds(
             }
         }
         TileKernel::Lanes4 => {
+            // panic-free: LANES is a nonzero const; j+LANES <= nb and
+            // all three slices have length nb (debug-asserted above).
             let chunks = nb / LANES;
             for c in 0..chunks {
                 let j = c * LANES;
@@ -347,6 +374,7 @@ pub(crate) fn col_folds(
                     ck[l] |= dc[l] < r2;
                 }
             }
+            // panic-free: scalar tail, j < nb bounds every access.
             for j in chunks * LANES..nb {
                 if dist[j] < col_min[j] {
                     col_min[j] = dist[j];
@@ -359,18 +387,29 @@ pub(crate) fn col_folds(
 
 /// First [`LANES`] elements of `s` as a fixed-extent array ref (the
 /// compiler folds the length check into the chunk loop's bound).
+// hot-path: lane-chunk reborrow, several per tile-row chunk.
 #[inline]
 fn t_chunk<'a>(s: &'a [f64], what: &str) -> &'a [f64; LANES] {
+    // panic-free: every caller slices at j with j+LANES <= row length
+    // (lane-aligned by TileScratch::ensure), so s.len() >= LANES; the
+    // panic arm is the unreachable-invariant report, kept over
+    // unchecked access so a future geometry bug fails loudly.
     s[..LANES].try_into().unwrap_or_else(|_| panic!("short {what} lane chunk"))
 }
 
+// hot-path: mutable lane-chunk reborrow, several per tile-row chunk.
 #[inline]
 fn t_chunk_mut(s: &mut [f64]) -> &mut [f64; LANES] {
+    // panic-free: same caller bound as t_chunk; expect is the loud
+    // unreachable-invariant report.
     (&mut s[..LANES]).try_into().expect("short mutable lane chunk")
 }
 
+// hot-path: kill-flag lane-chunk reborrow, once per tile-row chunk.
 #[inline]
 fn bool_chunk_mut(s: &mut [bool]) -> &mut [bool; LANES] {
+    // panic-free: same caller bound as t_chunk; expect is the loud
+    // unreachable-invariant report.
     (&mut s[..LANES]).try_into().expect("short kill lane chunk")
 }
 
@@ -435,6 +474,9 @@ impl Shard {
     /// Move every live row into the spare pool.
     fn evict_all(&mut self) {
         let Shard { rows, spares } = self;
+        // order: drain order only decides which evicted allocations the
+        // bounded spare pool keeps; spares carry no numeric state, so
+        // no result or checkpoint byte depends on it.
         for (_, row) in rows.drain() {
             if spares.len() < MAX_ROWS_PER_SHARD {
                 spares.push(row);
@@ -465,9 +507,14 @@ fn identity(t: &[f64]) -> (usize, usize) {
 /// sweep ([`QtSeedCache::advance_all`]) both call it, so their products
 /// are bit-identical by construction — the invariant the prefetch
 /// property tests pin.
+// hot-path: cross-length seed advance, per cached row per length step.
 #[inline]
 fn advance_row(t: &[f64], a: usize, cs: usize, row: &mut SeedRow, next_m: usize) {
     let nb = row.qt.len();
+    // panic-free: callers (seed_into, advance_all) only advance rows
+    // whose windows fit t at next_m — a+next_m <= t.len() and
+    // cs+nb-1+next_m <= t.len() (import_rows re-checks, advance_all
+    // cuts the range) — so a+k and the tb slice stay in bounds.
     for k in row.m..next_m {
         let ta = t[a + k];
         let tb = &t[cs + k..cs + k + nb];
@@ -650,6 +697,8 @@ impl QtSeedCache {
         let ident = identity(t);
         let epoch0 = self.epoch.load(Ordering::Acquire);
         let mut accepted = 0u64;
+        // order: `rows` is the checkpoint's slice (sorted by (a, cs) at
+        // export), not a map — insertion replays checkpoint order.
         for r in rows {
             if r.m == 0 || r.qt.is_empty() {
                 continue;
@@ -814,6 +863,7 @@ impl QtSeedCache {
     /// Produce the seed row `qt_out[j] = dot_m(a, cs + j)` for
     /// `j in 0..nb`, reusing / advancing the cached row for
     /// `(a, cs)` when possible.  `qt_out.len()` must equal `nb`.
+    // hot-path: seed-row lookup/advance/recompute, once per tile bind.
     pub fn seed_into(
         &self,
         t: &[f64],
@@ -826,6 +876,7 @@ impl QtSeedCache {
         debug_assert_eq!(qt_out.len(), nb);
         let key = (a, cs);
         let ident = identity(t);
+        // panic-free: shard_of masks with SHARD_COUNT-1, always in range.
         let shard = &self.shards[shard_of(key)];
         // Both critical sections re-read the binding under the shard
         // lock: two PD3 runs on one shared engine with different (live,
@@ -868,6 +919,9 @@ impl QtSeedCache {
             // time.  The stale row's allocation — or a spare evicted by
             // a series change — is recycled when present.
             other => {
+                // panic-free: tile geometry again — a and cs+j (j < nb)
+                // are valid window starts for length m, so both slices
+                // end at or before t.len().
                 let wa = &t[a..a + m];
                 for (j, q) in qt_out.iter_mut().enumerate() {
                     *q = dot(wa, &t[cs + j..cs + j + m]);

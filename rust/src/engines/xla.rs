@@ -74,6 +74,8 @@ impl XlaEngine {
             if start < t.len() {
                 let avail = (t.len() - start).min(src_len);
                 for (o, &v) in out[..avail].iter_mut().zip(&t[start..start + avail]) {
+                    // order: deliberate f64 -> f32 narrowing at the tile
+                    // boundary; same bits every engine sees.
                     *o = v as f32;
                 }
             }
@@ -101,6 +103,8 @@ impl XlaEngine {
             delta: task.chunk_start as i32 - task.seg_start as i32,
             na: na as i32,
             nb: nb as i32,
+            // order: threshold narrowed once per task, identically for every
+            // engine and every replay of the same task.
             r2: r2 as f32,
         }
     }
@@ -111,6 +115,8 @@ impl XlaEngine {
     fn padded_t(&self, t: &[f64], nmax: usize) -> Vec<f32> {
         let mut out = vec![0f32; nmax];
         for (o, &v) in out.iter_mut().zip(t) {
+            // order: deliberate f64 -> f32 narrowing at the stats-program
+            // boundary; bucket padding does not change the narrowed bits.
             *o = v as f32;
         }
         out

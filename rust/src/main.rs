@@ -234,7 +234,9 @@ fn run_checkpointed(
             }
         }
     }
-    store.remove(CLI_JOB);
+    if let Err(e) = store.remove(CLI_JOB) {
+        eprintln!("warn: could not remove checkpoint: {e}");
+    }
     Ok(sweep.finish())
 }
 

@@ -95,8 +95,13 @@ impl Executor {
 
 impl Drop for Executor {
     fn drop(&mut self) {
+        // ok-drop: send fails only if the actor already exited — the state
+        // shutdown is driving toward.
         let _ = self.tx.send(Request::Shutdown);
         if let Some(h) = self.handle.take() {
+            // ok-drop: join error = actor panicked; callers already saw the
+            // broken channel as an `executor gone` error, and Drop must not
+            // unwind.
             let _ = h.join();
         }
     }
@@ -115,10 +120,13 @@ fn actor_main(artifacts: ArtifactSet, rx: Receiver<Request>, ready: Sender<Resul
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
         Err(e) => {
+            // ok-drop: a dropped `ready` receiver means the constructor
+            // already gave up on this actor; nobody is left to notify.
             let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e}")));
             return;
         }
     };
+    // ok-drop: same as the error arm — receiver gone means nobody waits.
     let _ = ready.send(Ok(()));
     let mut actor = Actor {
         artifacts,
@@ -130,12 +138,17 @@ fn actor_main(artifacts: ArtifactSet, rx: Receiver<Request>, ready: Sender<Resul
     while let Ok(req) = rx.recv() {
         match req {
             Request::TileBatch { shape, inputs, reply } => {
+                // ok-drop: reply-channel sends (all three arms) fail only
+                // when the requester stopped waiting; the actor just moves
+                // on to the next request.
                 let _ = reply.send(actor.run_tile_batch(shape, inputs));
             }
             Request::StatsInit { nmax, t, m, reply } => {
+                // ok-drop: requester gone (see above).
                 let _ = reply.send(actor.run_stats_init(nmax, t, m));
             }
             Request::StatsUpdate { nmax, t, mu, sig, m, reply } => {
+                // ok-drop: requester gone (see above).
                 let _ = reply.send(actor.run_stats_update(nmax, t, mu, sig, m));
             }
             Request::Shutdown => break,

@@ -1,0 +1,1212 @@
+//! Hot-path dataflow analysis (the `palmad-analyze` binary's engine).
+//!
+//! Where `palmad-lint` (PR 7) is a line scanner, this module
+//! reconstructs per-function scopes — brace-aware, over
+//! comment/string-blanked code — and runs three passes over designated
+//! modules (full annotation grammar in ANALYSIS.md):
+//!
+//! **P1 panic-freedom.**  In functions marked hot (a `// hot-path: <why>`
+//! header comment the analyzer discovers in the contiguous comment block
+//! above the signature), every implicit panic site must be justified by
+//! a `// panic-free: <why>` note within [`PANIC_WINDOW`] lines:
+//! slice/array indexing (exempt when the receiver is a fixed-extent
+//! array bound in the same function), `unwrap`/`expect`, non-literal
+//! `/` or `%`, the `assert!` family (`debug_assert!` is exempt — it is
+//! compiled out of release kernels), and explicit `panic!`-family
+//! macros.
+//!
+//! **P2 numeric determinism.**  In result-bearing modules (`core/`,
+//! `engines/`, `coordinator/`): iterating a `HashMap`/`HashSet`-typed
+//! binding needs a later `.sort*` in the same function or an
+//! `// order: <why>` note; `mul_add` (contracts rounding), reductions
+//! in pool-adjacent functions, and `as f32` narrowing casts each need
+//! an `// order:` note.
+//!
+//! **P3 result discipline.**  Everywhere in `rust/src`: `let _ = ...`
+//! and statement-position `....ok();` need an `// ok-drop: <why>`
+//! reason within [`OKDROP_WINDOW`] lines — or the value handled.
+//!
+//! Cross-cutting: an annotation marker with no reason text after the
+//! colon is rejected (`note-grammar`), and every file in [`HOT_FILES`]
+//! must mark at least one function hot (`hot-coverage`), so deleting
+//! markers cannot silently disarm P1.
+//!
+//! Like the lint, the analyzer is textual, not a parser: portability
+//! into `scripts/analyze_invariants.py` (the toolchain-free mirror run
+//! by CI when cargo is absent) is a design constraint.  Rules,
+//! designated-file lists, windows, and the fixture suite must match the
+//! python mirror exactly; the fixtures in this module's tests and in
+//! the script's `--self-test` are the same inputs with the same
+//! expected rule ids, keeping the two honest.
+#![forbid(unsafe_code)]
+
+use std::path::{Path, PathBuf};
+
+use crate::util::lint::{has_comment, strip_rust, test_region_start};
+
+/// Roots scanned relative to the repo root.  Narrower than the lint's
+/// (library code only): P1–P3 are production-code discipline, and test
+/// modules inside `rust/src` are already exempted per-file.
+pub const SCAN_ROOTS: &[&str] = &["rust/src"];
+
+/// Files that must mark at least one function with a hot-path header.
+pub const HOT_FILES: &[&str] = &[
+    "rust/src/core/distance.rs",
+    "rust/src/core/stats.rs",
+    "rust/src/engines/scratch.rs",
+    "rust/src/util/pool.rs",
+];
+
+/// Module prefixes whose results feed `MerlinResult` / checkpoint
+/// bytes; P2 runs only here.
+pub const DETERMINISM_PREFIXES: &[&str] =
+    &["rust/src/core/", "rust/src/engines/", "rust/src/coordinator/"];
+
+/// How many lines above a panic site a `panic-free:` note may sit.
+pub const PANIC_WINDOW: usize = 12;
+
+/// How many lines above a P2 site an `order:` note may sit.
+pub const ORDER_WINDOW: usize = 8;
+
+/// How many lines above a dropped result an `ok-drop:` note may sit.
+pub const OKDROP_WINDOW: usize = 4;
+
+fn is_word(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+/// Next non-space/tab index at or after `i`.
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && (b[i] == b' ' || b[i] == b'\t') {
+        i += 1;
+    }
+    i
+}
+
+/// Length of the identifier run starting at `i` (0 if none).
+fn ident_len(b: &[u8], i: usize) -> usize {
+    if i >= b.len() || !is_ident_start(b[i]) {
+        return 0;
+    }
+    let mut j = i + 1;
+    while j < b.len() && is_word(b[j]) {
+        j += 1;
+    }
+    j - i
+}
+
+/// The maximal identifier ending just before byte `end` (exclusive),
+/// with any leading digits trimmed (an identifier cannot start with a
+/// digit); `None` if empty after trimming.
+fn ident_before(b: &[u8], end: usize) -> Option<(usize, usize)> {
+    let mut start = end;
+    while start > 0 && is_word(b[start - 1]) {
+        start -= 1;
+    }
+    while start < end && b[start].is_ascii_digit() {
+        start += 1;
+    }
+    if start < end {
+        Some((start, end))
+    } else {
+        None
+    }
+}
+
+/// True if `word` occurs at `i` with word boundaries on both sides.
+fn word_at(b: &[u8], i: usize, word: &str) -> bool {
+    let w = word.as_bytes();
+    if i + w.len() > b.len() || &b[i..i + w.len()] != w {
+        return false;
+    }
+    let before_ok = i == 0 || !is_word(b[i - 1]);
+    let after_ok = i + w.len() >= b.len() || !is_word(b[i + w.len()]);
+    before_ok && after_ok
+}
+
+/// All `(position_of_fn_keyword, name)` pairs on one code line.
+fn fn_starts(line: &str) -> Vec<(usize, String)> {
+    let b = line.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < b.len() {
+        if word_at(b, i, "fn") {
+            let mut j = i + 2;
+            let ws = skip_ws(b, j);
+            if ws > j {
+                j = ws;
+                let len = ident_len(b, j);
+                if len > 0 {
+                    out.push((i, line[j..j + len].to_string()));
+                    i = j + len;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Indexing sites on one line, in order: `Some(receiver)` for
+/// `ident[..]`, `None` for `)[..]` / `][..]` chains.
+fn index_hits(line: &str) -> Vec<Option<String>> {
+    let b = line.as_bytes();
+    let mut out = Vec::new();
+    for j in 1..b.len() {
+        if b[j] != b'[' {
+            continue;
+        }
+        let prev = b[j - 1];
+        if is_word(prev) {
+            if let Some((s, e)) = ident_before(b, j) {
+                out.push(Some(line[s..e].to_string()));
+            }
+        } else if prev == b')' || prev == b']' {
+            out.push(None);
+        }
+    }
+    out
+}
+
+/// `name: &[T; N]` / `name: &mut [T; N]` fixed-extent reference params.
+fn fixed_param_bindings(line: &str, out: &mut std::collections::HashSet<String>) {
+    let b = line.as_bytes();
+    for colon in 0..b.len() {
+        if b[colon] != b':' {
+            continue;
+        }
+        // Identifier (with trailing ws allowed) before the colon.
+        let mut e = colon;
+        while e > 0 && (b[e - 1] == b' ' || b[e - 1] == b'\t') {
+            e -= 1;
+        }
+        let Some((s, e)) = ident_before(b, e) else { continue };
+        // `&`, optional `mut `, then `[ ... ; ... ]` with no nested
+        // brackets (the textual signature of a fixed-extent array).
+        let mut j = skip_ws(b, colon + 1);
+        if j >= b.len() || b[j] != b'&' {
+            continue;
+        }
+        j = skip_ws(b, j + 1);
+        if word_at(b, j, "mut") {
+            let k = skip_ws(b, j + 3);
+            if k == j + 3 {
+                continue; // `mut` must be followed by whitespace
+            }
+            j = k;
+        }
+        if j >= b.len() || b[j] != b'[' {
+            continue;
+        }
+        j += 1;
+        let mut semi = None;
+        while j < b.len() {
+            match b[j] {
+                b';' => {
+                    semi = Some(j);
+                    break;
+                }
+                b'[' | b']' => break,
+                _ => j += 1,
+            }
+        }
+        let Some(semi) = semi else { continue };
+        let mut k = semi + 1;
+        let mut closed = false;
+        while k < b.len() {
+            match b[k] {
+                b']' => {
+                    closed = true;
+                    break;
+                }
+                b'[' => break,
+                _ => k += 1,
+            }
+        }
+        if closed {
+            out.insert(line[s..e].to_string());
+        }
+    }
+}
+
+/// `let x = [...]` / `let x: [T; N] = [...]` array-literal bindings.
+fn fixed_let_bindings(line: &str, out: &mut std::collections::HashSet<String>) {
+    let b = line.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if !word_at(b, i, "let") {
+            i += 1;
+            continue;
+        }
+        let mut j = skip_ws(b, i + 3);
+        if j == i + 3 {
+            i += 3;
+            continue; // `let` must be followed by whitespace
+        }
+        if word_at(b, j, "mut") {
+            let k = skip_ws(b, j + 3);
+            if k == j + 3 {
+                i = j;
+                continue;
+            }
+            j = k;
+        }
+        let len = ident_len(b, j);
+        if len == 0 {
+            i = j;
+            continue;
+        }
+        let (ns, ne) = (j, j + len);
+        j = skip_ws(b, ne);
+        // Optional `: [T; N]` annotation (no nested brackets).
+        if j < b.len() && b[j] == b':' {
+            j = skip_ws(b, j + 1);
+            if j >= b.len() || b[j] != b'[' {
+                i = ne;
+                continue;
+            }
+            j += 1;
+            let mut semi = false;
+            while j < b.len() {
+                match b[j] {
+                    b';' => {
+                        semi = true;
+                        j += 1;
+                        break;
+                    }
+                    b'[' | b']' => break,
+                    _ => j += 1,
+                }
+            }
+            if !semi {
+                i = ne;
+                continue;
+            }
+            let mut closed = false;
+            while j < b.len() {
+                match b[j] {
+                    b']' => {
+                        closed = true;
+                        j += 1;
+                        break;
+                    }
+                    b'[' => break,
+                    _ => j += 1,
+                }
+            }
+            if !closed {
+                i = ne;
+                continue;
+            }
+            j = skip_ws(b, j);
+        }
+        if j < b.len() && b[j] == b'=' {
+            let j = skip_ws(b, j + 1);
+            if j < b.len() && b[j] == b'[' {
+                out.insert(line[ns..ne].to_string());
+            }
+        }
+        i = ne;
+    }
+}
+
+/// `.method(` with optional whitespace around the dot and name.
+fn dot_call_hit(line: &str, names: &[&str], next: &[u8]) -> bool {
+    let b = line.as_bytes();
+    for dot in 0..b.len() {
+        if b[dot] != b'.' {
+            continue;
+        }
+        let j = skip_ws(b, dot + 1);
+        for name in names {
+            if word_at(b, j, name) {
+                let k = skip_ws(b, j + name.len());
+                if k < b.len() && next.contains(&b[k]) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+fn unwrap_hit(line: &str) -> bool {
+    dot_call_hit(line, &["unwrap", "expect"], b"(")
+}
+
+fn fma_hit(line: &str) -> bool {
+    dot_call_hit(line, &["mul_add"], b"(")
+}
+
+fn reduce_hit(line: &str) -> bool {
+    dot_call_hit(line, &["sum", "product", "fold"], b":(<")
+}
+
+fn assert_hit(line: &str) -> bool {
+    let b = line.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i..].starts_with(b"assert") && (i == 0 || !is_word(b[i - 1])) {
+            let mut j = i + 6;
+            if b[j..].starts_with(b"_eq") || b[j..].starts_with(b"_ne") {
+                j += 3;
+            }
+            if j < b.len() && b[j] == b'!' {
+                let k = skip_ws(b, j + 1);
+                if k < b.len() && (b[k] == b'(' || b[k] == b'[') {
+                    return true;
+                }
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    false
+}
+
+fn panic_hit(line: &str) -> bool {
+    let b = line.as_bytes();
+    for name in ["panic", "unreachable", "todo", "unimplemented"] {
+        let w = name.as_bytes();
+        let mut i = 0;
+        while i + w.len() < b.len() {
+            if &b[i..i + w.len()] == w
+                && (i == 0 || !is_word(b[i - 1]))
+                && b[i + w.len()] == b'!'
+            {
+                return true;
+            }
+            i += 1;
+        }
+    }
+    false
+}
+
+/// `(path::)*Hash{Map,Set}` at `i`, word-bounded on the right.
+fn path_to_hash(b: &[u8], mut i: usize) -> bool {
+    loop {
+        if word_at(b, i, "HashMap") || word_at(b, i, "HashSet") {
+            return true;
+        }
+        let len = ident_len(b, i);
+        if len == 0 {
+            return false;
+        }
+        if b[i + len..].starts_with(b"::") {
+            i += len + 2;
+        } else {
+            return false;
+        }
+    }
+}
+
+/// Identifiers declared with a HashMap/HashSet type on one line
+/// (params, struct fields, and `let` bindings with inferred-from-init
+/// or annotated types).
+fn hash_bindings_on_line(line: &str, out: &mut std::collections::HashSet<String>) {
+    let b = line.as_bytes();
+    // `name : [&][mut ] path::Hash{Map,Set}`
+    for colon in 0..b.len() {
+        if b[colon] != b':' {
+            continue;
+        }
+        let mut e = colon;
+        while e > 0 && (b[e - 1] == b' ' || b[e - 1] == b'\t') {
+            e -= 1;
+        }
+        let Some((s, e)) = ident_before(b, e) else { continue };
+        let mut j = skip_ws(b, colon + 1);
+        if j < b.len() && b[j] == b'&' {
+            j = skip_ws(b, j + 1);
+        }
+        if word_at(b, j, "mut") {
+            let k = skip_ws(b, j + 3);
+            if k > j + 3 {
+                j = k;
+            }
+        }
+        if path_to_hash(b, j) {
+            out.insert(line[s..e].to_string());
+        }
+    }
+    // `let [mut] name [: T] = path::Hash{Map,Set}...`
+    let mut i = 0;
+    while i < b.len() {
+        if !word_at(b, i, "let") {
+            i += 1;
+            continue;
+        }
+        let mut j = skip_ws(b, i + 3);
+        if j == i + 3 {
+            i += 3;
+            continue;
+        }
+        if word_at(b, j, "mut") {
+            let k = skip_ws(b, j + 3);
+            if k > j + 3 {
+                j = k;
+            }
+        }
+        let len = ident_len(b, j);
+        if len == 0 {
+            i = j;
+            continue;
+        }
+        let (ns, ne) = (j, j + len);
+        // Optional annotation: anything up to `=` with no `;`.
+        let mut k = ne;
+        let mut eq = None;
+        while k < b.len() {
+            match b[k] {
+                b'=' => {
+                    eq = Some(k);
+                    break;
+                }
+                b';' => break,
+                _ => k += 1,
+            }
+        }
+        if let Some(eq) = eq {
+            // Without an annotation only whitespace may separate the
+            // name from `=`; with `:` anything short of `;` goes.
+            let direct = skip_ws(b, ne) == eq;
+            let annotated = skip_ws(b, ne) < b.len() && b[skip_ws(b, ne)] == b':';
+            if (direct || annotated) && path_to_hash(b, skip_ws(b, eq + 1)) {
+                out.insert(line[ns..ne].to_string());
+            }
+        }
+        i = ne;
+    }
+}
+
+/// Receivers of order-sensitive iteration calls (`.iter()`, `.drain()`,
+/// …) on one line, in order.
+fn hash_iter_receivers(line: &str) -> Vec<String> {
+    const METHODS: &[&str] =
+        &["iter", "iter_mut", "values", "values_mut", "keys", "drain", "retain", "into_iter"];
+    let b = line.as_bytes();
+    let mut out = Vec::new();
+    for dot in 1..b.len() {
+        if b[dot] != b'.' {
+            continue;
+        }
+        let mut e = dot;
+        while e > 0 && (b[e - 1] == b' ' || b[e - 1] == b'\t') {
+            e -= 1;
+        }
+        let Some((s, e)) = ident_before(b, e) else { continue };
+        let j = skip_ws(b, dot + 1);
+        for m in METHODS {
+            if word_at(b, j, m) {
+                let k = skip_ws(b, j + m.len());
+                if k < b.len() && b[k] == b'(' {
+                    out.push(line[s..e].to_string());
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The (possibly dotted) iteration target of the first `for … in` on
+/// the line.
+fn for_in_target(line: &str) -> Option<String> {
+    let b = line.as_bytes();
+    let mut i = 0;
+    let for_at = loop {
+        if i >= b.len() {
+            return None;
+        }
+        if word_at(b, i, "for") {
+            break i;
+        }
+        i += 1;
+    };
+    let mut j = for_at + 3;
+    while j < b.len() {
+        if word_at(b, j, "in") {
+            let mut k = skip_ws(b, j + 2);
+            if k == j + 2 {
+                j += 1;
+                continue; // `in` must be followed by whitespace
+            }
+            if k < b.len() && b[k] == b'&' {
+                k += 1;
+            }
+            if word_at(b, k, "mut") {
+                let n = skip_ws(b, k + 3);
+                if n > k + 3 {
+                    k = n;
+                }
+            }
+            if k < b.len() && is_ident_start(b[k]) {
+                let mut e = k + 1;
+                while e < b.len() && (is_word(b[e]) || b[e] == b'.') {
+                    e += 1;
+                }
+                return Some(line[k..e].to_string());
+            }
+            return None;
+        }
+        j += 1;
+    }
+    None
+}
+
+fn f32_cast_hit(line: &str) -> bool {
+    let b = line.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if word_at(b, i, "as") {
+            let j = skip_ws(b, i + 2);
+            if j > i + 2 && word_at(b, j, "f32") {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+fn let_drop_hit(line: &str) -> bool {
+    let b = line.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if word_at(b, i, "let") {
+            let j = skip_ws(b, i + 3);
+            if j > i + 3 && j < b.len() && b[j] == b'_' && !is_word(*b.get(j + 1).unwrap_or(&b' '))
+            {
+                let k = skip_ws(b, j + 1);
+                if k < b.len() && b[k] == b'=' {
+                    return true;
+                }
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+fn sort_call_hit(line: &str) -> bool {
+    const SUFFIXES: &[&str] =
+        &["", "_unstable", "_by", "_by_key", "_unstable_by", "_unstable_by_key"];
+    let b = line.as_bytes();
+    for dot in 0..b.len() {
+        if b[dot] != b'.' {
+            continue;
+        }
+        let j = skip_ws(b, dot + 1);
+        if !b[j..].starts_with(b"sort") {
+            continue;
+        }
+        let len = ident_len(b, j);
+        let name = &line[j..j + len];
+        if let Some(sfx) = name.strip_prefix("sort") {
+            if SUFFIXES.contains(&sfx) {
+                let k = skip_ws(b, j + len);
+                if k < b.len() && b[k] == b'(' {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+fn pool_hit(line: &str) -> bool {
+    let b = line.as_bytes();
+    (0..b.len()).any(|i| word_at(b, i, "pool") || word_at(b, i, "Pool"))
+}
+
+/// Annotation markers on a comment line whose reason text is empty.
+fn empty_note_markers(comment: &str) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for marker in ["hot-path", "panic-free", "order", "ok-drop"] {
+        let needle = format!("{marker}:");
+        let mut from = 0;
+        while let Some(pos) = comment[from..].find(&needle) {
+            let after = from + pos + needle.len();
+            if comment[after..].trim_start_matches([' ', '\t']).is_empty() {
+                out.push(marker);
+            }
+            from = after;
+        }
+    }
+    out
+}
+
+/// True if the `/` or `%` at byte `pos` cannot panic: float division
+/// (float literal or f32/f64 suffix adjacent) or a nonzero
+/// integer-literal divisor.
+fn div_exempt(line: &str, pos: usize) -> bool {
+    let left = line[..pos].trim_end();
+    let lb = left.as_bytes();
+    // `…digit.digits*` / `….digits+` / `…f32|f64` (word-bounded).
+    let mut e = lb.len();
+    while e > 0 && lb[e - 1].is_ascii_digit() {
+        e -= 1;
+    }
+    if e > 0 && lb[e - 1] == b'.' && (e < lb.len() || (e > 1 && lb[e - 2].is_ascii_digit())) {
+        // `.digits+` always passes; a trailing bare `1.` needs the
+        // digit before the dot.
+        return true;
+    }
+    for sfx in ["f32", "f64"] {
+        if left.ends_with(sfx) {
+            let at = lb.len() - 3;
+            if at == 0 || !is_word(lb[at - 1]) {
+                return true;
+            }
+        }
+    }
+    let right = line[pos + 1..].trim_start();
+    let rb = right.as_bytes();
+    if !rb.is_empty() {
+        // `digits+.` / `.digits+` / `digits+[_]f32|f64` float literals.
+        let mut d = 0;
+        while d < rb.len() && rb[d].is_ascii_digit() {
+            d += 1;
+        }
+        if d > 0 && d < rb.len() && rb[d] == b'.' {
+            return true;
+        }
+        if rb[0] == b'.' && rb.len() > 1 && rb[1].is_ascii_digit() {
+            return true;
+        }
+        if d > 0 {
+            let f = if rb[d..].starts_with(b"_") { d + 1 } else { d };
+            for sfx in [b"f32", b"f64"] {
+                if rb[f..].starts_with(sfx)
+                    && !rb.get(f + 3).copied().is_some_and(is_word)
+                {
+                    return true;
+                }
+            }
+        }
+        // Nonzero integer-literal divisor.
+        if (b'1'..=b'9').contains(&rb[0]) {
+            return true;
+        }
+    }
+    false
+}
+
+/// One reconstructed function scope.
+struct FnScope {
+    name: String,
+    /// Line index of the signature's `fn` keyword.
+    header: usize,
+    /// Line index of the matching closing brace.
+    close: usize,
+    hot: bool,
+    /// Fixed-extent array bindings (indexing them cannot be
+    /// out-of-bounds-by-variable in the way P1 polices).
+    fixed: std::collections::HashSet<String>,
+    /// Body mentions a pool (gates p2-float-reduce).
+    pooled: bool,
+}
+
+/// Brace-aware scope reconstruction over blanked code lines.  Returns
+/// the functions plus a per-line map to the innermost covering
+/// function (`usize::MAX` when none).  A function spans its header
+/// line through the line of its closing brace.
+fn reconstruct_functions(code: &[String], comments: &[String]) -> (Vec<FnScope>, Vec<usize>) {
+    let mut fns: Vec<FnScope> = Vec::new();
+    let mut stack: Vec<usize> = Vec::new();
+    let mut open_depths: Vec<i64> = Vec::new();
+    let mut pending: Option<(String, usize)> = None;
+    let mut pend_nest: i64 = 0;
+    let mut depth: i64 = 0;
+    for (i, line) in code.iter().enumerate() {
+        let starts = fn_starts(line);
+        let b = line.as_bytes();
+        for (j, &c) in b.iter().enumerate() {
+            if pending.is_none() {
+                if let Some((_, name)) = starts.iter().find(|(p, _)| *p == j) {
+                    pending = Some((name.clone(), i));
+                    pend_nest = 0;
+                }
+            }
+            if pending.is_some() && (c == b'(' || c == b'[') {
+                pend_nest += 1;
+            } else if pending.is_some() && (c == b')' || c == b']') {
+                pend_nest -= 1;
+            } else if c == b';' && pending.is_some() && pend_nest == 0 {
+                pending = None; // trait declaration, no body
+            } else if c == b'{' {
+                if let Some((name, header)) = pending.take() {
+                    fns.push(FnScope {
+                        name,
+                        header,
+                        close: code.len().saturating_sub(1),
+                        hot: false,
+                        fixed: std::collections::HashSet::new(),
+                        pooled: false,
+                    });
+                    stack.push(fns.len() - 1);
+                    open_depths.push(depth);
+                }
+                depth += 1;
+            } else if c == b'}' {
+                depth -= 1;
+                if let (Some(&top), Some(&od)) = (stack.last(), open_depths.last()) {
+                    if od == depth {
+                        fns[top].close = i;
+                        stack.pop();
+                        open_depths.pop();
+                    }
+                }
+            }
+        }
+    }
+    let mut line_fn = vec![usize::MAX; code.len()];
+    for (idx, f) in fns.iter().enumerate() {
+        // Later functions are inner: innermost wins.
+        for slot in line_fn.iter_mut().take(f.close + 1).skip(f.header) {
+            *slot = idx;
+        }
+    }
+    for f in fns.iter_mut() {
+        // Hot marker: trailing on the header line, or in the contiguous
+        // comment/attribute block directly above it.
+        if comments[f.header].contains("hot-path:") {
+            f.hot = true;
+        }
+        let mut k = f.header;
+        while k > 0 {
+            k -= 1;
+            let code_trim = code[k].trim();
+            let has_code = !code_trim.is_empty() && !code_trim.starts_with("#[");
+            let comment_blank = comments[k].trim().is_empty();
+            if comment_blank && (has_code || code_trim.is_empty()) {
+                break; // code line with no comment, or a blank line
+            }
+            if comments[k].contains("hot-path:") {
+                f.hot = true;
+            }
+            if has_code {
+                break; // trailing comment on a code line: last one taken
+            }
+        }
+        for bl in code.iter().take(f.close + 1).skip(f.header) {
+            fixed_param_bindings(bl, &mut f.fixed);
+            fixed_let_bindings(bl, &mut f.fixed);
+            if pool_hit(bl) {
+                f.pooled = true;
+            }
+        }
+    }
+    (fns, line_fn)
+}
+
+/// Analyze one file; returns `path:line: [rule] message` strings.
+pub fn scan_file(relpath: &str, text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let (code, comments) = strip_rust(text);
+    let relpath = relpath.replace('\\', "/");
+    let tests_at = test_region_start(&code);
+    let (fns, line_fn) = reconstruct_functions(&code, &comments);
+    let mut hashes = std::collections::HashSet::new();
+    for line in code.iter().take(tests_at) {
+        hash_bindings_on_line(line, &mut hashes);
+    }
+    let determinism = DETERMINISM_PREFIXES.iter().any(|p| relpath.starts_with(p));
+
+    if HOT_FILES.contains(&relpath.as_str()) && !fns.iter().any(|f| f.hot && f.header < tests_at)
+    {
+        out.push(format!(
+            "{relpath}:1: [hot-coverage] file is on the hot-path list but marks no \
+             function with a `hot-path:` header"
+        ));
+    }
+
+    for (i, line) in code.iter().enumerate() {
+        let lineno = i + 1;
+        if i >= tests_at {
+            break;
+        }
+
+        for marker in empty_note_markers(&comments[i]) {
+            out.push(format!(
+                "{relpath}:{lineno}: [note-grammar] `{marker}:` marker with no reason text"
+            ));
+        }
+
+        let f = if line_fn[i] == usize::MAX { None } else { Some(&fns[line_fn[i]]) };
+
+        // --- P1: panic-freedom in hot functions -----------------------
+        if let Some(f) = f.filter(|f| f.hot) {
+            let pf = has_comment(&comments, i, PANIC_WINDOW, &["panic-free:"]);
+            for recv in index_hits(line) {
+                if let Some(name) = &recv {
+                    if f.fixed.contains(name) {
+                        continue;
+                    }
+                }
+                if !pf {
+                    let name = recv.as_deref().unwrap_or("?");
+                    out.push(format!(
+                        "{relpath}:{lineno}: [p1-index] indexing `{name}[..]` in hot fn \
+                         `{}` without a fixed-extent binding or `// panic-free:` note",
+                        f.name
+                    ));
+                }
+                break; // one report per line
+            }
+            if unwrap_hit(line) && !pf {
+                out.push(format!(
+                    "{relpath}:{lineno}: [p1-unwrap] unwrap/expect in hot fn `{}` without \
+                     a `// panic-free:` note",
+                    f.name
+                ));
+            }
+            for (pos, &c) in line.as_bytes().iter().enumerate() {
+                if (c == b'/' || c == b'%') && !div_exempt(line, pos) && !pf {
+                    out.push(format!(
+                        "{relpath}:{lineno}: [p1-div] non-literal `/` or `%` in hot fn \
+                         `{}` without a `// panic-free:` note",
+                        f.name
+                    ));
+                    break;
+                }
+            }
+            if assert_hit(line) && !pf {
+                out.push(format!(
+                    "{relpath}:{lineno}: [p1-assert] assert! in hot fn `{}` without a \
+                     `// panic-free:` note (debug_assert! is exempt)",
+                    f.name
+                ));
+            }
+            if panic_hit(line) && !pf {
+                out.push(format!(
+                    "{relpath}:{lineno}: [p1-panic] explicit panic path in hot fn `{}` \
+                     without a `// panic-free:` note",
+                    f.name
+                ));
+            }
+        }
+
+        // --- P2: numeric determinism in result-bearing modules --------
+        if determinism {
+            if let Some(f) = f {
+                let od = has_comment(&comments, i, ORDER_WINDOW, &["order:"]);
+                let mut hit =
+                    hash_iter_receivers(line).into_iter().find(|r| hashes.contains(r));
+                if hit.is_none() {
+                    if let Some(target) = for_in_target(line) {
+                        let last =
+                            target.rsplit('.').next().unwrap_or(target.as_str()).to_string();
+                        if hashes.contains(&last) {
+                            hit = Some(target);
+                        }
+                    }
+                }
+                if let Some(hit) = hit {
+                    let sorts_later =
+                        (i..=f.close).any(|j| sort_call_hit(&code[j]));
+                    if !od && !sorts_later {
+                        out.push(format!(
+                            "{relpath}:{lineno}: [p2-hash-iter] iteration over \
+                             hash-ordered `{hit}` in `{}` with no later sort and no \
+                             `// order:` note",
+                            f.name
+                        ));
+                    }
+                }
+                if fma_hit(line) && !od {
+                    out.push(format!(
+                        "{relpath}:{lineno}: [p2-fma] mul_add contracts rounding; needs \
+                         an `// order:` note"
+                    ));
+                }
+                if f.pooled && reduce_hit(line) && !od {
+                    out.push(format!(
+                        "{relpath}:{lineno}: [p2-float-reduce] reduction in pool-adjacent \
+                         fn `{}` needs an `// order:` note",
+                        f.name
+                    ));
+                }
+                if f32_cast_hit(line) && !od {
+                    out.push(format!(
+                        "{relpath}:{lineno}: [p2-float-cast] `as f32` narrows; needs an \
+                         `// order:` note"
+                    ));
+                }
+            }
+        }
+
+        // --- P3: result discipline ------------------------------------
+        let okd = has_comment(&comments, i, OKDROP_WINDOW, &["ok-drop:"]);
+        if let_drop_hit(line) && !okd {
+            out.push(format!(
+                "{relpath}:{lineno}: [p3-let-drop] `let _ =` without an `// ok-drop:` \
+                 reason (handle the value or justify the drop)"
+            ));
+        }
+        let stripped = line.trim();
+        if stripped.contains(".ok();")
+            && !stripped.contains('=')
+            && !stripped.contains("return")
+            && !okd
+        {
+            out.push(format!(
+                "{relpath}:{lineno}: [p3-ok-discard] statement-position `.ok();` without \
+                 an `// ok-drop:` reason"
+            ));
+        }
+    }
+    out
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = std::fs::read_to_string(&path)?;
+            out.extend(scan_file(&rel, &text));
+        }
+    }
+    Ok(())
+}
+
+/// Analyze the repo rooted at `root`; returns all violations.
+pub fn run(root: &Path) -> std::io::Result<Vec<String>> {
+    let mut out = Vec::new();
+    for scan_root in SCAN_ROOTS {
+        let top = root.join(scan_root);
+        if top.is_dir() {
+            walk(&top, root, &mut out)?;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(relpath: &str, text: &str) -> Vec<String> {
+        scan_file(relpath, text)
+            .iter()
+            .map(|v| v.split('[').nth(1).unwrap().split(']').next().unwrap().to_string())
+            .collect()
+    }
+
+    /// The shared fixture suite: identical inputs and expected rule ids
+    /// to `scripts/analyze_invariants.py --self-test`.  Grow both or
+    /// neither.
+    const HOT: &str = "// hot-path: fixture kernel.\n";
+
+    fn fixtures() -> Vec<(&'static str, String, Vec<&'static str>)> {
+        vec![
+            // P1: the seeded violation — an unguarded index in a hot fn.
+            (
+                "rust/src/core/x.rs",
+                format!("{HOT}fn f(t: &[f64], i: usize) -> f64 {{ t[i] }}\n"),
+                vec!["p1-index"],
+            ),
+            (
+                "rust/src/core/x.rs",
+                format!(
+                    "{HOT}fn f(t: &[f64], i: usize) -> f64 {{\n    \
+                     // panic-free: caller guarantees i < t.len().\n    t[i]\n}}\n"
+                ),
+                vec![],
+            ),
+            ("rust/src/core/x.rs", format!("{HOT}fn f(c: &mut [f64; 4]) {{ c[0] = 1.0; }}\n"), vec![]),
+            (
+                "rust/src/core/x.rs",
+                format!("{HOT}fn f() -> f64 {{\n    let acc = [0.0f64; 4];\n    acc[3]\n}}\n"),
+                vec![],
+            ),
+            // P1 applies only to hot-marked functions.
+            ("rust/src/core/x.rs", "fn f(t: &[f64], i: usize) -> f64 { t[i] }\n".into(), vec![]),
+            (
+                "rust/src/core/x.rs",
+                format!("{HOT}fn f(r: Option<u8>) -> u8 {{ r.unwrap() }}\n"),
+                vec!["p1-unwrap"],
+            ),
+            (
+                "rust/src/core/x.rs",
+                format!(
+                    "{HOT}fn f(r: Option<u8>) -> u8 {{\n    \
+                     // panic-free: seeded by caller, always Some.\n    r.expect(\"seeded\")\n}}\n"
+                ),
+                vec![],
+            ),
+            (
+                "rust/src/core/x.rs",
+                format!("{HOT}fn f(a: u64, b: u64) -> u64 {{ a / b }}\n"),
+                vec!["p1-div"],
+            ),
+            ("rust/src/core/x.rs", format!("{HOT}fn f(a: usize) -> usize {{ a / 4 }}\n"), vec![]),
+            ("rust/src/core/x.rs", format!("{HOT}fn f(s: f64) -> f64 {{ 1.0 / s }}\n"), vec![]),
+            (
+                "rust/src/core/x.rs",
+                format!("{HOT}fn f(m: usize) {{ assert!(m >= 2); }}\n"),
+                vec!["p1-assert"],
+            ),
+            (
+                "rust/src/core/x.rs",
+                format!("{HOT}fn f(m: usize) {{ debug_assert!(m >= 2); }}\n"),
+                vec![],
+            ),
+            (
+                "rust/src/core/x.rs",
+                format!("{HOT}fn f() {{ panic!(\"boom\"); }}\n"),
+                vec!["p1-panic"],
+            ),
+            // note-grammar: a marker with no reason text is rejected.
+            ("rust/src/core/x.rs", "// hot-path:\nfn f() {}\n".into(), vec!["note-grammar"]),
+            // hot-coverage: hot-listed files must mark a function.
+            ("rust/src/core/stats.rs", "fn f() {}\n".into(), vec!["hot-coverage"]),
+            // P2: the seeded violation — a HashMap-order-dependent result.
+            (
+                "rust/src/engines/x.rs",
+                "fn f(m: &HashMap<u64, f64>, out: &mut Vec<f64>) {\n    \
+                 for (_k, v) in m.iter() {\n        out.push(*v);\n    }\n}\n"
+                    .into(),
+                vec!["p2-hash-iter"],
+            ),
+            (
+                "rust/src/engines/x.rs",
+                "fn f(m: &HashMap<u64, f64>, out: &mut Vec<f64>) {\n    \
+                 for (_k, v) in m.iter() {\n        out.push(*v);\n    }\n    \
+                 out.sort_unstable_by(|a, b| a.total_cmp(b));\n}\n"
+                    .into(),
+                vec![],
+            ),
+            (
+                "rust/src/engines/x.rs",
+                "fn f(m: &HashMap<u64, f64>, out: &mut Vec<f64>) {\n    \
+                 // order: gauge aggregation; result is order-insensitive.\n    \
+                 for (_k, v) in m.iter() {\n        out.push(*v);\n    }\n}\n"
+                    .into(),
+                vec![],
+            ),
+            (
+                "rust/src/engines/x.rs",
+                "fn f(m: &BTreeMap<u64, f64>, out: &mut Vec<f64>) {\n    \
+                 for (_k, v) in m.iter() {\n        out.push(*v);\n    }\n}\n"
+                    .into(),
+                vec![],
+            ),
+            (
+                "rust/src/core/x.rs",
+                "fn f(a: f64, b: f64, c: f64) -> f64 { a.mul_add(b, c) }\n".into(),
+                vec!["p2-fma"],
+            ),
+            (
+                "rust/src/core/x.rs",
+                "// order: fused once, never mixed with the unfused path.\n\
+                 fn f(a: f64, b: f64, c: f64) -> f64 { a.mul_add(b, c) }\n"
+                    .into(),
+                vec![],
+            ),
+            (
+                "rust/src/core/x.rs",
+                "fn f(pool: &RoundPool, xs: &[f64]) -> f64 { xs.iter().sum() }\n".into(),
+                vec!["p2-float-reduce"],
+            ),
+            ("rust/src/core/x.rs", "fn f(xs: &[f64]) -> f64 { xs.iter().sum() }\n".into(), vec![]),
+            (
+                "rust/src/core/x.rs",
+                "fn f(x: f64) -> f32 { x as f32 }\n".into(),
+                vec!["p2-float-cast"],
+            ),
+            (
+                "rust/src/core/x.rs",
+                "// order: narrowed once at export; consumers compare f32 bits.\n\
+                 fn f(x: f64) -> f32 { x as f32 }\n"
+                    .into(),
+                vec![],
+            ),
+            // P2 is scoped to result-bearing modules.
+            ("rust/src/util/x.rs", "fn f(x: f64) -> f32 { x as f32 }\n".into(), vec![]),
+            // P3: the seeded violation — a bare `let _ =` on a Result.
+            (
+                "rust/src/util/x.rs",
+                "fn f() { let _ = std::fs::remove_file(\"x\"); }\n".into(),
+                vec!["p3-let-drop"],
+            ),
+            (
+                "rust/src/util/x.rs",
+                "fn f() {\n    // ok-drop: best-effort cleanup; missing file is fine.\n    \
+                 let _ = std::fs::remove_file(\"x\");\n}\n"
+                    .into(),
+                vec![],
+            ),
+            (
+                "rust/src/util/x.rs",
+                "#[cfg(test)]\nmod tests {\n    fn f() { let _ = std::fs::remove_file(\"x\"); }\n}\n"
+                    .into(),
+                vec![],
+            ),
+            (
+                "rust/src/util/x.rs",
+                "fn f(w: &mut impl Write) { w.flush().ok(); }\n".into(),
+                vec!["p3-ok-discard"],
+            ),
+            (
+                "rust/src/util/x.rs",
+                "fn f(s: &str) { let x = s.parse::<u8>().ok(); }\n".into(),
+                vec![],
+            ),
+        ]
+    }
+
+    #[test]
+    fn fixture_suite_matches_python_mirror() {
+        let mut failed = Vec::new();
+        for (path, text, want) in fixtures() {
+            let got = rules(path, &text);
+            if got != want {
+                failed.push(format!("{path}: want {want:?}, got {got:?}\n  text: {text:?}"));
+            }
+        }
+        assert!(failed.is_empty(), "{}", failed.join("\n"));
+    }
+
+    #[test]
+    fn window_bounds_are_enforced() {
+        // A note PANIC_WINDOW+1 lines above the site no longer covers it.
+        let pad = "    let y = 1;\n".repeat(PANIC_WINDOW + 1);
+        let src = format!(
+            "{HOT}fn f(t: &[f64], i: usize) -> f64 {{\n    \
+             // panic-free: too far away.\n{pad}    t[i]\n}}\n"
+        );
+        assert_eq!(rules("rust/src/core/x.rs", &src), ["p1-index"]);
+    }
+
+    #[test]
+    fn hot_marker_block_stops_at_blank_lines() {
+        // A marker separated from the fn by a blank line does not attach.
+        let src = "// hot-path: detached marker.\n\nfn f(t: &[f64], i: usize) -> f64 { t[i] }\n";
+        assert!(rules("rust/src/core/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn whole_tree_is_clean() {
+        // The real gate: zero violations over the repo (mirrors
+        // `ci.sh --analyze` / `scripts/analyze_invariants.py .`).
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let violations = run(root).expect("analyzer walks the repo");
+        assert!(violations.is_empty(), "{}", violations.join("\n"));
+    }
+}

@@ -52,6 +52,8 @@ impl Command {
 
     fn usage(&self) -> String {
         let mut s = String::new();
+        // ok-drop: fmt::Write into String cannot fail (also the per-option
+        // line below).
         let _ = writeln!(s, "  {} — {}", self.name, self.help);
         for o in &self.opts {
             let kind = if o.is_switch {
@@ -62,6 +64,7 @@ impl Command {
                     None => "(required)".to_string(),
                 }
             };
+            // ok-drop: infallible String write (see above).
             let _ = writeln!(s, "      --{:<18} {} {}", o.name, o.help, kind);
         }
         s
@@ -125,6 +128,7 @@ impl Cli {
 
     pub fn help(&self) -> String {
         let mut s = String::new();
+        // ok-drop: fmt::Write into String cannot fail (both lines).
         let _ = writeln!(s, "{} — {}\n", self.program, self.about);
         let _ = writeln!(s, "USAGE: {} <command> [--opt value ...]\n\nCOMMANDS:", self.program);
         for c in &self.commands {

@@ -45,10 +45,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Int(i) => {
+                // ok-drop: fmt::Write into String cannot fail.
                 let _ = write!(out, "{i}");
             }
             Json::Num(x) => {
                 if x.is_finite() {
+                    // ok-drop: infallible String write.
                     let _ = write!(out, "{x}");
                 } else {
                     // JSON has no inf/nan; report as null.
@@ -65,6 +67,7 @@ impl Json {
                         '\r' => out.push_str("\\r"),
                         '\t' => out.push_str("\\t"),
                         c if (c as u32) < 0x20 => {
+                            // ok-drop: infallible String write.
                             let _ = write!(out, "\\u{:04x}", c as u32);
                         }
                         c => out.push(c),

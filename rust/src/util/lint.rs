@@ -222,7 +222,7 @@ pub fn strip_rust(text: &str) -> (Vec<String>, Vec<String>) {
 }
 
 /// First line index of the `#[cfg(test)] mod tests` tail (or `len`).
-fn test_region_start(code: &[String]) -> usize {
+pub(crate) fn test_region_start(code: &[String]) -> usize {
     for (i, line) in code.iter().enumerate() {
         if line.trim() != "#[cfg(test)]" {
             continue;
@@ -283,7 +283,7 @@ pub fn parse_audit_table(md: &str) -> (AuditTable, Vec<String>) {
     (table, errors)
 }
 
-fn has_comment(comments: &[String], upto: usize, window: usize, needles: &[&str]) -> bool {
+pub(crate) fn has_comment(comments: &[String], upto: usize, window: usize, needles: &[&str]) -> bool {
     let lo = upto.saturating_sub(window);
     comments[lo..=upto].iter().any(|l| needles.iter().any(|n| l.contains(n)))
 }

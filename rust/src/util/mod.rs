@@ -3,6 +3,7 @@
 //! available here, so minimal purpose-built replacements live in this
 //! module tree.
 
+pub mod analyze;
 pub mod binio;
 pub mod cli;
 pub mod json;

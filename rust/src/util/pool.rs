@@ -78,6 +78,7 @@ impl ThreadPool {
     }
 
     /// Run all jobs, blocking until every one has finished.
+    // hot-path: batch submission loop — one send per tile job, every sweep round.
     pub fn run(&self, jobs: Vec<Job>) {
         let (done_tx, done_rx) = channel();
         let n = jobs.len();
@@ -86,11 +87,18 @@ impl ThreadPool {
             self.tx
                 .send(Msg::Run(Box::new(move || {
                     job();
+                    // ok-drop: completion ping; recv side gone means `run`
+                    // already bailed on a panic — nothing to report to.
                     let _ = done.send(());
                 })))
+                // panic-free: deliberate invariant report — workers only exit
+                // on Shutdown, so a closed channel here is pool-teardown
+                // misuse, not a data-path condition.
                 .expect("pool send");
         }
         for _ in 0..n {
+            // panic-free: deliberate propagation — a dropped `done_tx` means a
+            // worker unwound mid-job; surfacing it beats hanging the caller.
             done_rx.recv().expect("pool worker panicked");
         }
     }
@@ -99,9 +107,13 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         for _ in &self.handles {
+            // ok-drop: send fails only if every worker already exited, which
+            // is exactly the state shutdown is driving toward.
             let _ = self.tx.send(Msg::Shutdown);
         }
         for h in self.handles.drain(..) {
+            // ok-drop: join error = worker panicked; the panic was already
+            // surfaced to the submitter by `run`, and Drop must not unwind.
             let _ = h.join();
         }
     }
@@ -200,6 +212,7 @@ impl<T> SliceWriter<T> {
 /// slot — the former mutex-per-item critical section serialized workers
 /// exactly when tiles finished close together (see
 /// [`parallel_map_indexed_locked`], kept as the reference).
+// hot-path: tile fan-out — one call per sweep round, one item per tile.
 pub fn parallel_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -232,6 +245,9 @@ where
             });
         }
     });
+    // panic-free: deliberate invariant report — the cursor hands out every
+    // index in 0..n exactly once and the scope joins all workers, so an
+    // empty slot is a scheduler bug worth failing loudly on.
     out.into_iter().map(|v| v.expect("worker filled slot")).collect()
 }
 
@@ -371,6 +387,7 @@ impl RoundPool {
     /// Run `f(i)` for every `i in 0..n` across the workers plus the
     /// calling thread; returns when all items are done.  Steady-state
     /// cost: one mutex broadcast in, one mutex wait out, zero allocations.
+    // hot-path: round submission — every engine distance round funnels here.
     pub fn run<F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Sync,
@@ -398,6 +415,9 @@ impl RoundPool {
         // see `erase_job_lifetime` for the argument.
         let job = erase_job_lifetime(&f);
         {
+            // panic-free: deliberate poison propagation — state-lock holders
+            // touch only plain counters; a panic under this lock is a pool
+            // bug and every later round should fail loudly, not limp on.
             let mut st = self.shared.state.lock().unwrap();
             self.shared.cursor.store(0, Ordering::Relaxed);
             st.n = n;
@@ -415,6 +435,8 @@ impl RoundPool {
             }
             run_item(&self.shared, job, i);
         }
+        // panic-free: same deliberate poison propagation as the round-start
+        // lock above; `wait` only errs on that same poisoned mutex.
         let mut st = self.shared.state.lock().unwrap();
         while st.active > 0 {
             st = self.shared.done.wait(st).unwrap();
@@ -422,6 +444,9 @@ impl RoundPool {
         st.job = None;
         drop(st);
         if self.shared.panicked.swap(false, Ordering::SeqCst) {
+            // panic-free: deliberate re-raise — run_item caught a worker
+            // unwind to keep the round protocol consistent; the submitter
+            // is the right thread to actually observe the failure.
             panic!("RoundPool worker panicked during round");
         }
     }
@@ -432,6 +457,7 @@ impl RoundPool {
     /// shape for rounds of many tiny items (e.g. the seed-prefetch row
     /// sweep: one multiply-add pass over a few hundred columns per item),
     /// where a per-item atomic claim would rival the item's work.
+    // hot-path: chunked round submission for rounds of many tiny items.
     pub fn run_chunked<F>(&self, n: usize, chunk: usize, f: F)
     where
         F: Fn(usize) + Sync,
@@ -446,16 +472,20 @@ impl RoundPool {
     }
 }
 
+// hot-path: per-item dispatch — wraps every round item in panic isolation.
 fn run_item(shared: &RoundShared, job: &(dyn Fn(usize) + Sync), i: usize) {
     if catch_unwind(AssertUnwindSafe(|| job(i))).is_err() {
         shared.panicked.store(true, Ordering::SeqCst);
     }
 }
 
+// hot-path: worker park/claim loop — every worker round-trip per round.
 fn worker_main(shared: &RoundShared) {
     let mut seen = 0u64;
     loop {
         let (job, n) = {
+            // panic-free: deliberate poison propagation (see RoundPool::run);
+            // `wait` errs only on the same poisoned state mutex.
             let mut st = shared.state.lock().unwrap();
             while !st.shutdown && st.epoch == seen {
                 st = shared.start.wait(st).unwrap();
@@ -464,6 +494,9 @@ fn worker_main(shared: &RoundShared) {
                 return;
             }
             seen = st.epoch;
+            // panic-free: deliberate invariant report — `run` installs the
+            // job before bumping the epoch under this same lock, so an empty
+            // slot after an epoch move is a protocol bug.
             (st.job.expect("round job installed"), st.n)
         };
         loop {
@@ -473,6 +506,7 @@ fn worker_main(shared: &RoundShared) {
             }
             run_item(shared, job, i);
         }
+        // panic-free: deliberate poison propagation, as at the claim above.
         let mut st = shared.state.lock().unwrap();
         st.active -= 1;
         if st.active == 0 {
@@ -489,6 +523,8 @@ impl Drop for RoundPool {
             self.shared.start.notify_all();
         }
         for h in self.handles.drain(..) {
+            // ok-drop: join error = worker panicked; already surfaced to the
+            // submitting round by `run`, and Drop must not unwind.
             let _ = h.join();
         }
     }

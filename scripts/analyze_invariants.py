@@ -1,0 +1,660 @@
+#!/usr/bin/env python3
+"""Hot-path dataflow analysis — toolchain-free mirror of `palmad-analyze`.
+
+This is a line-for-line semantic mirror of `rust/src/util/analyze.rs`
+(the canonical implementation, run by `scripts/ci.sh --analyze` when
+cargo is available).  Like `lint_invariants.py` it exists so the gate
+runs on machines with no Rust toolchain: rules, designated-file lists,
+and the annotation grammar here must match the Rust module exactly, and
+`--self-test` runs the same fixtures as the Rust unit tests.
+
+Unlike the PR-7 line lint, this analyzer reconstructs per-function
+scopes (brace-aware over comment/string-blanked code) and runs three
+passes over designated modules (full grammar in ANALYSIS.md):
+
+P1 panic-freedom — in functions marked hot (a `// hot-path: <why>`
+   header comment the analyzer discovers), every implicit panic site
+   must be justified:
+
+  p1-index    slice/array indexing `recv[..]` needs a `// panic-free:`
+              note within 12 lines, unless `recv` is a fixed-extent
+              array declared in the same function (param `&[T; N]` or
+              `let x = [init; n]` / `let x: [T; N]`)
+  p1-unwrap   `.unwrap()` / `.expect(` need a note
+  p1-div      `/` or `%` needs a note unless a float literal sits on
+              either side (float division cannot panic) or the divisor
+              is a nonzero integer literal
+  p1-assert   `assert!`-family needs a note (`debug_assert!` is exempt:
+              compiled out of release kernels)
+  p1-panic    `panic!` / `unreachable!` / `todo!` / `unimplemented!`
+              need a note
+
+P2 numeric determinism — in result-bearing modules (core/, engines/,
+   coordinator/), FP op order and iteration order must be pinned:
+
+  p2-hash-iter    iterating a HashMap/HashSet-typed binding needs a
+                  `// order:` note unless the same function sorts
+                  afterwards (`.sort*` on a later line)
+  p2-fma          `mul_add` contracts rounding; needs a `// order:`
+  p2-float-reduce `.sum(` / `.product(` / `.fold(` in a function that
+                  touches a pool needs a `// order:` note
+  p2-float-cast   `as f32` narrows; needs a `// order:` note
+
+P3 result discipline — everywhere in rust/src:
+
+  p3-let-drop    `let _ = ...` needs an `// ok-drop:` reason within
+                 4 lines (or handle the value)
+  p3-ok-discard  statement-position `....ok();` needs an `// ok-drop:`
+
+Cross-cutting:
+
+  note-grammar   a `hot-path:` / `panic-free:` / `order:` / `ok-drop:`
+                 marker with no reason text after the colon is rejected
+  hot-coverage   each file in HOT_FILES must mark at least one
+                 function hot (so deleting markers can't silently
+                 disarm P1)
+
+Test modules are exempt from every rule; rust/tests/ and examples/ are
+not scanned at all (P1–P3 are library-code discipline).
+"""
+
+import os
+import re
+import sys
+
+SCAN_ROOTS = ("rust/src",)
+HOT_FILES = (
+    "rust/src/core/distance.rs",
+    "rust/src/core/stats.rs",
+    "rust/src/engines/scratch.rs",
+    "rust/src/util/pool.rs",
+)
+DETERMINISM_PREFIXES = (
+    "rust/src/core/",
+    "rust/src/engines/",
+    "rust/src/coordinator/",
+)
+PANIC_WINDOW = 12
+ORDER_WINDOW = 8
+OKDROP_WINDOW = 4
+
+FN_RE = re.compile(r"\bfn\s+([A-Za-z_][A-Za-z0-9_]*)")
+INDEX_RE = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)\[|[\)\]]\[")
+FIXED_PARAM_RE = re.compile(
+    r"([A-Za-z_][A-Za-z0-9_]*)\s*:\s*&(?:mut\s+)?\[[^\[\];]*;[^\[\]]*\]"
+)
+FIXED_LET_RE = re.compile(
+    r"\blet\s+(?:mut\s+)?([A-Za-z_][A-Za-z0-9_]*)"
+    r"(?:\s*:\s*\[[^\[\];]*;[^\[\]]*\])?\s*=\s*\["
+)
+UNWRAP_RE = re.compile(r"\.\s*(unwrap\s*\(|expect\s*\()")
+ASSERT_RE = re.compile(r"(?<!debug_)\b(assert|assert_eq|assert_ne)!\s*[(\[]")
+PANIC_RE = re.compile(r"\b(panic|unreachable|todo|unimplemented)!")
+HASH_DECL_RE = re.compile(
+    r"([A-Za-z_][A-Za-z0-9_]*)\s*:\s*&?(?:mut\s+)?(?:[A-Za-z0-9_]+::)*Hash(?:Map|Set)\b"
+)
+HASH_LET_RE = re.compile(
+    r"\blet\s+(?:mut\s+)?([A-Za-z_][A-Za-z0-9_]*)"
+    r"(?:\s*:\s*[^=;]*)?=\s*(?:[A-Za-z0-9_]+::)*Hash(?:Map|Set)\b"
+)
+HASH_ITER_RE = re.compile(
+    r"([A-Za-z_][A-Za-z0-9_]*)\s*\.\s*"
+    r"(iter|iter_mut|values|values_mut|keys|drain|retain|into_iter)\s*\("
+)
+FOR_IN_RE = re.compile(
+    r"\bfor\s+.+?\bin\s+&?(?:mut\s+)?([A-Za-z_][A-Za-z0-9_.]*)"
+)
+FMA_RE = re.compile(r"\.\s*mul_add\s*\(")
+REDUCE_RE = re.compile(r"\.\s*(sum|product|fold)\s*[:(<]")
+F32_CAST_RE = re.compile(r"\bas\s+f32\b")
+LET_DROP_RE = re.compile(r"\blet\s+_\s*=")
+NOTE_RE = re.compile(r"(hot-path|panic-free|order|ok-drop):\s*(\S?)")
+SORT_RE = re.compile(r"\.\s*sort(_unstable)?(_by|_by_key|_unstable_by_key)?\s*\(")
+POOL_RE = re.compile(r"\b[Pp]ool\b")
+FLOAT_LEFT_RE = re.compile(r"(\d\.\d*|\.\d+|\bf(32|64))$")
+FLOAT_RIGHT_RE = re.compile(r"(\d+\.|\.\d+|\d+(_?f(32|64))\b)")
+INT_LIT_RIGHT_RE = re.compile(r"[1-9][0-9_]*")
+
+
+def strip_rust(text):
+    """Split source into (code_lines, comment_lines).
+
+    Identical state machine to lint_invariants.py: code_lines blanks
+    comments and string/char-literal contents (quotes kept); each
+    line's comment text lands in comment_lines.
+    """
+    code, comment = [], []
+    cur_code, cur_comment = [], []
+    i, n = 0, len(text)
+    state = "normal"  # normal | line | block | str | rawstr
+    depth = 0
+    raw_hashes = 0
+
+    def endline():
+        code.append("".join(cur_code))
+        comment.append("".join(cur_comment))
+        cur_code.clear()
+        cur_comment.clear()
+
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            if state == "line":
+                state = "normal"
+            endline()
+            i += 1
+            continue
+        if state == "line":
+            cur_comment.append(c)
+            i += 1
+        elif state == "block":
+            if text.startswith("/*", i):
+                depth += 1
+                cur_comment.append("/*")
+                i += 2
+            elif text.startswith("*/", i):
+                depth -= 1
+                cur_comment.append("*/")
+                i += 2
+                if depth == 0:
+                    state = "normal"
+            else:
+                cur_comment.append(c)
+                i += 1
+        elif state == "str":
+            if c == "\\":
+                i += 2
+            elif c == '"':
+                cur_code.append('"')
+                state = "normal"
+                i += 1
+            else:
+                i += 1
+        elif state == "rawstr":
+            if c == '"' and text[i + 1 : i + 1 + raw_hashes] == "#" * raw_hashes:
+                cur_code.append('"')
+                state = "normal"
+                i += 1 + raw_hashes
+            else:
+                i += 1
+        else:  # normal
+            if text.startswith("//", i):
+                state = "line"
+                cur_comment.append("//")
+                i += 2
+            elif text.startswith("/*", i):
+                state = "block"
+                depth = 1
+                cur_comment.append("/*")
+                i += 2
+            elif c == '"':
+                cur_code.append('"')
+                state = "str"
+                i += 1
+            elif re.match(r'(?:b?r)(#*)"', text[i : i + 8]):
+                m = re.match(r'(?:b?r)(#*)"', text[i : i + 8])
+                raw_hashes = len(m.group(1))
+                cur_code.append('r"')
+                state = "rawstr"
+                i += m.end()
+            elif c == "'":
+                m = re.match(r"'(\\[^']+|[^'\\])'", text[i:])
+                if m:
+                    cur_code.append("''")  # char literal, contents blanked
+                    i += m.end()
+                else:
+                    cur_code.append(c)  # lifetime tick
+                    i += 1
+            else:
+                cur_code.append(c)
+                i += 1
+    endline()
+    return code, comment
+
+
+def test_region_start(code_lines):
+    """First line of the `#[cfg(test)] mod tests` tail, or len(lines)."""
+    for i, line in enumerate(code_lines):
+        if re.match(r"\s*#\[cfg\(test\)\]\s*$", line):
+            for j in range(i + 1, min(i + 4, len(code_lines))):
+                if re.match(r"\s*(pub\s+)?mod\s+tests\b", code_lines[j]):
+                    return i
+    return len(code_lines)
+
+
+def has_comment(comment_lines, upto, window, needles):
+    lo = max(0, upto - window)
+    for line in comment_lines[lo : upto + 1]:
+        if any(n in line for n in needles):
+            return True
+    return False
+
+
+class Fn:
+    """One reconstructed function scope."""
+
+    def __init__(self, name, header):
+        self.name = name
+        self.header = header  # line index of the `fn` keyword
+        self.open = header  # line index of the body `{`
+        self.close = None  # line index of the matching `}`
+        self.hot = False
+        self.fixed = set()  # fixed-extent array bindings
+        self.pooled = False  # body mentions a pool
+
+
+def reconstruct_functions(code, comment):
+    """Brace-aware scope reconstruction.
+
+    Returns (fns, line_fn) where line_fn[i] is the index into fns of
+    the innermost function covering line i, or -1.  A function spans
+    its header line through the line of its closing brace.
+    """
+    fns = []
+    stack = []  # indices of open fns
+    open_depths = []
+    pending = None  # (name, header_line) awaiting its body `{`
+    pend_nest = 0  # () / [] nesting inside the pending signature
+    depth = 0
+    for i, line in enumerate(code):
+        starts = {m.start(): m.group(1) for m in FN_RE.finditer(line)}
+        for j, c in enumerate(line):
+            if j in starts and pending is None:
+                pending = (starts[j], i)
+                pend_nest = 0
+            if pending is not None and c in "([":
+                pend_nest += 1
+            elif pending is not None and c in ")]":
+                pend_nest -= 1
+            elif c == ";" and pending is not None and pend_nest == 0:
+                pending = None  # trait declaration, no body
+            elif c == "{":
+                if pending is not None:
+                    f = Fn(pending[0], pending[1])
+                    f.open = i
+                    fns.append(f)
+                    stack.append(len(fns) - 1)
+                    open_depths.append(depth)
+                    pending = None
+                depth += 1
+            elif c == "}":
+                depth -= 1
+                if stack and open_depths[-1] == depth:
+                    fns[stack[-1]].close = i
+                    stack.pop()
+                    open_depths.pop()
+    for f in fns:
+        if f.close is None:
+            f.close = len(code) - 1
+    line_fn = [-1] * len(code)
+    for idx, f in enumerate(fns):  # later fns are inner: innermost wins
+        for i in range(f.header, f.close + 1):
+            line_fn[i] = idx
+    for f in fns:
+        # Hot marker: in the contiguous comment/attribute block directly
+        # above the header, or trailing on the header line itself.
+        if "hot-path:" in comment[f.header]:
+            f.hot = True
+        k = f.header - 1
+        while k >= 0:
+            has_code = code[k].strip() != "" and not code[k].lstrip().startswith("#[")
+            if comment[k].strip() == "" and has_code:
+                break
+            if comment[k].strip() == "" and code[k].strip() == "":
+                break  # blank line ends the attached block
+            if has_code and comment[k].strip() == "":
+                break
+            if "hot-path:" in comment[k]:
+                f.hot = True
+            if has_code:
+                break  # trailing comment on a code line: last one taken
+            k -= 1
+        body = code[f.header : f.close + 1]
+        for bl in body:
+            for m in FIXED_PARAM_RE.finditer(bl):
+                f.fixed.add(m.group(1))
+            for m in FIXED_LET_RE.finditer(bl):
+                f.fixed.add(m.group(1))
+            if POOL_RE.search(bl):
+                f.pooled = True
+    return fns, line_fn
+
+
+def hash_bindings(code):
+    """File-level set of identifiers declared as HashMap/HashSet."""
+    out = set()
+    for line in code:
+        for m in HASH_DECL_RE.finditer(line):
+            out.add(m.group(1))
+        for m in HASH_LET_RE.finditer(line):
+            out.add(m.group(1))
+    return out
+
+
+def div_exempt(line, pos):
+    """True if the `/` or `%` at pos cannot panic: float division
+    (float literal adjacent) or a nonzero integer-literal divisor."""
+    left = line[:pos].rstrip()
+    right = line[pos + 1 :].lstrip()
+    if FLOAT_LEFT_RE.search(left):
+        return True
+    if FLOAT_RIGHT_RE.match(right):
+        return True
+    if INT_LIT_RIGHT_RE.match(right):
+        return True
+    return False
+
+
+def sorts_later(code, fro, upto):
+    """True if any code line in (fro, upto] calls a .sort* method."""
+    for j in range(fro, upto + 1):
+        if SORT_RE.search(code[j]):
+            return True
+    return False
+
+
+def scan_file(relpath, text):
+    """Analyze one file; returns a list of 'path:line: [rule] msg'."""
+    out = []
+    code, comment = strip_rust(text)
+    relpath = relpath.replace(os.sep, "/")
+    tests_at = test_region_start(code)
+    fns, line_fn = reconstruct_functions(code, comment)
+    hashes = hash_bindings(code[:tests_at])
+    determinism = relpath.startswith(DETERMINISM_PREFIXES)
+
+    if relpath in HOT_FILES and not any(
+        f.hot and f.header < tests_at for f in fns
+    ):
+        out.append(
+            "%s:1: [hot-coverage] file is on the hot-path list but marks "
+            "no function with a `hot-path:` header" % relpath
+        )
+
+    for i, line in enumerate(code):
+        lineno = i + 1
+        if i >= tests_at:
+            break
+
+        # note-grammar: every marker needs reason text after the colon.
+        for m in NOTE_RE.finditer(comment[i]):
+            if not m.group(2):
+                out.append(
+                    "%s:%d: [note-grammar] `%s:` marker with no reason text"
+                    % (relpath, lineno, m.group(1))
+                )
+
+        f = fns[line_fn[i]] if line_fn[i] >= 0 else None
+
+        # --- P1: panic-freedom in hot functions -----------------------
+        if f is not None and f.hot:
+            pf = has_comment(comment, i, PANIC_WINDOW, ("panic-free:",))
+            for m in INDEX_RE.finditer(line):
+                recv = m.group(1)
+                if recv is not None and recv in f.fixed:
+                    continue
+                if not pf:
+                    out.append(
+                        "%s:%d: [p1-index] indexing `%s[..]` in hot fn `%s` "
+                        "without a fixed-extent binding or `// panic-free:` "
+                        "note" % (relpath, lineno, recv or "?", f.name)
+                    )
+                break  # one report per line
+            if UNWRAP_RE.search(line) and not pf:
+                out.append(
+                    "%s:%d: [p1-unwrap] unwrap/expect in hot fn `%s` without "
+                    "a `// panic-free:` note" % (relpath, lineno, f.name)
+                )
+            for m in re.finditer(r"[/%]", line):
+                if not div_exempt(line, m.start()) and not pf:
+                    out.append(
+                        "%s:%d: [p1-div] non-literal `/` or `%%` in hot fn "
+                        "`%s` without a `// panic-free:` note"
+                        % (relpath, lineno, f.name)
+                    )
+                    break
+            if ASSERT_RE.search(line) and not pf:
+                out.append(
+                    "%s:%d: [p1-assert] assert! in hot fn `%s` without a "
+                    "`// panic-free:` note (debug_assert! is exempt)"
+                    % (relpath, lineno, f.name)
+                )
+            if PANIC_RE.search(line) and not pf:
+                out.append(
+                    "%s:%d: [p1-panic] explicit panic path in hot fn `%s` "
+                    "without a `// panic-free:` note" % (relpath, lineno, f.name)
+                )
+
+        # --- P2: numeric determinism in result-bearing modules --------
+        if determinism and f is not None:
+            od = has_comment(comment, i, ORDER_WINDOW, ("order:",))
+            hit = None
+            for m in HASH_ITER_RE.finditer(line):
+                if m.group(1) in hashes:
+                    hit = m.group(1)
+                    break
+            if hit is None:
+                fm = FOR_IN_RE.search(line)
+                if fm and fm.group(1).split(".")[-1] in hashes:
+                    hit = fm.group(1)
+            if hit is not None and not od and not sorts_later(code, i, f.close):
+                out.append(
+                    "%s:%d: [p2-hash-iter] iteration over hash-ordered `%s` "
+                    "in `%s` with no later sort and no `// order:` note"
+                    % (relpath, lineno, hit, f.name)
+                )
+            if FMA_RE.search(line) and not od:
+                out.append(
+                    "%s:%d: [p2-fma] mul_add contracts rounding; needs an "
+                    "`// order:` note" % (relpath, lineno)
+                )
+            if f.pooled and REDUCE_RE.search(line) and not od:
+                out.append(
+                    "%s:%d: [p2-float-reduce] reduction in pool-adjacent fn "
+                    "`%s` needs an `// order:` note" % (relpath, lineno, f.name)
+                )
+            if F32_CAST_RE.search(line) and not od:
+                out.append(
+                    "%s:%d: [p2-float-cast] `as f32` narrows; needs an "
+                    "`// order:` note" % (relpath, lineno)
+                )
+
+        # --- P3: result discipline ------------------------------------
+        okd = has_comment(comment, i, OKDROP_WINDOW, ("ok-drop:",))
+        if LET_DROP_RE.search(line) and not okd:
+            out.append(
+                "%s:%d: [p3-let-drop] `let _ =` without an `// ok-drop:` "
+                "reason (handle the value or justify the drop)"
+                % (relpath, lineno)
+            )
+        stripped = line.strip()
+        if (
+            ".ok();" in stripped
+            and "=" not in stripped
+            and "return" not in stripped
+            and not okd
+        ):
+            out.append(
+                "%s:%d: [p3-ok-discard] statement-position `.ok();` without "
+                "an `// ok-drop:` reason" % (relpath, lineno)
+            )
+    return out
+
+
+def run(root):
+    violations = []
+    for scan_root in SCAN_ROOTS:
+        top = os.path.join(root, scan_root)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames.sort()
+            for fn in sorted(filenames):
+                if not fn.endswith(".rs"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, root)
+                with open(path) as f:
+                    violations.extend(scan_file(rel, f.read()))
+    return violations
+
+
+# --- self-test fixtures: keep in lockstep with the unit tests in
+# --- rust/src/util/analyze.rs (same inputs, same expected rule ids).
+HOT = "// hot-path: fixture kernel.\n"
+FIXTURES = [
+    # P1: the seeded violation — an unguarded index in a hot-path fn.
+    ("rust/src/core/x.rs", HOT + "fn f(t: &[f64], i: usize) -> f64 { t[i] }\n", ["p1-index"]),
+    (
+        "rust/src/core/x.rs",
+        HOT + "fn f(t: &[f64], i: usize) -> f64 {\n"
+        "    // panic-free: caller guarantees i < t.len().\n    t[i]\n}\n",
+        [],
+    ),
+    (
+        "rust/src/core/x.rs",
+        HOT + "fn f(c: &mut [f64; 4]) { c[0] = 1.0; }\n",
+        [],
+    ),
+    (
+        "rust/src/core/x.rs",
+        HOT + "fn f() -> f64 {\n    let acc = [0.0f64; 4];\n    acc[3]\n}\n",
+        [],
+    ),
+    # P1 applies only to hot-marked functions.
+    ("rust/src/core/x.rs", "fn f(t: &[f64], i: usize) -> f64 { t[i] }\n", []),
+    (
+        "rust/src/core/x.rs",
+        HOT + "fn f(r: Option<u8>) -> u8 { r.unwrap() }\n",
+        ["p1-unwrap"],
+    ),
+    (
+        "rust/src/core/x.rs",
+        HOT + "fn f(r: Option<u8>) -> u8 {\n"
+        '    // panic-free: seeded by caller, always Some.\n    r.expect("seeded")\n}\n',
+        [],
+    ),
+    ("rust/src/core/x.rs", HOT + "fn f(a: u64, b: u64) -> u64 { a / b }\n", ["p1-div"]),
+    ("rust/src/core/x.rs", HOT + "fn f(a: usize) -> usize { a / 4 }\n", []),
+    ("rust/src/core/x.rs", HOT + "fn f(s: f64) -> f64 { 1.0 / s }\n", []),
+    (
+        "rust/src/core/x.rs",
+        HOT + "fn f(m: usize) { assert!(m >= 2); }\n",
+        ["p1-assert"],
+    ),
+    ("rust/src/core/x.rs", HOT + "fn f(m: usize) { debug_assert!(m >= 2); }\n", []),
+    (
+        "rust/src/core/x.rs",
+        HOT + 'fn f() { panic!("boom"); }\n',
+        ["p1-panic"],
+    ),
+    # note-grammar: a marker with no reason text is itself rejected.
+    (
+        "rust/src/core/x.rs",
+        "// hot-path:\nfn f() {}\n",
+        ["note-grammar"],
+    ),
+    # hot-coverage: hot-listed files must mark at least one function.
+    ("rust/src/core/stats.rs", "fn f() {}\n", ["hot-coverage"]),
+    # P2: the seeded violation — a HashMap-order-dependent result.
+    (
+        "rust/src/engines/x.rs",
+        "fn f(m: &HashMap<u64, f64>, out: &mut Vec<f64>) {\n"
+        "    for (_k, v) in m.iter() {\n        out.push(*v);\n    }\n}\n",
+        ["p2-hash-iter"],
+    ),
+    (
+        "rust/src/engines/x.rs",
+        "fn f(m: &HashMap<u64, f64>, out: &mut Vec<f64>) {\n"
+        "    for (_k, v) in m.iter() {\n        out.push(*v);\n    }\n"
+        "    out.sort_unstable_by(|a, b| a.total_cmp(b));\n}\n",
+        [],
+    ),
+    (
+        "rust/src/engines/x.rs",
+        "fn f(m: &HashMap<u64, f64>, out: &mut Vec<f64>) {\n"
+        "    // order: gauge aggregation; result is order-insensitive.\n"
+        "    for (_k, v) in m.iter() {\n        out.push(*v);\n    }\n}\n",
+        [],
+    ),
+    (
+        "rust/src/engines/x.rs",
+        "fn f(m: &BTreeMap<u64, f64>, out: &mut Vec<f64>) {\n"
+        "    for (_k, v) in m.iter() {\n        out.push(*v);\n    }\n}\n",
+        [],
+    ),
+    (
+        "rust/src/core/x.rs",
+        "fn f(a: f64, b: f64, c: f64) -> f64 { a.mul_add(b, c) }\n",
+        ["p2-fma"],
+    ),
+    (
+        "rust/src/core/x.rs",
+        "// order: fused once, never mixed with the unfused path.\n"
+        "fn f(a: f64, b: f64, c: f64) -> f64 { a.mul_add(b, c) }\n",
+        [],
+    ),
+    (
+        "rust/src/core/x.rs",
+        "fn f(pool: &RoundPool, xs: &[f64]) -> f64 { xs.iter().sum() }\n",
+        ["p2-float-reduce"],
+    ),
+    ("rust/src/core/x.rs", "fn f(xs: &[f64]) -> f64 { xs.iter().sum() }\n", []),
+    ("rust/src/core/x.rs", "fn f(x: f64) -> f32 { x as f32 }\n", ["p2-float-cast"]),
+    (
+        "rust/src/core/x.rs",
+        "// order: narrowed once at export; consumers compare f32 bits.\n"
+        "fn f(x: f64) -> f32 { x as f32 }\n",
+        [],
+    ),
+    # P2 is scoped to result-bearing modules.
+    ("rust/src/util/x.rs", "fn f(x: f64) -> f32 { x as f32 }\n", []),
+    # P3: the seeded violation — a bare `let _ =` on a Result.
+    (
+        "rust/src/util/x.rs",
+        "fn f() { let _ = std::fs::remove_file(\"x\"); }\n",
+        ["p3-let-drop"],
+    ),
+    (
+        "rust/src/util/x.rs",
+        "fn f() {\n    // ok-drop: best-effort cleanup; missing file is fine.\n"
+        "    let _ = std::fs::remove_file(\"x\");\n}\n",
+        [],
+    ),
+    (
+        "rust/src/util/x.rs",
+        "#[cfg(test)]\nmod tests {\n    fn f() { let _ = std::fs::remove_file(\"x\"); }\n}\n",
+        [],
+    ),
+    (
+        "rust/src/util/x.rs",
+        "fn f(w: &mut impl Write) { w.flush().ok(); }\n",
+        ["p3-ok-discard"],
+    ),
+    ("rust/src/util/x.rs", "fn f(s: &str) { let x = s.parse::<u8>().ok(); }\n", []),
+]
+
+
+def self_test():
+    failed = 0
+    for path, text, want in FIXTURES:
+        got = [v.split("[")[1].split("]")[0] for v in scan_file(path, text)]
+        if got != want:
+            failed += 1
+            print("fixture FAILED: %s\n  want %s\n  got  %s" % (path, want, got))
+            print("  text: %r" % text)
+    print("self-test: %d fixtures, %d failed" % (len(FIXTURES), failed))
+    return failed
+
+
+def main(argv):
+    if "--self-test" in argv:
+        return 1 if self_test() else 0
+    root = argv[1] if len(argv) > 1 else "."
+    violations = run(root)
+    for v in violations:
+        print(v)
+    print("analyze-invariants: %d violation(s)" % len(violations))
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -53,6 +53,21 @@
 #                                # source scan, needs no toolchain
 #                                # (python fallback), and guards the
 #                                # documented invariants directly.
+#   scripts/ci.sh --analyze      # run ONLY the hot-path dataflow
+#                                # analysis (P1 panic-freedom, P2
+#                                # numeric determinism, P3 result
+#                                # discipline — see ANALYSIS.md) and
+#                                # exit.  Also part of EVERY gate
+#                                # (default and --fast), python mirror
+#                                # first (toolchain-free), cargo bin as
+#                                # the fallback.
+#   scripts/ci.sh --no-panic     # link-time panic-freedom proof:
+#                                # release-build rust/no_panic_probe,
+#                                # where reaching a panic from the
+#                                # annotated distance kernels is an
+#                                # undefined-symbol link error.  Needs
+#                                # cargo; skips with a notice when it
+#                                # is absent.
 #   scripts/ci.sh --loom         # model-check the concurrency core:
 #                                # build with RUSTFLAGS="--cfg palmad_loom"
 #                                # (util::loomsync swaps std::sync for the
@@ -94,6 +109,8 @@ KERNEL_MATRIX=0
 SERVICE_SMOKE=0
 CHAOS=0
 LINT_ONLY=0
+ANALYZE_ONLY=0
+NO_PANIC=0
 LOOM=0
 MIRI=0
 SANITIZE=""
@@ -112,6 +129,8 @@ for arg in "$@"; do
     --service-smoke) SERVICE_SMOKE=1 ;;
     --chaos) CHAOS=1 ;;
     --lint-invariants) LINT_ONLY=1 ;;
+    --analyze) ANALYZE_ONLY=1 ;;
+    --no-panic) NO_PANIC=1 ;;
     --loom) LOOM=1 ;;
     --miri) MIRI=1 ;;
     --sanitize) EXPECT_SANITIZER=1 ;;
@@ -147,9 +166,45 @@ run_lint_invariants() {
   fi
 }
 
+# The dataflow analysis joins the lint in every gate: same
+# dual-implementation scheme (scripts/analyze_invariants.py is the
+# toolchain-free mirror of rust/src/util/analyze.rs; `cargo test`
+# independently runs the Rust side over the whole tree via
+# util::analyze::tests::whole_tree_is_clean).
+run_analyze_invariants() {
+  echo "== analyze-invariants (hot-path P1/P2/P3 dataflow analysis) =="
+  if command -v python3 >/dev/null 2>&1; then
+    python3 scripts/analyze_invariants.py .
+  elif command -v cargo >/dev/null 2>&1; then
+    cargo run -q --bin palmad-analyze -- .
+  else
+    echo "analyze-invariants: neither python3 nor cargo available" >&2
+    exit 1
+  fi
+}
+
 if [ "$LINT_ONLY" -eq 1 ]; then
   run_lint_invariants
   echo "CI invariant-lint gate passed."
+  exit 0
+fi
+
+if [ "$ANALYZE_ONLY" -eq 1 ]; then
+  run_analyze_invariants
+  echo "CI dataflow-analysis gate passed."
+  exit 0
+fi
+
+if [ "$NO_PANIC" -eq 1 ]; then
+  if ! command -v cargo >/dev/null 2>&1; then
+    echo "no-panic: cargo unavailable — skipping link-time proof (notice, not failure)"
+    exit 0
+  fi
+  echo "== no-panic probe (link-time proof over the distance kernels) =="
+  # A surviving panic path in any probed kernel is an undefined-symbol
+  # link error (PANIC_REACHABLE_IN_<kernel>); see rust/no_panic_probe.
+  (cd rust/no_panic_probe && cargo build --release)
+  echo "no-panic: all probed kernels link panic-free."
   exit 0
 fi
 
@@ -201,6 +256,7 @@ if [ -n "$SANITIZE" ]; then
 fi
 
 run_lint_invariants
+run_analyze_invariants
 
 echo "== cargo fmt --check =="
 cargo fmt --all --check
