@@ -1,0 +1,328 @@
+//! Serving-path load generator: drives the evented front end with a
+//! flooding tenant plus three weighted tenants, once under the flat
+//! round-robin scheduler (the PR-5 baseline) and once under weighted
+//! fair queueing, and writes the comparison to `BENCH_service.json`.
+//!
+//! ```bash
+//! cargo run --release --example service_loadgen            # writes BENCH_service.json
+//! cargo run --release --example service_loadgen -- out.json
+//! ```
+//!
+//! Per scenario it reports:
+//! - p50/p99 job completion latency (submit → DONE over the wire),
+//!   overall and for the weighted ("paid") tenants alone — the number
+//!   weighted fairness exists to protect;
+//! - a Jain fairness index over per-tenant weighted step shares
+//!   (`x_i = steps_i / weight_i`), sampled mid-run while every tenant
+//!   still has queued work (at the end of the run everyone's work is
+//!   done and every policy looks "fair");
+//! - admission-control counters from a deliberate burst over
+//!   `max_queued` (`rejected` must be non-zero — `scripts/ci.sh
+//!   --service-smoke` asserts it).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+use palmad::coordinator::config::EngineOptions;
+use palmad::coordinator::queue::SchedPolicy;
+use palmad::coordinator::service::{Service, ServiceConfig};
+
+/// (tenant, weight, jobs): one low-weight tenant floods the queue; the
+/// high-weight tenants submit a handful of jobs each and should not sit
+/// behind the flood.
+const TENANTS: &[(&str, u32, usize)] = &[
+    ("flood", 1, 32),
+    ("paid-a", 4, 4),
+    ("paid-b", 4, 4),
+    ("paid-c", 4, 4),
+];
+const MIN_L: usize = 16;
+const MAX_L: usize = 31; // 16 sweep steps per job
+const N: usize = 800;
+/// Queue bound for the admission burst (phase 2); generous enough that
+/// phase 1's 44 jobs are never rejected.
+const MAX_QUEUED: usize = 64;
+const BURST: usize = 200;
+
+struct Client {
+    conn: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        let conn = TcpStream::connect(addr).context("connect")?;
+        let reader = BufReader::new(conn.try_clone()?);
+        Ok(Self { conn, reader })
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(line.trim().to_string())
+    }
+
+    fn send(&mut self, req: &str) -> Result<String> {
+        writeln!(self.conn, "{req}")?;
+        self.read_line()
+    }
+}
+
+struct JobTrack {
+    id: u64,
+    tenant: &'static str,
+    submitted: Instant,
+    latency: Option<Duration>,
+}
+
+struct Scenario {
+    policy: &'static str,
+    p50_ms: f64,
+    p99_ms: f64,
+    paid_p50_ms: f64,
+    paid_p99_ms: f64,
+    fairness_jain: f64,
+    shares: Vec<(String, u32, u64)>,
+    rejected: u64,
+    budget_exhausted: u64,
+    batched_rounds: u64,
+    wall_ms: f64,
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted_ms.len() as f64 - 1.0) * p).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Jain fairness index over weighted shares `x_i = steps_i / weight_i`:
+/// `J = (Σx)² / (n·Σx²)`, 1.0 = perfectly weight-proportional.
+fn jain(shares: &[(String, u32, u64)]) -> f64 {
+    let xs: Vec<f64> =
+        shares.iter().map(|(_, w, s)| *s as f64 / (*w).max(1) as f64).collect();
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+    if sumsq == 0.0 {
+        return f64::NAN;
+    }
+    (sum * sum) / (n * sumsq)
+}
+
+fn run_scenario(policy: SchedPolicy, label: &'static str) -> Result<Scenario> {
+    let svc = Arc::new(Service::start_with(ServiceConfig {
+        engine_opts: EngineOptions { segn: 64, ..Default::default() },
+        workers: 2,
+        sched_policy: policy,
+        max_queued: MAX_QUEUED,
+        ..Default::default()
+    })?);
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let svc_srv = Arc::clone(&svc);
+    let reactor = std::thread::spawn(move || {
+        palmad::coordinator::frontend::serve_listener(&svc_srv, listener)
+    });
+    let mut c = Client::connect(addr)?;
+    let started = Instant::now();
+
+    // ---- Phase 1: the contended workload (flood first, then paid).
+    let mut jobs: Vec<JobTrack> = Vec::new();
+    for &(tenant, weight, count) in TENANTS {
+        for j in 0..count {
+            let req = format!(
+                "RUN gen=ecg2 n={N} minl={MIN_L} maxl={MAX_L} topk=1 seed={} \
+                 tenant={tenant} weight={weight}",
+                j as u64 + 1
+            );
+            let resp = c.send(&req)?;
+            ensure!(resp.starts_with("OK JOB "), "{req:?} -> {resp:?}");
+            let id = resp.rsplit(' ').next().unwrap_or("").parse()?;
+            jobs.push(JobTrack { id, tenant, submitted: Instant::now(), latency: None });
+        }
+    }
+
+    // Mid-run share snapshot: once a quarter of the expected steps have
+    // run, every tenant still has queued work, so the per-weight shares
+    // reflect the scheduler's choices rather than the workload totals.
+    let total_jobs = jobs.len();
+    let expected_steps = (total_jobs * (MAX_L - MIN_L + 1)) as u64;
+    let mut snapshot: Option<Vec<(String, u32, u64)>> = None;
+
+    let mut done = 0usize;
+    while done < total_jobs {
+        if snapshot.is_none() && svc.sched_metrics().steps >= expected_steps / 4 {
+            snapshot = Some(
+                svc.tenant_shares()
+                    .into_iter()
+                    .map(|s| (s.name, s.weight, s.steps))
+                    .collect(),
+            );
+        }
+        let mut progressed = false;
+        for job in jobs.iter_mut().filter(|j| j.latency.is_none()) {
+            let resp = c.send(&format!("STATUS {}", job.id))?;
+            if resp.starts_with("OK DONE") {
+                loop {
+                    if c.read_line()? == "END" {
+                        break;
+                    }
+                }
+                job.latency = Some(job.submitted.elapsed());
+                done += 1;
+                progressed = true;
+            } else if resp.starts_with("OK FAILED") || resp.starts_with("OK CANCELLED") {
+                bail!("job {} ({}) ended abnormally: {resp}", job.id, job.tenant);
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let wall_ms = started.elapsed().as_secs_f64() * 1e3;
+    let shares = snapshot.unwrap_or_else(|| {
+        svc.tenant_shares().into_iter().map(|s| (s.name, s.weight, s.steps)).collect()
+    });
+
+    // ---- Phase 2: admission burst.  Fire BURST tiny submissions
+    // without polling; everything past the queue bound answers
+    // `ERR BUSY retry_after=...`.
+    let mut busy = 0usize;
+    for j in 0..BURST {
+        let resp = c.send(&format!(
+            "RUN gen=ecg2 n=400 minl=16 maxl=17 topk=1 seed={} tenant=burst",
+            j as u64 + 1
+        ))?;
+        if resp.starts_with("ERR BUSY") {
+            busy += 1;
+            ensure!(resp.contains("retry_after="), "BUSY without retry hint: {resp}");
+        } else {
+            ensure!(resp.starts_with("OK JOB "), "{resp:?}");
+        }
+    }
+    ensure!(busy > 0, "burst of {BURST} over max_queued={MAX_QUEUED} must trip ERR BUSY");
+
+    let m = svc.sched_metrics();
+    let bye = c.send("SHUTDOWN")?;
+    ensure!(bye == "OK BYE", "{bye:?}");
+    match reactor.join() {
+        Ok(r) => r?,
+        Err(_) => bail!("reactor thread panicked"),
+    }
+
+    let mut all: Vec<f64> = jobs
+        .iter()
+        .filter_map(|j| j.latency)
+        .map(|d| d.as_secs_f64() * 1e3)
+        .collect();
+    all.sort_by(|a, b| a.total_cmp(b));
+    let mut paid: Vec<f64> = jobs
+        .iter()
+        .filter(|j| j.tenant.starts_with("paid"))
+        .filter_map(|j| j.latency)
+        .map(|d| d.as_secs_f64() * 1e3)
+        .collect();
+    paid.sort_by(|a, b| a.total_cmp(b));
+
+    Ok(Scenario {
+        policy: label,
+        p50_ms: percentile(&all, 0.50),
+        p99_ms: percentile(&all, 0.99),
+        paid_p50_ms: percentile(&paid, 0.50),
+        paid_p99_ms: percentile(&paid, 0.99),
+        fairness_jain: jain(&shares),
+        shares,
+        rejected: m.rejected,
+        budget_exhausted: m.budget_exhausted,
+        batched_rounds: m.batched_rounds,
+        wall_ms,
+    })
+}
+
+fn scenario_json(s: &Scenario) -> String {
+    let shares: Vec<String> = s
+        .shares
+        .iter()
+        .map(|(n, w, st)| format!("{{\"tenant\": {n:?}, \"weight\": {w}, \"steps\": {st}}}"))
+        .collect();
+    format!(
+        "{{\n    \"policy\": {:?},\n    \"p50_ms\": {:.2},\n    \"p99_ms\": {:.2},\n    \
+         \"paid_p50_ms\": {:.2},\n    \"paid_p99_ms\": {:.2},\n    \
+         \"fairness_jain\": {:.4},\n    \"rejected\": {},\n    \
+         \"budget_exhausted\": {},\n    \"batched_rounds\": {},\n    \
+         \"wall_ms\": {:.1},\n    \"mid_run_shares\": [{}]\n  }}",
+        s.policy,
+        s.p50_ms,
+        s.p99_ms,
+        s.paid_p50_ms,
+        s.paid_p99_ms,
+        s.fairness_jain,
+        s.rejected,
+        s.budget_exhausted,
+        s.batched_rounds,
+        s.wall_ms,
+        shares.join(", ")
+    )
+}
+
+fn main() -> Result<()> {
+    let out = std::env::args().nth(1).unwrap_or_else(|| "BENCH_service.json".into());
+
+    println!("== baseline: flat round-robin");
+    let before = run_scenario(SchedPolicy::RoundRobin, "round_robin")?;
+    println!(
+        "   p50 {:.1}ms p99 {:.1}ms | paid p99 {:.1}ms | jain {:.3} | rejected {}",
+        before.p50_ms, before.p99_ms, before.paid_p99_ms, before.fairness_jain, before.rejected
+    );
+
+    println!("== weighted fair queueing");
+    let after = run_scenario(SchedPolicy::WeightedFair, "weighted_fair")?;
+    println!(
+        "   p50 {:.1}ms p99 {:.1}ms | paid p99 {:.1}ms | jain {:.3} | rejected {} | \
+         budget_exhausted {} | batched_rounds {}",
+        after.p50_ms,
+        after.p99_ms,
+        after.paid_p99_ms,
+        after.fairness_jain,
+        after.rejected,
+        after.budget_exhausted,
+        after.batched_rounds
+    );
+
+    ensure!(
+        after.fairness_jain >= before.fairness_jain - 0.05,
+        "weighted fairness regressed: {:.3} -> {:.3}",
+        before.fairness_jain,
+        after.fairness_jain
+    );
+    ensure!(after.budget_exhausted > 0, "DRR budgets never rotated — weights inert?");
+
+    let json = format!(
+        "{{\n  \"bench\": \"service_loadgen\",\n  \"workload\": {{\n    \
+         \"tenants\": [{}],\n    \"steps_per_job\": {},\n    \"n\": {},\n    \
+         \"max_queued\": {},\n    \"burst\": {},\n    \"workers\": 2\n  }},\n  \
+         \"before\": {},\n  \"after\": {}\n}}\n",
+        TENANTS
+            .iter()
+            .map(|(n, w, c)| format!("{{\"tenant\": {n:?}, \"weight\": {w}, \"jobs\": {c}}}"))
+            .collect::<Vec<_>>()
+            .join(", "),
+        MAX_L - MIN_L + 1,
+        N,
+        MAX_QUEUED,
+        BURST,
+        scenario_json(&before),
+        scenario_json(&after)
+    );
+    std::fs::write(&out, json)?;
+    println!("wrote {out}");
+    println!("service_loadgen OK");
+    Ok(())
+}

@@ -34,7 +34,11 @@ use crate::engines::SeedRowSnapshot;
 use crate::util::binio::{seal, unseal, ByteReader, ByteWriter};
 
 const JOB_MAGIC: &[u8; 8] = b"PALMJOB\0";
-const JOB_VERSION: u32 = 1;
+/// v2 appends the scheduling identity (`tenant`, `weight`) after the
+/// seed rows.  v1 files (pre-weighted-fair deployments) still decode —
+/// they come back with an empty tenant and weight 0, which the service
+/// maps to the default tenant/weight at resume.
+const JOB_VERSION: u32 = 2;
 
 /// Everything needed to reconstruct a parked job after a crash.
 #[derive(Clone, Debug, PartialEq)]
@@ -60,6 +64,13 @@ pub struct JobCheckpoint {
     /// checkpointed step (i.e. already advanced/prefetched to the next
     /// length), so the resumed engine replays verbatim-hit seeding.
     pub seed_rows: Vec<SeedRowSnapshot>,
+    /// Scheduling identity (v2): the tenant name the job was submitted
+    /// under.  Empty on v1 files; the service substitutes its default
+    /// tenant at resume.
+    pub tenant: String,
+    /// Scheduling weight (v2).  0 on v1 files (= "use the configured
+    /// default"), matching `JobSpec::weight` semantics.
+    pub weight: u32,
 }
 
 impl JobCheckpoint {
@@ -89,11 +100,24 @@ impl JobCheckpoint {
             w.put_usize(r.m);
             w.put_f64s(&r.qt);
         }
+        // v2 fields go last so a v1 decoder (which calls finish())
+        // rejects v2 files loudly instead of misparsing them.
+        w.put_str(&self.tenant);
+        w.put_u64(self.weight as u64);
         seal(JOB_MAGIC, JOB_VERSION, w.bytes())
     }
 
     pub fn decode(bytes: &[u8]) -> Result<Self> {
-        let payload = unseal(JOB_MAGIC, JOB_VERSION, bytes)?;
+        // `unseal` is exact-version, so try current-then-v1.  On a file
+        // that is neither (corruption, or a future version), surface the
+        // current-version error — it names the actual on-disk version.
+        let (payload, ver) = match unseal(JOB_MAGIC, JOB_VERSION, bytes) {
+            Ok(p) => (p, JOB_VERSION),
+            Err(e) => match unseal(JOB_MAGIC, 1, bytes) {
+                Ok(p) => (p, 1),
+                Err(_) => return Err(e),
+            },
+        };
         let mut r = ByteReader::new(payload);
         let job_id = r.get_u64()?;
         let dataset = r.get_str()?;
@@ -120,6 +144,15 @@ impl JobCheckpoint {
             let qt = r.get_f64s()?;
             seed_rows.push(SeedRowSnapshot { a, cs, m, qt });
         }
+        let (tenant, weight) = if ver >= 2 {
+            let tenant = r.get_str()?;
+            let w = r.get_u64()?;
+            let weight = u32::try_from(w)
+                .map_err(|_| anyhow::anyhow!("checkpoint weight {w} overflows u32"))?;
+            (tenant, weight)
+        } else {
+            (String::new(), 0)
+        };
         r.finish()?;
         let ckpt = Self {
             job_id,
@@ -133,6 +166,8 @@ impl JobCheckpoint {
             series,
             sweep,
             seed_rows,
+            tenant,
+            weight,
         };
         if ckpt.dataset.is_empty() && ckpt.series.is_none() {
             bail!("checkpoint for job {job_id} names no series source");
@@ -267,7 +302,40 @@ mod tests {
                 SeedRowSnapshot { a: 0, cs: 64, m: 16, qt: vec![1.5, -0.0, f64::NAN] },
                 SeedRowSnapshot { a: 128, cs: 0, m: 16, qt: vec![2.25] },
             ],
+            tenant: "acme".into(),
+            weight: 3,
         }
+    }
+
+    /// Re-encode a checkpoint exactly as the v1 codec did: same field
+    /// order, no tenant/weight, sealed with version 1.
+    fn encode_v1(ckpt: &JobCheckpoint) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(ckpt.job_id);
+        w.put_str(&ckpt.dataset);
+        w.put_opt_u64(ckpt.n);
+        w.put_u64(ckpt.seed);
+        w.put_u64(ckpt.min_l);
+        w.put_u64(ckpt.max_l);
+        w.put_u64(ckpt.top_k);
+        w.put_opt_u64(ckpt.deadline_ms);
+        match &ckpt.series {
+            Some((name, values)) => {
+                w.put_bool(true);
+                w.put_str(name);
+                w.put_f64s(values);
+            }
+            None => w.put_bool(false),
+        }
+        w.put_bytes(&ckpt.sweep);
+        w.put_usize(ckpt.seed_rows.len());
+        for r in &ckpt.seed_rows {
+            w.put_usize(r.a);
+            w.put_usize(r.cs);
+            w.put_usize(r.m);
+            w.put_f64s(&r.qt);
+        }
+        seal(JOB_MAGIC, 1, w.bytes())
     }
 
     #[test]
@@ -283,6 +351,7 @@ mod tests {
             (7, 16, 20, 1, Some(5_000))
         );
         assert_eq!(back.sweep, vec![1, 2, 3, 4, 5]);
+        assert_eq!((back.tenant.as_str(), back.weight), ("acme", 3));
         assert_eq!(back.seed_rows.len(), 2);
         for (a, b) in ckpt.seed_rows.iter().zip(&back.seed_rows) {
             assert_eq!((a.a, a.cs, a.m), (b.a, b.cs, b.m));
@@ -317,6 +386,33 @@ mod tests {
         }
         let orphan = JobCheckpoint { dataset: String::new(), series: None, ..sample(2) };
         assert!(JobCheckpoint::decode(&orphan.encode()).is_err());
+    }
+
+    /// v1 files written before the weighted-fair scheduler must keep
+    /// loading: tenant comes back empty and weight 0 (the service maps
+    /// both to its defaults at resume).  A file that is neither v1 nor
+    /// v2 is rejected with the *actual* on-disk version in the error.
+    #[test]
+    fn v1_checkpoints_still_decode() {
+        let ckpt = sample(21);
+        let v1 = encode_v1(&ckpt);
+        let back = JobCheckpoint::decode(&v1).unwrap();
+        assert_eq!(back.job_id, 21);
+        assert_eq!(back.tenant, "", "v1 carries no tenant");
+        assert_eq!(back.weight, 0, "v1 weight means 'use the default'");
+        assert_eq!(back.sweep, ckpt.sweep, "shared fields decode as before");
+
+        // Trailing-byte discipline still holds per version: a v1
+        // payload sealed as v2 is short, a v2 payload sealed as v1 has
+        // trailing bytes — both must be rejected, not misread.
+        let v2_payload = unseal(JOB_MAGIC, 2, &ckpt.encode()).unwrap().to_vec();
+        assert!(JobCheckpoint::decode(&seal(JOB_MAGIC, 1, &v2_payload)).is_err());
+        let v1_payload = unseal(JOB_MAGIC, 1, &v1).unwrap().to_vec();
+        assert!(JobCheckpoint::decode(&seal(JOB_MAGIC, 2, &v1_payload)).is_err());
+
+        let future = seal(JOB_MAGIC, 9, &v2_payload);
+        let err = format!("{:#}", JobCheckpoint::decode(&future).unwrap_err());
+        assert!(err.contains("version 9"), "error names the on-disk version: {err}");
     }
 
     #[test]

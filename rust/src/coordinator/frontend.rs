@@ -1,0 +1,310 @@
+//! Evented serving front end: one reactor thread multiplexes every
+//! client connection over non-blocking sockets.
+//!
+//! The PR-5 front end spawned a thread per connection and spun each on
+//! a 500 ms read timeout; N idle clients cost N threads and N wakeups
+//! per half-second, which caps connection counts long before the
+//! engines saturate.  The reactor inverts that: the listener and every
+//! accepted stream are switched to non-blocking mode, and a single
+//! thread runs a level-triggered scan loop — accept burst, per-
+//! connection flush/read/process, then an *adaptive* idle sleep (500µs
+//! doubling to 5ms) only when a full scan made no progress.  N idle
+//! connections therefore cost N registered sockets and one mostly-
+//! sleeping thread (`idle_connections_share_one_thread` in
+//! `rust/tests/frontend_service.rs` pins the thread count).
+//!
+//! Why a scan loop and not epoll/kqueue: `coordinator/` is
+//! `#![forbid(unsafe_code)]` and the container offers no safe poll
+//! binding, so the portable scan is the baseline; its cost is O(conns)
+//! per wakeup with zero syscalls per *idle* connection beyond the
+//! non-blocking `read`.  The loop structure (accept → drive conns →
+//! sleep-if-idle) is exactly the shape an epoll readiness list would
+//! feed, so swapping one in later is a local change to `serve_listener`
+//! — nothing in the protocol layer knows how readiness is discovered.
+//!
+//! Protocol execution is shared with the blocking path:
+//! [`Service::execute_line`] produces either a complete reply or a
+//! [`DataIngest`] state machine, and this module only shuttles bytes —
+//! so both front ends speak byte-for-byte the same protocol.
+//!
+//! Admission: beyond [`ServiceConfig::max_conns`] open connections,
+//! new arrivals get a best-effort `ERR BUSY retry_after=<ms>` and are
+//! closed immediately (counted in `wfq(rejected)=`).
+//!
+//! [`ServiceConfig::max_conns`]: super::service::ServiceConfig::max_conns
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::service::{DataIngest, LineOutcome, Service};
+
+/// Bytes pulled per non-blocking read.
+const READ_CHUNK: usize = 16 * 1024;
+/// A request line (not DATA values) longer than this is a protocol
+/// error: reply ERR and drop the connection rather than buffer
+/// unboundedly.
+const MAX_LINE: usize = 64 * 1024;
+/// In DATA mode, a partial line this long is fed to the ingester at a
+/// whitespace boundary instead of waiting for the newline, so a
+/// single-line multi-megabyte upload never accumulates in `inbuf`.
+const DATA_FEED_THRESHOLD: usize = 64 * 1024;
+/// Adaptive idle sleep: a scan that made progress resets to the
+/// minimum; consecutive idle scans double toward the maximum.
+const IDLE_SLEEP_MIN: Duration = Duration::from_micros(500);
+const IDLE_SLEEP_MAX: Duration = Duration::from_millis(5);
+
+struct Conn {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    /// Mid-upload state machine (DATA verb).
+    data: Option<DataIngest>,
+    /// Flush `outbuf`, then close (BUSY reject, oversized line, or
+    /// service shutdown).
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Self { stream, inbuf: Vec::new(), outbuf: Vec::new(), data: None, closing: false }
+    }
+}
+
+/// What one scan pass over a connection concluded.
+enum ConnScan {
+    /// Keep the connection registered.
+    Keep { progressed: bool },
+    /// Unregister (EOF, I/O error, or `closing` with an empty outbuf).
+    Drop,
+    /// The connection requested SHUTDOWN (its `OK BYE` is flushed).
+    Shutdown,
+}
+
+/// Run the reactor over an already-bound listener until a SHUTDOWN
+/// request (or [`Service::stop_listener`]) arrives, then drain the
+/// scheduler via [`Service::shutdown`].  Used by [`Service::serve`];
+/// tests bind their own ephemeral listener and call this directly.
+pub fn serve_listener(svc: &Service, listener: TcpListener) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut idle_sleep = IDLE_SLEEP_MIN;
+    let mut scratch = vec![0u8; READ_CHUNK];
+    let mut shutdown_requested = false;
+    'reactor: loop {
+        let mut progressed = false;
+        // ---- Accept burst: take everything pending, then move on.
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    progressed = true;
+                    if stream.set_nonblocking(true).is_err() {
+                        continue; // socket died between accept and here
+                    }
+                    if !svc.conn_opened() {
+                        // Over max_conns: 429-equivalent, then close.
+                        // ok-drop: best-effort courtesy on a socket we are
+                        // dropping either way.
+                        let _ = write!(
+                            &stream,
+                            "ERR BUSY retry_after={} (too many connections)\n",
+                            svc.retry_after_ms()
+                        );
+                        continue;
+                    }
+                    crate::log_debug!("frontend: accepted {peer}");
+                    conns.push(Conn::new(stream));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // A transient accept failure (EMFILE under load)
+                    // must not kill the serving loop.
+                    crate::log_warn!("frontend: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+        // ---- Drive every connection: flush, read, process.
+        let mut i = 0;
+        while i < conns.len() {
+            match drive_conn(svc, &mut conns[i], &mut scratch) {
+                ConnScan::Keep { progressed: p } => {
+                    progressed |= p;
+                    i += 1;
+                }
+                ConnScan::Drop => {
+                    conns.swap_remove(i);
+                    svc.conn_closed();
+                    progressed = true;
+                }
+                ConnScan::Shutdown => {
+                    conns.swap_remove(i);
+                    svc.conn_closed();
+                    shutdown_requested = true;
+                    break 'reactor;
+                }
+            }
+        }
+        if svc.listener_stopped() {
+            break;
+        }
+        // ---- Adaptive idle backoff: busy scans spin (sub-millisecond
+        // latency under load), quiet ones sleep up to IDLE_SLEEP_MAX.
+        if progressed {
+            idle_sleep = IDLE_SLEEP_MIN;
+        } else {
+            std::thread::sleep(idle_sleep);
+            idle_sleep = (idle_sleep * 2).min(IDLE_SLEEP_MAX);
+        }
+    }
+    // ---- Teardown: stop accepting, drain the scheduler, and give the
+    // surviving connections a best-effort goodbye flush.
+    svc.stop_listener();
+    if shutdown_requested {
+        svc.shutdown();
+    }
+    for conn in &mut conns {
+        if !conn.outbuf.is_empty() {
+            // ok-drop: closing flush; the peer may already be gone.
+            let _ = conn.stream.write_all(&conn.outbuf);
+        }
+        svc.conn_closed();
+    }
+    Ok(())
+}
+
+/// One scan pass over a single connection: flush pending output, pull
+/// whatever bytes are ready, process complete lines.
+fn drive_conn(svc: &Service, conn: &mut Conn, scratch: &mut [u8]) -> ConnScan {
+    let mut progressed = false;
+    // ---- Flush.
+    while !conn.outbuf.is_empty() {
+        match conn.stream.write(&conn.outbuf) {
+            Ok(0) => return ConnScan::Drop,
+            Ok(n) => {
+                conn.outbuf.drain(..n);
+                progressed = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return ConnScan::Drop,
+        }
+    }
+    if conn.closing {
+        return if conn.outbuf.is_empty() { ConnScan::Drop } else { ConnScan::Keep { progressed } };
+    }
+    // ---- Read.
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                // EOF: anything already buffered still gets processed
+                // below (the reply flushes on the next scan if the peer
+                // only half-closed); a fully gone peer drops then.
+                conn.closing = true;
+                progressed = true;
+                break;
+            }
+            Ok(n) => {
+                conn.inbuf.extend_from_slice(&scratch[..n]);
+                progressed = true;
+                // Keep scanning fair under a fire-hose client: one
+                // chunk per scan pass is plenty (the loop comes right
+                // back while progress holds).
+                break;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return ConnScan::Drop,
+        }
+    }
+    // ---- Process complete lines (and, in DATA mode, whitespace-
+    // bounded partial chunks, so single-line bulk uploads never pool
+    // up in inbuf).
+    loop {
+        // DATA ingestion first: value lines are not commands.
+        if let Some(ing) = conn.data.as_mut() {
+            let Some(feed_end) = data_feed_end(&conn.inbuf) else { break };
+            let chunk: Vec<u8> = conn.inbuf.drain(..feed_end).collect();
+            let text = String::from_utf8_lossy(&chunk);
+            if ing.feed_line(&text) {
+                let reply = ing.finish(svc);
+                conn.outbuf.extend_from_slice(reply.as_bytes());
+                conn.data = None;
+            }
+            progressed = true;
+            continue;
+        }
+        let Some(pos) = conn.inbuf.iter().position(|&b| b == b'\n') else {
+            if conn.inbuf.len() > MAX_LINE {
+                conn.outbuf.extend_from_slice(b"ERR request line too long\n");
+                conn.closing = true;
+            }
+            break;
+        };
+        let line: Vec<u8> = conn.inbuf.drain(..=pos).collect();
+        let text = String::from_utf8_lossy(&line);
+        let req = text.trim();
+        if req.is_empty() {
+            continue;
+        }
+        progressed = true;
+        crate::log_debug!("frontend request: {req}");
+        match svc.execute_line(req) {
+            LineOutcome::Reply(reply) => conn.outbuf.extend_from_slice(reply.as_bytes()),
+            LineOutcome::BeginData(ing) => conn.data = Some(ing),
+            LineOutcome::Shutdown(reply) => {
+                // Flush the goodbye synchronously (bounded by the
+                // socket buffer; the peer asked and is reading).
+                conn.outbuf.extend_from_slice(reply.as_bytes());
+                // ok-drop: if the peer vanished mid-goodbye the
+                // shutdown proceeds regardless.
+                let _ = conn.stream.set_nonblocking(false);
+                let _ = conn.stream.write_all(&conn.outbuf);
+                conn.outbuf.clear();
+                return ConnScan::Shutdown;
+            }
+        }
+    }
+    if conn.closing && conn.outbuf.is_empty() {
+        return ConnScan::Drop;
+    }
+    ConnScan::Keep { progressed }
+}
+
+/// How many leading bytes of `inbuf` can be fed to the DATA ingester:
+/// up to and including a newline, or — for an oversized partial line —
+/// up to the last whitespace (a number token is never split).  `None`
+/// means wait for more bytes.
+fn data_feed_end(inbuf: &[u8]) -> Option<usize> {
+    if let Some(pos) = inbuf.iter().position(|&b| b == b'\n') {
+        return Some(pos + 1);
+    }
+    if inbuf.len() >= DATA_FEED_THRESHOLD {
+        if let Some(ws) = inbuf.iter().rposition(|b| b.is_ascii_whitespace()) {
+            return Some(ws + 1);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_feed_end_respects_token_boundaries() {
+        assert_eq!(data_feed_end(b"1.5 2.5\n"), Some(8));
+        assert_eq!(data_feed_end(b"1.5 2.5"), None, "short partial line waits");
+        // Oversized partial line: feed to the last whitespace.
+        let mut big = b"1.5 ".repeat(DATA_FEED_THRESHOLD / 4 + 1);
+        big.extend_from_slice(b"17.25");
+        let end = data_feed_end(&big).expect("oversized chunk must feed");
+        assert_eq!(&big[end..], b"17.25", "the split token stays buffered");
+        // A single giant token has no safe split point.
+        let giant = vec![b'7'; DATA_FEED_THRESHOLD + 16];
+        assert_eq!(data_feed_end(&giant), None);
+    }
+}

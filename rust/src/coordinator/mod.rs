@@ -15,9 +15,11 @@ pub mod checkpoint;
 pub mod config;
 pub mod distributed;
 pub mod drag;
+pub mod frontend;
 pub mod lease;
 pub mod merlin;
 pub mod metrics;
+pub mod queue;
 pub mod segmentation;
 pub mod service;
 pub mod streaming;

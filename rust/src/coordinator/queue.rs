@@ -1,0 +1,428 @@
+//! Weighted-fair run queue for the step scheduler: deficit round robin
+//! (DRR) over per-tenant job FIFOs.
+//!
+//! The PR-5 scheduler round-robined a flat `VecDeque<u64>` of job ids,
+//! which is fair *per job*: a tenant that submits 50 jobs gets 50 times
+//! the step throughput of a tenant that submits one.  `RunQueue`
+//! schedules *tenants* instead: each tenant owns a FIFO of queued job
+//! ids and a configured weight, and the scheduler serves tenants from a
+//! round-robin ring, letting each serve up to `weight` steps per visit
+//! (every "packet" costs exactly one step, so the classic DRR quantum
+//! degenerates to the weight itself — no fractional deficit carry is
+//! needed).  Over any backlogged window, tenant step shares converge to
+//! the weight ratio regardless of how many jobs each tenant queues.
+//!
+//! The legacy flat policy survives as [`SchedPolicy::RoundRobin`] — the
+//! measurable baseline for `examples/service_loadgen.rs`, exactly like
+//! `TilePipeline::Legacy` and `StreamConfig::legacy_slide` before it.
+//!
+//! `RunQueue` is plain data: the service guards it with the same run
+//! queue mutex + condvar protocol that the loom model
+//! `service_shutdown_no_lost_wakeup` explores, so nothing here touches
+//! an atomic or lock.  The tenant registry keeps a `HashMap` strictly
+//! for name lookup; every iteration that feeds scheduling decisions or
+//! metrics walks the registration-ordered `Vec` (numeric-determinism
+//! discipline, ANALYSIS.md P2).
+
+use std::collections::{HashMap, VecDeque};
+
+/// Which run-queue policy the scheduler uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Flat per-job round robin — the PR-5 behavior, kept as the
+    /// measurable fairness baseline.
+    RoundRobin,
+    /// Deficit round robin over tenants with per-tenant step budgets.
+    #[default]
+    WeightedFair,
+}
+
+/// One queued step claim: a job id plus scheduling metadata that must
+/// be readable under the queue lock alone (the jobs table has its own
+/// mutex, and the worker claims jobs *after* popping — taking both
+/// locks here would invert the jobs→queue order used at park time).
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    id: u64,
+    tenant: usize,
+    /// Small enough (known series length under the configured bound)
+    /// to ride along in a cross-tenant batched engine round.
+    small: bool,
+}
+
+struct Tenant {
+    name: String,
+    weight: u32,
+    jobs: VecDeque<Entry>,
+    /// Steps handed out to this tenant (pops, including batched
+    /// ride-alongs) — the fairness observable.
+    steps: u64,
+    /// True while the tenant sits in the `active` ring or is the
+    /// current server (invariant: exactly then).
+    enlisted: bool,
+}
+
+/// A tenant's public scheduling stats (`Service::tenant_shares`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantShare {
+    pub name: String,
+    pub weight: u32,
+    /// Steps scheduled so far.
+    pub steps: u64,
+    /// Jobs currently queued (not claimed by a worker).
+    pub queued: usize,
+}
+
+/// Deficit-round-robin run queue (module docs).
+pub struct RunQueue {
+    policy: SchedPolicy,
+    tenants: Vec<Tenant>,
+    /// Name → index lookup only; never iterated (ANALYSIS.md P2).
+    by_name: HashMap<String, usize>,
+    /// Ring of enlisted tenants awaiting their serving turn.
+    active: VecDeque<usize>,
+    /// Tenant currently being served, with its remaining step budget.
+    current: Option<usize>,
+    budget: u64,
+    /// Flat FIFO for the legacy [`SchedPolicy::RoundRobin`] policy.
+    flat: VecDeque<Entry>,
+    len: usize,
+    /// Times a tenant's budget ran dry with work still queued (the
+    /// `wfq(budget_exhausted)=` gauge: weights actively shaping order).
+    budget_exhausted: u64,
+}
+
+impl RunQueue {
+    pub fn new(policy: SchedPolicy) -> Self {
+        Self {
+            policy,
+            tenants: Vec::new(),
+            by_name: HashMap::new(),
+            active: VecDeque::new(),
+            current: None,
+            budget: 0,
+            flat: VecDeque::new(),
+            len: 0,
+            budget_exhausted: 0,
+        }
+    }
+
+    /// Register (or re-weigh) a tenant; returns its stable index.  The
+    /// latest submitted weight wins — weights are a client knob, not an
+    /// immutable contract, and re-registration is how a tenant adjusts
+    /// its share mid-stream.  Callers enforce any tenant-count cap
+    /// *before* registering (admission control owns rejection).
+    pub fn register(&mut self, name: &str, weight: u32) -> usize {
+        let weight = weight.max(1);
+        if let Some(&idx) = self.by_name.get(name) {
+            self.tenants[idx].weight = weight;
+            return idx;
+        }
+        let idx = self.tenants.len();
+        self.tenants.push(Tenant {
+            name: name.to_string(),
+            weight,
+            jobs: VecDeque::new(),
+            steps: 0,
+            enlisted: false,
+        });
+        self.by_name.insert(name.to_string(), idx);
+        idx
+    }
+
+    /// Look up a tenant without registering it.
+    pub fn lookup(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Queue a step claim for `tenant`.  Used by submission, resume,
+    /// and the worker's park-requeue (requeues bypass admission — a
+    /// parked job was already admitted).
+    pub fn push(&mut self, tenant: usize, id: u64, small: bool) {
+        debug_assert!(tenant < self.tenants.len(), "push for an unregistered tenant");
+        let Some(t) = self.tenants.get_mut(tenant) else { return };
+        let entry = Entry { id, tenant, small };
+        self.len += 1;
+        if self.policy == SchedPolicy::RoundRobin {
+            self.flat.push_back(entry);
+            return;
+        }
+        t.jobs.push_back(entry);
+        if !t.enlisted {
+            t.enlisted = true;
+            self.active.push_back(tenant);
+        }
+    }
+
+    /// Dequeue the next step claim under the active policy.
+    pub fn pop(&mut self) -> Option<u64> {
+        if self.policy == SchedPolicy::RoundRobin {
+            let e = self.flat.pop_front()?;
+            self.len -= 1;
+            self.tenants[e.tenant].steps += 1;
+            return Some(e.id);
+        }
+        loop {
+            let t = match self.current {
+                Some(t) => t,
+                None => {
+                    let t = self.active.pop_front()?;
+                    self.current = Some(t);
+                    self.budget = u64::from(self.tenants[t].weight.max(1));
+                    t
+                }
+            };
+            let tenant = &mut self.tenants[t];
+            if tenant.jobs.is_empty() {
+                // Drained (possibly by a batched ride-along): the
+                // tenant leaves the ring until its next push.
+                tenant.enlisted = false;
+                self.current = None;
+                continue;
+            }
+            if self.budget == 0 {
+                // Budget spent with work left: rotate to the back of
+                // the ring so the next tenant gets its turn.
+                self.active.push_back(t);
+                self.budget_exhausted += 1;
+                self.current = None;
+                continue;
+            }
+            let e = tenant.jobs.pop_front().expect("non-empty checked above");
+            tenant.steps += 1;
+            self.budget -= 1;
+            self.len -= 1;
+            return Some(e.id);
+        }
+    }
+
+    /// Dequeue one *small* step claim from a tenant other than the
+    /// current server, to ride along in a batched engine round (one
+    /// lease checkout serving several small tenants back to back).
+    ///
+    /// The ride-along is not charged against anyone's budget: the
+    /// shared round costs the lease pool a single checkout either way,
+    /// and the scan only ever takes a queue head, so per-tenant FIFO
+    /// order is preserved.  Returns `None` under the legacy policy
+    /// (batching is a weighted-fair feature) or when no other tenant's
+    /// head entry is small.
+    pub fn pop_small_extra(&mut self) -> Option<u64> {
+        if self.policy == SchedPolicy::RoundRobin {
+            return None;
+        }
+        // Scan the ring in serving order; `remove(pos)` keeps the ring
+        // order of everyone else intact.
+        let pos = (0..self.active.len()).find(|&p| {
+            let t = self.active[p];
+            self.tenants[t].jobs.front().is_some_and(|e| e.small)
+        })?;
+        let t = self.active[pos];
+        let tenant = &mut self.tenants[t];
+        let e = tenant.jobs.pop_front().expect("scan found a head entry");
+        tenant.steps += 1;
+        self.len -= 1;
+        if tenant.jobs.is_empty() {
+            tenant.enlisted = false;
+            self.active.remove(pos);
+        }
+        Some(e.id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn budget_exhausted(&self) -> u64 {
+        self.budget_exhausted
+    }
+
+    /// Drop every queued claim (shutdown drain).  Tenant identities,
+    /// weights, and step counters survive — only pending work clears.
+    pub fn clear(&mut self) {
+        self.flat.clear();
+        self.active.clear();
+        self.current = None;
+        self.budget = 0;
+        self.len = 0;
+        for t in &mut self.tenants {
+            t.jobs.clear();
+            t.enlisted = false;
+        }
+    }
+
+    /// Per-tenant scheduling stats in registration order (stable and
+    /// deterministic — never HashMap order).
+    pub fn shares(&self) -> Vec<TenantShare> {
+        self.tenants
+            .iter()
+            .map(|t| TenantShare {
+                name: t.name.clone(),
+                weight: t.weight,
+                steps: t.steps,
+                queued: t.jobs.len(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut RunQueue, k: usize) -> Vec<u64> {
+        (0..k).filter_map(|_| q.pop()).collect()
+    }
+
+    /// With every tenant backlogged, DRR serves exactly `weight` steps
+    /// per visit: A(w=3), B(w=1) interleave as A A A B A A A B ...
+    #[test]
+    fn drr_interleaves_by_weight() {
+        let mut q = RunQueue::new(SchedPolicy::WeightedFair);
+        let a = q.register("a", 3);
+        let b = q.register("b", 1);
+        for i in 0..6 {
+            q.push(a, 100 + i, false);
+            q.push(b, 200 + i, false);
+        }
+        let order = drain(&mut q, 8);
+        assert_eq!(order, vec![100, 101, 102, 200, 103, 104, 105, 201]);
+        assert_eq!(q.len(), 4, "four of B's entries remain");
+        assert!(q.budget_exhausted() >= 2, "A rotated out with work left twice");
+    }
+
+    /// Step shares track configured weights exactly over whole rounds,
+    /// and well within the 10% fairness tolerance mid-round.
+    #[test]
+    fn drr_shares_match_weights() {
+        let mut q = RunQueue::new(SchedPolicy::WeightedFair);
+        let ids = [q.register("w4", 4), q.register("w2", 2), q.register("w1", 1)];
+        for k in 0..70 {
+            for (t, idx) in ids.iter().enumerate() {
+                q.push(*idx, (t as u64) * 1000 + k, false);
+            }
+        }
+        let _ = drain(&mut q, 70);
+        let shares = q.shares();
+        let steps: Vec<u64> = shares.iter().map(|s| s.steps).collect();
+        let total: u64 = steps.iter().sum();
+        assert_eq!(total, 70);
+        for (s, w) in steps.iter().zip([4.0f64, 2.0, 1.0]) {
+            let got = *s as f64 / total as f64;
+            let want = w / 7.0;
+            assert!(
+                (got - want).abs() <= 0.10 * want,
+                "share {got:.3} deviates more than 10% from {want:.3} (steps {steps:?})"
+            );
+        }
+    }
+
+    /// A lone 1-weight tenant cannot be starved by a heavy tenant with
+    /// a deep backlog: its single job is served within one full round.
+    #[test]
+    fn light_tenant_is_served_within_one_round() {
+        let mut q = RunQueue::new(SchedPolicy::WeightedFair);
+        let heavy = q.register("heavy", 8);
+        let light = q.register("light", 1);
+        for i in 0..100 {
+            q.push(heavy, i, false);
+        }
+        q.push(light, 999, false);
+        let order = drain(&mut q, 10);
+        assert!(
+            order.contains(&999),
+            "light tenant must be served within heavy's first quantum + 1 ({order:?})"
+        );
+    }
+
+    /// The legacy policy preserves flat FIFO order regardless of
+    /// weights, and still attributes steps to tenants.
+    #[test]
+    fn round_robin_policy_is_flat_fifo() {
+        let mut q = RunQueue::new(SchedPolicy::RoundRobin);
+        let a = q.register("a", 50);
+        let b = q.register("b", 1);
+        q.push(a, 1, false);
+        q.push(b, 2, false);
+        q.push(a, 3, false);
+        assert_eq!(drain(&mut q, 3), vec![1, 2, 3]);
+        assert_eq!(q.pop(), None);
+        let shares = q.shares();
+        assert_eq!((shares[0].steps, shares[1].steps), (2, 1));
+        assert_eq!(q.pop_small_extra(), None, "batching is a weighted-fair feature");
+    }
+
+    /// An emptied tenant leaves the ring and re-enlists on push; ids
+    /// are never duplicated or dropped.
+    #[test]
+    fn tenants_leave_and_rejoin_the_ring() {
+        let mut q = RunQueue::new(SchedPolicy::WeightedFair);
+        let a = q.register("a", 2);
+        q.push(a, 1, false);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+        q.push(a, 2, false);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    /// Re-registering a tenant updates its weight in place.
+    #[test]
+    fn reregistration_updates_weight() {
+        let mut q = RunQueue::new(SchedPolicy::WeightedFair);
+        let a = q.register("a", 1);
+        assert_eq!(q.register("a", 5), a);
+        assert_eq!(q.tenant_count(), 1);
+        assert_eq!(q.shares()[0].weight, 5);
+        assert_eq!(q.lookup("a"), Some(a));
+        assert_eq!(q.lookup("missing"), None);
+    }
+
+    /// `pop_small_extra` takes only small queue heads from tenants
+    /// other than the current server, preserving per-tenant FIFO.
+    #[test]
+    fn small_extras_ride_along_from_other_tenants() {
+        let mut q = RunQueue::new(SchedPolicy::WeightedFair);
+        let a = q.register("a", 1);
+        let b = q.register("b", 1);
+        let c = q.register("c", 1);
+        q.push(a, 10, true);
+        q.push(b, 20, false); // big head: not batchable
+        q.push(b, 21, true); //  ... even with a small entry behind it
+        q.push(c, 30, true);
+        let first = q.pop().expect("primary claim");
+        assert_eq!(first, 10, "ring order: tenant a is served first");
+        // a is drained; b's head is big; c's head is small.
+        assert_eq!(q.pop_small_extra(), Some(30));
+        assert_eq!(q.pop_small_extra(), None, "no other small head exists");
+        assert_eq!(drain(&mut q, 2), vec![20, 21]);
+        assert!(q.is_empty());
+        let steps: Vec<u64> = q.shares().iter().map(|s| s.steps).collect();
+        assert_eq!(steps, vec![1, 2, 1]);
+    }
+
+    /// Clearing drops queued work but keeps tenants and counters.
+    #[test]
+    fn clear_drops_work_keeps_identity() {
+        let mut q = RunQueue::new(SchedPolicy::WeightedFair);
+        let a = q.register("a", 2);
+        q.push(a, 1, false);
+        q.push(a, 2, false);
+        assert_eq!(q.pop(), Some(1));
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.tenant_count(), 1);
+        assert_eq!(q.shares()[0].steps, 1);
+        q.push(a, 3, false);
+        assert_eq!(q.pop(), Some(3), "the ring re-forms after a clear");
+    }
+}

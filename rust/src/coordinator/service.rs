@@ -3,23 +3,39 @@
 //!
 //! The pre-scheduler service ran whole jobs to completion on dedicated
 //! per-worker engines, so one 10M-point sweep head-of-line-blocked every
-//! small request behind it.  The scheduler instead keeps a round-robin
-//! run queue of *job ids* and a fixed worker pool that pulls **steps**:
-//! a worker claims a job, checks an engine/workspace pair out of the
-//! shared [`EnginePool`] (keyed by job id, so a job's seed cache and
-//! arenas come back warm — see `coordinator/lease.rs`), advances the
-//! job's sweep by exactly one length, and requeues it at the back.
-//! Small jobs therefore complete while large ones are still sweeping
-//! (fairness is integration-tested), cancellation and deadlines take
+//! small request behind it.  The scheduler instead keeps a weighted-fair
+//! run queue of *job ids* ([`RunQueue`]: deficit round robin over
+//! per-tenant FIFOs, the PR-5 flat round robin surviving as the
+//! [`SchedPolicy::RoundRobin`] baseline) and a fixed worker pool that
+//! pulls **steps**: a worker claims a job, checks an engine/workspace
+//! pair out of the shared [`EnginePool`] (keyed by job id, so a job's
+//! seed cache and arenas come back warm — see `coordinator/lease.rs`),
+//! advances the job's sweep by exactly one length, and requeues it at
+//! the back of its tenant's FIFO.  Small jobs therefore complete while
+//! large ones are still sweeping, a heavy tenant cannot starve light
+//! ones (both are integration-tested), cancellation and deadlines take
 //! effect at step granularity, and steady-state zero allocation holds
 //! across interleaved tenants (`rust/tests/alloc_steady_state.rs`).
+//! When several tenants queue *small* jobs, one worker round steps up
+//! to [`ServiceConfig::batch_max`] of them through a single engine
+//! lease (cross-tenant tile batching — `wfq(batched_rounds)=`).
+//!
+//! Admission is bounded everywhere: the run queue, job table, tenant
+//! registry, and (in `coordinator/frontend.rs`) the connection count
+//! all have caps, and crossing one yields a 429-style
+//! `ERR BUSY retry_after=<ms>` instead of unbounded growth.
 //!
 //! Protocol (one request per line, responses `OK ...` / `ERR ...`):
 //!
 //! ```text
 //! RUN gen=<dataset>|data=<upload> [n=<len>] [seed=<u64>] minl=<m> maxl=<m>
-//!     [topk=<k>] [deadline=<ms>]
+//!     [topk=<k>] [deadline=<ms>] [tenant=<name>] [weight=<w>]
 //!   -> OK JOB <id>          (parameters are validated at parse time)
+//!   -> ERR BUSY retry_after=<ms>  (run queue / job table / tenant
+//!      registry at capacity — back off `retry_after` ms and resubmit)
+//!   `tenant=` names the fair-share principal (default "default");
+//!   `weight=` (1..=max_tenant_weight) sets its step share relative to
+//!   other tenants — the latest submitted weight wins.
 //! DATA name=<key> n=<count>
 //!     ... then <count> whitespace-separated f64 values on following lines
 //!   -> OK DATA <key> n=<count>
@@ -38,10 +54,16 @@
 //!   -> OK METRICS jobs= done= failed= cancelled= discords= table=
 //!      uploads= sched(steps/preempts/leases)=s/p/l lease(sticky/rebinds)=x/y
 //!      faults(retries/panics)=r/p ckpt(saved/resumed)=c/u
-//!      ckpt_rm_errs=e
+//!      ckpt_rm_errs=e wfq(rejected/budget_exhausted/batched_rounds)=r/b/n
 //! SHUTDOWN -> OK BYE (drains the scheduler: in-flight steps finish,
 //!             queued jobs fail with "shutdown", workers are joined)
 //! ```
+//!
+//! [`Service::serve`] drives connections through the evented front end
+//! in `coordinator/frontend.rs` (non-blocking sockets, one reactor
+//! thread, no per-connection threads); [`Service::handle_conn_public`]
+//! keeps the blocking one-thread-per-connection path for embedders
+//! that run their own accept loop.
 //!
 //! Robustness (see `rust/tests/chaos_faults.rs`):
 //!
@@ -58,15 +80,20 @@
 //!   backoff ([`ServiceConfig::step_retries`]); every service mutex is
 //!   acquired through a poison-recovering helper (`util::sync`), so a
 //!   panicking worker can never wedge the job table or run queue.
+//! - **Housekeeping**: a dedicated heartbeat thread runs TTL eviction
+//!   (including the kept-on-Failed checkpoints of evicted jobs) and
+//!   deadline reaping every [`ServiceConfig::housekeep_interval`], so a
+//!   quiescent service still converges — expiry does not wait for the
+//!   next request or worker dequeue.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use crate::util::loomsync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::loomsync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use crate::util::loomsync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Result};
@@ -74,12 +101,16 @@ use anyhow::{anyhow, bail, Result};
 use super::checkpoint::{CheckpointStore, JobCheckpoint};
 use super::config::EngineOptions;
 use super::drag::Discord;
-use super::lease::{EnginePool, PoolCounters};
+use super::lease::{EnginePool, Lease, PoolCounters};
 use super::merlin::{MerlinConfig, MerlinSweep, SweepStatus};
+use super::queue::{RunQueue, SchedPolicy, TenantShare};
 use crate::core::series::TimeSeries;
 use crate::engines::SeedRowSnapshot;
 use crate::gen::registry;
-use crate::util::sync::{lock_recover, wait_recover};
+use crate::util::sync::{lock_recover, wait_recover, wait_timeout_recover};
+
+/// Tenant name used when a submission does not set one.
+pub const DEFAULT_TENANT: &str = "default";
 
 /// Scheduler + protocol limits (see [`Service::start_with`]).
 #[derive(Clone, Debug)]
@@ -108,6 +139,37 @@ pub struct ServiceConfig {
     pub step_retries: usize,
     /// Base backoff between step retries (attempt k sleeps k * this).
     pub step_retry_backoff: Duration,
+    /// Run-queue policy ([`SchedPolicy::WeightedFair`] by default;
+    /// `RoundRobin` is the PR-5 flat baseline for benchmarks).
+    pub sched_policy: SchedPolicy,
+    /// Weight for submissions that do not set one (min 1).
+    pub default_tenant_weight: u32,
+    /// Largest accepted `weight=`; higher asks are rejected at parse.
+    pub max_tenant_weight: u32,
+    /// Queued step claims admitted before `RUN`/`submit` answers
+    /// `ERR BUSY` (0 = unbounded, the legacy behavior).
+    pub max_queued: usize,
+    /// Job-table entries (any state) admitted before `ERR BUSY`
+    /// (0 = unbounded).  TTL eviction frees capacity.
+    pub max_jobs: usize,
+    /// Distinct tenants admitted before `ERR BUSY` (0 = unbounded).
+    pub max_tenants: usize,
+    /// Concurrent connections the evented front end accepts before
+    /// answering `ERR BUSY` and closing (0 = unbounded).
+    pub max_conns: usize,
+    /// Back-off hint carried in `ERR BUSY retry_after=<ms>`.
+    pub retry_after: Duration,
+    /// Heartbeat period for the housekeeper thread (TTL eviction +
+    /// deadline reaping on a quiescent service).
+    pub housekeep_interval: Duration,
+    /// Jobs stepped per engine round: 1 disables batching; k > 1 lets
+    /// up to k-1 *small* jobs from other tenants ride along on one
+    /// lease checkout (their seed caches rebind — cheap for small
+    /// series, and it amortizes pool traffic under many-tenant load).
+    pub batch_max: usize,
+    /// A job is "small" (batchable) when its series length is known at
+    /// submit time and at most this many points.
+    pub batch_small_points: usize,
 }
 
 impl Default for ServiceConfig {
@@ -124,6 +186,17 @@ impl Default for ServiceConfig {
             checkpoint_every: 4,
             step_retries: 2,
             step_retry_backoff: Duration::from_millis(10),
+            sched_policy: SchedPolicy::WeightedFair,
+            default_tenant_weight: 1,
+            max_tenant_weight: 64,
+            max_queued: 1024,
+            max_jobs: 4096,
+            max_tenants: 256,
+            max_conns: 1024,
+            retry_after: Duration::from_millis(100),
+            housekeep_interval: Duration::from_millis(200),
+            batch_max: 4,
+            batch_small_points: 100_000,
         }
     }
 }
@@ -143,6 +216,12 @@ pub struct JobSpec {
     /// Wall-clock budget from submission; exceeding it between steps
     /// fails the job with "deadline exceeded".
     pub deadline: Option<Duration>,
+    /// Fair-share principal ([`DEFAULT_TENANT`] when empty).
+    pub tenant: String,
+    /// Step share relative to other tenants (0 = use
+    /// [`ServiceConfig::default_tenant_weight`]; the latest submitted
+    /// weight for a tenant wins).
+    pub weight: u32,
 }
 
 impl Default for JobSpec {
@@ -156,6 +235,8 @@ impl Default for JobSpec {
             top_k: 1,
             series: None,
             deadline: None,
+            tenant: String::new(),
+            weight: 0,
         }
     }
 }
@@ -194,6 +275,11 @@ struct Job {
     /// Seed-cache rows from a checkpoint, imported into the leased
     /// engine on this job's next step (resume path only).
     pending_seed_rows: Option<Vec<SeedRowSnapshot>>,
+    /// Index into the run queue's tenant registry (set at admission).
+    tenant: usize,
+    /// Batchable: series length known at submit time and within
+    /// [`ServiceConfig::batch_small_points`].
+    small: bool,
 }
 
 #[derive(Default)]
@@ -210,6 +296,8 @@ struct Counters {
     checkpoints: AtomicU64,
     resumes: AtomicU64,
     ckpt_remove_errs: AtomicU64,
+    rejected: AtomicU64,
+    batched_rounds: AtomicU64,
 }
 
 /// Scheduler observability snapshot (the `sched(...)=` metrics line).
@@ -233,14 +321,24 @@ pub struct SchedMetrics {
     /// Checkpoint deletions that failed with a real I/O error (the file
     /// survives and will resurrect its job at next boot).
     pub ckpt_remove_errs: u64,
+    /// Admission rejections answered with `ERR BUSY`: submissions over
+    /// the queue/job-table/tenant bounds, and connections over
+    /// [`ServiceConfig::max_conns`].
+    pub rejected: u64,
+    /// Times a tenant's step budget ran dry with work still queued —
+    /// evidence the configured weights are actively shaping order.
+    pub budget_exhausted: u64,
+    /// Engine rounds that stepped more than one job on a single lease
+    /// checkout (cross-tenant tile batching).
+    pub batched_rounds: u64,
     /// Lease-pool traffic.
     pub lease: PoolCounters,
 }
 
-struct Inner {
+pub(crate) struct Inner {
     cfg: ServiceConfig,
-    /// Round-robin run queue of job ids (guarded with `cv`).
-    queue: Mutex<VecDeque<u64>>,
+    /// Weighted-fair run queue of job ids (guarded with `cv`).
+    queue: Mutex<RunQueue>,
     jobs: Mutex<HashMap<u64, Job>>,
     cv: Condvar,
     counters: Counters,
@@ -251,6 +349,14 @@ struct Inner {
     uploads: Mutex<HashMap<String, Arc<TimeSeries>>>,
     /// Durable job checkpoints (None = checkpointing off).
     store: Option<CheckpointStore>,
+    /// Housekeeper parking lot: flag = shutdown requested.  The flag is
+    /// stored/read under `hk` with the notify inside the critical
+    /// section (the PR-7 lost-wakeup discipline, same as `stop`/`cv`).
+    hk: Mutex<bool>,
+    hk_cv: Condvar,
+    /// Connections currently open in the evented front end (gauge, and
+    /// the connection-cap check in `frontend.rs`).
+    pub(crate) open_conns: AtomicUsize,
 }
 
 /// The job service handle.
@@ -277,9 +383,10 @@ impl Service {
             Some(dir) => Some(CheckpointStore::new(dir.clone())?),
             None => None,
         };
+        let policy = cfg.sched_policy;
         let inner = Arc::new(Inner {
             cfg,
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(RunQueue::new(policy)),
             jobs: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
             counters: Counters::default(),
@@ -289,6 +396,9 @@ impl Service {
             pool,
             uploads: Mutex::new(HashMap::new()),
             store,
+            hk: Mutex::new(false),
+            hk_cv: Condvar::new(),
+            open_conns: AtomicUsize::new(0),
         });
         // Resume before the workers exist: no lock contention, and the
         // first worker to start finds the recovered queue ready.
@@ -310,18 +420,72 @@ impl Service {
                     .map_err(|e| anyhow!("spawn worker: {e}"))?,
             );
         }
+        // The housekeeper heartbeat: TTL eviction + deadline reaping on
+        // a fixed cadence, so a quiescent service (zero traffic, idle
+        // workers) still expires jobs (satellite bugfix — previously
+        // eviction only ran piggybacked on submit/METRICS).
+        {
+            let inner = Arc::clone(&inner);
+            handles.push(
+                std::thread::Builder::new()
+                    .name("palmad-housekeeper".into())
+                    .spawn(move || housekeeper_main(inner))
+                    .map_err(|e| anyhow!("spawn housekeeper: {e}"))?,
+            );
+        }
         Ok(Self { inner, workers: Mutex::new(handles) })
     }
 
-    /// Submit a job; returns its id.  Submission also runs a TTL sweep
-    /// over the job table so terminal entries cannot pile up under
-    /// churn.
-    pub fn submit(&self, spec: JobSpec) -> u64 {
+    /// Submit a job; returns its id, or an admission-control error
+    /// (`BUSY retry_after=<ms>`) when the run queue, job table, or
+    /// tenant registry is at capacity.  Submission also runs a TTL
+    /// sweep over the job table so terminal entries cannot pile up
+    /// between housekeeper heartbeats.
+    ///
+    /// A submission racing `shutdown()` returns `Ok(id)` with the job
+    /// already `Failed("shutdown")`: the stop flag is checked *under
+    /// the queue lock* (the same lock `shutdown` holds while setting
+    /// it — PR-7 lost-wakeup discipline), so the job either reaches
+    /// the queue before the drain clears it, or never reaches it and
+    /// is failed here.  Either way `wait` terminates.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
         self.evict_expired();
+        let cfg = &self.inner.cfg;
+        let busy = |why: &str| {
+            self.inner.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow!("BUSY retry_after={} ({why})", cfg.retry_after.as_millis())
+        };
+        let tenant_name =
+            if spec.tenant.is_empty() { DEFAULT_TENANT } else { spec.tenant.as_str() };
+        let weight = if spec.weight == 0 {
+            cfg.default_tenant_weight.max(1)
+        } else {
+            spec.weight.min(cfg.max_tenant_weight.max(1))
+        };
+        let known_n = spec.series.as_ref().map(|s| s.len()).or(spec.n);
+        let small = known_n.is_some_and(|n| n <= cfg.batch_small_points);
+        // ---- Admission gate under the queue lock: bounded queue and
+        // tenant registry.  Registration happens here too, so the
+        // tenant index is known before the job is published.  (The
+        // queue lock is never held across the jobs lock — the worker's
+        // park path nests jobs→queue, and nesting queue→jobs here
+        // would be a classic ABBA deadlock.)
+        let tenant = {
+            let mut q = lock_recover(&self.inner.queue);
+            if cfg.max_queued > 0 && q.len() >= cfg.max_queued {
+                return Err(busy("run queue full"));
+            }
+            if cfg.max_tenants > 0
+                && q.lookup(tenant_name).is_none()
+                && q.tenant_count() >= cfg.max_tenants
+            {
+                return Err(busy("tenant registry full"));
+            }
+            q.register(tenant_name, weight)
+        };
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        self.inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
         let total = spec.max_l.saturating_sub(spec.min_l) + 1;
-        let mut job = Job {
+        let job = Job {
             deadline_at: spec.deadline.map(|d| Instant::now() + d),
             series: spec.series.clone(),
             spec,
@@ -332,22 +496,38 @@ impl Service {
             finished_at: None,
             progress: (0, total),
             pending_seed_rows: None,
+            tenant,
+            small,
         };
-        // A submission racing (or following) shutdown would sit Queued
-        // forever — no worker will ever run it.  Fail it up front so
-        // `wait` terminates and the drain invariant holds.
-        if self.inner.stop.load(Ordering::Acquire) {
-            finalize(&mut job, JobState::Failed("shutdown".into()), &self.inner.counters);
-            lock_recover(&self.inner.jobs).insert(id, job);
-            return id;
+        // ---- Job-table gate + publish.  The job must be in the table
+        // before its id is queued: a worker that pops an id without a
+        // table entry drops it as forgotten.
+        {
+            let mut jobs = lock_recover(&self.inner.jobs);
+            if cfg.max_jobs > 0 && jobs.len() >= cfg.max_jobs {
+                return Err(busy("job table full"));
+            }
+            jobs.insert(id, job);
         }
-        lock_recover(&self.inner.jobs).insert(id, job);
-        lock_recover(&self.inner.queue).push_back(id);
-        self.inner.cv.notify_one();
-        // Close the race with a concurrent shutdown(): if stop was set
-        // after the check above, the drain pass may already have run
-        // without seeing this job — fail it here instead.
-        if self.inner.stop.load(Ordering::Acquire) {
+        self.inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        // ---- Enqueue, with the stop flag checked under the queue
+        // lock.  `shutdown()` sets `stop` while holding this mutex and
+        // clears the queue afterwards, so exactly one of two serialized
+        // orders happens: (a) we enqueue first and the drain fails the
+        // job, or (b) we observe `stop` and fail it ourselves.  The
+        // pre-PR-9 check-outside-the-lock left a third order where the
+        // job stayed Queued forever (loom: `service_submit_vs_shutdown`).
+        let stopped = {
+            let mut q = lock_recover(&self.inner.queue);
+            if self.inner.stop.load(Ordering::Acquire) {
+                true
+            } else {
+                q.push(tenant, id, small);
+                self.inner.cv.notify_one();
+                false
+            }
+        };
+        if stopped {
             let mut jobs = lock_recover(&self.inner.jobs);
             if let Some(job) = jobs.get_mut(&id) {
                 if !job.state.is_terminal() {
@@ -355,12 +535,27 @@ impl Service {
                 }
             }
         }
-        id
+        Ok(id)
     }
 
     /// Current state of a job.
+    ///
+    /// A queued job whose deadline has already passed is reaped *here*
+    /// (satellite bugfix): under a saturated queue no worker may
+    /// dequeue it for a long time, and `STATUS`/`wait` must not report
+    /// a deadline-dead job as `QUEUED` in the meantime.  Stepping jobs
+    /// are left alone — the worker owns their transition and observes
+    /// the deadline at the step boundary.
     pub fn status(&self, id: u64) -> Option<JobState> {
-        lock_recover(&self.inner.jobs).get(&id).map(|j| j.state.clone())
+        let mut jobs = lock_recover(&self.inner.jobs);
+        let job = jobs.get_mut(&id)?;
+        if !job.state.is_terminal()
+            && !job.stepping
+            && job.deadline_at.is_some_and(|d| Instant::now() > d)
+        {
+            finalize(job, JobState::Failed("deadline exceeded".into()), &self.inner.counters);
+        }
+        Some(job.state.clone())
     }
 
     /// (lengths completed, lengths total) for a job.
@@ -425,14 +620,11 @@ impl Service {
         }
     }
 
-    /// Drop terminal jobs older than [`ServiceConfig::job_ttl`].
+    /// Drop terminal jobs older than [`ServiceConfig::job_ttl`], along
+    /// with their checkpoints.  Runs on every submit and METRICS, and
+    /// from the housekeeper heartbeat.
     pub fn evict_expired(&self) {
-        let ttl = self.inner.cfg.job_ttl;
-        let now = Instant::now();
-        lock_recover(&self.inner.jobs).retain(|_, j| match j.finished_at {
-            Some(t) => now.duration_since(t) < ttl,
-            None => true,
-        });
+        evict_expired_inner(&self.inner);
     }
 
     /// Jobs currently in the table (any state).
@@ -498,8 +690,58 @@ impl Service {
             checkpoints: c.checkpoints.load(Ordering::Relaxed),
             resumes: c.resumes.load(Ordering::Relaxed),
             ckpt_remove_errs: c.ckpt_remove_errs.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
+            budget_exhausted: lock_recover(&self.inner.queue).budget_exhausted(),
+            batched_rounds: c.batched_rounds.load(Ordering::Relaxed),
             lease: self.inner.pool.counters(),
         }
+    }
+
+    /// Per-tenant scheduling stats (registration order): name, weight,
+    /// steps served, jobs queued.  The fairness observable for the
+    /// load generator and the weighted-share tests.
+    pub fn tenant_shares(&self) -> Vec<TenantShare> {
+        lock_recover(&self.inner.queue).shares()
+    }
+
+    /// Connections currently open in the evented front end.
+    pub fn open_conns(&self) -> usize {
+        self.inner.open_conns.load(Ordering::Relaxed)
+    }
+
+    /// Frontend admission: register a new connection against
+    /// [`ServiceConfig::max_conns`].  `false` means at capacity — the
+    /// caller replies `ERR BUSY` and closes (counted in `rejected`).
+    pub(crate) fn conn_opened(&self) -> bool {
+        let max = self.inner.cfg.max_conns;
+        let prev = self.inner.open_conns.fetch_add(1, Ordering::Relaxed);
+        if max > 0 && prev >= max {
+            self.inner.open_conns.fetch_sub(1, Ordering::Relaxed);
+            self.inner.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Frontend bookkeeping: a connection admitted by
+    /// [`Self::conn_opened`] has closed.
+    pub(crate) fn conn_closed(&self) {
+        self.inner.open_conns.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// The `retry_after` hint for frontend-side BUSY replies.
+    pub(crate) fn retry_after_ms(&self) -> u64 {
+        self.inner.cfg.retry_after.as_millis() as u64
+    }
+
+    /// Has some path requested the accept loop to stop?
+    pub(crate) fn listener_stopped(&self) -> bool {
+        self.inner.listener_stop.load(Ordering::Acquire)
+    }
+
+    /// Ask the accept loop to stop (SHUTDOWN processing).
+    pub(crate) fn stop_listener(&self) {
+        self.inner.listener_stop.store(true, Ordering::Release);
     }
 
     /// Rebuild a checkpointed job and enqueue it (the `RESUME` verb).
@@ -537,9 +779,19 @@ impl Service {
             // observe `stop == true` once it does).  The loom model
             // `service_shutdown_no_lost_wakeup` pins this; dropping this
             // guard reintroduces a deadlock the model finds in seconds.
+            // The same lock also serializes against `submit`'s enqueue
+            // (`service_submit_vs_shutdown`): any submit that beat this
+            // store is already queued and drains below; any later one
+            // observes `stop` under the lock and self-fails.
             let _q = lock_recover(&self.inner.queue);
             self.inner.stop.store(true, Ordering::Release);
             self.inner.cv.notify_all();
+        }
+        {
+            // Same discipline for the housekeeper's parking lot.
+            let mut hk = lock_recover(&self.inner.hk);
+            *hk = true;
+            self.inner.hk_cv.notify_all();
         }
         let handles: Vec<_> = lock_recover(&self.workers).drain(..).collect();
         for h in handles {
@@ -557,11 +809,12 @@ impl Service {
         }
     }
 
-    /// Serve the TCP protocol until a SHUTDOWN request arrives.
-    /// Connections are handled concurrently (one thread each); binding
-    /// port 0 picks an ephemeral port, printed as a parseable
-    /// `LISTENING <addr>` line for scripts (`scripts/ci.sh
-    /// --service-smoke`).
+    /// Serve the TCP protocol until a SHUTDOWN request arrives, through
+    /// the evented front end (`coordinator/frontend.rs`): one reactor
+    /// thread multiplexes every connection over non-blocking sockets,
+    /// so N idle clients cost N sockets, not N threads.  Binding port 0
+    /// picks an ephemeral port, printed as a parseable `LISTENING
+    /// <addr>` line for scripts (`scripts/ci.sh --service-smoke`).
     pub fn serve(&self, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -570,27 +823,7 @@ impl Service {
         // line promptly; a broken stdout must not kill the service.
         std::io::stdout().flush().ok();
         crate::log_info!("palmad service listening on {local}");
-        std::thread::scope(|scope| -> Result<()> {
-            for stream in listener.incoming() {
-                let stream = stream?;
-                if self.inner.listener_stop.load(Ordering::Acquire) {
-                    break;
-                }
-                scope.spawn(move || {
-                    if self.handle_conn(stream) {
-                        // SHUTDOWN: drain the scheduler, then poke the
-                        // accept loop awake so it can exit.
-                        self.inner.listener_stop.store(true, Ordering::Release);
-                        self.shutdown();
-                        // ok-drop: self-connect poke; if it fails, another
-                        // client's connect (or process exit) unblocks the
-                        // accept loop — the stop flag is already set.
-                        let _ = TcpStream::connect(local);
-                    }
-                });
-            }
-            Ok(())
-        })
+        super::frontend::serve_listener(self, listener)
     }
 
     /// Public wrapper over [`Self::handle_conn`] for embedders that run
@@ -601,11 +834,16 @@ impl Service {
         self.handle_conn(stream)
     }
 
-    /// Handle one connection; returns true if SHUTDOWN was requested.
+    /// Handle one connection with blocking I/O; returns true if
+    /// SHUTDOWN was requested.  [`Self::serve`] does *not* use this —
+    /// the evented front end multiplexes connections instead — but the
+    /// path stays for embedders with their own accept loop and shares
+    /// [`Self::execute_line`] with the reactor, so both speak byte-for-
+    /// byte the same protocol.
     ///
     /// Reads run with a short timeout so an idle connection notices a
     /// SHUTDOWN initiated elsewhere and exits instead of pinning the
-    /// accept scope open until the client hangs up.
+    /// embedder's accept scope open until the client hangs up.
     fn handle_conn(&self, stream: TcpStream) -> bool {
         let peer = stream.peer_addr().ok();
         // ok-drop: best-effort timeout; without it an idle connection just
@@ -638,25 +876,57 @@ impl Service {
                 continue;
             }
             crate::log_debug!("request from {peer:?}: {req}");
-            match self.dispatch(&req, &mut reader, &mut out) {
-                Ok(true) => return true,
-                Ok(false) => {}
-                Err(e) => {
-                    // ok-drop: reporting an error to a client that already
-                    // disconnected; the read loop exits on its own next.
-                    let _ = writeln!(out, "ERR {e}");
+            match self.execute_line(&req) {
+                LineOutcome::Reply(text) => {
+                    if out.write_all(text.as_bytes()).is_err() {
+                        return false;
+                    }
+                }
+                LineOutcome::Shutdown(text) => {
+                    // ok-drop: the client may hang up right after asking;
+                    // the shutdown itself is the caller's job either way.
+                    let _ = out.write_all(text.as_bytes());
+                    return true;
+                }
+                LineOutcome::BeginData(mut ing) => {
+                    let reply = loop {
+                        line.clear();
+                        match read_data_line(&mut reader, &mut line, &self.inner.listener_stop)
+                        {
+                            Ok(0) => break ing.eof_reply(),
+                            Ok(_) => {
+                                if ing.feed_line(&line) {
+                                    break ing.finish(self);
+                                }
+                            }
+                            Err(_) => return false,
+                        }
+                    };
+                    if out.write_all(reply.as_bytes()).is_err() {
+                        return false;
+                    }
                 }
             }
         }
     }
 
-    fn dispatch(
-        &self,
-        req: &str,
-        reader: &mut BufReader<TcpStream>,
-        out: &mut TcpStream,
-    ) -> Result<bool> {
+    /// Execute one protocol line and produce its reply — the single
+    /// protocol implementation shared by the blocking path
+    /// ([`Self::handle_conn`]) and the evented front end
+    /// (`coordinator/frontend.rs`).  Never blocks on the connection:
+    /// multi-line ingestion (DATA) is returned as a [`DataIngest`]
+    /// state machine for the caller to feed.
+    pub(crate) fn execute_line(&self, req: &str) -> LineOutcome {
+        match self.execute_line_inner(req) {
+            Ok(out) => out,
+            Err(e) => LineOutcome::Reply(format!("ERR {e}\n")),
+        }
+    }
+
+    fn execute_line_inner(&self, req: &str) -> Result<LineOutcome> {
+        use std::fmt::Write as _;
         let mut parts = req.split_whitespace();
+        let mut out = String::new();
         match parts.next().unwrap_or("") {
             "RUN" => {
                 if self.inner.stop.load(Ordering::Acquire) {
@@ -670,7 +940,7 @@ impl Service {
                     );
                 }
                 validate_spec(&spec, &self.inner.cfg)?;
-                let id = self.submit(spec);
+                let id = self.submit(spec)?;
                 writeln!(out, "OK JOB {id}")?;
             }
             "DATA" => {
@@ -678,18 +948,19 @@ impl Service {
                 let max = self.inner.cfg.max_upload_points;
                 if n == 0 || n > max {
                     // The client sends its values regardless of our
-                    // verdict, so drain them (sanely bounded claims
+                    // verdict, so consume them (sanely bounded claims
                     // only) before erroring — otherwise every value
                     // line would be misread as a command and the
                     // connection would desynchronize permanently.
                     if n > 0 && n <= max.saturating_mul(4) {
-                        drain_data_values(reader, n, &self.inner.listener_stop)?;
+                        return Ok(LineOutcome::BeginData(DataIngest::rejecting(
+                            n,
+                            format!("DATA n={n} out of range (1..={max})"),
+                        )));
                     }
                     bail!("DATA n={n} out of range (1..={max})");
                 }
-                let values = read_data_values(reader, n, &self.inner.listener_stop)?;
-                self.upload(&name, TimeSeries::new(name.as_str(), values))?;
-                writeln!(out, "OK DATA {name} n={n}")?;
+                return Ok(LineOutcome::BeginData(DataIngest::accepting(name, n)));
             }
             "STATUS" => {
                 let id: u64 = parts.next().ok_or_else(|| anyhow!("STATUS <id>"))?.parse()?;
@@ -742,7 +1013,8 @@ impl Service {
                     "OK METRICS jobs={s} done={d} failed={f} cancelled={} discords={n} \
                      table={} uploads={} sched(steps/preempts/leases)={}/{}/{} \
                      lease(sticky/rebinds)={}/{} faults(retries/panics)={}/{} \
-                     ckpt(saved/resumed)={}/{} ckpt_rm_errs={}",
+                     ckpt(saved/resumed)={}/{} ckpt_rm_errs={} \
+                     wfq(rejected/budget_exhausted/batched_rounds)={}/{}/{}",
                     sm.cancelled,
                     self.job_count(),
                     self.upload_count(),
@@ -756,15 +1028,121 @@ impl Service {
                     sm.checkpoints,
                     sm.resumes,
                     sm.ckpt_remove_errs,
+                    sm.rejected,
+                    sm.budget_exhausted,
+                    sm.batched_rounds,
                 )?;
             }
             "SHUTDOWN" => {
-                writeln!(out, "OK BYE")?;
-                return Ok(true);
+                return Ok(LineOutcome::Shutdown("OK BYE\n".into()));
             }
             other => bail!("unknown request {other:?}"),
         }
-        Ok(false)
+        Ok(LineOutcome::Reply(out))
+    }
+}
+
+/// What executing one protocol line asks the connection driver to do.
+pub(crate) enum LineOutcome {
+    /// Write this complete reply (newline-terminated, possibly
+    /// multi-line) and read the next request line.
+    Reply(String),
+    /// Switch the connection into DATA ingestion: feed value lines to
+    /// the state machine until [`DataIngest::feed_line`] reports
+    /// completion, then write [`DataIngest::finish`]'s reply.
+    BeginData(DataIngest),
+    /// Write this reply, then initiate service shutdown and close.
+    Shutdown(String),
+}
+
+/// Incremental DATA-upload ingestion, decoupled from any I/O: both the
+/// blocking connection path and the reactor feed it one line at a
+/// time.  Counting consumed tokens (even rejected or unparsable ones)
+/// keeps the request stream in sync — the client sends exactly the
+/// announced number of values no matter our verdict.
+pub(crate) struct DataIngest {
+    name: String,
+    n: usize,
+    values: Vec<f64>,
+    /// First unparsable token (consumed as NaN, reported at the end).
+    bad: Option<String>,
+    /// Drain-then-error mode: consume the announced values, then reply
+    /// with this error instead of storing anything.
+    reject: Option<String>,
+    /// Whitespace-separated tokens consumed so far.
+    seen: usize,
+}
+
+impl DataIngest {
+    fn accepting(name: String, n: usize) -> Self {
+        Self { name, n, values: Vec::with_capacity(n), bad: None, reject: None, seen: 0 }
+    }
+
+    fn rejecting(n: usize, err: String) -> Self {
+        Self {
+            name: String::new(),
+            n,
+            values: Vec::new(),
+            bad: None,
+            reject: Some(err),
+            seen: 0,
+        }
+    }
+
+    /// Feed one line of whitespace-separated values; returns true once
+    /// the announced count has been consumed.
+    pub(crate) fn feed_line(&mut self, line: &str) -> bool {
+        for tok in line.split_whitespace() {
+            if self.done() {
+                break;
+            }
+            self.seen += 1;
+            if self.reject.is_some() {
+                continue;
+            }
+            match tok.parse::<f64>() {
+                Ok(v) => self.values.push(v),
+                Err(_) => {
+                    // Keep consuming to stay in sync; remember the
+                    // first offender and count it toward `n`.
+                    if self.bad.is_none() {
+                        self.bad = Some(tok.to_string());
+                    }
+                    self.values.push(f64::NAN);
+                }
+            }
+        }
+        self.done()
+    }
+
+    pub(crate) fn done(&self) -> bool {
+        self.seen >= self.n
+    }
+
+    /// Reply for a connection that hit EOF mid-ingestion.
+    pub(crate) fn eof_reply(&self) -> String {
+        match &self.reject {
+            Some(e) => format!("ERR {e}\n"),
+            None => format!("ERR DATA truncated at {}/{} values\n", self.seen, self.n),
+        }
+    }
+
+    /// Complete the ingestion: store the upload (or report the
+    /// deferred rejection) and produce the protocol reply.
+    pub(crate) fn finish(&mut self, svc: &Service) -> String {
+        if let Some(e) = &self.reject {
+            return format!("ERR {e}\n");
+        }
+        if let Some(tok) = &self.bad {
+            return format!("ERR DATA bad value {tok:?}\n");
+        }
+        let name = std::mem::take(&mut self.name);
+        let values = std::mem::take(&mut self.values);
+        let n = self.n;
+        match svc.upload(&name, TimeSeries::new(name.as_str(), values)) {
+            Ok(()) => format!("OK DATA {name} n={n}\n"),
+            Err(e) => format!("ERR {e}\n"),
+        }
     }
 }
 
@@ -829,6 +1207,8 @@ fn parse_run_parts<'a>(
             "maxl" => spec.max_l = v.parse()?,
             "topk" => spec.top_k = v.parse()?,
             "deadline" => spec.deadline = Some(Duration::from_millis(v.parse()?)),
+            "tenant" => spec.tenant = v.to_string(),
+            "weight" => spec.weight = v.parse()?,
             other => bail!("unknown key {other:?}"),
         }
     }
@@ -860,6 +1240,12 @@ fn validate_spec(spec: &JobSpec, cfg: &ServiceConfig) -> Result<()> {
         if n > cfg.max_series_len {
             bail!("n={n} exceeds the service limit {}", cfg.max_series_len);
         }
+    }
+    if spec.weight > cfg.max_tenant_weight {
+        bail!("weight={} exceeds the limit {}", spec.weight, cfg.max_tenant_weight);
+    }
+    if spec.tenant.len() > 64 {
+        bail!("tenant name too long ({} chars, max 64)", spec.tenant.len());
     }
     // Uploaded series have a known length; generated ones only when n=
     // is explicit (dataset defaults are checked by the first step).
@@ -913,94 +1299,126 @@ fn read_data_line(
     }
 }
 
-/// Read exactly `n` whitespace-separated f64 values from the
-/// connection (any line split).  Values are consumed before any error
-/// is raised, so a rejected upload leaves the protocol in sync.
-fn read_data_values(
-    reader: &mut BufReader<TcpStream>,
-    n: usize,
-    stop: &AtomicBool,
-) -> Result<Vec<f64>> {
-    let mut values = Vec::with_capacity(n);
-    let mut bad: Option<String> = None;
-    let mut line = String::new();
-    while values.len() < n {
-        line.clear();
-        if read_data_line(reader, &mut line, stop)? == 0 {
-            bail!("DATA truncated at {}/{n} values", values.len());
-        }
-        for tok in line.split_whitespace() {
-            if values.len() >= n {
-                break;
+/// The housekeeper heartbeat: every [`ServiceConfig::housekeep_interval`]
+/// run TTL eviction and deadline reaping, so expiry never waits for
+/// traffic.  Parks on `hk`/`hk_cv` (flag stored under the mutex with
+/// the notify inside the critical section, like `stop`/`cv`) so
+/// shutdown wakes it promptly instead of waiting out the interval.
+fn housekeeper_main(inner: Arc<Inner>) {
+    loop {
+        {
+            let g = lock_recover(&inner.hk);
+            if *g {
+                return;
             }
-            match tok.parse::<f64>() {
-                Ok(v) => values.push(v),
-                Err(_) => {
-                    // Keep consuming to stay in sync; remember the
-                    // first offender and count it toward `n`.
-                    if bad.is_none() {
-                        bad = Some(tok.to_string());
-                    }
-                    values.push(f64::NAN);
-                }
+            let (g, _timed_out) =
+                wait_timeout_recover(&inner.hk_cv, g, inner.cfg.housekeep_interval);
+            if *g {
+                return;
             }
         }
+        evict_expired_inner(&inner);
+        reap_deadlines(&inner);
     }
-    if let Some(tok) = bad {
-        bail!("DATA bad value {tok:?}");
-    }
-    Ok(values)
 }
 
-/// Consume (and discard) an announced batch of DATA values so a
-/// rejected header leaves the connection's request stream in sync.
-/// EOF just stops — there is nothing left to desynchronize.
-fn drain_data_values(
-    reader: &mut BufReader<TcpStream>,
-    n: usize,
-    stop: &AtomicBool,
-) -> Result<()> {
-    let mut seen = 0usize;
-    let mut line = String::new();
-    while seen < n {
-        line.clear();
-        if read_data_line(reader, &mut line, stop)? == 0 {
-            break;
-        }
-        seen += line.split_whitespace().count();
+/// Drop terminal jobs older than the TTL — and their checkpoints.
+/// Before PR 9 a kept-on-Failed checkpoint outlived its TTL-evicted
+/// job indefinitely (it would resurrect at every boot); eviction now
+/// mirrors FORGET and removes the file with the table entry.
+fn evict_expired_inner(inner: &Inner) {
+    let ttl = inner.cfg.job_ttl;
+    let now = Instant::now();
+    let mut evicted: Vec<u64> = Vec::new();
+    {
+        let mut jobs = lock_recover(&inner.jobs);
+        jobs.retain(|id, j| match j.finished_at {
+            Some(t) if now.duration_since(t) >= ttl => {
+                evicted.push(*id);
+                false
+            }
+            _ => true,
+        });
     }
-    Ok(())
+    // order: eviction collects in HashMap order; sorted before the
+    // (order-insensitive) checkpoint removals for determinism.
+    evicted.sort_unstable();
+    if let Some(store) = &inner.store {
+        for id in evicted {
+            remove_checkpoint(store, &inner.counters, id);
+        }
+    }
+}
+
+/// Fail non-stepping jobs whose deadline has passed (the housekeeper
+/// half of the STATUS-side reap in [`Service::status`]): a saturated
+/// queue must not postpone `deadline exceeded` until a worker happens
+/// to dequeue the job.  Stepping jobs are the worker's to finish.
+fn reap_deadlines(inner: &Inner) {
+    let now = Instant::now();
+    let mut jobs = lock_recover(&inner.jobs);
+    for job in jobs.values_mut() {
+        if !job.state.is_terminal()
+            && !job.stepping
+            && job.deadline_at.is_some_and(|d| now > d)
+        {
+            finalize(job, JobState::Failed("deadline exceeded".into()), &inner.counters);
+        }
+    }
 }
 
 fn worker_main(inner: Arc<Inner>) {
     loop {
-        let id = {
+        // Pull the next step claim, plus up to batch_max-1 small
+        // ride-alongs from *other* tenants (cross-tenant tile
+        // batching): the whole round then shares one lease checkout.
+        let (id, extras) = {
             let mut q = lock_recover(&inner.queue);
             loop {
                 if inner.stop.load(Ordering::Acquire) {
                     return;
                 }
-                if let Some(id) = q.pop_front() {
-                    break id;
+                if let Some(id) = q.pop() {
+                    let mut extras = Vec::new();
+                    while extras.len() + 1 < inner.cfg.batch_max.max(1) {
+                        match q.pop_small_extra() {
+                            Some(e) => extras.push(e),
+                            None => break,
+                        }
+                    }
+                    break (id, extras);
                 }
                 q = wait_recover(&inner.cv, q);
             }
         };
-        // Backstop isolation: `step_job` already catches sweep panics,
-        // but a panic anywhere else in the step path must fail only
-        // this job, not retire the worker thread (which would silently
-        // shrink the scheduler until no steps run at all).
-        if catch_unwind(AssertUnwindSafe(|| step_job(&inner, id))).is_err() {
-            inner.counters.panics.fetch_add(1, Ordering::Relaxed);
-            let mut jobs = lock_recover(&inner.jobs);
-            if let Some(job) = jobs.get_mut(&id) {
-                if !job.state.is_terminal() {
-                    finalize(
-                        job,
-                        JobState::Failed("panic: worker step".into()),
-                        &inner.counters,
-                    );
-                }
+        if extras.is_empty() {
+            guarded_step(&inner, id, None);
+        } else {
+            inner.counters.batched_rounds.fetch_add(1, Ordering::Relaxed);
+            // One checkout for the whole round, keyed by the primary
+            // job: the ride-alongs run on its engine (their seed
+            // caches rebind — the pool counts that — which is the
+            // price of amortizing the lease across small tenants).
+            let mut lease = inner.pool.checkout(id);
+            guarded_step(&inner, id, Some(&mut lease));
+            for extra in extras {
+                guarded_step(&inner, extra, Some(&mut lease));
+            }
+        }
+    }
+}
+
+/// Run one job step with backstop panic isolation: `step_job` already
+/// catches sweep panics, but a panic anywhere else in the step path
+/// must fail only this job, not retire the worker thread (which would
+/// silently shrink the scheduler until no steps run at all).
+fn guarded_step(inner: &Inner, id: u64, shared: Option<&mut Lease<'_>>) {
+    if catch_unwind(AssertUnwindSafe(|| step_job(inner, id, shared))).is_err() {
+        inner.counters.panics.fetch_add(1, Ordering::Relaxed);
+        let mut jobs = lock_recover(&inner.jobs);
+        if let Some(job) = jobs.get_mut(&id) {
+            if !job.state.is_terminal() {
+                finalize(job, JobState::Failed("panic: worker step".into()), &inner.counters);
             }
         }
     }
@@ -1038,7 +1456,11 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 }
 
 /// Advance one job by one sweep step through a leased engine/workspace.
-fn step_job(inner: &Inner, id: u64) {
+/// With `shared` set (a batched round), the step reuses the caller's
+/// checkout instead of taking its own — the engine is keyed to another
+/// job, so the sticky seed cache rebinds, but small jobs repay that
+/// with one pool round-trip for the whole batch.
+fn step_job(inner: &Inner, id: u64, shared: Option<&mut Lease<'_>>) {
     // ---- Claim: move the sweep out of the table so the step runs
     // without holding the jobs lock.
     let (sweep0, series0, spec, seed_rows) = {
@@ -1102,7 +1524,11 @@ fn step_job(inner: &Inner, id: u64) {
     // lease is still held (the rows live in the leased engine).
     let mut ckpt_state: Option<(Vec<u8>, Vec<SeedRowSnapshot>)> = None;
     let outcome = {
-        let mut lease = inner.pool.checkout(id);
+        let mut own: Option<Lease<'_>> = None;
+        let lease = match shared {
+            Some(l) => l,
+            None => own.insert(inner.pool.checkout(id)),
+        };
         let (engine, ws) = lease.engine_and_workspace();
         if let Some(rows) = &seed_rows {
             // Resume path: re-arm the QT seed cache so the next length
@@ -1186,11 +1612,14 @@ fn step_job(inner: &Inner, id: u64) {
                         // from right here instead of an older save.
                         CkptAction::Save
                     } else {
-                        // Requeue at the back: round-robin across
-                        // runnable jobs.
+                        // Requeue at the back of the tenant's FIFO:
+                        // weighted-fair across runnable jobs.  (This is
+                        // the jobs→queue lock nesting; admission paths
+                        // must never nest queue→jobs.)
                         job.sweep = Some(sweep);
                         job.series = Some(series.clone());
-                        lock_recover(&inner.queue).push_back(id);
+                        let (tenant, small) = (job.tenant, job.small);
+                        lock_recover(&inner.queue).push(tenant, id, small);
                         inner.counters.preempts.fetch_add(1, Ordering::Relaxed);
                         inner.cv.notify_one();
                         CkptAction::Save
@@ -1252,12 +1681,19 @@ fn build_checkpoint(
         series: stored_series,
         sweep,
         seed_rows,
+        tenant: spec.tenant.clone(),
+        weight: spec.weight,
     }
 }
 
 /// Rebuild a job from its checkpoint and enqueue it.  Shared by the
 /// boot-time journal scan and [`Service::resume`]; the caller notifies
-/// the scheduler condvar if workers are already running.
+/// the scheduler condvar if workers are already running.  Resume
+/// bypasses the BUSY admission gates — the work was admitted once
+/// already, and failing a boot-scan recovery over a transient bound
+/// would silently strand durable state — but it does observe `stop`
+/// under the queue lock exactly like `submit` (the same enqueue-vs-
+/// shutdown race exists on this path).
 fn resume_job(inner: &Inner, ckpt: JobCheckpoint) -> Result<u64> {
     let id = ckpt.job_id;
     let sweep = MerlinSweep::restore(&ckpt.sweep)?;
@@ -1275,7 +1711,19 @@ fn resume_job(inner: &Inner, ckpt: JobCheckpoint) -> Result<u64> {
         // The budget restarts from resume time: a deadline bounds
         // runaway work, it is not a promise about outages.
         deadline: ckpt.deadline_ms.map(Duration::from_millis),
+        tenant: ckpt.tenant,
+        weight: ckpt.weight,
     };
+    let tenant_name =
+        if spec.tenant.is_empty() { DEFAULT_TENANT } else { spec.tenant.as_str() };
+    let weight = if spec.weight == 0 {
+        inner.cfg.default_tenant_weight.max(1)
+    } else {
+        spec.weight.min(inner.cfg.max_tenant_weight.max(1))
+    };
+    let tenant = lock_recover(&inner.queue).register(tenant_name, weight);
+    let known_n = series.as_ref().map(|s| s.len()).or(spec.n);
+    let small = known_n.is_some_and(|n| n <= inner.cfg.batch_small_points);
     let progress = sweep.progress();
     let job = Job {
         deadline_at: spec.deadline.map(|d| Instant::now() + d),
@@ -1288,6 +1736,8 @@ fn resume_job(inner: &Inner, ckpt: JobCheckpoint) -> Result<u64> {
         finished_at: None,
         progress,
         pending_seed_rows: Some(ckpt.seed_rows),
+        tenant,
+        small,
     };
     {
         let mut jobs = lock_recover(&inner.jobs);
@@ -1311,7 +1761,27 @@ fn resume_job(inner: &Inner, ckpt: JobCheckpoint) -> Result<u64> {
     }
     inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
     inner.counters.resumes.fetch_add(1, Ordering::Relaxed);
-    lock_recover(&inner.queue).push_back(id);
+    // Enqueue with `stop` checked under the queue lock (the submit-vs-
+    // shutdown discipline): before PR 9 this path re-queued into a
+    // drained scheduler unguarded, stranding the job as QUEUED forever.
+    let stopped = {
+        let mut q = lock_recover(&inner.queue);
+        if inner.stop.load(Ordering::Acquire) {
+            true
+        } else {
+            q.push(tenant, id, small);
+            false
+        }
+    };
+    if stopped {
+        let mut jobs = lock_recover(&inner.jobs);
+        if let Some(job) = jobs.get_mut(&id) {
+            if !job.state.is_terminal() {
+                finalize(job, JobState::Failed("shutdown".into()), &inner.counters);
+            }
+        }
+        bail!("service is shutting down");
+    }
     Ok(id)
 }
 
@@ -1345,7 +1815,7 @@ mod tests {
     #[test]
     fn submit_and_wait() {
         let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 2).unwrap();
-        let id = svc.submit(spec());
+        let id = svc.submit(spec()).unwrap();
         match svc.wait(id) {
             Some(JobState::Done { discords, .. }) => {
                 assert_eq!(discords.len(), 5); // one per length 16..=20
@@ -1366,7 +1836,7 @@ mod tests {
     #[test]
     fn bad_dataset_fails_cleanly() {
         let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
-        let id = svc.submit(JobSpec { dataset: "nope".into(), ..spec() });
+        let id = svc.submit(JobSpec { dataset: "nope".into(), ..spec() }).unwrap();
         match svc.wait(id) {
             Some(JobState::Failed(msg)) => assert!(msg.contains("unknown dataset")),
             other => panic!("unexpected {other:?}"),
@@ -1377,7 +1847,7 @@ mod tests {
     #[test]
     fn parallel_jobs_complete() {
         let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 4).unwrap();
-        let ids: Vec<u64> = (0..6).map(|k| svc.submit(JobSpec { seed: k, ..spec() })).collect();
+        let ids: Vec<u64> = (0..6).map(|k| svc.submit(JobSpec { seed: k, ..spec() }).unwrap()).collect();
         for id in ids {
             match svc.wait(id) {
                 Some(JobState::Done { .. }) => {}
@@ -1394,8 +1864,8 @@ mod tests {
         // with a first job long enough that the second is still queued
         // when the cancel lands.
         let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
-        let big = svc.submit(JobSpec { min_l: 16, max_l: 120, ..spec() });
-        let victim = svc.submit(spec());
+        let big = svc.submit(JobSpec { min_l: 16, max_l: 120, ..spec() }).unwrap();
+        let victim = svc.submit(spec()).unwrap();
         svc.cancel(victim).unwrap();
         assert!(matches!(svc.wait(victim), Some(JobState::Cancelled)));
         // Terminal jobs cannot be re-cancelled.
@@ -1415,7 +1885,7 @@ mod tests {
             n: Some(4_000),
             deadline: Some(Duration::from_millis(1)),
             ..spec()
-        });
+        }).unwrap();
         match svc.wait(id) {
             Some(JobState::Failed(msg)) => {
                 assert!(msg.contains("deadline exceeded"), "{msg}")
@@ -1435,7 +1905,7 @@ mod tests {
         })
         .unwrap();
         for k in 0..20 {
-            let id = svc.submit(JobSpec { seed: k, min_l: 16, max_l: 17, ..spec() });
+            let id = svc.submit(JobSpec { seed: k, min_l: 16, max_l: 17, ..spec() }).unwrap();
             assert!(matches!(svc.wait(id), Some(JobState::Done { .. })));
             // Terminal + zero TTL: the next submission's eviction sweep
             // clears it, so the table never accumulates history.
@@ -1455,12 +1925,12 @@ mod tests {
     #[test]
     fn forget_drops_terminal_jobs_only() {
         let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 2).unwrap();
-        let id = svc.submit(spec());
+        let id = svc.submit(spec()).unwrap();
         assert!(matches!(svc.wait(id), Some(JobState::Done { .. })));
         svc.forget(id).unwrap();
         assert!(svc.status(id).is_none());
         assert!(svc.forget(id).is_err(), "double FORGET reports no such job");
-        let running = svc.submit(JobSpec { max_l: 120, ..spec() });
+        let running = svc.submit(JobSpec { max_l: 120, ..spec() }).unwrap();
         assert!(svc.forget(running).is_err(), "active jobs cannot be forgotten");
         svc.cancel(running).unwrap();
         svc.wait(running);
@@ -1473,7 +1943,7 @@ mod tests {
         // One long job occupies the single worker; the rest must still
         // be queued (or parked mid-sweep) when shutdown lands.
         let ids: Vec<u64> =
-            (0..5).map(|k| svc.submit(JobSpec { seed: k, max_l: 120, ..spec() })).collect();
+            (0..5).map(|k| svc.submit(JobSpec { seed: k, max_l: 120, ..spec() }).unwrap()).collect();
         svc.shutdown();
         let mut failed_shutdown = 0;
         for id in ids {

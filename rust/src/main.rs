@@ -65,7 +65,12 @@ fn cli() -> Cli {
                 .opt("segn", "256", "tile edge")
                 .opt("kernel", "", "native tile kernel: lanes4 | scalar")
                 .opt("checkpoint-dir", "", "job checkpoint dir (enables RESUME + auto-resume)")
-                .opt("checkpoint-every", "4", "checkpoint every K completed lengths"),
+                .opt("checkpoint-every", "4", "checkpoint every K completed lengths")
+                .opt("policy", "wfq", "scheduling policy: wfq (weighted fair) | rr (flat FIFO)")
+                .opt("default-weight", "1", "weight for jobs that name no tenant/weight")
+                .opt("max-queued", "1024", "run-queue bound before ERR BUSY (0 = unbounded)")
+                .opt("max-conns", "1024", "open-connection bound before ERR BUSY (0 = unbounded)")
+                .opt("batch-max", "4", "max jobs stepped per engine lease round (1 = off)"),
         )
         .command(
             Command::new("generate", "write a synthetic dataset to a file")
@@ -229,6 +234,10 @@ fn run_checkpointed(
                         series: None,
                         sweep: sweep.snapshot(),
                         seed_rows: engine.export_seed_rows(&series.values),
+                        // The CLI is single-tenant; resume maps these
+                        // to the service defaults anyway.
+                        tenant: String::new(),
+                        weight: 0,
                     })?;
                 }
             }
@@ -282,6 +291,11 @@ fn cmd_heatmap(args: &palmad::util::cli::Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &palmad::util::cli::Args) -> Result<()> {
+    let policy = match args.get("policy")? {
+        "wfq" => palmad::coordinator::queue::SchedPolicy::WeightedFair,
+        "rr" => palmad::coordinator::queue::SchedPolicy::RoundRobin,
+        other => anyhow::bail!("unknown --policy {other:?} (expected wfq | rr)"),
+    };
     let cfg = ServiceConfig {
         engine_opts: engine_opts(args)?,
         workers: args.get_usize("workers")?,
@@ -289,6 +303,11 @@ fn cmd_serve(args: &palmad::util::cli::Args) -> Result<()> {
         job_ttl: std::time::Duration::from_secs(args.get_u64("ttl-secs")?),
         checkpoint_dir: args.get_opt("checkpoint-dir").map(Into::into),
         checkpoint_every: args.get_u64("checkpoint-every")?,
+        sched_policy: policy,
+        default_tenant_weight: args.get_u64("default-weight")? as u32,
+        max_queued: args.get_usize("max-queued")?,
+        max_conns: args.get_usize("max-conns")?,
+        batch_max: args.get_usize("batch-max")?,
         ..Default::default()
     };
     let svc = Service::start_with(cfg)?;

@@ -26,10 +26,10 @@
 #![forbid(unsafe_code)]
 
 #[cfg(not(palmad_loom))]
-pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
 
 #[cfg(palmad_loom)]
-pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
 
 pub use std::sync::{LockResult, PoisonError};
 

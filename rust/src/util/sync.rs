@@ -49,6 +49,27 @@ pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard
     }
 }
 
+/// `Condvar::wait_timeout` that recovers the guard on poison instead of
+/// panicking.  Returns the guard plus whether the wait timed out.
+/// Callers must re-check their predicate either way — a timeout, a
+/// notify, and a spurious wakeup are indistinguishable from a protocol
+/// standpoint (under the loom model the wait always reports a timeout,
+/// so timed waiters can never wedge a model — see `vendor/loom`).
+#[inline]
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: std::time::Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(poisoned) => {
+            let (g, t) = poisoned.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,6 +89,18 @@ mod tests {
         let mut g = lock_recover(&m);
         *g += 1;
         assert_eq!(*g, 1);
+    }
+
+    #[test]
+    fn wait_timeout_recover_times_out_without_a_notifier() {
+        use crate::util::loomsync::{Condvar as LCondvar, Mutex as LMutex};
+        let m = LMutex::new(false);
+        let cv = LCondvar::new();
+        let g = super::lock_recover(&m);
+        let (g, timed_out) =
+            super::wait_timeout_recover(&cv, g, std::time::Duration::from_millis(5));
+        assert!(timed_out, "no notifier: the wait must report a timeout");
+        assert!(!*g, "predicate untouched");
     }
 
     #[test]

@@ -166,14 +166,14 @@ fn injected_panic_fails_only_that_job() {
         top_k: 1,
         ..Default::default()
     };
-    let victim = svc.submit(spec.clone());
+    let victim = svc.submit(spec.clone()).unwrap();
     match wait_terminal(&svc, victim) {
         JobState::Failed(msg) => assert!(msg.contains("panic"), "{msg}"),
         other => panic!("victim should fail from the injected panic, got {other:?}"),
     }
     // The same worker and the same pooled engine carry the next job to
     // completion (the panic index is one-shot and already consumed).
-    let survivor = svc.submit(JobSpec { seed: 8, ..spec });
+    let survivor = svc.submit(JobSpec { seed: 8, ..spec }).unwrap();
     assert!(matches!(wait_terminal(&svc, survivor), JobState::Done { .. }));
     let sm = svc.sched_metrics();
     assert_eq!(sm.panics, 1, "exactly one panic caught");
@@ -213,7 +213,7 @@ fn transient_engine_error_is_retried_to_success() {
         max_l: 20,
         top_k: 2,
         ..Default::default()
-    });
+    }).unwrap();
     match wait_terminal(&svc, id) {
         JobState::Done { discords, .. } => {
             let want_d: Vec<_> =
@@ -253,7 +253,7 @@ fn nan_contamination_completes_without_crash() {
         max_l: 18,
         top_k: 1,
         ..Default::default()
-    });
+    }).unwrap();
     match wait_terminal(&svc, id) {
         JobState::Done { discords, .. } => {
             for d in &discords {
@@ -297,7 +297,7 @@ fn service_restart_auto_resumes_bit_identically() {
 
     // ---- First incarnation: run a few steps, then die.
     let svc = Service::start_with(svc_cfg()).unwrap();
-    let id = svc.submit(spec);
+    let id = svc.submit(spec).unwrap();
     loop {
         if svc.progress(id).map(|(done, _)| done >= 2).unwrap_or(false) {
             break;
@@ -370,7 +370,7 @@ fn resume_verb_recovers_a_panicked_job() {
         max_l: 24,
         top_k: 2,
         ..Default::default()
-    });
+    }).unwrap();
     match wait_terminal(&svc, id) {
         JobState::Failed(msg) => assert!(msg.contains("panic"), "{msg}"),
         other => panic!("the injected panic should fail the job, got {other:?}"),

@@ -1,0 +1,483 @@
+//! PR 9 serving-path coverage: the evented front end (admission
+//! control, connection scalability), weighted-fair scheduling under a
+//! heavy-tail tenant mix, cross-tenant tile batching, and regression
+//! pins for the three service-path races fixed here:
+//!
+//! - submit racing shutdown stranded a QUEUED job no worker would ever
+//!   pop (`submits_racing_shutdown_never_strand_a_job`);
+//! - a queued job's deadline only fired once a worker dequeued it, so
+//!   a saturated service reported `QUEUED` forever
+//!   (`deadline_expiry_surfaces_from_status_without_a_worker`);
+//! - TTL eviction only ran piggybacked on submissions, so terminal
+//!   jobs — and their kept-on-Failed checkpoints — outlived their TTL
+//!   indefinitely on a quiescent service
+//!   (`quiescent_ttl_eviction_runs_on_the_heartbeat`).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use palmad::coordinator::config::EngineOptions;
+use palmad::coordinator::frontend;
+use palmad::coordinator::queue::SchedPolicy;
+use palmad::coordinator::service::{JobSpec, JobState, Service, ServiceConfig};
+
+fn small_spec(seed: u64) -> JobSpec {
+    JobSpec {
+        dataset: "ecg2".into(),
+        n: Some(1_000),
+        seed,
+        min_l: 16,
+        max_l: 19,
+        top_k: 1,
+        ..Default::default()
+    }
+}
+
+/// A job whose *single step* runs long enough (full matrix profile of a
+/// 20k-point series per length) to pin a worker for the duration of a
+/// test's assertion window.
+fn blocker_spec() -> JobSpec {
+    JobSpec {
+        dataset: "koski_ecg".into(),
+        n: Some(20_000),
+        seed: 1,
+        min_l: 128,
+        max_l: 512,
+        top_k: 1,
+        ..Default::default()
+    }
+}
+
+fn start_reactor(
+    svc: &Arc<Service>,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let svc = Arc::clone(svc);
+    let handle = std::thread::spawn(move || frontend::serve_listener(&svc, listener));
+    (addr, handle)
+}
+
+struct Client {
+    conn: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let conn = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        Self { conn, reader }
+    }
+
+    fn read_line(&mut self) -> String {
+        let mut line = String::new();
+        assert!(self.reader.read_line(&mut line).unwrap() > 0, "server closed connection");
+        line.trim().to_string()
+    }
+
+    fn send(&mut self, req: &str) -> String {
+        writeln!(self.conn, "{req}").unwrap();
+        self.read_line()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bugfix (a): submit vs shutdown
+// ---------------------------------------------------------------------
+
+/// After shutdown, a late submit must come back terminal
+/// (`Failed("shutdown")`), never stranded QUEUED.
+#[test]
+fn submit_after_shutdown_fails_with_shutdown() {
+    let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
+    svc.shutdown();
+    let id = svc.submit(small_spec(1)).unwrap();
+    match svc.status(id) {
+        Some(JobState::Failed(msg)) => {
+            assert!(msg.contains("shutdown"), "wrong failure: {msg:?}")
+        }
+        other => panic!("late submit must self-fail, got {other:?}"),
+    }
+}
+
+/// Hammer submit from several threads while shutdown lands.  Every
+/// accepted id must end terminal and every tenant queue must drain —
+/// before PR 9 an enqueue racing the queue-clear left jobs QUEUED with
+/// every worker already joined.  (The schedule-exhaustive version of
+/// this pin is the `service_submit_vs_shutdown` loom model.)
+#[test]
+fn submits_racing_shutdown_never_strand_a_job() {
+    for round in 0..8 {
+        let svc = Arc::new(
+            Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap(),
+        );
+        let submitters: Vec<_> = (0..3)
+            .map(|t| {
+                let svc = Arc::clone(&svc);
+                std::thread::spawn(move || {
+                    (0..16)
+                        .map(|k| svc.submit(small_spec(round * 100 + t * 20 + k)).unwrap())
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        // Land the shutdown mid-hammer.
+        std::thread::sleep(Duration::from_millis(round));
+        svc.shutdown();
+        for s in submitters {
+            for id in s.join().unwrap() {
+                let state = svc.status(id).expect("accepted job stays queryable");
+                assert!(
+                    state.is_some_terminal(),
+                    "job {id} stranded non-terminal after shutdown: {state:?}"
+                );
+            }
+        }
+        for share in svc.tenant_shares() {
+            assert_eq!(share.queued, 0, "tenant {} queue not drained", share.name);
+        }
+    }
+}
+
+trait TerminalExt {
+    fn is_some_terminal(&self) -> bool;
+}
+impl TerminalExt for JobState {
+    fn is_some_terminal(&self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bugfix (b): deadline expiry without a worker dequeue
+// ---------------------------------------------------------------------
+
+/// With the only worker pinned mid-step by a long job, a queued job
+/// whose deadline lapses must still report `Failed("deadline
+/// exceeded")` from `status()` — before PR 9, deadlines were only
+/// checked when a worker dequeued the job, so this returned QUEUED.
+#[test]
+fn deadline_expiry_surfaces_from_status_without_a_worker() {
+    let svc = Service::start_with(ServiceConfig {
+        engine_opts: EngineOptions { segn: 64, ..Default::default() },
+        workers: 1,
+        // Keep the heartbeat out of this test: status() itself must do
+        // the reaping even if the housekeeper never fires.
+        housekeep_interval: Duration::from_secs(3_600),
+        ..Default::default()
+    })
+    .unwrap();
+    let blocker = svc.submit(blocker_spec()).unwrap();
+    // Wait until the worker has actually dequeued the blocker, then
+    // give it a beat to be inside the step.
+    while !matches!(svc.status(blocker), Some(JobState::Running)) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    std::thread::sleep(Duration::from_millis(5));
+
+    let victim = svc
+        .submit(JobSpec { deadline: Some(Duration::from_millis(1)), ..small_spec(2) })
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(10));
+    match svc.status(victim) {
+        Some(JobState::Failed(msg)) => {
+            assert!(msg.contains("deadline"), "wrong failure: {msg:?}")
+        }
+        other => panic!("expired queued job must fail from status(), got {other:?}"),
+    }
+    // wait() goes through the same reap and must agree.
+    assert!(
+        matches!(svc.wait(victim), Some(JobState::Failed(_))),
+        "wait() must surface the same terminal state"
+    );
+    svc.cancel(blocker).unwrap();
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Bugfix (c): TTL eviction on a quiescent service
+// ---------------------------------------------------------------------
+
+/// TTL eviction (and kept-on-Failed checkpoint removal) must happen
+/// with ZERO client traffic after the job fails — the housekeeper
+/// heartbeat drives it.  Before PR 9, `evict_expired` only ran
+/// piggybacked on the next submission.
+#[test]
+fn quiescent_ttl_eviction_runs_on_the_heartbeat() {
+    let dir = std::env::temp_dir()
+        .join(format!("palmad-hk-evict-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let svc = Service::start_with(ServiceConfig {
+        engine_opts: EngineOptions { segn: 64, ..Default::default() },
+        workers: 1,
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 1,
+        job_ttl: Duration::from_millis(300),
+        housekeep_interval: Duration::from_millis(25),
+        ..Default::default()
+    })
+    .unwrap();
+    // A job that checkpoints a few lengths and then blows its deadline:
+    // Failed jobs keep their checkpoint (resumable after a fix), so the
+    // TTL sweep owns its removal.
+    let id = svc
+        .submit(JobSpec {
+            dataset: "ecg2".into(),
+            n: Some(4_000),
+            seed: 3,
+            min_l: 16,
+            max_l: 200,
+            top_k: 1,
+            deadline: Some(Duration::from_millis(150)),
+            ..Default::default()
+        })
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match svc.status(id) {
+            Some(JobState::Failed(msg)) => {
+                assert!(msg.contains("deadline"), "{msg:?}");
+                break;
+            }
+            Some(_) => {
+                assert!(Instant::now() < deadline, "job never hit its deadline");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            None => panic!("job evicted before its TTL"),
+        }
+    }
+    let ckpt = dir.join(format!("job-{id}.ckpt"));
+    assert!(ckpt.is_file(), "failed job must keep its checkpoint until TTL eviction");
+
+    // Quiescence: no submits, no status polls — just the heartbeat.
+    std::thread::sleep(Duration::from_millis(600));
+    assert!(svc.status(id).is_none(), "TTL must evict with zero traffic");
+    assert!(!ckpt.is_file(), "eviction must remove the kept-on-Failed checkpoint");
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Admission control over the wire
+// ---------------------------------------------------------------------
+
+/// Submissions over `max_queued` and connections over `max_conns` both
+/// answer `ERR BUSY retry_after=<ms>`, and both are counted in
+/// `rejected`.
+#[test]
+fn err_busy_round_trips_over_tcp() {
+    let svc = Arc::new(
+        Service::start_with(ServiceConfig {
+            engine_opts: EngineOptions { segn: 64, ..Default::default() },
+            workers: 1,
+            max_queued: 1,
+            max_conns: 2,
+            retry_after: Duration::from_millis(75),
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let (addr, reactor) = start_reactor(&svc);
+    let mut c = Client::connect(addr);
+
+    // Pin the worker, then overfill the queue.
+    let resp = c.send(
+        "RUN gen=koski_ecg n=20000 minl=128 maxl=512 topk=1 seed=1",
+    );
+    assert!(resp.starts_with("OK JOB "), "{resp}");
+    let mut accepted = 0;
+    let mut busy = 0;
+    for k in 0..8 {
+        let resp = c.send(&format!("RUN gen=ecg2 n=1000 minl=16 maxl=19 topk=1 seed={k}"));
+        if resp.starts_with("ERR BUSY") {
+            assert!(
+                resp.contains("retry_after=75"),
+                "BUSY must carry the configured retry hint: {resp}"
+            );
+            busy += 1;
+        } else {
+            assert!(resp.starts_with("OK JOB "), "{resp}");
+            accepted += 1;
+        }
+    }
+    assert!(busy > 0, "8 submissions over max_queued=1 must trip ERR BUSY");
+    assert!(accepted > 0, "admission must not reject everything");
+
+    // Connection cap: the third concurrent connection is turned away
+    // with a BUSY line and a close.
+    let _second = Client::connect(addr);
+    // Rejection happens on the reactor's next accept scan; read until
+    // EOF and collect whatever it sent.
+    let mut third = TcpStream::connect(addr).unwrap();
+    let mut turned_away = String::new();
+    third.read_to_string(&mut turned_away).unwrap();
+    assert!(
+        turned_away.starts_with("ERR BUSY retry_after=75"),
+        "over-limit connection must be told to back off: {turned_away:?}"
+    );
+
+    assert!(svc.sched_metrics().rejected >= busy + 1, "rejections must be counted");
+    let bye = c.send("SHUTDOWN");
+    assert_eq!(bye, "OK BYE");
+    reactor.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Connection scalability
+// ---------------------------------------------------------------------
+
+/// N idle connections must not cost N threads: the reactor multiplexes
+/// them all.  The PR-5 front end spawned one thread per connection, so
+/// this pinned 32 extra threads.
+#[cfg(target_os = "linux")]
+#[test]
+fn idle_connections_share_one_thread() {
+    fn thread_count() -> usize {
+        let status = std::fs::read_to_string("/proc/self/status").unwrap();
+        status
+            .lines()
+            .find_map(|l| l.strip_prefix("Threads:"))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap()
+    }
+    let svc = Arc::new(
+        Service::start_with(ServiceConfig {
+            engine_opts: EngineOptions { segn: 64, ..Default::default() },
+            workers: 1,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let (addr, reactor) = start_reactor(&svc);
+    // One round-trip so the reactor is demonstrably up.
+    let mut probe = Client::connect(addr);
+    assert!(probe.send("METRICS").starts_with("OK "));
+
+    let before = thread_count();
+    let idle: Vec<Client> = (0..32).map(|_| Client::connect(addr)).collect();
+    // Prove they are all live connections (accepted, not backlogged),
+    // then let them idle.
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(svc.open_conns() >= 33, "reactor must have accepted the idle fleet");
+    let after = thread_count();
+    // Margin of 8 absorbs unrelated tests' worker threads starting in
+    // parallel; the per-connection-thread design this guards against
+    // would add 32.
+    assert!(
+        after <= before + 8,
+        "idle connections must not add threads (before {before}, after {after})"
+    );
+    drop(idle);
+    let bye = probe.send("SHUTDOWN");
+    assert_eq!(bye, "OK BYE");
+    reactor.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Weighted fairness + batching
+// ---------------------------------------------------------------------
+
+/// Heavy-tail mix: one tenant floods 12 jobs at weight 1; a weight-8
+/// tenant submits 3.  Under DRR the paid tenant's jobs finish while
+/// the flood has barely started; under the flat PR-5 queue they'd sit
+/// behind ~a full round-robin of the flood (~all of it done first).
+#[test]
+fn weighted_fairness_under_heavy_tail_mix() {
+    let svc = Service::start_with(ServiceConfig {
+        engine_opts: EngineOptions { segn: 64, ..Default::default() },
+        workers: 2,
+        sched_policy: SchedPolicy::WeightedFair,
+        batch_max: 1, // isolate DRR ordering from ride-along batching
+        ..Default::default()
+    })
+    .unwrap();
+    let flood: Vec<u64> = (0..12)
+        .map(|k| {
+            svc.submit(JobSpec {
+                tenant: "flood".into(),
+                weight: 1,
+                min_l: 16,
+                max_l: 31,
+                ..small_spec(k)
+            })
+            .unwrap()
+        })
+        .collect();
+    let paid: Vec<u64> = (0..3)
+        .map(|k| {
+            svc.submit(JobSpec {
+                tenant: "paid".into(),
+                weight: 8,
+                min_l: 16,
+                max_l: 31,
+                ..small_spec(100 + k)
+            })
+            .unwrap()
+        })
+        .collect();
+    for &id in &paid {
+        assert!(
+            matches!(svc.wait(id), Some(JobState::Done { .. })),
+            "paid job {id} must complete"
+        );
+    }
+    // The moment the paid tenant drains, the flood must still be mostly
+    // pending — weight 8 vs 1 means the flood got at most ~1/8th of the
+    // steps while both were runnable.  (Flat FIFO finishes most of the
+    // flood first; this asserts the weights actually shaped order.)
+    let flood_done = flood
+        .iter()
+        .filter(|&&id| matches!(svc.status(id), Some(JobState::Done { .. })))
+        .count();
+    assert!(
+        flood_done <= 4,
+        "flood tenant finished {flood_done}/12 jobs before the weight-8 tenant drained — \
+         weights are not shaping the schedule"
+    );
+    let m = svc.sched_metrics();
+    assert!(m.budget_exhausted > 0, "DRR budgets never rotated");
+    // Steps attributed per tenant must be visible for operators.
+    let shares = svc.tenant_shares();
+    let paid_share = shares.iter().find(|s| s.name == "paid").expect("paid registered");
+    assert_eq!(paid_share.weight, 8);
+    assert_eq!(paid_share.steps, 3 * 16, "16 lengths per paid job, 3 jobs");
+    for &id in &flood {
+        svc.wait(id);
+    }
+    svc.shutdown();
+}
+
+/// Small jobs from different tenants share one engine lease round when
+/// batching is on.
+#[test]
+fn small_jobs_batch_across_tenants_on_one_lease() {
+    let svc = Service::start_with(ServiceConfig {
+        engine_opts: EngineOptions { segn: 64, ..Default::default() },
+        workers: 1,
+        sched_policy: SchedPolicy::WeightedFair,
+        batch_max: 4,
+        batch_small_points: 100_000,
+        ..Default::default()
+    })
+    .unwrap();
+    let ids: Vec<u64> = (0..6)
+        .map(|k| {
+            svc.submit(JobSpec {
+                tenant: format!("t{}", k % 3),
+                ..small_spec(k)
+            })
+            .unwrap()
+        })
+        .collect();
+    for id in ids {
+        assert!(matches!(svc.wait(id), Some(JobState::Done { .. })));
+    }
+    assert!(
+        svc.sched_metrics().batched_rounds > 0,
+        "six small jobs over three tenants on one worker must batch at least once"
+    );
+    svc.shutdown();
+}

@@ -112,9 +112,9 @@ impl Client {
 #[test]
 fn mixed_success_and_failure_batch() {
     let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 3).unwrap();
-    let ok_ids: Vec<u64> = (0..4).map(|k| svc.submit(spec(k))).collect();
-    let bad_dataset = svc.submit(JobSpec { dataset: "missing".into(), ..spec(9) });
-    let bad_range = svc.submit(JobSpec { min_l: 2_000, max_l: 2_100, ..spec(10) });
+    let ok_ids: Vec<u64> = (0..4).map(|k| svc.submit(spec(k)).unwrap()).collect();
+    let bad_dataset = svc.submit(JobSpec { dataset: "missing".into(), ..spec(9) }).unwrap();
+    let bad_range = svc.submit(JobSpec { min_l: 2_000, max_l: 2_100, ..spec(10) }).unwrap();
     for id in ok_ids {
         match svc.wait(id) {
             Some(JobState::Done { discords, .. }) => assert_eq!(discords.len(), 5),
@@ -171,7 +171,7 @@ fn many_small_jobs_saturate_workers() {
                 min_l: 20,
                 max_l: 22,
                 ..spec(k)
-            })
+            }).unwrap()
         })
         .collect();
     let mut total = 0;
@@ -193,9 +193,9 @@ fn many_small_jobs_saturate_workers() {
 #[test]
 fn small_jobs_finish_before_the_large_one() {
     let svc = Service::start(EngineOptions { segn: 64, ..Default::default() }, 1).unwrap();
-    let large = svc.submit(JobSpec { min_l: 32, max_l: 140, n: Some(4_000), ..spec(1) });
+    let large = svc.submit(JobSpec { min_l: 32, max_l: 140, n: Some(4_000), ..spec(1) }).unwrap();
     let small_ids: Vec<u64> = (0..3)
-        .map(|k| svc.submit(JobSpec { min_l: 32, max_l: 34, ..spec(k + 2) }))
+        .map(|k| svc.submit(JobSpec { min_l: 32, max_l: 34, ..spec(k + 2) }).unwrap())
         .collect();
     for id in &small_ids {
         match svc.wait(*id) {

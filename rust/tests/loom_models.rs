@@ -33,6 +33,8 @@
 //! | `sync_poison_recovery_no_lost_wakeup`   | `lock_recover`/`wait_recover` under |
 //! |                                         | a poisoned mutex                    |
 //! | `service_shutdown_no_lost_wakeup`       | stop-flag store under queue mutex   |
+//! | `service_submit_vs_shutdown`            | submit's stop check under the queue |
+//! |                                         | mutex (no stranded QUEUED jobs)     |
 //!
 //! Two negative tests (`*_is_caught`) run deliberately broken protocols
 //! and assert the checker fails them — they keep the passing models
@@ -296,4 +298,89 @@ fn service_shutdown_lost_wakeup_bug_is_caught() {
     // under some schedule (the checker reports it as a failed model).
     let result = model_outcome(|| service_shutdown_protocol(false));
     assert!(result.is_err(), "the unfixed shutdown protocol must deadlock under the model");
+}
+
+/// Distilled `Service::submit` vs `Service::shutdown` (PR 9 fix).
+/// Job lifecycle: 0 = not yet in the jobs table, 1 = tabled and
+/// non-terminal (QUEUED), 2 = terminal.  `submit` tables the job, then
+/// under the queue mutex either enqueues it (stop unseen) or observes
+/// `stop` and self-finalizes as `Failed("shutdown")`.  `shutdown`
+/// stores `stop` under the queue mutex, drains the queue, and
+/// finalizes every tabled non-terminal job.
+///
+/// The invariant: once both complete, the job is terminal and the
+/// queue is empty — no schedule may strand a QUEUED job that no worker
+/// will ever pop.  `check_stop_under_queue_lock = false` replays the
+/// pre-PR-9 submit (enqueue with no stop check): a submit that lands
+/// after shutdown's drain leaves the job QUEUED forever, which the
+/// checker must catch.
+fn service_submit_protocol(check_stop_under_queue_lock: bool) {
+    let queue: Arc<Mutex<VecDeque<u64>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let cv = Arc::new(Condvar::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let job = Arc::new(Mutex::new(0u8));
+
+    let submitter = {
+        let (queue, cv, stop, job) =
+            (Arc::clone(&queue), Arc::clone(&cv), Arc::clone(&stop), Arc::clone(&job));
+        thread::spawn(move || {
+            // Jobs-table insert happens-before the id is queued (a
+            // popped id missing from the table is dropped as forgotten).
+            *lock_recover(&job) = 1;
+            if check_stop_under_queue_lock {
+                let stopped = {
+                    let mut q = lock_recover(&queue);
+                    if stop.load(Ordering::Acquire) {
+                        true
+                    } else {
+                        q.push_back(7);
+                        cv.notify_one();
+                        false
+                    }
+                };
+                if stopped {
+                    // Self-finalize: Failed("shutdown"), unless the
+                    // drain pass got there first.
+                    let mut j = lock_recover(&job);
+                    if *j == 1 {
+                        *j = 2;
+                    }
+                }
+            } else {
+                // Pre-PR-9 submit: unconditional enqueue.
+                lock_recover(&queue).push_back(7);
+                cv.notify_one();
+            }
+        })
+    };
+    // Service::shutdown.
+    {
+        let _q = lock_recover(&queue);
+        stop.store(true, Ordering::Release);
+        cv.notify_all();
+    }
+    // (worker joins happen here in the real service)
+    lock_recover(&queue).clear();
+    {
+        let mut j = lock_recover(&job);
+        if *j == 1 {
+            *j = 2;
+        }
+    }
+    submitter.join().expect("submitter completes");
+    assert_eq!(*lock_recover(&job), 2, "job stranded QUEUED with no worker to pop it");
+    assert!(lock_recover(&queue).is_empty(), "drained queue must stay empty");
+}
+
+#[test]
+fn service_submit_vs_shutdown() {
+    loom::model(|| service_submit_protocol(true));
+}
+
+#[test]
+fn service_submit_unchecked_enqueue_bug_is_caught() {
+    // Regression pin for the PR 9 fix: the old submit (no stop check
+    // under the queue mutex) must strand a job under some schedule.
+    let result = model_outcome(|| service_submit_protocol(false));
+    assert!(result.is_err(), "the unfixed submit protocol must strand a QUEUED job");
 }

@@ -31,9 +31,15 @@
 #                                # DATA upload swept end-to-end, a job
 #                                # cancelled mid-sweep, METRICS, graceful
 #                                # SHUTDOWN), asserting the server exits
-#                                # cleanly.  Also part of the default
-#                                # (non --fast) gate, which builds the
-#                                # release binary it needs anyway.
+#                                # cleanly.  Then run the serving load
+#                                # generator (examples/service_loadgen)
+#                                # against the evented front end and
+#                                # assert BENCH_service.json records a
+#                                # non-zero "rejected" count (admission
+#                                # control actually pushed back).  Also
+#                                # part of the default (non --fast)
+#                                # gate, which builds the release
+#                                # binary it needs anyway.
 #   scripts/ci.sh --chaos        # run the fault-injection / checkpoint
 #                                # chaos suite (rust/tests/chaos_faults.rs)
 #                                # under BOTH tile kernels: kill-and-resume
@@ -321,6 +327,23 @@ if [ "$SERVICE_SMOKE" -eq 1 ]; then
   fi
   rm -f "$SMOKE_LOG"
   echo "service smoke: clean shutdown"
+
+  # Second leg: the admission/fairness load generator.  It boots its own
+  # in-process service (round-robin baseline, then weighted-fair), drives
+  # the evented front end over real sockets, and writes BENCH_service.json.
+  # The admission burst must actually trip the bounded queue: a zero
+  # "rejected" count means ERR BUSY back-pressure silently stopped firing.
+  echo "== service loadgen (admission + weighted fairness) =="
+  cargo build --release --example service_loadgen
+  target/release/examples/service_loadgen BENCH_service.json
+  # `|| true`: a missing key must reach the diagnostic below, not let
+  # pipefail+set -e kill the script silently at this assignment.
+  rej=$(grep -o '"rejected": *[0-9]*' BENCH_service.json | tail -n1 | grep -o '[0-9]*$' || true)
+  if [ -z "${rej:-}" ] || [ "$rej" -eq 0 ]; then
+    echo "service loadgen: \"rejected\" missing or zero in BENCH_service.json — admission control did not reject under burst" >&2
+    exit 1
+  fi
+  echo "service loadgen: admission rejected $rej submits under burst"
 fi
 
 if [ "$KERNEL_MATRIX" -eq 1 ]; then

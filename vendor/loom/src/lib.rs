@@ -674,6 +674,17 @@ pub mod sync {
         }
     }
 
+    /// Mirror of `std::sync::WaitTimeoutResult` for the model's
+    /// always-times-out [`Condvar::wait_timeout`].
+    #[derive(Clone, Copy, Debug)]
+    pub struct WaitTimeoutResult(pub(crate) bool);
+
+    impl WaitTimeoutResult {
+        pub fn timed_out(&self) -> bool {
+            self.0
+        }
+    }
+
     /// Model condvar.  `notify_one` with several waiters is a scheduling
     /// decision; there are no spurious wakeups.
     #[derive(Default)]
@@ -720,6 +731,31 @@ pub mod sync {
             }
             // Notified (no spurious wakeups): re-acquire.
             lock.lock_no_switch()
+        }
+
+        /// Model `wait_timeout`: a timed wait can always time out, so
+        /// the model treats the timeout as firing immediately — the
+        /// lock is released, every other thread gets a scheduling turn,
+        /// and the call returns with `timed_out() == true` without ever
+        /// entering a blocked state.  This over-approximates std (which
+        /// may instead wake via an earlier notify): any protocol that
+        /// re-checks its predicate after a timed wait — the only sound
+        /// way to use one — is explored faithfully, and a thread parked
+        /// in `wait_timeout` can never contribute to a model deadlock.
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            _dur: std::time::Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            let lock: &'a Mutex<T> = guard.lock;
+            drop(guard); // releases the lock and wakes contenders
+            rt::switch_point();
+            match lock.lock_no_switch() {
+                Ok(g) => Ok((g, WaitTimeoutResult(true))),
+                Err(p) => {
+                    Err(PoisonError::new((p.into_inner(), WaitTimeoutResult(true))))
+                }
+            }
         }
 
         pub fn notify_one(&self) {
@@ -1023,6 +1059,32 @@ mod tests {
                 let mut g = m.lock().unwrap();
                 while !*g {
                     g = cv.wait(g).unwrap();
+                }
+            });
+            let (m, cv) = &*state;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+            t.join().unwrap();
+        });
+    }
+
+    /// A predicate loop over `wait_timeout` terminates in every
+    /// schedule: the model's timed wait always "times out", so a
+    /// heartbeat thread parked on one can never deadlock the model,
+    /// and the concurrent flag store is still observed.
+    #[test]
+    fn wait_timeout_never_blocks() {
+        super::model(|| {
+            let state = Arc::new((Mutex::new(false), Condvar::new()));
+            let s2 = Arc::clone(&state);
+            let t = super::thread::spawn(move || {
+                let (m, cv) = &*s2;
+                let mut g = m.lock().unwrap();
+                while !*g {
+                    let (g2, timed) =
+                        cv.wait_timeout(g, std::time::Duration::from_millis(1)).unwrap();
+                    g = g2;
+                    assert!(timed.timed_out(), "the model's timed wait always times out");
                 }
             });
             let (m, cv) = &*state;
