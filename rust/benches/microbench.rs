@@ -156,6 +156,48 @@ fn main() {
             ("speedup_vs_scalar".into(), format!("{:.2}", s_k_scalar.median / s_k_lanes.median)),
         ],
     );
+    // The width/precision variants of the same generic lane body: the
+    // AVX-512-width f64 kernel (safe Rust everywhere; fast where the
+    // hardware has 512-bit units — the note records what Auto picked on
+    // this host) and the tolerance-banded f32 kernel (the accelerator
+    // parity story; ~2x lane density on the same vector width).
+    let auto_kernel = TileKernel::Auto.resolve();
+    let s_k_lanes8 = measure(1, default_reps(), || {
+        std::hint::black_box(compute_tile_with_kernel(
+            &view,
+            segn,
+            1.0,
+            task,
+            TileKernel::Lanes8,
+        ));
+    });
+    bench.record(
+        "native_tile_kernel_lanes8",
+        format!("W=8 chunked inner loop (auto resolves to {})", auto_kernel.name()),
+        s_k_lanes8,
+        vec![
+            ("mcells_per_s".into(), format!("{:.1}", cells / s_k_lanes8.median / 1e6)),
+            ("speedup_vs_scalar".into(), format!("{:.2}", s_k_scalar.median / s_k_lanes8.median)),
+        ],
+    );
+    let s_k_f32 = measure(1, default_reps(), || {
+        std::hint::black_box(compute_tile_with_kernel(
+            &view,
+            segn,
+            1.0,
+            task,
+            TileKernel::Lanes4F32,
+        ));
+    });
+    bench.record(
+        "native_tile_kernel_lanes4f32",
+        "f32 lanes, tolerance-banded",
+        s_k_f32,
+        vec![
+            ("mcells_per_s".into(), format!("{:.1}", cells / s_k_f32.median / 1e6)),
+            ("speedup_vs_scalar".into(), format!("{:.2}", s_k_scalar.median / s_k_f32.median)),
+        ],
+    );
 
     // Seed prefetch: K cached QT rows walked m0 -> m1, lazily (one
     // seed_into advance per row, serialized through the shard locks) vs
@@ -255,6 +297,7 @@ fn main() {
                 "simd_kernel",
                 Json::obj()
                     .set("lanes", LANES)
+                    .set("auto_resolves_to", auto_kernel.name())
                     .set(
                         "scalar",
                         summary_json(&s_k_scalar)
@@ -264,6 +307,18 @@ fn main() {
                         "lanes4",
                         summary_json(&s_k_lanes)
                             .set("mcells_per_s", cells / s_k_lanes.median / 1e6),
+                    )
+                    .set(
+                        "lanes8",
+                        summary_json(&s_k_lanes8)
+                            .set("mcells_per_s", cells / s_k_lanes8.median / 1e6)
+                            .set("speedup_vs_scalar", s_k_scalar.median / s_k_lanes8.median),
+                    )
+                    .set(
+                        "lanes4f32",
+                        summary_json(&s_k_f32)
+                            .set("mcells_per_s", cells / s_k_f32.median / 1e6)
+                            .set("speedup_vs_scalar", s_k_scalar.median / s_k_f32.median),
                     )
                     .set("speedup", s_k_scalar.median / s_k_lanes.median),
             ),

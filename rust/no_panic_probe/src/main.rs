@@ -11,13 +11,15 @@
 //!
 //! Scope: the kernels whose `// panic-free:` notes claim *provable*
 //! freedom — `ed2norm_from_qt`, `corr_to_ed2`, `corr_saturates`,
-//! `ed2_lane_chunk`, `dot`, and `ed2_early_abandon`.  `dot` and
-//! `ed2_early_abandon` document "both slices the same length" as a
-//! caller guarantee, so the probe drives them with statically
-//! equal-length inputs — it proves the annotated claim (panic-free
-//! under the stated precondition), not an unconditional absence the
-//! functions never promised.  Inputs pass through `black_box` so the
-//! proof cannot lean on constant folding.
+//! `ed2_lane_chunk` plus its width/precision-generic core
+//! `ed2_lane_chunk_w` at the two other shipped instantiations
+//! (`<f64, 8>` for `Lanes8`, `<f32, 4>` for `Lanes4F32`), `dot`, and
+//! `ed2_early_abandon`.  `dot` and `ed2_early_abandon` document "both
+//! slices the same length" as a caller guarantee, so the probe drives
+//! them with statically equal-length inputs — it proves the annotated
+//! claim (panic-free under the stated precondition), not an
+//! unconditional absence the functions never promised.  Inputs pass
+//! through `black_box` so the proof cannot lean on constant folding.
 //!
 //! Run via `scripts/ci.sh --no-panic` (release build; skipped with a
 //! notice when cargo is absent).
@@ -25,7 +27,8 @@
 use std::hint::black_box;
 
 use palmad::core::distance::{
-    corr_saturates, corr_to_ed2, dot, ed2_early_abandon, ed2_lane_chunk, ed2norm_from_qt, LANES,
+    corr_saturates, corr_to_ed2, dot, ed2_early_abandon, ed2_lane_chunk, ed2_lane_chunk_w,
+    ed2norm_from_qt, LANES, MAX_LANES,
 };
 
 /// Wrap `$body`; reaching a panic from it becomes a link error naming
@@ -74,6 +77,36 @@ fn main() {
         ed2_lane_chunk(&lanes_in, &mmu, &inv_sig, 0.25, 4.0, 32.0, &mut dist)
     );
 
+    // The generic core at its other shipped instantiations: W=8 f64
+    // (Lanes8) and W=4 f32 (Lanes4F32).  Fixed-extent array refs make
+    // the claim structural at every width/precision, but only probed
+    // instantiations are *proved* — so probe them all.
+    let lanes8_in = black_box([1.0f64; MAX_LANES]);
+    let mmu8 = black_box([0.5f64; MAX_LANES]);
+    let inv_sig8 = black_box([2.0f64; MAX_LANES]);
+    let mut dist8 = [0.0f64; MAX_LANES];
+    let sat8 = assert_no_panic!(
+        PANIC_REACHABLE_IN_ed2_lane_chunk_w_f64x8,
+        ed2_lane_chunk_w::<f64, MAX_LANES>(&lanes8_in, &mmu8, &inv_sig8, 0.25, 4.0, 32.0, &mut dist8)
+    );
+
+    let lanes_f32 = black_box([1.0f32; LANES]);
+    let mmu_f32 = black_box([0.5f32; LANES]);
+    let inv_sig_f32 = black_box([2.0f32; LANES]);
+    let mut dist_f32 = [0.0f32; LANES];
+    let sat_f32 = assert_no_panic!(
+        PANIC_REACHABLE_IN_ed2_lane_chunk_w_f32x4,
+        ed2_lane_chunk_w::<f32, LANES>(
+            &lanes_f32,
+            &mmu_f32,
+            &inv_sig_f32,
+            0.25,
+            4.0,
+            32.0,
+            &mut dist_f32
+        )
+    );
+
     // Statically equal-length windows: the kernels' documented caller
     // guarantee, under which their panic-free notes hold.
     let a = black_box([0.125f64; 37]);
@@ -88,7 +121,7 @@ fn main() {
     // Consume every result so nothing is dead-code-eliminated before
     // the guards have done their job.
     println!(
-        "no-panic probe: {} {} {} {} {} {:?} {:?}",
-        d1, d2, sat, sat2, d3, d4, dist
+        "no-panic probe: {} {} {} {} {} {} {} {:?} {:?} {:?} {:?}",
+        d1, d2, sat, sat2, sat8, sat_f32, d3, d4, dist, dist8, dist_f32
     );
 }

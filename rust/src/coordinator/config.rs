@@ -98,17 +98,28 @@ mod tests {
 
     #[test]
     fn parse_kernels() {
+        assert_eq!(TileKernel::parse("auto").unwrap(), TileKernel::Auto);
         assert_eq!(TileKernel::parse("scalar").unwrap(), TileKernel::Scalar);
         assert_eq!(TileKernel::parse("lanes4").unwrap(), TileKernel::Lanes4);
-        assert!(TileKernel::parse("avx512").is_err());
+        assert_eq!(TileKernel::parse("lanes8").unwrap(), TileKernel::Lanes8);
+        assert_eq!(TileKernel::parse("lanes4f32").unwrap(), TileKernel::Lanes4F32);
+        assert!(TileKernel::parse("avx512").is_err(), "feature names are not kernel names");
     }
 
     #[test]
     fn kernel_threads_through_to_native_engine() {
-        // Both kernels build; selection is observable only through the
-        // conformance counters (outputs are bit-identical by design), so
-        // here we just pin that construction accepts each.
-        for kernel in [TileKernel::Scalar, TileKernel::Lanes4] {
+        // Every kernel builds (Lanes8 is safe Rust on any host — the
+        // AVX-512 speedup is the runtime dispatcher's concern, not a
+        // construction gate); selection is observable only through the
+        // conformance counters, so here we just pin that construction
+        // accepts each.
+        for kernel in [
+            TileKernel::Auto,
+            TileKernel::Scalar,
+            TileKernel::Lanes4,
+            TileKernel::Lanes8,
+            TileKernel::Lanes4F32,
+        ] {
             let e = build_engine(&EngineOptions { kernel, ..Default::default() }).unwrap();
             assert_eq!(e.name(), "native");
         }

@@ -78,7 +78,7 @@ impl std::fmt::Display for MerlinMetrics {
             f,
             "drag_calls={} retries={} discords={} tiles={} skipped={} ({:.1}% early-stop) \
              seeds(hit/adv/miss)={}/{}/{} prefetch(rows/batches)={}/{} \
-             kernel(sat/flat)={}/{} ws(resets/grows)={}/{} \
+             kernel={} kernel(sat/flat)={}/{} ws(resets/grows)={}/{} \
              select={:.3}s refine={:.3}s stats={:.3}s prefetch={:.3}s total={:.3}s",
             self.drag_calls,
             self.retries,
@@ -91,6 +91,9 @@ impl std::fmt::Display for MerlinMetrics {
             self.seed.seed_misses,
             self.seed.seed_prefetched,
             self.seed.prefetch_batches,
+            // The concrete kernel the engine ran (Auto already resolved
+            // by the engine); "unset" for engines that predate the gauge.
+            self.seed.kernel.map_or("unset", |k| k.name()),
             self.seed.clamp_saturations,
             self.seed.flat_cells,
             self.workspace.resets,
@@ -125,9 +128,13 @@ mod tests {
 
     #[test]
     fn display_contains_fields() {
-        let m = MerlinMetrics { drag_calls: 3, ..Default::default() };
+        let mut m = MerlinMetrics { drag_calls: 3, ..Default::default() };
         let s = format!("{m}");
         assert!(s.contains("drag_calls=3"));
+        assert!(s.contains("kernel=unset"), "unreported kernel identity missing: {s}");
         assert!(s.contains("kernel(sat/flat)="), "kernel decision gauges missing: {s}");
+        m.seed.kernel = Some(crate::engines::TileKernel::Lanes8);
+        let s = format!("{m}");
+        assert!(s.contains("kernel=lanes8"), "kernel identity missing: {s}");
     }
 }

@@ -15,12 +15,23 @@
 
 use super::stats::SIGMA_FLOOR;
 
-/// Lane width of the explicit multi-lane tile kernel
+/// Lane width of the default multi-lane tile kernel
 /// (`TileKernel::Lanes4`): columns are processed in fixed `[f64; LANES]`
-/// chunks with a scalar tail.  f64x4 is one AVX2 register; widening to
-/// AVX-512 (LANES = 8) is a mechanical change once `cargo asm` confirms
-/// the codegen (ROADMAP / EXPERIMENTS.md §SIMD).
+/// chunks with a scalar tail.  f64x4 is one AVX2 register.  Wider and
+/// narrower kernels are *not* constant bumps on this value: every lane
+/// variant (`Lanes4`, the f64x8 AVX-512 `Lanes8`, the f32
+/// `Lanes4F32`) is an instantiation of the width/element-generic
+/// [`ed2_lane_chunk_w`] via [`LaneElem`], and `TileKernel::Auto`
+/// picks between `Lanes8` and `Lanes4` once per process with
+/// `is_x86_feature_detected!("avx512f")` (cached in a `OnceLock`; see
+/// `engines::TileKernel::resolve` and EXPERIMENTS.md §SIMD for the
+/// dispatch table).
 pub const LANES: usize = 4;
+
+/// Widest lane width any kernel instantiates (`TileKernel::Lanes8`).
+/// Tile scratch rows are padded to a multiple of this so every kernel
+/// can load full-width chunks without overrunning a live row.
+pub const MAX_LANES: usize = 8;
 
 /// Relative threshold for treating a window as constant ("flat"):
 /// `sigma <= FLAT_EPS * max(|mu|, 1)` (see [`is_flat`]).
@@ -173,16 +184,134 @@ pub fn corr_saturates(corr: f64) -> bool {
     corr > 1.0 || corr < -1.0
 }
 
-/// One `LANES`-wide chunk of the tile kernel's fast distance path:
+/// Element type of a width-generic tile-kernel lane.
+///
+/// The per-row kernel passes (`engines/scratch.rs`) and the lane chunk
+/// below are generic over this trait so `Lanes4` (f64x4), `Lanes8`
+/// (f64x8) and `Lanes4F32` (f32x4) share one set of loop bodies instead
+/// of three near-copies.  The `f64` impl delegates straight to the
+/// scalar helpers above ([`corr_to_ed2`], [`corr_saturates`], identity
+/// `from_f64`), which makes "f64 lane kernels are bit-identical to the
+/// scalar oracle" a structural property rather than a testing hope; the
+/// `f32` impl performs the *same operation sequence* in f32, and its
+/// rounding is what the tolerance band in
+/// `rust/tests/kernel_conformance.rs` budgets for.
+pub trait LaneElem:
+    Copy
+    + PartialOrd
+    + core::ops::Add<Output = Self>
+    + core::ops::Sub<Output = Self>
+    + core::ops::Mul<Output = Self>
+    + core::fmt::Debug
+    + 'static
+{
+    const ZERO: Self;
+    const INFINITY: Self;
+    /// Narrow (f32) or pass through (f64) a series/stat value.
+    fn from_f64(x: f64) -> Self;
+    /// Widen back for the f64 tile outputs (exact for both impls).
+    fn to_f64(self) -> f64;
+    /// IEEE minNum: propagates the non-NaN operand, like `f64::min`.
+    fn min(self, other: Self) -> Self;
+    /// The shared clamp, [`corr_to_ed2`], at this element's precision.
+    fn corr_to_ed2(self, two_m: Self) -> Self;
+    /// The shared saturation gauge, [`corr_saturates`].
+    fn saturates(self) -> bool;
+}
+
+impl LaneElem for f64 {
+    const ZERO: Self = 0.0;
+    const INFINITY: Self = f64::INFINITY;
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn min(self, other: Self) -> Self {
+        f64::min(self, other)
+    }
+    #[inline]
+    fn corr_to_ed2(self, two_m: Self) -> Self {
+        corr_to_ed2(self, two_m)
+    }
+    #[inline]
+    fn saturates(self) -> bool {
+        corr_saturates(self)
+    }
+}
+
+impl LaneElem for f32 {
+    const ZERO: Self = 0.0;
+    const INFINITY: Self = f32::INFINITY;
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        // order: deliberate f64 -> f32 narrowing — the Lanes4F32 kernel's
+        // whole point; the banded comparator in kernel_conformance.rs
+        // budgets for exactly this rounding (EXPERIMENTS.md §SIMD
+        // derives the bound, ANALYSIS.md catalogues the note).
+        x as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn min(self, other: Self) -> Self {
+        f32::min(self, other)
+    }
+    #[inline]
+    fn corr_to_ed2(self, two_m: Self) -> Self {
+        two_m * (1.0 - self.clamp(-1.0, 1.0))
+    }
+    #[inline]
+    fn saturates(self) -> bool {
+        self > 1.0 || self < -1.0
+    }
+}
+
+/// One `W`-wide chunk of a tile kernel's fast distance path:
 /// `dist[l] = two_m * (1 - clamp((qt[l] - mmu_b[l]*mu_a) *
 /// (inv_msig_b[l]*inv_sig_a)))`, all lanes independent and branchless.
 /// Returns the number of saturated (clamped) lanes.
 ///
 /// Per-element operation order is identical to the scalar loop, so the
-/// lane kernel's outputs are bit-identical to the scalar oracle (Rust
-/// never contracts float ops into FMAs; pinned by
+/// f64 instantiations (`W = 4` for `Lanes4`, `W = 8` for `Lanes8`) are
+/// bit-identical to the scalar oracle at any width (Rust never
+/// contracts float ops into FMAs; pinned by
 /// `rust/tests/kernel_conformance.rs`).  Fixed-size array refs give the
 /// autovectorizer exact extents — no in-loop bounds checks.
+// hot-path: every lane kernel's distance chunk, every fast-path column.
+#[inline]
+pub fn ed2_lane_chunk_w<E: LaneElem, const W: usize>(
+    qt: &[E; W],
+    mmu_b: &[E; W],
+    inv_msig_b: &[E; W],
+    mu_a: E,
+    inv_sig_a: E,
+    two_m: E,
+    dist: &mut [E; W],
+) -> u64 {
+    let mut corr = [E::ZERO; W];
+    for l in 0..W {
+        corr[l] = (qt[l] - mmu_b[l] * mu_a) * (inv_msig_b[l] * inv_sig_a);
+    }
+    let mut sat = 0u64;
+    for &c in &corr {
+        sat += c.saturates() as u64;
+    }
+    for l in 0..W {
+        dist[l] = corr[l].corr_to_ed2(two_m);
+    }
+    sat
+}
+
+/// [`ed2_lane_chunk_w`] at the default width/element (`f64x4`) — the
+/// `Lanes4` kernel's chunk, kept as a named entry point for the
+/// no-panic probe and the PR-4 conformance tests.
 // hot-path: the Lanes4 kernel's distance chunk, every fast-path column.
 #[inline]
 pub fn ed2_lane_chunk(
@@ -194,45 +323,47 @@ pub fn ed2_lane_chunk(
     two_m: f64,
     dist: &mut [f64; LANES],
 ) -> u64 {
-    let mut corr = [0.0f64; LANES];
-    for l in 0..LANES {
-        corr[l] = (qt[l] - mmu_b[l] * mu_a) * (inv_msig_b[l] * inv_sig_a);
-    }
-    let mut sat = 0u64;
-    for &c in &corr {
-        sat += corr_saturates(c) as u64;
-    }
-    for l in 0..LANES {
-        dist[l] = corr_to_ed2(corr[l], two_m);
-    }
-    sat
+    ed2_lane_chunk_w::<f64, LANES>(qt, mmu_b, inv_msig_b, mu_a, inv_sig_a, two_m, dist)
 }
 
-/// Dot product of two raw windows.
+/// Dot product of two raw f64 windows at element precision `E`: each
+/// factor is narrowed through [`LaneElem::from_f64`] *before* the
+/// multiply, so the f32 instantiation models an accelerator that
+/// received f32 inputs (not an f64 dot rounded at the end).  The f64
+/// instantiation is the identity narrowing — bit-identical to the
+/// historical `dot`.
 // hot-path: QT seeding — every tile's first row and every seed-cache
 // miss pays one call per column.
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+pub fn dot_w<E: LaneElem>(a: &[f64], b: &[f64]) -> E {
     debug_assert_eq!(a.len(), b.len());
     // Four-lane manual unroll: reliably autovectorizes and keeps four
     // independent accumulators (better rounding + ILP than a single chain).
-    let mut acc = [0.0f64; 4];
+    let mut acc = [E::ZERO; 4];
     let chunks = a.len() / 4;
     // panic-free: i ranges over c*4 with c < chunks = a.len()/4, so
     // i+3 < a.len(); the tail loop is bounded by a.len(); b is the
     // same length (debug-asserted, guaranteed by every caller).
     for c in 0..chunks {
         let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
+        acc[0] = acc[0] + E::from_f64(a[i]) * E::from_f64(b[i]);
+        acc[1] = acc[1] + E::from_f64(a[i + 1]) * E::from_f64(b[i + 1]);
+        acc[2] = acc[2] + E::from_f64(a[i + 2]) * E::from_f64(b[i + 2]);
+        acc[3] = acc[3] + E::from_f64(a[i + 3]) * E::from_f64(b[i + 3]);
     }
     let mut s = acc[0] + acc[1] + acc[2] + acc[3];
     for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
+        s = s + E::from_f64(a[i]) * E::from_f64(b[i]);
     }
     s
+}
+
+/// Dot product of two raw windows ([`dot_w`] at f64).
+// hot-path: QT seeding — every tile's first row and every seed-cache
+// miss pays one call per column.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_w::<f64>(a, b)
 }
 
 /// Early-abandoning squared distance between two *pre-normalized* windows.
@@ -405,6 +536,84 @@ mod tests {
                 );
             }
             assert_eq!(got_sat, want_sat, "case {case}");
+        }
+    }
+
+    #[test]
+    fn lane_chunk_w8_is_bit_identical_to_scalar_ops() {
+        // Same oracle as the LANES=4 test above, at the Lanes8 width:
+        // the f64 instantiation must stay bit-exact at *any* W.
+        let mut rng = Rng::seed(13);
+        for case in 0..50 {
+            let qt: [f64; MAX_LANES] = std::array::from_fn(|_| rng.normal() * 40.0);
+            let mmu_b: [f64; MAX_LANES] = std::array::from_fn(|_| rng.normal() * 3.0);
+            let inv_msig_b: [f64; MAX_LANES] = std::array::from_fn(|_| rng.range(0.01, 2.0));
+            let (mu_a, inv_sig_a) = (rng.normal(), rng.range(0.05, 3.0));
+            let two_m = 2.0 * rng.int_in(4, 64) as f64;
+            let mut lane = [0.0f64; MAX_LANES];
+            let got_sat = ed2_lane_chunk_w::<f64, MAX_LANES>(
+                &qt,
+                &mmu_b,
+                &inv_msig_b,
+                mu_a,
+                inv_sig_a,
+                two_m,
+                &mut lane,
+            );
+            let mut want_sat = 0u64;
+            for l in 0..MAX_LANES {
+                let corr = (qt[l] - mmu_b[l] * mu_a) * (inv_msig_b[l] * inv_sig_a);
+                want_sat += corr_saturates(corr) as u64;
+                let want = corr_to_ed2(corr, two_m);
+                assert_eq!(lane[l].to_bits(), want.to_bits(), "case {case} lane {l}");
+            }
+            assert_eq!(got_sat, want_sat, "case {case}");
+        }
+    }
+
+    #[test]
+    fn f32_lane_chunk_matches_f32_scalar_sequence() {
+        // The f32 instantiation must perform the exact scalar f32
+        // operation sequence per lane (same structural guarantee the
+        // f64 kernels get, one precision down).
+        let mut rng = Rng::seed(19);
+        for case in 0..50 {
+            let qt: [f32; LANES] = std::array::from_fn(|_| (rng.normal() * 40.0) as f32);
+            let mmu_b: [f32; LANES] = std::array::from_fn(|_| (rng.normal() * 3.0) as f32);
+            let inv_msig_b: [f32; LANES] = std::array::from_fn(|_| rng.range(0.01, 2.0) as f32);
+            let (mu_a, inv_sig_a) = (rng.normal() as f32, rng.range(0.05, 3.0) as f32);
+            let two_m = 2.0f32 * rng.int_in(4, 64) as f32;
+            let mut lane = [0.0f32; LANES];
+            let got_sat = ed2_lane_chunk_w::<f32, LANES>(
+                &qt,
+                &mmu_b,
+                &inv_msig_b,
+                mu_a,
+                inv_sig_a,
+                two_m,
+                &mut lane,
+            );
+            let mut want_sat = 0u64;
+            for l in 0..LANES {
+                let corr = (qt[l] - mmu_b[l] * mu_a) * (inv_msig_b[l] * inv_sig_a);
+                want_sat += (corr > 1.0 || corr < -1.0) as u64;
+                let want = two_m * (1.0 - corr.clamp(-1.0, 1.0));
+                assert_eq!(lane[l].to_bits(), want.to_bits(), "case {case} lane {l}");
+            }
+            assert_eq!(got_sat, want_sat, "case {case}");
+        }
+    }
+
+    #[test]
+    fn dot_w_f64_is_dot_and_f32_is_close() {
+        let mut rng = Rng::seed(23);
+        for n in [0usize, 1, 3, 4, 7, 37, 256] {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let d64: f64 = dot_w::<f64>(&a, &b);
+            assert_eq!(d64.to_bits(), dot(&a, &b).to_bits(), "n={n}");
+            let d32: f32 = dot_w::<f32>(&a, &b);
+            assert!((d32 as f64 - d64).abs() <= 1e-3 * (1.0 + d64.abs()), "n={n}: {d32} vs {d64}");
         }
     }
 }

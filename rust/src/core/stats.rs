@@ -17,7 +17,7 @@
 //! (stuck-sensor) windows produce finite distances — required by the
 //! PolyTER case study (§5) and matching matrix-profile practice.
 
-use super::distance::{is_flat, LANES};
+use super::distance::{is_flat, LaneElem, LANES};
 
 /// Floor applied to every sigma.  Must equal `python/compile/shapes.py::SIGMA_FLOOR`.
 pub const SIGMA_FLOOR: f64 = 1e-8;
@@ -30,16 +30,21 @@ pub const SIGMA_FLOOR: f64 = 1e-8;
 ///
 /// Chunked over [`LANES`] columns with a scalar tail, but every lane
 /// performs the exact scalar operation sequence — elementwise maps are
-/// bit-identical under any chunking, so both tile kernels share this
+/// bit-identical under any chunking, so every tile kernel shares this
 /// one implementation (one more place where "same decisions" is
-/// structural, not tested-for).
+/// structural, not tested-for).  Generic over the *output* element
+/// only: products are always computed in f64 and then narrowed through
+/// [`LaneElem::from_f64`] (identity for f64 — bit-identical to the
+/// historical monomorphic version; one rounding for the f32 kernel).
+/// Crucially, the flat decision is always taken on the f64 stats, so
+/// flat routing is kernel-invariant by construction.
 // hot-path: per-column stat products, once per tile bind.
-pub fn stat_products_into(
+pub fn stat_products_into<E: LaneElem>(
     mu: &[f64],
     sig: &[f64],
     mf: f64,
-    mmu_b: &mut [f64],
-    inv_msig_b: &mut [f64],
+    mmu_b: &mut [E],
+    inv_msig_b: &mut [E],
 ) -> bool {
     let nb = mu.len();
     debug_assert!(sig.len() == nb && mmu_b.len() == nb && inv_msig_b.len() == nb);
@@ -52,10 +57,10 @@ pub fn stat_products_into(
     for c in 0..chunks {
         let j = c * LANES;
         for l in 0..LANES {
-            mmu_b[j + l] = mf * mu[j + l];
+            mmu_b[j + l] = E::from_f64(mf * mu[j + l]);
         }
         for l in 0..LANES {
-            inv_msig_b[j + l] = 1.0 / (mf * sig[j + l]);
+            inv_msig_b[j + l] = E::from_f64(1.0 / (mf * sig[j + l]));
         }
         for l in 0..LANES {
             // panic-free: same j+l < nb bound as the lanes above.
@@ -65,8 +70,8 @@ pub fn stat_products_into(
     let mut any_flat = flat.iter().any(|&f| f);
     // panic-free: scalar tail, j < nb bounds every slice access.
     for j in chunks * LANES..nb {
-        mmu_b[j] = mf * mu[j];
-        inv_msig_b[j] = 1.0 / (mf * sig[j]);
+        mmu_b[j] = E::from_f64(mf * mu[j]);
+        inv_msig_b[j] = E::from_f64(1.0 / (mf * sig[j]));
         any_flat |= is_flat(sig[j], mu[j]);
     }
     any_flat

@@ -31,37 +31,86 @@ use anyhow::Result;
 use crate::core::stats::RollingStats;
 use crate::runtime::types::TileOutputs;
 
-pub use crate::core::distance::LANES;
+pub use crate::core::distance::{LANES, MAX_LANES};
+
+/// CLI/env spellings of every concrete tile kernel, in conformance-matrix
+/// order.  `scripts/ci.sh --kernel-matrix` extracts this list textually
+/// (single line, keep it one) so a new variant cannot dodge the matrix
+/// by forgetting a shell edit; `auto` is deliberately absent — it
+/// resolves to one of these.
+pub const KERNEL_NAMES: &[&str] = &["scalar", "lanes4", "lanes8", "lanes4f32"];
 
 /// Inner-loop kernel of the native tile pipeline.
 ///
-/// Both kernels are bit-identical by construction: every pass is either
-/// an elementwise map (distances, QT recurrence, column folds — chunking
-/// cannot change per-element rounding, and Rust never contracts float
-/// ops into FMAs) or a reduction whose operator is insensitive to lane
-/// regrouping over these inputs (`min` with `+inf` identities and
-/// NaN-dropping semantics, boolean OR).  The differential harness in
-/// `rust/tests/kernel_conformance.rs` pins that claim, so `Scalar` stays
-/// available as the bit-level oracle and the bench baseline while
-/// `Lanes4` is what production configs run.
+/// All f64 kernels are bit-identical by construction: every pass is
+/// either an elementwise map (distances, QT recurrence, column folds —
+/// chunking cannot change per-element rounding, and Rust never
+/// contracts float ops into FMAs) or a reduction whose operator is
+/// insensitive to lane regrouping over these inputs (`min` with `+inf`
+/// identities and NaN-dropping semantics, boolean OR).  The
+/// differential harness in `rust/tests/kernel_conformance.rs` pins that
+/// claim, so `Scalar` stays available as the bit-level oracle and the
+/// bench baseline.  `Lanes4F32` is the deliberate exception: it runs
+/// the same loop bodies at f32 precision and is held to a *derived
+/// tolerance band* (index-exact discords, distances within the band)
+/// rather than bit equality — the first tolerance-banded leg of the
+/// cross-engine conformance suite.  Production configs run `Auto`,
+/// which resolves once per process to the widest f64 kernel the host
+/// supports.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum TileKernel {
+    /// Resolve at first use: `Lanes8` when the host has AVX-512F
+    /// (`is_x86_feature_detected!("avx512f")`), else `Lanes4`.  The
+    /// decision is made once per process, cached in a `OnceLock`, and
+    /// reported via [`EnginePerfCounters::kernel`] / the METRICS
+    /// `kernel=` segment.
+    #[default]
+    Auto,
     /// Per-column scalar loops — the oracle and the `simd_kernel` bench
     /// baseline.
     Scalar,
     /// Explicit [`LANES`]-wide chunks of `[f64; LANES]` accumulators
     /// (branchless, fixed-extent array refs for the vectorizer) with a
     /// scalar tail for widths off the lane grid.
-    #[default]
     Lanes4,
+    /// The same loop bodies at `W = 8` (`[f64; 8]` chunks — one AVX-512
+    /// zmm register).  Plain safe Rust: correct on any CPU, only *fast*
+    /// with AVX-512F, which is why `Auto` gates it on feature detection
+    /// rather than compiling it conditionally.
+    Lanes8,
+    /// The same loop bodies at `W = 4` over **f32** — the accelerator
+    /// parity kernel.  Series values and stat products are narrowed at
+    /// the tile boundary, QT rows are seeded and recurred in f32, and
+    /// only the per-row/column minima are widened back into the f64
+    /// tile outputs.  Flat routing stays on the f64 stats, so
+    /// `flat_cells` is kernel-invariant; distances carry f32 rounding
+    /// and are conformance-checked against the derived band instead of
+    /// bit equality.
+    Lanes4F32,
 }
 
 impl TileKernel {
     pub fn parse(s: &str) -> Result<Self> {
         match s {
+            "auto" => Ok(Self::Auto),
             "scalar" => Ok(Self::Scalar),
             "lanes4" => Ok(Self::Lanes4),
-            other => anyhow::bail!("unknown tile kernel {other:?} (scalar|lanes4)"),
+            "lanes8" => Ok(Self::Lanes8),
+            "lanes4f32" => Ok(Self::Lanes4F32),
+            other => {
+                anyhow::bail!("unknown tile kernel {other:?} (auto|scalar|lanes4|lanes8|lanes4f32)")
+            }
+        }
+    }
+
+    /// The CLI/env spelling ([`KERNEL_NAMES`] entry, or `"auto"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Scalar => "scalar",
+            Self::Lanes4 => "lanes4",
+            Self::Lanes8 => "lanes8",
+            Self::Lanes4F32 => "lanes4f32",
         }
     }
 
@@ -72,11 +121,41 @@ impl TileKernel {
     /// the default kernel twice.
     pub fn from_env() -> Self {
         match std::env::var("PALMAD_TILE_KERNEL") {
-            Ok(s) => Self::parse(&s).expect("PALMAD_TILE_KERNEL must be `scalar` or `lanes4`"),
+            Ok(s) => Self::parse(&s)
+                .expect("PALMAD_TILE_KERNEL must be one of auto|scalar|lanes4|lanes8|lanes4f32"),
             Err(_) => Self::default(),
         }
     }
+
+    /// Collapse [`TileKernel::Auto`] to the concrete kernel this host
+    /// runs: `Lanes8` when AVX-512F is available, else `Lanes4`.
+    /// Concrete kernels return themselves unchanged, so `resolve` is
+    /// idempotent and safe to call at every tile entry.  The feature
+    /// probe runs once per process; the decision is cached in a
+    /// `OnceLock` (no atomics beyond the lock's own — see
+    /// CONCURRENCY.md scope note).
+    pub fn resolve(self) -> Self {
+        match self {
+            Self::Auto => *AUTO_KERNEL.get_or_init(Self::detect),
+            concrete => concrete,
+        }
+    }
+
+    /// The feature probe behind [`TileKernel::resolve`].
+    fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx512f") {
+                return Self::Lanes8;
+            }
+        }
+        Self::Lanes4
+    }
 }
+
+/// Cached [`TileKernel::Auto`] resolution (one feature probe per
+/// process; every engine and every tile sees the same decision).
+static AUTO_KERNEL: std::sync::OnceLock<TileKernel> = std::sync::OnceLock::new();
 
 /// One (segment, chunk) pair to evaluate at the current length `m`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -134,10 +213,17 @@ pub struct EnginePerfCounters {
     /// (which predates the counter) and on cache-less engines.
     pub clamp_saturations: u64,
     /// Columns evaluated through the flat-window (general Eq. 6) path —
-    /// rows where the segment window or any chunk column is flat.  Both
-    /// kernels route these through one shared scalar implementation, so
-    /// the count is kernel-invariant by construction.
+    /// rows where the segment window or any chunk column is flat.  All
+    /// kernels route these through one shared scalar implementation
+    /// (keyed on the f64 stats even under `Lanes4F32`), so the count is
+    /// kernel-invariant by construction.
     pub flat_cells: u64,
+    /// The *resolved* tile kernel this engine runs ([`TileKernel::Auto`]
+    /// collapsed to its concrete choice) — how a `--kernel auto` run
+    /// reports which kernel the host actually got.  `None` for engines
+    /// without tile kernels (XLA, oracles) and on pre-dispatch
+    /// snapshots; surfaces in the METRICS `kernel=` segment.
+    pub kernel: Option<TileKernel>,
 }
 
 impl EnginePerfCounters {
@@ -153,6 +239,8 @@ impl EnginePerfCounters {
             batch_tiles: self.batch_tiles.saturating_sub(earlier.batch_tiles),
             clamp_saturations: self.clamp_saturations.saturating_sub(earlier.clamp_saturations),
             flat_cells: self.flat_cells.saturating_sub(earlier.flat_cells),
+            // The kernel is an identity, not a count — deltas keep it.
+            kernel: self.kernel,
         }
     }
 
@@ -176,6 +264,10 @@ impl EnginePerfCounters {
         self.batch_tiles += other.batch_tiles;
         self.clamp_saturations += other.clamp_saturations;
         self.flat_cells += other.flat_cells;
+        // First engine to report a kernel wins; later steps on the same
+        // engine report the same resolved kernel anyway (the dispatch
+        // cache is process-wide).
+        self.kernel = self.kernel.or(other.kernel);
     }
 }
 
@@ -289,5 +381,32 @@ pub trait Engine: Send + Sync {
     /// Run the AOT `stats_update` kernel (Eqs. 7/8), if available.
     fn aot_stats_update(&self, _t: &[f64], _stats: &RollingStats) -> Result<RollingStats> {
         anyhow::bail!("engine {:?} has no AOT stats kernels", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_names_round_trip_and_exclude_auto() {
+        for &name in KERNEL_NAMES {
+            let k = TileKernel::parse(name).expect("KERNEL_NAMES entry must parse");
+            assert_eq!(k.name(), name);
+            assert_ne!(k, TileKernel::Auto, "auto must not sit in the concrete matrix");
+            assert_eq!(k.resolve(), k, "concrete kernels are dispatch fixed points");
+        }
+        assert!(TileKernel::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn auto_is_default_and_resolves_to_a_cached_f64_lane_kernel() {
+        assert_eq!(TileKernel::default(), TileKernel::Auto);
+        let first = TileKernel::Auto.resolve();
+        assert!(
+            matches!(first, TileKernel::Lanes4 | TileKernel::Lanes8),
+            "auto resolved to {first:?}"
+        );
+        assert_eq!(TileKernel::Auto.resolve(), first, "dispatch decision must be cached");
     }
 }

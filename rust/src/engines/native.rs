@@ -21,10 +21,14 @@
 //!   extended to the dot-product layer;
 //! - the inner distance loop is a set of branchless SoA passes over
 //!   contiguous scratch (distances, exclusion mask, min-folds, kill
-//!   masks), dispatched on [`TileKernel`]: `Lanes4` (default) runs
-//!   explicit `[f64; LANES]` chunks so vectorization is pinned by
+//!   masks), dispatched on [`TileKernel`]: `Auto` (default) resolves
+//!   once per process to the widest f64 lane kernel the host supports
+//!   (`Lanes8` under AVX-512F, else `Lanes4`), the lane kernels run
+//!   explicit fixed-width chunks so vectorization is pinned by
 //!   construction, `Scalar` keeps the per-column loops as the bit-level
-//!   oracle; the old fused per-cell closure vectorized not at all.
+//!   oracle, and `Lanes4F32` runs the same lane bodies at f32 for
+//!   accelerator parity; the old fused per-cell closure vectorized not
+//!   at all.
 //!
 //! The pre-optimization pipeline is preserved as
 //! [`TilePipeline::Legacy`] / [`compute_tile_alloc`] so the microbench
@@ -39,11 +43,12 @@ use std::sync::OnceLock;
 use anyhow::Result;
 
 use super::scratch::{
-    col_folds, distance_row, general_distance_row, qt_recurrence_row, row_folds,
+    col_folds, col_folds_w, distance_row, distance_row_w, general_distance_row,
+    general_distance_row_f32, qt_recurrence_row, qt_recurrence_row_w, row_folds, row_folds_w,
     with_tile_scratch, QtSeedCache, TileKernelStats, TileScratch,
 };
 use super::{Engine, EnginePerfCounters, SeedRowSnapshot, SeriesView, TileKernel, TileTask};
-use crate::core::distance::{dot, ed2norm_from_qt, is_flat};
+use crate::core::distance::{dot, dot_w, ed2norm_from_qt, is_flat, LANES};
 use crate::core::stats::stat_products_into;
 use crate::runtime::types::TileOutputs;
 use crate::util::pool::{self, RoundPool, SliceWriter};
@@ -71,8 +76,10 @@ pub struct NativeConfig {
     pub pipeline: TilePipeline,
     /// Inner-loop kernel of the scratch pipeline (the legacy pipeline
     /// predates the kernel split and ignores this).  Default:
-    /// `PALMAD_TILE_KERNEL` env override, else [`TileKernel::Lanes4`] —
-    /// the env hook is what `scripts/ci.sh --kernel-matrix` flips.
+    /// `PALMAD_TILE_KERNEL` env override, else [`TileKernel::Auto`],
+    /// which resolves once per process to `Lanes8`/`Lanes4` by CPU
+    /// feature detection — the env hook is what `scripts/ci.sh
+    /// --kernel-matrix` flips.
     pub kernel: TileKernel,
 }
 
@@ -207,7 +214,9 @@ impl Engine for NativeEngine {
         if out.len() < tasks.len() {
             out.resize_with(tasks.len(), || TileOutputs::sized(segn));
         }
-        let kernel = self.cfg.kernel;
+        // Resolve `Auto` once up front so every tile of the batch (and
+        // every worker) runs the same concrete kernel.
+        let kernel = self.cfg.kernel.resolve();
         let threads = self.cfg.threads.max(1).min(tasks.len().max(1));
         if threads <= 1 || tasks.len() <= 1 {
             for (task, o) in tasks.iter().zip(out.iter_mut()) {
@@ -262,18 +271,29 @@ impl Engine for NativeEngine {
         c.batch_tiles = self.batch_tiles.load(Ordering::Relaxed);
         c.clamp_saturations = self.clamp_saturations.load(Ordering::Relaxed);
         c.flat_cells = self.flat_cells.load(Ordering::Relaxed);
+        // Identity, not a count: the concrete kernel this engine's tiles
+        // run (Auto resolved), for METRICS `kernel=` visibility.
+        c.kernel = Some(self.cfg.kernel.resolve());
         c
     }
 
     fn export_seed_rows(&self, t: &[f64]) -> Vec<SeedRowSnapshot> {
-        if self.cfg.pipeline != TilePipeline::Scratch {
+        // The f32 kernel seeds each tile with fresh f32 dot products (no
+        // QtSeedCache rows are consumed), so exporting the f64 cache
+        // would checkpoint state the restore path never reads — resume
+        // re-seeds instead, trivially bit-identical.
+        if self.cfg.pipeline != TilePipeline::Scratch
+            || self.cfg.kernel.resolve() == TileKernel::Lanes4F32
+        {
             return Vec::new();
         }
         self.seeds.export_rows(t)
     }
 
     fn import_seed_rows(&self, t: &[f64], rows: &[SeedRowSnapshot]) -> u64 {
-        if self.cfg.pipeline != TilePipeline::Scratch {
+        if self.cfg.pipeline != TilePipeline::Scratch
+            || self.cfg.kernel.resolve() == TileKernel::Lanes4F32
+        {
             return 0;
         }
         self.seeds.import_rows(t, rows)
@@ -288,9 +308,12 @@ impl Engine for NativeEngine {
 /// computed fresh (bit-identical to [`compute_tile_alloc`]); with a cache
 /// they are reused/advanced across lengths (equal within the oracle
 /// tolerance — the recurrence rounds differently).  The per-row SoA
-/// passes live in [`super::scratch`] and dispatch on `kernel`; both
-/// kernels produce bit-identical outputs (see [`TileKernel`]).  Returns
-/// the tile's kernel event counts for the engine gauges.
+/// passes live in [`super::scratch`] and dispatch on `kernel` (`Auto`
+/// is resolved here, so direct callers get the same detection as the
+/// engine); every f64 kernel produces bit-identical outputs, while
+/// [`TileKernel::Lanes4F32`] routes to the f32 twin loop below and is
+/// equal within the documented tolerance band (see [`TileKernel`]).
+/// Returns the tile's kernel event counts for the engine gauges.
 #[allow(clippy::too_many_arguments)] // the tile pipeline's full context
 pub(crate) fn compute_tile_into(
     view: &SeriesView<'_>,
@@ -302,6 +325,12 @@ pub(crate) fn compute_tile_into(
     seeds: Option<&QtSeedCache>,
     out: &mut TileOutputs,
 ) -> TileKernelStats {
+    let kernel = kernel.resolve();
+    if kernel == TileKernel::Lanes4F32 {
+        // The f32 loop ignores the f64 seed cache by design: fresh f32
+        // seed dots per tile keep its precision story self-contained.
+        return compute_tile_into_f32(view, segn, r2, task, scratch, out);
+    }
     let m = view.stats.m;
     let t = view.t;
     let nwin = view.n_windows();
@@ -315,7 +344,7 @@ pub(crate) fn compute_tile_into(
         return kstats;
     }
     scratch.ensure(segn);
-    let TileScratch { mmu_b, inv_msig_b, qt, qt_prev, dist } = scratch;
+    let TileScratch { mmu_b, inv_msig_b, qt, qt_prev, dist, .. } = scratch;
 
     let mu = &view.stats.mu;
     let sig = &view.stats.sig;
@@ -400,6 +429,120 @@ pub(crate) fn compute_tile_into(
     kstats
 }
 
+/// f32 twin of the tile loop above, behind [`TileKernel::Lanes4F32`].
+///
+/// Same pass structure, one precision down: the series stays f64 and is
+/// narrowed on the fly at the loads ([`LaneElem::from_f64`] inside
+/// `dot_w` / `qt_recurrence_row_w` / `stat_products_into`), the row
+/// passes run the shared width-generic bodies at `<f32, LANES>`, and the
+/// folded minima widen exactly back into the f64 [`TileOutputs`].  Flat
+/// detection stays on the f64 stats, so `flat_cells` routing is
+/// kernel-invariant by construction and the general path reuses the f64
+/// Eq. 6 scalar core.  Seed rows are fresh f32 dot products every tile —
+/// no [`QtSeedCache`] coupling, which is why the engine exports no seed
+/// rows under this kernel.  Equality contract vs. the f64 kernels is the
+/// tolerance band in `tests/kernel_conformance.rs`.
+///
+/// [`LaneElem::from_f64`]: crate::core::distance::LaneElem::from_f64
+fn compute_tile_into_f32(
+    view: &SeriesView<'_>,
+    segn: usize,
+    r2: f64,
+    task: TileTask,
+    scratch: &mut TileScratch,
+    out: &mut TileOutputs,
+) -> TileKernelStats {
+    let m = view.stats.m;
+    let t = view.t;
+    let nwin = view.n_windows();
+    let (ss, cs) = (task.seg_start, task.chunk_start);
+    let na = segn.min(nwin.saturating_sub(ss));
+    let nb = segn.min(nwin.saturating_sub(cs));
+
+    let mut kstats = TileKernelStats::default();
+    out.reset(segn);
+    if na == 0 || nb == 0 {
+        return kstats;
+    }
+    scratch.ensure_f32(segn);
+    let TileScratch { mmu_b32, inv_msig_b32, qt32, qt_prev32, dist32, col_min32, .. } = scratch;
+
+    let mu = &view.stats.mu;
+    let sig = &view.stats.sig;
+    let mf = m as f64;
+    // order: the kernel's working-precision constants are narrowed once
+    // per tile, before any per-cell arithmetic touches them.
+    let two_m32 = (2.0 * mf) as f32;
+    let r2f = r2 as f32;
+    let any_flat = stat_products_into::<f32>(
+        &mu[cs..cs + nb],
+        &sig[cs..cs + nb],
+        mf,
+        &mut mmu_b32[..nb],
+        &mut inv_msig_b32[..nb],
+    );
+    // Column minima fold in f32 and widen (exactly) once per tile.
+    for c in col_min32[..nb].iter_mut() {
+        *c = f32::INFINITY;
+    }
+
+    for i in 0..na {
+        let a = ss + i;
+        let jlo = (a + 1).saturating_sub(m).saturating_sub(cs).min(nb); // first excluded
+        let jhi = (a + m).saturating_sub(cs).min(nb); // one past last excluded
+
+        let mu_a = mu[a];
+        let sig_a = sig[a];
+        let general = any_flat || is_flat(sig_a, mu_a);
+        // order: per-row stats narrow after the f64 reciprocal — same
+        // sequence `stat_products_into` uses for the column factors.
+        let mu_a32 = mu_a as f32;
+        let inv_sig_a32 = (1.0 / sig_a) as f32;
+
+        if i == 0 {
+            // Seed row: fresh f32-accumulated dot products, O(nb * m).
+            let wa = &t[a..a + m];
+            for (j, q) in qt32[..nb].iter_mut().enumerate() {
+                *q = dot_w::<f32>(wa, &t[cs + j..cs + j + m]);
+            }
+        } else {
+            qt_recurrence_row_w::<f32, LANES>(t, m, a, cs, &qt_prev32[..nb], &mut qt32[..nb]);
+        }
+
+        if !general {
+            kstats.saturated += distance_row_w::<f32, LANES>(
+                &qt32[..nb],
+                &mmu_b32[..nb],
+                &inv_msig_b32[..nb],
+                mu_a32,
+                inv_sig_a32,
+                two_m32,
+                &mut dist32[..nb],
+            );
+        } else {
+            // Flat-window path: widen qt, run the shared f64 Eq. 6 core,
+            // narrow the result — flat decisions never happen in f32.
+            kstats.flat_cells += nb as u64;
+            general_distance_row_f32(&qt32[..nb], m, mu_a, sig_a, mu, sig, cs, &mut dist32[..nb]);
+        }
+        for d in &mut dist32[jlo..jhi] {
+            *d = f32::INFINITY;
+        }
+
+        let (rmin, rkill) = row_folds_w::<f32, LANES>(&dist32[..nb], r2f);
+        out.row_min[i] = f64::from(rmin); // exact widening
+        out.row_kill[i] = rkill;
+
+        col_folds_w::<f32, LANES>(&dist32[..nb], r2f, &mut col_min32[..nb], &mut out.col_kill[..nb]);
+
+        std::mem::swap(qt32, qt_prev32);
+    }
+    for (o, &c) in out.col_min[..nb].iter_mut().zip(col_min32[..nb].iter()) {
+        *o = f64::from(c); // exact widening (infinities included)
+    }
+    kstats
+}
+
 /// Evaluate one (segment, chunk) tile, allocating a fresh output block,
 /// with the default kernel.
 ///
@@ -412,8 +555,10 @@ pub fn compute_tile(view: &SeriesView<'_>, segn: usize, r2: f64, task: TileTask)
 
 /// [`compute_tile`] with an explicit kernel — the entry point the
 /// differential conformance harness and the `simd_kernel` microbench
-/// drive (kernels are bit-identical, so which one [`compute_tile`]
-/// defaults to is a performance choice, not a semantic one).
+/// drive (the f64 kernels are bit-identical, so which one
+/// [`compute_tile`] defaults to — `Auto` resolves to `Lanes8` or
+/// `Lanes4` — is a performance choice, not a semantic one;
+/// `Lanes4F32` is the deliberate tolerance-banded exception).
 pub fn compute_tile_with_kernel(
     view: &SeriesView<'_>,
     segn: usize,
@@ -901,31 +1046,82 @@ mod tests {
             NativeEngine::new(NativeConfig { segn: 33, threads: 4, kernel, ..Default::default() })
         };
         let scalar = mk(TileKernel::Scalar);
-        let lanes = mk(TileKernel::Lanes4);
         let mut tasks: Vec<TileTask> = (0..8)
             .map(|k| TileTask { seg_start: 33 * (k % 4) + 250, chunk_start: 33 * k })
             .collect();
-        // Tail tiles: a single-column chunk and a single-row segment.
+        // Tail tiles: a single-column chunk and a single-row segment (for
+        // Lanes8, segn % 8 = 1 exercises sub-width tails everywhere).
         tasks.push(TileTask { seg_start: 0, chunk_start: nwin - 1 });
         tasks.push(TileTask { seg_start: nwin - 1, chunk_start: 100 });
         scalar.prepare_series(&view);
-        lanes.prepare_series(&view);
         let a = scalar.compute_tiles(&view, 6.0, &tasks).unwrap();
-        let b = lanes.compute_tiles(&view, 6.0, &tasks).unwrap();
-        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
-            let bits = |v: &[f64]| v.iter().map(|d| d.to_bits()).collect::<Vec<_>>();
-            assert_eq!(bits(&x.row_min), bits(&y.row_min), "task {k} row_min");
-            assert_eq!(bits(&x.col_min), bits(&y.col_min), "task {k} col_min");
-            assert_eq!(x.row_kill, y.row_kill, "task {k} row_kill");
-            assert_eq!(x.col_kill, y.col_kill, "task {k} col_kill");
-        }
-        let (ca, cb) = (scalar.perf_counters(), lanes.perf_counters());
-        assert_eq!(
-            ca.clamp_saturations, cb.clamp_saturations,
-            "kernels took different clamp decisions"
-        );
-        assert_eq!(ca.flat_cells, cb.flat_cells, "kernels routed the flat path differently");
+        let ca = scalar.perf_counters();
+        assert_eq!(ca.kernel, Some(TileKernel::Scalar), "counters must name the kernel");
         assert!(ca.flat_cells > 0, "plateau rows must be counted through the flat path");
+        for kern in [TileKernel::Lanes4, TileKernel::Lanes8, TileKernel::Auto] {
+            let lanes = mk(kern);
+            lanes.prepare_series(&view);
+            let b = lanes.compute_tiles(&view, 6.0, &tasks).unwrap();
+            for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+                let bits = |v: &[f64]| v.iter().map(|d| d.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&x.row_min), bits(&y.row_min), "{kern:?} task {k} row_min");
+                assert_eq!(bits(&x.col_min), bits(&y.col_min), "{kern:?} task {k} col_min");
+                assert_eq!(x.row_kill, y.row_kill, "{kern:?} task {k} row_kill");
+                assert_eq!(x.col_kill, y.col_kill, "{kern:?} task {k} col_kill");
+            }
+            let cb = lanes.perf_counters();
+            assert_eq!(
+                ca.clamp_saturations, cb.clamp_saturations,
+                "{kern:?} took different clamp decisions"
+            );
+            assert_eq!(ca.flat_cells, cb.flat_cells, "{kern:?} routed the flat path differently");
+            assert_eq!(cb.kernel, Some(kern.resolve()), "{kern:?} counters must resolve Auto");
+        }
+    }
+
+    #[test]
+    fn f32_kernel_engine_runs_and_exports_no_seed_rows() {
+        // The tolerance-band conformance proper lives in
+        // tests/kernel_conformance.rs; this is the engine-level contract:
+        // the f32 kernel computes through the same batch path, reports
+        // itself in the counters, and opts out of seed-row checkpoints
+        // (fresh f32 seeds every tile — nothing to round-trip).
+        let t = random_walk(600, 21);
+        let m = 20;
+        let stats = RollingStats::compute(&t, m);
+        let view = SeriesView { t: &t, stats: &stats };
+        let mk = |kernel| {
+            NativeEngine::new(NativeConfig { segn: 33, threads: 2, kernel, ..Default::default() })
+        };
+        let f32e = mk(TileKernel::Lanes4F32);
+        let f64e = mk(TileKernel::Lanes4);
+        let tasks: Vec<TileTask> =
+            (0..4).map(|k| TileTask { seg_start: 33 * k, chunk_start: 66 * k }).collect();
+        f32e.prepare_series(&view);
+        f64e.prepare_series(&view);
+        let a = f32e.compute_tiles(&view, 6.0, &tasks).unwrap();
+        let b = f64e.compute_tiles(&view, 6.0, &tasks).unwrap();
+        // Same error bound the conformance harness derives:
+        // band(m) = 2m * (m + 8) * KAPPA * eps_f32 (EXPERIMENTS.md §SIMD).
+        let mf = m as f64;
+        let band = 2.0 * mf * (mf + 8.0) * 4096.0 * f64::from(f32::EPSILON);
+        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+            for (i, (&d32, &d64)) in x.row_min.iter().zip(&y.row_min).enumerate() {
+                if d64.is_finite() {
+                    assert!((d32 - d64).abs() <= band, "task {k} row {i}: {d32} vs {d64}");
+                } else {
+                    assert!(!d32.is_finite(), "task {k} row {i}: finite f32 vs inf f64");
+                }
+            }
+        }
+        assert_eq!(f32e.perf_counters().kernel, Some(TileKernel::Lanes4F32));
+        assert!(
+            f32e.export_seed_rows(&t).is_empty(),
+            "f32 kernel must not checkpoint f64 seed rows"
+        );
+        assert!(!f64e.export_seed_rows(&t).is_empty(), "f64 export stays live");
+        // Importing under the f32 kernel is a no-op by the same rule.
+        assert_eq!(f32e.import_seed_rows(&t, &f64e.export_seed_rows(&t)), 0);
     }
 
     #[test]

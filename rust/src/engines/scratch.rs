@@ -5,25 +5,36 @@
 //! **Scratch arena.**  One [`TileScratch`] per worker thread holds every
 //! intermediate buffer a tile evaluation needs (per-column stat products,
 //! the two QT diagonal rows, the SoA distance row).  Buffers are sized
-//! once per tile edge — rounded up to a [`LANES`] multiple so lane
-//! chunks never meet a short row — and reused for every subsequent tile,
-//! so the steady-state inner loop performs zero heap allocations
-//! (verified by the counting-allocator integration test).
+//! once per tile edge — rounded up to a [`MAX_LANES`] multiple so lane
+//! chunks of *any* kernel width never meet a short row — and reused for
+//! every subsequent tile, so the steady-state inner loop performs zero
+//! heap allocations (verified by the counting-allocator integration
+//! test).  The f32 twin buffers of the `Lanes4F32` kernel are allocated
+//! lazily by [`TileScratch::ensure_f32`], so f64 runs pay nothing for
+//! them.
 //!
 //! **Tile-kernel row passes.**  The SoA inner loop lives here as four
 //! explicit per-row passes ([`qt_recurrence_row`], [`distance_row`] /
 //! [`general_distance_row`], [`row_folds`], [`col_folds`]), each
 //! dispatched on [`TileKernel`]: `Scalar` keeps the pre-refactor
-//! per-column loops verbatim (the bit-level oracle), `Lanes4` processes
-//! columns in fixed `[f64; LANES]` chunks with explicit accumulators and
-//! a scalar tail — vectorization pinned down by construction instead of
-//! autovectorizer hope.  Every lane performs the exact scalar operation
-//! sequence and the only reductions (`min`, OR) are regroup-insensitive
-//! here, so the two kernels are bit-identical (differentially tested by
-//! `rust/tests/kernel_conformance.rs`).  The flat-window general path is
-//! one shared scalar implementation, so clamp/flat decisions cannot
-//! diverge; both kernels count them ([`TileKernelStats`]) into
-//! `EnginePerfCounters` as the observable certificate.
+//! per-column loops verbatim (the bit-level oracle), while every lane
+//! kernel — `Lanes4` (`[f64; 4]` chunks), `Lanes8` (`[f64; 8]`),
+//! `Lanes4F32` (`[f32; 4]`) — is an instantiation of one set of
+//! width/element-generic bodies ([`qt_recurrence_row_w`],
+//! [`distance_row_w`], [`row_folds_w`], [`col_folds_w`]) over
+//! [`LaneElem`]: explicit accumulators, fixed-extent chunk reborrows,
+//! and a scalar tail — vectorization pinned down by construction
+//! instead of autovectorizer hope.  Every f64 lane performs the exact
+//! scalar operation sequence and the only reductions (`min`, OR) are
+//! regroup-insensitive here, so all f64 kernels are bit-identical at
+//! any width (differentially tested by
+//! `rust/tests/kernel_conformance.rs`); the f32 instantiation is the
+//! same bodies one precision down, held to the derived tolerance band
+//! instead.  The flat-window general path is one shared scalar f64
+//! implementation — the f32 kernel, too, takes its flat decisions on
+//! the f64 stats — so clamp/flat routing cannot diverge; every kernel
+//! counts them ([`TileKernelStats`]) into `EnginePerfCounters` as the
+//! observable certificate.
 //!
 //! **QT seed cache.**  The paper eliminates cross-length redundancy for
 //! the rolling statistics (Eqs. 7/8); this cache extends the same idea to
@@ -77,7 +88,8 @@ use crate::util::loomsync::Mutex;
 
 use super::{EnginePerfCounters, SeedRowSnapshot, TileKernel};
 use crate::core::distance::{
-    corr_saturates, corr_to_ed2, dot, ed2_lane_chunk, ed2norm_from_qt, LANES,
+    corr_saturates, corr_to_ed2, dot, dot_w, ed2_lane_chunk_w, ed2norm_from_qt, LaneElem, LANES,
+    MAX_LANES,
 };
 use crate::util::pool::{RoundPool, SliceWriter};
 use crate::util::sync::lock_recover;
@@ -85,8 +97,11 @@ use crate::util::sync::lock_recover;
 /// Reusable per-worker buffers for one tile evaluation.
 ///
 /// All vectors are kept at the engine's tile edge (`segn`), rounded up
-/// to a [`LANES`] multiple so a lane chunk can never touch a short row;
-/// only the `[..nb]` prefix of each is meaningful during a given tile.
+/// to a [`MAX_LANES`] multiple so a chunk of any kernel width can never
+/// touch a short row; only the `[..nb]` prefix of each is meaningful
+/// during a given tile.  The `*32` twins serve the `Lanes4F32` kernel
+/// and stay empty (zero heap cost) until [`TileScratch::ensure_f32`]
+/// runs — f64 workloads never allocate them.
 #[derive(Debug, Default)]
 pub struct TileScratch {
     /// `m * mu[b]` per column (fast-path distance transform).
@@ -99,6 +114,19 @@ pub struct TileScratch {
     pub(crate) qt_prev: Vec<f64>,
     /// SoA distance row: distances first, folds after (branchless).
     pub(crate) dist: Vec<f64>,
+    /// f32 twin of `mmu_b` (`Lanes4F32` only).
+    pub(crate) mmu_b32: Vec<f32>,
+    /// f32 twin of `inv_msig_b`.
+    pub(crate) inv_msig_b32: Vec<f32>,
+    /// f32 twin of `qt`.
+    pub(crate) qt32: Vec<f32>,
+    /// f32 twin of `qt_prev`.
+    pub(crate) qt_prev32: Vec<f32>,
+    /// f32 twin of `dist`.
+    pub(crate) dist32: Vec<f32>,
+    /// f32 column-minimum accumulator (folded per row, widened into the
+    /// f64 tile outputs once per tile — widening is exact).
+    pub(crate) col_min32: Vec<f32>,
 }
 
 impl TileScratch {
@@ -106,19 +134,35 @@ impl TileScratch {
         Self::default()
     }
 
-    /// Grow every buffer to tile edge `segn`, lane-aligned (no-op once
-    /// warmed).  The rounding to a [`LANES`] multiple guarantees the
-    /// tail of every row stays in-bounds for a full `[f64; LANES]` load
-    /// even if a future kernel revision replaces the scalar tail loop
-    /// with a masked/overlapping full chunk.
+    /// Grow every f64 buffer to tile edge `segn`, lane-aligned (no-op
+    /// once warmed).  The rounding to a [`MAX_LANES`] multiple
+    /// guarantees the tail of every row stays in-bounds for a
+    /// full-width load of *any* kernel — including the widest — even if
+    /// a future kernel revision replaces the scalar tail loop with a
+    /// masked/overlapping full chunk.
     pub(crate) fn ensure(&mut self, segn: usize) {
-        let cap = segn.next_multiple_of(LANES);
+        let cap = segn.next_multiple_of(MAX_LANES);
         if self.qt.len() < cap {
             self.mmu_b.resize(cap, 0.0);
             self.inv_msig_b.resize(cap, 0.0);
             self.qt.resize(cap, 0.0);
             self.qt_prev.resize(cap, 0.0);
             self.dist.resize(cap, 0.0);
+        }
+    }
+
+    /// [`TileScratch::ensure`] for the f32 twins — called only on the
+    /// `Lanes4F32` tile path, so the twins are a one-time allocation on
+    /// the first f32 tile and free for every f64 workload.
+    pub(crate) fn ensure_f32(&mut self, segn: usize) {
+        let cap = segn.next_multiple_of(MAX_LANES);
+        if self.qt32.len() < cap {
+            self.mmu_b32.resize(cap, 0.0);
+            self.inv_msig_b32.resize(cap, 0.0);
+            self.qt32.resize(cap, 0.0);
+            self.qt_prev32.resize(cap, 0.0);
+            self.dist32.resize(cap, 0.0);
+            self.col_min32.resize(cap, 0.0);
         }
     }
 }
@@ -140,7 +184,13 @@ pub(crate) struct TileKernelStats {
 /// `qt_prev` are the `[..nb]` prefixes of the scratch rows.
 ///
 /// Elementwise given `qt_prev`, so the lane chunking is bit-identical to
-/// the scalar loop.
+/// the scalar loop.  `Scalar` keeps the pre-refactor loop verbatim (the
+/// oracle stays an *independent* implementation); every lane kernel
+/// dispatches into the width-generic [`qt_recurrence_row_w`].  `Auto`
+/// and `Lanes4F32` cannot reach the f64 passes (the tile entry resolves
+/// `Auto` and routes `Lanes4F32` to the f32 loop first), so the default
+/// arm folding them onto `W = 4` is a harmless total-match fallback,
+/// not a decision point.
 // hot-path: Eq. 10 QT recurrence, every non-first tile row.
 #[inline]
 pub(crate) fn qt_recurrence_row(
@@ -152,51 +202,79 @@ pub(crate) fn qt_recurrence_row(
     qt_prev: &[f64],
     qt: &mut [f64],
 ) {
+    match kernel {
+        TileKernel::Scalar => {
+            let nb = qt.len();
+            debug_assert!(nb >= 1 && qt_prev.len() == nb);
+            // panic-free: tile geometry — the caller iterates rows
+            // a >= 1 with a+m-1 < t.len() and columns cs..cs+nb where
+            // every column is a valid window start (cs+nb-1+m <=
+            // t.len()), so all t/qt/qt_prev accesses below stay in
+            // bounds; nb >= 1 covers qt[0].
+            let head = t[a - 1];
+            let tail = t[a + m - 1];
+            qt[0] = dot(&t[a..a + m], &t[cs..cs + m]);
+            for j in 1..nb {
+                let b = cs + j;
+                qt[j] = qt_prev[j - 1] + tail * t[b + m - 1] - head * t[b - 1];
+            }
+        }
+        TileKernel::Lanes8 => qt_recurrence_row_w::<f64, MAX_LANES>(t, m, a, cs, qt_prev, qt),
+        _ => qt_recurrence_row_w::<f64, LANES>(t, m, a, cs, qt_prev, qt),
+    }
+}
+
+/// Width/element-generic body of [`qt_recurrence_row`]: the shared lane
+/// loop every non-scalar kernel instantiates (`f64x4`, `f64x8`,
+/// `f32x4`).  Series loads narrow through [`LaneElem::from_f64`]
+/// (identity at f64 — bit-identical to the historical `Lanes4` arm).
+// hot-path: Eq. 10 QT recurrence lane body, every non-first tile row.
+#[inline]
+pub(crate) fn qt_recurrence_row_w<E: LaneElem, const W: usize>(
+    t: &[f64],
+    m: usize,
+    a: usize,
+    cs: usize,
+    qt_prev: &[E],
+    qt: &mut [E],
+) {
     let nb = qt.len();
     debug_assert!(nb >= 1 && qt_prev.len() == nb);
     // panic-free: tile geometry — the caller iterates rows a >= 1 with
     // a+m-1 < t.len() and columns cs..cs+nb where every column is a
     // valid window start (cs+nb-1+m <= t.len()), so all t/qt/qt_prev
     // accesses below stay in bounds; nb >= 1 covers qt[0].
-    let head = t[a - 1];
-    let tail = t[a + m - 1];
-    qt[0] = dot(&t[a..a + m], &t[cs..cs + m]);
-    match kernel {
-        TileKernel::Scalar => {
-            for j in 1..nb {
-                let b = cs + j;
-                qt[j] = qt_prev[j - 1] + tail * t[b + m - 1] - head * t[b - 1];
-            }
+    let head = E::from_f64(t[a - 1]);
+    let tail = E::from_f64(t[a + m - 1]);
+    qt[0] = dot_w::<E>(&t[a..a + m], &t[cs..cs + m]);
+    let mut j = 1;
+    // panic-free: j+W <= nb bounds every lane slice (rows are aligned
+    // to MAX_LANES >= W by TileScratch::ensure); the tail loop is
+    // bounded by nb with the same geometry as the scalar arm.
+    while j + W <= nb {
+        let p: &[E; W] = chunk(&qt_prev[j - 1..], "qt_prev");
+        let tt: [E; W] = load_chunk(&t[cs + j + m - 1..]);
+        let th: [E; W] = load_chunk(&t[cs + j - 1..]);
+        let q: &mut [E; W] = chunk_mut(&mut qt[j..]);
+        for l in 0..W {
+            q[l] = p[l] + tail * tt[l] - head * th[l];
         }
-        TileKernel::Lanes4 => {
-            let mut j = 1;
-            // panic-free: j+LANES <= nb bounds every lane slice (rows
-            // are lane-aligned by TileScratch::ensure); the tail loop
-            // is bounded by nb with the same geometry as the scalar arm.
-            while j + LANES <= nb {
-                let p: &[f64; LANES] = t_chunk(&qt_prev[j - 1..], "qt_prev");
-                let tt: &[f64; LANES] = t_chunk(&t[cs + j + m - 1..], "t tail");
-                let th: &[f64; LANES] = t_chunk(&t[cs + j - 1..], "t head");
-                let q: &mut [f64; LANES] = t_chunk_mut(&mut qt[j..]);
-                for l in 0..LANES {
-                    q[l] = p[l] + tail * tt[l] - head * th[l];
-                }
-                j += LANES;
-            }
-            // panic-free: tail columns j < nb, same bounds as above.
-            for j in j..nb {
-                let b = cs + j;
-                qt[j] = qt_prev[j - 1] + tail * t[b + m - 1] - head * t[b - 1];
-            }
-        }
+        j += W;
+    }
+    // panic-free: tail columns j < nb, same bounds as above.
+    for j in j..nb {
+        let b = cs + j;
+        qt[j] = qt_prev[j - 1] + tail * E::from_f64(t[b + m - 1]) - head * E::from_f64(t[b - 1]);
     }
 }
 
 /// Fast-path distance row (Eq. 6 with precomputed column products):
 /// `dist[j] = two_m * (1 - clamp((qt[j] - mmu_b[j]*mu_a) *
 /// (inv_msig_b[j]*inv_sig_a)))`.  Returns the number of saturated
-/// (clamped) columns — the clamp-decision gauge both kernels must agree
-/// on.  All slices are the `[..nb]` prefixes.
+/// (clamped) columns — the clamp-decision gauge every kernel must agree
+/// on.  All slices are the `[..nb]` prefixes.  Dispatch follows
+/// [`qt_recurrence_row`]: verbatim scalar oracle, width-generic lane
+/// body ([`distance_row_w`]) for the rest.
 // hot-path: fast-path distance row, every tile row.
 #[inline]
 #[allow(clippy::too_many_arguments)] // one row's full operand set
@@ -210,37 +288,66 @@ pub(crate) fn distance_row(
     two_m: f64,
     dist: &mut [f64],
 ) -> u64 {
+    match kernel {
+        TileKernel::Scalar => {
+            let nb = dist.len();
+            debug_assert!(qt.len() == nb && mmu_b.len() == nb && inv_msig_b.len() == nb);
+            let mut sat = 0u64;
+            // panic-free: j < nb bounds every slice access
+            // (debug-asserted above, sized by the tile binder).
+            for j in 0..nb {
+                let corr = (qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a);
+                sat += corr_saturates(corr) as u64;
+                dist[j] = corr_to_ed2(corr, two_m);
+            }
+            sat
+        }
+        TileKernel::Lanes8 => distance_row_w::<f64, MAX_LANES>(
+            qt, mmu_b, inv_msig_b, mu_a, inv_sig_a, two_m, dist,
+        ),
+        _ => distance_row_w::<f64, LANES>(qt, mmu_b, inv_msig_b, mu_a, inv_sig_a, two_m, dist),
+    }
+}
+
+/// Width/element-generic body of [`distance_row`]: full-width
+/// [`ed2_lane_chunk_w`] chunks plus the scalar-sequence tail.
+// hot-path: fast-path distance row lane body, every tile row.
+#[inline]
+#[allow(clippy::too_many_arguments)] // one row's full operand set
+pub(crate) fn distance_row_w<E: LaneElem, const W: usize>(
+    qt: &[E],
+    mmu_b: &[E],
+    inv_msig_b: &[E],
+    mu_a: E,
+    inv_sig_a: E,
+    two_m: E,
+    dist: &mut [E],
+) -> u64 {
     let nb = dist.len();
     debug_assert!(qt.len() == nb && mmu_b.len() == nb && inv_msig_b.len() == nb);
     let mut sat = 0u64;
-    let tail_from = match kernel {
-        TileKernel::Scalar => 0,
-        TileKernel::Lanes4 => {
-            // panic-free: LANES is a nonzero const; j+LANES <= nb for
-            // every chunk and all operand slices have length nb
-            // (debug-asserted above, sized by the tile binder).
-            let chunks = nb / LANES;
-            for c in 0..chunks {
-                let j = c * LANES;
-                sat += ed2_lane_chunk(
-                    t_chunk(&qt[j..], "qt"),
-                    t_chunk(&mmu_b[j..], "mmu_b"),
-                    t_chunk(&inv_msig_b[j..], "inv_msig_b"),
-                    mu_a,
-                    inv_sig_a,
-                    two_m,
-                    // panic-free: same j+LANES <= nb chunk bound.
-                    t_chunk_mut(&mut dist[j..]),
-                );
-            }
-            chunks * LANES
-        }
-    };
+    // panic-free: W is a nonzero const width; j+W <= nb for every chunk
+    // and all operand slices have length nb (debug-asserted above,
+    // sized by the tile binder).
+    let chunks = nb / W;
+    for c in 0..chunks {
+        let j = c * W;
+        sat += ed2_lane_chunk_w::<E, W>(
+            chunk(&qt[j..], "qt"),
+            chunk(&mmu_b[j..], "mmu_b"),
+            chunk(&inv_msig_b[j..], "inv_msig_b"),
+            mu_a,
+            inv_sig_a,
+            two_m,
+            // panic-free: same j+W <= nb chunk bound.
+            chunk_mut(&mut dist[j..]),
+        );
+    }
     // panic-free: scalar tail, j < nb bounds every slice access.
-    for j in tail_from..nb {
+    for j in chunks * W..nb {
         let corr = (qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a);
-        sat += corr_saturates(corr) as u64;
-        dist[j] = corr_to_ed2(corr, two_m);
+        sat += corr.saturates() as u64;
+        dist[j] = corr.corr_to_ed2(two_m);
     }
     sat
 }
@@ -273,14 +380,43 @@ pub(crate) fn general_distance_row(
     }
 }
 
+/// [`general_distance_row`] for the f32 kernel: the f32 QT is widened
+/// (exactly) into the *same shared f64 implementation* — flat
+/// classification and the flat-distance conventions stay keyed on the
+/// f64 stats, so flat routing and `flat_cells` counts are
+/// kernel-invariant even under `Lanes4F32`; only the final distance is
+/// narrowed back.
+// hot-path: flat-tile distance row, f32 kernel (rare route).
+#[inline]
+#[allow(clippy::too_many_arguments)] // one row's full operand set
+pub(crate) fn general_distance_row_f32(
+    qt: &[f32],
+    m: usize,
+    mu_a: f64,
+    sig_a: f64,
+    mu: &[f64],
+    sig: &[f64],
+    cs: usize,
+    dist: &mut [f32],
+) {
+    // panic-free: same binder invariant as general_distance_row.
+    for (j, d) in dist.iter_mut().enumerate() {
+        let b = cs + j;
+        // order: deliberate f64 -> f32 narrowing of the flat-path
+        // distance — the Lanes4F32 kernel's output precision; the flat
+        // *decision* happened in f64 inside ed2norm_from_qt.
+        *d = ed2norm_from_qt(qt[j] as f64, m, mu_a, sig_a, mu[b], sig[b]) as f32;
+    }
+}
+
 /// Row folds over the distance row: `(min, any < r2)`.
 ///
-/// The lane variant keeps [`LANES`] independent accumulators and
-/// combines them once; `min` over f64 distances is insensitive to that
-/// regrouping (the identity is `+inf`, NaNs are dropped by `min`'s
-/// IEEE minNum semantics, and `-0.0` cannot occur — distances are
-/// produced as `two_m * (1 - clamp)` or by the flat conventions, all
-/// `>= +0.0`), so both variants return bit-identical results.
+/// The lane variants keep `W` independent accumulators and combine them
+/// once; `min` over these distances is insensitive to that regrouping
+/// (the identity is `+inf`, NaNs are dropped by `min`'s IEEE minNum
+/// semantics, and `-0.0` cannot occur — distances are produced as
+/// `two_m * (1 - clamp)` or by the flat conventions, all `>= +0.0`), so
+/// every f64 variant returns bit-identical results at any width.
 // hot-path: per-row min/kill folds, every tile row.
 #[inline]
 pub(crate) fn row_folds(kernel: TileKernel, dist: &[f64], r2: f64) -> (f64, bool) {
@@ -296,46 +432,51 @@ pub(crate) fn row_folds(kernel: TileKernel, dist: &[f64], r2: f64) -> (f64, bool
             }
             (rmin, rkill)
         }
-        TileKernel::Lanes4 => {
-            let mut minacc = [f64::INFINITY; LANES];
-            let mut killacc = [false; LANES];
-            // panic-free: LANES is a nonzero const and j+LANES <=
-            // chunks*LANES <= dist.len() bounds each chunk; the tail
-            // slice below starts at chunks*LANES <= dist.len().
-            let chunks = dist.len() / LANES;
-            for c in 0..chunks {
-                let j = c * LANES;
-                let dc: &[f64; LANES] = t_chunk(&dist[j..], "dist");
-                for l in 0..LANES {
-                    minacc[l] = minacc[l].min(dc[l]);
-                }
-                for l in 0..LANES {
-                    killacc[l] |= dc[l] < r2;
-                }
-            }
-            // Width-generic combine so an AVX-512 LANES bump cannot
-            // silently drop accumulators.
-            let mut rmin = f64::INFINITY;
-            for &v in &minacc {
-                rmin = rmin.min(v);
-            }
-            let mut rkill = killacc.iter().any(|&k| k);
-            // panic-free: chunks*LANES <= dist.len(), valid range start.
-            for &d in &dist[chunks * LANES..] {
-                rmin = rmin.min(d);
-                rkill |= d < r2;
-            }
-            (rmin, rkill)
+        TileKernel::Lanes8 => row_folds_w::<f64, MAX_LANES>(dist, r2),
+        _ => row_folds_w::<f64, LANES>(dist, r2),
+    }
+}
+
+/// Width/element-generic body of [`row_folds`].
+// hot-path: per-row min/kill fold lane body, every tile row.
+#[inline]
+pub(crate) fn row_folds_w<E: LaneElem, const W: usize>(dist: &[E], r2: E) -> (E, bool) {
+    let mut minacc = [E::INFINITY; W];
+    let mut killacc = [false; W];
+    // panic-free: W is a nonzero const width and j+W <= chunks*W <=
+    // dist.len() bounds each chunk; the tail slice below starts at
+    // chunks*W <= dist.len().
+    let chunks = dist.len() / W;
+    for c in 0..chunks {
+        let j = c * W;
+        let dc: &[E; W] = chunk(&dist[j..], "dist");
+        for l in 0..W {
+            minacc[l] = minacc[l].min(dc[l]);
+        }
+        for l in 0..W {
+            killacc[l] |= dc[l] < r2;
         }
     }
+    // Width-generic combine so no width can silently drop accumulators.
+    let mut rmin = E::INFINITY;
+    for &v in &minacc {
+        rmin = rmin.min(v);
+    }
+    let mut rkill = killacc.iter().any(|&k| k);
+    // panic-free: chunks*W <= dist.len(), valid range start.
+    for &d in &dist[chunks * W..] {
+        rmin = rmin.min(d);
+        rkill |= d < r2;
+    }
+    (rmin, rkill)
 }
 
 /// Column folds: elementwise `col_min[j] = min(col_min[j], dist[j])` and
 /// `col_kill[j] |= dist[j] < r2`.  Elementwise, hence bit-identical
-/// across kernels; the lane variant is branchless (`min` instead of the
-/// scalar oracle's compare-and-store, equivalent because `col_min` can
-/// never hold NaN — it starts at `+inf` and only adopts values that won
-/// a `<` comparison).
+/// across f64 kernels; the lane variants are branchless (`min` instead
+/// of the scalar oracle's compare-and-store, equivalent because
+/// `col_min` can never hold NaN — it starts at `+inf` and only adopts
+/// values that won a `<` comparison).
 // hot-path: per-column min/kill folds, every tile row.
 #[inline]
 pub(crate) fn col_folds(
@@ -345,10 +486,10 @@ pub(crate) fn col_folds(
     col_min: &mut [f64],
     col_kill: &mut [bool],
 ) {
-    let nb = dist.len();
-    debug_assert!(col_min.len() == nb && col_kill.len() == nb);
     match kernel {
         TileKernel::Scalar => {
+            let nb = dist.len();
+            debug_assert!(col_min.len() == nb && col_kill.len() == nb);
             for (c, &d) in col_min.iter_mut().zip(dist) {
                 if d < *c {
                     *c = d;
@@ -358,59 +499,82 @@ pub(crate) fn col_folds(
                 *k |= d < r2;
             }
         }
-        TileKernel::Lanes4 => {
-            // panic-free: LANES is a nonzero const; j+LANES <= nb and
-            // all three slices have length nb (debug-asserted above).
-            let chunks = nb / LANES;
-            for c in 0..chunks {
-                let j = c * LANES;
-                let dc: &[f64; LANES] = t_chunk(&dist[j..], "dist");
-                let cm: &mut [f64; LANES] = t_chunk_mut(&mut col_min[j..]);
-                for l in 0..LANES {
-                    cm[l] = cm[l].min(dc[l]);
-                }
-                let ck: &mut [bool; LANES] = bool_chunk_mut(&mut col_kill[j..]);
-                for l in 0..LANES {
-                    ck[l] |= dc[l] < r2;
-                }
-            }
-            // panic-free: scalar tail, j < nb bounds every access.
-            for j in chunks * LANES..nb {
-                if dist[j] < col_min[j] {
-                    col_min[j] = dist[j];
-                }
-                col_kill[j] |= dist[j] < r2;
-            }
-        }
+        TileKernel::Lanes8 => col_folds_w::<f64, MAX_LANES>(dist, r2, col_min, col_kill),
+        _ => col_folds_w::<f64, LANES>(dist, r2, col_min, col_kill),
     }
 }
 
-/// First [`LANES`] elements of `s` as a fixed-extent array ref (the
-/// compiler folds the length check into the chunk loop's bound).
+/// Width/element-generic body of [`col_folds`].
+// hot-path: per-column min/kill fold lane body, every tile row.
+#[inline]
+pub(crate) fn col_folds_w<E: LaneElem, const W: usize>(
+    dist: &[E],
+    r2: E,
+    col_min: &mut [E],
+    col_kill: &mut [bool],
+) {
+    let nb = dist.len();
+    debug_assert!(col_min.len() == nb && col_kill.len() == nb);
+    // panic-free: W is a nonzero const width; j+W <= nb and all three
+    // slices have length nb (debug-asserted above).
+    let chunks = nb / W;
+    for c in 0..chunks {
+        let j = c * W;
+        let dc: &[E; W] = chunk(&dist[j..], "dist");
+        let cm: &mut [E; W] = chunk_mut(&mut col_min[j..]);
+        for l in 0..W {
+            cm[l] = cm[l].min(dc[l]);
+        }
+        let ck: &mut [bool; W] = bool_chunk_mut(&mut col_kill[j..]);
+        for l in 0..W {
+            ck[l] |= dc[l] < r2;
+        }
+    }
+    // panic-free: scalar tail, j < nb bounds every access.
+    for j in chunks * W..nb {
+        if dist[j] < col_min[j] {
+            col_min[j] = dist[j];
+        }
+        col_kill[j] |= dist[j] < r2;
+    }
+}
+
+/// First `W` elements of `s` as a fixed-extent array ref (the compiler
+/// folds the length check into the chunk loop's bound).
 // hot-path: lane-chunk reborrow, several per tile-row chunk.
 #[inline]
-fn t_chunk<'a>(s: &'a [f64], what: &str) -> &'a [f64; LANES] {
-    // panic-free: every caller slices at j with j+LANES <= row length
-    // (lane-aligned by TileScratch::ensure), so s.len() >= LANES; the
-    // panic arm is the unreachable-invariant report, kept over
-    // unchecked access so a future geometry bug fails loudly.
-    s[..LANES].try_into().unwrap_or_else(|_| panic!("short {what} lane chunk"))
+fn chunk<'a, E: LaneElem, const W: usize>(s: &'a [E], what: &str) -> &'a [E; W] {
+    // panic-free: every caller slices at j with j+W <= row length
+    // (rows aligned to MAX_LANES >= W by TileScratch::ensure), so
+    // s.len() >= W; the panic arm is the unreachable-invariant report,
+    // kept over unchecked access so a future geometry bug fails loudly.
+    s[..W].try_into().unwrap_or_else(|_| panic!("short {what} lane chunk"))
 }
 
 // hot-path: mutable lane-chunk reborrow, several per tile-row chunk.
 #[inline]
-fn t_chunk_mut(s: &mut [f64]) -> &mut [f64; LANES] {
-    // panic-free: same caller bound as t_chunk; expect is the loud
+fn chunk_mut<E: LaneElem, const W: usize>(s: &mut [E]) -> &mut [E; W] {
+    // panic-free: same caller bound as chunk; expect is the loud
     // unreachable-invariant report.
-    (&mut s[..LANES]).try_into().expect("short mutable lane chunk")
+    (&mut s[..W]).try_into().expect("short mutable lane chunk")
 }
 
 // hot-path: kill-flag lane-chunk reborrow, once per tile-row chunk.
 #[inline]
-fn bool_chunk_mut(s: &mut [bool]) -> &mut [bool; LANES] {
-    // panic-free: same caller bound as t_chunk; expect is the loud
+fn bool_chunk_mut<const W: usize>(s: &mut [bool]) -> &mut [bool; W] {
+    // panic-free: same caller bound as chunk; expect is the loud
     // unreachable-invariant report.
-    (&mut s[..LANES]).try_into().expect("short kill lane chunk")
+    (&mut s[..W]).try_into().expect("short kill lane chunk")
+}
+
+/// `[E; W]` copied out of an f64 slice through [`LaneElem::from_f64`]
+/// (identity — and elided — at f64; the narrowing load at f32).
+// hot-path: series lane-chunk load, several per tile-row chunk.
+#[inline]
+fn load_chunk<E: LaneElem, const W: usize>(s: &[f64]) -> [E; W] {
+    // panic-free: every caller slices at j with j+W elements available
+    // (same geometry as chunk), so l < W indexes in bounds.
+    std::array::from_fn(|l| E::from_f64(s[l]))
 }
 
 thread_local! {
@@ -1257,19 +1421,30 @@ mod tests {
 
     #[test]
     fn scratch_rows_are_lane_aligned() {
-        // The satellite fix: an off-grid tile edge gets LANES-aligned
-        // rows, so a lane chunk ending at the row boundary stays
-        // in-bounds, and re-ensuring at the aligned size reuses storage.
+        // An off-grid tile edge gets MAX_LANES-aligned rows, so a chunk
+        // of *any* kernel width (including Lanes8) ending at the row
+        // boundary stays in-bounds, and re-ensuring at the aligned size
+        // reuses storage.
         let mut s = TileScratch::new();
         s.ensure(33);
-        assert_eq!(s.qt.len(), 36);
-        assert_eq!(s.dist.len(), 36);
-        assert_eq!(s.mmu_b.len(), 36);
+        assert_eq!(s.qt.len(), 40);
+        assert_eq!(s.dist.len(), 40);
+        assert_eq!(s.mmu_b.len(), 40);
         let p = s.qt.as_ptr();
-        s.ensure(36);
+        s.ensure(40);
         s.ensure(1);
         assert_eq!(s.qt.as_ptr(), p, "aligned re-ensure must not reallocate");
-        assert_eq!(s.qt.len(), 36);
+        assert_eq!(s.qt.len(), 40);
+        // The f32 twins are lazy: untouched by ensure(), aligned the
+        // same way once the f32 path asks for them.
+        assert!(s.qt32.is_empty() && s.col_min32.is_empty());
+        s.ensure_f32(33);
+        assert_eq!(s.qt32.len(), 40);
+        assert_eq!(s.dist32.len(), 40);
+        assert_eq!(s.col_min32.len(), 40);
+        let p32 = s.qt32.as_ptr();
+        s.ensure_f32(40);
+        assert_eq!(s.qt32.as_ptr(), p32, "aligned f32 re-ensure must not reallocate");
     }
 
     /// Deterministic-but-irregular row data for the kernel-pass tests.
@@ -1301,14 +1476,9 @@ mod tests {
             }
             let (mu_a, inv_sig_a, two_m) = (0.0, 4.0, 32.0);
             let mut ds = vec![0.0; nb];
-            let mut dl = vec![0.0; nb];
             let ss = distance_row(
                 TileKernel::Scalar, &qt, &mmu_b, &inv_msig_b, mu_a, inv_sig_a, two_m, &mut ds,
             );
-            let sl = distance_row(
-                TileKernel::Lanes4, &qt, &mmu_b, &inv_msig_b, mu_a, inv_sig_a, two_m, &mut dl,
-            );
-            assert_eq!(ss, sl, "nb={nb}: saturation counts diverge");
             let want_sat = (0..nb)
                 .filter(|&j| {
                     corr_saturates((qt[j] - mmu_b[j] * mu_a) * (inv_msig_b[j] * inv_sig_a))
@@ -1316,15 +1486,28 @@ mod tests {
                 .count() as u64;
             assert_eq!(ss, want_sat, "nb={nb}");
             assert!(ss >= 1 + (nb > 2) as u64, "nb={nb}: planted saturations missed");
-            for j in 0..nb {
-                assert_eq!(ds[j].to_bits(), dl[j].to_bits(), "nb={nb} j={j}: {} vs {}", ds[j], dl[j]);
-            }
-            assert_eq!(dl[0], 0.0, "clamped-high distance");
-            if nb > 2 {
-                assert_eq!(dl[2], 2.0 * two_m, "clamped-low distance");
-            }
-            if nb > 4 {
-                assert!(dl[4].is_nan(), "NaN column must propagate");
+            for lane_kernel in [TileKernel::Lanes4, TileKernel::Lanes8] {
+                let mut dl = vec![0.0; nb];
+                let sl = distance_row(
+                    lane_kernel, &qt, &mmu_b, &inv_msig_b, mu_a, inv_sig_a, two_m, &mut dl,
+                );
+                assert_eq!(ss, sl, "nb={nb} {lane_kernel:?}: saturation counts diverge");
+                for j in 0..nb {
+                    assert_eq!(
+                        ds[j].to_bits(),
+                        dl[j].to_bits(),
+                        "nb={nb} {lane_kernel:?} j={j}: {} vs {}",
+                        ds[j],
+                        dl[j]
+                    );
+                }
+                assert_eq!(dl[0], 0.0, "clamped-high distance");
+                if nb > 2 {
+                    assert_eq!(dl[2], 2.0 * two_m, "clamped-low distance");
+                }
+                if nb > 4 {
+                    assert!(dl[4].is_nan(), "NaN column must propagate");
+                }
             }
         }
     }
@@ -1342,28 +1525,30 @@ mod tests {
             }
             let r2 = 40.0;
             let (ms, ks) = row_folds(TileKernel::Scalar, &dist, r2);
-            let (ml, kl) = row_folds(TileKernel::Lanes4, &dist, r2);
-            assert_eq!(ms.to_bits(), ml.to_bits(), "nb={nb}: row min {ms} vs {ml}");
-            assert_eq!(ks, kl, "nb={nb}: row kill");
-            assert!(!ml.is_nan(), "NaN must never survive a min fold");
+            for lane_kernel in [TileKernel::Lanes4, TileKernel::Lanes8] {
+                let (ml, kl) = row_folds(lane_kernel, &dist, r2);
+                assert_eq!(ms.to_bits(), ml.to_bits(), "nb={nb} {lane_kernel:?}: {ms} vs {ml}");
+                assert_eq!(ks, kl, "nb={nb} {lane_kernel:?}: row kill");
+                assert!(!ml.is_nan(), "NaN must never survive a min fold");
 
-            let mut cm_s = vec![f64::INFINITY; nb];
-            let mut cm_l = vec![f64::INFINITY; nb];
-            let mut ck_s = vec![false; nb];
-            let mut ck_l = vec![false; nb];
-            // Two passes so the second folds into non-trivial state.
-            for pass in 0..2 {
-                let shifted: Vec<f64> =
-                    dist.iter().map(|d| d * (1.0 + pass as f64 * 0.5)).collect();
-                col_folds(TileKernel::Scalar, &shifted, r2, &mut cm_s, &mut ck_s);
-                col_folds(TileKernel::Lanes4, &shifted, r2, &mut cm_l, &mut ck_l);
-            }
-            for j in 0..nb {
-                assert_eq!(cm_s[j].to_bits(), cm_l[j].to_bits(), "nb={nb} col {j}");
-                assert_eq!(ck_s[j], ck_l[j], "nb={nb} col kill {j}");
-            }
-            if nb > 1 {
-                assert!(cm_l[1].is_infinite(), "NaN column must leave col_min untouched");
+                let mut cm_s = vec![f64::INFINITY; nb];
+                let mut cm_l = vec![f64::INFINITY; nb];
+                let mut ck_s = vec![false; nb];
+                let mut ck_l = vec![false; nb];
+                // Two passes so the second folds into non-trivial state.
+                for pass in 0..2 {
+                    let shifted: Vec<f64> =
+                        dist.iter().map(|d| d * (1.0 + pass as f64 * 0.5)).collect();
+                    col_folds(TileKernel::Scalar, &shifted, r2, &mut cm_s, &mut ck_s);
+                    col_folds(lane_kernel, &shifted, r2, &mut cm_l, &mut ck_l);
+                }
+                for j in 0..nb {
+                    assert_eq!(cm_s[j].to_bits(), cm_l[j].to_bits(), "nb={nb} col {j}");
+                    assert_eq!(ck_s[j], ck_l[j], "nb={nb} col kill {j}");
+                }
+                if nb > 1 {
+                    assert!(cm_l[1].is_infinite(), "NaN column must leave col_min untouched");
+                }
             }
         }
     }
@@ -1375,12 +1560,47 @@ mod tests {
         for nb in [1usize, 2, 4, 5, 9, 32, 61] {
             let prev = row(nb, 3);
             let mut qs = vec![0.0; nb];
-            let mut ql = vec![0.0; nb];
             qt_recurrence_row(TileKernel::Scalar, &t, m, a, cs, &prev, &mut qs);
-            qt_recurrence_row(TileKernel::Lanes4, &t, m, a, cs, &prev, &mut ql);
-            for j in 0..nb {
-                assert_eq!(qs[j].to_bits(), ql[j].to_bits(), "nb={nb} j={j}");
+            for lane_kernel in [TileKernel::Lanes4, TileKernel::Lanes8] {
+                let mut ql = vec![0.0; nb];
+                qt_recurrence_row(lane_kernel, &t, m, a, cs, &prev, &mut ql);
+                for j in 0..nb {
+                    assert_eq!(qs[j].to_bits(), ql[j].to_bits(), "nb={nb} {lane_kernel:?} j={j}");
+                }
             }
+        }
+    }
+
+    #[test]
+    fn f32_row_passes_mirror_f64_structure() {
+        // The f32 instantiations run the same bodies one precision
+        // down: distances stay close to the f64 kernel's, fold
+        // *structure* (which column wins, NaN hygiene) is preserved.
+        let t = series(300);
+        let (m, a, cs) = (17, 40, 90);
+        for nb in [1usize, 3, 5, 9, 32] {
+            let prev64 = row(nb, 3);
+            let prev32: Vec<f32> = prev64.iter().map(|&x| x as f32).collect();
+            let mut q64 = vec![0.0f64; nb];
+            let mut q32 = vec![0.0f32; nb];
+            qt_recurrence_row(TileKernel::Lanes4, &t, m, a, cs, &prev64, &mut q64);
+            qt_recurrence_row_w::<f32, LANES>(&t, m, a, cs, &prev32, &mut q32);
+            for j in 0..nb {
+                let rel = (q32[j] as f64 - q64[j]).abs() / (1.0 + q64[j].abs());
+                assert!(rel < 1e-3, "nb={nb} j={j}: qt {q32:?} vs {q64:?}");
+            }
+            // Kill thresholds far outside the data range: decisions
+            // must agree whenever the margin dwarfs f32 rounding.
+            let (m64, k64) = row_folds(TileKernel::Lanes4, &q64, 1.0e15);
+            let (m32, k32) = row_folds_w::<f32, LANES>(&q32, 1.0e15f32);
+            assert_eq!(k64, k32, "nb={nb}: everything under a huge r2 kills");
+            assert!(k32, "nb={nb}");
+            let (_, k64n) = row_folds(TileKernel::Lanes4, &q64, -1.0e15);
+            let (_, k32n) = row_folds_w::<f32, LANES>(&q32, -1.0e15f32);
+            assert_eq!(k64n, k32n, "nb={nb}: nothing under a huge negative r2 kills");
+            assert!(!k32n, "nb={nb}");
+            let rel = (m32 as f64 - m64).abs() / (1.0 + m64.abs());
+            assert!(rel < 1e-3, "nb={nb}: row min {m32} vs {m64}");
         }
     }
 }

@@ -33,7 +33,7 @@ fn cli() -> Cli {
                 .opt("engine", "native", "tile engine: native | xla")
                 .opt("segn", "256", "tile edge (XLA: a compiled bucket)")
                 .opt("threads", "0", "native engine threads (0 = auto)")
-                .opt("kernel", "", "native tile kernel: lanes4 | scalar (default: $PALMAD_TILE_KERNEL or lanes4)")
+                .opt("kernel", "", "native tile kernel: auto | lanes8 | lanes4 | lanes4f32 | scalar (default: $PALMAD_TILE_KERNEL or auto)")
                 .opt("stats", "native", "stats backend: native | aot | naive")
                 .opt("json", "", "write results as JSON to this path")
                 .opt("checkpoint-dir", "", "save resumable sweep checkpoints here")
@@ -51,7 +51,7 @@ fn cli() -> Cli {
                 .opt("stride", "1", "length stride (speeds up wide ranges)")
                 .opt("engine", "native", "tile engine: native | xla")
                 .opt("segn", "256", "tile edge")
-                .opt("kernel", "", "native tile kernel: lanes4 | scalar")
+                .opt("kernel", "", "native tile kernel: auto | lanes8 | lanes4 | lanes4f32 | scalar")
                 .opt("top", "6", "interesting discords to report (Eq. 12)")
                 .opt("out", "heatmap.ppm", "output heatmap image (PPM)"),
         )
@@ -63,7 +63,7 @@ fn cli() -> Cli {
                 .opt("ttl-secs", "600", "terminal-job retention before TTL eviction")
                 .opt("engine", "native", "tile engine: native | xla")
                 .opt("segn", "256", "tile edge")
-                .opt("kernel", "", "native tile kernel: lanes4 | scalar")
+                .opt("kernel", "", "native tile kernel: auto | lanes8 | lanes4 | lanes4f32 | scalar")
                 .opt("checkpoint-dir", "", "job checkpoint dir (enables RESUME + auto-resume)")
                 .opt("checkpoint-every", "4", "checkpoint every K completed lengths")
                 .opt("policy", "wfq", "scheduling policy: wfq (weighted fair) | rr (flat FIFO)")

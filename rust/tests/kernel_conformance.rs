@@ -1,26 +1,42 @@
 //! Differential conformance harness for the tile kernels.
 //!
-//! `TileKernel::Lanes4` is *claimed* to be bit-identical to the
-//! `Scalar` oracle (same per-element operation order; the only
+//! Every f64 lane kernel (`Lanes4`, `Lanes8`, and whatever `Auto`
+//! resolves to) is *claimed* to be bit-identical to the `Scalar` oracle
+//! (same per-element operation order at every width; the only
 //! reductions — `min` with `+inf` identities, boolean OR — are
 //! insensitive to lane regrouping).  This suite pins that claim rather
 //! than hoping for it:
 //!
 //! - a property sweep over random series shapes, subsequence lengths,
 //!   and tile widths deliberately off the lane grid (`segn % LANES !=
-//!   0`, `segn < LANES`, single-column/single-row tail tiles), asserting
-//!   the lane kernel matches the scalar oracle **bit-for-bit** — which
-//!   is, a fortiori, inside the issue's 1-ULP tolerance;
+//!   0`, `segn < LANES` — and, for `Lanes8`, `segn < 8` — plus
+//!   single-column/single-row tail tiles), asserting each lane kernel
+//!   matches the scalar oracle **bit-for-bit** — which is, a fortiori,
+//!   inside the issue's 1-ULP tolerance;
 //! - engine-level batch conformance including the clamp-decision
 //!   counters (`EnginePerfCounters::{clamp_saturations, flat_cells}`)
 //!   on constant-window, NaN-contaminated, and near-overflow inputs;
-//! - full `Merlin::run` discord output, identical under both kernels.
+//! - full `Merlin::run` discord output, identical under every f64
+//!   kernel.
+//!
+//! `TileKernel::Lanes4F32` is the deliberate exception: it runs the
+//! same lane bodies one precision down, so its contract is the
+//! **tolerance band** `band(m) = 2m * (m + 8) * KAPPA * eps_f32`
+//! (EXPERIMENTS.md §SIMD derives it), valid on series with
+//! `max|t|^2 / min(sigma)^2 <= KAPPA = 4096`.  The banded comparator
+//! below — minima both infinite or within `band(m)`, kill flags
+//! compared only outside a `band(m)` margin around `r2`, flat routing
+//! exactly equal (flat decisions stay in f64 by construction) — is the
+//! reusable gate a reduced-precision accelerator engine will face, and
+//! a seeded ill-conditioned series proves it has teeth.
 //!
 //! `scripts/ci.sh --kernel-matrix` additionally re-runs this whole file
-//! (and the allocation suite) under `PALMAD_TILE_KERNEL=scalar` and
-//! `=lanes4`, flipping every engine built with default config.
+//! (and the allocation suite) under `PALMAD_TILE_KERNEL=<k>` for every
+//! kernel in `engines::KERNEL_NAMES` (lanes8 skipped on hosts without
+//! AVX-512F), flipping every engine built with default config.
 
 use palmad::coordinator::merlin::{Merlin, MerlinConfig};
+use palmad::core::distance::is_flat;
 use palmad::core::series::TimeSeries;
 use palmad::core::stats::RollingStats;
 use palmad::engines::native::{compute_tile_with_kernel, NativeConfig, NativeEngine};
@@ -68,23 +84,25 @@ fn prop_lane_kernel_matches_scalar_oracle_bitwise() {
         }
         for task in tasks {
             let s = compute_tile_with_kernel(&view, segn, r2, task, TileKernel::Scalar);
-            let l = compute_tile_with_kernel(&view, segn, r2, task, TileKernel::Lanes4);
-            // Bit equality first (the strong claim)...
-            assert_tiles_bit_equal(
-                &s,
-                &l,
-                &format!("{kind:?} n={n} m={m} segn={segn} {task:?}"),
-            );
-            // ...which subsumes the issue's ULP-scale tolerance; keep an
-            // explicit tolerance pass anyway so a future deliberate
-            // bit-divergence (e.g. FMA lanes) inherits a ready gate.
-            for k in 0..segn {
-                let (g, w) = (l.row_min[k], s.row_min[k]);
-                if w.is_finite() {
-                    assert!(
-                        (g - w).abs() <= 1e-12 * (1.0 + w.abs()),
-                        "m={m} segn={segn} row {k}: {g} vs {w}"
-                    );
+            for kern in [TileKernel::Lanes4, TileKernel::Lanes8] {
+                let l = compute_tile_with_kernel(&view, segn, r2, task, kern);
+                // Bit equality first (the strong claim)...
+                assert_tiles_bit_equal(
+                    &s,
+                    &l,
+                    &format!("{kern:?} {kind:?} n={n} m={m} segn={segn} {task:?}"),
+                );
+                // ...which subsumes the issue's ULP-scale tolerance; keep
+                // an explicit tolerance pass anyway so a future deliberate
+                // bit-divergence (e.g. FMA lanes) inherits a ready gate.
+                for k in 0..segn {
+                    let (g, w) = (l.row_min[k], s.row_min[k]);
+                    if w.is_finite() {
+                        assert!(
+                            (g - w).abs() <= 1e-12 * (1.0 + w.abs()),
+                            "{kern:?} m={m} segn={segn} row {k}: {g} vs {w}"
+                        );
+                    }
                 }
             }
         }
@@ -108,7 +126,6 @@ fn engine_batches_agree_for_every_edge_width() {
             NativeEngine::new(NativeConfig { segn, threads: 4, kernel, ..Default::default() })
         };
         let scalar = mk(TileKernel::Scalar);
-        let lanes = mk(TileKernel::Lanes4);
         let tasks: Vec<TileTask> = (0..10)
             .map(|k| TileTask {
                 seg_start: (k * 83) % nwin,
@@ -116,18 +133,22 @@ fn engine_batches_agree_for_every_edge_width() {
             })
             .collect();
         scalar.prepare_series(&view);
-        lanes.prepare_series(&view);
         let a = scalar.compute_tiles(&view, 5.0, &tasks).unwrap();
-        let b = lanes.compute_tiles(&view, 5.0, &tasks).unwrap();
-        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
-            assert_tiles_bit_equal(x, y, &format!("segn={segn} task {k}"));
+        let ca = scalar.perf_counters();
+        for kern in [TileKernel::Lanes4, TileKernel::Lanes8] {
+            let lanes = mk(kern);
+            lanes.prepare_series(&view);
+            let b = lanes.compute_tiles(&view, 5.0, &tasks).unwrap();
+            for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_tiles_bit_equal(x, y, &format!("{kern:?} segn={segn} task {k}"));
+            }
+            let cb = lanes.perf_counters();
+            assert_eq!(
+                ca.clamp_saturations, cb.clamp_saturations,
+                "{kern:?} segn={segn}: clamp decisions diverged"
+            );
+            assert_eq!(ca.flat_cells, cb.flat_cells, "{kern:?} segn={segn}: flat routing diverged");
         }
-        let (ca, cb) = (scalar.perf_counters(), lanes.perf_counters());
-        assert_eq!(
-            ca.clamp_saturations, cb.clamp_saturations,
-            "segn={segn}: clamp decisions diverged"
-        );
-        assert_eq!(ca.flat_cells, cb.flat_cells, "segn={segn}: flat routing diverged");
     }
 }
 
@@ -163,7 +184,6 @@ fn clamp_edge_cases_take_identical_decisions() {
             NativeEngine::new(NativeConfig { segn: 33, threads: 2, kernel, ..Default::default() })
         };
         let scalar = mk(TileKernel::Scalar);
-        let lanes = mk(TileKernel::Lanes4);
         let tasks: Vec<TileTask> = (0..nwin.div_ceil(33))
             .flat_map(|r| {
                 (0..nwin.div_ceil(33)).map(move |c| TileTask {
@@ -173,25 +193,29 @@ fn clamp_edge_cases_take_identical_decisions() {
             })
             .collect();
         scalar.prepare_series(&view);
-        lanes.prepare_series(&view);
         let a = scalar.compute_tiles(&view, 3.0, &tasks).unwrap();
-        let b = lanes.compute_tiles(&view, 3.0, &tasks).unwrap();
-        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
-            assert_tiles_bit_equal(x, y, &format!("{name} task {k}"));
-            // The edge inputs must stay semantically sane, not just
-            // consistent: minima are +inf or finite >= 0, never NaN.
-            for &d in x.row_min.iter().chain(&x.col_min) {
-                assert!(!d.is_nan() && d >= 0.0, "{name} task {k}: bad min {d}");
-            }
-        }
-        let (ca, cb) = (scalar.perf_counters(), lanes.perf_counters());
-        assert_eq!(
-            (ca.clamp_saturations, ca.flat_cells),
-            (cb.clamp_saturations, cb.flat_cells),
-            "{name}: decision counters diverged"
-        );
+        let ca = scalar.perf_counters();
         if name != "overflow" {
             assert!(ca.flat_cells > 0, "{name}: flat path never exercised");
+        }
+        for kern in [TileKernel::Lanes4, TileKernel::Lanes8] {
+            let lanes = mk(kern);
+            lanes.prepare_series(&view);
+            let b = lanes.compute_tiles(&view, 3.0, &tasks).unwrap();
+            for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_tiles_bit_equal(x, y, &format!("{kern:?} {name} task {k}"));
+                // The edge inputs must stay semantically sane, not just
+                // consistent: minima are +inf or finite >= 0, never NaN.
+                for &d in x.row_min.iter().chain(&x.col_min) {
+                    assert!(!d.is_nan() && d >= 0.0, "{name} task {k}: bad min {d}");
+                }
+            }
+            let cb = lanes.perf_counters();
+            assert_eq!(
+                (ca.clamp_saturations, ca.flat_cells),
+                (cb.clamp_saturations, cb.flat_cells),
+                "{kern:?} {name}: decision counters diverged"
+            );
         }
     }
 }
@@ -222,29 +246,38 @@ fn merlin_discords_identical_across_kernels() {
         Merlin::new(&engine, cfg.clone()).run(&t).unwrap()
     };
     let a = run(TileKernel::Scalar);
-    let b = run(TileKernel::Lanes4);
-    assert_eq!(a.lengths.len(), b.lengths.len());
-    for (x, y) in a.lengths.iter().zip(&b.lengths) {
-        assert_eq!(x.m, y.m);
-        assert_eq!(x.retries, y.retries, "m={}", x.m);
-        assert_eq!(x.r_used.to_bits(), y.r_used.to_bits(), "m={}", x.m);
-        assert_eq!(x.discords.len(), y.discords.len(), "m={}", x.m);
-        for (dx, dy) in x.discords.iter().zip(&y.discords) {
-            assert_eq!(dx.idx, dy.idx, "m={}", x.m);
-            assert_eq!(
-                dx.nn_dist.to_bits(),
-                dy.nn_dist.to_bits(),
-                "m={}: {} vs {}",
-                x.m,
-                dx.nn_dist,
-                dy.nn_dist
-            );
+    for kern in [TileKernel::Lanes4, TileKernel::Lanes8, TileKernel::Auto] {
+        let b = run(kern);
+        assert_eq!(a.lengths.len(), b.lengths.len());
+        for (x, y) in a.lengths.iter().zip(&b.lengths) {
+            assert_eq!(x.m, y.m);
+            assert_eq!(x.retries, y.retries, "{kern:?} m={}", x.m);
+            assert_eq!(x.r_used.to_bits(), y.r_used.to_bits(), "{kern:?} m={}", x.m);
+            assert_eq!(x.discords.len(), y.discords.len(), "{kern:?} m={}", x.m);
+            for (dx, dy) in x.discords.iter().zip(&y.discords) {
+                assert_eq!(dx.idx, dy.idx, "{kern:?} m={}", x.m);
+                assert_eq!(
+                    dx.nn_dist.to_bits(),
+                    dy.nn_dist.to_bits(),
+                    "{kern:?} m={}: {} vs {}",
+                    x.m,
+                    dx.nn_dist,
+                    dy.nn_dist
+                );
+            }
         }
+        // The counter-level certificate at MERLIN scale — and, for Auto,
+        // the METRICS visibility of the resolved identity.
+        let (sa, sb) = (&a.metrics.seed, &b.metrics.seed);
+        assert_eq!(sa.clamp_saturations, sb.clamp_saturations, "{kern:?}");
+        assert_eq!(sa.flat_cells, sb.flat_cells, "{kern:?}");
+        assert_eq!(sb.kernel, Some(kern.resolve()), "{kern:?} identity gauge");
+        let line = format!("{}", b.metrics);
+        assert!(
+            line.contains(&format!("kernel={}", kern.resolve().name())),
+            "{kern:?}: resolved kernel missing from METRICS line: {line}"
+        );
     }
-    // The counter-level certificate at MERLIN scale.
-    let (sa, sb) = (a.metrics.seed, b.metrics.seed);
-    assert_eq!(sa.clamp_saturations, sb.clamp_saturations);
-    assert_eq!(sa.flat_cells, sb.flat_cells);
 }
 
 #[test]
@@ -272,7 +305,8 @@ fn prop_merlin_agrees_across_kernels_on_random_series() {
             Merlin::new(&engine, cfg.clone()).run(&t)
         };
         let a = run(TileKernel::Scalar).map_err(|e| format!("scalar: {e}"))?;
-        let b = run(TileKernel::Lanes4).map_err(|e| format!("lanes4: {e}"))?;
+        let wide = if rng.below(2) == 0 { TileKernel::Lanes4 } else { TileKernel::Lanes8 };
+        let b = run(wide).map_err(|e| format!("{wide:?}: {e}"))?;
         for (x, y) in a.lengths.iter().zip(&b.lengths) {
             if x.discords.len() != y.discords.len() {
                 return Err(format!(
@@ -293,4 +327,255 @@ fn prop_merlin_agrees_across_kernels_on_random_series() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Lanes4F32: the tolerance-banded contract (and Auto's resolution).
+// ---------------------------------------------------------------------------
+
+/// Conditioning headroom the f32 kernel is specified for: series with
+/// `max|t|^2 <= KAPPA * min(sigma)^2` over non-flat windows (flat
+/// windows route through the f64 general path regardless of kernel).
+/// EXPERIMENTS.md §SIMD derives the pairing with [`band`].
+const KAPPA: f64 = 4096.0;
+
+/// Absolute error bound on a squared z-normalized distance computed at
+/// f32 for subsequence length `m`, valid on series inside the [`KAPPA`]
+/// precondition.
+fn band(m: usize) -> f64 {
+    let mf = m as f64;
+    2.0 * mf * (mf + 8.0) * KAPPA * f64::from(f32::EPSILON)
+}
+
+/// Is the series inside the f32 kernel's specified conditioning range?
+fn in_f32_spec(t: &[f64], stats: &RollingStats) -> bool {
+    let tmax = t.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    let sig_min = stats
+        .sig
+        .iter()
+        .zip(&stats.mu)
+        .filter(|&(&s, &u)| !is_flat(s, u))
+        .map(|(&s, _)| s)
+        .fold(f64::INFINITY, f64::min);
+    sig_min.is_finite() && tmax * tmax <= KAPPA * sig_min * sig_min
+}
+
+/// The banded comparator: f32 tile vs f64 oracle tile.
+///
+/// Minima must be both non-finite or within [`band`]; kill flags are
+/// threshold comparisons, so they are decidable only when the oracle
+/// minimum clears `r2` by more than the band — inside the margin either
+/// decision is acceptable.  This is the exact gate a reduced-precision
+/// accelerator engine will be held to.
+fn assert_tiles_banded(f: &TileOutputs, o: &TileOutputs, r2: f64, m: usize, what: &str) {
+    let eps = band(m);
+    let mins: [(&str, &[f64], &[f64]); 2] =
+        [("row_min", &f.row_min, &o.row_min), ("col_min", &f.col_min, &o.col_min)];
+    for (which, gs, ws) in mins {
+        for (k, (&g, &w)) in gs.iter().zip(ws.iter()).enumerate() {
+            if w.is_finite() {
+                assert!(
+                    g.is_finite() && (g - w).abs() <= eps,
+                    "{what} {which}[{k}]: {g} vs {w} (band {eps:.3e})"
+                );
+            } else {
+                assert!(!g.is_finite(), "{what} {which}[{k}]: finite {g} vs {w}");
+            }
+        }
+    }
+    let kills: [(&str, &[bool], &[f64]); 2] =
+        [("row_kill", &f.row_kill, &o.row_min), ("col_kill", &f.col_kill, &o.col_min)];
+    for (which, gs, ws) in kills {
+        for (k, (&g, &w)) in gs.iter().zip(ws.iter()).enumerate() {
+            if w < r2 - eps {
+                assert!(g, "{what} {which}[{k}]: f64 min {w} clears r2={r2} but f32 did not kill");
+            } else if w > r2 + eps {
+                assert!(!g, "{what} {which}[{k}]: f64 min {w} above r2={r2} but f32 killed");
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_resolves_to_a_cached_bit_identical_f64_kernel() {
+    let resolved = TileKernel::Auto.resolve();
+    assert!(
+        matches!(resolved, TileKernel::Lanes4 | TileKernel::Lanes8),
+        "Auto must resolve to an f64 lane kernel, got {resolved:?}"
+    );
+    assert_eq!(resolved, TileKernel::Auto.resolve(), "resolution must be stable across calls");
+    let mut rng = Rng::seed(404);
+    let t = SeriesGen::Walk.generate(300, &mut rng);
+    let stats = RollingStats::compute(&t, 12);
+    let view = SeriesView { t: &t, stats: &stats };
+    let task = TileTask { seg_start: 0, chunk_start: 50 };
+    let a = compute_tile_with_kernel(&view, 33, 4.0, task, TileKernel::Auto);
+    let r = compute_tile_with_kernel(&view, 33, 4.0, task, resolved);
+    let s = compute_tile_with_kernel(&view, 33, 4.0, task, TileKernel::Scalar);
+    assert_tiles_bit_equal(&a, &r, "auto vs its resolution");
+    assert_tiles_bit_equal(&a, &s, "auto vs scalar oracle");
+}
+
+#[test]
+fn prop_f32_kernel_stays_within_band_of_the_oracle() {
+    check("f32-band", Config { cases: 50, ..Default::default() }, |rng| {
+        let n = rng.int_in(60, 400);
+        let kind = SeriesGen::random(rng);
+        let t = kind.generate(n, rng);
+        let m = rng.int_in(3, (n / 3).min(40));
+        let nwin = n - m + 1;
+        let stats = RollingStats::compute(&t, m);
+        if !in_f32_spec(&t, &stats) {
+            return Ok(()); // outside the documented KAPPA precondition
+        }
+        let segn = EDGES[rng.below(EDGES.len())];
+        let r2 = rng.range(0.1, 4.0 * m as f64);
+        let view = SeriesView { t: &t, stats: &stats };
+        let mut tasks = vec![
+            TileTask { seg_start: 0, chunk_start: 0 },
+            TileTask { seg_start: 0, chunk_start: nwin - 1 },
+            TileTask { seg_start: nwin - 1, chunk_start: 0 },
+        ];
+        for _ in 0..3 {
+            tasks.push(TileTask { seg_start: rng.below(nwin), chunk_start: rng.below(nwin) });
+        }
+        for task in tasks {
+            let s = compute_tile_with_kernel(&view, segn, r2, task, TileKernel::Scalar);
+            let f = compute_tile_with_kernel(&view, segn, r2, task, TileKernel::Lanes4F32);
+            assert_tiles_banded(
+                &f,
+                &s,
+                r2,
+                m,
+                &format!("{kind:?} n={n} m={m} segn={segn} {task:?}"),
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f32_engine_decisions_match_on_margin_workloads() {
+    // Off-diagonal tasks only: near-diagonal cells (|a - b| < m) sit at
+    // corr ~ 1, where the clamp decision is a precision coin flip even
+    // though the cells are masked afterwards — so keep them out of the
+    // counted set entirely.  On what remains (iid noise far from the
+    // plateau), correlations are bounded away from ±1, and flat routing
+    // is decided on f64 stats under both kernels: the decision counters
+    // must agree exactly.
+    let mut rng = Rng::seed(99);
+    let mut t = SeriesGen::Noise.generate(600, &mut rng);
+    for v in &mut t[400..500] {
+        *v = 2.5; // stuck sensor: flat columns → shared f64 flat path
+    }
+    let m = 16;
+    let stats = RollingStats::compute(&t, m);
+    let view = SeriesView { t: &t, stats: &stats };
+    let tasks = vec![
+        TileTask { seg_start: 0, chunk_start: 300 },
+        TileTask { seg_start: 33, chunk_start: 396 },
+        TileTask { seg_start: 0, chunk_start: 462 },
+        TileTask { seg_start: 66, chunk_start: 528 },
+    ];
+    let mk = |kernel| {
+        NativeEngine::new(NativeConfig { segn: 33, threads: 2, kernel, ..Default::default() })
+    };
+    let f64e = mk(TileKernel::Lanes4);
+    let f32e = mk(TileKernel::Lanes4F32);
+    f64e.prepare_series(&view);
+    f32e.prepare_series(&view);
+    let a = f64e.compute_tiles(&view, 6.0, &tasks).unwrap();
+    let b = f32e.compute_tiles(&view, 6.0, &tasks).unwrap();
+    for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_tiles_banded(y, x, 6.0, m, &format!("task {k}"));
+    }
+    let (ca, cb) = (f64e.perf_counters(), f32e.perf_counters());
+    assert_eq!(ca.flat_cells, cb.flat_cells, "flat routing must be kernel-invariant");
+    assert!(ca.flat_cells > 0, "plateau tiles must exercise the flat path");
+    assert_eq!(
+        ca.clamp_saturations, cb.clamp_saturations,
+        "margin workload: clamp decisions must agree"
+    );
+    assert_eq!(cb.kernel, Some(TileKernel::Lanes4F32), "identity gauge");
+}
+
+#[test]
+fn f32_top_discord_index_matches_f64_on_well_conditioned_series() {
+    // On an in-spec series with one strongly planted anomaly, the f32
+    // kernel must rank the *same* top discord per length (index
+    // equality; distances only band-close).  Retry trajectories may
+    // diverge inside the band, so only the ranked result is pinned.
+    let mut rng = Rng::seed(5150);
+    let mut values: Vec<f64> =
+        (0..600).map(|i| (i as f64 * 0.23).sin() + 0.02 * rng.normal()).collect();
+    for (k, v) in values[300..318].iter_mut().enumerate() {
+        // A violent period-2 zig-zag: categorically unlike both the
+        // carrier sine and (after the m-wide exclusion zone) every
+        // other window, so the top-1 margin dwarfs band(m).
+        *v += if k % 2 == 0 { 2.5 } else { -2.5 };
+    }
+    let stats = RollingStats::compute(&values, 16);
+    assert!(in_f32_spec(&values, &stats), "workload must sit inside the f32 spec");
+    let t = TimeSeries::new("anomaly", values);
+    let cfg = MerlinConfig { min_l: 16, max_l: 24, top_k: 1, max_retries: 30, ..Default::default() };
+    let run = |kernel| {
+        let engine = NativeEngine::new(NativeConfig { segn: 64, kernel, ..Default::default() });
+        Merlin::new(&engine, cfg.clone()).run(&t).unwrap()
+    };
+    let a = run(TileKernel::Lanes4);
+    let b = run(TileKernel::Lanes4F32);
+    assert_eq!(a.lengths.len(), b.lengths.len());
+    for (x, y) in a.lengths.iter().zip(&b.lengths) {
+        assert_eq!(x.m, y.m);
+        assert!(!x.discords.is_empty() && !y.discords.is_empty(), "m={}: no discord", x.m);
+        let (dx, dy) = (&x.discords[0], &y.discords[0]);
+        assert_eq!(dx.idx, dy.idx, "m={}: top discord moved under f32", x.m);
+        assert!(
+            (dx.nn_dist - dy.nn_dist).abs() <= band(x.m),
+            "m={}: {} vs {} (band {:.3e})",
+            x.m,
+            dx.nn_dist,
+            dy.nn_dist,
+            band(x.m)
+        );
+        assert!(
+            dx.idx >= 280 && dx.idx < 320,
+            "m={}: top discord {} is not at the planted anomaly",
+            x.m,
+            dx.idx
+        );
+    }
+}
+
+#[test]
+fn band_comparator_has_teeth_on_an_ill_conditioned_series() {
+    // Negative control: a ~1e7 offset with sigma ~ 1e2 puts
+    // max|t|^2 / sigma^2 ~ 1e10 >> KAPPA, so the f32 QT cancellation is
+    // catastrophic — the f32 ulp at qt ~ 1.6e15 is ~1.3e8, larger than
+    // the entire covariance term (~1.6e5), leaving the f32 correlation
+    // as pure quantization noise.  The banded comparator must be able
+    // to reject this: at least one row minimum lands farther than
+    // band(m) from the oracle.  (Also pins that the spec predicate
+    // itself classifies the series as out of range.)
+    let mut rng = Rng::seed(31337);
+    let t: Vec<f64> = (0..300).map(|_| 1.0e7 + 100.0 * rng.normal()).collect();
+    let m = 16;
+    let stats = RollingStats::compute(&t, m);
+    assert!(!in_f32_spec(&t, &stats), "control must violate the KAPPA precondition");
+    // ...while still dodging the flat classifier (sigma ~ 100 >>
+    // FLAT_EPS * 1e7 = 10), so the fast f32 path really runs.
+    assert!(stats.sig.iter().zip(&stats.mu).all(|(&s, &u)| !is_flat(s, u)));
+    let view = SeriesView { t: &t, stats: &stats };
+    let task = TileTask { seg_start: 0, chunk_start: 120 };
+    let s = compute_tile_with_kernel(&view, 33, 6.0, task, TileKernel::Scalar);
+    let f = compute_tile_with_kernel(&view, 33, 6.0, task, TileKernel::Lanes4F32);
+    let eps = band(m);
+    let worst = s
+        .row_min
+        .iter()
+        .zip(&f.row_min)
+        .filter(|(w, _)| w.is_finite())
+        .map(|(&w, &g)| (g - w).abs())
+        .fold(0.0f64, f64::max);
+    assert!(worst > eps, "expected out-of-band divergence, worst {worst} <= band {eps}");
 }

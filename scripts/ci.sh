@@ -18,8 +18,12 @@
 #   scripts/ci.sh --kernel-matrix
 #                                # additionally re-run the kernel
 #                                # conformance + allocation suites under
-#                                # BOTH tile kernels (PALMAD_TILE_KERNEL=
-#                                # scalar, then lanes4) — every engine
+#                                # EVERY tile kernel in KERNEL_NAMES
+#                                # (rust/src/engines/mod.rs — extracted
+#                                # dynamically, so a new kernel joins
+#                                # the matrix automatically; lanes8 is
+#                                # skipped with a notice on hosts
+#                                # without AVX-512F).  Every engine
 #                                # built with default config follows the
 #                                # env, so the whole differential harness
 #                                # and the zero-allocation proofs gate
@@ -42,10 +46,11 @@
 #                                # binary it needs anyway.
 #   scripts/ci.sh --chaos        # run the fault-injection / checkpoint
 #                                # chaos suite (rust/tests/chaos_faults.rs)
-#                                # under BOTH tile kernels: kill-and-resume
-#                                # bit-identity at every step boundary,
-#                                # panic isolation, transient-error retry,
-#                                # NaN contamination, service restart
+#                                # under every KERNEL_NAMES tile kernel:
+#                                # kill-and-resume bit-identity at every
+#                                # step boundary, panic isolation,
+#                                # transient-error retry, NaN
+#                                # contamination, service restart
 #                                # auto-resume.  Also part of the default
 #                                # (non --fast) gate — crash-safety claims
 #                                # are gated, not aspirational.
@@ -261,6 +266,31 @@ if [ -n "$SANITIZE" ]; then
   exit 0
 fi
 
+# Tile kernels for the matrix/chaos legs, extracted from the single
+# source of truth (pub const KERNEL_NAMES in rust/src/engines/mod.rs —
+# kept on one line exactly so this sed stays trivial).  `auto` is
+# deliberately absent there: it resolves to a listed kernel.  lanes8 is
+# *correct* on any host (safe Rust) but only fast with AVX-512F; gate
+# hosts without the feature skip that leg with a notice rather than
+# spend the wall time.
+kernel_list() {
+  names=$(sed -n 's/^pub const KERNEL_NAMES:.*&\[\(.*\)\];.*$/\1/p' rust/src/engines/mod.rs \
+    | tr -d '",')
+  if [ -z "$names" ]; then
+    echo "kernel matrix: KERNEL_NAMES not found in rust/src/engines/mod.rs (single-line const expected)" >&2
+    exit 1
+  fi
+  out=""
+  for k in $names; do
+    if [ "$k" = lanes8 ] && ! grep -q avx512f /proc/cpuinfo 2>/dev/null; then
+      echo "kernel matrix: host lacks AVX-512F — skipping the lanes8 leg" >&2
+      continue
+    fi
+    out="$out $k"
+  done
+  echo "$out"
+}
+
 run_lint_invariants
 run_analyze_invariants
 
@@ -350,8 +380,8 @@ if [ "$KERNEL_MATRIX" -eq 1 ]; then
   # The conformance + allocation suites under each tile kernel.  The
   # env flips every default-config engine (NativeConfig::default reads
   # PALMAD_TILE_KERNEL), while the conformance tests additionally pin
-  # explicit scalar-vs-lanes4 pairs regardless of the env.
-  for k in scalar lanes4; do
+  # explicit oracle-vs-lane pairs regardless of the env.
+  for k in $(kernel_list); do
     echo "== kernel matrix ($k): conformance + alloc steady state =="
     PALMAD_TILE_KERNEL=$k cargo test -q --test kernel_conformance --test alloc_steady_state
   done
@@ -359,10 +389,11 @@ fi
 
 if [ "$CHAOS" -eq 1 ]; then
   # Checkpoint/resume bit-identity is a per-kernel claim (the seed rows
-  # carried through a checkpoint replay that kernel's exact rounding),
-  # so the chaos suite runs under both tile kernels like the
-  # conformance matrix does.
-  for k in scalar lanes4; do
+  # carried through a checkpoint replay that kernel's exact rounding —
+  # and lanes4f32 exports none at all, so its resume must re-seed
+  # bit-identically), so the chaos suite runs under every tile kernel
+  # like the conformance matrix does.
+  for k in $(kernel_list); do
     echo "== chaos suite ($k): fault injection + checkpoint/resume =="
     PALMAD_TILE_KERNEL=$k cargo test -q --test chaos_faults
   done
@@ -388,13 +419,22 @@ if [ "$BENCH_SMOKE" -eq 1 ]; then
     echo "bench smoke: simd_kernel object missing from BENCH_native_tile.json" >&2
     exit 1
   fi
-  # Any lane width is fine (the AVX-512 follow-up bumps it); only its
-  # absence means the object lost its shape.
+  # Any lane width is fine; only its absence means the object lost its
+  # shape.
   if ! grep -q '"lanes":[0-9]' BENCH_native_tile.json; then
     echo "bench smoke: simd_kernel lane width missing from BENCH_native_tile.json" >&2
     exit 1
   fi
-  echo "bench smoke: simd_kernel before/after emitted"
+  # The width/precision variants must be measured too: lanes8 (AVX-512
+  # width at f64) and lanes4f32 (the tolerance-banded f32 kernel), plus
+  # the dispatcher's resolution, all live in the same object.
+  for key in '"lanes8"' '"lanes4f32"' '"auto_resolves_to"'; do
+    if ! grep -q "$key" BENCH_native_tile.json; then
+      echo "bench smoke: simd_kernel $key entry missing from BENCH_native_tile.json" >&2
+      exit 1
+    fi
+  done
+  echo "bench smoke: simd_kernel before/after emitted (scalar/lanes4/lanes8/lanes4f32)"
 fi
 
 echo "CI gate passed."
